@@ -1,0 +1,86 @@
+//! Online value-function learning — the paper's §1 motivation:
+//! "simultaneous learning of a value function and a policy in
+//! reinforcement learning".
+//!
+//! A 1-D corridor MDP (positions 0..N, +1 reward at the right end,
+//! γ-discounted) is solved by TD(0) where the value function V(s) is the
+//! FIGMN's conditional mean E[v | s], learned online through the
+//! coordinator's **regression** path — every TD target is one `learn_reg`
+//! record, every bootstrap read is one `predict_reg`. Single pass over
+//! experience, no replay buffer, no parameter vector.
+//!
+//! Run: `cargo run --release --example rl_value`
+
+use figmn::coordinator::{Metrics, ModelSpec, Registry};
+use figmn::gmm::GmmConfig;
+use figmn::rng::Pcg64;
+use std::sync::Arc;
+
+const N_STATES: usize = 20;
+const GAMMA: f64 = 0.95;
+
+fn main() {
+    let registry = Registry::new(Arc::new(Metrics::new()));
+    registry
+        .create(
+            // 1 feature (state), 1 continuous output (value).
+            ModelSpec::new("V", 1, 1)
+                .with_gmm(GmmConfig::new(1).with_delta(0.15).with_beta(0.2).without_pruning())
+                .with_stds(vec![N_STATES as f64 / 3.0]),
+        )
+        .unwrap();
+    let router = registry.router("V").unwrap();
+    let mut rng = Pcg64::seed(7);
+
+    // A fixed stochastic policy: move right with p=0.7, left 0.3.
+    let mut episodes = 0;
+    let mut steps = 0u64;
+    while episodes < 400 {
+        let mut s = rng.below(N_STATES - 1); // random start
+        loop {
+            steps += 1;
+            let right = rng.uniform() < 0.7;
+            let s2 = if right { s + 1 } else { s.saturating_sub(1) };
+            let (reward, done) = if s2 == N_STATES - 1 { (1.0, true) } else { (0.0, false) };
+            // TD(0) target: r + γ·V(s′) (bootstrap through the model).
+            let v_next = if done {
+                0.0
+            } else {
+                router.predict_reg(&[s2 as f64]).map(|t| t[0]).unwrap_or(0.0)
+            };
+            let target = reward + GAMMA * v_next;
+            router.learn_reg(vec![s as f64], vec![target]).unwrap();
+            if done {
+                break;
+            }
+            s = s2;
+        }
+        episodes += 1;
+    }
+
+    // The analytic value for this chain is monotone in s and ≈ γ^{E[steps to goal]}.
+    let stats = registry.stats("V").unwrap();
+    println!(
+        "trained V(s) over {episodes} episodes / {steps} TD steps, {} components",
+        stats.get("components").unwrap()
+    );
+    let mut prev = -1.0;
+    let mut monotone_violations = 0;
+    print!("V: ");
+    for s in (0..N_STATES - 1).step_by(3) {
+        let v = router.predict_reg(&[s as f64]).unwrap()[0];
+        print!("V({s:2})={v:5.2}  ");
+        if v < prev - 0.05 {
+            monotone_violations += 1;
+        }
+        prev = v;
+    }
+    println!();
+    let v_near = router.predict_reg(&[(N_STATES - 2) as f64]).unwrap()[0];
+    let v_far = router.predict_reg(&[0.0]).unwrap()[0];
+    println!("near-goal V={v_near:.2}, far V={v_far:.2}, monotone violations={monotone_violations}");
+    assert!(v_near > 0.6, "near-goal value too low: {v_near}");
+    assert!(v_near > v_far + 0.3, "value gradient missing");
+    assert!(monotone_violations <= 1, "value function not monotone-ish");
+    println!("rl_value OK — TD(0) through the coordinator's regression path");
+}

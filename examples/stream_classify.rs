@@ -1,0 +1,215 @@
+//! END-TO-END DRIVER (DESIGN.md §4 row "E2E"): the full three-layer
+//! system on a real small workload.
+//!
+//! Phase 1 — the paper's headline (Tables 2/3 shape): single-component
+//!   training/testing time on the MNIST-shaped dataset (N=1000, D=784),
+//!   original IGMN vs Fast IGMN, and the speedup factor.
+//!
+//! Phase 2 — the full pipeline: TCP coordinator → router → worker
+//!   (native learn hot path + XLA predict artifact on the inference
+//!   path), streaming a 3-class workload over the wire, then measuring
+//!   classification quality and serving throughput. Proves L3 (rust
+//!   coordinator) ∘ L2 (JAX model) ∘ L1 (Pallas kernel) compose.
+//!
+//! Run: `make artifacts && cargo run --release --example stream_classify`
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use figmn::coordinator::protocol::{Request, Response};
+use figmn::coordinator::{serve, Metrics, Registry, ServerConfig};
+use figmn::data::synth;
+use figmn::eval::{multiclass_auc, Stopwatch};
+use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
+use figmn::gmm::GmmConfig;
+use figmn::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    phase1_headline_speedup();
+    phase2_full_pipeline();
+}
+
+/// Paper Tables 2/3 shape at the MNIST row: δ=1, β=0 → exactly one
+/// Gaussian component; the timing difference is pure O(D³) vs O(D²).
+fn phase1_headline_speedup() {
+    println!("== Phase 1: headline speedup (MNIST-shaped, N=1000, D=784, K=1) ==");
+    let data = synth::generate(synth::spec("MNIST").unwrap(), 42);
+    let stds = data.feature_stds();
+    let half = data.len() / 2;
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let (tr, te) = idx.split_at(half);
+    let train = data.subset(tr);
+    let test = data.subset(te);
+
+    let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.0).without_pruning();
+
+    let mut fast = supervised_figmn(cfg.clone(), &stds, data.n_classes);
+    let mut sw_fast_train = Stopwatch::new();
+    sw_fast_train.time(|| {
+        for (x, &y) in train.features.iter().zip(train.labels.iter()) {
+            fast.train_one(x, y);
+        }
+    });
+    let mut sw_fast_test = Stopwatch::new();
+    let scores_fast: Vec<Vec<f64>> =
+        sw_fast_test.time(|| test.features.iter().map(|x| fast.class_scores(x)).collect());
+
+    let mut orig = supervised_igmn(cfg, &stds, data.n_classes);
+    let mut sw_orig_train = Stopwatch::new();
+    sw_orig_train.time(|| {
+        for (x, &y) in train.features.iter().zip(train.labels.iter()) {
+            orig.train_one(x, y);
+        }
+    });
+    let mut sw_orig_test = Stopwatch::new();
+    let scores_orig: Vec<Vec<f64>> =
+        sw_orig_test.time(|| test.features.iter().map(|x| orig.class_scores(x)).collect());
+
+    let auc_fast = multiclass_auc(&scores_fast, &test.labels, data.n_classes);
+    let auc_orig = multiclass_auc(&scores_orig, &test.labels, data.n_classes);
+    println!(
+        "  IGMN  train {:8.3}s   test {:8.3}s   AUC {:.3}",
+        sw_orig_train.seconds(),
+        sw_orig_test.seconds(),
+        auc_orig
+    );
+    println!(
+        "  FIGMN train {:8.3}s   test {:8.3}s   AUC {:.3}",
+        sw_fast_train.seconds(),
+        sw_fast_test.seconds(),
+        auc_fast
+    );
+    println!(
+        "  speedup: {:.1}× training, {:.1}× testing (paper: ~26× / ~370× at this shape)",
+        sw_orig_train.seconds() / sw_fast_train.seconds().max(1e-9),
+        sw_orig_test.seconds() / sw_fast_test.seconds().max(1e-9),
+    );
+}
+
+fn send(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, req: &Request) -> Response {
+    let mut line = req.to_json().to_string_compact();
+    line.push('\n');
+    writer.write_all(line.as_bytes()).unwrap();
+    let mut buf = String::new();
+    reader.read_line(&mut buf).unwrap();
+    Response::from_line(&buf).unwrap()
+}
+
+fn phase2_full_pipeline() {
+    println!("\n== Phase 2: full pipeline over TCP (L3 ∘ L2 ∘ L1) ==");
+    let have_artifacts = figmn::runtime::Runtime::default_dir().join("manifest.json").exists();
+    if !have_artifacts {
+        println!("  (no artifacts/ — run `make artifacts` for the XLA inference path)");
+    }
+
+    // Coordinator with the XLA predict artifact for 2-feature/3-class
+    // models (the `blobs3` AOT config).
+    let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+    let server = serve(
+        registry.clone(),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            xla_config: have_artifacts.then(|| "blobs3".to_string()),
+        },
+    )
+    .expect("server");
+    println!("  coordinator on {}", server.local_addr);
+
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let create = Request::CreateModel {
+        model: "stream".into(),
+        n_features: 2,
+        n_classes: 3,
+        delta: 0.5,
+        beta: 0.05,
+        stds: vec![4.0, 4.0],
+        shards: 1,
+    };
+    assert_eq!(send(&mut reader, &mut writer, &create), Response::Ok);
+
+    // Stream 3000 labeled records; interleave predictions every 10th.
+    let mut rng = Pcg64::seed(99);
+    let centers = [[0.0_f64, 0.0], [8.0, 8.0], [0.0, 8.0]];
+    let n_stream = 3000;
+    let started = Instant::now();
+    let mut predictions = 0u64;
+    for i in 0..n_stream {
+        let c = i % 3;
+        let x = vec![
+            centers[c][0] + rng.normal() * 0.6,
+            centers[c][1] + rng.normal() * 0.6,
+        ];
+        let resp = send(
+            &mut reader,
+            &mut writer,
+            &Request::Learn { model: "stream".into(), features: x.clone(), label: c },
+        );
+        assert_eq!(resp, Response::Ok);
+        if i % 10 == 9 {
+            let resp = send(
+                &mut reader,
+                &mut writer,
+                &Request::Predict { model: "stream".into(), features: x },
+            );
+            assert!(matches!(resp, Response::Scores { .. }));
+            predictions += 1;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    println!(
+        "  streamed {n_stream} learns + {predictions} predicts in {wall:.2}s \
+         ({:.0} records/s over TCP, single client)",
+        (n_stream as f64 + predictions as f64) / wall
+    );
+
+    // Holdout quality through the wire.
+    let mut correct = 0;
+    let n_test = 300;
+    let mut scores_all = Vec::new();
+    let mut truth = Vec::new();
+    for i in 0..n_test {
+        let c = i % 3;
+        let x = vec![
+            centers[c][0] + rng.normal() * 0.6,
+            centers[c][1] + rng.normal() * 0.6,
+        ];
+        match send(
+            &mut reader,
+            &mut writer,
+            &Request::Predict { model: "stream".into(), features: x },
+        ) {
+            Response::Scores { scores, class } => {
+                if class == c {
+                    correct += 1;
+                }
+                scores_all.push(scores);
+                truth.push(c);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let auc = multiclass_auc(&scores_all, &truth, 3);
+    println!("  holdout: accuracy {}/{n_test}, AUC {auc:.3}", correct);
+
+    // Coordinator stats (incl. whether the XLA path served batches).
+    match send(&mut reader, &mut writer, &Request::Stats { model: "stream".into() }) {
+        Response::Stats(j) => {
+            println!(
+                "  stats: learned={} predicted={} components={} xla_batches={}",
+                j.get("learned").unwrap(),
+                j.get("predicted").unwrap(),
+                j.get("components").unwrap(),
+                j.get("xla_batches").unwrap()
+            );
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(correct as f64 / n_test as f64 > 0.95, "pipeline accuracy too low");
+    server.shutdown();
+    println!("stream_classify OK");
+}

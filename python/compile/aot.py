@@ -1,0 +1,157 @@
+"""AOT lowering: JAX (L2 + L1) → HLO **text** artifacts for the Rust
+runtime.
+
+HLO text — not `lowered.compile()` / serialized HloModuleProto — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which the published `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts are float32 (the PJRT hot path); the Python test-suite checks
+the same graphs in float64 against the oracles, and the Rust integration
+tests compare artifact outputs against the Rust native f64 implementation
+at f32 tolerance.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+Emits one .hlo.txt per (entry-point × shape config) plus manifest.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", False)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Shape configurations shipped by `make artifacts`.
+#   name: (D joint dim, K capacity, B scoring batch, n_known)
+# `quickstart` matches examples/quickstart.rs (4 features + 2 classes);
+# `iris` matches the Table-1 iris row (4 features + 3 classes);
+# `blobs3` matches the coordinator integration tests (2 features + 3
+# classes); `mnist_like` is a scoring-only high-D config proving the
+# batch kernel lowers at paper scale.
+CONFIGS = {
+    "quickstart": dict(D=6, K=8, B=16, n_known=4),
+    "blobs3": dict(D=5, K=16, B=32, n_known=2),
+    "iris": dict(D=7, K=16, B=32, n_known=4),
+    "mnist_like": dict(D=794, K=4, B=8, n_known=784, score_only=True),
+}
+
+F32 = jnp.float32
+
+
+def _state_specs(K: int, D: int):
+    return (
+        jax.ShapeDtypeStruct((K, D), F32),  # mus
+        jax.ShapeDtypeStruct((K, D, D), F32),  # lambdas
+        jax.ShapeDtypeStruct((K,), F32),  # log_dets
+        jax.ShapeDtypeStruct((K,), F32),  # sps
+    )
+
+
+# Masks cross the Rust<->XLA boundary as f32 (0.0 / 1.0): the published
+# `xla` crate has no bool (Pred) NativeType, so artifacts take a f32 mask
+# and threshold it internally, and return masks/flags as f32.
+
+
+def lower_score(D, K, B, **_):
+    def fn(xs, mus, lambdas, log_dets, sps, mask_f):
+        mask = mask_f > 0.5
+        d2, ll, post = model.figmn_score(xs, mus, lambdas, log_dets, sps, mask)
+        return d2, ll, post
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((B, D), F32),
+        *_state_specs(K, D),
+        jax.ShapeDtypeStruct((K,), F32),
+    )
+
+
+def lower_learn(D, K, **_):
+    def fn(x, mus, lambdas, log_dets, sps, vs, mask_f, chi2, sigma_ini):
+        mask = mask_f > 0.5
+        mus2, lams2, lds2, sps2, vs2, mask2, updated = model.figmn_learn_step(
+            x, mus, lambdas, log_dets, sps, vs, mask, chi2, sigma_ini
+        )
+        return (mus2, lams2, lds2, sps2, vs2,
+                mask2.astype(F32), updated.astype(F32))
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((D,), F32),
+        *_state_specs(K, D),
+        jax.ShapeDtypeStruct((K,), F32),  # vs
+        jax.ShapeDtypeStruct((K,), F32),  # mask as f32
+        jax.ShapeDtypeStruct((), F32),  # chi2 threshold
+        jax.ShapeDtypeStruct((D,), F32),  # sigma_ini
+    )
+
+
+def lower_predict(D, K, B, n_known, **_):
+    def fn(xs_known, mus, lambdas, log_dets, sps, mask_f):
+        mask = mask_f > 0.5
+        return (model.figmn_predict(xs_known, mus, lambdas, log_dets, sps, mask,
+                                    n_known=n_known),)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((B, n_known), F32),
+        *_state_specs(K, D),
+        jax.ShapeDtypeStruct((K,), F32),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(CONFIGS), help="comma list")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": []}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        entries = [("score", lower_score)]
+        if not cfg.get("score_only"):
+            entries += [("learn", lower_learn), ("predict", lower_predict)]
+        for kind, lower in entries:
+            lowered = lower(**cfg)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.{kind}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "config": name,
+                    "kind": kind,
+                    "file": fname,
+                    "dim": cfg["D"],
+                    "capacity": cfg["K"],
+                    "batch": cfg["B"],
+                    "n_known": cfg["n_known"],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .mahalanobis import mahalanobis, mahalanobis_batch
+from .precision_update import precision_update
+
+__all__ = ["mahalanobis", "mahalanobis_batch", "precision_update"]

@@ -1,0 +1,78 @@
+"""L1 Pallas kernels: squared Mahalanobis distance (paper Eq. 22).
+
+The K× (D×D) precision tensor is blocked per-component into VMEM
+(BlockSpec grid over K); each grid step computes e = x − μ_k and the
+quadratic form eᵀΛₖe with one D×D mat-vec — the paper's O(D²) insight
+expressed as a TPU HBM↔VMEM schedule (DESIGN.md §Hardware-Adaptation).
+
+Kernels are lowered with interpret=True: on this CPU-PJRT toolchain a
+real-TPU Mosaic lowering would emit a custom-call the CPU plugin cannot
+execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU-PJRT requirement; see module docstring.
+
+
+def _maha_kernel(x_ref, mu_ref, lam_ref, out_ref):
+    """One grid step = one component k."""
+    x = x_ref[...]  # (D,)
+    mu = mu_ref[...]  # (1, D)
+    lam = lam_ref[...]  # (1, D, D)
+    e = x - mu[0]  # (D,)
+    w = lam[0] @ e  # (D,)  one O(D²) mat-vec, VMEM-resident
+    out_ref[...] = jnp.sum(e * w)[None]
+
+
+def mahalanobis(x, mus, lambdas):
+    """d²(x, j) for every component j. x: (D,), mus: (K, D),
+    lambdas: (K, D, D) -> (K,)."""
+    K, D = mus.shape
+    return pl.pallas_call(
+        _maha_kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((D,), lambda k: (0,)),
+            pl.BlockSpec((1, D), lambda k: (k, 0)),
+            pl.BlockSpec((1, D, D), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda k: (k,)),
+        out_shape=jax.ShapeDtypeStruct((K,), x.dtype),
+        interpret=INTERPRET,
+    )(x, mus, lambdas)
+
+
+def _maha_batch_kernel(xs_ref, mu_ref, lam_ref, out_ref):
+    """One grid step = one component k against the whole B×D tile.
+
+    E·Λₖ is a (B,D)@(D,D) matmul — MXU-shaped work on real hardware.
+    """
+    xs = xs_ref[...]  # (B, D)
+    mu = mu_ref[...]  # (1, D)
+    lam = lam_ref[...]  # (1, D, D)
+    e = xs - mu  # (B, D) broadcast over rows
+    q = e @ lam[0]  # (B, D)
+    out_ref[...] = jnp.sum(q * e, axis=1, keepdims=True)
+
+
+def mahalanobis_batch(xs, mus, lambdas):
+    """Batched distances: xs (B, D) -> (B, K)."""
+    B, D = xs.shape
+    K = mus.shape[0]
+    return pl.pallas_call(
+        _maha_batch_kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda k: (0, 0)),
+            pl.BlockSpec((1, D), lambda k: (k, 0)),
+            pl.BlockSpec((1, D, D), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, 1), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((B, K), xs.dtype),
+        interpret=INTERPRET,
+    )(xs, mus, lambdas)

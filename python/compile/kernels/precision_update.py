@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the fused Sherman–Morrison rank-two precision update
+(paper Eqs. 20–21) with the Matrix-Determinant-Lemma factors (Eqs. 25–26).
+
+One grid step updates one component: two D-length mat-vecs, two symmetric
+rank-one GERs, all on the VMEM-resident (D, D) block. ω = 0 (masked /
+zero-responsibility components) degrades to an exact no-op because every
+correction term carries a factor of ω — no branching needed inside the
+kernel.
+
+Returns (μ', Λ', log|C|') per component; the log-det arithmetic happens
+in-kernel from the two lemma factors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _update_kernel(x_ref, omega_ref, mu_ref, lam_ref, ld_ref,
+                   mu_out, lam_out, ld_out):
+    x = x_ref[...]  # (D,)
+    omega = omega_ref[...][0]  # scalar
+    mu = mu_ref[...][0]  # (D,)
+    lam = lam_ref[...][0]  # (D, D)
+    ld = ld_ref[...][0]  # scalar log|C(t-1)|
+    D = x.shape[0]
+
+    one_minus = 1.0 - omega
+    e = x - mu  # Eq. 6 (old-mean error; DESIGN.md §Deviations)
+    dmu = omega * e  # Eq. 8
+    mu_new = mu + dmu  # Eq. 9
+
+    # ---- Eq. 20: rank-one downdate of Λ/(1−ω) ----
+    w = lam @ e  # (D,)
+    q = jnp.sum(e * w)
+    denom1 = 1.0 + omega / one_minus * q
+    lam_bar = lam / one_minus - (omega / (one_minus * one_minus * denom1)) * jnp.outer(w, w)
+
+    # ---- Eq. 25 in log space ----
+    ld_bar = D * jnp.log(one_minus) + ld + jnp.log(denom1)
+
+    # ---- Eq. 21: rank-one update with Δμ ----
+    w2 = lam_bar @ dmu
+    r = jnp.sum(dmu * w2)
+    denom2 = 1.0 - r
+    lam_new = lam_bar + jnp.outer(w2, w2) / denom2
+
+    # ---- Eq. 26 in log space ----
+    ld_new = ld_bar + jnp.log(denom2)
+
+    mu_out[...] = mu_new[None]
+    lam_out[...] = lam_new[None]
+    ld_out[...] = ld_new[None]
+
+
+def precision_update(x, omegas, mus, lambdas, log_dets):
+    """Apply the fused update to every component.
+
+    x: (D,), omegas: (K,) — per-component ω = p(j|x)/sp_j (0 for masked),
+    mus: (K, D), lambdas: (K, D, D), log_dets: (K,).
+    Returns (mus', lambdas', log_dets').
+    """
+    K, D = mus.shape
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((D,), lambda k: (0,)),
+            pl.BlockSpec((1,), lambda k: (k,)),
+            pl.BlockSpec((1, D), lambda k: (k, 0)),
+            pl.BlockSpec((1, D, D), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda k: (k, 0)),
+            pl.BlockSpec((1, D, D), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1,), lambda k: (k,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, D), x.dtype),
+            jax.ShapeDtypeStruct((K, D, D), x.dtype),
+            jax.ShapeDtypeStruct((K,), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, omegas, mus, lambdas, log_dets)

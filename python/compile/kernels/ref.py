@@ -1,0 +1,162 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1) and the L2
+model step.
+
+Everything here is written as the most literal translation of the paper's
+equations — including the naive O(D^3) covariance-form IGMN step that the
+fast path must match (the paper's Section 4 equivalence claim). The pytest
+suite checks kernels/model against these oracles; the Rust integration
+tests then check the AOT artifacts against the Rust native implementation,
+closing the loop across all three layers.
+
+Conventions (shared with model.py and the Rust side):
+  - state is padded to a fixed component capacity K with a boolean mask;
+  - determinants are tracked as log|C| (see DESIGN.md §Deviations);
+  - Eq. 11 uses the exact old-mean error form (DESIGN.md §Deviations).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG_2PI = jnp.log(2.0 * jnp.pi)
+
+
+def mahalanobis_ref(x, mus, lambdas):
+    """Squared Mahalanobis distance of one point to every component.
+
+    x: (D,), mus: (K, D), lambdas: (K, D, D) -> (K,)   [paper Eq. 22]
+    """
+    e = x[None, :] - mus  # (K, D)
+    return jnp.einsum("kd,kde,ke->k", e, lambdas, e)
+
+
+def mahalanobis_batch_ref(xs, mus, lambdas):
+    """Batched distances: xs (B, D) -> (B, K)."""
+    e = xs[:, None, :] - mus[None, :, :]  # (B, K, D)
+    return jnp.einsum("bkd,kde,bke->bk", e, lambdas, e)
+
+
+def log_gaussian_ref(d2, log_det, dim):
+    """ln N(x; mu, C) from distance + log|C| (Eq. 2 in log space)."""
+    return -0.5 * (dim * LOG_2PI + log_det + d2)
+
+
+def posteriors_ref(log_liks, sps, mask):
+    """p(j|x) with sp-proportional priors (Eqs. 3/12), masked softmax.
+
+    log_liks: (..., K), sps: (K,), mask: (K,) -> (..., K)
+    """
+    logw = jnp.where(mask, log_liks + jnp.log(jnp.maximum(sps, 1e-300)), -jnp.inf)
+    best = jnp.max(logw, axis=-1, keepdims=True)
+    best = jnp.where(jnp.isfinite(best), best, 0.0)
+    w = jnp.where(mask, jnp.exp(logw - best), 0.0)
+    total = jnp.sum(w, axis=-1, keepdims=True)
+    return w / jnp.maximum(total, 1e-300)
+
+
+def precision_update_ref(x, mu, lam, log_det, omega):
+    """One component's rank-two update, computed the *slow* way as an
+    independent oracle: form C = lam^-1, apply the covariance recurrence
+    C' = (1-w)C + w e e^T - dmu dmu^T (old-mean-error form), then
+    invert/slogdet directly. Returns (mu', lam', log_det').
+    """
+    del log_det
+    e = x - mu
+    dmu = omega * e
+    mu_new = mu + dmu
+    cov = jnp.linalg.inv(lam)
+    cov_new = (1.0 - omega) * cov + omega * jnp.outer(e, e) - jnp.outer(dmu, dmu)
+    lam_new = jnp.linalg.inv(cov_new)
+    _sign, logdet_new = jnp.linalg.slogdet(cov_new)
+    return mu_new, lam_new, logdet_new
+
+
+def igmn_learn_step_ref(x, state, chi2_thresh, sigma_ini):
+    """Full IGMN learn step on a padded state — the L2 oracle.
+
+    state: dict with mus (K,D), lambdas (K,D,D), log_dets (K,), sps (K,),
+    vs (K,), mask (K,) bool. Returns the new state dict. Purely
+    functional; mirrors model.figmn_learn_step's create/update gating so
+    the two can be compared on random streams.
+    """
+    mus, lambdas = state["mus"], state["lambdas"]
+    log_dets, sps, vs, mask = state["log_dets"], state["sps"], state["vs"], state["mask"]
+    K, D = mus.shape
+
+    d2 = mahalanobis_ref(x, mus, lambdas)
+    accept = jnp.any(jnp.where(mask, d2 < chi2_thresh, False))
+    any_active = jnp.any(mask)
+    full = jnp.all(mask)
+    # Capacity full => always update (mirrors GmmConfig::max_components).
+    do_update = jnp.logical_and(any_active, jnp.logical_or(accept, full))
+
+    # ---- update branch (all components, soft assignment) ----
+    ll = log_gaussian_ref(d2, log_dets, D)
+    post = posteriors_ref(ll, sps, mask)
+    sps_u = jnp.where(mask, sps + post, sps)
+    vs_u = jnp.where(mask, vs + 1, vs)
+    omega = jnp.where(mask, post / jnp.maximum(sps_u, 1e-300), 0.0)
+
+    mus_u, lams_u, lds_u = jax.vmap(
+        lambda mu_k, lam_k, ld_k, om_k: precision_update_ref(x, mu_k, lam_k, ld_k, om_k)
+    )(mus, lambdas, log_dets, omega)
+    # omega == 0 rows must be exact no-ops (matches the Rust skip rule).
+    keep = (omega > 0.0)[:, None]
+    mus_u = jnp.where(keep, mus_u, mus)
+    lams_u = jnp.where(keep[..., None], lams_u, lambdas)
+    lds_u = jnp.where(omega > 0.0, lds_u, log_dets)
+
+    # ---- create branch: activate the first inactive slot ----
+    slot = jnp.argmin(mask)
+    lam_init = jnp.diag(1.0 / (sigma_ini ** 2))
+    ld_init = jnp.sum(jnp.log(sigma_ini ** 2))
+    onehot = jax.nn.one_hot(slot, K, dtype=bool)
+    mus_c = jnp.where(onehot[:, None], x[None, :], mus)
+    lams_c = jnp.where(onehot[:, None, None], lam_init[None], lambdas)
+    lds_c = jnp.where(onehot, ld_init, log_dets)
+    sps_c = jnp.where(onehot, 1.0, sps)
+    vs_c = jnp.where(onehot, 1, vs)
+    mask_c = jnp.logical_or(mask, onehot)
+
+    def pick(u, c):
+        return jnp.where(do_update, u, c)
+
+    return {
+        "mus": pick(mus_u, mus_c),
+        "lambdas": pick(lams_u, lams_c),
+        "log_dets": pick(lds_u, lds_c),
+        "sps": pick(sps_u, sps_c),
+        "vs": pick(vs_u, vs_c),
+        "mask": jnp.where(do_update, mask, mask_c),
+    }
+
+
+def conditional_ref(x_known, mu, lam, log_det, n_known):
+    """Precision-form conditional (Eq. 27 + Schur marginal) for one
+    component, with the known block = leading `n_known` dims.
+
+    Returns (log_lik, reconstruction (D - n_known,)).
+    """
+    i = n_known
+    d = x_known - mu[:i]
+    X = lam[:i, :i]
+    Y = lam[:i, i:]
+    W = lam[i:, i:]
+    ytd = Y.T @ d
+    z = jnp.linalg.solve(W, ytd)
+    recon = mu[i:] - z
+    d2 = d @ (X @ d) - ytd @ z
+    _sign, logdet_w = jnp.linalg.slogdet(W)
+    log_det_a = log_det + logdet_w
+    ll = log_gaussian_ref(jnp.maximum(d2, 0.0), log_det_a, i)
+    return ll, recon
+
+
+def predict_ref(x_known, state, n_known):
+    """Mixture conditional mean (Eqs. 14 + 27) over a padded state."""
+    lls, recons = jax.vmap(
+        lambda mu, lam, ld: conditional_ref(x_known, mu, lam, ld, n_known)
+    )(state["mus"], state["lambdas"], state["log_dets"])
+    post = posteriors_ref(lls, state["sps"], state["mask"])
+    return post @ recons

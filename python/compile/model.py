@@ -1,0 +1,176 @@
+"""L2: the FIGMN compute graph in JAX, calling the L1 Pallas kernels.
+
+Three jittable entry points over a fixed-capacity padded state (the Rust
+coordinator owns dynamic component lifecycle; XLA owns fixed-shape math):
+
+  - figmn_score      — batched log-likelihoods + posteriors (Eqs. 2-3/22)
+  - figmn_learn_step — one full Algorithm-1 step: χ² gate, soft update of
+                       every component via the fused rank-two kernel, or
+                       activation of a fresh slot (Eqs. 4-12, 20-26)
+  - figmn_predict    — batched conditional-mean inference (Eqs. 14 + 27)
+
+State layout (all float32 in the AOT artifacts, float64 under tests):
+  mus (K, D), lambdas (K, D, D), log_dets (K,), sps (K,), vs (K,),
+  mask (K,) bool — plus hyper-parameter tensors chi2_thresh () and
+  sigma_ini (D,). Python never runs at serving time: `aot.py` lowers
+  these once to HLO text that rust/src/runtime/ loads via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mahalanobis, mahalanobis_batch, precision_update
+from .kernels.ref import LOG_2PI, posteriors_ref
+
+
+def figmn_score(xs, mus, lambdas, log_dets, sps, mask):
+    """Score a batch: returns (d2 (B,K), log_liks (B,K), posteriors (B,K)).
+
+    The O(B·K·D²) distance work runs in the Pallas batch kernel; the
+    posterior softmax is cheap jnp glue that XLA fuses around it.
+    """
+    D = mus.shape[1]
+    d2 = mahalanobis_batch(xs, mus, lambdas)  # (B, K)
+    ll = -0.5 * (D * LOG_2PI + log_dets[None, :] + d2)
+    post = posteriors_ref(ll, sps, mask)
+    return d2, ll, post
+
+
+def figmn_learn_step(x, mus, lambdas, log_dets, sps, vs, mask,
+                     chi2_thresh, sigma_ini):
+    """One Algorithm-1 step. Returns the updated
+    (mus, lambdas, log_dets, sps, vs, mask, updated_flag)."""
+    K, D = mus.shape
+
+    d2 = mahalanobis(x, mus, lambdas)  # (K,) Pallas kernel, Eq. 22
+    accept = jnp.any(jnp.where(mask, d2 < chi2_thresh, False))
+    any_active = jnp.any(mask)
+    full = jnp.all(mask)
+    do_update = jnp.logical_and(any_active, jnp.logical_or(accept, full))
+
+    # ---- update branch ----
+    ll = -0.5 * (D * LOG_2PI + log_dets + d2)
+    post = posteriors_ref(ll, sps, mask)  # Eqs. 2-3/12
+    sps_u = jnp.where(mask, sps + post, sps)  # Eq. 5
+    vs_u = jnp.where(mask, vs + 1, vs)  # Eq. 4
+    omega = jnp.where(mask, post / jnp.maximum(sps_u, 1e-300), 0.0)  # Eq. 7
+    # Fused rank-two kernel (Eqs. 20-21, 25-26); ω = 0 rows are no-ops.
+    mus_u, lams_u, lds_u = precision_update(x, omega, mus, lambdas, log_dets)
+
+    # ---- create branch: activate the first inactive slot ----
+    slot = jnp.argmin(mask)
+    onehot = jax.nn.one_hot(slot, K, dtype=bool)
+    lam_init = jnp.diag(1.0 / (sigma_ini ** 2))
+    ld_init = jnp.sum(jnp.log(sigma_ini ** 2))
+    mus_c = jnp.where(onehot[:, None], x[None, :], mus)
+    lams_c = jnp.where(onehot[:, None, None], lam_init[None], lambdas)
+    lds_c = jnp.where(onehot, ld_init, log_dets)
+    sps_c = jnp.where(onehot, 1.0, sps)
+    vs_c = jnp.where(onehot, 1, vs)
+    mask_c = jnp.logical_or(mask, onehot)
+
+    pick = lambda u, c: jnp.where(do_update, u, c)  # noqa: E731
+    return (
+        pick(mus_u, mus_c),
+        pick(lams_u, lams_c),
+        pick(lds_u, lds_c),
+        pick(sps_u, sps_c),
+        pick(vs_u, vs_c),
+        jnp.where(do_update, mask, mask_c),
+        do_update,
+    )
+
+
+def _cholesky_small(W):
+    """Cholesky of a small (..., o, o) SPD block, unrolled over the static
+    `o` so it lowers to plain HLO ops.
+
+    `jnp.linalg.{solve,slogdet}` lower to typed-FFI LAPACK custom-calls
+    that the Rust side's xla_extension 0.5.1 cannot execute — and the
+    paper's point (§3) is that only this o×o block ever needs O(o³) work,
+    so an unrolled textbook Cholesky is both portable and cheap.
+    """
+    o = W.shape[-1]
+    rows = []  # rows[i][j] = L_ij, entries are (...,) arrays
+    for i in range(o):
+        row = []
+        for j in range(i + 1):
+            s = W[..., i, j]
+            prev = row if j == i else rows[j]
+            for k in range(j):
+                s = s - row[k] * prev[k]
+            if i == j:
+                row.append(jnp.sqrt(jnp.maximum(s, 1e-30)))
+            else:
+                row.append(s / rows[j][j])
+        rows.append(row)
+    # Assemble (..., o, o) lower-triangular L.
+    zero = jnp.zeros_like(W[..., 0, 0])
+    L = jnp.stack(
+        [
+            jnp.stack([rows[i][j] if j <= i else zero for j in range(o)], axis=-1)
+            for i in range(o)
+        ],
+        axis=-2,
+    )
+    return L
+
+
+def _chol_solve_small(L, b):
+    """Solve (L·Lᵀ)·x = b with unrolled forward/back substitution.
+    L: (..., o, o) lower-triangular, b: (..., o) -> x: (..., o)."""
+    o = L.shape[-1]
+    y = []
+    for i in range(o):
+        s = b[..., i]
+        for k in range(i):
+            s = s - L[..., i, k] * y[k]
+        y.append(s / L[..., i, i])
+    x = [None] * o
+    for i in reversed(range(o)):
+        s = y[i]
+        for k in range(i + 1, o):
+            s = s - L[..., k, i] * x[k]
+        x[i] = s / L[..., i, i]
+    return jnp.stack(x, axis=-1)
+
+
+def figmn_predict(xs_known, mus, lambdas, log_dets, sps, mask, n_known: int):
+    """Batched conditional-mean inference (Eqs. 14 + 27).
+
+    xs_known: (B, n_known); targets are the trailing D − n_known dims.
+    Returns (B, D − n_known) reconstructions. Only the (o, o) target
+    block W is ever solved — the O(o³) the paper accepts (§3).
+    """
+    i = n_known
+    X = lambdas[:, :i, :i]  # (K, i, i)
+    Y = lambdas[:, :i, i:]  # (K, i, o)
+    W = lambdas[:, i:, i:]  # (K, o, o)
+    L = _cholesky_small(W)  # (K, o, o)
+    logdet_w = 2.0 * jnp.sum(jnp.log(jnp.diagonal(L, axis1=-2, axis2=-1)), axis=-1)
+    log_det_a = log_dets + logdet_w
+
+    d = xs_known[:, None, :] - mus[None, :, :i]  # (B, K, i)
+    ytd = jnp.einsum("kio,bki->bko", Y, d)  # (B, K, o)
+    z = _chol_solve_small(L[None], ytd)  # (B, K, o)
+    recon = mus[None, :, i:] - z  # (B, K, o)
+
+    dxd = jnp.einsum("bki,kij,bkj->bk", d, X, d)
+    d2 = jnp.maximum(dxd - jnp.einsum("bko,bko->bk", ytd, z), 0.0)
+    ll = -0.5 * (i * LOG_2PI + log_det_a[None, :] + d2)
+    post = posteriors_ref(ll, sps, mask)  # (B, K), Eq. 14
+    return jnp.einsum("bk,bko->bo", post, recon)  # Eq. 27 mixture
+
+
+def empty_state(K: int, D: int, dtype=jnp.float32):
+    """Fresh all-inactive padded state (what the Rust runtime feeds first)."""
+    return {
+        "mus": jnp.zeros((K, D), dtype),
+        "lambdas": jnp.zeros((K, D, D), dtype),
+        "log_dets": jnp.zeros((K,), dtype),
+        "sps": jnp.zeros((K,), dtype),
+        "vs": jnp.zeros((K,), dtype),
+        "mask": jnp.zeros((K,), bool),
+    }

@@ -1,0 +1,93 @@
+//! Coordinator ablation (DESIGN.md row S2): micro-batching policy —
+//! batch size × flush deadline vs serving throughput and tail latency,
+//! measured through the real worker/router stack with concurrent
+//! clients.
+//!
+//! Run: `cargo bench --bench ablation_batching`
+
+use figmn::bench_support::{percentile, TablePrinter};
+use figmn::coordinator::batcher::BatcherConfig;
+use figmn::coordinator::metrics::Metrics;
+use figmn::coordinator::worker::{Worker, WorkerConfig};
+use figmn::gmm::GmmConfig;
+use figmn::rng::Pcg64;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let clients = 4usize;
+    let requests_per_client = 500usize;
+
+    println!(
+        "S2 — batching ablation ({clients} concurrent clients × {requests_per_client} predicts)"
+    );
+    let t = TablePrinter::new(
+        &["max_batch", "max_delay", "throughput", "p50 lat", "p99 lat", "mean batch"],
+        &[10, 10, 14, 10, 10, 10],
+    );
+
+    for (max_batch, delay_us) in
+        [(1usize, 0u64), (8, 200), (8, 2000), (32, 200), (32, 2000), (128, 2000)]
+    {
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let mut wc = WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]);
+        wc.batcher = BatcherConfig {
+            max_batch,
+            max_delay: Duration::from_micros(delay_us),
+        };
+        let worker = Worker::spawn(wc, metrics.clone());
+
+        // Warm the model.
+        let mut rng = Pcg64::seed(1);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..300 {
+            let c = i % 3;
+            worker
+                .handle
+                .learn(
+                    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7],
+                    c,
+                )
+                .unwrap();
+        }
+        let _ = worker.handle.stats(); // barrier: all learns applied
+
+        // Concurrent predict load.
+        let started = Instant::now();
+        let mut joins = Vec::new();
+        for t_id in 0..clients {
+            let h = worker.handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::seed(100 + t_id as u64);
+                let mut lats = Vec::with_capacity(requests_per_client);
+                for _ in 0..requests_per_client {
+                    let x = vec![rng.uniform_in(-1.0, 8.0), rng.uniform_in(-1.0, 8.0)];
+                    let t0 = Instant::now();
+                    let scores = h.predict(x).unwrap();
+                    lats.push(t0.elapsed().as_secs_f64());
+                    assert_eq!(scores.len(), 3);
+                }
+                lats
+            }));
+        }
+        let mut lats: Vec<f64> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+        let wall = started.elapsed().as_secs_f64();
+        let total = clients * requests_per_client;
+        let snap = metrics.snapshot();
+        t.row(&[
+            max_batch.to_string(),
+            format!("{delay_us}µs"),
+            format!("{:9.0}/s", total as f64 / wall),
+            format!("{:7.0}µs", percentile(&mut lats, 50.0) * 1e6),
+            format!("{:7.0}µs", percentile(&mut lats, 99.0) * 1e6),
+            format!("{:7.2}", snap.mean_batch),
+        ]);
+        worker.join();
+    }
+    println!(
+        "\n(closed-loop clients: each blocks on its reply, so in-flight ≤ #clients and the \
+         deadline is pure added latency when per-item cost is tiny — batching pays only for \
+         expensive items (high-D XLA scoring) or open-loop traffic; see EXPERIMENTS.md §S2)"
+    );
+}

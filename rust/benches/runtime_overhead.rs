@@ -1,0 +1,84 @@
+//! Runtime ablation (DESIGN.md row S3): batched scoring through the AOT
+//! XLA artifact vs the native Rust implementation, at three shape
+//! configs. Quantifies what the PJRT boundary costs (or saves) on the
+//! inference path — the coordinator uses this to decide when the XLA
+//! path is worth it.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench runtime_overhead`
+
+use figmn::bench_support::{time_reps, TablePrinter};
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture};
+use figmn::rng::Pcg64;
+use figmn::runtime::{PackedState, Runtime};
+use figmn::stats::mean;
+
+fn main() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts/ — run `make artifacts` first; skipping");
+        return;
+    }
+    let rt = Runtime::open(dir).expect("open artifacts");
+
+    println!("S3 — batched scoring: XLA artifact vs native (per point, smaller is better)");
+    let t = TablePrinter::new(
+        &["config", "D", "K", "B", "native/pt", "xla/pt", "xla speedup"],
+        &[12, 6, 5, 5, 12, 12, 12],
+    );
+
+    for meta in rt.manifest().artifacts().iter().filter(|a| {
+        matches!(a.kind, figmn::runtime::ArtifactKind::Score)
+    }) {
+        let (d, k, b) = (meta.dim, meta.capacity, meta.batch);
+        // Train a native model at this joint shape, filling ~K components.
+        let cfg = GmmConfig::new(d)
+            .with_delta(0.5)
+            .with_beta(0.2)
+            .with_max_components(k)
+            .without_pruning();
+        let stds = vec![1.0; d];
+        let mut model = Figmn::new(cfg, &stds);
+        let mut rng = Pcg64::seed(9);
+        for i in 0..200 {
+            let c = (i % 4) as f64 * 5.0;
+            let x: Vec<f64> = (0..d).map(|_| c + rng.normal()).collect();
+            model.learn(&x);
+        }
+        let state = PackedState::from_figmn(&model, k);
+
+        // A batch of query points.
+        let queries: Vec<Vec<f64>> =
+            (0..b).map(|_| (0..d).map(|_| rng.normal() * 3.0).collect()).collect();
+        let mut xs = Vec::with_capacity(b * d);
+        for q in &queries {
+            xs.extend(q.iter().map(|&v| v as f32));
+        }
+
+        // Native batched scoring.
+        let native = time_reps(20, || {
+            for q in &queries {
+                let _ = model.posteriors(q);
+            }
+        });
+
+        // XLA batched scoring (compile once, then steady-state).
+        let exec = rt.score_exec(&meta.config).expect("score exec");
+        let _ = exec.score(&xs, &state).expect("warmup");
+        let xla = time_reps(20, || {
+            let _ = exec.score(&xs, &state).unwrap();
+        });
+
+        let native_pt = mean(&native) / b as f64;
+        let xla_pt = mean(&xla) / b as f64;
+        t.row(&[
+            meta.config.clone(),
+            d.to_string(),
+            k.to_string(),
+            b.to_string(),
+            format!("{native_pt:.3e}"),
+            format!("{xla_pt:.3e}"),
+            format!("{:8.2}×", native_pt / xla_pt),
+        ]);
+    }
+    println!("\n(native = f64 per-point loop; xla = f32 B-batch through PJRT incl. literal marshalling)");
+}

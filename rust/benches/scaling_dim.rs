@@ -1,0 +1,80 @@
+//! Complexity-scaling experiment (DESIGN.md row S1): per-point training
+//! cost vs dimensionality for both variants, with fitted power-law
+//! exponents — the direct empirical check of the paper's O(NKD³) →
+//! O(NKD²) claim (its central contribution).
+//!
+//! Run: `cargo bench --bench scaling_dim`
+
+use figmn::bench_support::{fit_power_law, TablePrinter};
+use figmn::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture};
+use figmn::rng::Pcg64;
+use std::time::Instant;
+
+fn per_point_seconds(dim: usize, n: usize, fast: bool, seed: u64) -> f64 {
+    let cfg = GmmConfig::new(dim).with_delta(1.0).with_beta(0.0).without_pruning();
+    let stds = vec![1.0; dim];
+    let mut rng = Pcg64::seed(seed);
+    let points: Vec<Vec<f64>> = (0..n).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+    if fast {
+        let mut m = Figmn::new(cfg, &stds);
+        let t = Instant::now();
+        for p in &points {
+            m.learn(p);
+        }
+        t.elapsed().as_secs_f64() / n as f64
+    } else {
+        let mut m = Igmn::new(cfg, &stds);
+        let t = Instant::now();
+        for p in &points {
+            m.learn(p);
+        }
+        t.elapsed().as_secs_f64() / n as f64
+    }
+}
+
+fn main() {
+    // Sized so the whole sweep stays in a minutes-scale budget while the
+    // cubic/quadratic split is unambiguous.
+    let dims_igmn = [8usize, 16, 32, 64, 128, 256, 512];
+    let dims_figmn = [8usize, 16, 32, 64, 128, 256, 512, 1024, 2048];
+
+    println!("S1 — per-point training cost vs D (K=1, β=0)");
+    let t = TablePrinter::new(&["D", "IGMN s/pt", "FIGMN s/pt", "ratio"], &[6, 14, 14, 10]);
+    let mut igmn_pts: Vec<(f64, f64)> = Vec::new();
+    let mut figmn_pts: Vec<(f64, f64)> = Vec::new();
+    for &d in &dims_figmn {
+        let n = (200_000 / d).clamp(20, 2000); // keep each cell ~fixed work
+        let fast = per_point_seconds(d, n, true, 42);
+        figmn_pts.push((d as f64, fast));
+        if dims_igmn.contains(&d) {
+            let n_slow = (60 * 1024 / d.max(1)).clamp(10, 500);
+            let slow = per_point_seconds(d, n_slow, false, 42);
+            igmn_pts.push((d as f64, slow));
+            t.row(&[
+                d.to_string(),
+                format!("{slow:.3e}"),
+                format!("{fast:.3e}"),
+                format!("{:8.1}×", slow / fast),
+            ]);
+        } else {
+            t.row(&[d.to_string(), "-".into(), format!("{fast:.3e}"), "-".into()]);
+        }
+    }
+
+    // Fit exponents on the asymptotic tail (D ≥ 64, where constant terms
+    // stop mattering).
+    let tail = |pts: &[(f64, f64)]| -> (Vec<f64>, Vec<f64>) {
+        pts.iter().filter(|(d, _)| *d >= 64.0).map(|&(d, s)| (d, s)).unzip()
+    };
+    let (xi, yi) = tail(&igmn_pts);
+    let (xf, yf) = tail(&figmn_pts);
+    let p_igmn = fit_power_law(&xi, &yi);
+    let p_figmn = fit_power_law(&xf, &yf);
+    println!("\nfitted exponents (tail D ≥ 64):");
+    println!("  IGMN : time ∝ D^{p_igmn:.2}   (paper claim: 3)");
+    println!("  FIGMN: time ∝ D^{p_figmn:.2}   (paper claim: 2)");
+    assert!(p_igmn > 2.5, "IGMN exponent {p_igmn} not cubic-ish");
+    assert!(p_figmn < 2.5, "FIGMN exponent {p_figmn} not quadratic-ish");
+    assert!(p_igmn - p_figmn > 0.6, "claimed complexity gap not observed");
+    println!("scaling_dim OK — the paper's complexity separation holds");
+}

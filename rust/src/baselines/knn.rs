@@ -1,0 +1,92 @@
+//! k-nearest neighbours (the paper's 1-NN column).
+
+use super::Classifier;
+use crate::data::Dataset;
+
+/// Brute-force k-NN with Euclidean distance. Scores are the
+/// distance-weighted vote shares of the k nearest neighbours (for k = 1
+/// this degenerates to a one-hot vote, like Weka's IB1).
+pub struct Knn {
+    k: usize,
+    train: Option<Dataset>,
+}
+
+impl Knn {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Knn { k, train: None }
+    }
+}
+
+impl Classifier for Knn {
+    fn fit(&mut self, data: &Dataset) {
+        self.train = Some(data.clone());
+    }
+
+    fn class_scores(&self, x: &[f64]) -> Vec<f64> {
+        let train = self.train.as_ref().expect("fit before predict");
+        let mut dists: Vec<(f64, usize)> = train
+            .features
+            .iter()
+            .zip(train.labels.iter())
+            .map(|(row, &label)| {
+                let d2: f64 = row.iter().zip(x.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+                (d2, label)
+            })
+            .collect();
+        let k = self.k.min(dists.len());
+        dists.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut scores = vec![0.0; train.n_classes];
+        for &(d2, label) in &dists[..k] {
+            scores[label] += 1.0 / (1.0 + d2);
+        }
+        let total: f64 = scores.iter().sum();
+        if total > 0.0 {
+            for s in &mut scores {
+                *s /= total;
+            }
+        }
+        scores
+    }
+
+    fn name(&self) -> &'static str {
+        if self.k == 1 {
+            "1-NN"
+        } else {
+            "k-NN"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_support::check_learns;
+    use crate::data::Dataset;
+
+    #[test]
+    fn learns_blobs() {
+        check_learns(&mut Knn::new(1), 0.95);
+        check_learns(&mut Knn::new(5), 0.95);
+    }
+
+    #[test]
+    fn exact_match_wins() {
+        let d = Dataset::new(
+            "t",
+            vec![vec![0.0, 0.0], vec![10.0, 10.0]],
+            vec![0, 1],
+            2,
+        );
+        let mut knn = Knn::new(1);
+        knn.fit(&d);
+        assert_eq!(knn.predict(&[0.1, -0.1]), 0);
+        assert_eq!(knn.predict(&[9.9, 10.2]), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn predict_before_fit_panics() {
+        Knn::new(1).class_scores(&[0.0]);
+    }
+}

@@ -1,0 +1,243 @@
+//! Dropout multi-layer perceptron — the paper's "Neural Network" column:
+//! one hidden layer of 50 units, 50% hidden dropout, 20% input dropout
+//! (Hinton et al. 2012, as cited), softmax output, SGD with momentum.
+
+use super::Classifier;
+use crate::data::{Dataset, StandardScaler};
+use crate::rng::Pcg64;
+
+/// MLP hyper-parameters (defaults = the paper's Table 4 settings).
+#[derive(Debug, Clone, Copy)]
+pub struct MlpConfig {
+    pub hidden: usize,
+    pub input_dropout: f64,
+    pub hidden_dropout: f64,
+    pub learning_rate: f64,
+    pub momentum: f64,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig {
+            hidden: 50,
+            input_dropout: 0.2,
+            hidden_dropout: 0.5,
+            learning_rate: 0.05,
+            momentum: 0.9,
+            epochs: 60,
+            seed: 1,
+        }
+    }
+}
+
+/// Single-hidden-layer dropout MLP with ReLU hidden units.
+pub struct Mlp {
+    cfg: MlpConfig,
+    scaler: Option<StandardScaler>,
+    // Weights: w1[h][d], b1[h], w2[c][h], b2[c].
+    w1: Vec<Vec<f64>>,
+    b1: Vec<f64>,
+    w2: Vec<Vec<f64>>,
+    b2: Vec<f64>,
+    n_classes: usize,
+}
+
+impl Mlp {
+    pub fn new(cfg: MlpConfig) -> Self {
+        Mlp { cfg, scaler: None, w1: vec![], b1: vec![], w2: vec![], b2: vec![], n_classes: 0 }
+    }
+
+    fn forward(&self, x: &[f64], hidden_scale: f64) -> (Vec<f64>, Vec<f64>) {
+        // Inference-time dropout scaling: multiply activations by keep-prob.
+        let h: Vec<f64> = self
+            .w1
+            .iter()
+            .zip(self.b1.iter())
+            .map(|(w, &b)| {
+                let z: f64 = w.iter().zip(x.iter()).map(|(a, b)| a * b).sum::<f64>() + b;
+                z.max(0.0) * hidden_scale
+            })
+            .collect();
+        let logits: Vec<f64> = self
+            .w2
+            .iter()
+            .zip(self.b2.iter())
+            .map(|(w, &b)| w.iter().zip(h.iter()).map(|(a, b)| a * b).sum::<f64>() + b)
+            .collect();
+        (h, logits)
+    }
+}
+
+fn softmax(logits: &[f64]) -> Vec<f64> {
+    let best = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut total = 0.0;
+    let mut out: Vec<f64> = logits
+        .iter()
+        .map(|&z| {
+            let v = (z - best).exp();
+            total += v;
+            v
+        })
+        .collect();
+    for v in &mut out {
+        *v /= total;
+    }
+    out
+}
+
+impl Classifier for Mlp {
+    fn fit(&mut self, data: &Dataset) {
+        let scaler = StandardScaler::fit(&data.features);
+        let xs = scaler.transform_all(&data.features);
+        let d = data.dim();
+        let h = self.cfg.hidden;
+        let k = data.n_classes;
+        self.n_classes = k;
+        let mut rng = Pcg64::seed(self.cfg.seed);
+
+        // He init for ReLU.
+        let scale1 = (2.0 / d as f64).sqrt();
+        let scale2 = (2.0 / h as f64).sqrt();
+        self.w1 = (0..h).map(|_| (0..d).map(|_| rng.normal() * scale1).collect()).collect();
+        self.b1 = vec![0.0; h];
+        self.w2 = (0..k).map(|_| (0..h).map(|_| rng.normal() * scale2).collect()).collect();
+        self.b2 = vec![0.0; k];
+
+        let mut vw1 = vec![vec![0.0; d]; h];
+        let mut vb1 = vec![0.0; h];
+        let mut vw2 = vec![vec![0.0; h]; k];
+        let mut vb2 = vec![0.0; k];
+
+        let n = xs.len();
+        let lr = self.cfg.learning_rate;
+        let mom = self.cfg.momentum;
+        for _epoch in 0..self.cfg.epochs {
+            for _ in 0..n {
+                let i = rng.below(n);
+                // Input dropout mask.
+                let xi: Vec<f64> = xs[i]
+                    .iter()
+                    .map(|&v| if rng.uniform() < self.cfg.input_dropout { 0.0 } else { v })
+                    .collect();
+                // Hidden forward with dropout mask.
+                let mut hmask = vec![false; h];
+                let mut hact = vec![0.0; h];
+                for j in 0..h {
+                    if rng.uniform() < self.cfg.hidden_dropout {
+                        continue; // dropped
+                    }
+                    hmask[j] = true;
+                    let z: f64 = self.w1[j].iter().zip(xi.iter()).map(|(a, b)| a * b).sum::<f64>()
+                        + self.b1[j];
+                    hact[j] = z.max(0.0);
+                }
+                let logits: Vec<f64> = (0..k)
+                    .map(|c| {
+                        self.w2[c].iter().zip(hact.iter()).map(|(a, b)| a * b).sum::<f64>()
+                            + self.b2[c]
+                    })
+                    .collect();
+                let probs = softmax(&logits);
+
+                // Backprop (cross-entropy): δ_out = p − y.
+                let y = data.labels[i];
+                let dout: Vec<f64> =
+                    probs.iter().enumerate().map(|(c, &p)| p - if c == y { 1.0 } else { 0.0 }).collect();
+                // Hidden deltas.
+                let mut dh = vec![0.0; h];
+                for c in 0..k {
+                    for j in 0..h {
+                        if hmask[j] && hact[j] > 0.0 {
+                            dh[j] += dout[c] * self.w2[c][j];
+                        }
+                    }
+                }
+                // Update output layer.
+                for c in 0..k {
+                    for j in 0..h {
+                        let g = dout[c] * hact[j];
+                        vw2[c][j] = mom * vw2[c][j] - lr * g;
+                        self.w2[c][j] += vw2[c][j];
+                    }
+                    vb2[c] = mom * vb2[c] - lr * dout[c];
+                    self.b2[c] += vb2[c];
+                }
+                // Update hidden layer.
+                for j in 0..h {
+                    if !hmask[j] || dh[j] == 0.0 {
+                        continue;
+                    }
+                    for (w, (&xv, v)) in
+                        self.w1[j].iter_mut().zip(xi.iter().zip(vw1[j].iter_mut()))
+                    {
+                        let g = dh[j] * xv;
+                        *v = mom * *v - lr * g;
+                        *w += *v;
+                    }
+                    vb1[j] = mom * vb1[j] - lr * dh[j];
+                    self.b1[j] += vb1[j];
+                    // Max-norm constraint (Hinton et al. 2012 §A.1, the
+                    // standard companion to dropout): rescale the unit's
+                    // incoming weights to ‖w‖ ≤ c. Keeps high-D training
+                    // (e.g. D=3072) from exploding at fixed η.
+                    const MAX_NORM: f64 = 4.0;
+                    let norm2: f64 = self.w1[j].iter().map(|w| w * w).sum();
+                    if norm2 > MAX_NORM * MAX_NORM {
+                        let s = MAX_NORM / norm2.sqrt();
+                        for w in self.w1[j].iter_mut() {
+                            *w *= s;
+                        }
+                    }
+                }
+            }
+        }
+        self.scaler = Some(scaler);
+    }
+
+    fn class_scores(&self, x: &[f64]) -> Vec<f64> {
+        assert!(self.n_classes > 0, "fit before predict");
+        let x = self.scaler.as_ref().unwrap().transform(x);
+        // Dropout inference scaling: hidden activations × keep-prob; input
+        // scaling folded in the same way.
+        let xin: Vec<f64> = x.iter().map(|&v| v * (1.0 - self.cfg.input_dropout)).collect();
+        let (_, logits) = self.forward(&xin, 1.0 - self.cfg.hidden_dropout);
+        softmax(&logits)
+    }
+
+    fn name(&self) -> &'static str {
+        "Neural Network"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_support::check_learns;
+
+    #[test]
+    fn learns_blobs() {
+        check_learns(&mut Mlp::new(MlpConfig { epochs: 30, ..Default::default() }), 0.93);
+    }
+
+    #[test]
+    fn scores_are_distribution() {
+        let d = crate::baselines::test_support::blobs(90, 5);
+        let mut mlp = Mlp::new(MlpConfig { epochs: 5, ..Default::default() });
+        mlp.fit(&d);
+        let s = mlp.class_scores(&d.features[0]);
+        assert_eq!(s.len(), 3);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = crate::baselines::test_support::blobs(60, 6);
+        let mut a = Mlp::new(MlpConfig { epochs: 3, ..Default::default() });
+        let mut b = Mlp::new(MlpConfig { epochs: 3, ..Default::default() });
+        a.fit(&d);
+        b.fit(&d);
+        assert_eq!(a.class_scores(&d.features[1]), b.class_scores(&d.features[1]));
+    }
+}

@@ -1,0 +1,83 @@
+//! Table 4 comparator classifiers, implemented from scratch (the paper
+//! used Weka's): a dropout MLP (Hinton et al. 2012, the paper's "Neural
+//! Network" column), 1-NN, Gaussian naive Bayes, and a linear SVM trained
+//! with Pegasos (≈ Weka's linear SMO). All implement [`Classifier`] so
+//! the Table 4 harness can sweep them uniformly.
+
+mod knn;
+mod mlp;
+mod naive_bayes;
+mod svm;
+
+pub use knn::Knn;
+pub use mlp::{Mlp, MlpConfig};
+pub use naive_bayes::GaussianNaiveBayes;
+pub use svm::{LinearSvm, SvmConfig};
+
+use crate::data::Dataset;
+
+/// A batch-trained classifier producing per-class confidence scores
+/// (usable as AUC ranking scores).
+pub trait Classifier {
+    /// Fit on a training set (may be called once only).
+    fn fit(&mut self, data: &Dataset);
+
+    /// Per-class scores for one example; higher = more confident. Scores
+    /// need not be calibrated probabilities but must rank correctly.
+    fn class_scores(&self, x: &[f64]) -> Vec<f64>;
+
+    /// Hard prediction: argmax of the scores.
+    fn predict(&self, x: &[f64]) -> usize {
+        self.class_scores(x)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Display name for result tables.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::data::Dataset;
+    use crate::rng::Pcg64;
+
+    /// Three well-separated Gaussian blobs in 2-D.
+    pub fn blobs(n: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::seed(seed);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        let mut features = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % 3;
+            features.push(vec![
+                centers[c][0] + rng.normal() * 0.8,
+                centers[c][1] + rng.normal() * 0.8,
+            ]);
+            labels.push(c);
+        }
+        Dataset::new("blobs", features, labels, 3)
+    }
+
+    /// Generic smoke check: ≥`min_acc` holdout accuracy on the blobs.
+    pub fn check_learns(clf: &mut dyn super::Classifier, min_acc: f64) {
+        let train = blobs(300, 1);
+        let test = blobs(90, 2);
+        clf.fit(&train);
+        let correct = test
+            .features
+            .iter()
+            .zip(test.labels.iter())
+            .filter(|(x, &y)| clf.predict(x) == y)
+            .count();
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc >= min_acc, "{} accuracy {acc} < {min_acc}", clf.name());
+        // Scores have the right arity everywhere.
+        let s = clf.class_scores(&test.features[0]);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,136 @@
+//! Gaussian naive Bayes (the paper's Naive Bayes column).
+
+use super::Classifier;
+use crate::data::Dataset;
+
+/// Per-class independent Gaussians per feature, with Laplace-smoothed
+/// priors and a variance floor for constant features.
+#[derive(Default)]
+pub struct GaussianNaiveBayes {
+    priors: Vec<f64>,
+    means: Vec<Vec<f64>>,
+    vars: Vec<Vec<f64>>,
+}
+
+impl GaussianNaiveBayes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+const VAR_FLOOR: f64 = 1e-9;
+
+impl Classifier for GaussianNaiveBayes {
+    fn fit(&mut self, data: &Dataset) {
+        let k = data.n_classes;
+        let d = data.dim();
+        let counts = data.class_counts();
+        self.priors = counts
+            .iter()
+            .map(|&c| (c as f64 + 1.0) / (data.len() as f64 + k as f64))
+            .collect();
+        self.means = vec![vec![0.0; d]; k];
+        self.vars = vec![vec![0.0; d]; k];
+        for (row, &label) in data.features.iter().zip(data.labels.iter()) {
+            for j in 0..d {
+                self.means[label][j] += row[j];
+            }
+        }
+        for c in 0..k {
+            let n = counts[c].max(1) as f64;
+            for j in 0..d {
+                self.means[c][j] /= n;
+            }
+        }
+        for (row, &label) in data.features.iter().zip(data.labels.iter()) {
+            for j in 0..d {
+                let e = row[j] - self.means[label][j];
+                self.vars[label][j] += e * e;
+            }
+        }
+        for c in 0..k {
+            let n = counts[c].max(1) as f64;
+            for j in 0..d {
+                self.vars[c][j] = (self.vars[c][j] / n).max(VAR_FLOOR);
+            }
+        }
+    }
+
+    fn class_scores(&self, x: &[f64]) -> Vec<f64> {
+        assert!(!self.priors.is_empty(), "fit before predict");
+        let k = self.priors.len();
+        let mut log_scores = Vec::with_capacity(k);
+        let mut best = f64::NEG_INFINITY;
+        for c in 0..k {
+            let mut s = self.priors[c].ln();
+            for (j, &xj) in x.iter().enumerate() {
+                let var = self.vars[c][j];
+                let e = xj - self.means[c][j];
+                s += -0.5 * ((2.0 * std::f64::consts::PI * var).ln() + e * e / var);
+            }
+            log_scores.push(s);
+            best = best.max(s);
+        }
+        // Softmax to a proper distribution for AUC scoring.
+        let mut total = 0.0;
+        let mut out: Vec<f64> = log_scores
+            .iter()
+            .map(|&s| {
+                let v = (s - best).exp();
+                total += v;
+                v
+            })
+            .collect();
+        for v in &mut out {
+            *v /= total;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "Naive Bayes"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::test_support::check_learns;
+    use crate::data::Dataset;
+
+    #[test]
+    fn learns_blobs() {
+        check_learns(&mut GaussianNaiveBayes::new(), 0.95);
+    }
+
+    #[test]
+    fn handles_constant_feature() {
+        let d = Dataset::new(
+            "t",
+            vec![vec![1.0, 0.0], vec![1.0, 0.1], vec![1.0, 5.0], vec![1.0, 5.1]],
+            vec![0, 0, 1, 1],
+            2,
+        );
+        let mut nb = GaussianNaiveBayes::new();
+        nb.fit(&d);
+        assert_eq!(nb.predict(&[1.0, 0.05]), 0);
+        assert_eq!(nb.predict(&[1.0, 5.05]), 1);
+        assert!(nb.class_scores(&[1.0, 2.5]).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn recovers_gaussian_parameters() {
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..1000 {
+            let t = (i as f64 / 1000.0 - 0.5) * 3.46; // ~uniform, var≈1
+            rows.push(vec![t + 10.0]);
+            labels.push(0);
+        }
+        let d = Dataset::new("t", rows, labels, 1);
+        let mut nb = GaussianNaiveBayes::new();
+        nb.fit(&d);
+        assert!((nb.means[0][0] - 10.0).abs() < 0.01);
+        assert!((nb.vars[0][0] - 1.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,167 @@
+//! Shared evaluation runners for the table-reproduction benches.
+
+use crate::baselines::Classifier;
+use crate::data::Dataset;
+use crate::eval::{stratified_kfold, CvTimings, FoldResult, Stopwatch};
+use crate::gmm::supervised::{supervised_figmn, supervised_igmn};
+use crate::gmm::GmmConfig;
+
+/// Which IGMN variant to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Original,
+    Fast,
+}
+
+/// Train + test one fold of a (F)IGMN classifier, timing the two phases
+/// separately (the paper's Tables 2/3 protocol).
+pub fn run_gmm_fold(
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &GmmConfig,
+    variant: Variant,
+) -> FoldResult {
+    let stds = train.feature_stds();
+    let mut sw_train = Stopwatch::new();
+    let mut sw_test = Stopwatch::new();
+    let scores: Vec<Vec<f64>> = match variant {
+        Variant::Fast => {
+            let mut clf = supervised_figmn(cfg.clone(), &stds, train.n_classes);
+            sw_train.time(|| {
+                for (x, &y) in train.features.iter().zip(train.labels.iter()) {
+                    clf.train_one(x, y);
+                }
+            });
+            sw_test.time(|| test.features.iter().map(|x| clf.class_scores(x)).collect())
+        }
+        Variant::Original => {
+            let mut clf = supervised_igmn(cfg.clone(), &stds, train.n_classes);
+            sw_train.time(|| {
+                for (x, &y) in train.features.iter().zip(train.labels.iter()) {
+                    clf.train_one(x, y);
+                }
+            });
+            sw_test.time(|| test.features.iter().map(|x| clf.class_scores(x)).collect())
+        }
+    };
+    FoldResult {
+        timings: CvTimings { train_seconds: sw_train.seconds(), test_seconds: sw_test.seconds() },
+        scores,
+        truth: test.labels.clone(),
+    }
+}
+
+/// 2-fold CV for a (F)IGMN variant; returns per-fold results.
+pub fn run_gmm_cv(data: &Dataset, cfg: &GmmConfig, variant: Variant, seed: u64) -> Vec<FoldResult> {
+    stratified_kfold(&data.labels, data.n_classes, 2, seed)
+        .into_iter()
+        .map(|(tr, te)| run_gmm_fold(&data.subset(&tr), &data.subset(&te), cfg, variant))
+        .collect()
+}
+
+/// 2-fold CV for a batch [`Classifier`]; returns per-fold results.
+pub fn run_classifier_cv(
+    data: &Dataset,
+    make: &mut dyn FnMut() -> Box<dyn Classifier>,
+    seed: u64,
+) -> Vec<FoldResult> {
+    stratified_kfold(&data.labels, data.n_classes, 2, seed)
+        .into_iter()
+        .map(|(tr, te)| {
+            let train = data.subset(&tr);
+            let test = data.subset(&te);
+            let mut clf = make();
+            let mut sw_train = Stopwatch::new();
+            sw_train.time(|| clf.fit(&train));
+            let mut sw_test = Stopwatch::new();
+            let scores = sw_test
+                .time(|| test.features.iter().map(|x| clf.class_scores(x)).collect::<Vec<_>>());
+            FoldResult {
+                timings: CvTimings {
+                    train_seconds: sw_train.seconds(),
+                    test_seconds: sw_test.seconds(),
+                },
+                scores,
+                truth: test.labels.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Estimate the per-point training cost of the **original** IGMN on a
+/// dataset too large to run in a bench budget: run `sample` points, then
+/// extrapolate linearly in N (cost per point is N-independent at K=1).
+/// Returns estimated seconds for `n_total` points.
+pub fn extrapolate_igmn_train(data: &Dataset, cfg: &GmmConfig, sample: usize, n_total: usize) -> f64 {
+    let stds = data.feature_stds();
+    let mut clf = supervised_igmn(cfg.clone(), &stds, data.n_classes);
+    let sample = sample.min(data.len());
+    let mut sw = Stopwatch::new();
+    sw.time(|| {
+        for i in 0..sample {
+            clf.train_one(&data.features[i], data.labels[i]);
+        }
+    });
+    sw.seconds() / sample as f64 * n_total as f64
+}
+
+/// Same extrapolation for testing time.
+pub fn extrapolate_igmn_test(data: &Dataset, cfg: &GmmConfig, train_n: usize, sample: usize, n_total: usize) -> f64 {
+    let stds = data.feature_stds();
+    let mut clf = supervised_igmn(cfg.clone(), &stds, data.n_classes);
+    for i in 0..train_n.min(data.len()) {
+        clf.train_one(&data.features[i], data.labels[i]);
+    }
+    let sample = sample.min(data.len());
+    let mut sw = Stopwatch::new();
+    sw.time(|| {
+        for i in 0..sample {
+            let _ = clf.class_scores(&data.features[i]);
+        }
+    });
+    sw.seconds() / sample as f64 * n_total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn cv_produces_two_folds_with_scores() {
+        let data = synth::generate(synth::spec("iris").unwrap(), 1);
+        let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.0).without_pruning();
+        let folds = run_gmm_cv(&data, &cfg, Variant::Fast, 7);
+        assert_eq!(folds.len(), 2);
+        for f in &folds {
+            assert_eq!(f.scores.len(), f.truth.len());
+            assert!(f.timings.train_seconds > 0.0);
+            let auc = f.auc(data.n_classes);
+            assert!(auc > 0.5, "auc {auc}");
+        }
+    }
+
+    #[test]
+    fn fast_equals_original_fold_scores() {
+        let data = synth::generate(synth::spec("Glass").unwrap(), 2);
+        let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.0).without_pruning();
+        let a = run_gmm_cv(&data, &cfg, Variant::Fast, 3);
+        let b = run_gmm_cv(&data, &cfg, Variant::Original, 3);
+        for (fa, fb) in a.iter().zip(b.iter()) {
+            assert!(
+                (fa.auc(data.n_classes) - fb.auc(data.n_classes)).abs() < 1e-9,
+                "paper's Table 4 equality violated"
+            );
+        }
+    }
+
+    #[test]
+    fn extrapolation_is_positive_and_scales() {
+        let data = synth::generate(synth::spec("ionosphere").unwrap(), 1);
+        let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.0).without_pruning();
+        let est100 = extrapolate_igmn_train(&data, &cfg, 30, 100);
+        let est200 = extrapolate_igmn_train(&data, &cfg, 30, 200);
+        assert!(est100 > 0.0);
+        assert!(est200 > est100);
+    }
+}

@@ -1,0 +1,136 @@
+//! In-repo benchmark harness.
+//!
+//! `criterion` is not in the offline vendor set (DESIGN.md §5), so the
+//! `benches/` binaries (registered with `harness = false`) use this
+//! module: repeated timing with mean ± std, paper-style table rendering
+//! with the ○/● significance marks, and log-log slope fitting for the
+//! complexity-scaling experiment.
+
+pub mod gmm_eval;
+
+use crate::stats::{mean, paired_t_test, std_dev};
+use std::time::Instant;
+
+/// Time `f` once, returning seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t = Instant::now();
+    let out = f();
+    (t.elapsed().as_secs_f64(), out)
+}
+
+/// Run `f` `reps` times; returns per-rep seconds.
+pub fn time_reps(reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    assert!(reps >= 1);
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// `mean ± std` cell, paper style (3 decimals).
+pub fn fmt_cell(samples: &[f64]) -> String {
+    format!("{:9.3} ±{:7.3}", mean(samples), std_dev(samples))
+}
+
+/// The paper's table convention: compare `b` against baseline `a` with a
+/// paired t-test at α; returns `'●'` (significant decrease), `'○'`
+/// (significant increase) or `' '`.
+pub fn significance_mark(a: &[f64], b: &[f64], alpha: f64) -> char {
+    if a.len() != b.len() || a.len() < 2 {
+        return ' ';
+    }
+    paired_t_test(a, b).mark(alpha)
+}
+
+/// Fit `y = c·xᵖ` by least squares in log-log space; returns `p`.
+/// This is the exponent check for the O(D³) → O(D²) claim.
+pub fn fit_power_law(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let lx: Vec<f64> = xs.iter().map(|&v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|&v| v.ln()).collect();
+    let mx = mean(&lx);
+    let my = mean(&ly);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in lx.iter().zip(ly.iter()) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den
+}
+
+/// Fixed-width table printer.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        assert_eq!(headers.len(), widths.len());
+        let mut line = String::new();
+        for (h, w) in headers.iter().zip(widths.iter()) {
+            line.push_str(&format!("{h:<w$} ", w = w));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+        TablePrinter { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(self.widths.iter()) {
+            line.push_str(&format!("{c:<w$} ", w = w));
+        }
+        println!("{line}");
+    }
+}
+
+/// Percentile of a sample (nearest-rank); used by latency reports.
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+    samples[rank.saturating_sub(1).min(samples.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_recovers_exponents() {
+        let xs = [8.0, 16.0, 32.0, 64.0, 128.0];
+        let cubic: Vec<f64> = xs.iter().map(|&x| 2e-9 * x * x * x).collect();
+        let quad: Vec<f64> = xs.iter().map(|&x| 3e-8 * x * x).collect();
+        assert!((fit_power_law(&xs, &cubic) - 3.0).abs() < 1e-9);
+        assert!((fit_power_law(&xs, &quad) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_reps_returns_reps() {
+        let t = time_reps(3, || std::thread::sleep(std::time::Duration::from_micros(100)));
+        assert_eq!(t.len(), 3);
+        assert!(t.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&mut s, 50.0), 5.0);
+        assert_eq!(percentile(&mut s, 100.0), 10.0);
+        assert_eq!(percentile(&mut s, 1.0), 1.0);
+    }
+
+    #[test]
+    fn significance_marks_direction() {
+        let slow = [1.0, 1.1, 1.05, 0.95];
+        let fast = [0.1, 0.12, 0.11, 0.09];
+        assert_eq!(significance_mark(&slow, &fast, 0.05), '●');
+        assert_eq!(significance_mark(&fast, &slow, 0.05), '○');
+        assert_eq!(significance_mark(&slow, &slow, 0.05), ' ');
+    }
+}

@@ -1,0 +1,271 @@
+//! Bounded queues with explicit overflow policy — every hop in the
+//! coordinator uses one, so a slow worker stalls (or sheds) the ingest
+//! edge instead of ballooning memory.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// What to do when a push finds the queue full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Block the producer until space frees up (lossless, propagates
+    /// backpressure upstream).
+    Block,
+    /// Reject the new item (load shedding; callers observe `false`).
+    DropNewest,
+    /// Evict the oldest queued item to make room (bounded staleness).
+    DropOldest,
+}
+
+/// MPMC bounded queue (mutex + condvars; adequate for the coordinator's
+/// hop counts — see benches/ablation_batching.rs for measured overhead).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    policy: OverflowPolicy,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    dropped: u64,
+    pushed: u64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize, policy: OverflowPolicy) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+                dropped: 0,
+                pushed: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            policy,
+        }
+    }
+
+    /// Push an item. Returns `false` if the item was shed (DropNewest on
+    /// a full queue) or the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        if g.items.len() >= self.capacity {
+            match self.policy {
+                OverflowPolicy::Block => {
+                    while g.items.len() >= self.capacity && !g.closed {
+                        g = self.not_full.wait(g).unwrap();
+                    }
+                    if g.closed {
+                        return false;
+                    }
+                }
+                OverflowPolicy::DropNewest => {
+                    g.dropped += 1;
+                    return false;
+                }
+                OverflowPolicy::DropOldest => {
+                    g.items.pop_front();
+                    g.dropped += 1;
+                }
+            }
+        }
+        g.items.push_back(item);
+        g.pushed += 1;
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a timeout; `None` on timeout or on closed-and-drained.
+    /// Use [`BoundedQueue::pop`] to distinguish — this is for loops that
+    /// also service deadlines (the worker's batcher).
+    pub fn pop_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.items.pop_front();
+        if item.is_some() {
+            drop(g);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close: producers start failing, consumers drain whatever remains.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether [`BoundedQueue::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (pushed, dropped) counters since creation.
+    pub fn stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.pushed, g.dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4, OverflowPolicy::Block);
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        for i in 0..4 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn drop_newest_sheds() {
+        let q = BoundedQueue::new(2, OverflowPolicy::DropNewest);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert!(!q.push(3)); // shed
+        assert_eq!(q.stats(), (2, 1));
+        assert_eq!(q.try_pop(), Some(1));
+    }
+
+    #[test]
+    fn drop_oldest_evicts() {
+        let q = BoundedQueue::new(2, OverflowPolicy::DropOldest);
+        q.push(1);
+        q.push(2);
+        assert!(q.push(3));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.stats(), (3, 1));
+    }
+
+    #[test]
+    fn block_policy_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1, OverflowPolicy::Block));
+        q.push(1);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.pop(), Some(1));
+        assert!(producer.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_wakes_consumers_and_rejects_producers() {
+        let q = Arc::new(BoundedQueue::<i32>::new(2, OverflowPolicy::Block));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        assert!(!q.push(9));
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let q = BoundedQueue::new(4, OverflowPolicy::Block);
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn mpmc_under_contention() {
+        let q = Arc::new(BoundedQueue::new(8, OverflowPolicy::Block));
+        let mut producers = Vec::new();
+        for t in 0..4 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(t * 1000 + i);
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 400);
+    }
+}

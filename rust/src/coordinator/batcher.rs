@@ -1,0 +1,144 @@
+//! Size-or-deadline micro-batching.
+//!
+//! Inference traffic benefits from batching (the XLA scoring artifact
+//! consumes fixed B×D tiles; even the native path amortizes per-call
+//! overhead), but a lone request must not wait forever — the classic
+//! dynamic-batching trade-off. [`Batcher`] accumulates items until either
+//! `max_batch` items are pending or the oldest item has waited
+//! `max_delay`, then emits a [`Batch`]. Ablation:
+//! `benches/ablation_batching.rs`.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// A flushed batch plus the queueing age of its oldest element.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    pub oldest_age: Duration,
+}
+
+/// Deterministic, pull-style batcher (no internal threads — the worker
+/// loop drives it, keeping the whole pipeline testable without clocks).
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Batcher { cfg, pending: Vec::with_capacity(cfg.max_batch), oldest: None }
+    }
+
+    /// Add an item; returns a batch if this push filled it.
+    pub fn push(&mut self, item: T) -> Option<Batch<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.cfg.max_batch {
+            return self.flush();
+        }
+        None
+    }
+
+    /// Flush if the deadline for the oldest pending item has passed.
+    pub fn poll(&mut self) -> Option<Batch<T>> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.cfg.max_delay && !self.pending.is_empty() => {
+                self.flush()
+            }
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (e.g. on shutdown).
+    pub fn flush(&mut self) -> Option<Batch<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let oldest_age = self.oldest.map(|t| t.elapsed()).unwrap_or_default();
+        self.oldest = None;
+        Some(Batch { items: std::mem::take(&mut self.pending), oldest_age })
+    }
+
+    /// How long the worker may sleep before the deadline fires.
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest.map(|t| self.cfg.max_delay.saturating_sub(t.elapsed()))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_delay: Duration::from_secs(10) });
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        let batch = b.push(3).expect("third push must flush");
+        assert_eq!(batch.items, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b =
+            Batcher::new(BatcherConfig { max_batch: 100, max_delay: Duration::from_millis(5) });
+        b.push(7);
+        assert!(b.poll().is_none(), "deadline not reached yet");
+        std::thread::sleep(Duration::from_millis(8));
+        let batch = b.poll().expect("deadline must flush");
+        assert_eq!(batch.items, vec![7]);
+        assert!(batch.oldest_age >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn empty_never_flushes() {
+        let mut b = Batcher::<i32>::new(BatcherConfig::default());
+        assert!(b.poll().is_none());
+        assert!(b.flush().is_none());
+        assert!(b.time_to_deadline().is_none());
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let mut b =
+            Batcher::new(BatcherConfig { max_batch: 10, max_delay: Duration::from_millis(50) });
+        b.push(1);
+        let d1 = b.time_to_deadline().unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let d2 = b.time_to_deadline().unwrap();
+        assert!(d2 < d1);
+    }
+
+    #[test]
+    fn flush_resets_age_tracking() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_delay: Duration::from_secs(1) });
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.pending(), 0);
+        assert!(b.time_to_deadline().is_none());
+        b.push(3);
+        assert!(b.time_to_deadline().is_some());
+    }
+}

@@ -1,0 +1,131 @@
+//! Durable model checkpoints: one JSON file per (model, shard), written
+//! atomically (tmp + rename) so a crash mid-write never corrupts the
+//! last good checkpoint.
+
+use super::{CoordError, Result};
+use crate::gmm::Figmn;
+use crate::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// A checkpoint directory.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(CheckpointStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, model: &str, shard: usize) -> PathBuf {
+        // Sanitize the model name into a filename.
+        let safe: String = model
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        self.dir.join(format!("{safe}.shard{shard}.json"))
+    }
+
+    /// Write a checkpoint document; returns the final path.
+    pub fn save(&self, model: &str, shard: usize, doc: &Json) -> Result<String> {
+        let path = self.path_for(model, shard);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.to_string_compact())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path.to_string_lossy().into_owned())
+    }
+
+    /// Load one shard's model.
+    pub fn load(&self, model: &str, shard: usize) -> Result<Figmn> {
+        let path = self.path_for(model, shard);
+        let text = std::fs::read_to_string(&path)?;
+        let doc = parse(&text).map_err(|e| CoordError::Protocol(e.to_string()))?;
+        Figmn::from_json(&doc).map_err(CoordError::Protocol)
+    }
+
+    /// List checkpointed (model, shard) pairs.
+    pub fn list(&self) -> Result<Vec<(String, usize)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(stem) = name.strip_suffix(".json") {
+                if let Some(pos) = stem.rfind(".shard") {
+                    if let Ok(shard) = stem[pos + 6..].parse::<usize>() {
+                        out.push((stem[..pos].to_string(), shard));
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::{GmmConfig, IncrementalMixture};
+    use crate::rng::Pcg64;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("figmn-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn trained() -> Figmn {
+        let mut m = Figmn::new(GmmConfig::new(2).with_delta(0.5).with_beta(0.1), &[2.0, 2.0]);
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..80 {
+            let c = if rng.uniform() < 0.5 { 0.0 } else { 6.0 };
+            m.learn(&[c + rng.normal(), c + rng.normal()]);
+        }
+        m
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let store = CheckpointStore::new(tmpdir("rt")).unwrap();
+        let m = trained();
+        let path = store.save("my-model", 0, &m.to_json()).unwrap();
+        assert!(std::path::Path::new(&path).exists());
+        let loaded = store.load("my-model", 0).unwrap();
+        assert_eq!(loaded.num_components(), m.num_components());
+        assert_eq!(store.list().unwrap(), vec![("my-model".to_string(), 0)]);
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn sanitizes_model_names() {
+        let store = CheckpointStore::new(tmpdir("san")).unwrap();
+        let m = trained();
+        let path = store.save("evil/../name", 0, &m.to_json()).unwrap();
+        assert!(!path.contains(".."));
+        assert!(store.load("evil/../name", 0).is_ok());
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn missing_checkpoint_errors() {
+        let store = CheckpointStore::new(tmpdir("miss")).unwrap();
+        assert!(store.load("ghost", 0).is_err());
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+
+    #[test]
+    fn corrupt_checkpoint_rejected() {
+        let store = CheckpointStore::new(tmpdir("corrupt")).unwrap();
+        let m = trained();
+        let path = store.save("m", 0, &m.to_json()).unwrap();
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(store.load("m", 0).is_err());
+        std::fs::remove_dir_all(store.dir()).unwrap();
+    }
+}

@@ -1,0 +1,140 @@
+//! Coordinator metrics: lock-light counters plus latency statistics,
+//! snapshotted to JSON for the `stats` protocol op and the benches.
+
+use crate::json::Json;
+use crate::stats::Welford;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared metrics hub (one per coordinator; cheap to clone via Arc).
+#[derive(Default)]
+pub struct Metrics {
+    learned: AtomicU64,
+    predicted: AtomicU64,
+    created_components: AtomicU64,
+    shed: AtomicU64,
+    learn_latency: Mutex<Welford>,
+    predict_latency: Mutex<Welford>,
+    batch_sizes: Mutex<Welford>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_learn(&self, started: Instant) {
+        self.learned.fetch_add(1, Ordering::Relaxed);
+        self.learn_latency.lock().unwrap().push(started.elapsed().as_secs_f64());
+    }
+
+    pub fn record_predict(&self, started: Instant, batch: usize) {
+        self.predicted.fetch_add(batch as u64, Ordering::Relaxed);
+        self.predict_latency.lock().unwrap().push(started.elapsed().as_secs_f64());
+        self.batch_sizes.lock().unwrap().push(batch as f64);
+    }
+
+    pub fn record_component_created(&self) {
+        self.created_components.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let learn = self.learn_latency.lock().unwrap().clone();
+        let predict = self.predict_latency.lock().unwrap().clone();
+        let batch = self.batch_sizes.lock().unwrap().clone();
+        MetricsSnapshot {
+            learned: self.learned.load(Ordering::Relaxed),
+            predicted: self.predicted.load(Ordering::Relaxed),
+            created_components: self.created_components.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            learn_latency_mean_s: learn.mean(),
+            learn_latency_max_s: if learn.count() > 0 { learn.max() } else { 0.0 },
+            predict_latency_mean_s: predict.mean(),
+            predict_latency_max_s: if predict.count() > 0 { predict.max() } else { 0.0 },
+            mean_batch: batch.mean(),
+        }
+    }
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub learned: u64,
+    pub predicted: u64,
+    pub created_components: u64,
+    pub shed: u64,
+    pub learn_latency_mean_s: f64,
+    pub learn_latency_max_s: f64,
+    pub predict_latency_mean_s: f64,
+    pub predict_latency_max_s: f64,
+    pub mean_batch: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("learned", (self.learned as usize).into()),
+            ("predicted", (self.predicted as usize).into()),
+            ("created_components", (self.created_components as usize).into()),
+            ("shed", (self.shed as usize).into()),
+            ("learn_latency_mean_s", self.learn_latency_mean_s.into()),
+            ("learn_latency_max_s", self.learn_latency_max_s.into()),
+            ("predict_latency_mean_s", self.predict_latency_mean_s.into()),
+            ("predict_latency_max_s", self.predict_latency_max_s.into()),
+            ("mean_batch", self.mean_batch.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        let t = Instant::now();
+        m.record_learn(t);
+        m.record_learn(t);
+        m.record_predict(t, 8);
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.learned, 2);
+        assert_eq!(s.predicted, 8);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.mean_batch, 8.0);
+        assert!(s.learn_latency_mean_s >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_serializes() {
+        let m = Metrics::new();
+        m.record_learn(Instant::now());
+        let j = m.snapshot().to_json().to_string_compact();
+        assert!(j.contains("\"learned\":1"));
+        crate::json::parse(&j).unwrap();
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..250 {
+                    m.record_learn(Instant::now());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().learned, 1000);
+    }
+}

@@ -1,0 +1,79 @@
+//! L3 — the streaming coordinator.
+//!
+//! The paper's algorithm is single-pass and online; this layer turns it
+//! into a deployable stream-processing service, mirroring the router/
+//! worker split of serving frameworks (cf. vLLM's router):
+//!
+//! - [`worker`] — one OS thread per model shard; owns a native
+//!   [`crate::gmm::SupervisedGmm`] (learning is inherently sequential per
+//!   model) and, when AOT artifacts are available, an XLA batch-scoring
+//!   path for inference traffic.
+//! - [`router`] — spreads records across shards (round-robin /
+//!   feature-hash / broadcast-ensemble policies).
+//! - [`batcher`] — groups inference requests into size-or-deadline
+//!   micro-batches before they hit a worker.
+//! - [`backpressure`] — bounded queues with block/drop policies between
+//!   all stages.
+//! - [`registry`] — named-model lifecycle (create, lookup, drop,
+//!   checkpoint).
+//! - [`server`] — a line-delimited-JSON TCP front end over the
+//!   [`protocol`] types.
+//! - [`metrics`] — per-stage counters and latency statistics.
+//!
+//! Threading model: plain `std::thread` + `std::sync::mpsc` (the offline
+//! vendor set has no tokio — DESIGN.md §5); every queue is bounded, so
+//! backpressure propagates from workers to the ingest edge.
+
+pub mod backpressure;
+pub mod batcher;
+pub mod checkpoint;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use backpressure::{BoundedQueue, OverflowPolicy};
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use checkpoint::CheckpointStore;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{ModelSpec, Registry};
+pub use router::{Router, RoutingPolicy};
+pub use server::{serve, ServerConfig};
+pub use worker::{Worker, WorkerHandle, WorkerStats};
+
+/// Coordinator-level errors.
+#[derive(Debug)]
+pub enum CoordError {
+    /// The target worker/model does not exist.
+    UnknownModel(String),
+    /// A bounded queue rejected the item (drop policy) or the worker hung
+    /// up.
+    Rejected(&'static str),
+    /// Underlying I/O problem (server, checkpointing).
+    Io(std::io::Error),
+    /// Malformed request/checkpoint payload.
+    Protocol(String),
+}
+
+impl std::fmt::Display for CoordError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            CoordError::Rejected(stage) => write!(f, "rejected at {stage}"),
+            CoordError::Io(e) => write!(f, "io: {e}"),
+            CoordError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CoordError {}
+
+impl From<std::io::Error> for CoordError {
+    fn from(e: std::io::Error) -> Self {
+        CoordError::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, CoordError>;

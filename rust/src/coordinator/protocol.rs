@@ -1,0 +1,300 @@
+//! The coordinator's wire protocol: line-delimited JSON requests and
+//! responses (one object per line), shared by the TCP server and any
+//! in-process client.
+
+use super::CoordError;
+use crate::json::{parse, Json};
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Create a named model shard group.
+    CreateModel {
+        model: String,
+        n_features: usize,
+        n_classes: usize,
+        delta: f64,
+        beta: f64,
+        /// Per-feature std estimates (σ_ini = δ·std).
+        stds: Vec<f64>,
+        /// Number of worker shards (ensemble size), ≥ 1.
+        shards: usize,
+    },
+    /// Present one labeled example.
+    Learn { model: String, features: Vec<f64>, label: usize },
+    /// Request class scores for one example.
+    Predict { model: String, features: Vec<f64> },
+    /// Present one regression example (continuous targets — the paper's
+    /// autoassociative mode, §1/§2.4).
+    LearnReg { model: String, features: Vec<f64>, targets: Vec<f64> },
+    /// Request reconstructed targets for one example.
+    PredictReg { model: String, features: Vec<f64> },
+    /// Model + coordinator statistics.
+    Stats { model: String },
+    /// Persist the model to the checkpoint directory.
+    Checkpoint { model: String },
+    /// Drop the model.
+    DropModel { model: String },
+    /// Liveness probe.
+    Ping,
+    /// Graceful server shutdown.
+    Shutdown,
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    Pong,
+    Scores { scores: Vec<f64>, class: usize },
+    /// Reconstructed continuous targets.
+    Targets { targets: Vec<f64> },
+    Stats(Json),
+    Error(String),
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::CreateModel { model, n_features, n_classes, delta, beta, stds, shards } => {
+                Json::obj(vec![
+                    ("op", "create_model".into()),
+                    ("model", model.as_str().into()),
+                    ("n_features", (*n_features).into()),
+                    ("n_classes", (*n_classes).into()),
+                    ("delta", (*delta).into()),
+                    ("beta", (*beta).into()),
+                    ("stds", Json::num_array(stds)),
+                    ("shards", (*shards).into()),
+                ])
+            }
+            Request::Learn { model, features, label } => Json::obj(vec![
+                ("op", "learn".into()),
+                ("model", model.as_str().into()),
+                ("features", Json::num_array(features)),
+                ("label", (*label).into()),
+            ]),
+            Request::Predict { model, features } => Json::obj(vec![
+                ("op", "predict".into()),
+                ("model", model.as_str().into()),
+                ("features", Json::num_array(features)),
+            ]),
+            Request::LearnReg { model, features, targets } => Json::obj(vec![
+                ("op", "learn_reg".into()),
+                ("model", model.as_str().into()),
+                ("features", Json::num_array(features)),
+                ("targets", Json::num_array(targets)),
+            ]),
+            Request::PredictReg { model, features } => Json::obj(vec![
+                ("op", "predict_reg".into()),
+                ("model", model.as_str().into()),
+                ("features", Json::num_array(features)),
+            ]),
+            Request::Stats { model } => {
+                Json::obj(vec![("op", "stats".into()), ("model", model.as_str().into())])
+            }
+            Request::Checkpoint { model } => {
+                Json::obj(vec![("op", "checkpoint".into()), ("model", model.as_str().into())])
+            }
+            Request::DropModel { model } => {
+                Json::obj(vec![("op", "drop_model".into()), ("model", model.as_str().into())])
+            }
+            Request::Ping => Json::obj(vec![("op", "ping".into())]),
+            Request::Shutdown => Json::obj(vec![("op", "shutdown".into())]),
+        }
+    }
+
+    pub fn from_line(line: &str) -> Result<Request, CoordError> {
+        let doc = parse(line).map_err(|e| CoordError::Protocol(e.to_string()))?;
+        let op = doc
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| CoordError::Protocol("missing op".into()))?;
+        let model = || -> Result<String, CoordError> {
+            doc.get("model")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| CoordError::Protocol("missing model".into()))
+        };
+        let features = || -> Result<Vec<f64>, CoordError> {
+            doc.get("features")
+                .and_then(Json::to_f64_vec)
+                .ok_or_else(|| CoordError::Protocol("missing features".into()))
+        };
+        match op {
+            "create_model" => {
+                let get_n = |k: &str| {
+                    doc.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| CoordError::Protocol(format!("missing {k}")))
+                };
+                let get_f = |k: &str, dflt: f64| {
+                    doc.get(k).and_then(Json::as_f64).unwrap_or(dflt)
+                };
+                let n_features = get_n("n_features")?;
+                Ok(Request::CreateModel {
+                    model: model()?,
+                    n_features,
+                    n_classes: get_n("n_classes")?,
+                    delta: get_f("delta", 0.1),
+                    beta: get_f("beta", 0.05),
+                    stds: doc
+                        .get("stds")
+                        .and_then(Json::to_f64_vec)
+                        .unwrap_or_else(|| vec![1.0; n_features]),
+                    shards: doc.get("shards").and_then(Json::as_usize).unwrap_or(1),
+                })
+            }
+            "learn" => Ok(Request::Learn {
+                model: model()?,
+                features: features()?,
+                label: doc
+                    .get("label")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| CoordError::Protocol("missing label".into()))?,
+            }),
+            "predict" => Ok(Request::Predict { model: model()?, features: features()? }),
+            "learn_reg" => Ok(Request::LearnReg {
+                model: model()?,
+                features: features()?,
+                targets: doc
+                    .get("targets")
+                    .and_then(Json::to_f64_vec)
+                    .ok_or_else(|| CoordError::Protocol("missing targets".into()))?,
+            }),
+            "predict_reg" => Ok(Request::PredictReg { model: model()?, features: features()? }),
+            "stats" => Ok(Request::Stats { model: model()? }),
+            "checkpoint" => Ok(Request::Checkpoint { model: model()? }),
+            "drop_model" => Ok(Request::DropModel { model: model()? }),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(CoordError::Protocol(format!("unknown op '{other}'"))),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Ok => Json::obj(vec![("ok", true.into())]),
+            Response::Pong => Json::obj(vec![("ok", true.into()), ("pong", true.into())]),
+            Response::Scores { scores, class } => Json::obj(vec![
+                ("ok", true.into()),
+                ("scores", Json::num_array(scores)),
+                ("class", (*class).into()),
+            ]),
+            Response::Targets { targets } => Json::obj(vec![
+                ("ok", true.into()),
+                ("targets", Json::num_array(targets)),
+            ]),
+            Response::Stats(j) => {
+                Json::obj(vec![("ok", true.into()), ("stats", j.clone())])
+            }
+            Response::Error(msg) => {
+                Json::obj(vec![("ok", false.into()), ("error", msg.as_str().into())])
+            }
+        }
+    }
+
+    pub fn from_line(line: &str) -> Result<Response, CoordError> {
+        let doc = parse(line).map_err(|e| CoordError::Protocol(e.to_string()))?;
+        let ok = doc.get("ok").and_then(Json::as_bool).unwrap_or(false);
+        if !ok {
+            return Ok(Response::Error(
+                doc.get("error").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+            ));
+        }
+        if doc.get("pong").is_some() {
+            return Ok(Response::Pong);
+        }
+        if let Some(scores) = doc.get("scores").and_then(Json::to_f64_vec) {
+            let class = doc.get("class").and_then(Json::as_usize).unwrap_or(0);
+            return Ok(Response::Scores { scores, class });
+        }
+        if let Some(targets) = doc.get("targets").and_then(Json::to_f64_vec) {
+            return Ok(Response::Targets { targets });
+        }
+        if let Some(stats) = doc.get("stats") {
+            return Ok(Response::Stats(stats.clone()));
+        }
+        Ok(Response::Ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trip() {
+        let reqs = vec![
+            Request::CreateModel {
+                model: "m".into(),
+                n_features: 2,
+                n_classes: 3,
+                delta: 0.5,
+                beta: 0.01,
+                stds: vec![1.0, 2.0],
+                shards: 2,
+            },
+            Request::Learn { model: "m".into(), features: vec![0.5, -1.0], label: 2 },
+            Request::Predict { model: "m".into(), features: vec![0.0, 1.0] },
+            Request::LearnReg {
+                model: "m".into(),
+                features: vec![0.5],
+                targets: vec![1.5, -2.0],
+            },
+            Request::PredictReg { model: "m".into(), features: vec![0.5] },
+            Request::Stats { model: "m".into() },
+            Request::Checkpoint { model: "m".into() },
+            Request::DropModel { model: "m".into() },
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_json().to_string_compact();
+            let back = Request::from_line(&line).unwrap();
+            assert_eq!(r, back, "via {line}");
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let resps = vec![
+            Response::Ok,
+            Response::Pong,
+            Response::Scores { scores: vec![0.2, 0.8], class: 1 },
+            Response::Targets { targets: vec![3.25, -1.0] },
+            Response::Error("boom".into()),
+        ];
+        for r in resps {
+            let line = r.to_json().to_string_compact();
+            let back = Response::from_line(&line).unwrap();
+            assert_eq!(r, back, "via {line}");
+        }
+    }
+
+    #[test]
+    fn create_model_defaults() {
+        let r = Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2}"#,
+        )
+        .unwrap();
+        match r {
+            Request::CreateModel { stds, shards, delta, .. } => {
+                assert_eq!(stds, vec![1.0; 3]);
+                assert_eq!(shards, 1);
+                assert!(delta > 0.0);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(Request::from_line("not json").is_err());
+        assert!(Request::from_line(r#"{"op":"zap"}"#).is_err());
+        assert!(Request::from_line(r#"{"op":"learn","model":"m"}"#).is_err());
+        assert!(Request::from_line(r#"{"op":"learn","features":[1],"label":0}"#).is_err());
+    }
+}

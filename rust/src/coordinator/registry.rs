@@ -1,0 +1,277 @@
+//! Named-model lifecycle: create, look up, drop, checkpoint.
+
+use super::checkpoint::CheckpointStore;
+use super::metrics::Metrics;
+use super::router::{Router, RoutingPolicy};
+use super::worker::{Worker, WorkerConfig, WorkerStats};
+use super::{CoordError, Result};
+use crate::gmm::GmmConfig;
+use crate::json::Json;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything needed to create a model's shard group.
+#[derive(Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub gmm: GmmConfig,
+    pub feature_stds: Vec<f64>,
+    pub shards: usize,
+    pub policy: RoutingPolicy,
+    /// Optional XLA inference config name (see [`WorkerConfig::with_xla`]).
+    pub xla_config: Option<String>,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, n_features: usize, n_classes: usize) -> Self {
+        ModelSpec {
+            name: name.to_string(),
+            n_features,
+            n_classes,
+            gmm: GmmConfig::new(1).with_delta(0.1).with_beta(0.05),
+            feature_stds: vec![1.0; n_features],
+            shards: 1,
+            policy: RoutingPolicy::RoundRobin,
+            xla_config: None,
+        }
+    }
+
+    pub fn with_gmm(mut self, gmm: GmmConfig) -> Self {
+        self.gmm = gmm;
+        self
+    }
+
+    pub fn with_stds(mut self, stds: Vec<f64>) -> Self {
+        assert_eq!(stds.len(), self.n_features);
+        self.feature_stds = stds;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize, policy: RoutingPolicy) -> Self {
+        assert!(shards >= 1);
+        self.shards = shards;
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_xla(mut self, config: &str) -> Self {
+        self.xla_config = Some(config.to_string());
+        self
+    }
+}
+
+struct Entry {
+    router: Arc<Router>,
+    workers: Vec<Worker>,
+    spec: ModelSpec,
+}
+
+/// Thread-safe model registry — the coordinator's control plane.
+pub struct Registry {
+    models: Mutex<HashMap<String, Entry>>,
+    metrics: Arc<Metrics>,
+    checkpoints: Option<CheckpointStore>,
+}
+
+impl Registry {
+    pub fn new(metrics: Arc<Metrics>) -> Self {
+        Registry { models: Mutex::new(HashMap::new()), metrics, checkpoints: None }
+    }
+
+    /// Enable checkpointing into a directory.
+    pub fn with_checkpoints(mut self, store: CheckpointStore) -> Self {
+        self.checkpoints = Some(store);
+        self
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Create a model; errors if the name exists.
+    pub fn create(&self, spec: ModelSpec) -> Result<()> {
+        let mut models = self.models.lock().unwrap();
+        if models.contains_key(&spec.name) {
+            return Err(CoordError::Protocol(format!("model '{}' already exists", spec.name)));
+        }
+        let mut workers = Vec::with_capacity(spec.shards);
+        let mut handles = Vec::with_capacity(spec.shards);
+        for _ in 0..spec.shards {
+            let mut wc = WorkerConfig::new(
+                spec.n_features,
+                spec.n_classes,
+                spec.gmm.clone(),
+                spec.feature_stds.clone(),
+            );
+            if let Some(x) = &spec.xla_config {
+                wc = wc.with_xla(x.clone());
+            }
+            let w = Worker::spawn(wc, self.metrics.clone());
+            handles.push(w.handle.clone());
+            workers.push(w);
+        }
+        let router = Arc::new(Router::new(handles, spec.policy));
+        models.insert(spec.name.clone(), Entry { router, workers, spec });
+        Ok(())
+    }
+
+    /// Look up the router for a model.
+    pub fn router(&self, name: &str) -> Result<Arc<Router>> {
+        self.models
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|e| e.router.clone())
+            .ok_or_else(|| CoordError::UnknownModel(name.to_string()))
+    }
+
+    /// Aggregate stats across a model's shards.
+    pub fn stats(&self, name: &str) -> Result<Json> {
+        let router = self.router(name)?;
+        let mut shard_stats: Vec<WorkerStats> = Vec::new();
+        for s in router.shards() {
+            shard_stats.push(s.stats()?);
+        }
+        let total = |f: fn(&WorkerStats) -> u64| -> usize {
+            shard_stats.iter().map(|s| f(s) as usize).sum()
+        };
+        Ok(Json::obj(vec![
+            ("shards", shard_stats.len().into()),
+            ("components", shard_stats.iter().map(|s| s.components).sum::<usize>().into()),
+            ("learned", total(|s| s.learned).into()),
+            ("predicted", total(|s| s.predicted).into()),
+            ("xla_batches", total(|s| s.xla_batches).into()),
+            ("coordinator", self.metrics.snapshot().to_json()),
+            (
+                "per_shard",
+                Json::Arr(shard_stats.iter().map(WorkerStats::to_json).collect()),
+            ),
+        ]))
+    }
+
+    /// Checkpoint every shard of a model. Returns the file paths written.
+    pub fn checkpoint(&self, name: &str) -> Result<Vec<String>> {
+        let store = self
+            .checkpoints
+            .as_ref()
+            .ok_or(CoordError::Rejected("checkpointing disabled"))?;
+        let router = self.router(name)?;
+        let mut paths = Vec::new();
+        for (i, s) in router.shards().iter().enumerate() {
+            let doc = s.checkpoint_json()?;
+            paths.push(store.save(name, i, &doc)?);
+        }
+        Ok(paths)
+    }
+
+    /// Drop a model, joining its workers.
+    pub fn drop_model(&self, name: &str) -> Result<()> {
+        let entry = self
+            .models
+            .lock()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| CoordError::UnknownModel(name.to_string()))?;
+        drop(entry.router);
+        for w in entry.workers {
+            w.join();
+        }
+        Ok(())
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// The spec a model was created with.
+    pub fn spec(&self, name: &str) -> Result<ModelSpec> {
+        self.models
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|e| e.spec.clone())
+            .ok_or_else(|| CoordError::UnknownModel(name.to_string()))
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        let names = self.model_names();
+        for n in names {
+            let _ = self.drop_model(&n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn registry() -> Registry {
+        Registry::new(Arc::new(Metrics::new()))
+    }
+
+    fn blob_spec(name: &str) -> ModelSpec {
+        ModelSpec::new(name, 2, 3)
+            .with_gmm(GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning())
+            .with_stds(vec![3.0, 3.0])
+    }
+
+    #[test]
+    fn create_learn_predict_drop() {
+        let reg = registry();
+        reg.create(blob_spec("m")).unwrap();
+        let router = reg.router("m").unwrap();
+        let mut rng = Pcg64::seed(1);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..150 {
+            let c = i % 3;
+            router
+                .learn(
+                    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7],
+                    c,
+                )
+                .unwrap();
+        }
+        let scores = router.predict(&[7.0, 7.0]).unwrap();
+        let best = scores.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(best, 1);
+        let stats = reg.stats("m").unwrap();
+        assert_eq!(stats.get("learned").unwrap().as_usize(), Some(150));
+        reg.drop_model("m").unwrap();
+        assert!(reg.router("m").is_err());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let reg = registry();
+        reg.create(blob_spec("m")).unwrap();
+        assert!(reg.create(blob_spec("m")).is_err());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let reg = registry();
+        assert!(matches!(reg.router("nope"), Err(CoordError::UnknownModel(_))));
+        assert!(reg.stats("nope").is_err());
+        assert!(reg.drop_model("nope").is_err());
+    }
+
+    #[test]
+    fn sharded_model_aggregates_stats() {
+        let reg = registry();
+        reg.create(blob_spec("s").with_shards(3, RoutingPolicy::RoundRobin)).unwrap();
+        let router = reg.router("s").unwrap();
+        let mut rng = Pcg64::seed(2);
+        for i in 0..90 {
+            let c = i % 3;
+            router.learn(vec![rng.normal() + c as f64 * 6.0, rng.normal()], c).unwrap();
+        }
+        let stats = reg.stats("s").unwrap();
+        assert_eq!(stats.get("shards").unwrap().as_usize(), Some(3));
+        assert_eq!(stats.get("learned").unwrap().as_usize(), Some(90));
+    }
+}

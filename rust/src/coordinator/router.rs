@@ -1,0 +1,271 @@
+//! Record routing across model shards.
+//!
+//! Three policies, matching the three reasons to shard an online learner:
+//!
+//! - [`RoutingPolicy::RoundRobin`] — throughput: spread learn traffic
+//!   evenly; each shard sees a 1/S subsample (online bagging-ish).
+//! - [`RoutingPolicy::FeatureHash`] — locality: the same region of input
+//!   space always lands on the same shard (piecewise experts).
+//! - [`RoutingPolicy::Broadcast`] — redundancy/ensemble: every shard
+//!   learns every record; predictions average across shards.
+//!
+//! Prediction always fans out to every shard and averages the score
+//! vectors (for RoundRobin/FeatureHash the shards are partial models;
+//! averaging is the natural ensemble read-out).
+
+use super::worker::WorkerHandle;
+use super::{CoordError, Result};
+
+/// Shard-selection policy for learn traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    FeatureHash,
+    Broadcast,
+}
+
+/// Routes one model's traffic over its shard workers.
+pub struct Router {
+    shards: Vec<WorkerHandle>,
+    policy: RoutingPolicy,
+    next: std::sync::atomic::AtomicUsize,
+}
+
+impl Router {
+    pub fn new(shards: Vec<WorkerHandle>, policy: RoutingPolicy) -> Self {
+        assert!(!shards.is_empty(), "router needs ≥1 shard");
+        Router { shards, policy, next: std::sync::atomic::AtomicUsize::new(0) }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[WorkerHandle] {
+        &self.shards
+    }
+
+    /// Which shard a learn record goes to (None = all).
+    fn pick(&self, features: &[f64]) -> Option<usize> {
+        match self.policy {
+            RoutingPolicy::Broadcast => None,
+            RoutingPolicy::RoundRobin => Some(
+                self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.shards.len(),
+            ),
+            RoutingPolicy::FeatureHash => Some(feature_hash(features) % self.shards.len()),
+        }
+    }
+
+    /// Route one labeled record.
+    pub fn learn(&self, features: Vec<f64>, label: usize) -> Result<()> {
+        match self.pick(&features) {
+            Some(i) => self.shards[i].learn(features, label),
+            None => {
+                for s in &self.shards {
+                    s.learn(features.clone(), label)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Route one regression record.
+    pub fn learn_reg(&self, features: Vec<f64>, targets: Vec<f64>) -> Result<()> {
+        match self.pick(&features) {
+            Some(i) => self.shards[i].learn_reg(features, targets),
+            None => {
+                for s in &self.shards {
+                    s.learn_reg(features.clone(), targets.clone())?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Fan out a regression prediction and average shard targets.
+    pub fn predict_reg(&self, features: &[f64]) -> Result<Vec<f64>> {
+        let mut acc: Option<Vec<f64>> = None;
+        let mut n = 0usize;
+        for s in &self.shards {
+            match s.stats() {
+                Ok(st) if st.components == 0 => continue,
+                Err(_) => continue,
+                _ => {}
+            }
+            if let Ok(t) = s.predict_reg(features.to_vec()) {
+                n += 1;
+                match &mut acc {
+                    None => acc = Some(t),
+                    Some(a) => {
+                        for (x, y) in a.iter_mut().zip(t.iter()) {
+                            *x += y;
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = acc.ok_or(CoordError::Rejected("no shard could predict"))?;
+        for v in &mut out {
+            *v /= n as f64;
+        }
+        Ok(out)
+    }
+
+    /// Fan out a prediction and average shard scores. Shards that have
+    /// seen no data yet are skipped; errors only if every shard fails.
+    pub fn predict(&self, features: &[f64]) -> Result<Vec<f64>> {
+        let mut acc: Option<Vec<f64>> = None;
+        let mut n = 0usize;
+        for s in &self.shards {
+            // A shard with zero components cannot predict.
+            match s.stats() {
+                Ok(st) if st.components == 0 => continue,
+                Err(_) => continue,
+                _ => {}
+            }
+            match s.predict(features.to_vec()) {
+                Ok(scores) => {
+                    n += 1;
+                    match &mut acc {
+                        None => acc = Some(scores),
+                        Some(a) => {
+                            for (x, y) in a.iter_mut().zip(scores.iter()) {
+                                *x += y;
+                            }
+                        }
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+        let mut scores = acc.ok_or(CoordError::Rejected("no shard could predict"))?;
+        for v in &mut scores {
+            *v /= n as f64;
+        }
+        Ok(scores)
+    }
+}
+
+/// FNV-1a over the raw feature bytes — stable, order-sensitive.
+fn feature_hash(features: &[f64]) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for f in features {
+        for b in f.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::coordinator::worker::{Worker, WorkerConfig};
+    use crate::gmm::GmmConfig;
+    use crate::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn spawn_shards(n: usize) -> (Vec<Worker>, Vec<WorkerHandle>) {
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+            let w = Worker::spawn(WorkerConfig::new(2, 2, gmm, vec![3.0, 3.0]), metrics.clone());
+            handles.push(w.handle.clone());
+            workers.push(w);
+        }
+        (workers, handles)
+    }
+
+    fn wait_settled(handles: &[WorkerHandle]) {
+        // stats() is processed in-order behind all learns.
+        for h in handles {
+            let _ = h.stats();
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let (workers, handles) = spawn_shards(3);
+        let router = Router::new(handles.clone(), RoutingPolicy::RoundRobin);
+        let mut rng = Pcg64::seed(1);
+        for i in 0..90 {
+            let c = i % 2;
+            router.learn(vec![rng.normal(), c as f64 * 7.0 + rng.normal()], c).unwrap();
+        }
+        wait_settled(&handles);
+        for h in &handles {
+            assert_eq!(h.stats().unwrap().learned, 30);
+        }
+        drop(router);
+        for w in workers {
+            w.join();
+        }
+    }
+
+    #[test]
+    fn feature_hash_is_sticky() {
+        let (workers, handles) = spawn_shards(4);
+        let router = Router::new(handles.clone(), RoutingPolicy::FeatureHash);
+        // The same vector must always go to the same shard.
+        for _ in 0..20 {
+            router.learn(vec![1.25, -3.5], 0).unwrap();
+        }
+        wait_settled(&handles);
+        let counts: Vec<u64> = handles.iter().map(|h| h.stats().unwrap().learned).collect();
+        assert_eq!(counts.iter().sum::<u64>(), 20);
+        assert_eq!(counts.iter().filter(|&&c| c > 0).count(), 1, "counts {counts:?}");
+        drop(router);
+        for w in workers {
+            w.join();
+        }
+    }
+
+    #[test]
+    fn broadcast_reaches_all() {
+        let (workers, handles) = spawn_shards(2);
+        let router = Router::new(handles.clone(), RoutingPolicy::Broadcast);
+        let mut rng = Pcg64::seed(2);
+        for i in 0..40 {
+            let c = i % 2;
+            router
+                .learn(vec![c as f64 * 6.0 + rng.normal(), c as f64 * 6.0 + rng.normal()], c)
+                .unwrap();
+        }
+        wait_settled(&handles);
+        for h in &handles {
+            assert_eq!(h.stats().unwrap().learned, 40);
+        }
+        // Ensemble prediction works and is a distribution.
+        let scores = router.predict(&[0.0, 0.0]).unwrap();
+        assert_eq!(scores.len(), 2);
+        assert!((scores.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        drop(router);
+        for w in workers {
+            w.join();
+        }
+    }
+
+    #[test]
+    fn predict_skips_empty_shards() {
+        let (workers, handles) = spawn_shards(2);
+        // Train only shard 0.
+        let mut rng = Pcg64::seed(3);
+        for i in 0..30 {
+            let c = i % 2;
+            handles[0]
+                .learn(vec![c as f64 * 6.0 + rng.normal(), rng.normal()], c)
+                .unwrap();
+        }
+        let router = Router::new(handles.clone(), RoutingPolicy::RoundRobin);
+        let scores = router.predict(&[0.0, 0.0]).unwrap();
+        assert_eq!(scores.len(), 2);
+        drop(router);
+        for w in workers {
+            w.join();
+        }
+    }
+}

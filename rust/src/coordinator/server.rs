@@ -1,0 +1,308 @@
+//! TCP front end: line-delimited JSON over `std::net`, one thread per
+//! connection (adequate for the online-learning use case where a handful
+//! of producers stream records; the heavy lifting is already pipelined
+//! behind the workers' bounded queues).
+
+use super::protocol::{Request, Response};
+use super::registry::{ModelSpec, Registry};
+use super::router::RoutingPolicy;
+use super::{CoordError, Result};
+use crate::gmm::GmmConfig;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Server knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:7464" (port 0 = ephemeral).
+    pub addr: String,
+    /// Optional XLA config name to give new models (see WorkerConfig).
+    pub xla_config: Option<String>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:0".into(), xla_config: None }
+    }
+}
+
+/// A running server (join on drop).
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Poke the acceptor so it notices the flag.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving a registry. Returns once the listener is bound.
+pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let local_addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let flag = shutdown.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("figmn-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let reg = registry.clone();
+                        let flag = flag.clone();
+                        let xla = cfg.xla_config.clone();
+                        std::thread::Builder::new()
+                            .name("figmn-conn".into())
+                            .spawn(move || handle_connection(s, reg, flag, xla))
+                            .ok();
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+        .expect("spawn acceptor");
+    Ok(Server { local_addr, shutdown, accept_thread: Some(accept_thread) })
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    registry: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+    xla_config: Option<String>,
+) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::from_line(&line) {
+            Err(e) => Response::Error(e.to_string()),
+            Ok(req) => {
+                let is_shutdown = req == Request::Shutdown;
+                let resp = dispatch(req, &registry, &xla_config);
+                if is_shutdown {
+                    shutdown.store(true, Ordering::SeqCst);
+                }
+                resp
+            }
+        };
+        let mut out = response.to_json().to_string_compact();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    log::debug!("connection from {peer:?} closed");
+}
+
+/// Map a request onto the registry.
+pub fn dispatch(req: Request, registry: &Registry, xla_config: &Option<String>) -> Response {
+    match execute(req, registry, xla_config) {
+        Ok(resp) => resp,
+        Err(e) => Response::Error(e.to_string()),
+    }
+}
+
+fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Result<Response> {
+    match req {
+        Request::Ping => Ok(Response::Pong),
+        Request::Shutdown => Ok(Response::Ok),
+        Request::CreateModel { model, n_features, n_classes, delta, beta, stds, shards } => {
+            let gmm = GmmConfig::new(1).with_delta(delta).with_beta(beta);
+            let mut spec = ModelSpec::new(&model, n_features, n_classes)
+                .with_gmm(gmm)
+                .with_stds(stds)
+                .with_shards(shards, if shards > 1 { RoutingPolicy::RoundRobin } else { RoutingPolicy::RoundRobin });
+            if let Some(x) = xla_config {
+                spec = spec.with_xla(x);
+            }
+            registry.create(spec)?;
+            Ok(Response::Ok)
+        }
+        Request::Learn { model, features, label } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            if features.len() != spec.n_features {
+                return Err(CoordError::Protocol(format!(
+                    "expected {} features, got {}",
+                    spec.n_features,
+                    features.len()
+                )));
+            }
+            if label >= spec.n_classes {
+                return Err(CoordError::Protocol(format!("label {label} out of range")));
+            }
+            router.learn(features, label)?;
+            Ok(Response::Ok)
+        }
+        Request::LearnReg { model, features, targets } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            if features.len() != spec.n_features || targets.len() != spec.n_classes {
+                return Err(CoordError::Protocol(format!(
+                    "expected {} features + {} targets",
+                    spec.n_features, spec.n_classes
+                )));
+            }
+            router.learn_reg(features, targets)?;
+            Ok(Response::Ok)
+        }
+        Request::PredictReg { model, features } => {
+            let router = registry.router(&model)?;
+            Ok(Response::Targets { targets: router.predict_reg(&features)? })
+        }
+        Request::Predict { model, features } => {
+            let router = registry.router(&model)?;
+            let scores = router.predict(&features)?;
+            let class = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            Ok(Response::Scores { scores, class })
+        }
+        Request::Stats { model } => Ok(Response::Stats(registry.stats(&model)?)),
+        Request::Checkpoint { model } => {
+            registry.checkpoint(&model)?;
+            Ok(Response::Ok)
+        }
+        Request::DropModel { model } => {
+            registry.drop_model(&model)?;
+            Ok(Response::Ok)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::rng::Pcg64;
+
+    fn client(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (reader, stream)
+    }
+
+    fn roundtrip(
+        reader: &mut BufReader<TcpStream>,
+        writer: &mut TcpStream,
+        req: &Request,
+    ) -> Response {
+        let mut line = req.to_json().to_string_compact();
+        line.push('\n');
+        writer.write_all(line.as_bytes()).unwrap();
+        let mut buf = String::new();
+        reader.read_line(&mut buf).unwrap();
+        Response::from_line(&buf).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+        let server = serve(registry, ServerConfig::default()).unwrap();
+        let (mut reader, mut writer) = client(server.local_addr);
+
+        assert_eq!(roundtrip(&mut reader, &mut writer, &Request::Ping), Response::Pong);
+
+        let create = Request::CreateModel {
+            model: "m".into(),
+            n_features: 2,
+            n_classes: 2,
+            delta: 0.5,
+            beta: 0.05,
+            stds: vec![3.0, 3.0],
+            shards: 1,
+        };
+        assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
+
+        let mut rng = Pcg64::seed(1);
+        for i in 0..120 {
+            let c = i % 2;
+            let req = Request::Learn {
+                model: "m".into(),
+                features: vec![c as f64 * 6.0 + rng.normal() * 0.5, rng.normal() * 0.5],
+                label: c,
+            };
+            assert_eq!(roundtrip(&mut reader, &mut writer, &req), Response::Ok);
+        }
+
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::Predict { model: "m".into(), features: vec![6.0, 0.0] },
+        );
+        match resp {
+            Response::Scores { scores, class } => {
+                assert_eq!(class, 1);
+                assert_eq!(scores.len(), 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let resp =
+            roundtrip(&mut reader, &mut writer, &Request::Stats { model: "m".into() });
+        match resp {
+            Response::Stats(j) => {
+                assert_eq!(j.get("learned").unwrap().as_usize(), Some(120));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Errors surface as protocol errors, not dropped connections.
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::Predict { model: "ghost".into(), features: vec![0.0, 0.0] },
+        );
+        assert!(matches!(resp, Response::Error(_)));
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_line_gets_error_response() {
+        let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+        let server = serve(registry, ServerConfig::default()).unwrap();
+        let (mut reader, mut writer) = client(server.local_addr);
+        writer.write_all(b"this is not json\n").unwrap();
+        let mut buf = String::new();
+        reader.read_line(&mut buf).unwrap();
+        assert!(matches!(Response::from_line(&buf).unwrap(), Response::Error(_)));
+        server.shutdown();
+    }
+}

@@ -1,0 +1,516 @@
+//! Model worker: one OS thread owning one model shard.
+//!
+//! Learning on a mixture is inherently sequential (each point mutates the
+//! state the next point scores against), so a shard is a single thread
+//! consuming a bounded command queue. Inference requests are micro-
+//! batched ([`super::batcher`]); when AOT artifacts are available and the
+//! shard's shape matches a manifest config, batched class-scoring runs on
+//! the XLA path (the PJRT client is created *inside* the worker thread —
+//! it is not `Send`).
+
+use super::backpressure::{BoundedQueue, OverflowPolicy};
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::{CoordError, Result};
+use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, SupervisedGmm};
+use crate::json::Json;
+use crate::runtime::{PackedState, Runtime};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Commands accepted by a worker.
+pub(crate) enum Command {
+    Learn { features: Vec<f64>, label: usize },
+    Predict { features: Vec<f64>, reply: mpsc::Sender<Vec<f64>> },
+    /// Regression: continuous output block (n_classes doubles as the
+    /// output arity).
+    LearnReg { features: Vec<f64>, targets: Vec<f64> },
+    PredictReg { features: Vec<f64>, reply: mpsc::Sender<Vec<f64>> },
+    Stats { reply: mpsc::Sender<WorkerStats> },
+    CheckpointJson { reply: mpsc::Sender<Json> },
+    Shutdown,
+}
+
+/// Worker configuration.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub gmm: GmmConfig,
+    pub feature_stds: Vec<f64>,
+    /// Command queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Overflow policy for the command queue.
+    pub overflow: OverflowPolicy,
+    pub batcher: BatcherConfig,
+    /// Use the XLA predict artifact with this config name, if it matches
+    /// this worker's shape and `artifacts/manifest.json` exists.
+    pub xla_config: Option<String>,
+}
+
+impl WorkerConfig {
+    pub fn new(n_features: usize, n_classes: usize, gmm: GmmConfig, feature_stds: Vec<f64>) -> Self {
+        WorkerConfig {
+            n_features,
+            n_classes,
+            gmm,
+            feature_stds,
+            queue_capacity: 1024,
+            overflow: OverflowPolicy::Block,
+            batcher: BatcherConfig::default(),
+            xla_config: None,
+        }
+    }
+
+    pub fn with_xla(mut self, config: impl Into<String>) -> Self {
+        self.xla_config = Some(config.into());
+        self
+    }
+}
+
+/// Statistics reported by a worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStats {
+    pub components: usize,
+    pub points: u64,
+    pub learned: u64,
+    pub predicted: u64,
+    pub xla_batches: u64,
+}
+
+impl WorkerStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("components", self.components.into()),
+            ("points", (self.points as usize).into()),
+            ("learned", (self.learned as usize).into()),
+            ("predicted", (self.predicted as usize).into()),
+            ("xla_batches", (self.xla_batches as usize).into()),
+        ])
+    }
+}
+
+/// Handle for submitting work to a running worker.
+#[derive(Clone)]
+pub struct WorkerHandle {
+    queue: Arc<BoundedQueue<Command>>,
+}
+
+/// A spawned worker (join handle + command handle).
+pub struct Worker {
+    pub handle: WorkerHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Spawn a worker thread.
+    pub fn spawn(cfg: WorkerConfig, metrics: Arc<Metrics>) -> Worker {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity, cfg.overflow));
+        let q2 = queue.clone();
+        let thread = std::thread::Builder::new()
+            .name("figmn-worker".into())
+            .spawn(move || worker_loop(cfg, q2, metrics))
+            .expect("spawn worker");
+        Worker { handle: WorkerHandle { queue }, thread: Some(thread) }
+    }
+
+    /// Signal shutdown and join.
+    pub fn join(mut self) {
+        self.handle.queue.push(Command::Shutdown);
+        self.handle.queue.close();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.handle.queue.close();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl WorkerHandle {
+    /// Enqueue a labeled example. `Err(Rejected)` if shed/closed.
+    pub fn learn(&self, features: Vec<f64>, label: usize) -> Result<()> {
+        if self.queue.push(Command::Learn { features, label }) {
+            Ok(())
+        } else {
+            Err(CoordError::Rejected("worker queue"))
+        }
+    }
+
+    /// Request class scores (blocks for the reply).
+    pub fn predict(&self, features: Vec<f64>) -> Result<Vec<f64>> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(Command::Predict { features, reply: tx }) {
+            return Err(CoordError::Rejected("worker queue"));
+        }
+        rx.recv().map_err(|_| CoordError::Rejected("worker died"))
+    }
+
+    /// Enqueue a regression example (targets in the output block).
+    pub fn learn_reg(&self, features: Vec<f64>, targets: Vec<f64>) -> Result<()> {
+        if self.queue.push(Command::LearnReg { features, targets }) {
+            Ok(())
+        } else {
+            Err(CoordError::Rejected("worker queue"))
+        }
+    }
+
+    /// Request reconstructed continuous targets (blocks for the reply).
+    pub fn predict_reg(&self, features: Vec<f64>) -> Result<Vec<f64>> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(Command::PredictReg { features, reply: tx }) {
+            return Err(CoordError::Rejected("worker queue"));
+        }
+        rx.recv().map_err(|_| CoordError::Rejected("worker died"))
+    }
+
+    pub fn stats(&self) -> Result<WorkerStats> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(Command::Stats { reply: tx }) {
+            return Err(CoordError::Rejected("worker queue"));
+        }
+        rx.recv().map_err(|_| CoordError::Rejected("worker died"))
+    }
+
+    /// Snapshot the model as a JSON checkpoint document.
+    pub fn checkpoint_json(&self) -> Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(Command::CheckpointJson { reply: tx }) {
+            return Err(CoordError::Rejected("worker queue"));
+        }
+        rx.recv().map_err(|_| CoordError::Rejected("worker died"))
+    }
+
+    /// Queue depth (for router load-aware policies and tests).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+struct XlaPath {
+    runtime: Runtime,
+    config: String,
+    capacity: usize,
+    batch: usize,
+}
+
+fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Arc<Metrics>) {
+    let joint_dim = cfg.n_features + cfg.n_classes;
+    let mut joint_cfg = GmmConfig::new(joint_dim)
+        .with_delta(cfg.gmm.delta)
+        .with_beta(cfg.gmm.beta)
+        .with_max_components(cfg.gmm.max_components);
+    joint_cfg = if cfg.gmm.prune {
+        joint_cfg.with_pruning(cfg.gmm.v_min, cfg.gmm.sp_min)
+    } else {
+        joint_cfg.without_pruning()
+    };
+    let mut stds = cfg.feature_stds.clone();
+    stds.extend(std::iter::repeat(0.5).take(cfg.n_classes));
+    let model = Figmn::new(joint_cfg, &stds);
+    let mut clf = SupervisedGmm::from_model(model, cfg.n_features, cfg.n_classes);
+
+    // Optional XLA inference path — the runtime must be built on this
+    // thread (PjRtClient is Rc-based).
+    let xla: Option<XlaPath> = cfg.xla_config.as_ref().and_then(|name| {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            log::warn!("xla scoring requested but no artifacts at {dir:?}");
+            return None;
+        }
+        let runtime = Runtime::open(dir).ok()?;
+        let meta = runtime.manifest().find(name, crate::runtime::ArtifactKind::Predict)?.clone();
+        if meta.dim != joint_dim || meta.n_known != cfg.n_features {
+            log::warn!(
+                "xla config '{name}' shape (D={}, i={}) != worker (D={joint_dim}, i={})",
+                meta.dim,
+                meta.n_known,
+                cfg.n_features
+            );
+            return None;
+        }
+        Some(XlaPath { runtime, config: name.clone(), capacity: meta.capacity, batch: meta.batch })
+    });
+
+    let mut learned: u64 = 0;
+    let mut predicted: u64 = 0;
+    let mut xla_batches: u64 = 0;
+    let mut batcher: Batcher<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Batcher::new(cfg.batcher);
+
+    let flush = |batch: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)>,
+                 clf: &SupervisedGmm<Figmn>,
+                 xla: &Option<XlaPath>,
+                 xla_batches: &mut u64,
+                 predicted: &mut u64,
+                 metrics: &Metrics| {
+        let started = Instant::now();
+        let n = batch.len();
+        if clf.num_components() == 0 {
+            // Nothing learned yet: answer uniform scores instead of
+            // panicking the shard (predict-before-learn is legal traffic).
+            let uniform = vec![1.0 / cfg.n_classes as f64; cfg.n_classes];
+            for (_, reply) in batch {
+                let _ = reply.send(uniform.clone());
+            }
+            *predicted += n as u64;
+            metrics.record_predict(started, n);
+            return;
+        }
+        // XLA path only when the batch fits and the model fits capacity.
+        let use_xla = xla.as_ref().filter(|x| {
+            n <= x.batch && clf.model().num_components() <= x.capacity && n > 0
+        });
+        if let Some(x) = use_xla {
+            if let Ok(exec) = x.runtime.predict_exec(&x.config) {
+                let state = PackedState::from_figmn(clf.model(), x.capacity);
+                let mut xs = vec![0.0f32; x.batch * cfg.n_features];
+                for (i, (f, _)) in batch.iter().enumerate() {
+                    for (j, &v) in f.iter().enumerate() {
+                        xs[i * cfg.n_features + j] = v as f32;
+                    }
+                }
+                if let Ok(recon) = exec.predict(&xs, &state) {
+                    let o = cfg.n_classes;
+                    for (i, (_, reply)) in batch.into_iter().enumerate() {
+                        let raw: Vec<f64> =
+                            recon[i * o..(i + 1) * o].iter().map(|&v| v as f64).collect();
+                        let _ = reply.send(normalize_scores(raw));
+                    }
+                    *xla_batches += 1;
+                    *predicted += n as u64;
+                    metrics.record_predict(started, n);
+                    return;
+                }
+            }
+        }
+        // Native fallback.
+        for (f, reply) in batch {
+            let _ = reply.send(clf.class_scores(&f));
+        }
+        *predicted += n as u64;
+        metrics.record_predict(started, n);
+    };
+
+    loop {
+        // Sleep at most until the batcher deadline.
+        let wait = batcher.time_to_deadline().unwrap_or(Duration::from_millis(50));
+        let cmd = queue.pop_timeout(wait);
+        match cmd {
+            Some(Command::Learn { features, label }) => {
+                // Order: serve queued predictions against the pre-update
+                // model, then learn.
+                if let Some(b) = batcher.flush() {
+                    flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+                }
+                let started = Instant::now();
+                let before = clf.num_components();
+                clf.train_one(&features, label);
+                if clf.num_components() > before {
+                    metrics.record_component_created();
+                }
+                learned += 1;
+                metrics.record_learn(started);
+            }
+            Some(Command::Predict { features, reply }) => {
+                if let Some(b) = batcher.push((features, reply)) {
+                    flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+                }
+            }
+            Some(Command::LearnReg { features, targets }) => {
+                if let Some(b) = batcher.flush() {
+                    flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+                }
+                let started = Instant::now();
+                if targets.len() == cfg.n_classes && features.len() == cfg.n_features {
+                    let mut joint = features;
+                    joint.extend_from_slice(&targets);
+                    clf.train_joint(&joint);
+                    learned += 1;
+                    metrics.record_learn(started);
+                } // else: malformed record — counted nowhere, rejected upstream
+            }
+            Some(Command::PredictReg { features, reply }) => {
+                // Regression replies bypass the classification batcher
+                // (no clipping semantics to share).
+                let started = Instant::now();
+                let out = if clf.num_components() == 0 {
+                    vec![0.0; cfg.n_classes]
+                } else {
+                    clf.predict_targets(&features)
+                };
+                let _ = reply.send(out);
+                predicted += 1;
+                metrics.record_predict(started, 1);
+            }
+            Some(Command::Stats { reply }) => {
+                let _ = reply.send(WorkerStats {
+                    components: clf.num_components(),
+                    points: clf.model().points_seen(),
+                    learned,
+                    predicted,
+                    xla_batches,
+                });
+            }
+            Some(Command::CheckpointJson { reply }) => {
+                let _ = reply.send(clf.model().to_json());
+            }
+            Some(Command::Shutdown) => break,
+            None => {
+                // Timeout (batcher deadline) or closed-and-drained.
+                if let Some(b) = batcher.poll() {
+                    flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+                }
+                if queue.is_closed() && queue.is_empty() {
+                    break;
+                }
+            }
+        }
+    }
+    // Final drain of pending predictions.
+    if let Some(b) = batcher.flush() {
+        flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+    }
+}
+
+/// Clip-and-normalize reconstructed one-hot activations into scores
+/// (mirrors `SupervisedGmm::class_scores`).
+fn normalize_scores(raw: Vec<f64>) -> Vec<f64> {
+    let mut scores: Vec<f64> = raw.iter().map(|&v| v.max(0.0)).collect();
+    let total: f64 = scores.iter().sum();
+    if total <= 0.0 {
+        let best = raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut t = 0.0;
+        for (s, &r) in scores.iter_mut().zip(raw.iter()) {
+            *s = (r - best).exp();
+            t += *s;
+        }
+        for s in &mut scores {
+            *s /= t;
+        }
+    } else {
+        for s in &mut scores {
+            *s /= total;
+        }
+    }
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn blob_point(rng: &mut Pcg64, class: usize) -> Vec<f64> {
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        vec![centers[class][0] + rng.normal() * 0.7, centers[class][1] + rng.normal() * 0.7]
+    }
+
+    fn spawn_blob_worker() -> (Worker, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let cfg = WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]);
+        (Worker::spawn(cfg, metrics.clone()), metrics)
+    }
+
+    #[test]
+    fn learns_and_predicts() {
+        let (worker, metrics) = spawn_blob_worker();
+        let mut rng = Pcg64::seed(1);
+        for i in 0..300 {
+            let c = i % 3;
+            worker.handle.learn(blob_point(&mut rng, c), c).unwrap();
+        }
+        // Predictions are serialized behind learns, so this sees the
+        // fully-trained model.
+        let mut correct = 0;
+        for i in 0..60 {
+            let c = i % 3;
+            let scores = worker.handle.predict(blob_point(&mut rng, c)).unwrap();
+            assert_eq!(scores.len(), 3);
+            let pred = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == c {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 55, "correct {correct}/60");
+        let stats = worker.handle.stats().unwrap();
+        assert_eq!(stats.learned, 300);
+        assert_eq!(stats.predicted, 60);
+        assert!(stats.components >= 3);
+        assert_eq!(metrics.snapshot().learned, 300);
+        worker.join();
+    }
+
+    #[test]
+    fn checkpoint_json_is_loadable() {
+        let (worker, _m) = spawn_blob_worker();
+        let mut rng = Pcg64::seed(2);
+        for i in 0..60 {
+            worker.handle.learn(blob_point(&mut rng, i % 3), i % 3).unwrap();
+        }
+        let j = worker.handle.checkpoint_json().unwrap();
+        let restored = Figmn::from_json(&j).expect("checkpoint must round-trip");
+        assert!(restored.num_components() >= 3);
+        worker.join();
+    }
+
+    #[test]
+    fn regression_path_learns_a_function() {
+        // y = 2x − 1 through the worker's learn_reg/predict_reg ops
+        // (n_classes doubles as output arity = 1).
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.1).with_beta(0.2).without_pruning();
+        let cfg = WorkerConfig::new(1, 1, gmm, vec![1.0]);
+        let worker = Worker::spawn(cfg, metrics);
+        let mut rng = Pcg64::seed(4);
+        for _ in 0..2000 {
+            let x = rng.uniform_in(-2.0, 2.0);
+            worker.handle.learn_reg(vec![x], vec![2.0 * x - 1.0]).unwrap();
+        }
+        for &x in &[-1.5, 0.0, 1.5] {
+            let y = worker.handle.predict_reg(vec![x]).unwrap()[0];
+            assert!((y - (2.0 * x - 1.0)).abs() < 0.15, "f({x}) = {y}");
+        }
+        worker.join();
+    }
+
+    #[test]
+    fn predict_before_learn_returns_uniform() {
+        let (worker, _m) = spawn_blob_worker();
+        let scores = worker.handle.predict(vec![1.0, 2.0]).unwrap();
+        assert_eq!(scores, vec![1.0 / 3.0; 3]);
+        // The shard survives and can still learn afterwards.
+        worker.handle.learn(vec![0.0, 0.0], 0).unwrap();
+        assert_eq!(worker.handle.stats().unwrap().learned, 1);
+        worker.join();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_predictions() {
+        let (worker, _m) = spawn_blob_worker();
+        let mut rng = Pcg64::seed(3);
+        for i in 0..30 {
+            worker.handle.learn(blob_point(&mut rng, i % 3), i % 3).unwrap();
+        }
+        // Issue predictions and immediately shut down; replies must still
+        // arrive (flush-on-shutdown).
+        let handle = worker.handle.clone();
+        let p1 = std::thread::spawn(move || handle.predict(vec![0.0, 0.0]));
+        std::thread::sleep(Duration::from_millis(5));
+        worker.join();
+        let scores = p1.join().unwrap();
+        assert!(scores.is_ok());
+    }
+}

@@ -1,0 +1,161 @@
+//! Minimal Weka ARFF parser — the format the paper's experiments consumed
+//! (the authors published Weka packages). Supports `numeric` attributes
+//! and one nominal `class` attribute (any position); `@relation`,
+//! comments, and case-insensitive keywords.
+
+use super::Dataset;
+
+/// Parse ARFF text. The single nominal attribute is treated as the class;
+/// if several nominals exist, the **last** one is the class and the rest
+/// are rejected (encode them numerically upstream).
+pub fn parse_arff(text: &str) -> Result<Dataset, String> {
+    #[derive(PartialEq)]
+    enum Kind {
+        Numeric,
+        Nominal(Vec<String>),
+    }
+    let mut relation = String::from("arff");
+    let mut attrs: Vec<(String, Kind)> = Vec::new();
+    let mut in_data = false;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let lower = line.to_ascii_lowercase();
+        if !in_data {
+            if lower.starts_with("@relation") {
+                relation = line[9..].trim().trim_matches(|c| c == '\'' || c == '"').to_string();
+            } else if lower.starts_with("@attribute") {
+                let rest = line[10..].trim();
+                // name may be quoted
+                let (name, tail) = if let Some(stripped) = rest.strip_prefix('\'') {
+                    let end = stripped.find('\'').ok_or(format!("line {}: unterminated name", lineno + 1))?;
+                    (stripped[..end].to_string(), stripped[end + 1..].trim())
+                } else {
+                    let mut it = rest.splitn(2, char::is_whitespace);
+                    let n = it.next().unwrap_or("").to_string();
+                    (n, it.next().unwrap_or("").trim())
+                };
+                let kind = if tail.starts_with('{') {
+                    let inner = tail
+                        .trim_start_matches('{')
+                        .trim_end_matches('}')
+                        .split(',')
+                        .map(|s| s.trim().trim_matches('\'').to_string())
+                        .collect::<Vec<_>>();
+                    Kind::Nominal(inner)
+                } else if tail.to_ascii_lowercase().starts_with("numeric")
+                    || tail.to_ascii_lowercase().starts_with("real")
+                    || tail.to_ascii_lowercase().starts_with("integer")
+                {
+                    Kind::Numeric
+                } else {
+                    return Err(format!("line {}: unsupported attribute type '{tail}'", lineno + 1));
+                };
+                attrs.push((name, kind));
+            } else if lower.starts_with("@data") {
+                in_data = true;
+            }
+        } else {
+            let cells: Vec<String> = line.split(',').map(|s| s.trim().trim_matches('\'').to_string()).collect();
+            if cells.len() != attrs.len() {
+                return Err(format!(
+                    "line {}: {} cells but {} attributes",
+                    lineno + 1,
+                    cells.len(),
+                    attrs.len()
+                ));
+            }
+            rows.push(cells);
+        }
+    }
+
+    if attrs.is_empty() || rows.is_empty() {
+        return Err("no attributes or no data".into());
+    }
+    // Identify the class column: last nominal attribute.
+    let class_col = attrs
+        .iter()
+        .rposition(|(_, k)| matches!(k, Kind::Nominal(_)))
+        .ok_or("no nominal (class) attribute found")?;
+    let n_nominal = attrs.iter().filter(|(_, k)| matches!(k, Kind::Nominal(_))).count();
+    if n_nominal > 1 {
+        return Err("multiple nominal attributes unsupported (encode them numerically)".into());
+    }
+    let class_values = match &attrs[class_col].1 {
+        Kind::Nominal(v) => v.clone(),
+        _ => unreachable!(),
+    };
+
+    let mut features = Vec::with_capacity(rows.len());
+    let mut labels = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let mut feats = Vec::with_capacity(attrs.len() - 1);
+        for (col, cell) in row.iter().enumerate() {
+            if col == class_col {
+                let idx = class_values
+                    .iter()
+                    .position(|v| v == cell)
+                    .ok_or(format!("row {}: unknown class '{cell}'", i + 1))?;
+                labels.push(idx);
+            } else {
+                // Missing values ('?') become 0.0 — Weka's default
+                // ReplaceMissingValues-with-mean is out of scope here.
+                feats.push(if cell == "?" { 0.0 } else {
+                    cell.parse::<f64>().map_err(|_| format!("row {}: bad numeric '{cell}'", i + 1))?
+                });
+            }
+        }
+        features.push(feats);
+    }
+    Ok(Dataset::new(&relation, features, labels, class_values.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+% comment
+@RELATION iris-mini
+
+@ATTRIBUTE sepallength NUMERIC
+@ATTRIBUTE sepalwidth  REAL
+@ATTRIBUTE class {setosa, versicolor}
+
+@DATA
+5.1, 3.5, setosa
+7.0, 3.2, versicolor
+6.3, ?, versicolor
+";
+
+    #[test]
+    fn parses_sample() {
+        let d = parse_arff(SAMPLE).unwrap();
+        assert_eq!(d.name, "iris-mini");
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_classes, 2);
+        assert_eq!(d.labels, vec![0, 1, 1]);
+        assert_eq!(d.features[2][1], 0.0); // missing → 0
+    }
+
+    #[test]
+    fn class_not_required_last() {
+        let text = "@relation t\n@attribute class {a,b}\n@attribute x numeric\n@data\na,1.0\nb,2.0\n";
+        let d = parse_arff(text).unwrap();
+        assert_eq!(d.dim(), 1);
+        assert_eq!(d.labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_arff("").is_err());
+        assert!(parse_arff("@relation t\n@attribute x numeric\n@data\n1.0\n").is_err()); // no class
+        assert!(parse_arff("@relation t\n@attribute c {a}\n@data\na,extra\n").is_err());
+        assert!(parse_arff("@relation t\n@attribute x string\n@data\nz\n").is_err());
+    }
+}

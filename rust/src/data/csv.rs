@@ -1,0 +1,119 @@
+//! CSV parsing/writing for labeled datasets.
+//!
+//! Format: numeric feature columns, label in the **last** column (either a
+//! class name or an integer). An optional header row is auto-detected
+//! (non-numeric first cell in a non-label column).
+
+use super::Dataset;
+use std::collections::BTreeMap;
+
+/// Parse CSV text into a [`Dataset`].
+pub fn parse_csv(name: &str, text: &str) -> Result<Dataset, String> {
+    let mut rows: Vec<(Vec<f64>, String)> = Vec::new();
+    let mut lines = text.lines().enumerate().peekable();
+
+    // Header detection: first non-empty line whose first cell isn't a number.
+    if let Some((_, first)) = lines.peek() {
+        let first_cell = first.split(',').next().unwrap_or("").trim();
+        if !first_cell.is_empty() && first_cell.parse::<f64>().is_err() {
+            lines.next();
+        }
+    }
+
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells.len() < 2 {
+            return Err(format!("line {}: need ≥2 columns", lineno + 1));
+        }
+        let (feat_cells, label_cell) = cells.split_at(cells.len() - 1);
+        let mut feats = Vec::with_capacity(feat_cells.len());
+        for (col, c) in feat_cells.iter().enumerate() {
+            feats.push(
+                c.parse::<f64>()
+                    .map_err(|_| format!("line {}: column {} not numeric: '{c}'", lineno + 1, col + 1))?,
+            );
+        }
+        rows.push((feats, label_cell[0].to_string()));
+    }
+    if rows.is_empty() {
+        return Err("no data rows".into());
+    }
+    let d = rows[0].0.len();
+    if rows.iter().any(|(f, _)| f.len() != d) {
+        return Err("inconsistent column counts".into());
+    }
+
+    // Map label strings to class indices in first-seen order… but keep it
+    // deterministic across shuffles by sorting the distinct labels.
+    let mut distinct: Vec<String> = rows.iter().map(|(_, l)| l.clone()).collect();
+    distinct.sort();
+    distinct.dedup();
+    let index: BTreeMap<&str, usize> =
+        distinct.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect();
+
+    let features: Vec<Vec<f64>> = rows.iter().map(|(f, _)| f.clone()).collect();
+    let labels: Vec<usize> = rows.iter().map(|(_, l)| index[l.as_str()]).collect();
+    Ok(Dataset::new(name, features, labels, distinct.len()))
+}
+
+/// Serialize a dataset to CSV (labels as `c<index>`).
+pub fn write_csv(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for (row, &label) in ds.features.iter().zip(ds.labels.iter()) {
+        for v in row {
+            out.push_str(&format!("{v:?},"));
+        }
+        out.push_str(&format!("c{label}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_header() {
+        let text = "x,y,class\n1.0,2.0,a\n3.0,4.0,b\n5.0,6.0,a\n";
+        let d = parse_csv("t", text).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_classes, 2);
+        assert_eq!(d.labels, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn parses_numeric_labels_without_header() {
+        let text = "1.5,0\n2.5,1\n";
+        let d = parse_csv("t", text).unwrap();
+        assert_eq!(d.dim(), 1);
+        assert_eq!(d.labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let text = "1.25,2.5,a\n-3.0,4.0,b\n";
+        let d = parse_csv("t", text).unwrap();
+        let d2 = parse_csv("t", &write_csv(&d)).unwrap();
+        assert_eq!(d.features, d2.features);
+        assert_eq!(d.labels, d2.labels);
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        assert!(parse_csv("t", "").is_err());
+        assert!(parse_csv("t", "1.0,x,a\n").is_err());
+        assert!(parse_csv("t", "1.0,a\n2.0,3.0,b\n").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = "# comment\n\n1.0,a\n\n2.0,b\n";
+        let d = parse_csv("t", text).unwrap();
+        assert_eq!(d.len(), 2);
+    }
+}

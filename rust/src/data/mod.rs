@@ -1,0 +1,121 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on 9 UCI datasets plus MNIST/CIFAR-10 subsets
+//! (Table 1), none of which ship with this offline environment.
+//! Per DESIGN.md §5 each is replaced by a seeded synthetic generator with
+//! the **exact same (N, D, #classes)** — the quantities the timing
+//! experiments (Tables 2–3) depend on — and class-conditional Gaussian
+//! structure so the accuracy experiment (Table 4) ranks classifiers on a
+//! learnable problem. `twospirals` is generated exactly (it is synthetic
+//! in the paper as well).
+//!
+//! Also here: CSV and (Weka-style) ARFF parsers so the library can run on
+//! real files a downstream user supplies, normalization, and streaming
+//! views used by the coordinator.
+
+mod arff;
+mod csv;
+mod normalize;
+mod stream;
+pub mod synth;
+mod twospirals;
+
+pub use arff::parse_arff;
+pub use csv::{parse_csv, write_csv};
+pub use normalize::{MinMaxScaler, StandardScaler};
+pub use stream::{DriftStream, Record, RecordStream, ShuffledStream};
+pub use twospirals::twospirals;
+
+use crate::stats::column_stds;
+
+/// An in-memory labeled dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major feature rows; all rows have equal length.
+    pub features: Vec<Vec<f64>>,
+    /// Class index per row, in `0..n_classes`.
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(name: &str, features: Vec<Vec<f64>>, labels: Vec<usize>, n_classes: usize) -> Self {
+        assert_eq!(features.len(), labels.len(), "features/labels length mismatch");
+        assert!(!features.is_empty(), "empty dataset");
+        let d = features[0].len();
+        assert!(features.iter().all(|r| r.len() == d), "ragged feature rows");
+        assert!(labels.iter().all(|&l| l < n_classes), "label out of range");
+        Dataset { name: name.to_string(), features, labels, n_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+
+    /// Feature dimensionality `D`.
+    pub fn dim(&self) -> usize {
+        self.features[0].len()
+    }
+
+    /// Per-feature standard deviations (for `σ_ini = δ·std`, Eq. 13).
+    pub fn feature_stds(&self) -> Vec<f64> {
+        column_stds(&self.features)
+    }
+
+    /// Subset by row indices (copies).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            features: idx.iter().map(|&i| self.features[i].clone()).collect(),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Count of rows per class.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0; self.n_classes];
+        for &l in &self.labels {
+            counts[l] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_invariants() {
+        let d = Dataset::new("t", vec![vec![1.0, 2.0], vec![3.0, 4.0]], vec![0, 1], 2);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.class_counts(), vec![1, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged() {
+        Dataset::new("t", vec![vec![1.0], vec![1.0, 2.0]], vec![0, 0], 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_label() {
+        Dataset::new("t", vec![vec![1.0]], vec![5], 2);
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let d = Dataset::new("t", vec![vec![0.0], vec![1.0], vec![2.0]], vec![0, 1, 0], 2);
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.features, vec![vec![2.0], vec![0.0]]);
+        assert_eq!(s.labels, vec![0, 0]);
+    }
+}

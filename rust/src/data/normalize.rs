@@ -1,0 +1,129 @@
+//! Feature scaling. Both scalers are fit-once/apply-many and serialize
+//! their parameters so the coordinator can ship them with checkpoints.
+
+/// Min–max scaling to `[0, 1]` (constant columns map to 0.5).
+#[derive(Debug, Clone)]
+pub struct MinMaxScaler {
+    mins: Vec<f64>,
+    maxs: Vec<f64>,
+}
+
+impl MinMaxScaler {
+    pub fn fit(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut mins = vec![f64::INFINITY; d];
+        let mut maxs = vec![f64::NEG_INFINITY; d];
+        for r in rows {
+            for j in 0..d {
+                mins[j] = mins[j].min(r[j]);
+                maxs[j] = maxs[j].max(r[j]);
+            }
+        }
+        MinMaxScaler { mins, maxs }
+    }
+
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .enumerate()
+            .map(|(j, &v)| {
+                let range = self.maxs[j] - self.mins[j];
+                if range > 0.0 {
+                    (v - self.mins[j]) / range
+                } else {
+                    0.5
+                }
+            })
+            .collect()
+    }
+
+    pub fn transform_all(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.transform(r)).collect()
+    }
+}
+
+/// Z-score standardization (constant columns pass through centred at 0).
+#[derive(Debug, Clone)]
+pub struct StandardScaler {
+    means: Vec<f64>,
+    stds: Vec<f64>,
+}
+
+impl StandardScaler {
+    pub fn fit(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let n = rows.len() as f64;
+        let mut means = vec![0.0; d];
+        for r in rows {
+            for j in 0..d {
+                means[j] += r[j];
+            }
+        }
+        for m in &mut means {
+            *m /= n;
+        }
+        let mut stds = vec![0.0; d];
+        for r in rows {
+            for j in 0..d {
+                let e = r[j] - means[j];
+                stds[j] += e * e;
+            }
+        }
+        for s in &mut stds {
+            *s = (*s / n).sqrt();
+            if *s == 0.0 {
+                *s = 1.0;
+            }
+        }
+        StandardScaler { means, stds }
+    }
+
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        row.iter().enumerate().map(|(j, &v)| (v - self.means[j]) / self.stds[j]).collect()
+    }
+
+    pub fn transform_all(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.transform(r)).collect()
+    }
+
+    pub fn means(&self) -> &[f64] {
+        &self.means
+    }
+
+    pub fn stds(&self) -> &[f64] {
+        &self.stds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{mean, std_dev};
+
+    #[test]
+    fn minmax_maps_to_unit() {
+        let rows = vec![vec![0.0, 10.0], vec![5.0, 20.0], vec![10.0, 30.0]];
+        let s = MinMaxScaler::fit(&rows);
+        let t = s.transform_all(&rows);
+        assert_eq!(t[0], vec![0.0, 0.0]);
+        assert_eq!(t[2], vec![1.0, 1.0]);
+        assert_eq!(t[1], vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn minmax_constant_column() {
+        let rows = vec![vec![3.0], vec![3.0]];
+        let s = MinMaxScaler::fit(&rows);
+        assert_eq!(s.transform(&[3.0]), vec![0.5]);
+    }
+
+    #[test]
+    fn standard_gives_zero_mean_unit_var() {
+        let rows: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 * 0.3 + 5.0]).collect();
+        let s = StandardScaler::fit(&rows);
+        let t: Vec<f64> = rows.iter().map(|r| s.transform(r)[0]).collect();
+        assert!(mean(&t).abs() < 1e-12);
+        assert!((std_dev(&t) - 1.0).abs() < 0.01);
+    }
+}

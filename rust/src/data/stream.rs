@@ -1,0 +1,148 @@
+//! Streaming views over datasets — the coordinator consumes these.
+//!
+//! The paper's motivation is single-pass learning on data streams; these
+//! adapters turn in-memory datasets into replayable record streams and
+//! compose them into non-stationary (concept-drift) scenarios.
+
+use super::Dataset;
+use crate::rng::Pcg64;
+
+/// One stream element: features plus an optional label (unlabeled records
+/// are inference-only traffic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub features: Vec<f64>,
+    pub label: Option<usize>,
+    /// Monotone sequence number assigned by the stream.
+    pub seq: u64,
+}
+
+/// A pull-based record stream.
+pub trait RecordStream {
+    /// Next record, or `None` when the stream is exhausted.
+    fn next_record(&mut self) -> Option<Record>;
+
+    /// Total records if known ahead of time.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Replays a dataset in a seeded random order.
+pub struct ShuffledStream {
+    data: Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    seq: u64,
+}
+
+impl ShuffledStream {
+    pub fn new(data: Dataset, seed: u64) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let order = rng.permutation(data.len());
+        ShuffledStream { data, order, pos: 0, seq: 0 }
+    }
+}
+
+impl RecordStream for ShuffledStream {
+    fn next_record(&mut self) -> Option<Record> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let i = self.order[self.pos];
+        self.pos += 1;
+        let seq = self.seq;
+        self.seq += 1;
+        Some(Record {
+            features: self.data.features[i].clone(),
+            label: Some(self.data.labels[i]),
+            seq,
+        })
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.order.len() - self.pos)
+    }
+}
+
+/// Concatenates phases of different distributions — abrupt concept drift.
+pub struct DriftStream {
+    phases: Vec<Box<dyn RecordStream + Send>>,
+    current: usize,
+    seq: u64,
+}
+
+impl DriftStream {
+    pub fn new(phases: Vec<Box<dyn RecordStream + Send>>) -> Self {
+        DriftStream { phases, current: 0, seq: 0 }
+    }
+}
+
+impl RecordStream for DriftStream {
+    fn next_record(&mut self) -> Option<Record> {
+        while self.current < self.phases.len() {
+            if let Some(mut r) = self.phases[self.current].next_record() {
+                r.seq = self.seq;
+                self.seq += 1;
+                return Some(r);
+            }
+            self.current += 1;
+        }
+        None
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.phases[self.current..]
+            .iter()
+            .map(|p| p.len_hint())
+            .try_fold(0usize, |acc, h| h.map(|v| acc + v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new("t", vec![vec![0.0], vec![1.0], vec![2.0]], vec![0, 1, 0], 2)
+    }
+
+    #[test]
+    fn shuffled_stream_visits_all_once() {
+        let mut s = ShuffledStream::new(tiny(), 3);
+        assert_eq!(s.len_hint(), Some(3));
+        let mut seen: Vec<f64> = Vec::new();
+        while let Some(r) = s.next_record() {
+            seen.push(r.features[0]);
+        }
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen, vec![0.0, 1.0, 2.0]);
+        assert!(s.next_record().is_none());
+    }
+
+    #[test]
+    fn seq_is_monotone() {
+        let mut s = ShuffledStream::new(tiny(), 3);
+        let mut prev = None;
+        while let Some(r) = s.next_record() {
+            if let Some(p) = prev {
+                assert!(r.seq > p);
+            }
+            prev = Some(r.seq);
+        }
+    }
+
+    #[test]
+    fn drift_stream_concatenates() {
+        let a = ShuffledStream::new(tiny(), 1);
+        let b = ShuffledStream::new(tiny(), 2);
+        let mut d = DriftStream::new(vec![Box::new(a), Box::new(b)]);
+        assert_eq!(d.len_hint(), Some(6));
+        let mut n = 0;
+        while let Some(r) = d.next_record() {
+            assert_eq!(r.seq, n);
+            n += 1;
+        }
+        assert_eq!(n, 6);
+    }
+}

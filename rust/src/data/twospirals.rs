@@ -1,0 +1,54 @@
+//! The classic two-spirals benchmark (Lang & Witbrock 1988 style),
+//! generated exactly — in the paper it is a synthetic dataset too.
+
+use super::Dataset;
+use crate::rng::Pcg64;
+
+/// `n` points on two interleaved spirals with additive Gaussian noise.
+pub fn twospirals(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seed(seed);
+    let mut features = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 2;
+        // Radius grows with angle; second spiral is rotated by π.
+        let t = 0.5 + 3.0 * (i / 2) as f64 / (n as f64 / 2.0).max(1.0) * std::f64::consts::PI;
+        let r = t / (3.0 * std::f64::consts::PI);
+        let phase = if class == 0 { 0.0 } else { std::f64::consts::PI };
+        let x = r * (t + phase).cos() + noise * rng.normal();
+        let y = r * (t + phase).sin() + noise * rng.normal();
+        features.push(vec![x, y]);
+        labels.push(class);
+    }
+    Dataset::new("twospirals", features, labels, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_balance() {
+        let d = twospirals(193, 0.05, 1);
+        assert_eq!(d.len(), 193);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_classes, 2);
+        let counts = d.class_counts();
+        assert!((counts[0] as i64 - counts[1] as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn spirals_interleave() {
+        // Points stay within the unit-ish disc and both classes span it.
+        let d = twospirals(200, 0.0, 2);
+        for row in &d.features {
+            let r = (row[0] * row[0] + row[1] * row[1]).sqrt();
+            assert!(r <= 1.2, "radius {r}");
+        }
+        // Noise-free: same index offset on different spirals are rotated
+        // by π — their midpoint is ~the origin.
+        let a = &d.features[10];
+        let b = &d.features[11];
+        assert!((a[0] + b[0]).abs() < 0.05 && (a[1] + b[1]).abs() < 0.05);
+    }
+}

@@ -1,0 +1,135 @@
+//! Area under the ROC curve.
+
+/// Binary AUC via the Mann–Whitney U statistic with proper tie handling
+/// (average ranks). `scores[i]` is the model's confidence that example
+/// `i` is positive; `labels[i]` is the truth.
+///
+/// Returns 0.5 when one class is absent (undefined AUC — Weka reports the
+/// same neutral value).
+pub fn binary_auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // Rank all scores (average rank for ties). total_cmp: a NaN score
+    // (diverged model) ranks deterministically instead of panicking.
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    let mut ranks = vec![0.0; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        // ranks are 1-based; tied block [i..=j] gets the average rank.
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = avg;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 =
+        labels.iter().zip(ranks.iter()).filter(|(&l, _)| l).map(|(_, &r)| r).sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Multiclass AUC: one-vs-rest per class, weighted by class prevalence —
+/// Weka's "weighted average AUC", which is what the paper's Table 4
+/// averages report.
+///
+/// `scores[i][c]` = model confidence that example `i` is class `c`.
+pub fn multiclass_auc(scores: &[Vec<f64>], labels: &[usize], n_classes: usize) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    assert!(!scores.is_empty());
+    let n = labels.len() as f64;
+    let mut weighted = 0.0;
+    let mut total_weight = 0.0;
+    for c in 0..n_classes {
+        let class_count = labels.iter().filter(|&&l| l == c).count();
+        if class_count == 0 {
+            continue;
+        }
+        let bin_labels: Vec<bool> = labels.iter().map(|&l| l == c).collect();
+        let bin_scores: Vec<f64> = scores.iter().map(|s| s[c]).collect();
+        let auc = binary_auc(&bin_scores, &bin_labels);
+        let w = class_count as f64 / n;
+        weighted += w * auc;
+        total_weight += w;
+    }
+    if total_weight > 0.0 {
+        weighted / total_weight
+    } else {
+        0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [false, false, true, true];
+        assert_eq!(binary_auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn inverted_is_zero() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [false, false, true, true];
+        assert_eq!(binary_auc(&scores, &labels), 0.0);
+    }
+
+    #[test]
+    fn random_constant_is_half() {
+        let scores = [0.5, 0.5, 0.5, 0.5];
+        let labels = [true, false, true, false];
+        assert_eq!(binary_auc(&scores, &labels), 0.5);
+    }
+
+    #[test]
+    fn known_mixed_case() {
+        // scores: pos {0.8, 0.4}, neg {0.6, 0.2} → pairs: (0.8>0.6, 0.8>0.2,
+        // 0.4<0.6, 0.4>0.2) = 3/4 wins.
+        let scores = [0.8, 0.6, 0.4, 0.2];
+        let labels = [true, false, true, false];
+        assert_eq!(binary_auc(&scores, &labels), 0.75);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        assert_eq!(binary_auc(&[0.1, 0.9], &[true, true]), 0.5);
+    }
+
+    #[test]
+    fn multiclass_perfect() {
+        let scores = vec![
+            vec![0.9, 0.05, 0.05],
+            vec![0.1, 0.8, 0.1],
+            vec![0.0, 0.1, 0.9],
+            vec![0.8, 0.1, 0.1],
+        ];
+        let labels = [0, 1, 2, 0];
+        assert_eq!(multiclass_auc(&scores, &labels, 3), 1.0);
+    }
+
+    #[test]
+    fn multiclass_weighted_by_prevalence() {
+        // Class 0 (3 examples) perfectly ranked, class 1 (1 example)
+        // perfectly wrong → weighted = (3/4·1 + 1/4·0) = 0.75.
+        let scores = vec![
+            vec![0.9, 0.9],
+            vec![0.8, 0.8],
+            vec![0.7, 0.7],
+            vec![0.1, 0.1],
+        ];
+        let labels = [0, 0, 0, 1];
+        let auc = multiclass_auc(&scores, &labels, 2);
+        assert!((auc - 0.75).abs() < 1e-12, "auc {auc}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Cross-validation splits and fold bookkeeping (the paper uses 2-fold CV
+//! with paired t-tests at p = 0.05 throughout).
+
+use crate::rng::Pcg64;
+
+/// Plain k-fold: a seeded permutation chopped into `k` contiguous folds.
+/// Returns `(train_idx, test_idx)` per fold.
+pub fn kfold_indices(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n, "kfold: need 2 ≤ k ≤ n");
+    let mut rng = Pcg64::seed(seed);
+    let perm = rng.permutation(n);
+    let mut folds = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * n / k;
+        let hi = (f + 1) * n / k;
+        let test: Vec<usize> = perm[lo..hi].to_vec();
+        let train: Vec<usize> =
+            perm[..lo].iter().chain(perm[hi..].iter()).copied().collect();
+        folds.push((train, test));
+    }
+    folds
+}
+
+/// Stratified k-fold: class proportions preserved per fold (Weka's CV
+/// default, hence the paper's). Each class's examples are shuffled and
+/// dealt round-robin to folds.
+pub fn stratified_kfold(
+    labels: &[usize],
+    n_classes: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2, "stratified_kfold: k ≥ 2");
+    let mut rng = Pcg64::seed(seed);
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        per_class[l].push(i);
+    }
+    let mut fold_members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for members in per_class.iter_mut() {
+        rng.shuffle(members);
+        for (i, &idx) in members.iter().enumerate() {
+            fold_members[i % k].push(idx);
+        }
+    }
+    (0..k)
+        .map(|f| {
+            let test = fold_members[f].clone();
+            let train: Vec<usize> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| fold_members[g].iter().copied())
+                .collect();
+            (train, test)
+        })
+        .collect()
+}
+
+/// Timing of one CV fold, split like the paper's Tables 2/3.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CvTimings {
+    pub train_seconds: f64,
+    pub test_seconds: f64,
+}
+
+/// Result of one evaluated fold.
+#[derive(Debug, Clone)]
+pub struct FoldResult {
+    pub timings: CvTimings,
+    /// Per-test-example class scores.
+    pub scores: Vec<Vec<f64>>,
+    /// Ground-truth labels of the test rows, aligned with `scores`.
+    pub truth: Vec<usize>,
+}
+
+impl FoldResult {
+    pub fn auc(&self, n_classes: usize) -> f64 {
+        super::multiclass_auc(&self.scores, &self.truth, n_classes)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let correct = self
+            .scores
+            .iter()
+            .zip(self.truth.iter())
+            .filter(|(s, &t)| {
+                s.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    == Some(t)
+            })
+            .count();
+        correct as f64 / self.truth.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kfold_partitions() {
+        let folds = kfold_indices(10, 3, 1);
+        assert_eq!(folds.len(), 3);
+        let mut all_test: Vec<usize> = folds.iter().flat_map(|(_, t)| t.clone()).collect();
+        all_test.sort_unstable();
+        assert_eq!(all_test, (0..10).collect::<Vec<_>>());
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 10);
+            for t in test {
+                assert!(!train.contains(t));
+            }
+        }
+    }
+
+    #[test]
+    fn stratified_preserves_proportions() {
+        // 40 of class 0, 20 of class 1, 2 folds → each fold has 20/10.
+        let labels: Vec<usize> =
+            (0..60).map(|i| if i < 40 { 0 } else { 1 }).collect();
+        let folds = stratified_kfold(&labels, 2, 2, 42);
+        for (_, test) in &folds {
+            let c0 = test.iter().filter(|&&i| labels[i] == 0).count();
+            let c1 = test.iter().filter(|&&i| labels[i] == 1).count();
+            assert_eq!(c0, 20);
+            assert_eq!(c1, 10);
+        }
+    }
+
+    #[test]
+    fn stratified_is_partition() {
+        let labels: Vec<usize> = (0..31).map(|i| i % 3).collect();
+        let folds = stratified_kfold(&labels, 3, 2, 7);
+        let mut all: Vec<usize> = folds.iter().flat_map(|(_, t)| t.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..31).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fold_result_metrics() {
+        let r = FoldResult {
+            timings: CvTimings::default(),
+            scores: vec![vec![0.9, 0.1], vec![0.2, 0.8], vec![0.6, 0.4]],
+            truth: vec![0, 1, 1],
+        };
+        assert!((r.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+        let auc = r.auc(2);
+        assert!(auc > 0.4 && auc <= 1.0);
+    }
+}

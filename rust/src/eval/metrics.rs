@@ -1,0 +1,93 @@
+//! Classification metrics.
+
+/// Fraction of predictions equal to truth.
+pub fn accuracy(predictions: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(predictions.len(), truth.len());
+    if truth.is_empty() {
+        return 0.0;
+    }
+    let correct = predictions.iter().zip(truth.iter()).filter(|(p, t)| p == t).count();
+    correct as f64 / truth.len() as f64
+}
+
+/// Row = truth, column = prediction.
+#[derive(Debug, Clone)]
+pub struct ConfusionMatrix {
+    n_classes: usize,
+    counts: Vec<u64>,
+}
+
+impl ConfusionMatrix {
+    pub fn new(n_classes: usize) -> Self {
+        ConfusionMatrix { n_classes, counts: vec![0; n_classes * n_classes] }
+    }
+
+    pub fn record(&mut self, truth: usize, prediction: usize) {
+        assert!(truth < self.n_classes && prediction < self.n_classes);
+        self.counts[truth * self.n_classes + prediction] += 1;
+    }
+
+    pub fn count(&self, truth: usize, prediction: usize) -> u64 {
+        self.counts[truth * self.n_classes + prediction]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let diag: u64 = (0..self.n_classes).map(|i| self.count(i, i)).sum();
+        diag as f64 / self.total().max(1) as f64
+    }
+
+    /// Per-class recall (diagonal / row sum); `None` for absent classes.
+    pub fn recall(&self, class: usize) -> Option<f64> {
+        let row: u64 = (0..self.n_classes).map(|j| self.count(class, j)).sum();
+        if row == 0 {
+            None
+        } else {
+            Some(self.count(class, class) as f64 / row as f64)
+        }
+    }
+
+    /// Per-class precision (diagonal / column sum).
+    pub fn precision(&self, class: usize) -> Option<f64> {
+        let col: u64 = (0..self.n_classes).map(|i| self.count(i, class)).sum();
+        if col == 0 {
+            None
+        } else {
+            Some(self.count(class, class) as f64 / col as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_matrix_counts() {
+        let mut cm = ConfusionMatrix::new(2);
+        cm.record(0, 0);
+        cm.record(0, 1);
+        cm.record(1, 1);
+        cm.record(1, 1);
+        assert_eq!(cm.total(), 4);
+        assert_eq!(cm.accuracy(), 0.75);
+        assert_eq!(cm.recall(0), Some(0.5));
+        assert_eq!(cm.precision(1), Some(2.0 / 3.0));
+    }
+
+    #[test]
+    fn absent_class_is_none() {
+        let cm = ConfusionMatrix::new(3);
+        assert_eq!(cm.recall(2), None);
+        assert_eq!(cm.precision(2), None);
+    }
+}

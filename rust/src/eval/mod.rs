@@ -1,0 +1,15 @@
+//! Evaluation harness reproducing the paper's methodology:
+//! 2-fold cross-validation, AUC (area under the ROC curve, weighted
+//! one-vs-rest for multiclass — Weka's convention), accuracy/confusion,
+//! wall-clock timing split into training and testing phases, and the
+//! paired t-test significance marks of Tables 2–4.
+
+mod auc;
+mod crossval;
+mod metrics;
+mod timing;
+
+pub use auc::{binary_auc, multiclass_auc};
+pub use crossval::{kfold_indices, stratified_kfold, CvTimings, FoldResult};
+pub use metrics::{accuracy, ConfusionMatrix};
+pub use timing::{format_seconds, Stopwatch};

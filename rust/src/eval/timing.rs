@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers for the Tables 2/3 reproduction.
+
+use std::time::Instant;
+
+/// A simple accumulating stopwatch: repeatedly `start()`/`stop()`, read
+/// the accumulated total. Used to separate training time from testing
+/// time inside a fold exactly like the paper's experiment harness.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    total: f64,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { total: 0.0, started: None }
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.total += t.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Accumulated seconds (excluding a currently-running interval).
+    pub fn seconds(&self) -> f64 {
+        self.total
+    }
+
+    /// Time a closure and accumulate its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Render seconds like the paper's tables: 3 decimal places, or
+/// scientific for sub-millisecond values in verbose contexts.
+pub fn format_seconds(s: f64) -> String {
+    format!("{s:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_intervals() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        let first = sw.seconds();
+        assert!(first >= 0.004);
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(sw.seconds() > first);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.seconds(), 0.0);
+    }
+
+    #[test]
+    fn formats_three_decimals() {
+        assert_eq!(format_seconds(1.23456), "1.235");
+        assert_eq!(format_seconds(0.0004), "0.000");
+    }
+}

@@ -1,0 +1,139 @@
+//! Shared configuration for both IGMN variants.
+
+use crate::stats::chi2_quantile;
+
+/// Hyper-parameters of the (F)IGMN (paper §2).
+///
+/// Built with a fluent API; [`GmmConfig::chi2_threshold`] is derived once
+/// from `β` and `D` (the `χ²_{D,1−β}` update criterion of §2.1).
+#[derive(Debug, Clone)]
+pub struct GmmConfig {
+    /// Joint input dimensionality `D`.
+    pub dim: usize,
+    /// σ_ini scaling factor `δ` (Eq. 13), e.g. 0.01 … 1.
+    pub delta: f64,
+    /// Novelty percentile `β` (§2.1), e.g. 0.1. `β = 0` disables creation
+    /// after the first component (threshold = +∞), reproducing the paper's
+    /// Table 2/3 single-component timing setup.
+    pub beta: f64,
+    /// Minimum age before a component may be pruned (§2.3), e.g. 5.
+    pub v_min: u64,
+    /// Accumulator threshold under which an old component is spurious
+    /// (§2.3), e.g. 3.
+    pub sp_min: f64,
+    /// Hard cap on component count (0 = unlimited). Not in the paper;
+    /// used by the coordinator to bound worker memory — when full, the
+    /// nearest component is updated instead of creating a new one.
+    pub max_components: usize,
+    /// Whether pruning (§2.3) runs at all (the paper's timing experiments
+    /// effectively disable it via β = 0).
+    pub prune: bool,
+    chi2_threshold: f64,
+}
+
+impl GmmConfig {
+    /// Defaults follow the paper's running examples: δ = 0.01, β = 0.1,
+    /// v_min = 5, sp_min = 3, pruning on.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "GmmConfig: dim must be positive");
+        let mut cfg = GmmConfig {
+            dim,
+            delta: 0.01,
+            beta: 0.1,
+            v_min: 5,
+            sp_min: 3.0,
+            max_components: 0,
+            prune: true,
+            chi2_threshold: 0.0,
+        };
+        cfg.recompute_threshold();
+        cfg
+    }
+
+    pub fn with_delta(mut self, delta: f64) -> Self {
+        assert!(delta > 0.0, "delta must be positive");
+        self.delta = delta;
+        self
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta), "beta in [0,1)");
+        self.beta = beta;
+        self.recompute_threshold();
+        self
+    }
+
+    pub fn with_pruning(mut self, v_min: u64, sp_min: f64) -> Self {
+        self.v_min = v_min;
+        self.sp_min = sp_min;
+        self.prune = true;
+        self
+    }
+
+    pub fn without_pruning(mut self) -> Self {
+        self.prune = false;
+        self
+    }
+
+    pub fn with_max_components(mut self, k: usize) -> Self {
+        self.max_components = k;
+        self
+    }
+
+    /// The update-vs-create threshold `χ²_{D,1−β}` (§2.1). `+∞` for β = 0:
+    /// every point after the first updates the existing mixture.
+    pub fn chi2_threshold(&self) -> f64 {
+        self.chi2_threshold
+    }
+
+    fn recompute_threshold(&mut self) {
+        self.chi2_threshold = if self.beta <= 0.0 {
+            f64::INFINITY
+        } else {
+            chi2_quantile(self.dim as f64, 1.0 - self.beta)
+        };
+    }
+
+    /// Per-dimension `σ_ini = δ·std(x)` (Eq. 13) from dataset (or
+    /// estimated) standard deviations.
+    pub fn sigma_ini(&self, stds: &[f64]) -> Vec<f64> {
+        assert_eq!(stds.len(), self.dim, "sigma_ini: stds length != dim");
+        stds.iter()
+            .map(|&s| {
+                let v = self.delta * s;
+                assert!(v > 0.0, "sigma_ini must be positive (std={s}, delta={})", self.delta);
+                v
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_zero_threshold_infinite() {
+        let cfg = GmmConfig::new(8).with_beta(0.0);
+        assert!(cfg.chi2_threshold().is_infinite());
+    }
+
+    #[test]
+    fn threshold_matches_chi2_quantile() {
+        let cfg = GmmConfig::new(9).with_beta(0.1);
+        assert!((cfg.chi2_threshold() - chi2_quantile(9.0, 0.9)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn sigma_ini_scales_stds() {
+        let cfg = GmmConfig::new(3).with_delta(0.5);
+        assert_eq!(cfg.sigma_ini(&[2.0, 4.0, 1.0]), vec![1.0, 2.0, 0.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sigma_ini_rejects_zero_std() {
+        let cfg = GmmConfig::new(1);
+        cfg.sigma_ini(&[0.0]);
+    }
+}

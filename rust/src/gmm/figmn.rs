@@ -1,0 +1,469 @@
+//! FIGMN — the paper's fast precision-matrix IGMN (§3).
+//!
+//! Per data point and component the work is: one `Λ·v` product for the
+//! Mahalanobis distance (Eq. 22), and the fused rank-two Sherman–Morrison
+//! update (Eqs. 20–21) with the determinant-lemma update (Eqs. 25–26) —
+//! all `O(D²)`. No matrix is ever inverted or factorized on the learn
+//! path.
+
+use super::inference::precision_conditional;
+use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
+use crate::linalg::rank_one::figmn_fused_update;
+use crate::linalg::{sub_into, Matrix};
+
+/// One Gaussian component in precision form.
+#[derive(Debug, Clone)]
+pub(crate) struct PrecisionComponent {
+    pub mean: Vec<f64>,
+    /// Λ = C⁻¹ (kept exactly symmetric by the update rules).
+    pub lambda: Matrix,
+    /// log |C| — note: determinant of the *covariance*, as in the paper
+    /// ("we keep the precision matrix Λ, but the determinant of C").
+    pub log_det: f64,
+    /// Accumulator sp_j (Eq. 5).
+    pub sp: f64,
+    /// Age v_j (Eq. 4).
+    pub v: u64,
+}
+
+/// The fast IGMN (paper §3). See [`crate::gmm`] for the shared semantics.
+pub struct Figmn {
+    cfg: GmmConfig,
+    sigma_ini: Vec<f64>,
+    comps: Vec<PrecisionComponent>,
+    points: u64,
+    // --- reusable scratch (learn() allocates nothing after warm-up) ---
+    buf_e: Vec<f64>,
+    buf_d2: Vec<f64>,
+    /// Per-component `w = Λ·e` saved by the distance pass (K·D flat) and
+    /// reused by the fused update — see rank_one::figmn_fused_update.
+    buf_ws: Vec<f64>,
+    buf_ll: Vec<f64>,
+    buf_sp: Vec<f64>,
+}
+
+impl Figmn {
+    /// `dataset_stds`: per-dimension standard deviations for
+    /// `σ_ini = δ·std(x)` (Eq. 13) — an estimate is fine (§2.2).
+    pub fn new(cfg: GmmConfig, dataset_stds: &[f64]) -> Self {
+        let sigma_ini = cfg.sigma_ini(dataset_stds);
+        let d = cfg.dim;
+        Figmn {
+            cfg,
+            sigma_ini,
+            comps: Vec::new(),
+            points: 0,
+            buf_e: vec![0.0; d],
+            buf_d2: Vec::new(),
+            buf_ws: Vec::new(),
+            buf_ll: Vec::new(),
+            buf_sp: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &GmmConfig {
+        &self.cfg
+    }
+
+    pub fn sigma_ini(&self) -> &[f64] {
+        &self.sigma_ini
+    }
+
+    pub(crate) fn components(&self) -> &[PrecisionComponent] {
+        &self.comps
+    }
+
+    pub(crate) fn components_mut(&mut self) -> &mut Vec<PrecisionComponent> {
+        &mut self.comps
+    }
+
+    pub(crate) fn from_parts(
+        cfg: GmmConfig,
+        sigma_ini: Vec<f64>,
+        comps: Vec<PrecisionComponent>,
+        points: u64,
+    ) -> Self {
+        let d = cfg.dim;
+        Figmn {
+            cfg,
+            sigma_ini,
+            comps,
+            points,
+            buf_e: vec![0.0; d],
+            buf_d2: Vec::new(),
+            buf_ws: Vec::new(),
+            buf_ll: Vec::new(),
+            buf_sp: Vec::new(),
+        }
+    }
+
+    /// Mean of component `j` (exposed for tests/benches/tools).
+    pub fn component_mean(&self, j: usize) -> &[f64] {
+        &self.comps[j].mean
+    }
+
+    /// `(sp_j, v_j)` bookkeeping of component `j`.
+    pub fn component_stats(&self, j: usize) -> (f64, u64) {
+        (self.comps[j].sp, self.comps[j].v)
+    }
+
+    /// Precision matrix of component `j`.
+    pub fn component_lambda(&self, j: usize) -> &Matrix {
+        &self.comps[j].lambda
+    }
+
+    /// `log|C_j|`.
+    pub fn component_log_det(&self, j: usize) -> f64 {
+        self.comps[j].log_det
+    }
+
+    /// Prior p(j) = sp_j / Σ sp (Eq. 12).
+    pub fn prior(&self, j: usize) -> f64 {
+        let total: f64 = self.comps.iter().map(|c| c.sp).sum();
+        self.comps[j].sp / total
+    }
+
+    /// Squared Mahalanobis distances to every component (Eq. 22),
+    /// saving each component's `w = Λ·e` for the fused update.
+    fn distances_into(&mut self, x: &[f64]) {
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        self.buf_d2.clear();
+        self.buf_d2.reserve(k);
+        self.buf_ws.resize(k * d, 0.0);
+        for (j, c) in self.comps.iter().enumerate() {
+            sub_into(x, &c.mean, &mut self.buf_e);
+            let w = &mut self.buf_ws[j * d..(j + 1) * d];
+            self.buf_d2.push(c.lambda.quad_form_with(&self.buf_e, w));
+        }
+    }
+
+    fn create(&mut self, x: &[f64]) {
+        let d = self.cfg.dim;
+        let mut lambda = Matrix::zeros(d, d);
+        let mut log_det = 0.0;
+        for i in 0..d {
+            let s2 = self.sigma_ini[i] * self.sigma_ini[i];
+            lambda[(i, i)] = 1.0 / s2;
+            log_det += s2.ln();
+        }
+        self.comps.push(PrecisionComponent {
+            mean: x.to_vec(),
+            lambda,
+            log_det,
+            sp: 1.0,
+            v: 1,
+        });
+    }
+
+    fn update_all(&mut self, x: &[f64]) {
+        let d2 = std::mem::take(&mut self.buf_d2);
+        // Posteriors p(j|x) (Eqs. 2–3, log space).
+        self.buf_ll.clear();
+        self.buf_sp.clear();
+        for (c, &d2j) in self.comps.iter().zip(d2.iter()) {
+            self.buf_ll.push(log_gaussian(d2j, c.log_det, self.cfg.dim));
+            self.buf_sp.push(c.sp);
+        }
+        let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
+
+        for (j, c) in self.comps.iter_mut().enumerate() {
+            let p = post[j];
+            c.v += 1; // Eq. 4
+            c.sp += p; // Eq. 5
+            let omega = p / c.sp; // Eq. 7 (with the *updated* sp)
+            if omega <= 0.0 {
+                // ω = 0: Eqs. 8–11 are exact no-ops; skip the O(D²) work.
+                continue;
+            }
+            sub_into(x, &c.mean, &mut self.buf_e); // Eq. 6
+            for i in 0..self.cfg.dim {
+                c.mean[i] += omega * self.buf_e[i]; // Eqs. 8–9
+            }
+            // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean
+            // Eq. 11 — DESIGN.md §Deviations; single-pass rewrite —
+            // EXPERIMENTS.md §Perf L3-1), reusing w/q from the distance
+            // pass.
+            let d = self.cfg.dim;
+            let w = &self.buf_ws[j * d..(j + 1) * d];
+            match figmn_fused_update(&mut c.lambda, w, d2[j], omega, c.log_det) {
+                Some(r) => c.log_det = r.log_det,
+                None => {
+                    // Float underflow destroyed positive-definiteness
+                    // (reachable only at extreme conditioning). Reset the
+                    // component's shape to σ_ini around its current mean.
+                    let mut log_det = 0.0;
+                    c.lambda.scale_in_place(0.0);
+                    for i in 0..self.cfg.dim {
+                        let s2 = self.sigma_ini[i] * self.sigma_ini[i];
+                        c.lambda[(i, i)] = 1.0 / s2;
+                        log_det += s2.ln();
+                    }
+                    c.log_det = log_det;
+                }
+            }
+        }
+        self.buf_d2 = d2;
+    }
+
+    fn prune(&mut self) {
+        if !self.cfg.prune {
+            return;
+        }
+        let (v_min, sp_min) = (self.cfg.v_min, self.cfg.sp_min);
+        if self.comps.len() > 1 {
+            self.comps.retain(|c| !(c.v > v_min && c.sp < sp_min));
+        }
+        // Priors (Eq. 12) are derived from sp on demand; nothing else to
+        // renormalize.
+    }
+}
+
+impl IncrementalMixture for Figmn {
+    fn learn(&mut self, x: &[f64]) -> LearnOutcome {
+        assert_eq!(x.len(), self.cfg.dim, "learn: dimensionality mismatch");
+        self.points += 1;
+        if self.comps.is_empty() {
+            self.create(x);
+            return LearnOutcome::Created;
+        }
+        self.distances_into(x);
+        let accept = self
+            .buf_d2
+            .iter()
+            .any(|&d2| d2 < self.cfg.chi2_threshold());
+        let cap_full =
+            self.cfg.max_components > 0 && self.comps.len() >= self.cfg.max_components;
+        if accept || cap_full {
+            self.update_all(x);
+            self.prune();
+            LearnOutcome::Updated
+        } else {
+            self.create(x);
+            self.prune();
+            LearnOutcome::Created
+        }
+    }
+
+    fn num_components(&self) -> usize {
+        self.comps.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {
+        assert_eq!(known_vals.len(), known_idx.len());
+        assert!(!self.comps.is_empty(), "predict on empty model");
+        let mut log_liks = Vec::with_capacity(self.comps.len());
+        let mut sps = Vec::with_capacity(self.comps.len());
+        let mut recons: Vec<Vec<f64>> = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            let r = precision_conditional(
+                &c.lambda,
+                &c.mean,
+                c.log_det,
+                known_vals,
+                known_idx,
+                target_idx,
+            );
+            log_liks.push(r.log_lik);
+            sps.push(c.sp);
+            recons.push(r.reconstruction);
+        }
+        let post = softmax_posteriors(&log_liks, &sps); // Eq. 14
+        let mut out = vec![0.0; target_idx.len()];
+        for (p, r) in post.iter().zip(recons.iter()) {
+            for (o, &v) in out.iter_mut().zip(r.iter()) {
+                *o += p * v; // Eq. 27 mixture
+            }
+        }
+        out
+    }
+
+    fn log_density(&self, x: &[f64]) -> f64 {
+        assert!(!self.comps.is_empty());
+        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        let mut best = f64::NEG_INFINITY;
+        let mut terms = Vec::with_capacity(self.comps.len());
+        let mut e = vec![0.0; self.cfg.dim];
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            let d2 = c.lambda.quad_form(&e);
+            let t = log_gaussian(d2, c.log_det, self.cfg.dim) + (c.sp / total_sp).ln();
+            terms.push(t);
+            best = best.max(t);
+        }
+        if !best.is_finite() {
+            return f64::NEG_INFINITY;
+        }
+        best + terms.iter().map(|t| (t - best).exp()).sum::<f64>().ln()
+    }
+
+    fn posteriors(&self, x: &[f64]) -> Vec<f64> {
+        let mut ll = Vec::with_capacity(self.comps.len());
+        let mut sp = Vec::with_capacity(self.comps.len());
+        let mut e = vec![0.0; self.cfg.dim];
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            ll.push(log_gaussian(c.lambda.quad_form(&e), c.log_det, self.cfg.dim));
+            sp.push(c.sp);
+        }
+        softmax_posteriors(&ll, &sp)
+    }
+
+    fn points_seen(&self) -> u64 {
+        self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Cholesky;
+
+    fn two_cluster_data() -> Vec<[f64; 2]> {
+        // Two tight clusters far apart.
+        let mut pts = Vec::new();
+        for i in 0..20 {
+            let t = i as f64 * 0.01;
+            pts.push([t, -t]);
+            pts.push([10.0 + t, 10.0 - t]);
+        }
+        pts
+    }
+
+    fn trained() -> Figmn {
+        let cfg = GmmConfig::new(2).with_delta(0.3).with_beta(0.1).without_pruning();
+        let mut m = Figmn::new(cfg, &[5.0, 5.0]);
+        for p in two_cluster_data() {
+            m.learn(&p);
+        }
+        m
+    }
+
+    #[test]
+    fn discovers_two_clusters() {
+        let m = trained();
+        assert_eq!(m.num_components(), 2);
+    }
+
+    #[test]
+    fn first_point_creates() {
+        let cfg = GmmConfig::new(2);
+        let mut m = Figmn::new(cfg, &[1.0, 1.0]);
+        assert_eq!(m.learn(&[0.0, 0.0]), LearnOutcome::Created);
+        assert_eq!(m.num_components(), 1);
+        assert_eq!(m.points_seen(), 1);
+    }
+
+    #[test]
+    fn beta_zero_never_creates_second() {
+        let cfg = GmmConfig::new(2).with_beta(0.0).with_delta(1.0).without_pruning();
+        let mut m = Figmn::new(cfg, &[1.0, 1.0]);
+        m.learn(&[0.0, 0.0]);
+        for p in two_cluster_data() {
+            assert_eq!(m.learn(&p), LearnOutcome::Updated);
+        }
+        assert_eq!(m.num_components(), 1);
+    }
+
+    #[test]
+    fn sp_accumulates_posterior_mass() {
+        let m = trained();
+        let total_sp: f64 = (0..m.num_components()).map(|j| m.component_stats(j).0).sum();
+        // Each learn() adds exactly 1 total posterior mass; creations add 1.
+        assert!((total_sp - m.points_seen() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priors_sum_to_one() {
+        let m = trained();
+        let s: f64 = (0..m.num_components()).map(|j| m.prior(j)).sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_stays_pd_and_logdet_consistent() {
+        let m = trained();
+        for j in 0..m.num_components() {
+            let lam = m.component_lambda(j);
+            let ch = Cholesky::new(lam).expect("Λ must stay PD");
+            // log|C| = −log|Λ|
+            let log_det_c = -ch.log_det();
+            assert!(
+                (log_det_c - m.component_log_det(j)).abs() < 1e-6,
+                "tracked log|C| diverged: {} vs {}",
+                log_det_c,
+                m.component_log_det(j)
+            );
+        }
+    }
+
+    #[test]
+    fn predict_reconstructs_cluster_partner() {
+        let m = trained();
+        // Within cluster A, y ≈ −x; within B, y ≈ 20 − x.
+        let y = m.predict(&[0.05], &[0], &[1]);
+        assert!((y[0] + 0.05).abs() < 0.2, "got {}", y[0]);
+        let y = m.predict(&[10.05], &[0], &[1]);
+        assert!((y[0] - 9.95).abs() < 0.2, "got {}", y[0]);
+    }
+
+    #[test]
+    fn posteriors_pick_right_cluster() {
+        let m = trained();
+        let p = m.posteriors(&[0.1, -0.1]);
+        let q = m.posteriors(&[10.1, 9.9]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // The two points must prefer different components.
+        let a = p.iter().cloned().fold((0, f64::MIN, 0usize), |(i, b, bi), v| {
+            if v > b { (i + 1, v, i) } else { (i + 1, b, bi) }
+        }).2;
+        let b = q.iter().cloned().fold((0, f64::MIN, 0usize), |(i, bb, bi), v| {
+            if v > bb { (i + 1, v, i) } else { (i + 1, bb, bi) }
+        }).2;
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn log_density_higher_on_data() {
+        let m = trained();
+        assert!(m.log_density(&[0.0, 0.0]) > m.log_density(&[5.0, 5.0]));
+    }
+
+    #[test]
+    fn pruning_removes_spurious() {
+        let cfg = GmmConfig::new(2).with_delta(0.05).with_beta(0.2).with_pruning(3, 2.0);
+        let mut m = Figmn::new(cfg, &[5.0, 5.0]);
+        // One outlier creates a component that never fires again…
+        m.learn(&[100.0, 100.0]);
+        // …then a long, tight stream elsewhere.
+        for i in 0..50 {
+            let t = (i % 10) as f64 * 0.01;
+            m.learn(&[t, t]);
+        }
+        // The outlier component must have been pruned.
+        for j in 0..m.num_components() {
+            assert!(m.component_mean(j)[0] < 50.0);
+        }
+    }
+
+    #[test]
+    fn max_components_caps() {
+        let cfg = GmmConfig::new(1).with_beta(0.5).with_delta(0.001).with_max_components(3).without_pruning();
+        let mut m = Figmn::new(cfg, &[1.0]);
+        for i in 0..50 {
+            m.learn(&[i as f64 * 100.0]); // every point is novel
+        }
+        assert_eq!(m.num_components(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn learn_rejects_wrong_dim() {
+        let mut m = Figmn::new(GmmConfig::new(3), &[1.0, 1.0, 1.0]);
+        m.learn(&[1.0]);
+    }
+}

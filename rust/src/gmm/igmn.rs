@@ -1,0 +1,318 @@
+//! IGMN — the original covariance-matrix formulation (paper §2).
+//!
+//! This is the paper's *baseline*: semantically identical to [`Figmn`]
+//! but paying `O(D³)` per point per component — each Mahalanobis
+//! distance/likelihood needs a fresh factorization of `C_j` (Eq. 1–2),
+//! while the covariance update itself (Eq. 11) is `O(D²)`.
+//!
+//! Implementation notes: the factorization is a Cholesky (numerically
+//! kinder than the explicit inverse the paper's Weka code computes, same
+//! asymptotic cost, same results); likelihoods are evaluated in log space
+//! exactly like the fast path so the two implementations produce the same
+//! numbers — the property the paper verifies in Section 4.
+
+use super::inference::covariance_conditional;
+use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
+use crate::linalg::rank_one::syr;
+use crate::linalg::{sub_into, Cholesky, Matrix};
+
+/// One Gaussian component in covariance form.
+#[derive(Debug, Clone)]
+pub(crate) struct CovarianceComponent {
+    pub mean: Vec<f64>,
+    pub cov: Matrix,
+    pub sp: f64,
+    pub v: u64,
+}
+
+/// The original IGMN (paper §2) — the `O(NKD³)` baseline.
+pub struct Igmn {
+    cfg: GmmConfig,
+    sigma_ini: Vec<f64>,
+    comps: Vec<CovarianceComponent>,
+    points: u64,
+    buf_e: Vec<f64>,
+    buf_dmu: Vec<f64>,
+}
+
+impl Igmn {
+    pub fn new(cfg: GmmConfig, dataset_stds: &[f64]) -> Self {
+        let sigma_ini = cfg.sigma_ini(dataset_stds);
+        let d = cfg.dim;
+        Igmn {
+            cfg,
+            sigma_ini,
+            comps: Vec::new(),
+            points: 0,
+            buf_e: vec![0.0; d],
+            buf_dmu: vec![0.0; d],
+        }
+    }
+
+    pub fn config(&self) -> &GmmConfig {
+        &self.cfg
+    }
+
+    /// Mean of component `j`.
+    pub fn component_mean(&self, j: usize) -> &[f64] {
+        &self.comps[j].mean
+    }
+
+    /// Covariance of component `j`.
+    pub fn component_cov(&self, j: usize) -> &Matrix {
+        &self.comps[j].cov
+    }
+
+    /// `(sp_j, v_j)`.
+    pub fn component_stats(&self, j: usize) -> (f64, u64) {
+        (self.comps[j].sp, self.comps[j].v)
+    }
+
+    fn create(&mut self, x: &[f64]) {
+        let d = self.cfg.dim;
+        let mut cov = Matrix::zeros(d, d);
+        for i in 0..d {
+            cov[(i, i)] = self.sigma_ini[i] * self.sigma_ini[i];
+        }
+        self.comps.push(CovarianceComponent { mean: x.to_vec(), cov, sp: 1.0, v: 1 });
+    }
+
+    /// Distances + log-dets for all components — `O(KD³)`: one Cholesky
+    /// per component per point. This cost is the paper's whole point.
+    fn score(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let mut d2s = Vec::with_capacity(self.comps.len());
+        let mut log_dets = Vec::with_capacity(self.comps.len());
+        let mut e = vec![0.0; self.cfg.dim];
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            let chol = Cholesky::new(&c.cov).expect("covariance must stay PD");
+            d2s.push(chol.quad_form_inv(&e));
+            log_dets.push(chol.log_det());
+        }
+        (d2s, log_dets)
+    }
+
+    fn update_all(&mut self, x: &[f64], d2s: &[f64], log_dets: &[f64]) {
+        let dim = self.cfg.dim;
+        let mut lls = Vec::with_capacity(self.comps.len());
+        let mut sps = Vec::with_capacity(self.comps.len());
+        for ((c, &d2), &ld) in self.comps.iter().zip(d2s.iter()).zip(log_dets.iter()) {
+            lls.push(log_gaussian(d2, ld, dim));
+            sps.push(c.sp);
+        }
+        let post = softmax_posteriors(&lls, &sps);
+        for (j, c) in self.comps.iter_mut().enumerate() {
+            let p = post[j];
+            c.v += 1; // Eq. 4
+            c.sp += p; // Eq. 5
+            let omega = p / c.sp; // Eq. 7
+            if omega <= 0.0 {
+                continue; // Eqs. 8–11 are exact no-ops when ω underflows
+            }
+            sub_into(x, &c.mean, &mut self.buf_e); // Eq. 6
+            for i in 0..dim {
+                self.buf_dmu[i] = omega * self.buf_e[i]; // Eq. 8
+                c.mean[i] += self.buf_dmu[i]; // Eq. 9
+            }
+            // Eq. 11, exact form: C ← (1−ω)C + ω·e·eᵀ − Δμ·Δμᵀ with the
+            // OLD-mean error e (Engel & Heinen 2010). The FIGMN paper
+            // prints e* (the new-mean error) here; that variant is not
+            // the exact weighted-covariance recurrence and loses positive
+            // definiteness at ω = ½ (a component's second point) for
+            // D ≥ 2. Both forms cost the same; see DESIGN.md §Deviations.
+            c.cov.scale_in_place(1.0 - omega);
+            syr(&mut c.cov, omega, &self.buf_e);
+            syr(&mut c.cov, -1.0, &self.buf_dmu);
+        }
+    }
+
+    fn prune(&mut self) {
+        if !self.cfg.prune {
+            return;
+        }
+        let (v_min, sp_min) = (self.cfg.v_min, self.cfg.sp_min);
+        if self.comps.len() > 1 {
+            self.comps.retain(|c| !(c.v > v_min && c.sp < sp_min));
+        }
+    }
+}
+
+impl IncrementalMixture for Igmn {
+    fn learn(&mut self, x: &[f64]) -> LearnOutcome {
+        assert_eq!(x.len(), self.cfg.dim, "learn: dimensionality mismatch");
+        self.points += 1;
+        if self.comps.is_empty() {
+            self.create(x);
+            return LearnOutcome::Created;
+        }
+        let (d2s, log_dets) = self.score(x);
+        let accept = d2s.iter().any(|&d2| d2 < self.cfg.chi2_threshold());
+        let cap_full =
+            self.cfg.max_components > 0 && self.comps.len() >= self.cfg.max_components;
+        if accept || cap_full {
+            self.update_all(x, &d2s, &log_dets);
+            self.prune();
+            LearnOutcome::Updated
+        } else {
+            self.create(x);
+            self.prune();
+            LearnOutcome::Created
+        }
+    }
+
+    fn num_components(&self) -> usize {
+        self.comps.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {
+        assert_eq!(known_vals.len(), known_idx.len());
+        assert!(!self.comps.is_empty(), "predict on empty model");
+        let mut log_liks = Vec::with_capacity(self.comps.len());
+        let mut sps = Vec::with_capacity(self.comps.len());
+        let mut recons = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            let r = covariance_conditional(&c.cov, &c.mean, known_vals, known_idx, target_idx);
+            log_liks.push(r.log_lik);
+            sps.push(c.sp);
+            recons.push(r.reconstruction);
+        }
+        let post = softmax_posteriors(&log_liks, &sps); // Eq. 14
+        let mut out = vec![0.0; target_idx.len()];
+        for (p, r) in post.iter().zip(recons.iter()) {
+            for (o, &v) in out.iter_mut().zip(r.iter()) {
+                *o += p * v; // Eq. 15 mixture
+            }
+        }
+        out
+    }
+
+    fn log_density(&self, x: &[f64]) -> f64 {
+        assert!(!self.comps.is_empty());
+        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        let (d2s, lds) = self.score(x);
+        let mut best = f64::NEG_INFINITY;
+        let mut terms = Vec::with_capacity(self.comps.len());
+        for ((c, &d2), &ld) in self.comps.iter().zip(d2s.iter()).zip(lds.iter()) {
+            let t = log_gaussian(d2, ld, self.cfg.dim) + (c.sp / total_sp).ln();
+            terms.push(t);
+            best = best.max(t);
+        }
+        if !best.is_finite() {
+            return f64::NEG_INFINITY;
+        }
+        best + terms.iter().map(|t| (t - best).exp()).sum::<f64>().ln()
+    }
+
+    fn posteriors(&self, x: &[f64]) -> Vec<f64> {
+        let (d2s, lds) = self.score(x);
+        let lls: Vec<f64> = d2s
+            .iter()
+            .zip(lds.iter())
+            .map(|(&d2, &ld)| log_gaussian(d2, ld, self.cfg.dim))
+            .collect();
+        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
+        softmax_posteriors(&lls, &sps)
+    }
+
+    fn points_seen(&self) -> u64 {
+        self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Figmn;
+    use crate::rng::Pcg64;
+    use crate::testutil::{assert_close, assert_rel, check};
+
+    /// THE paper's Section-4 equivalence claim: original and fast IGMN,
+    /// fed the same stream with the same hyper-parameters, produce the
+    /// same components, the same predictions, and the same densities.
+    #[test]
+    fn igmn_equals_figmn_on_random_streams() {
+        check(15, |rng| {
+            let d = 2 + rng.below(5);
+            let n_clusters = 1 + rng.below(3);
+            let cfg = GmmConfig::new(d).with_delta(0.3 + rng.uniform()).with_beta(0.05);
+            let stds = vec![2.0; d];
+            let mut slow = Igmn::new(cfg.clone(), &stds);
+            let mut fast = Figmn::new(cfg, &stds);
+
+            let centers: Vec<Vec<f64>> =
+                (0..n_clusters).map(|_| (0..d).map(|_| rng.normal() * 8.0).collect()).collect();
+            for step in 0..120 {
+                let c = &centers[step % n_clusters];
+                let x: Vec<f64> = c.iter().map(|&m| m + rng.normal() * 0.8).collect();
+                let a = slow.learn(&x);
+                let b = fast.learn(&x);
+                assert_eq!(a, b, "create/update decisions diverged at step {step}");
+            }
+            assert_eq!(slow.num_components(), fast.num_components());
+
+            // Components match.
+            for j in 0..fast.num_components() {
+                assert_close(slow.component_mean(j), fast.component_mean(j), 1e-6);
+                let (sp_a, v_a) = slow.component_stats(j);
+                let (sp_b, v_b) = fast.component_stats(j);
+                assert_rel(sp_a, sp_b, 1e-6);
+                assert_eq!(v_a, v_b);
+                // Λ ≡ C⁻¹.
+                let c_inv = slow.component_cov(j).inverse().unwrap();
+                assert!(
+                    c_inv.max_abs_diff(fast.component_lambda(j))
+                        < 1e-5 * (1.0 + c_inv.as_slice().iter().fold(0.0f64, |m, v| m.max(v.abs()))),
+                    "Λ vs C⁻¹ diverged for component {j}"
+                );
+            }
+
+            // Predictions and densities match.
+            let mut probe = Pcg64::seed(rng.next_u64());
+            for _ in 0..10 {
+                let x: Vec<f64> = (0..d).map(|_| probe.normal() * 5.0).collect();
+                assert_rel(slow.log_density(&x), fast.log_density(&x), 1e-6);
+                assert_close(&slow.posteriors(&x), &fast.posteriors(&x), 1e-6);
+                let known: Vec<usize> = (0..d - 1).collect();
+                let pa = slow.predict(&x[..d - 1], &known, &[d - 1]);
+                let pb = fast.predict(&x[..d - 1], &known, &[d - 1]);
+                assert_close(&pa, &pb, 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn covariance_tracks_cluster_shape() {
+        // Stream from a known anisotropic Gaussian; learned covariance
+        // must approach it.
+        let mut rng = Pcg64::seed(11);
+        let cfg = GmmConfig::new(2).with_beta(0.0).with_delta(1.0).without_pruning();
+        let mut m = Igmn::new(cfg, &[1.0, 1.0]);
+        for _ in 0..5000 {
+            let x = rng.normal() * 2.0;
+            let y = 0.5 * x + rng.normal() * 0.5;
+            m.learn(&[x, y]);
+        }
+        assert_eq!(m.num_components(), 1);
+        let c = m.component_cov(0);
+        assert!((c[(0, 0)] - 4.0).abs() < 0.5, "var_x {}", c[(0, 0)]);
+        assert!((c[(0, 1)] - 2.0).abs() < 0.4, "cov_xy {}", c[(0, 1)]);
+        assert!((c[(1, 1)] - 1.25).abs() < 0.3, "var_y {}", c[(1, 1)]);
+    }
+
+    #[test]
+    fn mean_converges_to_sample_mean_single_component() {
+        // With K=1 the IGMN mean recurrence is exactly the running mean
+        // when sp accumulates 1 per point.
+        let cfg = GmmConfig::new(1).with_beta(0.0).with_delta(1.0).without_pruning();
+        let mut m = Igmn::new(cfg, &[1.0]);
+        let xs = [3.0, 5.0, 7.0, 9.0];
+        for &x in &xs {
+            m.learn(&[x]);
+        }
+        assert_rel(m.component_mean(0)[0], 6.0, 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! The paper's algorithms.
+//!
+//! Two complete implementations of the Incremental Gaussian Mixture
+//! Network share one set of semantics (identical create/update/prune
+//! decisions, identical predictions — the paper's Section 4 equivalence
+//! claim, enforced by this crate's property tests):
+//!
+//! - [`Igmn`] — the **original** covariance-matrix formulation (paper
+//!   §2): per point it factorizes each component's covariance to get the
+//!   Mahalanobis distance and determinant — `O(KD³)` per point.
+//! - [`Figmn`] — the **fast** precision-matrix formulation (paper §3):
+//!   Sherman–Morrison rank-one updates of `Λ = C⁻¹` and
+//!   Matrix-Determinant-Lemma updates of `log|C|` — `O(KD²)` per point.
+//!
+//! Both implement [`IncrementalMixture`], which the evaluation harness,
+//! the coordinator workers, and the benchmarks are generic over.
+//!
+//! [`SupervisedGmm`] layers the paper's "any element predicts any other
+//! element" autoassociative trick into a conventional classifier
+//! interface (features + one-hot class concatenated into the joint input
+//! vector; class scores reconstructed at query time via Eq. 15/27).
+
+mod config;
+mod figmn;
+mod igmn;
+pub mod inference;
+mod serialize;
+pub mod supervised;
+
+pub use config::GmmConfig;
+pub use figmn::Figmn;
+pub use igmn::Igmn;
+pub use supervised::SupervisedGmm;
+
+/// Build a precision component from raw parts (used by the runtime's
+/// state unpacking; not part of the public API).
+pub(crate) fn new_precision_component(
+    mean: Vec<f64>,
+    lambda: crate::linalg::Matrix,
+    log_det: f64,
+    sp: f64,
+    v: u64,
+) -> figmn::PrecisionComponent {
+    figmn::PrecisionComponent { mean, lambda, log_det, sp, v }
+}
+
+/// Outcome of presenting one data point to the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnOutcome {
+    /// An existing component won the χ² test and the mixture was updated.
+    Updated,
+    /// No component accepted the point; a new one was created.
+    Created,
+}
+
+/// Common interface of both IGMN variants (and of remote/XLA-backed
+/// models in the coordinator).
+pub trait IncrementalMixture {
+    /// Present one joint data vector (paper Algorithm 1 body).
+    fn learn(&mut self, x: &[f64]) -> LearnOutcome;
+
+    /// Number of live Gaussian components.
+    fn num_components(&self) -> usize;
+
+    /// Joint input dimensionality `D`.
+    fn dim(&self) -> usize;
+
+    /// Reconstruct the `target_idx` elements given values for the
+    /// `known_idx` elements (paper Eq. 15 / Eq. 27).
+    fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64>;
+
+    /// Joint log-density `ln p(x)` under the mixture.
+    fn log_density(&self, x: &[f64]) -> f64;
+
+    /// Posterior responsibilities `p(j|x)` for a full joint vector.
+    fn posteriors(&self, x: &[f64]) -> Vec<f64>;
+
+    /// Total points presented.
+    fn points_seen(&self) -> u64;
+}
+
+/// Shared log-space posterior computation: given per-component
+/// `ln p(x|j)` and unnormalized priors (sp), return normalized `p(j|x)`.
+/// Uses the max-shift trick so D=3072 log-likelihoods don't underflow.
+pub(crate) fn softmax_posteriors(log_liks: &[f64], sps: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(log_liks.len(), sps.len());
+    let mut best = f64::NEG_INFINITY;
+    let mut scores = Vec::with_capacity(log_liks.len());
+    for (&ll, &sp) in log_liks.iter().zip(sps.iter()) {
+        // ln(p(x|j)·p(j)) up to the shared ln Σsp constant.
+        let s = ll + sp.max(1e-300).ln();
+        scores.push(s);
+        if s > best {
+            best = s;
+        }
+    }
+    if !best.is_finite() {
+        // All components at −∞ (or no components): uniform fallback.
+        let k = log_liks.len().max(1);
+        return vec![1.0 / k as f64; log_liks.len()];
+    }
+    let mut total = 0.0;
+    for s in &mut scores {
+        *s = (*s - best).exp();
+        total += *s;
+    }
+    for s in &mut scores {
+        *s /= total;
+    }
+    scores
+}
+
+/// `ln N(x; μ, C)` from a precomputed squared Mahalanobis distance and
+/// `log|C|` (paper Eq. 2 in log space).
+#[inline]
+pub(crate) fn log_gaussian(d2: f64, log_det: f64, dim: usize) -> f64 {
+    -0.5 * (dim as f64) * (2.0 * std::f64::consts::PI).ln() - 0.5 * log_det - 0.5 * d2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_posteriors_normalized() {
+        let p = softmax_posteriors(&[-1000.0, -1001.0, -999.0], &[1.0, 2.0, 3.0]);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_degenerate() {
+        let p = softmax_posteriors(&[f64::NEG_INFINITY, f64::NEG_INFINITY], &[1.0, 1.0]);
+        assert_eq!(p, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn log_gaussian_standard_normal_at_zero() {
+        // ln N(0; 0, 1) = −½ln(2π)
+        let v = log_gaussian(0.0, 0.0, 1);
+        assert!((v + 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-15);
+    }
+}

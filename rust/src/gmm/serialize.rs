@@ -1,0 +1,175 @@
+//! Checkpoint (de)serialization for the fast model.
+//!
+//! The coordinator checkpoints worker models as JSON (see
+//! [`crate::coordinator::checkpoint`]); the format is versioned and
+//! validated on load — a corrupt or non-PD checkpoint is rejected rather
+//! than silently producing NaNs mid-stream.
+
+use super::figmn::PrecisionComponent;
+use super::{Figmn, GmmConfig, IncrementalMixture};
+use crate::json::Json;
+use crate::linalg::Matrix;
+
+/// Current checkpoint format version.
+pub const CHECKPOINT_VERSION: f64 = 1.0;
+
+impl Figmn {
+    /// Serialize the full model state to JSON.
+    pub fn to_json(&self) -> Json {
+        let cfg = self.config();
+        let comps: Vec<Json> = self
+            .components()
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("mean", Json::num_array(&c.mean)),
+                    ("lambda", Json::num_array(c.lambda.as_slice())),
+                    ("log_det", c.log_det.into()),
+                    ("sp", c.sp.into()),
+                    ("v", (c.v as usize).into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", CHECKPOINT_VERSION.into()),
+            ("kind", "figmn".into()),
+            ("dim", cfg.dim.into()),
+            ("delta", cfg.delta.into()),
+            ("beta", cfg.beta.into()),
+            ("v_min", (cfg.v_min as usize).into()),
+            ("sp_min", cfg.sp_min.into()),
+            ("prune", cfg.prune.into()),
+            ("max_components", cfg.max_components.into()),
+            ("sigma_ini", Json::num_array(self.sigma_ini())),
+            ("points", (self.points_seen() as usize).into()),
+            ("components", Json::Arr(comps)),
+        ])
+    }
+
+    /// Restore a model from [`Figmn::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<Figmn, String> {
+        let get = |k: &str| j.get(k).ok_or_else(|| format!("checkpoint missing '{k}'"));
+        let version = get("version")?.as_f64().ok_or("bad version")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        if get("kind")?.as_str() != Some("figmn") {
+            return Err("not a figmn checkpoint".into());
+        }
+        let dim = get("dim")?.as_usize().ok_or("bad dim")?;
+        let delta = get("delta")?.as_f64().ok_or("bad delta")?;
+        let beta = get("beta")?.as_f64().ok_or("bad beta")?;
+        let v_min = get("v_min")?.as_usize().ok_or("bad v_min")? as u64;
+        let sp_min = get("sp_min")?.as_f64().ok_or("bad sp_min")?;
+        let prune = get("prune")?.as_bool().ok_or("bad prune")?;
+        let max_components = get("max_components")?.as_usize().ok_or("bad max_components")?;
+        let sigma_ini = get("sigma_ini")?.to_f64_vec().ok_or("bad sigma_ini")?;
+        if sigma_ini.len() != dim {
+            return Err("sigma_ini length != dim".into());
+        }
+        let points = get("points")?.as_usize().ok_or("bad points")? as u64;
+
+        let mut cfg = GmmConfig::new(dim)
+            .with_delta(delta)
+            .with_beta(beta)
+            .with_max_components(max_components);
+        cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
+
+        let mut comps = Vec::new();
+        for (i, cj) in get("components")?.as_array().ok_or("bad components")?.iter().enumerate() {
+            let mean = cj.get("mean").and_then(Json::to_f64_vec).ok_or("bad mean")?;
+            let flat = cj.get("lambda").and_then(Json::to_f64_vec).ok_or("bad lambda")?;
+            if mean.len() != dim || flat.len() != dim * dim {
+                return Err(format!("component {i}: shape mismatch"));
+            }
+            let log_det =
+                cj.get("log_det").and_then(Json::as_f64).ok_or("bad log_det")?;
+            let sp = cj.get("sp").and_then(Json::as_f64).ok_or("bad sp")?;
+            let v = cj.get("v").and_then(Json::as_usize).ok_or("bad v")? as u64;
+            if !log_det.is_finite() || !sp.is_finite() || sp <= 0.0 {
+                return Err(format!("component {i}: corrupt scalars"));
+            }
+            if mean.iter().chain(flat.iter()).any(|x| !x.is_finite()) {
+                return Err(format!("component {i}: non-finite values"));
+            }
+            comps.push(PrecisionComponent {
+                mean,
+                lambda: Matrix::from_vec(dim, dim, flat),
+                log_det,
+                sp,
+                v,
+            });
+        }
+        Ok(Figmn::from_parts(cfg, sigma_ini, comps, points))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::gmm::{Figmn, GmmConfig, IncrementalMixture};
+    use crate::json::parse;
+    use crate::rng::Pcg64;
+    use crate::testutil::assert_close;
+
+    fn trained_model() -> Figmn {
+        let cfg = GmmConfig::new(3).with_delta(0.4).with_beta(0.1);
+        let mut m = Figmn::new(cfg, &[2.0, 2.0, 2.0]);
+        let mut rng = Pcg64::seed(99);
+        for _ in 0..200 {
+            let c = if rng.uniform() < 0.5 { 0.0 } else { 8.0 };
+            let x: Vec<f64> = (0..3).map(|_| c + rng.normal()).collect();
+            m.learn(&x);
+        }
+        m
+    }
+
+    #[test]
+    fn round_trip_preserves_behaviour() {
+        let m = trained_model();
+        let text = m.to_json().to_string_compact();
+        let restored = Figmn::from_json(&parse(&text).unwrap()).unwrap();
+
+        assert_eq!(restored.num_components(), m.num_components());
+        assert_eq!(restored.points_seen(), m.points_seen());
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+            assert_close(&m.posteriors(&x), &restored.posteriors(&x), 1e-12);
+            assert_eq!(m.log_density(&x), restored.log_density(&x));
+            let p1 = m.predict(&x[..2], &[0, 1], &[2]);
+            let p2 = restored.predict(&x[..2], &[0, 1], &[2]);
+            assert_close(&p1, &p2, 1e-12);
+        }
+    }
+
+    #[test]
+    fn restored_model_keeps_learning_identically() {
+        let m = trained_model();
+        let mut original = m;
+        let mut restored =
+            Figmn::from_json(&parse(&original.to_json().to_string_compact()).unwrap()).unwrap();
+        let mut rng = Pcg64::seed(5);
+        for _ in 0..50 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+            assert_eq!(original.learn(&x), restored.learn(&x));
+        }
+        assert_eq!(original.num_components(), restored.num_components());
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoints() {
+        let m = trained_model();
+        let good = m.to_json().to_string_compact();
+
+        // Truncated document.
+        assert!(parse(&good[..good.len() / 2]).is_err());
+        // Wrong kind.
+        let bad = good.replace("\"figmn\"", "\"other\"");
+        assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+        // Wrong version.
+        let bad = good.replace("\"version\":1", "\"version\":999");
+        assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+        // Missing field.
+        assert!(Figmn::from_json(&parse(r#"{"version":1,"kind":"figmn"}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Supervised classification on top of the autoassociative mixture.
+//!
+//! The paper uses the IGMN's "any element predicts any other element"
+//! property for supervised learning: features and a class encoding share
+//! one joint input vector; at query time the class block is reconstructed
+//! from the feature block (Eq. 15/27). This wrapper packages that as a
+//! conventional classifier with one-hot class encoding, which is what the
+//! Table 4 (AUC) experiments use — the reconstructed class activations
+//! are the ranking scores.
+
+use super::{Figmn, GmmConfig, IncrementalMixture, Igmn, LearnOutcome};
+
+/// A classifier wrapper over any [`IncrementalMixture`].
+pub struct SupervisedGmm<M: IncrementalMixture> {
+    model: M,
+    n_features: usize,
+    n_classes: usize,
+    feature_idx: Vec<usize>,
+    class_idx: Vec<usize>,
+}
+
+impl<M: IncrementalMixture> SupervisedGmm<M> {
+    /// Wrap an already-constructed mixture whose joint dimension is
+    /// `n_features + n_classes`.
+    pub fn from_model(model: M, n_features: usize, n_classes: usize) -> Self {
+        assert_eq!(model.dim(), n_features + n_classes, "joint dim mismatch");
+        SupervisedGmm {
+            model,
+            n_features,
+            n_classes,
+            feature_idx: (0..n_features).collect(),
+            class_idx: (n_features..n_features + n_classes).collect(),
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    /// Present one labeled example (single-pass, online).
+    pub fn train_one(&mut self, x: &[f64], class: usize) -> LearnOutcome {
+        assert_eq!(x.len(), self.n_features);
+        assert!(class < self.n_classes);
+        let mut joint = Vec::with_capacity(self.model.dim());
+        joint.extend_from_slice(x);
+        for c in 0..self.n_classes {
+            joint.push(if c == class { 1.0 } else { 0.0 });
+        }
+        self.model.learn(&joint)
+    }
+
+    /// Present one raw joint vector `[features…, outputs…]` — regression
+    /// mode: the trailing block holds continuous targets instead of a
+    /// one-hot class (the paper's §1 autoassociative usage). Both modes
+    /// can interleave on one model only if the output block semantics
+    /// match; the coordinator keeps them separate per model.
+    pub fn train_joint(&mut self, joint: &[f64]) -> LearnOutcome {
+        assert_eq!(joint.len(), self.model.dim());
+        self.model.learn(joint)
+    }
+
+    /// Raw conditional-mean reconstruction of the output block (Eq. 27),
+    /// without the one-hot clipping/normalization of
+    /// [`SupervisedGmm::class_scores`] — regression predictions.
+    pub fn predict_targets(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_features);
+        self.model.predict(x, &self.feature_idx, &self.class_idx)
+    }
+
+    /// Class scores: the reconstructed one-hot block, shifted/clipped to
+    /// be non-negative and normalized to sum 1. Suitable both for argmax
+    /// classification and as AUC ranking scores.
+    pub fn class_scores(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_features);
+        let raw = self.model.predict(x, &self.feature_idx, &self.class_idx);
+        let mut scores: Vec<f64> = raw.iter().map(|&v| v.max(0.0)).collect();
+        let total: f64 = scores.iter().sum();
+        if total <= 0.0 {
+            // Every activation clipped: fall back to softmax of raw.
+            let best = raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut t = 0.0;
+            for (s, &r) in scores.iter_mut().zip(raw.iter()) {
+                *s = (r - best).exp();
+                t += *s;
+            }
+            for s in &mut scores {
+                *s /= t;
+            }
+        } else {
+            for s in &mut scores {
+                *s /= total;
+            }
+        }
+        scores
+    }
+
+    /// Hard classification: argmax of the class scores.
+    pub fn predict_class(&self, x: &[f64]) -> usize {
+        let scores = self.class_scores(x);
+        scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    pub fn num_components(&self) -> usize {
+        self.model.num_components()
+    }
+}
+
+/// Convenience constructor for the fast variant.
+///
+/// `feature_stds` are the per-feature standard deviations; class one-hot
+/// dimensions get a fixed 0.5 std estimate (a Bernoulli's upper bound —
+/// §2.2 allows estimates).
+pub fn supervised_figmn(
+    cfg_for_features: GmmConfig,
+    feature_stds: &[f64],
+    n_classes: usize,
+) -> SupervisedGmm<Figmn> {
+    let joint = joint_config(&cfg_for_features, feature_stds.len(), n_classes);
+    let stds = joint_stds(feature_stds, n_classes);
+    SupervisedGmm::from_model(Figmn::new(joint, &stds), feature_stds.len(), n_classes)
+}
+
+/// Convenience constructor for the covariance baseline.
+pub fn supervised_igmn(
+    cfg_for_features: GmmConfig,
+    feature_stds: &[f64],
+    n_classes: usize,
+) -> SupervisedGmm<Igmn> {
+    let joint = joint_config(&cfg_for_features, feature_stds.len(), n_classes);
+    let stds = joint_stds(feature_stds, n_classes);
+    SupervisedGmm::from_model(Igmn::new(joint, &stds), feature_stds.len(), n_classes)
+}
+
+fn joint_config(cfg: &GmmConfig, n_features: usize, n_classes: usize) -> GmmConfig {
+    let mut joint = GmmConfig::new(n_features + n_classes)
+        .with_delta(cfg.delta)
+        .with_beta(cfg.beta)
+        .with_max_components(cfg.max_components);
+    if cfg.prune {
+        joint = joint.with_pruning(cfg.v_min, cfg.sp_min);
+    } else {
+        joint = joint.without_pruning();
+    }
+    joint
+}
+
+fn joint_stds(feature_stds: &[f64], n_classes: usize) -> Vec<f64> {
+    let mut stds = feature_stds.to_vec();
+    stds.extend(std::iter::repeat(0.5).take(n_classes));
+    stds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gaussian_blobs(n: usize, seed: u64) -> Vec<(Vec<f64>, usize)> {
+        let mut rng = Pcg64::seed(seed);
+        let centers = [[0.0, 0.0], [6.0, 6.0], [0.0, 6.0]];
+        (0..n)
+            .map(|i| {
+                let c = i % 3;
+                let x = vec![
+                    centers[c][0] + rng.normal() * 0.7,
+                    centers[c][1] + rng.normal() * 0.7,
+                ];
+                (x, c)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn learns_three_blobs() {
+        let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.05).without_pruning();
+        let mut clf = supervised_figmn(cfg, &[3.0, 3.0], 3);
+        for (x, y) in gaussian_blobs(300, 1) {
+            clf.train_one(&x, y);
+        }
+        let mut correct = 0;
+        let test = gaussian_blobs(90, 2);
+        for (x, y) in &test {
+            if clf.predict_class(x) == *y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.95, "accuracy {acc}");
+    }
+
+    #[test]
+    fn scores_are_distribution() {
+        let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.05).without_pruning();
+        let mut clf = supervised_figmn(cfg, &[3.0, 3.0], 3);
+        for (x, y) in gaussian_blobs(120, 3) {
+            clf.train_one(&x, y);
+        }
+        let s = clf.class_scores(&[0.1, 0.2]);
+        assert_eq!(s.len(), 3);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn igmn_and_figmn_wrappers_agree() {
+        let cfg = GmmConfig::new(2).with_delta(0.8).with_beta(0.02).without_pruning();
+        let mut a = supervised_figmn(cfg.clone(), &[3.0, 3.0], 3);
+        let mut b = supervised_igmn(cfg, &[3.0, 3.0], 3);
+        for (x, y) in gaussian_blobs(150, 4) {
+            a.train_one(&x, y);
+            b.train_one(&x, y);
+        }
+        assert_eq!(a.num_components(), b.num_components());
+        for (x, _) in gaussian_blobs(30, 5) {
+            assert_eq!(a.predict_class(&x), b.predict_class(&x));
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal JSON substrate.
+//!
+//! `serde`/`serde_json` are not in the offline vendor set; the coordinator
+//! protocol, model checkpoints, and the artifact manifest all speak JSON,
+//! so a small but complete implementation lives here: a [`Json`] value
+//! tree, a recursive-descent parser with location-carrying errors, and a
+//! compact writer. Covers the full JSON grammar (RFC 8259) except for
+//! `\u` surrogate pairs outside the BMP being passed through unpaired.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, JsonError};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects use a `BTreeMap` so serialization is
+/// deterministic (stable checkpoint diffs, reproducible protocol traces).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Build an object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Build an array of numbers from a slice.
+    pub fn num_array(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|n| if n >= 0.0 && n.fract() == 0.0 { Some(n as usize) } else { None })
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `None` for non-objects or missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    /// Decode an array of numbers into a `Vec<f64>`.
+    pub fn to_f64_vec(&self) -> Option<Vec<f64>> {
+        let arr = self.as_array()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()?);
+        }
+        Some(out)
+    }
+
+    /// Serialize compactly (no whitespace).
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        write::write_value(self, &mut s);
+        s
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string_compact())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_nested() {
+        let v = Json::obj(vec![
+            ("name", "figmn".into()),
+            ("dims", Json::num_array(&[1.0, 2.5, -3.0])),
+            ("nested", Json::obj(vec![("ok", true.into()), ("n", Json::Null)])),
+        ]);
+        let s = v.to_string_compact();
+        let back = parse(&s).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": [1, 2], "b": "x", "c": 3.5, "d": false}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().to_f64_vec().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(v.get("b").unwrap().as_str().unwrap(), "x");
+        assert_eq!(v.get("c").unwrap().as_f64().unwrap(), 3.5);
+        assert_eq!(v.get("d").unwrap().as_bool().unwrap(), false);
+        assert!(v.get("missing").is_none());
+        assert_eq!(v.get("c").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn deterministic_key_order() {
+        let a = parse(r#"{"z": 1, "a": 2}"#).unwrap();
+        assert_eq!(a.to_string_compact(), r#"{"a":2,"z":1}"#);
+    }
+}

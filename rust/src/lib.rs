@@ -1,0 +1,67 @@
+//! # figmn — A Fast Incremental Gaussian Mixture Model
+//!
+//! Production reproduction of Pinto & Engel, *"A Fast Incremental Gaussian
+//! Mixture Model"*, PLOS ONE 2015 (DOI 10.1371/journal.pone.0139931).
+//!
+//! The paper reformulates the Incremental Gaussian Mixture Network (IGMN)
+//! to work directly on **precision matrices** via Sherman–Morrison rank-one
+//! updates (and on determinants via the Matrix Determinant Lemma), cutting
+//! the learning complexity from `O(NKD³)` to `O(NKD²)` while producing the
+//! *same* model as the covariance-based original.
+//!
+//! ## Crate layout
+//!
+//! - [`linalg`] — dense linear algebra substrate (no external BLAS).
+//! - [`stats`] — special functions (χ² quantile, lgamma), Student-t,
+//!   paired t-tests, descriptive statistics.
+//! - [`rng`] — deterministic PCG-based random numbers and samplers.
+//! - [`json`] — minimal JSON substrate (protocol, checkpoints, manifest).
+//! - [`gmm`] — the paper's algorithms: [`gmm::Igmn`] (covariance baseline,
+//!   `O(D³)`) and [`gmm::Figmn`] (precision-matrix fast version, `O(D²)`).
+//! - [`data`] — dataset substrate: synthetic generators matching the
+//!   paper's Table 1, CSV/ARFF parsing, normalization, record streams.
+//! - [`baselines`] — Table 4 comparators: dropout MLP, 1-NN, Gaussian
+//!   naive Bayes, linear SVM (Pegasos).
+//! - [`eval`] — 2-fold cross-validation, AUC, timing, significance marks.
+//! - [`runtime`] — PJRT/XLA runtime loading the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text; Python is never on the request
+//!   path).
+//! - [`coordinator`] — the L3 streaming orchestrator: routing, batching,
+//!   model workers, backpressure, checkpoints, TCP protocol.
+//! - [`bench_support`] — the in-repo benchmark harness (criterion is not
+//!   available in the offline vendor set).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture};
+//!
+//! // 2-D stream; pass the per-dimension dataset std for σ_ini = δ·std(x).
+//! let cfg = GmmConfig::new(2).with_delta(0.1).with_beta(0.1);
+//! let mut model = Figmn::new(cfg, &[1.0, 1.0]);
+//! for p in [[0.0_f64, 0.0], [0.1, 0.1], [5.0, 5.0], [5.1, 4.9]] {
+//!     model.learn(&p);
+//! }
+//! assert!(model.num_components() >= 2);
+//! // Predict the 2nd element from the 1st (autoassociative inference).
+//! let pred = model.predict(&[5.0], &[0], &[1]);
+//! assert!((pred[0] - 5.0).abs() < 1.0);
+//! ```
+
+pub mod baselines;
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gmm;
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod testutil;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,459 @@
+//! Row-major dense `f64` matrix.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// A dense, row-major, heap-allocated `f64` matrix.
+///
+/// This is the workhorse type for the GMM substrate. It intentionally keeps
+/// the API small and explicit; the hot-path routines live in
+/// [`crate::linalg::rank_one`] and operate on `&mut Matrix` in place.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity of size `n × n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from the given entries.
+    pub fn diag(entries: &[f64]) -> Self {
+        let n = entries.len();
+        let mut m = Matrix::zeros(n, n);
+        for (i, &v) in entries.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// Scaled identity `s·I`.
+    pub fn scaled_identity(n: usize, s: f64) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = s;
+        }
+        m
+    }
+
+    /// Build from a row-major slice. Panics if `data.len() != rows*cols`.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_rows: shape mismatch");
+        Matrix { rows, cols, data: data.to_vec() }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major backing slice.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable row-major backing slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow row `i` mutably.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix–vector product `y = A·x` (allocates `y`).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Matrix–vector product into a caller-provided buffer (no allocation).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec: x length");
+        assert_eq!(y.len(), self.rows, "matvec: y length");
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Quadratic form `xᵀ·A·x` that also writes `w = A·x` into a caller
+    /// buffer — the learn hot path reuses `w` for the fused rank-one
+    /// update (see `rank_one::figmn_fused_update`), saving a second
+    /// O(D²) mat-vec.
+    pub fn quad_form_with(&self, x: &[f64], w: &mut [f64]) -> f64 {
+        assert_eq!(self.rows, self.cols, "quad_form_with: square only");
+        assert_eq!(x.len(), self.cols, "quad_form_with: x length");
+        assert_eq!(w.len(), self.rows, "quad_form_with: w length");
+        let mut total = 0.0;
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            w[i] = acc;
+            total += x[i] * acc;
+        }
+        total
+    }
+
+    /// Quadratic form `xᵀ·A·x` without allocating.
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        assert_eq!(self.rows, self.cols, "quad_form: square only");
+        assert_eq!(x.len(), self.cols, "quad_form: x length");
+        let mut total = 0.0;
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            total += x[i] * acc;
+        }
+        total
+    }
+
+    /// Dense matrix product `A·B` (allocates).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul: inner dims");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// `self += s·B` elementwise.
+    pub fn add_scaled(&mut self, other: &Matrix, s: f64) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Scale every entry in place.
+    pub fn scale_in_place(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Extract the sub-matrix with the given row and column index sets.
+    pub fn submatrix(&self, row_idx: &[usize], col_idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(row_idx.len(), col_idx.len());
+        for (oi, &i) in row_idx.iter().enumerate() {
+            for (oj, &j) in col_idx.iter().enumerate() {
+                out[(oi, oj)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Gauss–Jordan inverse with partial pivoting. `O(n³)` — this is the
+    /// operation the paper eliminates from the hot path; it remains here
+    /// for the covariance-baseline IGMN and for test oracles.
+    ///
+    /// Returns `None` if the matrix is numerically singular.
+    pub fn inverse(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "inverse: square only");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            // Partial pivot.
+            let mut piv = col;
+            let mut best = a[(col, col)].abs();
+            for r in col + 1..n {
+                let v = a[(r, col)].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            if best < 1e-300 {
+                return None;
+            }
+            if piv != col {
+                a.swap_rows(piv, col);
+                inv.swap_rows(piv, col);
+            }
+            let d = a[(col, col)];
+            let dinv = 1.0 / d;
+            for v in a.row_mut(col) {
+                *v *= dinv;
+            }
+            for v in inv.row_mut(col) {
+                *v *= dinv;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[(r, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    let v = a[(col, j)];
+                    a[(r, j)] -= f * v;
+                    let w = inv[(col, j)];
+                    inv[(r, j)] -= f * w;
+                }
+            }
+        }
+        Some(inv)
+    }
+
+    /// Determinant via LU with partial pivoting. `O(n³)`; baseline/oracle
+    /// use only (the fast path tracks determinants incrementally via the
+    /// Matrix Determinant Lemma).
+    pub fn determinant(&self) -> f64 {
+        assert_eq!(self.rows, self.cols, "determinant: square only");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut det = 1.0;
+        for col in 0..n {
+            let mut piv = col;
+            let mut best = a[(col, col)].abs();
+            for r in col + 1..n {
+                let v = a[(r, col)].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            if best < 1e-300 {
+                return 0.0;
+            }
+            if piv != col {
+                a.swap_rows(piv, col);
+                det = -det;
+            }
+            let d = a[(col, col)];
+            det *= d;
+            for r in col + 1..n {
+                let f = a[(r, col)] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                for j in col..n {
+                    let v = a[(col, j)];
+                    a[(r, j)] -= f * v;
+                }
+            }
+        }
+        det
+    }
+
+    fn swap_rows(&mut self, i: usize, j: usize) {
+        if i == j {
+            return;
+        }
+        let cols = self.cols;
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let (a, b) = self.data.split_at_mut(hi * cols);
+        a[lo * cols..(lo + 1) * cols].swap_with_slice(&mut b[..cols]);
+    }
+
+    /// Max absolute elementwise difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Force exact symmetry: `A ← (A + Aᵀ)/2`. The rank-one update
+    /// recurrences are symmetric in exact arithmetic; this keeps float
+    /// drift from accumulating over millions of updates.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in i + 1..self.cols {
+                let m = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = m;
+                self[(j, i)] = m;
+            }
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matvec_is_identity() {
+        let m = Matrix::identity(4);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.matvec(&x), x.to_vec());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        let a = Matrix::from_rows(3, 3, &[4.0, 1.0, 0.5, 1.0, 3.0, 0.2, 0.5, 0.2, 2.0]);
+        let inv = a.inverse().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(3)) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_singular_is_none() {
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(a.inverse().is_none());
+    }
+
+    #[test]
+    fn determinant_known() {
+        let a = Matrix::from_rows(2, 2, &[3.0, 1.0, 1.0, 2.0]);
+        assert!((a.determinant() - 5.0).abs() < 1e-12);
+        let b = Matrix::from_rows(3, 3, &[2.0, 0.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 4.0]);
+        assert!((b.determinant() - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn determinant_matches_inverse_det() {
+        let a = Matrix::from_rows(3, 3, &[4.0, 1.0, 0.5, 1.0, 3.0, 0.2, 0.5, 0.2, 2.0]);
+        let d = a.determinant();
+        let dinv = a.inverse().unwrap().determinant();
+        assert!((d * dinv - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quad_form_matches_matvec() {
+        let a = Matrix::from_rows(2, 2, &[2.0, 0.5, 0.5, 1.0]);
+        let x = [1.0, 3.0];
+        let y = a.matvec(&x);
+        let direct: f64 = x.iter().zip(y.iter()).map(|(a, b)| a * b).sum();
+        assert!((a.quad_form(&x) - direct).abs() < 1e-14);
+    }
+
+    #[test]
+    fn submatrix_extracts() {
+        let a = Matrix::from_rows(3, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        let s = a.submatrix(&[0, 2], &[1]);
+        assert_eq!(s.as_slice(), &[2.0, 8.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn symmetrize_fixes_drift() {
+        let mut a = Matrix::from_rows(2, 2, &[1.0, 2.0 + 1e-13, 2.0, 1.0]);
+        a.symmetrize();
+        assert_eq!(a[(0, 1)], a[(1, 0)]);
+    }
+
+    #[test]
+    fn swap_rows_via_determinant_sign() {
+        // det of permutation of identity is -1
+        let mut a = Matrix::identity(3);
+        a.swap_rows(0, 2);
+        assert!((a.determinant() + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! Dense linear algebra substrate.
+//!
+//! The offline vendor set has no BLAS/LAPACK/ndarray, so the paper's
+//! numerical kernels are built on this module: a row-major [`Matrix`] of
+//! `f64`, vector helpers, Cholesky factorization (used by the covariance
+//! baseline and for validation), explicit inverse/determinant (the
+//! `O(D³)` operations the paper *removes*), and the rank-one update
+//! primitives (the operations the paper *adds*).
+//!
+//! Everything here is deliberately allocation-conscious: the GMM hot path
+//! calls [`rank_one`] routines that write in place and allocate nothing.
+
+mod cholesky;
+mod matrix;
+pub mod rank_one;
+mod vector;
+
+pub use cholesky::Cholesky;
+pub use matrix::Matrix;
+pub use vector::{add, axpy, dot, norm2, outer_into, scale, sub, sub_into};
+
+/// Numerical tolerance used by the test-suite comparisons in this crate.
+pub const TEST_EPS: f64 = 1e-9;

@@ -1,0 +1,390 @@
+//! Rank-one update primitives — the heart of the paper.
+//!
+//! The Fast IGMN replaces every `O(D³)` inversion/determinant with
+//! Sherman–Morrison rank-one updates of the precision matrix `Λ = C⁻¹`
+//! (paper Eqs. 18–21) and Matrix-Determinant-Lemma updates of `|C|`
+//! (Eqs. 23–26). This module implements those recurrences in place with
+//! caller-provided scratch so the hot path allocates nothing.
+//!
+//! One deliberate deviation from the paper's presentation: we track
+//! `log|C|` instead of `|C|`. At the paper's own largest configuration
+//! (CIFAR-10, D = 3072) the raw determinant of `σ²·I` under/overflows
+//! `f64` for any σ ≠ 1, while the recurrences translate verbatim into log
+//! space (products become sums). The equivalence tests compare log-dets.
+
+use super::{dot, Matrix};
+
+/// Symmetric rank-one accumulate: `A += α·u·uᵀ` (full storage).
+#[inline]
+pub fn syr(a: &mut Matrix, alpha: f64, u: &[f64]) {
+    let n = u.len();
+    debug_assert_eq!(a.rows(), n);
+    debug_assert_eq!(a.cols(), n);
+    for i in 0..n {
+        let ui = u[i];
+        if ui == 0.0 {
+            continue;
+        }
+        let row = a.row_mut(i);
+        // `α·(uᵢ·uⱼ)` (not `(α·uᵢ)·uⱼ`): uᵢ·uⱼ rounds identically to
+        // uⱼ·uᵢ, so the update is *exactly* symmetric in floating point —
+        // no drift accumulates over millions of hot-loop updates.
+        for (r, &uj) in row.iter_mut().zip(u.iter()) {
+            *r += alpha * (ui * uj);
+        }
+    }
+}
+
+/// Sherman–Morrison (paper Eq. 18/19): given `A⁻¹`, update it in place to
+/// `(A + α·u·uᵀ)⁻¹` (use `α = -1` for subtraction, Eq. 19).
+///
+/// Returns the scalar `1 + α·uᵀA⁻¹u` (the Matrix-Determinant-Lemma factor,
+/// Eq. 23/24), or `None` (leaving `A⁻¹` untouched) if that factor is ≤ 0,
+/// i.e. the update would destroy positive-definiteness.
+pub fn sherman_morrison(ainv: &mut Matrix, alpha: f64, u: &[f64], scratch: &mut [f64]) -> Option<f64> {
+    let n = u.len();
+    debug_assert_eq!(scratch.len(), n);
+    ainv.matvec_into(u, scratch); // w = A⁻¹u
+    let q = dot(u, scratch); // uᵀA⁻¹u
+    let denom = 1.0 + alpha * q;
+    if denom <= 0.0 || !denom.is_finite() {
+        return None;
+    }
+    // A⁻¹ ← A⁻¹ − (α/denom)·w·wᵀ
+    syr(ainv, -alpha / denom, scratch);
+    Some(denom)
+}
+
+/// Scratch buffers for [`figmn_rank_two_update`]; reuse across calls to
+/// keep the hot loop allocation-free.
+pub struct UpdateScratch {
+    w: Vec<f64>,
+}
+
+impl UpdateScratch {
+    pub fn new(dim: usize) -> Self {
+        UpdateScratch { w: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+}
+
+/// Outcome of one fused FIGMN precision/determinant update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UpdateResult {
+    /// `log|C(t)|` after the rank-two update (Eqs. 25–26 in log space).
+    pub log_det: f64,
+    /// `e*ᵀ·Λ(t-1)·e*` — reused by callers for diagnostics.
+    pub quad_estar: f64,
+}
+
+/// The paper's fused rank-two update (Eqs. 20–21 for `Λ`, 25–26 for the
+/// determinant), performed in place.
+///
+/// Inputs: `lambda` = `Λ(t−1)` (overwritten with `Λ(t)`), `err` = the
+/// mean-error vector whose weighted outer product drives Eq. 16 (the gmm
+/// layer passes the OLD-mean error `e = x − μ(t−1)`, the exact Eq. 11
+/// form — see DESIGN.md §Deviations), `delta_mu` = `ω·e` (Eq. 8),
+/// `omega` = `p(j|x)/sp` (Eq. 7), `log_det` = `log|C(t−1)|`.
+///
+/// Returns `None` (with `lambda` left in an unspecified but finite state
+/// only if the *second* step fails; callers should treat `None` as "reset
+/// this component", which the [`crate::gmm`] layer does) when a
+/// denominator hits zero/negative — mathematically impossible for
+/// `0 < ω < 1` with a PD matrix, but reachable through float underflow at
+/// extreme conditioning.
+pub fn figmn_rank_two_update(
+    lambda: &mut Matrix,
+    err: &[f64],
+    delta_mu: &[f64],
+    omega: f64,
+    log_det: f64,
+    scratch: &mut UpdateScratch,
+) -> Option<UpdateResult> {
+    let d = err.len();
+    debug_assert_eq!(lambda.rows(), d);
+    debug_assert_eq!(delta_mu.len(), d);
+    debug_assert_eq!(scratch.dim(), d);
+    debug_assert!(omega > 0.0 && omega < 1.0, "omega must be in (0,1), got {omega}");
+
+    let one_minus = 1.0 - omega;
+    let w = &mut scratch.w;
+
+    // ---- Step 1 (Eq. 20): Λ̄ = Λ/(1−ω) − [ω/(1−ω)²·Λe*e*ᵀΛ] / (1 + ω/(1−ω)·e*ᵀΛe*)
+    lambda.matvec_into(err, w); // w = Λ(t−1)·e
+    let q = dot(err, w); // eᵀΛe  (≥ 0 for PD Λ)
+    let denom1 = 1.0 + omega / one_minus * q;
+    if denom1 <= 0.0 || !denom1.is_finite() {
+        return None;
+    }
+    // In-place: first scale Λ by 1/(1−ω), then subtract the rank-one term
+    // expressed with the *unscaled* w: coefficient ω/((1−ω)²·denom1).
+    lambda.scale_in_place(1.0 / one_minus);
+    let c1 = omega / (one_minus * one_minus * denom1);
+    syr(lambda, -c1, w);
+
+    // ---- det step 1 (Eq. 25, log space):
+    // log|C̄| = D·log(1−ω) + log|C(t−1)| + log(denom1)
+    let log_det_bar = (d as f64) * one_minus.ln() + log_det + denom1.ln();
+
+    // ---- Step 2 (Eq. 21): Λ = Λ̄ + Λ̄ΔμΔμᵀΛ̄ / (1 − ΔμᵀΛ̄Δμ)
+    lambda.matvec_into(delta_mu, w); // w = Λ̄·Δμ
+    let r = dot(delta_mu, w); // ΔμᵀΛ̄Δμ
+    let denom2 = 1.0 - r;
+    if denom2 <= 0.0 || !denom2.is_finite() {
+        return None;
+    }
+    syr(lambda, 1.0 / denom2, w);
+
+    // ---- det step 2 (Eq. 26, log space): log|C| = log|C̄| + log(1 − r)
+    let new_log_det = log_det_bar + denom2.ln();
+
+    Some(UpdateResult { log_det: new_log_det, quad_estar: q })
+}
+
+/// The fused single-pass form of [`figmn_rank_two_update`] — the perf-
+/// pass optimization (EXPERIMENTS.md §Perf L3-1).
+///
+/// Observation: in the exact Eq. 11 recurrence the two rank-one
+/// directions are **parallel** (`Δμ = ω·e`), so the whole update is a
+/// single rank-one correction:
+///
+/// ```text
+/// C(t) = (1−ω)·C + ω(1−ω)·e·eᵀ
+/// Λ(t) = Λ/(1−ω) − [ω/(1−ω)] / (1 + ω·q) · w·wᵀ,   w = Λe, q = eᵀΛe
+/// log|C(t)| = D·log(1−ω) + log|C| + log(1 + ω·q)
+/// ```
+///
+/// The caller supplies `w` and `q` — which the Mahalanobis distance pass
+/// (Eq. 22) has already computed — so the whole learn step makes exactly
+/// **two** O(D²) sweeps per component (one mat-vec, one fused
+/// scale+GER) instead of six. Algebraically identical to the two-step
+/// form (property-tested below); `1 + ω·q > 0` always holds for PD `Λ`,
+/// so unlike the two-step form there is no failure path beyond
+/// non-finite input.
+pub fn figmn_fused_update(
+    lambda: &mut Matrix,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+) -> Option<UpdateResult> {
+    let d = w.len();
+    debug_assert_eq!(lambda.rows(), d);
+    debug_assert!(omega > 0.0 && omega < 1.0, "omega must be in (0,1), got {omega}");
+    let one_minus = 1.0 - omega;
+    let denom = 1.0 + omega * q;
+    if !(denom > 0.0) || !denom.is_finite() {
+        return None;
+    }
+    let a = 1.0 / one_minus;
+    let beta = -(omega * a) / denom;
+    // Single fused pass: Λ ← a·Λ + β·w·wᵀ  (β·(wᵢ·wⱼ) keeps exact
+    // symmetry, same trick as `syr`).
+    for i in 0..d {
+        let wi = w[i];
+        let row = lambda.row_mut(i);
+        for (r, &wj) in row.iter_mut().zip(w.iter()) {
+            *r = a * *r + beta * (wi * wj);
+        }
+    }
+    let new_log_det = (d as f64) * one_minus.ln() + log_det + denom.ln();
+    Some(UpdateResult { log_det: new_log_det, quad_estar: q })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::TEST_EPS;
+    use crate::rng::Pcg64;
+    use crate::testutil::random_spd;
+
+    #[test]
+    fn syr_known() {
+        let mut a = Matrix::zeros(2, 2);
+        syr(&mut a, 2.0, &[1.0, 3.0]);
+        assert_eq!(a.as_slice(), &[2.0, 6.0, 6.0, 18.0]);
+    }
+
+    #[test]
+    fn sherman_morrison_matches_direct_inverse() {
+        let mut rng = Pcg64::seed(7);
+        for trial in 0..50 {
+            let n = 2 + (trial % 6);
+            let a = random_spd(n, &mut rng);
+            let u: Vec<f64> = (0..n).map(|_| rng.normal() * 0.3).collect();
+            let mut ainv = a.inverse().unwrap();
+            let mut scratch = vec![0.0; n];
+            let factor = sherman_morrison(&mut ainv, 1.0, &u, &mut scratch).unwrap();
+
+            // Direct: (A + u·uᵀ)⁻¹
+            let mut apu = a.clone();
+            syr(&mut apu, 1.0, &u);
+            let direct = apu.inverse().unwrap();
+            assert!(
+                ainv.max_abs_diff(&direct) < 1e-8,
+                "trial {trial}: SM diverged from direct inverse"
+            );
+            // Determinant lemma factor: |A+uuᵀ| = |A|·factor
+            let lhs = apu.determinant();
+            let rhs = a.determinant() * factor;
+            assert!((lhs / rhs - 1.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn sherman_morrison_subtraction_guard() {
+        // Subtracting u·uᵀ with ‖u‖ too large ⇒ denominator ≤ 0 ⇒ None.
+        let mut ainv = Matrix::identity(2);
+        let mut scratch = vec![0.0; 2];
+        let before = ainv.clone();
+        let res = sherman_morrison(&mut ainv, -1.0, &[2.0, 0.0], &mut scratch);
+        assert!(res.is_none());
+        assert_eq!(ainv.max_abs_diff(&before), 0.0, "must leave input untouched");
+    }
+
+    /// Property: the fused rank-two update equals the direct recompute
+    /// (Eqs. 16–17 on C, then invert) for random PD matrices — the
+    /// paper's central algebraic claim.
+    #[test]
+    fn figmn_update_matches_covariance_path() {
+        let mut rng = Pcg64::seed(42);
+        for trial in 0..100 {
+            let n = 2 + (trial % 8);
+            let c = random_spd(n, &mut rng);
+            let omega = 0.05 + 0.9 * rng.uniform();
+            let e_star: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // Δμ must be small enough to keep C(t) PD: Δμ = ω·e with
+            // e ≈ e* scaled, as in the real algorithm.
+            let delta_mu: Vec<f64> = e_star.iter().map(|v| omega * v * 0.5).collect();
+
+            // Covariance path (paper Eqs. 16–17).
+            let mut cbar = c.clone();
+            cbar.scale_in_place(1.0 - omega);
+            syr(&mut cbar, omega, &e_star);
+            let mut ct = cbar.clone();
+            syr(&mut ct, -1.0, &delta_mu);
+            let Some(direct_inv) = ct.inverse() else { continue };
+            let det_ct = ct.determinant();
+            if det_ct <= 0.0 {
+                continue; // degenerate draw; covariance left PD-land
+            }
+
+            // Precision path (Eqs. 20–21, 25–26).
+            let mut lambda = c.inverse().unwrap();
+            let mut scratch = UpdateScratch::new(n);
+            let res = figmn_rank_two_update(
+                &mut lambda,
+                &e_star,
+                &delta_mu,
+                omega,
+                c.determinant().ln(),
+                &mut scratch,
+            )
+            .expect("update must succeed when covariance path stays PD");
+
+            assert!(
+                lambda.max_abs_diff(&direct_inv) < 1e-6,
+                "trial {trial}: precision path diverged (n={n}, ω={omega})"
+            );
+            assert!(
+                (res.log_det - det_ct.ln()).abs() < 1e-8,
+                "trial {trial}: log-det mismatch {} vs {}",
+                res.log_det,
+                det_ct.ln()
+            );
+        }
+    }
+
+    /// Property: update preserves symmetry exactly-ish.
+    #[test]
+    fn figmn_update_preserves_symmetry() {
+        let mut rng = Pcg64::seed(3);
+        let n = 6;
+        let c = random_spd(n, &mut rng);
+        let mut lambda = c.inverse().unwrap();
+        // Gauss–Jordan output is not exactly symmetric; the real algorithm
+        // starts from an exactly-diagonal Λ, so align the test with that.
+        lambda.symmetrize();
+        let mut scratch = UpdateScratch::new(n);
+        let mut log_det = c.determinant().ln();
+        for _ in 0..200 {
+            let e: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let omega = 0.01 + 0.3 * rng.uniform();
+            let dmu: Vec<f64> = e.iter().map(|v| omega * v).collect();
+            let e_star: Vec<f64> = e.iter().zip(dmu.iter()).map(|(a, b)| a - b).collect();
+            if let Some(r) = figmn_rank_two_update(&mut lambda, &e_star, &dmu, omega, log_det, &mut scratch) {
+                log_det = r.log_det;
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    let drift = (lambda[(i, j)] - lambda[(j, i)]).abs();
+                    let mag = lambda[(i, j)].abs().max(1.0);
+                    assert!(drift / mag < 1e-9, "symmetry drift {drift}");
+                }
+            }
+        }
+        // Λ must still be PD-ish: quad form positive for random probes.
+        for _ in 0..10 {
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            assert!(lambda.quad_form(&v) > 0.0);
+        }
+    }
+
+    /// Property: the fused single-pass update equals the two-step
+    /// Sherman–Morrison pair exactly (to fp tolerance) — the perf-pass
+    /// rewrite changes no semantics.
+    #[test]
+    fn fused_equals_two_step() {
+        let mut rng = Pcg64::seed(77);
+        for trial in 0..200 {
+            let n = 2 + (trial % 10);
+            let c = random_spd(n, &mut rng);
+            let mut lam_two = c.inverse().unwrap();
+            lam_two.symmetrize();
+            let mut lam_fused = lam_two.clone();
+            let log_det = c.determinant().ln();
+
+            let e: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let omega = 0.01 + 0.95 * rng.uniform();
+            let dmu: Vec<f64> = e.iter().map(|v| omega * v).collect();
+
+            let mut scratch = UpdateScratch::new(n);
+            let r_two =
+                figmn_rank_two_update(&mut lam_two, &e, &dmu, omega, log_det, &mut scratch)
+                    .expect("two-step must succeed");
+
+            let mut w = vec![0.0; n];
+            lam_fused.matvec_into(&e, &mut w);
+            let q = dot(&e, &w);
+            let r_fused = figmn_fused_update(&mut lam_fused, &w, q, omega, log_det)
+                .expect("fused must succeed");
+
+            let scale = lam_two.as_slice().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            assert!(
+                lam_two.max_abs_diff(&lam_fused) < 1e-9 * scale,
+                "trial {trial}: fused diverged (n={n}, ω={omega})"
+            );
+            assert!(
+                (r_two.log_det - r_fused.log_det).abs() < 1e-9 * (1.0 + r_two.log_det.abs()),
+                "trial {trial}: log-det mismatch {} vs {}",
+                r_two.log_det,
+                r_fused.log_det
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_omega() {
+        // debug_assert guards ω∈(0,1); in release the math still holds for
+        // the denominators to trip. Here just check the guard boundary via
+        // a valid small ω.
+        let mut lambda = Matrix::identity(2);
+        let mut scratch = UpdateScratch::new(2);
+        let r = figmn_rank_two_update(&mut lambda, &[0.1, 0.1], &[0.001, 0.001], 1e-6, 0.0, &mut scratch);
+        assert!(r.is_some());
+        assert!(r.unwrap().log_det.abs() < 1.0 + TEST_EPS);
+    }
+}

@@ -1,0 +1,110 @@
+//! Small allocation-free vector helpers used on the GMM hot path.
+
+use super::Matrix;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Euclidean norm squared.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// `y += s·x` in place.
+#[inline]
+pub fn axpy(s: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += s * xi;
+    }
+}
+
+/// Elementwise `a + b` (allocates).
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+}
+
+/// Elementwise `a - b` (allocates).
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x - y).collect()
+}
+
+/// Elementwise `out = a - b` into a caller buffer.
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x - y;
+    }
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(a: &mut [f64], s: f64) {
+    for v in a {
+        *v *= s;
+    }
+}
+
+/// Outer product `out = u·vᵀ` written into an existing matrix.
+pub fn outer_into(u: &[f64], v: &[f64], out: &mut Matrix) {
+    assert_eq!(out.rows(), u.len());
+    assert_eq!(out.cols(), v.len());
+    for i in 0..u.len() {
+        let ui = u[i];
+        let row = out.row_mut(i);
+        for (r, &vj) in row.iter_mut().zip(v.iter()) {
+            *r = ui * vj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_known() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn sub_into_matches_sub() {
+        let a = [5.0, 7.0];
+        let b = [2.0, 3.0];
+        let mut out = [0.0; 2];
+        sub_into(&a, &b, &mut out);
+        assert_eq!(out.to_vec(), sub(&a, &b));
+    }
+
+    #[test]
+    fn outer_into_known() {
+        let mut m = Matrix::zeros(2, 2);
+        outer_into(&[1.0, 2.0], &[3.0, 4.0], &mut m);
+        assert_eq!(m.as_slice(), &[3.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn norm2_is_self_dot() {
+        assert_eq!(norm2(&[3.0, 4.0]), 25.0);
+    }
+}

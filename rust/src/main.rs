@@ -1,0 +1,241 @@
+//! `figmn` — command-line launcher for the FIGMN streaming framework.
+//!
+//! Subcommands:
+//!   datasets                       print the paper's Table 1 (+ synth status)
+//!   train   <dataset> [opts]       single-pass online training + holdout eval
+//!   serve   [opts]                 start the TCP coordinator
+//!   client  <addr> <line...>       send protocol lines to a server
+//!   artifacts                      list AOT artifacts and smoke-compile them
+//!   version
+//!
+//! (Arg parsing is hand-rolled: the offline vendor set has no `clap` —
+//! DESIGN.md §5.)
+
+use figmn::coordinator::{serve, CheckpointStore, Metrics, Registry, ServerConfig};
+use figmn::data::synth::{self, TABLE1};
+use figmn::data::Dataset;
+use figmn::eval::{multiclass_auc, Stopwatch};
+use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
+use figmn::gmm::GmmConfig;
+use figmn::rng::Pcg64;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("datasets") => cmd_datasets(),
+        Some("train") => cmd_train(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("client") => cmd_client(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        Some("version") => {
+            println!("figmn {}", figmn::version());
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: figmn <datasets|train|serve|client|artifacts|version>\n\
+                 \n  figmn train iris --delta 1 --beta 0.001 --algo fast\
+                 \n  figmn serve --addr 127.0.0.1:7464 --checkpoints ckpts/\
+                 \n  figmn client 127.0.0.1:7464 '{{\"op\":\"ping\"}}'"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (positional, flags)
+}
+
+fn cmd_datasets() -> i32 {
+    println!("{:<16} {:>9} {:>10} {:>7}   generator", "dataset", "N", "D", "classes");
+    for s in &TABLE1 {
+        println!(
+            "{:<16} {:>9} {:>10} {:>7}   {:?}",
+            s.name, s.instances, s.attributes, s.classes, s.kind
+        );
+    }
+    println!("\n(synthetic stand-ins with the paper's exact shapes — DESIGN.md §5)");
+    0
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let (pos, flags) = parse_flags(args);
+    let Some(name) = pos.first() else {
+        eprintln!("usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] [--seed N]");
+        return 2;
+    };
+    let Some(spec) = synth::spec(name) else {
+        eprintln!("unknown dataset '{name}' (see `figmn datasets`)");
+        return 2;
+    };
+    let delta: f64 = flags.get("delta").map(|s| s.parse().unwrap()).unwrap_or(0.1);
+    let beta: f64 = flags.get("beta").map(|s| s.parse().unwrap()).unwrap_or(0.05);
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap()).unwrap_or(42);
+    let algo = flags.get("algo").map(String::as_str).unwrap_or("fast");
+
+    let data = synth::generate(spec, seed);
+    let stds = data.feature_stds();
+    let mut rng = Pcg64::seed(seed);
+    let order = rng.permutation(data.len());
+    let split = data.len() * 4 / 5;
+    let (train_idx, test_idx) = order.split_at(split);
+    let train: Dataset = data.subset(train_idx);
+    let test: Dataset = data.subset(test_idx);
+
+    let cfg = GmmConfig::new(1).with_delta(delta).with_beta(beta);
+    let mut sw = Stopwatch::new();
+    let (scores, components): (Vec<Vec<f64>>, usize) = if algo == "orig" {
+        let mut clf = supervised_igmn(cfg, &stds, data.n_classes);
+        sw.time(|| {
+            for (x, &y) in train.features.iter().zip(train.labels.iter()) {
+                clf.train_one(x, y);
+            }
+        });
+        (test.features.iter().map(|x| clf.class_scores(x)).collect(), clf.num_components())
+    } else {
+        let mut clf = supervised_figmn(cfg, &stds, data.n_classes);
+        sw.time(|| {
+            for (x, &y) in train.features.iter().zip(train.labels.iter()) {
+                clf.train_one(x, y);
+            }
+        });
+        (test.features.iter().map(|x| clf.class_scores(x)).collect(), clf.num_components())
+    };
+
+    let auc = multiclass_auc(&scores, &test.labels, data.n_classes);
+    let acc = scores
+        .iter()
+        .zip(test.labels.iter())
+        .filter(|(s, &t)| {
+            s.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0 == t
+        })
+        .count() as f64
+        / test.len() as f64;
+    println!(
+        "{name}: algo={algo} N_train={} D={} → {} components, train {:.3}s, AUC {:.3}, acc {:.3}",
+        train.len(),
+        data.dim(),
+        components,
+        sw.seconds(),
+        auc,
+        acc
+    );
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let (_, flags) = parse_flags(args);
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7464".into());
+    let metrics = Arc::new(Metrics::new());
+    let mut registry = Registry::new(metrics);
+    if let Some(dir) = flags.get("checkpoints") {
+        match CheckpointStore::new(dir) {
+            Ok(store) => registry = registry.with_checkpoints(store),
+            Err(e) => {
+                eprintln!("cannot open checkpoint dir: {e}");
+                return 1;
+            }
+        }
+    }
+    let cfg = ServerConfig { addr, xla_config: flags.get("xla").cloned() };
+    match serve(Arc::new(registry), cfg) {
+        Ok(server) => {
+            println!("figmn coordinator listening on {}", server.local_addr);
+            println!("(send {{\"op\":\"shutdown\"}} to stop)");
+            // Park until the acceptor exits (shutdown op).
+            loop {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                if std::net::TcpStream::connect(server.local_addr).is_err() {
+                    break;
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_client(args: &[String]) -> i32 {
+    use std::io::{BufRead, BufReader, Write};
+    let Some(addr) = args.first() else {
+        eprintln!("usage: figmn client <addr> <json-line> [...]");
+        return 2;
+    };
+    let Ok(stream) = std::net::TcpStream::connect(addr) else {
+        eprintln!("cannot connect to {addr}");
+        return 1;
+    };
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for line in &args[1..] {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut buf = String::new();
+        if reader.read_line(&mut buf).is_err() || buf.is_empty() {
+            eprintln!("connection closed");
+            return 1;
+        }
+        print!("{buf}");
+    }
+    0
+}
+
+fn cmd_artifacts() -> i32 {
+    use figmn::runtime::Runtime;
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts at {dir:?}; run `make artifacts`");
+        return 1;
+    }
+    match Runtime::open(&dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            for a in rt.manifest().artifacts() {
+                println!(
+                    "  {:<12} {:<8} D={:<5} K={:<4} B={:<4} i={:<5} {}",
+                    a.config, format!("{:?}", a.kind), a.dim, a.capacity, a.batch, a.n_known, a.file
+                );
+            }
+            // Smoke-compile the first config's score artifact.
+            if let Some(meta) = rt.manifest().artifacts().first() {
+                let cfgname = meta.config.clone();
+                match rt.score_exec(&cfgname) {
+                    Ok(_) => println!("compile check: OK ({cfgname})"),
+                    Err(e) => {
+                        eprintln!("compile check FAILED: {e}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot open artifacts: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Typed wrappers over the compiled PJRT executables.
+//!
+//! Argument order must match `aot.py` exactly; shapes are validated here
+//! so a mismatched artifact fails loudly at the boundary rather than
+//! deep inside XLA.
+
+use super::manifest::ArtifactMeta;
+use super::state::PackedState;
+use super::{Result, RuntimeError};
+use std::rc::Rc;
+
+fn literal_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Build an N-d f32 literal. (§Perf RT-1 note: a single-copy
+/// `create_from_shape_and_untyped_data` variant was ~25% faster on small
+/// shapes but triggered nondeterministic `shape_util` CHECK failures in
+/// xla_extension 0.5.1 — reverted to the proven vec1+reshape pair.)
+fn literal_nd(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Output of [`ScoreExec::score`].
+#[derive(Debug, Clone)]
+pub struct ScoreOutput {
+    /// (B×K) row-major squared Mahalanobis distances.
+    pub d2: Vec<f32>,
+    /// (B×K) row-major log-likelihoods `ln p(x|j)`.
+    pub log_liks: Vec<f32>,
+    /// (B×K) row-major posteriors `p(j|x)`.
+    pub posteriors: Vec<f32>,
+    pub batch: usize,
+    pub capacity: usize,
+}
+
+/// Batched scoring (Eqs. 2–3/22) on the XLA path.
+///
+/// §Perf RT-2 note: a device-resident-state variant (upload the K·D²
+/// tensors once via `buffer_from_host_literal`, then `execute_b` per
+/// batch) measured 2–3× faster marshalling but segfaults
+/// nondeterministically — the crate's `execute_b` on the CPU client
+/// aliases input buffers into outputs, so dropping results invalidates
+/// the cached state. Reverted; literal-per-call is the safe floor on
+/// this binding.
+pub struct ScoreExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+}
+
+impl ScoreExec {
+    pub(super) fn new(exe: Rc<xla::PjRtLoadedExecutable>, meta: ArtifactMeta) -> Self {
+        ScoreExec { exe, meta }
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Score exactly `meta.batch` points (pad the tail of a short final
+    /// batch with zeros and ignore those rows).
+    pub fn score(&self, xs: &[f32], state: &PackedState) -> Result<ScoreOutput> {
+        let (b, d, k) = (self.meta.batch, self.meta.dim, self.meta.capacity);
+        if xs.len() != b * d {
+            return Err(RuntimeError::Manifest(format!(
+                "score: xs must be {b}×{d} = {} floats, got {}",
+                b * d,
+                xs.len()
+            )));
+        }
+        check_state(state, k, d)?;
+        let args = [
+            literal_nd(xs, &[b as i64, d as i64])?,
+            literal_nd(&state.mus, &[k as i64, d as i64])?,
+            literal_nd(&state.lambdas, &[k as i64, d as i64, d as i64])?,
+            literal_1d(&state.log_dets),
+            literal_1d(&state.sps),
+            literal_1d(&state.mask),
+        ];
+        let out = run(&self.exe, &args)?;
+        if out.len() != 3 {
+            return Err(RuntimeError::Xla(format!("score: expected 3 outputs, got {}", out.len())));
+        }
+        Ok(ScoreOutput {
+            d2: to_f32_vec(&out[0])?,
+            log_liks: to_f32_vec(&out[1])?,
+            posteriors: to_f32_vec(&out[2])?,
+            batch: b,
+            capacity: k,
+        })
+    }
+}
+
+/// Output of [`LearnExec::learn`].
+#[derive(Debug, Clone)]
+pub struct LearnOutput {
+    pub state: PackedState,
+    /// True if an existing component was updated; false if one was created.
+    pub updated: bool,
+}
+
+/// One full Algorithm-1 step (Eqs. 4–12, 20–26) on the XLA path.
+pub struct LearnExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+}
+
+impl LearnExec {
+    pub(super) fn new(exe: Rc<xla::PjRtLoadedExecutable>, meta: ArtifactMeta) -> Self {
+        LearnExec { exe, meta }
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn learn(
+        &self,
+        x: &[f32],
+        state: &PackedState,
+        chi2_thresh: f32,
+        sigma_ini: &[f32],
+    ) -> Result<LearnOutput> {
+        let (d, k) = (self.meta.dim, self.meta.capacity);
+        if x.len() != d || sigma_ini.len() != d {
+            return Err(RuntimeError::Manifest(format!(
+                "learn: x/sigma_ini must have {d} elements"
+            )));
+        }
+        check_state(state, k, d)?;
+        let args = [
+            literal_1d(x),
+            literal_nd(&state.mus, &[k as i64, d as i64])?,
+            literal_nd(&state.lambdas, &[k as i64, d as i64, d as i64])?,
+            literal_1d(&state.log_dets),
+            literal_1d(&state.sps),
+            literal_1d(&state.vs),
+            literal_1d(&state.mask),
+            literal_scalar(chi2_thresh),
+            literal_1d(sigma_ini),
+        ];
+        let out = run(&self.exe, &args)?;
+        if out.len() != 7 {
+            return Err(RuntimeError::Xla(format!("learn: expected 7 outputs, got {}", out.len())));
+        }
+        let new_state = PackedState {
+            capacity: k,
+            dim: d,
+            mus: to_f32_vec(&out[0])?,
+            lambdas: to_f32_vec(&out[1])?,
+            log_dets: to_f32_vec(&out[2])?,
+            sps: to_f32_vec(&out[3])?,
+            vs: to_f32_vec(&out[4])?,
+            mask: to_f32_vec(&out[5])?,
+        };
+        let updated = to_f32_vec(&out[6])?[0] > 0.5;
+        Ok(LearnOutput { state: new_state, updated })
+    }
+}
+
+/// Batched conditional-mean inference (Eqs. 14 + 27) on the XLA path.
+pub struct PredictExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+}
+
+impl PredictExec {
+    pub(super) fn new(exe: Rc<xla::PjRtLoadedExecutable>, meta: ArtifactMeta) -> Self {
+        PredictExec { exe, meta }
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// `xs_known`: (B × n_known) row-major. Returns (B × (D − n_known))
+    /// row-major reconstructions.
+    pub fn predict(&self, xs_known: &[f32], state: &PackedState) -> Result<Vec<f32>> {
+        let (b, d, k, i) = (self.meta.batch, self.meta.dim, self.meta.capacity, self.meta.n_known);
+        if xs_known.len() != b * i {
+            return Err(RuntimeError::Manifest(format!(
+                "predict: xs_known must be {b}×{i} floats, got {}",
+                xs_known.len()
+            )));
+        }
+        check_state(state, k, d)?;
+        let args = [
+            literal_nd(xs_known, &[b as i64, i as i64])?,
+            literal_nd(&state.mus, &[k as i64, d as i64])?,
+            literal_nd(&state.lambdas, &[k as i64, d as i64, d as i64])?,
+            literal_1d(&state.log_dets),
+            literal_1d(&state.sps),
+            literal_1d(&state.mask),
+        ];
+        let out = run(&self.exe, &args)?;
+        to_f32_vec(&out[0])
+    }
+}
+
+fn check_state(state: &PackedState, k: usize, d: usize) -> Result<()> {
+    if state.capacity != k || state.dim != d {
+        return Err(RuntimeError::Manifest(format!(
+            "state shape (K={}, D={}) != artifact (K={k}, D={d})",
+            state.capacity, state.dim
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! Rust runtime.
+
+use super::{Result, RuntimeError};
+use crate::json::{parse, Json};
+use std::path::Path;
+
+/// Entry-point kind of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Score,
+    Learn,
+    Predict,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Option<Self> {
+        match s {
+            "score" => Some(ArtifactKind::Score),
+            "learn" => Some(ArtifactKind::Learn),
+            "predict" => Some(ArtifactKind::Predict),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub config: String,
+    pub kind: ArtifactKind,
+    pub file: String,
+    /// Joint dimensionality D.
+    pub dim: usize,
+    /// Component capacity K.
+    pub capacity: usize,
+    /// Scoring/predict batch size B.
+    pub batch: usize,
+    /// Known-block size for predict (i; targets are D − i).
+    pub n_known: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(RuntimeError::Manifest("unknown manifest format".into()));
+        }
+        let version = doc.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        if version != 1.0 {
+            return Err(RuntimeError::Manifest(format!("unsupported version {version}")));
+        }
+        let arr = doc
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| RuntimeError::Manifest("missing artifacts".into()))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for (i, a) in arr.iter().enumerate() {
+            let get_s = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| RuntimeError::Manifest(format!("artifact {i}: missing {k}")))
+            };
+            let get_n = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| RuntimeError::Manifest(format!("artifact {i}: missing {k}")))
+            };
+            let kind_s = get_s("kind")?;
+            let kind = ArtifactKind::from_str(&kind_s)
+                .ok_or_else(|| RuntimeError::Manifest(format!("artifact {i}: bad kind {kind_s}")))?;
+            artifacts.push(ArtifactMeta {
+                config: get_s("config")?,
+                kind,
+                file: get_s("file")?,
+                dim: get_n("dim")?,
+                capacity: get_n("capacity")?,
+                batch: get_n("batch")?,
+                n_known: get_n("n_known")?,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    pub fn find(&self, config: &str, kind: ArtifactKind) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.config == config && a.kind == kind)
+    }
+
+    /// Distinct config names, in manifest order.
+    pub fn configs(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for a in &self.artifacts {
+            if !out.contains(&a.config.as_str()) {
+                out.push(&a.config);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "version": 1,
+      "artifacts": [
+        {"config": "q", "kind": "score", "file": "q.score.hlo.txt",
+         "dim": 6, "capacity": 8, "batch": 16, "n_known": 4},
+        {"config": "q", "kind": "learn", "file": "q.learn.hlo.txt",
+         "dim": 6, "capacity": 8, "batch": 16, "n_known": 4}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts().len(), 2);
+        let a = m.find("q", ArtifactKind::Learn).unwrap();
+        assert_eq!(a.dim, 6);
+        assert_eq!(a.capacity, 8);
+        assert!(m.find("q", ArtifactKind::Predict).is_none());
+        assert_eq!(m.configs(), vec!["q"]);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"format":"hlo-text","version":99,"artifacts":[]}"#).is_err());
+        assert!(Manifest::parse(
+            r#"{"format":"hlo-text","version":1,"artifacts":[{"kind":"bogus"}]}"#
+        )
+        .is_err());
+    }
+}

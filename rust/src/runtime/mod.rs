@@ -1,0 +1,166 @@
+//! PJRT/XLA runtime — loads and executes the AOT artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`). Python never runs here:
+//! the interchange is HLO **text** (see aot.py's module docstring for
+//! why), compiled once per process by the PJRT CPU client and cached.
+//!
+//! Threading note: the `xla` crate's `PjRtClient` is `Rc`-based (neither
+//! `Send` nor `Sync`), so a [`Runtime`] is confined to the thread that
+//! created it. The coordinator gives each worker thread its own runtime.
+
+mod exec;
+mod manifest;
+mod state;
+
+pub use exec::{LearnExec, LearnOutput, PredictExec, ScoreExec, ScoreOutput};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+pub use state::PackedState;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Errors from artifact loading/execution.
+#[derive(Debug)]
+pub enum RuntimeError {
+    Io(std::io::Error),
+    Manifest(String),
+    Xla(String),
+    MissingArtifact { config: String, kind: ArtifactKind },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+            RuntimeError::Manifest(m) => write!(f, "manifest: {m}"),
+            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+            RuntimeError::MissingArtifact { config, kind } => {
+                write!(f, "no '{kind:?}' artifact for config '{config}' (run `make artifacts`)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// A PJRT CPU client plus a compile-once cache over the artifact set.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, ArtifactKind), Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The default artifact directory: `$FIGMN_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FIGMN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load_executable(
+        &self,
+        config: &str,
+        kind: ArtifactKind,
+    ) -> Result<(Rc<xla::PjRtLoadedExecutable>, ArtifactMeta)> {
+        let meta = self
+            .manifest
+            .find(config, kind)
+            .ok_or_else(|| RuntimeError::MissingArtifact { config: config.to_string(), kind })?
+            .clone();
+        let key = (config.to_string(), kind);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok((exe.clone(), meta));
+        }
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok((exe, meta))
+    }
+
+    /// Typed scoring entry point for a shape config.
+    pub fn score_exec(&self, config: &str) -> Result<ScoreExec> {
+        let (exe, meta) = self.load_executable(config, ArtifactKind::Score)?;
+        Ok(ScoreExec::new(exe, meta))
+    }
+
+    /// Typed learn-step entry point for a shape config.
+    pub fn learn_exec(&self, config: &str) -> Result<LearnExec> {
+        let (exe, meta) = self.load_executable(config, ArtifactKind::Learn)?;
+        Ok(LearnExec::new(exe, meta))
+    }
+
+    /// Typed conditional-inference entry point for a shape config.
+    pub fn predict_exec(&self, config: &str) -> Result<PredictExec> {
+        let (exe, meta) = self.load_executable(config, ArtifactKind::Predict)?;
+        Ok(PredictExec::new(exe, meta))
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn artifacts_available() -> bool {
+    Runtime::default_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_runtime_and_list() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        assert!(rt.manifest().artifacts().len() >= 4);
+        assert!(rt.manifest().find("quickstart", ArtifactKind::Learn).is_some());
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        if !artifacts_available() {
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let err = rt.score_exec("no-such-config").err().expect("must fail");
+        assert!(matches!(err, RuntimeError::MissingArtifact { .. }));
+    }
+}

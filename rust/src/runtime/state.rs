@@ -1,0 +1,149 @@
+//! Padded f32 state — the wire format between the Rust side and the XLA
+//! artifacts (fixed capacity K, activity mask as 0.0/1.0 f32; see
+//! aot.py's boundary note).
+
+use crate::gmm::{Figmn, GmmConfig, IncrementalMixture};
+
+/// The mixture state, padded to capacity and flattened for PJRT literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedState {
+    pub capacity: usize,
+    pub dim: usize,
+    /// (K·D) row-major.
+    pub mus: Vec<f32>,
+    /// (K·D·D) row-major.
+    pub lambdas: Vec<f32>,
+    /// (K,)
+    pub log_dets: Vec<f32>,
+    /// (K,)
+    pub sps: Vec<f32>,
+    /// (K,)
+    pub vs: Vec<f32>,
+    /// (K,) 0.0 / 1.0
+    pub mask: Vec<f32>,
+}
+
+impl PackedState {
+    /// Fresh, all-inactive state.
+    pub fn empty(capacity: usize, dim: usize) -> Self {
+        PackedState {
+            capacity,
+            dim,
+            mus: vec![0.0; capacity * dim],
+            lambdas: vec![0.0; capacity * dim * dim],
+            log_dets: vec![0.0; capacity],
+            sps: vec![0.0; capacity],
+            vs: vec![0.0; capacity],
+            mask: vec![0.0; capacity],
+        }
+    }
+
+    /// Number of active components.
+    pub fn active(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.5).count()
+    }
+
+    /// Pack a native [`Figmn`] into the wire format (f64 → f32).
+    /// Panics if the model has more components than `capacity`.
+    pub fn from_figmn(model: &Figmn, capacity: usize) -> Self {
+        let dim = model.dim();
+        let k = model.num_components();
+        assert!(k <= capacity, "model has {k} components > capacity {capacity}");
+        let mut s = PackedState::empty(capacity, dim);
+        for j in 0..k {
+            let mean = model.component_mean(j);
+            for (i, &v) in mean.iter().enumerate() {
+                s.mus[j * dim + i] = v as f32;
+            }
+            let lam = model.component_lambda(j);
+            for (i, &v) in lam.as_slice().iter().enumerate() {
+                s.lambdas[j * dim * dim + i] = v as f32;
+            }
+            s.log_dets[j] = model.component_log_det(j) as f32;
+            let (sp, v) = model.component_stats(j);
+            s.sps[j] = sp as f32;
+            s.vs[j] = v as f32;
+            s.mask[j] = 1.0;
+        }
+        s
+    }
+
+    /// Unpack into a native [`Figmn`] (f32 → f64), e.g. after running
+    /// learn steps on the XLA path. `cfg`/`stds` must describe the same
+    /// joint space the state was built for.
+    pub fn to_figmn(&self, cfg: GmmConfig, stds: &[f64], points: u64) -> Figmn {
+        use crate::linalg::Matrix;
+        let mut model = Figmn::new(cfg, stds);
+        let d = self.dim;
+        {
+            let comps = model.components_mut();
+            for j in 0..self.capacity {
+                if self.mask[j] < 0.5 {
+                    continue;
+                }
+                let mean: Vec<f64> =
+                    self.mus[j * d..(j + 1) * d].iter().map(|&v| v as f64).collect();
+                let flat: Vec<f64> = self.lambdas[j * d * d..(j + 1) * d * d]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect();
+                comps.push(crate::gmm::new_precision_component(
+                    mean,
+                    Matrix::from_vec(d, d, flat),
+                    self.log_dets[j] as f64,
+                    self.sps[j] as f64,
+                    self.vs[j] as u64,
+                ));
+            }
+        }
+        let _ = points; // points counter is advisory; Figmn tracks its own
+        model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::{Figmn, GmmConfig, IncrementalMixture};
+    use crate::rng::Pcg64;
+
+    fn trained() -> Figmn {
+        let cfg = GmmConfig::new(3).with_delta(0.5).with_beta(0.1);
+        let mut m = Figmn::new(cfg, &[2.0; 3]);
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..100 {
+            let c = if rng.uniform() < 0.5 { 0.0 } else { 6.0 };
+            let x: Vec<f64> = (0..3).map(|_| c + rng.normal()).collect();
+            m.learn(&x);
+        }
+        m
+    }
+
+    #[test]
+    fn pack_round_trip() {
+        let m = trained();
+        let k = m.num_components();
+        let packed = PackedState::from_figmn(&m, 8);
+        assert_eq!(packed.active(), k);
+        let cfg = GmmConfig::new(3).with_delta(0.5).with_beta(0.1);
+        let back = packed.to_figmn(cfg, &[2.0; 3], 100);
+        assert_eq!(back.num_components(), k);
+        // f32 round-trip: posteriors agree to f32 precision.
+        let mut rng = Pcg64::seed(2);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+            let a = m.posteriors(&x);
+            let b = back.posteriors(&x);
+            for (u, v) in a.iter().zip(b.iter()) {
+                assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn capacity_overflow_panics() {
+        let m = trained();
+        PackedState::from_figmn(&m, 1.min(m.num_components() - 1));
+    }
+}

@@ -1,0 +1,188 @@
+//! Descriptive statistics: means, standard deviations, and the streaming
+//! Welford accumulator used for dataset statistics and bench reporting.
+
+/// Arithmetic mean (0 for an empty slice).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1 denominator; 0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() as f64 - 1.0);
+    var.sqrt()
+}
+
+/// Per-column standard deviations of a row-major data matrix — used for
+/// the paper's `σ_ini = δ·std(x)` initialization (Eq. 13).
+///
+/// Uses the *population* (n denominator) convention, matching the
+/// streaming estimate an online learner would form; columns with zero
+/// spread get std 1.0 so `σ_ini` stays positive (the paper's "estimate is
+/// fine" escape hatch, §2.2).
+pub fn column_stds(rows: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!rows.is_empty(), "column_stds: empty dataset");
+    let d = rows[0].len();
+    let n = rows.len() as f64;
+    let mut means = vec![0.0; d];
+    for r in rows {
+        for (m, v) in means.iter_mut().zip(r.iter()) {
+            *m += v;
+        }
+    }
+    for m in &mut means {
+        *m /= n;
+    }
+    let mut vars = vec![0.0; d];
+    for r in rows {
+        for j in 0..d {
+            let e = r[j] - means[j];
+            vars[j] += e * e;
+        }
+    }
+    vars.iter()
+        .map(|v| {
+            let s = (v / n).sqrt();
+            if s > 0.0 {
+                s
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+/// Welford's online mean/variance — numerically stable single-pass
+/// accumulator, used by the coordinator's metrics and stream statistics.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n−1).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n as f64 - 1.0)
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_rel;
+
+    #[test]
+    fn mean_std_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_rel(mean(&xs), 5.0, 1e-15);
+        assert_rel(std_dev(&xs), 2.13809, 1e-5);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.5, -0.3, 2.2, 8.1, 0.0, -4.4];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_rel(w.mean(), mean(&xs), 1e-14);
+        assert_rel(w.std_dev(), std_dev(&xs), 1e-12);
+        assert_eq!(w.min(), -4.4);
+        assert_eq!(w.max(), 8.1);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin() * 3.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+        }
+        a.merge(&b);
+        assert_rel(a.mean(), all.mean(), 1e-12);
+        assert_rel(a.variance(), all.variance(), 1e-12);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn column_stds_constant_column_gets_one() {
+        let rows = vec![vec![1.0, 5.0], vec![1.0, 7.0], vec![1.0, 9.0]];
+        let s = column_stds(&rows);
+        assert_eq!(s[0], 1.0);
+        assert!(s[1] > 1.0);
+    }
+}

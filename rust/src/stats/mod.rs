@@ -1,0 +1,17 @@
+//! Statistical substrate.
+//!
+//! The IGMN update criterion needs the χ² quantile `χ²_{D,1−β}` (paper
+//! §2.1); the evaluation methodology needs paired t-tests at p = 0.05
+//! (Tables 2–4) and descriptive statistics. No statistics crate is in the
+//! offline vendor set, so the special functions are implemented here:
+//! Lanczos log-gamma, regularized incomplete gamma (series + continued
+//! fraction), the χ² quantile via bracketed Newton, and the Student-t CDF
+//! via the regularized incomplete beta function.
+
+mod descriptive;
+mod gamma;
+mod student;
+
+pub use descriptive::{column_stds, mean, std_dev, Welford};
+pub use gamma::{chi2_cdf, chi2_quantile, ln_gamma, reg_gamma_lower, reg_gamma_upper};
+pub use student::{paired_t_test, student_t_cdf, PairedTResult};

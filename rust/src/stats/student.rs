@@ -1,0 +1,202 @@
+//! Student-t distribution and the paired t-test used for the paper's
+//! significance marks (`○`/`●` in Tables 2–4, p = 0.05).
+
+use super::gamma::ln_gamma;
+
+/// Regularized incomplete beta function `I_x(a, b)` via the Lentz
+/// continued fraction (double precision).
+pub fn reg_inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && b > 0.0, "reg_inc_beta domain");
+    assert!((0.0..=1.0).contains(&x), "reg_inc_beta: x in [0,1]");
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    // Use the symmetry that keeps the continued fraction convergent.
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - ln_front.exp() * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..300 {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // Even step.
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // Odd step.
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    h
+}
+
+/// Student-t CDF with `nu` degrees of freedom.
+pub fn student_t_cdf(nu: f64, t: f64) -> f64 {
+    assert!(nu > 0.0);
+    let x = nu / (nu + t * t);
+    let p = 0.5 * reg_inc_beta(0.5 * nu, 0.5, x);
+    if t >= 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Result of a two-sided paired t-test.
+#[derive(Debug, Clone, Copy)]
+pub struct PairedTResult {
+    pub t_stat: f64,
+    pub dof: f64,
+    /// Two-sided p-value.
+    pub p_value: f64,
+    /// Mean of the differences `a − b`.
+    pub mean_diff: f64,
+}
+
+impl PairedTResult {
+    /// Significance mark matching the paper's table convention at the
+    /// given α: `'●'` = significant decrease (b < a), `'○'` = significant
+    /// increase (b > a), `' '` otherwise.
+    pub fn mark(&self, alpha: f64) -> char {
+        if self.p_value >= alpha || !self.p_value.is_finite() {
+            ' '
+        } else if self.mean_diff > 0.0 {
+            '●' // second sample significantly smaller
+        } else {
+            '○'
+        }
+    }
+}
+
+/// Two-sided paired t-test over paired samples `a` and `b`.
+///
+/// Degenerate inputs (fewer than 2 pairs, or zero variance of the
+/// differences) report `p = 1` when the means agree and `p = 0` when a
+/// constant nonzero difference makes the outcome certain.
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> PairedTResult {
+    assert_eq!(a.len(), b.len(), "paired_t_test: unpaired samples");
+    let n = a.len();
+    if n < 2 {
+        return PairedTResult { t_stat: 0.0, dof: 0.0, p_value: 1.0, mean_diff: 0.0 };
+    }
+    let diffs: Vec<f64> = a.iter().zip(b.iter()).map(|(x, y)| x - y).collect();
+    let mean = diffs.iter().sum::<f64>() / n as f64;
+    let var = diffs.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / (n as f64 - 1.0);
+    let dof = n as f64 - 1.0;
+    if var <= 0.0 {
+        let p = if mean == 0.0 { 1.0 } else { 0.0 };
+        return PairedTResult { t_stat: if mean == 0.0 { 0.0 } else { f64::INFINITY }, dof, p_value: p, mean_diff: mean };
+    }
+    let se = (var / n as f64).sqrt();
+    let t = mean / se;
+    let p = 2.0 * (1.0 - student_t_cdf(dof, t.abs()));
+    PairedTResult { t_stat: t, dof, p_value: p.clamp(0.0, 1.0), mean_diff: mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_rel;
+
+    #[test]
+    fn t_cdf_symmetry() {
+        for &nu in &[1.0, 5.0, 30.0] {
+            for &t in &[0.0, 0.7, 2.1] {
+                assert_rel(student_t_cdf(nu, t) + student_t_cdf(nu, -t), 1.0, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn t_cdf_reference_values() {
+        // R: pt(2.0, 10) = 0.9633060, pt(1.0, 1) = 0.75
+        assert_rel(student_t_cdf(10.0, 2.0), 0.963306, 1e-5);
+        assert_rel(student_t_cdf(1.0, 1.0), 0.75, 1e-10);
+        // Large nu → normal: pt(1.96, 1e6) ≈ 0.975
+        assert!((student_t_cdf(1e6, 1.959964) - 0.975).abs() < 1e-4);
+    }
+
+    #[test]
+    fn inc_beta_complement() {
+        for &(a, b, x) in &[(2.0, 3.0, 0.4), (0.5, 0.5, 0.7), (10.0, 2.0, 0.9)] {
+            assert_rel(reg_inc_beta(a, b, x) + reg_inc_beta(b, a, 1.0 - x), 1.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn paired_t_obvious_difference() {
+        let a = [10.0, 11.0, 10.5, 10.2, 10.8];
+        let b = [1.0, 1.2, 0.9, 1.1, 1.0];
+        let r = paired_t_test(&a, &b);
+        assert!(r.p_value < 0.001);
+        assert_eq!(r.mark(0.05), '●'); // b significantly smaller
+    }
+
+    #[test]
+    fn paired_t_no_difference() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let r = paired_t_test(&a, &a);
+        assert_eq!(r.p_value, 1.0);
+        assert_eq!(r.mark(0.05), ' ');
+    }
+
+    #[test]
+    fn paired_t_reference_value() {
+        // scipy.stats.ttest_rel([1,2,3,4,5],[2,2,3,4,7]) →
+        // t = -1.5, p = 0.2080
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 3.0, 4.0, 7.0];
+        let r = paired_t_test(&a, &b);
+        assert_rel(r.t_stat, -1.5, 1e-10);
+        assert_rel(r.p_value, 0.20800, 1e-4);
+    }
+
+    #[test]
+    fn mark_direction() {
+        let slow = [2.0, 2.1, 2.2, 1.9, 2.0];
+        let fast = [1.0, 1.1, 1.0, 0.9, 1.0];
+        assert_eq!(paired_t_test(&slow, &fast).mark(0.05), '●');
+        assert_eq!(paired_t_test(&fast, &slow).mark(0.05), '○');
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared helpers for the test suite, including a small seeded
+//! property-testing harness (`proptest` is not in the offline vendor set;
+//! the same "many random cases, shrink-free, seed printed on failure"
+//! discipline is implemented here directly).
+
+use crate::linalg::{rank_one::syr, Matrix};
+use crate::rng::Pcg64;
+
+/// Random symmetric positive-definite matrix: `A = Q + n·I` with
+/// `Q = Σ vᵢvᵢᵀ`, guaranteed well-conditioned for tests.
+pub fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+    let mut a = Matrix::scaled_identity(n, 1.0 + rng.uniform());
+    for _ in 0..n {
+        let v: Vec<f64> = (0..n).map(|_| rng.normal() * 0.5).collect();
+        syr(&mut a, 1.0, &v);
+    }
+    a
+}
+
+/// Random vector of standard normals.
+pub fn random_vec(n: usize, rng: &mut Pcg64) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Assert two slices are elementwise close; prints the first offender.
+#[track_caller]
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let diff = (x - y).abs();
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            diff / scale <= tol,
+            "element {i}: {x} vs {y} (rel diff {})",
+            diff / scale
+        );
+    }
+}
+
+/// Relative closeness for scalars.
+#[track_caller]
+pub fn assert_rel(a: f64, b: f64, tol: f64) {
+    let scale = a.abs().max(b.abs()).max(1e-300);
+    assert!((a - b).abs() / scale <= tol, "{a} vs {b} (rel {})", (a - b).abs() / scale);
+}
+
+/// Mini property-test driver: runs `f` for `cases` seeded inputs; on panic
+/// the failing seed is in the panic message via `track_caller` + closure
+/// argument, so failures are reproducible with `check_with_seed`.
+pub fn check(cases: u64, mut f: impl FnMut(&mut Pcg64)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Pcg64::seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed for seed {seed} (case {case}/{cases})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing property case.
+pub fn check_with_seed(seed: u64, mut f: impl FnMut(&mut Pcg64)) {
+    let mut rng = Pcg64::seed(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Cholesky;
+
+    #[test]
+    fn random_spd_is_pd() {
+        check(20, |rng| {
+            let n = 2 + (rng.below(8));
+            let a = random_spd(n, rng);
+            assert!(Cholesky::new(&a).is_some(), "not PD at n={n}");
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0], &[2.0], 1e-6);
+    }
+}

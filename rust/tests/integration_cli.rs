@@ -1,0 +1,70 @@
+//! CLI smoke tests — the `figmn` binary end to end via
+//! `CARGO_BIN_EXE_figmn`.
+
+use std::process::Command;
+
+fn figmn(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_figmn"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn figmn");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn version_prints() {
+    let (stdout, _, ok) = figmn(&["version"]);
+    assert!(ok);
+    assert!(stdout.contains("figmn 0.1.0"));
+}
+
+#[test]
+fn datasets_prints_table1() {
+    let (stdout, _, ok) = figmn(&["datasets"]);
+    assert!(ok);
+    for name in ["breast-cancer", "CIFAR-10", "MNIST", "twospirals", "soybean"] {
+        assert!(stdout.contains(name), "missing {name} in:\n{stdout}");
+    }
+    assert!(stdout.contains("3072"));
+    assert!(stdout.contains("784"));
+}
+
+#[test]
+fn train_runs_both_variants() {
+    let (stdout, stderr, ok) = figmn(&["train", "iris", "--delta", "1", "--beta", "0.001"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("AUC"), "{stdout}");
+    let (stdout2, _, ok2) =
+        figmn(&["train", "iris", "--delta", "1", "--beta", "0.001", "--algo", "orig"]);
+    assert!(ok2);
+    // Both variants report the same AUC (equivalence through the CLI).
+    let auc = |s: &str| s.split("AUC ").nth(1).unwrap()[..5].to_string();
+    assert_eq!(auc(&stdout), auc(&stdout2));
+}
+
+#[test]
+fn unknown_commands_fail_cleanly() {
+    let (_, _, ok) = figmn(&["bogus"]);
+    assert!(!ok);
+    let (_, stderr, ok) = figmn(&["train", "no-such-dataset"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown dataset"));
+}
+
+#[test]
+fn artifacts_lists_when_present() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !manifest.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (stdout, stderr, ok) = figmn(&["artifacts"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("quickstart"));
+    assert!(stdout.contains("compile check: OK"));
+}

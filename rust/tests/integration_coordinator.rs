@@ -1,0 +1,191 @@
+//! Coordinator integration: the full control plane — create, stream,
+//! shard, checkpoint, restore, drop — through the public API.
+
+use figmn::coordinator::protocol::{Request, Response};
+use figmn::coordinator::server::dispatch;
+use figmn::coordinator::{
+    CheckpointStore, Metrics, ModelSpec, Registry, RoutingPolicy,
+};
+use figmn::gmm::{GmmConfig, IncrementalMixture};
+use figmn::rng::Pcg64;
+use std::sync::Arc;
+
+fn blob(rng: &mut Pcg64, c: usize) -> Vec<f64> {
+    let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7]
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("figmn-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn checkpoint_restore_cycle() {
+    let store = CheckpointStore::new(tmpdir("ckpt")).unwrap();
+    let registry = Registry::new(Arc::new(Metrics::new())).with_checkpoints(store.clone());
+    registry
+        .create(
+            ModelSpec::new("m", 2, 3)
+                .with_gmm(GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning())
+                .with_stds(vec![3.0, 3.0]),
+        )
+        .unwrap();
+    let router = registry.router("m").unwrap();
+    let mut rng = Pcg64::seed(1);
+    for i in 0..150 {
+        router.learn(blob(&mut rng, i % 3), i % 3).unwrap();
+    }
+    let paths = registry.checkpoint("m").unwrap();
+    assert_eq!(paths.len(), 1);
+
+    // Restore the shard model directly from disk and verify it predicts
+    // like the live one.
+    let restored = store.load("m", 0).unwrap();
+    assert!(restored.num_components() >= 3);
+    for i in 0..30 {
+        let c = i % 3;
+        let x = blob(&mut rng, c);
+        let live = router.predict(&x).unwrap();
+        // joint = [x, one-hot]; restored model is the raw joint mixture.
+        let recon = restored.predict(&x, &[0, 1], &[2, 3, 4]);
+        let live_best = live.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        let rest_best = recon.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert_eq!(live_best, rest_best, "restored model diverged at {i}");
+    }
+    std::fs::remove_dir_all(store.dir()).unwrap();
+}
+
+#[test]
+fn dispatch_covers_full_protocol_surface() {
+    let registry = Registry::new(Arc::new(Metrics::new()));
+    let xla = None;
+
+    assert_eq!(dispatch(Request::Ping, &registry, &xla), Response::Pong);
+    let create = Request::CreateModel {
+        model: "p".into(),
+        n_features: 2,
+        n_classes: 2,
+        delta: 0.5,
+        beta: 0.05,
+        stds: vec![2.0, 2.0],
+        shards: 2,
+    };
+    assert_eq!(dispatch(create.clone(), &registry, &xla), Response::Ok);
+    // Duplicate create fails.
+    assert!(matches!(dispatch(create, &registry, &xla), Response::Error(_)));
+
+    // Wrong arity / label range rejected.
+    let bad_feats =
+        Request::Learn { model: "p".into(), features: vec![1.0], label: 0 };
+    assert!(matches!(dispatch(bad_feats, &registry, &xla), Response::Error(_)));
+    let bad_label =
+        Request::Learn { model: "p".into(), features: vec![1.0, 2.0], label: 9 };
+    assert!(matches!(dispatch(bad_label, &registry, &xla), Response::Error(_)));
+
+    let mut rng = Pcg64::seed(2);
+    for i in 0..100 {
+        let c = i % 2;
+        let req = Request::Learn {
+            model: "p".into(),
+            features: vec![c as f64 * 6.0 + rng.normal() * 0.5, rng.normal() * 0.5],
+            label: c,
+        };
+        assert_eq!(dispatch(req, &registry, &xla), Response::Ok);
+    }
+    match dispatch(
+        Request::Predict { model: "p".into(), features: vec![6.0, 0.0] },
+        &registry,
+        &xla,
+    ) {
+        Response::Scores { class, scores } => {
+            assert_eq!(class, 1);
+            assert_eq!(scores.len(), 2);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    match dispatch(Request::Stats { model: "p".into() }, &registry, &xla) {
+        Response::Stats(j) => {
+            assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
+            assert_eq!(j.get("learned").unwrap().as_usize(), Some(100));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // Checkpointing disabled → clean error.
+    assert!(matches!(
+        dispatch(Request::Checkpoint { model: "p".into() }, &registry, &xla),
+        Response::Error(_)
+    ));
+    assert_eq!(dispatch(Request::DropModel { model: "p".into() }, &registry, &xla), Response::Ok);
+    assert!(matches!(
+        dispatch(Request::Stats { model: "p".into() }, &registry, &xla),
+        Response::Error(_)
+    ));
+}
+
+#[test]
+fn sharded_ensemble_beats_nothing_and_agrees() {
+    // Broadcast ensemble over 3 shards must classify the blobs correctly
+    // and deterministically.
+    let registry = Registry::new(Arc::new(Metrics::new()));
+    registry
+        .create(
+            ModelSpec::new("e", 2, 3)
+                .with_gmm(GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning())
+                .with_stds(vec![3.0, 3.0])
+                .with_shards(3, RoutingPolicy::Broadcast),
+        )
+        .unwrap();
+    let router = registry.router("e").unwrap();
+    let mut rng = Pcg64::seed(3);
+    for i in 0..300 {
+        router.learn(blob(&mut rng, i % 3), i % 3).unwrap();
+    }
+    let mut correct = 0;
+    for i in 0..60 {
+        let c = i % 3;
+        let scores = router.predict(&blob(&mut rng, c)).unwrap();
+        let best = scores.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        if best == c {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 57, "ensemble accuracy {correct}/60");
+}
+
+#[test]
+fn backpressure_sheds_under_overload() {
+    use figmn::coordinator::worker::{Worker, WorkerConfig};
+    use figmn::coordinator::OverflowPolicy;
+
+    let metrics = Arc::new(Metrics::new());
+    let mut cfg = WorkerConfig::new(
+        2,
+        2,
+        GmmConfig::new(1).with_delta(0.5).with_beta(0.0).without_pruning(),
+        vec![1.0, 1.0],
+    );
+    cfg.queue_capacity = 4;
+    cfg.overflow = OverflowPolicy::DropNewest;
+    let worker = Worker::spawn(cfg, metrics);
+
+    // Flood far faster than the worker drains; some learns must be shed
+    // (Err) rather than ballooning memory.
+    let mut shed = 0;
+    for i in 0..10_000 {
+        if worker.handle.learn(vec![i as f64 * 1e-4, 0.0], 0).is_err() {
+            shed += 1;
+        }
+    }
+    // The stats command itself can be shed while the queue is full —
+    // retry until the worker drains.
+    let stats = loop {
+        match worker.handle.stats() {
+            Ok(s) => break s,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+        }
+    };
+    assert_eq!(stats.learned + shed as u64, 10_000, "nothing lost silently");
+    worker.join();
+}

@@ -1,0 +1,184 @@
+//! Cross-layer integration: the Rust-native f64 FIGMN and the AOT XLA
+//! artifacts (f32, Pallas-kernel-backed) must agree on the same stream —
+//! learn decisions, posteriors, and conditional predictions.
+//!
+//! Requires `make artifacts`; tests skip (with a note) when the artifact
+//! directory is absent so `cargo test` stays green pre-build.
+
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, LearnOutcome};
+use figmn::rng::Pcg64;
+use figmn::runtime::{PackedState, Runtime};
+
+const CONFIG: &str = "blobs3";
+const DIM: usize = 5; // 2 features + 3 one-hot classes
+const CAPACITY: usize = 16;
+const BATCH: usize = 32;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("artifact dir must open"))
+}
+
+/// Well-separated 3-class blobs in 2-D, one-hot encoded into 5-D joints.
+fn joint_stream(n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    let centers = [[0.0, 0.0], [8.0, 8.0], [0.0, 8.0]];
+    (0..n)
+        .map(|i| {
+            let c = i % 3;
+            let mut x = vec![
+                centers[c][0] + rng.normal() * 0.5,
+                centers[c][1] + rng.normal() * 0.5,
+            ];
+            for k in 0..3 {
+                x.push(if k == c { 1.0 } else { 0.0 });
+            }
+            x
+        })
+        .collect()
+}
+
+fn cfg() -> GmmConfig {
+    GmmConfig::new(DIM).with_delta(0.6).with_beta(0.05).without_pruning()
+}
+
+fn stds() -> Vec<f64> {
+    vec![4.0, 4.0, 0.5, 0.5, 0.5]
+}
+
+#[test]
+fn learn_path_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let learn = rt.learn_exec(CONFIG).expect("learn artifact");
+    assert_eq!(learn.meta().dim, DIM);
+    assert_eq!(learn.meta().capacity, CAPACITY);
+
+    let config = cfg();
+    let chi2 = config.chi2_threshold() as f32;
+    let sigma: Vec<f32> = config.sigma_ini(&stds()).iter().map(|&v| v as f32).collect();
+
+    let mut native = Figmn::new(config, &stds());
+    let mut state = PackedState::empty(CAPACITY, DIM);
+
+    for (step, x) in joint_stream(90, 7).iter().enumerate() {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let out = learn.learn(&xf, &state, chi2, &sigma).expect("learn step");
+        let outcome = native.learn(x);
+        assert_eq!(
+            out.updated,
+            outcome == LearnOutcome::Updated,
+            "create/update decision diverged at step {step}"
+        );
+        state = out.state;
+        assert_eq!(state.active(), native.num_components(), "K diverged at step {step}");
+    }
+
+    // Component means agree to f32 tolerance.
+    for j in 0..native.num_components() {
+        let mean = native.component_mean(j);
+        for (i, &v) in mean.iter().enumerate() {
+            let got = state.mus[j * DIM + i] as f64;
+            assert!(
+                (got - v).abs() < 1e-3 * (1.0 + v.abs()),
+                "mean[{j}][{i}]: xla {got} vs native {v}"
+            );
+        }
+        // log-dets agree.
+        let ld = native.component_log_det(j);
+        let got_ld = state.log_dets[j] as f64;
+        assert!((got_ld - ld).abs() < 2e-2 * (1.0 + ld.abs()), "log_det[{j}]: {got_ld} vs {ld}");
+    }
+}
+
+#[test]
+fn score_path_matches_native_posteriors() {
+    let Some(rt) = runtime() else { return };
+    let learn = rt.learn_exec(CONFIG).unwrap();
+    let score = rt.score_exec(CONFIG).unwrap();
+
+    let config = cfg();
+    let chi2 = config.chi2_threshold() as f32;
+    let sigma: Vec<f32> = config.sigma_ini(&stds()).iter().map(|&v| v as f32).collect();
+    let mut native = Figmn::new(config, &stds());
+    let mut state = PackedState::empty(CAPACITY, DIM);
+    for x in joint_stream(60, 11) {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        state = learn.learn(&xf, &state, chi2, &sigma).unwrap().state;
+        native.learn(&x);
+    }
+
+    let queries = joint_stream(BATCH, 13);
+    let mut xs = Vec::with_capacity(BATCH * DIM);
+    for q in &queries {
+        xs.extend(q.iter().map(|&v| v as f32));
+    }
+    let out = score.score(&xs, &state).expect("score");
+    assert_eq!(out.posteriors.len(), BATCH * CAPACITY);
+
+    for (b, q) in queries.iter().enumerate() {
+        let native_post = native.posteriors(q);
+        let row = &out.posteriors[b * CAPACITY..(b + 1) * CAPACITY];
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row {b} not normalized: {sum}");
+        for (j, &np) in native_post.iter().enumerate() {
+            assert!(
+                (row[j] as f64 - np).abs() < 5e-3,
+                "posterior[{b}][{j}]: xla {} vs native {np}",
+                row[j]
+            );
+        }
+        // Masked slots stay zero.
+        for j in native_post.len()..CAPACITY {
+            assert_eq!(row[j], 0.0);
+        }
+    }
+}
+
+#[test]
+fn predict_path_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let learn = rt.learn_exec(CONFIG).unwrap();
+    let predict = rt.predict_exec(CONFIG).unwrap();
+    assert_eq!(predict.meta().n_known, 2);
+
+    let config = cfg();
+    let chi2 = config.chi2_threshold() as f32;
+    let sigma: Vec<f32> = config.sigma_ini(&stds()).iter().map(|&v| v as f32).collect();
+    let mut native = Figmn::new(config, &stds());
+    let mut state = PackedState::empty(CAPACITY, DIM);
+    for x in joint_stream(90, 17) {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        state = learn.learn(&xf, &state, chi2, &sigma).unwrap().state;
+        native.learn(&x);
+    }
+
+    let queries = joint_stream(BATCH, 19);
+    let mut xs_known = Vec::with_capacity(BATCH * 2);
+    for q in &queries {
+        xs_known.push(q[0] as f32);
+        xs_known.push(q[1] as f32);
+    }
+    let recon = predict.predict(&xs_known, &state).expect("predict");
+    assert_eq!(recon.len(), BATCH * 3);
+
+    for (b, q) in queries.iter().enumerate() {
+        let native_recon = native.predict(&q[..2], &[0, 1], &[2, 3, 4]);
+        for (o, &nv) in native_recon.iter().enumerate() {
+            let got = recon[b * 3 + o] as f64;
+            assert!(
+                (got - nv).abs() < 5e-3 * (1.0 + nv.abs()),
+                "recon[{b}][{o}]: xla {got} vs native {nv}"
+            );
+        }
+        // The reconstructed one-hot block should argmax to the true class.
+        let true_class = (0..3).max_by(|&a, &b| q[2 + a].partial_cmp(&q[2 + b]).unwrap()).unwrap();
+        let got_class = (0..3usize)
+            .max_by(|&i, &j| recon[b * 3 + i].partial_cmp(&recon[b * 3 + j]).unwrap())
+            .unwrap();
+        assert_eq!(got_class, true_class, "class mismatch at row {b}");
+    }
+}
