@@ -1,0 +1,162 @@
+//! Component-scaling experiment for the sharded engine: learn
+//! throughput vs K (components) × worker threads at fixed D, exercising
+//! the batch API end to end. This is the empirical check for the
+//! engine's reason to exist — per-point work is `O(KD²)` and
+//! embarrassingly parallel in K — plus a bitwise determinism check
+//! (thread count must never change results).
+//!
+//! Acceptance target (full mode, ≥ 4 cores): ≥ 2× learn throughput at
+//! D = 64, K ≥ 32 with 4 worker threads vs. the single-thread path.
+//!
+//! Run: `cargo bench --bench scaling_components`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench scaling_components`
+//! Writes `BENCH_scaling_components.json`.
+
+use figmn::bench_support::{quick_mode, write_bench_json, TablePrinter};
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture};
+use figmn::json::Json;
+use figmn::rng::Pcg64;
+use std::time::Instant;
+
+const DIM: usize = 64;
+
+/// K well-separated seed points (one component each) plus an update
+/// stream cycling the centers — K stays pinned at `k` via the cap.
+fn build_stream(d: usize, k: usize, n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let mut rng = Pcg64::seed(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * 40.0).collect()).collect();
+    let updates: Vec<Vec<f64>> = (0..n)
+        .map(|i| centers[i % k].iter().map(|&c| c + rng.normal() * 0.5).collect())
+        .collect();
+    (centers, updates)
+}
+
+fn fresh_model(d: usize, k: usize, threads: usize, seeds: &[Vec<f64>]) -> Figmn {
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(k)
+        .without_pruning();
+    let stds = vec![1.0; d];
+    let mut m = Figmn::new(cfg, &stds);
+    if threads > 1 {
+        m.set_engine(Some(EngineConfig::new(threads)));
+    }
+    for s in seeds {
+        m.learn(s);
+    }
+    assert_eq!(m.num_components(), k, "seeding must create exactly K components");
+    m
+}
+
+fn learn_throughput(m: &mut Figmn, updates: &[Vec<f64>]) -> f64 {
+    let t = Instant::now();
+    m.learn_batch(updates);
+    updates.len() as f64 / t.elapsed().as_secs_f64()
+}
+
+fn assert_models_identical(a: &Figmn, b: &Figmn, tag: &str) {
+    assert_eq!(a.num_components(), b.num_components(), "{tag}: K diverged");
+    for j in 0..a.num_components() {
+        assert_eq!(a.component_mean(j), b.component_mean(j), "{tag}: mean[{j}]");
+        assert_eq!(
+            a.component_lambda(j).as_slice(),
+            b.component_lambda(j).as_slice(),
+            "{tag}: lambda[{j}]"
+        );
+        assert!(
+            a.component_log_det(j) == b.component_log_det(j),
+            "{tag}: log_det[{j}]"
+        );
+        assert_eq!(a.component_stats(j), b.component_stats(j), "{tag}: sp/v[{j}]");
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let ks: &[usize] = if quick { &[32] } else { &[8, 32, 128] };
+    let threads: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
+    let n_for = |k: usize| if quick { 300 } else { (200_000 / k).clamp(500, 6000) };
+
+    println!(
+        "scaling_components — learn throughput vs K × threads (D={DIM}, cores={cores}{})",
+        if quick { ", quick mode" } else { "" }
+    );
+    let table = TablePrinter::new(&["K", "threads", "pts/s", "speedup"], &[6, 8, 12, 10]);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best_speedup_k32_t4: f64 = 0.0;
+    for &k in ks {
+        let n = n_for(k);
+        let (seeds, updates) = build_stream(DIM, k, n, 42);
+        let mut serial_rate = 0.0;
+        for &t in threads {
+            let mut model = fresh_model(DIM, k, t, &seeds);
+            let rate = learn_throughput(&mut model, &updates);
+            if t == 1 {
+                serial_rate = rate;
+            }
+            let speedup = rate / serial_rate;
+            if t == 4 && k >= 32 {
+                best_speedup_k32_t4 = best_speedup_k32_t4.max(speedup);
+            }
+            table.row(&[
+                k.to_string(),
+                t.to_string(),
+                format!("{rate:10.0}"),
+                format!("{speedup:7.2}×"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("d", DIM.into()),
+                ("k", k.into()),
+                ("threads", t.into()),
+                ("points", n.into()),
+                ("pts_per_sec", rate.into()),
+                ("speedup_vs_serial", speedup.into()),
+            ]));
+        }
+
+        // Determinism: the same (shortened) stream through serial, 2- and
+        // 4-thread engines must yield bit-identical models.
+        let short = &updates[..updates.len().min(200)];
+        let mut reference = fresh_model(DIM, k, 1, &seeds);
+        reference.learn_batch(short);
+        for t in [2usize, 4] {
+            let mut pooled = fresh_model(DIM, k, t, &seeds);
+            pooled.learn_batch(short);
+            assert_models_identical(&reference, &pooled, &format!("K={k} T={t}"));
+        }
+        println!("  determinism OK at K={k} (threads 1/2/4 bit-identical)");
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", "scaling_components".into()),
+        ("dim", DIM.into()),
+        ("quick", quick.into()),
+        ("cores", cores.into()),
+        ("speedup_d64_k32plus_t4", best_speedup_k32_t4.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("scaling_components", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    if !quick && cores >= 4 {
+        assert!(
+            best_speedup_k32_t4 >= 2.0,
+            "4-thread learn speedup at D=64, K≥32 is {best_speedup_k32_t4:.2}× (< 2×)"
+        );
+        println!(
+            "scaling_components OK — {best_speedup_k32_t4:.2}× with 4 threads at D=64, K≥32"
+        );
+    } else {
+        println!(
+            "scaling_components done (speedup {best_speedup_k32_t4:.2}×; \
+             assertion skipped: quick={quick}, cores={cores})"
+        );
+    }
+}

@@ -4,9 +4,12 @@
 //! O(NKD²) claim (its central contribution).
 //!
 //! Run: `cargo bench --bench scaling_dim`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench scaling_dim`
+//! Writes `BENCH_scaling_dim.json`.
 
-use figmn::bench_support::{fit_power_law, TablePrinter};
+use figmn::bench_support::{fit_power_law, quick_mode, write_bench_json, TablePrinter};
 use figmn::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture};
+use figmn::json::Json;
 use figmn::rng::Pcg64;
 use std::time::Instant;
 
@@ -33,23 +36,33 @@ fn per_point_seconds(dim: usize, n: usize, fast: bool, seed: u64) -> f64 {
 }
 
 fn main() {
+    let quick = quick_mode();
     // Sized so the whole sweep stays in a minutes-scale budget while the
-    // cubic/quadratic split is unambiguous.
-    let dims_igmn = [8usize, 16, 32, 64, 128, 256, 512];
-    let dims_figmn = [8usize, 16, 32, 64, 128, 256, 512, 1024, 2048];
+    // cubic/quadratic split is unambiguous; quick mode shrinks the sweep
+    // to a CI-smoke budget (and skips the exponent assertions — small D
+    // is dominated by constant terms).
+    let (dims_igmn, dims_figmn): (&[usize], &[usize]) = if quick {
+        (&[8, 16, 32, 64], &[8, 16, 32, 64, 128])
+    } else {
+        (&[8, 16, 32, 64, 128, 256, 512], &[8, 16, 32, 64, 128, 256, 512, 1024, 2048])
+    };
 
-    println!("S1 — per-point training cost vs D (K=1, β=0)");
+    println!("S1 — per-point training cost vs D (K=1, β=0){}", if quick { " [quick]" } else { "" });
     let t = TablePrinter::new(&["D", "IGMN s/pt", "FIGMN s/pt", "ratio"], &[6, 14, 14, 10]);
     let mut igmn_pts: Vec<(f64, f64)> = Vec::new();
     let mut figmn_pts: Vec<(f64, f64)> = Vec::new();
-    for &d in &dims_figmn {
-        let n = (200_000 / d).clamp(20, 2000); // keep each cell ~fixed work
+    let mut rows: Vec<Json> = Vec::new();
+    for &d in dims_figmn {
+        let n_cap = if quick { 200 } else { 2000 };
+        let n = (200_000 / d).clamp(20, n_cap); // keep each cell ~fixed work
         let fast = per_point_seconds(d, n, true, 42);
         figmn_pts.push((d as f64, fast));
+        let mut row = vec![("d", Json::from(d)), ("figmn_s_per_pt", fast.into())];
         if dims_igmn.contains(&d) {
-            let n_slow = (60 * 1024 / d.max(1)).clamp(10, 500);
+            let n_slow = (60 * 1024 / d.max(1)).clamp(10, if quick { 100 } else { 500 });
             let slow = per_point_seconds(d, n_slow, false, 42);
             igmn_pts.push((d as f64, slow));
+            row.push(("igmn_s_per_pt", slow.into()));
             t.row(&[
                 d.to_string(),
                 format!("{slow:.3e}"),
@@ -59,6 +72,7 @@ fn main() {
         } else {
             t.row(&[d.to_string(), "-".into(), format!("{fast:.3e}"), "-".into()]);
         }
+        rows.push(Json::obj(row));
     }
 
     // Fit exponents on the asymptotic tail (D ≥ 64, where constant terms
@@ -68,11 +82,28 @@ fn main() {
     };
     let (xi, yi) = tail(&igmn_pts);
     let (xf, yf) = tail(&figmn_pts);
-    let p_igmn = fit_power_law(&xi, &yi);
-    let p_figmn = fit_power_law(&xf, &yf);
+    let p_igmn = if xi.len() >= 2 { fit_power_law(&xi, &yi) } else { f64::NAN };
+    let p_figmn = if xf.len() >= 2 { fit_power_law(&xf, &yf) } else { f64::NAN };
     println!("\nfitted exponents (tail D ≥ 64):");
     println!("  IGMN : time ∝ D^{p_igmn:.2}   (paper claim: 3)");
     println!("  FIGMN: time ∝ D^{p_figmn:.2}   (paper claim: 2)");
+
+    let payload = Json::obj(vec![
+        ("bench", "scaling_dim".into()),
+        ("quick", quick.into()),
+        ("exponent_igmn", p_igmn.into()),
+        ("exponent_figmn", p_figmn.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("scaling_dim", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    if quick {
+        println!("scaling_dim done (quick mode: exponent assertions skipped)");
+        return;
+    }
     assert!(p_igmn > 2.5, "IGMN exponent {p_igmn} not cubic-ish");
     assert!(p_figmn < 2.5, "FIGMN exponent {p_figmn} not quadratic-ish");
     assert!(p_igmn - p_figmn > 0.6, "claimed complexity gap not observed");

@@ -2,6 +2,7 @@
 
 use crate::baselines::Classifier;
 use crate::data::Dataset;
+use crate::engine::EngineConfig;
 use crate::eval::{stratified_kfold, CvTimings, FoldResult, Stopwatch};
 use crate::gmm::supervised::{supervised_figmn, supervised_igmn};
 use crate::gmm::GmmConfig;
@@ -14,12 +15,16 @@ pub enum Variant {
 }
 
 /// Train + test one fold of a (F)IGMN classifier, timing the two phases
-/// separately (the paper's Tables 2/3 protocol).
-pub fn run_gmm_fold(
+/// separately (the paper's Tables 2/3 protocol). Both phases run through
+/// the batch API (`learn_batch` / `predict_batch`), so an attached
+/// engine shards the component work; results are identical to the
+/// serial per-point loop either way.
+pub fn run_gmm_fold_engine(
     train: &Dataset,
     test: &Dataset,
     cfg: &GmmConfig,
     variant: Variant,
+    engine: Option<EngineConfig>,
 ) -> FoldResult {
     let stds = train.feature_stds();
     let mut sw_train = Stopwatch::new();
@@ -27,21 +32,15 @@ pub fn run_gmm_fold(
     let scores: Vec<Vec<f64>> = match variant {
         Variant::Fast => {
             let mut clf = supervised_figmn(cfg.clone(), &stds, train.n_classes);
-            sw_train.time(|| {
-                for (x, &y) in train.features.iter().zip(train.labels.iter()) {
-                    clf.train_one(x, y);
-                }
-            });
-            sw_test.time(|| test.features.iter().map(|x| clf.class_scores(x)).collect())
+            clf.model_mut().set_engine(engine);
+            sw_train.time(|| clf.train_batch(&train.features, &train.labels));
+            sw_test.time(|| clf.class_scores_batch(&test.features))
         }
         Variant::Original => {
             let mut clf = supervised_igmn(cfg.clone(), &stds, train.n_classes);
-            sw_train.time(|| {
-                for (x, &y) in train.features.iter().zip(train.labels.iter()) {
-                    clf.train_one(x, y);
-                }
-            });
-            sw_test.time(|| test.features.iter().map(|x| clf.class_scores(x)).collect())
+            clf.model_mut().set_engine(engine);
+            sw_train.time(|| clf.train_batch(&train.features, &train.labels));
+            sw_test.time(|| clf.class_scores_batch(&test.features))
         }
     };
     FoldResult {
@@ -51,11 +50,35 @@ pub fn run_gmm_fold(
     }
 }
 
+/// [`run_gmm_fold_engine`] without an engine (serial component passes).
+pub fn run_gmm_fold(
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &GmmConfig,
+    variant: Variant,
+) -> FoldResult {
+    run_gmm_fold_engine(train, test, cfg, variant, None)
+}
+
 /// 2-fold CV for a (F)IGMN variant; returns per-fold results.
 pub fn run_gmm_cv(data: &Dataset, cfg: &GmmConfig, variant: Variant, seed: u64) -> Vec<FoldResult> {
+    run_gmm_cv_engine(data, cfg, variant, seed, None)
+}
+
+/// 2-fold CV with an optional component-sharded engine on every fold's
+/// model.
+pub fn run_gmm_cv_engine(
+    data: &Dataset,
+    cfg: &GmmConfig,
+    variant: Variant,
+    seed: u64,
+    engine: Option<EngineConfig>,
+) -> Vec<FoldResult> {
     stratified_kfold(&data.labels, data.n_classes, 2, seed)
         .into_iter()
-        .map(|(tr, te)| run_gmm_fold(&data.subset(&tr), &data.subset(&te), cfg, variant))
+        .map(|(tr, te)| {
+            run_gmm_fold_engine(&data.subset(&tr), &data.subset(&te), cfg, variant, engine)
+        })
         .collect()
 }
 
@@ -152,6 +175,17 @@ mod tests {
                 (fa.auc(data.n_classes) - fb.auc(data.n_classes)).abs() < 1e-9,
                 "paper's Table 4 equality violated"
             );
+        }
+    }
+
+    #[test]
+    fn engine_fold_matches_serial_fold() {
+        let data = synth::generate(synth::spec("ionosphere").unwrap(), 3);
+        let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.0).without_pruning();
+        let a = run_gmm_cv(&data, &cfg, Variant::Fast, 5);
+        let b = run_gmm_cv_engine(&data, &cfg, Variant::Fast, 5, Some(EngineConfig::new(2)));
+        for (fa, fb) in a.iter().zip(b.iter()) {
+            assert_eq!(fa.scores, fb.scores, "engine changed fold scores");
         }
     }
 

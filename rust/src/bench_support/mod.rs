@@ -8,8 +8,24 @@
 
 pub mod gmm_eval;
 
+use crate::json::Json;
 use crate::stats::{mean, paired_t_test, std_dev};
 use std::time::Instant;
+
+/// True when benches should run in CI-smoke "quick mode"
+/// (`FIGMN_BENCH_QUICK=1`): shrunken sweeps, perf assertions skipped.
+pub fn quick_mode() -> bool {
+    std::env::var("FIGMN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Write a bench result document to `BENCH_<name>.json` in the current
+/// directory and return the path. The CI bench-smoke job uploads these
+/// as artifacts, seeding the repo's perf trajectory.
+pub fn write_bench_json(name: &str, payload: &Json) -> std::io::Result<String> {
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, payload.to_string_compact())?;
+    Ok(path)
+}
 
 /// Time `f` once, returning seconds.
 pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
@@ -123,6 +139,23 @@ mod tests {
         assert_eq!(percentile(&mut s, 50.0), 5.0);
         assert_eq!(percentile(&mut s, 100.0), 10.0);
         assert_eq!(percentile(&mut s, 1.0), 1.0);
+    }
+
+    #[test]
+    fn quick_mode_reads_env_value() {
+        // Only asserts the accessor is callable; the env var is global
+        // state, so don't mutate it here.
+        let _ = quick_mode();
+    }
+
+    #[test]
+    fn bench_json_writes_file() {
+        let payload = Json::obj(vec![("ok", true.into())]);
+        let path = write_bench_json("unit_test", &payload).unwrap();
+        assert_eq!(path, "BENCH_unit_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(text, r#"{"ok":true}"#);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use super::metrics::Metrics;
 use super::router::{Router, RoutingPolicy};
 use super::worker::{Worker, WorkerConfig, WorkerStats};
 use super::{CoordError, Result};
+use crate::engine::EngineConfig;
 use crate::gmm::GmmConfig;
 use crate::json::Json;
 use std::collections::HashMap;
@@ -22,6 +23,9 @@ pub struct ModelSpec {
     pub policy: RoutingPolicy,
     /// Optional XLA inference config name (see [`WorkerConfig::with_xla`]).
     pub xla_config: Option<String>,
+    /// Optional component-sharded engine for every shard's model (see
+    /// [`WorkerConfig::with_engine`]).
+    pub engine: Option<EngineConfig>,
 }
 
 impl ModelSpec {
@@ -35,6 +39,7 @@ impl ModelSpec {
             shards: 1,
             policy: RoutingPolicy::RoundRobin,
             xla_config: None,
+            engine: None,
         }
     }
 
@@ -58,6 +63,15 @@ impl ModelSpec {
 
     pub fn with_xla(mut self, config: &str) -> Self {
         self.xla_config = Some(config.to_string());
+        self
+    }
+
+    /// Attach a component-sharded engine to every shard of this model.
+    /// Each shard gets its own pool; `EngineConfig::auto()` (threads=0)
+    /// is resolved at create time as `cores / shards` so a sharded model
+    /// doesn't oversubscribe the machine by shards × cores threads.
+    pub fn with_engine(mut self, engine: EngineConfig) -> Self {
+        self.engine = Some(engine);
         self
     }
 }
@@ -107,6 +121,17 @@ impl Registry {
             );
             if let Some(x) = &spec.xla_config {
                 wc = wc.with_xla(x.clone());
+            }
+            if let Some(mut e) = spec.engine {
+                if e.threads == 0 {
+                    // Divide auto parallelism among the shards (each
+                    // runs its own pool concurrently).
+                    let cores = std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1);
+                    e.threads = (cores / spec.shards.max(1)).max(1);
+                }
+                wc = wc.with_engine(e);
             }
             let w = Worker::spawn(wc, self.metrics.clone());
             handles.push(w.handle.clone());
@@ -258,6 +283,23 @@ mod tests {
         assert!(matches!(reg.router("nope"), Err(CoordError::UnknownModel(_))));
         assert!(reg.stats("nope").is_err());
         assert!(reg.drop_model("nope").is_err());
+    }
+
+    #[test]
+    fn engine_spec_resolves_and_model_serves() {
+        let reg = registry();
+        reg.create(
+            blob_spec("e")
+                .with_shards(2, RoutingPolicy::RoundRobin)
+                .with_engine(EngineConfig::auto()),
+        )
+        .unwrap();
+        let router = reg.router("e").unwrap();
+        for i in 0..30 {
+            router.learn(vec![i as f64, 0.0], i % 3).unwrap();
+        }
+        assert_eq!(router.predict(&[0.0, 0.0]).unwrap().len(), 3);
+        reg.drop_model("e").unwrap();
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::backpressure::{BoundedQueue, OverflowPolicy};
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::{CoordError, Result};
+use crate::engine::EngineConfig;
 use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, SupervisedGmm};
 use crate::json::Json;
 use crate::runtime::{PackedState, Runtime};
@@ -47,6 +48,10 @@ pub struct WorkerConfig {
     /// Use the XLA predict artifact with this config name, if it matches
     /// this worker's shape and `artifacts/manifest.json` exists.
     pub xla_config: Option<String>,
+    /// Component-sharded engine for the shard's model: `None` keeps the
+    /// learn/score passes serial; `Some` splits the K components across
+    /// a fixed thread pool (results are bit-identical either way).
+    pub engine: Option<EngineConfig>,
 }
 
 impl WorkerConfig {
@@ -60,11 +65,18 @@ impl WorkerConfig {
             overflow: OverflowPolicy::Block,
             batcher: BatcherConfig::default(),
             xla_config: None,
+            engine: None,
         }
     }
 
     pub fn with_xla(mut self, config: impl Into<String>) -> Self {
         self.xla_config = Some(config.into());
+        self
+    }
+
+    /// Attach a component-sharded engine to this shard's model.
+    pub fn with_engine(mut self, engine: EngineConfig) -> Self {
+        self.engine = Some(engine);
         self
     }
 }
@@ -214,7 +226,10 @@ fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Ar
     };
     let mut stds = cfg.feature_stds.clone();
     stds.extend(std::iter::repeat(0.5).take(cfg.n_classes));
-    let model = Figmn::new(joint_cfg, &stds);
+    let mut model = Figmn::new(joint_cfg, &stds);
+    if let Some(engine) = cfg.engine {
+        model.set_engine(Some(engine));
+    }
     let mut clf = SupervisedGmm::from_model(model, cfg.n_features, cfg.n_classes);
 
     // Optional XLA inference path — the runtime must be built on this
@@ -484,6 +499,40 @@ mod tests {
             assert!((y - (2.0 * x - 1.0)).abs() < 0.15, "f({x}) = {y}");
         }
         worker.join();
+    }
+
+    #[test]
+    fn engine_backed_worker_matches_serial() {
+        // Same stream into a serial and an engine-backed shard: the
+        // determinism guarantee says predictions agree bit-for-bit.
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let serial = Worker::spawn(
+            WorkerConfig::new(2, 3, gmm.clone(), vec![3.0, 3.0]),
+            Arc::new(Metrics::new()),
+        );
+        let pooled = Worker::spawn(
+            WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]).with_engine(EngineConfig::new(2)),
+            Arc::new(Metrics::new()),
+        );
+        let mut rng = Pcg64::seed(9);
+        for i in 0..120 {
+            let x = blob_point(&mut rng, i % 3);
+            serial.handle.learn(x.clone(), i % 3).unwrap();
+            pooled.handle.learn(x, i % 3).unwrap();
+        }
+        for i in 0..20 {
+            let x = blob_point(&mut rng, i % 3);
+            assert_eq!(
+                serial.handle.predict(x.clone()).unwrap(),
+                pooled.handle.predict(x).unwrap()
+            );
+        }
+        assert_eq!(
+            serial.handle.stats().unwrap().components,
+            pooled.handle.stats().unwrap().components
+        );
+        serial.join();
+        pooled.join();
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! Fixed pool of component-shard workers.
+//!
+//! A [`WorkerPool`] owns `T` OS threads for the lifetime of the model it
+//! serves. Each call to [`WorkerPool::run`] partitions the component
+//! index space `0..k` into `T` contiguous shards and executes one task
+//! over every shard in parallel, blocking until all shards finish. Each
+//! worker thread owns a private [`Scratch`] arena (the per-thread
+//! analogue of `Figmn`'s `buf_e`/`buf_ws` buffers), so the learn hot
+//! path stays allocation-free under parallel execution too.
+//!
+//! Synchronization is a hybrid spin-then-sleep epoch protocol: workers
+//! spin briefly on an atomic epoch counter (learn streams issue phases
+//! every few tens of microseconds, so the pool is usually hot) and fall
+//! back to a condvar so an idle pool consumes no CPU.
+
+use std::any::Any;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Iterations to spin on the epoch/done atomics before sleeping.
+const SPIN_LIMIT: u32 = 20_000;
+
+/// Per-thread scratch arena. Buffers grow on demand and are reused for
+/// every subsequent task on that worker thread.
+pub struct Scratch {
+    /// Mean-error vector `e = x − μ` (D floats).
+    pub e: Vec<f64>,
+    /// Second general-purpose D-float buffer (e.g. `Δμ` for the
+    /// covariance-form update).
+    pub tmp: Vec<f64>,
+}
+
+impl Scratch {
+    fn new() -> Scratch {
+        Scratch { e: Vec::new(), tmp: Vec::new() }
+    }
+
+    /// Make sure both buffers hold at least `d` elements.
+    pub fn ensure(&mut self, d: usize) {
+        if self.e.len() < d {
+            self.e.resize(d, 0.0);
+        }
+        if self.tmp.len() < d {
+            self.tmp.resize(d, 0.0);
+        }
+    }
+}
+
+/// The task signature: `(worker_index, component_range, scratch)`.
+pub type ShardTask<'a> = &'a (dyn Fn(usize, Range<usize>, &mut Scratch) + Sync + 'a);
+
+struct State {
+    epoch: u64,
+    /// Lifetime-erased task reference, set for the duration of one `run`
+    /// call. Safety: `run` does not return until every worker has
+    /// finished calling the task and it is cleared before `run` returns,
+    /// so the pointee always outlives its uses; the `Sync` bound makes
+    /// the concurrent calls sound.
+    task: Option<ShardTask<'static>>,
+    ranges: Vec<Range<usize>>,
+    remaining: usize,
+    /// First panic payload caught in a shard task this epoch; re-raised
+    /// on the calling thread by `run` (a dead shard must crash the
+    /// caller, not deadlock it).
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Mirrors `State::epoch` for the workers' lock-free spin phase.
+    epoch: AtomicU64,
+    /// Mirrors `State::remaining` for the caller's lock-free spin phase.
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// A fixed pool of component-shard worker threads (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes `run` calls: the epoch protocol supports one task at a
+    /// time (learn takes `&mut` anyway; this guards `&self` callers).
+    run_guard: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                task: None,
+                ranges: vec![0..0; threads],
+                remaining: 0,
+                panic: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|id| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("figmn-shard-{id}"))
+                    .spawn(move || worker_loop(id, &shared))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        WorkerPool { shared, workers, run_guard: Mutex::new(()) }
+    }
+
+    /// Number of worker threads (= number of component shards).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Split `0..k` into contiguous per-worker shards and run `task` on
+    /// every shard in parallel; returns when all shards are done.
+    ///
+    /// The shard partition is a pure function of `(k, threads)`, and
+    /// every component index is visited by exactly one worker, so tasks
+    /// that only touch per-component state (plus shared read-only data)
+    /// are race-free and produce results independent of scheduling.
+    pub fn run(&self, k: usize, task: ShardTask<'_>) {
+        if k == 0 {
+            return;
+        }
+        // Poison-tolerant: a shard panic re-raised by a previous `run`
+        // unwinds through this guard; the pool itself stays consistent
+        // (state was settled before the re-raise), so keep serving.
+        let _serial = self.run_guard.lock().unwrap_or_else(|e| e.into_inner());
+        let t = self.workers.len();
+        // Erase the borrow lifetime for storage; see the `State::task`
+        // safety note — the reference is dead before `run` returns.
+        let task: ShardTask<'static> =
+            unsafe { std::mem::transmute::<ShardTask<'_>, ShardTask<'static>>(task) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.task.is_none() && st.remaining == 0, "run re-entered");
+            st.task = Some(task);
+            st.ranges = partition_ranges(k, t);
+            st.remaining = t;
+            self.shared.pending.store(t, Ordering::Release);
+            st.epoch += 1;
+            self.shared.epoch.store(st.epoch, Ordering::Release);
+        }
+        self.shared.work_cv.notify_all();
+
+        // Wait for completion: spin first, then sleep.
+        let mut spins = 0u32;
+        while self.shared.pending.load(Ordering::Acquire) > 0 {
+            spins += 1;
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            break;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        debug_assert_eq!(st.remaining, 0);
+        st.task = None;
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            // Surface a shard-task panic on the calling thread, exactly
+            // like the serial path would have crashed.
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(id: usize, shared: &Shared) {
+    let mut scratch = Scratch::new();
+    let mut seen_epoch = 0u64;
+    loop {
+        // Wait for a new epoch: bounded spin, then condvar sleep.
+        let mut spins = 0u32;
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if shared.epoch.load(Ordering::Acquire) != seen_epoch {
+                break;
+            }
+            spins += 1;
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut st = shared.state.lock().unwrap();
+            while st.epoch == seen_epoch && !shared.shutdown.load(Ordering::Acquire) {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            break;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Fetch this worker's assignment for the new epoch.
+        let (task, range) = {
+            let st = shared.state.lock().unwrap();
+            seen_epoch = st.epoch;
+            (st.task, st.ranges[id].clone())
+        };
+        if let Some(f) = task {
+            if !range.is_empty() {
+                // `run` keeps the task alive until `remaining` hits 0,
+                // which happens strictly after this call returns. Catch
+                // panics so a dying shard still reports completion —
+                // otherwise `run` would wait forever; the payload is
+                // re-raised on the calling thread.
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(id, range, &mut scratch)))
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    if st.panic.is_none() {
+                        st.panic = Some(payload);
+                    }
+                }
+            }
+        }
+        // Report completion.
+        let mut st = shared.state.lock().unwrap();
+        st.remaining -= 1;
+        let done = st.remaining == 0;
+        shared.pending.store(st.remaining, Ordering::Release);
+        drop(st);
+        if done {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Contiguous, balanced partition of `0..k` into `t` ranges (some may be
+/// empty when `k < t`). Pure function of `(k, t)`.
+fn partition_ranges(k: usize, t: usize) -> Vec<Range<usize>> {
+    let base = k / t;
+    let rem = k % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, k);
+    out
+}
+
+/// Raw-pointer wrapper that lets a `Fn + Sync` shard task write into a
+/// caller-owned buffer. Safety contract: every index written through the
+/// pointer is touched by exactly one worker (the shard partition
+/// guarantees this when indices are derived from the component range),
+/// and the buffer outlives the `run` call.
+#[derive(Clone, Copy)]
+pub struct SharedMut<T>(*mut T);
+
+unsafe impl<T: Send> Send for SharedMut<T> {}
+unsafe impl<T: Send> Sync for SharedMut<T> {}
+
+impl<T> SharedMut<T> {
+    pub fn new(ptr: *mut T) -> SharedMut<T> {
+        SharedMut(ptr)
+    }
+
+    /// Raw element pointer at offset `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds of the original allocation, and no other
+    /// thread may concurrently access the same element.
+    pub unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+
+    /// Mutable slice view of `len` elements starting at `start`.
+    ///
+    /// # Safety
+    /// `[start, start+len)` must be in bounds and disjoint from every
+    /// range any other thread accesses during the same `run` call.
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_and_balances() {
+        for k in [0usize, 1, 2, 3, 7, 8, 31, 32, 1000] {
+            for t in [1usize, 2, 3, 4, 8] {
+                let ranges = partition_ranges(k, t);
+                assert_eq!(ranges.len(), t);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, prev_end, "ranges must be contiguous");
+                    prev_end = r.end;
+                    covered += r.len();
+                }
+                assert_eq!(covered, k);
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let max = lens.iter().max().unwrap();
+                let min = lens.iter().min().unwrap();
+                assert!(max - min <= 1, "unbalanced: {lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_tasks_over_all_indices() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            let k = 37;
+            let mut hits = vec![0u64; k];
+            let out = SharedMut::new(hits.as_mut_ptr());
+            pool.run(k, &move |worker, range, scratch| {
+                scratch.ensure(4);
+                assert!(worker < threads);
+                for j in range {
+                    // Safety: each j belongs to exactly one shard.
+                    unsafe { *out.at(j) += (j as u64) + 1 };
+                }
+            });
+            for (j, &h) in hits.iter().enumerate() {
+                assert_eq!(h, (j as u64) + 1, "index {j} visited wrong number of times");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_small_epochs() {
+        let pool = WorkerPool::new(4);
+        let mut acc = vec![0u64; 16];
+        for round in 0..500u64 {
+            let out = SharedMut::new(acc.as_mut_ptr());
+            pool.run(16, &move |_, range, _| {
+                for j in range {
+                    unsafe { *out.at(j) += round };
+                }
+            });
+        }
+        let expect: u64 = (0..500).sum();
+        assert!(acc.iter().all(|&v| v == expect));
+    }
+
+    #[test]
+    fn empty_k_is_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, &|_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|_, range, _| {
+                if range.contains(&0) {
+                    panic!("shard boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "shard panic must reach the caller");
+        // The pool is still usable for the next epoch.
+        let mut ok = vec![0u8; 8];
+        let out = SharedMut::new(ok.as_mut_ptr());
+        pool.run(8, &move |_, range, _| {
+            for j in range {
+                unsafe { *out.at(j) = 1 };
+            }
+        });
+        assert!(ok.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn scratch_grows_and_persists() {
+        let pool = WorkerPool::new(2);
+        // First epoch sizes the arenas; later epochs see them pre-sized
+        // (len only grows).
+        for d in [4usize, 8, 8, 2] {
+            pool.run(8, &move |_, _, scratch| {
+                scratch.ensure(d);
+                assert!(scratch.e.len() >= d);
+                assert!(scratch.tmp.len() >= d);
+                scratch.e[..d].fill(1.0);
+            });
+        }
+    }
+}

@@ -5,11 +5,29 @@
 //! update (Eqs. 20–21) with the determinant-lemma update (Eqs. 25–26) —
 //! all `O(D²)`. No matrix is ever inverted or factorized on the learn
 //! path.
+//!
+//! Both passes are component-local, so when an engine is attached
+//! ([`Figmn::with_engine`]) the K components are sharded across the
+//! fixed thread pool of [`crate::engine::WorkerPool`]: each worker runs
+//! the distance pass and the fused update for its shard with its own
+//! scratch arena, and the O(K) posterior merge runs serially through the
+//! deterministic tree reduction in [`super::softmax_posteriors`].
+//! Results are bit-identical to the serial path for every thread count
+//! (see the crate-level determinism guarantee).
 
 use super::inference::precision_conditional;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
+use crate::engine::{
+    logsumexp_tree, worth_sharding, worth_sharding_batch, EngineConfig, SharedMut, WorkerPool,
+};
 use crate::linalg::rank_one::figmn_fused_update;
 use crate::linalg::{sub_into, Matrix};
+
+/// Cap on live per-(point, component) slots in the batch scoring paths:
+/// batches are processed in chunks of `BATCH_CHUNK_SLOTS / K` points so
+/// peak memory stays O(chunk·K) instead of O(batch·K). Chunking only
+/// regroups pool dispatches — per-point results are unchanged.
+const BATCH_CHUNK_SLOTS: usize = 1 << 16;
 
 /// One Gaussian component in precision form.
 #[derive(Debug, Clone)]
@@ -32,6 +50,8 @@ pub struct Figmn {
     sigma_ini: Vec<f64>,
     comps: Vec<PrecisionComponent>,
     points: u64,
+    /// Optional component-sharded thread pool (None = serial).
+    engine: Option<WorkerPool>,
     // --- reusable scratch (learn() allocates nothing after warm-up) ---
     buf_e: Vec<f64>,
     buf_d2: Vec<f64>,
@@ -53,6 +73,7 @@ impl Figmn {
             sigma_ini,
             comps: Vec::new(),
             points: 0,
+            engine: None,
             buf_e: vec![0.0; d],
             buf_d2: Vec::new(),
             buf_ws: Vec::new(),
@@ -89,12 +110,34 @@ impl Figmn {
             sigma_ini,
             comps,
             points,
+            engine: None,
             buf_e: vec![0.0; d],
             buf_d2: Vec::new(),
             buf_ws: Vec::new(),
             buf_ll: Vec::new(),
             buf_sp: Vec::new(),
         }
+    }
+
+    /// Attach a component-sharded execution engine: the K components are
+    /// partitioned across a fixed pool of worker threads for the learn
+    /// and scoring passes. Results are bit-identical to the serial path
+    /// for every thread count (crate-level determinism guarantee).
+    pub fn with_engine(mut self, cfg: EngineConfig) -> Self {
+        self.set_engine(Some(cfg));
+        self
+    }
+
+    /// Attach (`Some`) or detach (`None`) the engine at runtime. The
+    /// model's state and all future results are unaffected — only where
+    /// the arithmetic runs changes.
+    pub fn set_engine(&mut self, cfg: Option<EngineConfig>) {
+        self.engine = cfg.map(|c| WorkerPool::new(c.resolve_threads()));
+    }
+
+    /// Worker threads backing this model (1 when no engine is attached).
+    pub fn engine_threads(&self) -> usize {
+        self.engine.as_ref().map_or(1, |p| p.threads())
     }
 
     /// Mean of component `j` (exposed for tests/benches/tools).
@@ -123,21 +166,6 @@ impl Figmn {
         self.comps[j].sp / total
     }
 
-    /// Squared Mahalanobis distances to every component (Eq. 22),
-    /// saving each component's `w = Λ·e` for the fused update.
-    fn distances_into(&mut self, x: &[f64]) {
-        let k = self.comps.len();
-        let d = self.cfg.dim;
-        self.buf_d2.clear();
-        self.buf_d2.reserve(k);
-        self.buf_ws.resize(k * d, 0.0);
-        for (j, c) in self.comps.iter().enumerate() {
-            sub_into(x, &c.mean, &mut self.buf_e);
-            let w = &mut self.buf_ws[j * d..(j + 1) * d];
-            self.buf_d2.push(c.lambda.quad_form_with(&self.buf_e, w));
-        }
-    }
-
     fn create(&mut self, x: &[f64]) {
         let d = self.cfg.dim;
         let mut lambda = Matrix::zeros(d, d);
@@ -156,56 +184,6 @@ impl Figmn {
         });
     }
 
-    fn update_all(&mut self, x: &[f64]) {
-        let d2 = std::mem::take(&mut self.buf_d2);
-        // Posteriors p(j|x) (Eqs. 2–3, log space).
-        self.buf_ll.clear();
-        self.buf_sp.clear();
-        for (c, &d2j) in self.comps.iter().zip(d2.iter()) {
-            self.buf_ll.push(log_gaussian(d2j, c.log_det, self.cfg.dim));
-            self.buf_sp.push(c.sp);
-        }
-        let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
-
-        for (j, c) in self.comps.iter_mut().enumerate() {
-            let p = post[j];
-            c.v += 1; // Eq. 4
-            c.sp += p; // Eq. 5
-            let omega = p / c.sp; // Eq. 7 (with the *updated* sp)
-            if omega <= 0.0 {
-                // ω = 0: Eqs. 8–11 are exact no-ops; skip the O(D²) work.
-                continue;
-            }
-            sub_into(x, &c.mean, &mut self.buf_e); // Eq. 6
-            for i in 0..self.cfg.dim {
-                c.mean[i] += omega * self.buf_e[i]; // Eqs. 8–9
-            }
-            // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean
-            // Eq. 11 — DESIGN.md §Deviations; single-pass rewrite —
-            // EXPERIMENTS.md §Perf L3-1), reusing w/q from the distance
-            // pass.
-            let d = self.cfg.dim;
-            let w = &self.buf_ws[j * d..(j + 1) * d];
-            match figmn_fused_update(&mut c.lambda, w, d2[j], omega, c.log_det) {
-                Some(r) => c.log_det = r.log_det,
-                None => {
-                    // Float underflow destroyed positive-definiteness
-                    // (reachable only at extreme conditioning). Reset the
-                    // component's shape to σ_ini around its current mean.
-                    let mut log_det = 0.0;
-                    c.lambda.scale_in_place(0.0);
-                    for i in 0..self.cfg.dim {
-                        let s2 = self.sigma_ini[i] * self.sigma_ini[i];
-                        c.lambda[(i, i)] = 1.0 / s2;
-                        log_det += s2.ln();
-                    }
-                    c.log_det = log_det;
-                }
-            }
-        }
-        self.buf_d2 = d2;
-    }
-
     fn prune(&mut self) {
         if !self.cfg.prune {
             return;
@@ -217,6 +195,179 @@ impl Figmn {
         // Priors (Eq. 12) are derived from sp on demand; nothing else to
         // renormalize.
     }
+
+    /// `ln p(x|j)` for every component, via the engine when attached.
+    fn per_component_loglik(&self, x: &[f64]) -> Vec<f64> {
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        let mut ll = vec![0.0; k];
+        match &self.engine {
+            Some(pool) if worth_sharding(k, d, pool.threads()) => {
+                let comps = &self.comps;
+                let out = SharedMut::new(ll.as_mut_ptr());
+                pool.run(k, &move |_, range, scratch| {
+                    scratch.ensure(d);
+                    for j in range {
+                        let c = &comps[j];
+                        let e = &mut scratch.e[..d];
+                        sub_into(x, &c.mean, e);
+                        // Safety: slot j is owned by exactly one shard.
+                        unsafe {
+                            *out.at(j) = log_gaussian(c.lambda.quad_form(e), c.log_det, d);
+                        }
+                    }
+                });
+            }
+            _ => {
+                let mut e = vec![0.0; d];
+                for (j, c) in self.comps.iter().enumerate() {
+                    sub_into(x, &c.mean, &mut e);
+                    ll[j] = log_gaussian(c.lambda.quad_form(&e), c.log_det, d);
+                }
+            }
+        }
+        ll
+    }
+}
+
+/// Phase A of one learn step: squared Mahalanobis distances to every
+/// component (Eq. 22), saving each component's `w = Λ·e` for the fused
+/// update. Free function so the caller can split `Figmn`'s field borrows.
+fn distance_pass(
+    comps: &[PrecisionComponent],
+    x: &[f64],
+    d: usize,
+    buf_d2: &mut [f64],
+    buf_ws: &mut [f64],
+    buf_e: &mut [f64],
+    pool: Option<&WorkerPool>,
+) {
+    let k = comps.len();
+    match pool {
+        Some(pool) if worth_sharding(k, d, pool.threads()) => {
+            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
+            let ws = SharedMut::new(buf_ws.as_mut_ptr());
+            pool.run(k, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for j in range {
+                    let c = &comps[j];
+                    let e = &mut scratch.e[..d];
+                    sub_into(x, &c.mean, e);
+                    // Safety: slot j / row j are owned by this shard only.
+                    unsafe {
+                        *d2.at(j) = c.lambda.quad_form_with(e, ws.slice(j * d, d));
+                    }
+                }
+            });
+        }
+        _ => {
+            let e = &mut buf_e[..d];
+            for (j, c) in comps.iter().enumerate() {
+                sub_into(x, &c.mean, e);
+                buf_d2[j] = c.lambda.quad_form_with(e, &mut buf_ws[j * d..(j + 1) * d]);
+            }
+        }
+    }
+}
+
+/// Phase B of one learn step: apply Eqs. 4–9 and the fused rank-two
+/// update to every component given its posterior. Component-local, so it
+/// shards exactly like the distance pass.
+#[allow(clippy::too_many_arguments)]
+fn update_pass(
+    comps: &mut [PrecisionComponent],
+    x: &[f64],
+    d: usize,
+    post: &[f64],
+    buf_d2: &[f64],
+    buf_ws: &[f64],
+    buf_e: &mut [f64],
+    sigma_ini: &[f64],
+    pool: Option<&WorkerPool>,
+) {
+    let k = comps.len();
+    match pool {
+        Some(pool) if worth_sharding(k, d, pool.threads()) => {
+            let cptr = SharedMut::new(comps.as_mut_ptr());
+            pool.run(k, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for j in range {
+                    // Safety: component j is owned by exactly one shard.
+                    let c = unsafe { &mut *cptr.at(j) };
+                    update_component(
+                        c,
+                        x,
+                        d,
+                        post[j],
+                        buf_d2[j],
+                        &buf_ws[j * d..(j + 1) * d],
+                        sigma_ini,
+                        &mut scratch.e[..d],
+                    );
+                }
+            });
+        }
+        _ => {
+            let e = &mut buf_e[..d];
+            for (j, c) in comps.iter_mut().enumerate() {
+                update_component(
+                    c,
+                    x,
+                    d,
+                    post[j],
+                    buf_d2[j],
+                    &buf_ws[j * d..(j + 1) * d],
+                    sigma_ini,
+                    e,
+                );
+            }
+        }
+    }
+}
+
+/// The component-local body shared by the serial and sharded update
+/// paths — one instruction sequence, so the two are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn update_component(
+    c: &mut PrecisionComponent,
+    x: &[f64],
+    d: usize,
+    p: f64,
+    d2j: f64,
+    w: &[f64],
+    sigma_ini: &[f64],
+    e: &mut [f64],
+) {
+    c.v += 1; // Eq. 4
+    c.sp += p; // Eq. 5
+    let omega = p / c.sp; // Eq. 7 (with the *updated* sp)
+    if omega <= 0.0 {
+        // ω = 0: Eqs. 8–11 are exact no-ops; skip the O(D²) work.
+        return;
+    }
+    sub_into(x, &c.mean, e); // Eq. 6
+    for (m, &ei) in c.mean.iter_mut().zip(e.iter()) {
+        *m += omega * ei; // Eqs. 8–9
+    }
+    // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean Eq. 11 —
+    // DESIGN.md §Deviations; single-pass rewrite — EXPERIMENTS.md §Perf
+    // L3-1), reusing w/q from the distance pass.
+    match figmn_fused_update(&mut c.lambda, w, d2j, omega, c.log_det) {
+        Some(r) => c.log_det = r.log_det,
+        None => {
+            // Float underflow destroyed positive-definiteness (reachable
+            // only at extreme conditioning). Reset the component's shape
+            // to σ_ini around its current mean.
+            let mut log_det = 0.0;
+            c.lambda.scale_in_place(0.0);
+            for i in 0..d {
+                let s2 = sigma_ini[i] * sigma_ini[i];
+                c.lambda[(i, i)] = 1.0 / s2;
+                log_det += s2.ln();
+            }
+            c.log_det = log_det;
+        }
+    }
 }
 
 impl IncrementalMixture for Figmn {
@@ -227,7 +378,14 @@ impl IncrementalMixture for Figmn {
             self.create(x);
             return LearnOutcome::Created;
         }
-        self.distances_into(x);
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        self.buf_d2.resize(k, 0.0);
+        self.buf_ws.resize(k * d, 0.0);
+        {
+            let Figmn { comps, buf_d2, buf_ws, buf_e, engine, .. } = self;
+            distance_pass(comps, x, d, buf_d2, buf_ws, buf_e, engine.as_ref());
+        }
         let accept = self
             .buf_d2
             .iter()
@@ -235,7 +393,19 @@ impl IncrementalMixture for Figmn {
         let cap_full =
             self.cfg.max_components > 0 && self.comps.len() >= self.cfg.max_components;
         if accept || cap_full {
-            self.update_all(x);
+            // Posteriors p(j|x) (Eqs. 2–3, log space) — the O(K) serial
+            // merge between the two sharded passes.
+            self.buf_ll.clear();
+            self.buf_sp.clear();
+            for (c, &d2j) in self.comps.iter().zip(self.buf_d2.iter()) {
+                self.buf_ll.push(log_gaussian(d2j, c.log_det, d));
+                self.buf_sp.push(c.sp);
+            }
+            let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
+            {
+                let Figmn { comps, sigma_ini, buf_d2, buf_ws, buf_e, engine, .. } = self;
+                update_pass(comps, x, d, &post, buf_d2, buf_ws, buf_e, sigma_ini, engine.as_ref());
+            }
             self.prune();
             LearnOutcome::Updated
         } else {
@@ -256,22 +426,50 @@ impl IncrementalMixture for Figmn {
     fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {
         assert_eq!(known_vals.len(), known_idx.len());
         assert!(!self.comps.is_empty(), "predict on empty model");
-        let mut log_liks = Vec::with_capacity(self.comps.len());
-        let mut sps = Vec::with_capacity(self.comps.len());
-        let mut recons: Vec<Vec<f64>> = Vec::with_capacity(self.comps.len());
-        for c in &self.comps {
-            let r = precision_conditional(
-                &c.lambda,
-                &c.mean,
-                c.log_det,
-                known_vals,
-                known_idx,
-                target_idx,
-            );
-            log_liks.push(r.log_lik);
-            sps.push(c.sp);
-            recons.push(r.reconstruction);
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        let mut log_liks = vec![0.0; k];
+        let mut recons: Vec<Vec<f64>> = vec![Vec::new(); k];
+        match &self.engine {
+            Some(pool) if worth_sharding(k, d, pool.threads()) => {
+                let comps = &self.comps;
+                let ll = SharedMut::new(log_liks.as_mut_ptr());
+                let rc = SharedMut::new(recons.as_mut_ptr());
+                pool.run(k, &move |_, range, _| {
+                    for j in range {
+                        let c = &comps[j];
+                        let r = precision_conditional(
+                            &c.lambda,
+                            &c.mean,
+                            c.log_det,
+                            known_vals,
+                            known_idx,
+                            target_idx,
+                        );
+                        // Safety: slot j is owned by exactly one shard.
+                        unsafe {
+                            *ll.at(j) = r.log_lik;
+                            *rc.at(j) = r.reconstruction;
+                        }
+                    }
+                });
+            }
+            _ => {
+                for (j, c) in self.comps.iter().enumerate() {
+                    let r = precision_conditional(
+                        &c.lambda,
+                        &c.mean,
+                        c.log_det,
+                        known_vals,
+                        known_idx,
+                        target_idx,
+                    );
+                    log_liks[j] = r.log_lik;
+                    recons[j] = r.reconstruction;
+                }
+            }
         }
+        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
         let post = softmax_posteriors(&log_liks, &sps); // Eq. 14
         let mut out = vec![0.0; target_idx.len()];
         for (p, r) in post.iter().zip(recons.iter()) {
@@ -285,36 +483,170 @@ impl IncrementalMixture for Figmn {
     fn log_density(&self, x: &[f64]) -> f64 {
         assert!(!self.comps.is_empty());
         let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
-        let mut best = f64::NEG_INFINITY;
-        let mut terms = Vec::with_capacity(self.comps.len());
-        let mut e = vec![0.0; self.cfg.dim];
-        for c in &self.comps {
-            sub_into(x, &c.mean, &mut e);
-            let d2 = c.lambda.quad_form(&e);
-            let t = log_gaussian(d2, c.log_det, self.cfg.dim) + (c.sp / total_sp).ln();
-            terms.push(t);
-            best = best.max(t);
-        }
-        if !best.is_finite() {
-            return f64::NEG_INFINITY;
-        }
-        best + terms.iter().map(|t| (t - best).exp()).sum::<f64>().ln()
+        let ll = self.per_component_loglik(x);
+        let terms: Vec<f64> = self
+            .comps
+            .iter()
+            .zip(ll.iter())
+            .map(|(c, &llj)| llj + (c.sp / total_sp).ln())
+            .collect();
+        logsumexp_tree(&terms)
     }
 
     fn posteriors(&self, x: &[f64]) -> Vec<f64> {
-        let mut ll = Vec::with_capacity(self.comps.len());
-        let mut sp = Vec::with_capacity(self.comps.len());
-        let mut e = vec![0.0; self.cfg.dim];
-        for c in &self.comps {
-            sub_into(x, &c.mean, &mut e);
-            ll.push(log_gaussian(c.lambda.quad_form(&e), c.log_det, self.cfg.dim));
-            sp.push(c.sp);
-        }
+        let ll = self.per_component_loglik(x);
+        let sp: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
         softmax_posteriors(&ll, &sp)
     }
 
     fn points_seen(&self) -> u64 {
         self.points
+    }
+
+    /// Batch scoring amortizes one pool dispatch over each
+    /// memory-bounded chunk of the batch: each worker evaluates its
+    /// component shard against every point in the chunk, then the
+    /// per-point merges run serially through the deterministic tree
+    /// reduction. Values are identical to mapping
+    /// [`IncrementalMixture::log_density`].
+    fn score_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        if xs.is_empty() {
+            // Contract parity with mapping `log_density`: an empty batch
+            // is empty output even on an untrained model.
+            return Vec::new();
+        }
+        assert!(!self.comps.is_empty(), "score_batch on empty model");
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
+        // terms[bi*k + j] = ln p(x_bi|j) + ln p(j), reused per chunk.
+        let mut terms = vec![0.0; chunk.min(xs.len()) * k];
+        let mut out = Vec::with_capacity(xs.len());
+        for xs_chunk in xs.chunks(chunk) {
+            let b = xs_chunk.len();
+            let terms = &mut terms[..b * k];
+            let pool = self
+                .engine
+                .as_ref()
+                .filter(|p| worth_sharding_batch(b, k, d, p.threads()));
+            if let Some(pool) = pool {
+                let comps = &self.comps;
+                let outp = SharedMut::new(terms.as_mut_ptr());
+                pool.run(k, &move |_, range, scratch| {
+                    scratch.ensure(d);
+                    for j in range {
+                        let c = &comps[j];
+                        let prior_ln = (c.sp / total_sp).ln();
+                        for (bi, x) in xs_chunk.iter().enumerate() {
+                            let e = &mut scratch.e[..d];
+                            sub_into(x, &c.mean, e);
+                            // Safety: column j is owned by exactly one
+                            // shard.
+                            unsafe {
+                                *outp.at(bi * k + j) =
+                                    log_gaussian(c.lambda.quad_form(e), c.log_det, d) + prior_ln;
+                            }
+                        }
+                    }
+                });
+            } else {
+                let mut e = vec![0.0; d];
+                for (j, c) in self.comps.iter().enumerate() {
+                    let prior_ln = (c.sp / total_sp).ln();
+                    for (bi, x) in xs_chunk.iter().enumerate() {
+                        sub_into(x, &c.mean, &mut e);
+                        terms[bi * k + j] =
+                            log_gaussian(c.lambda.quad_form(&e), c.log_det, d) + prior_ln;
+                    }
+                }
+            }
+            out.extend((0..b).map(|bi| logsumexp_tree(&terms[bi * k..(bi + 1) * k])));
+        }
+        out
+    }
+
+    /// Batch conditional inference with the same chunked sharding as
+    /// [`IncrementalMixture::score_batch`]; identical to mapping
+    /// [`IncrementalMixture::predict`].
+    fn predict_batch(
+        &self,
+        known_vals: &[Vec<f64>],
+        known_idx: &[usize],
+        target_idx: &[usize],
+    ) -> Vec<Vec<f64>> {
+        if known_vals.is_empty() {
+            // Contract parity with mapping `predict`: empty in, empty out.
+            return Vec::new();
+        }
+        assert!(!self.comps.is_empty(), "predict_batch on empty model");
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
+        let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
+        let mut out = Vec::with_capacity(known_vals.len());
+        for kv_chunk in known_vals.chunks(chunk) {
+            let b = kv_chunk.len();
+            let mut log_liks = vec![0.0; b * k];
+            let mut recons: Vec<Vec<f64>> = vec![Vec::new(); b * k];
+            let pool = self
+                .engine
+                .as_ref()
+                .filter(|p| worth_sharding_batch(b, k, d, p.threads()));
+            if let Some(pool) = pool {
+                let comps = &self.comps;
+                let ll = SharedMut::new(log_liks.as_mut_ptr());
+                let rc = SharedMut::new(recons.as_mut_ptr());
+                pool.run(k, &move |_, range, _| {
+                    for j in range {
+                        let c = &comps[j];
+                        for (bi, kv) in kv_chunk.iter().enumerate() {
+                            let r = precision_conditional(
+                                &c.lambda,
+                                &c.mean,
+                                c.log_det,
+                                kv,
+                                known_idx,
+                                target_idx,
+                            );
+                            // Safety: column j is owned by exactly one
+                            // shard.
+                            unsafe {
+                                *ll.at(bi * k + j) = r.log_lik;
+                                *rc.at(bi * k + j) = r.reconstruction;
+                            }
+                        }
+                    }
+                });
+            } else {
+                for (j, c) in self.comps.iter().enumerate() {
+                    for (bi, kv) in kv_chunk.iter().enumerate() {
+                        let r = precision_conditional(
+                            &c.lambda,
+                            &c.mean,
+                            c.log_det,
+                            kv,
+                            known_idx,
+                            target_idx,
+                        );
+                        log_liks[bi * k + j] = r.log_lik;
+                        recons[bi * k + j] = r.reconstruction;
+                    }
+                }
+            }
+            out.extend((0..b).map(|bi| {
+                let row_ll = &log_liks[bi * k..(bi + 1) * k];
+                let post = softmax_posteriors(row_ll, &sps);
+                let mut acc = vec![0.0; target_idx.len()];
+                for (p, r) in post.iter().zip(recons[bi * k..(bi + 1) * k].iter()) {
+                    for (o, &v) in acc.iter_mut().zip(r.iter()) {
+                        *o += p * v;
+                    }
+                }
+                acc
+            }));
+        }
+        out
     }
 }
 
@@ -465,5 +797,54 @@ mod tests {
     fn learn_rejects_wrong_dim() {
         let mut m = Figmn::new(GmmConfig::new(3), &[1.0, 1.0, 1.0]);
         m.learn(&[1.0]);
+    }
+
+    #[test]
+    fn batch_api_matches_serial_loop() {
+        let cfg = GmmConfig::new(2).with_delta(0.3).with_beta(0.1).without_pruning();
+        let mut a = Figmn::new(cfg.clone(), &[5.0, 5.0]);
+        let mut b = Figmn::new(cfg, &[5.0, 5.0]);
+        let batch: Vec<Vec<f64>> = two_cluster_data().iter().map(|p| p.to_vec()).collect();
+        let serial: Vec<LearnOutcome> = batch.iter().map(|p| a.learn(p)).collect();
+        let batched = b.learn_batch(&batch);
+        assert_eq!(serial, batched);
+        assert_eq!(a.num_components(), b.num_components());
+
+        let probes: Vec<Vec<f64>> =
+            vec![vec![0.0, 0.0], vec![10.0, 10.0], vec![5.0, 5.0]];
+        let dens = b.score_batch(&probes);
+        for (x, &ld) in probes.iter().zip(dens.iter()) {
+            assert_eq!(a.log_density(x), ld);
+        }
+        let knowns: Vec<Vec<f64>> = vec![vec![0.05], vec![10.05]];
+        let preds = b.predict_batch(&knowns, &[0], &[1]);
+        for (kv, pred) in knowns.iter().zip(preds.iter()) {
+            assert_eq!(&a.predict(kv, &[0], &[1]), pred);
+        }
+        // Contract parity with the default impls: an empty batch is an
+        // empty result, even on an untrained model.
+        let fresh = Figmn::new(GmmConfig::new(2), &[1.0, 1.0]);
+        assert!(fresh.score_batch(&[]).is_empty());
+        assert!(fresh.predict_batch(&[], &[0], &[1]).is_empty());
+    }
+
+    #[test]
+    fn engine_attach_detach_preserves_results() {
+        let cfg = GmmConfig::new(2).with_delta(0.3).with_beta(0.1).without_pruning();
+        let mut serial = Figmn::new(cfg.clone(), &[5.0, 5.0]);
+        let mut pooled =
+            Figmn::new(cfg, &[5.0, 5.0]).with_engine(EngineConfig::new(2));
+        assert_eq!(pooled.engine_threads(), 2);
+        for p in two_cluster_data() {
+            assert_eq!(serial.learn(&p), pooled.learn(&p));
+        }
+        assert_eq!(serial.num_components(), pooled.num_components());
+        for j in 0..serial.num_components() {
+            assert_eq!(serial.component_mean(j), pooled.component_mean(j));
+            assert_eq!(serial.component_log_det(j), pooled.component_log_det(j));
+        }
+        pooled.set_engine(None);
+        assert_eq!(pooled.engine_threads(), 1);
+        assert_eq!(serial.learn(&[5.0, 5.0]), pooled.learn(&[5.0, 5.0]));
     }
 }

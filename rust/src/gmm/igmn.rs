@@ -13,6 +13,9 @@
 
 use super::inference::covariance_conditional;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
+use crate::engine::{
+    logsumexp_tree, worth_sharding, worth_sharding_work, EngineConfig, SharedMut, WorkerPool,
+};
 use crate::linalg::rank_one::syr;
 use crate::linalg::{sub_into, Cholesky, Matrix};
 
@@ -31,6 +34,10 @@ pub struct Igmn {
     sigma_ini: Vec<f64>,
     comps: Vec<CovarianceComponent>,
     points: u64,
+    /// Optional component-sharded thread pool (None = serial). The
+    /// per-component Cholesky factorizations (the O(KD³) cost the paper
+    /// attacks) shard across it exactly like `Figmn`'s passes.
+    engine: Option<WorkerPool>,
     buf_e: Vec<f64>,
     buf_dmu: Vec<f64>,
 }
@@ -44,6 +51,7 @@ impl Igmn {
             sigma_ini,
             comps: Vec::new(),
             points: 0,
+            engine: None,
             buf_e: vec![0.0; d],
             buf_dmu: vec![0.0; d],
         }
@@ -51,6 +59,23 @@ impl Igmn {
 
     pub fn config(&self) -> &GmmConfig {
         &self.cfg
+    }
+
+    /// Attach a component-sharded execution engine (bit-identical
+    /// results for every thread count; see [`crate::engine`]).
+    pub fn with_engine(mut self, cfg: EngineConfig) -> Self {
+        self.set_engine(Some(cfg));
+        self
+    }
+
+    /// Attach (`Some`) or detach (`None`) the engine at runtime.
+    pub fn set_engine(&mut self, cfg: Option<EngineConfig>) {
+        self.engine = cfg.map(|c| WorkerPool::new(c.resolve_threads()));
+    }
+
+    /// Worker threads backing this model (1 when no engine is attached).
+    pub fn engine_threads(&self) -> usize {
+        self.engine.as_ref().map_or(1, |p| p.threads())
     }
 
     /// Mean of component `j`.
@@ -78,16 +103,45 @@ impl Igmn {
     }
 
     /// Distances + log-dets for all components — `O(KD³)`: one Cholesky
-    /// per component per point. This cost is the paper's whole point.
+    /// per component per point. This cost is the paper's whole point,
+    /// and the engine's best case: each factorization shards
+    /// independently across the pool.
     fn score(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
-        let mut d2s = Vec::with_capacity(self.comps.len());
-        let mut log_dets = Vec::with_capacity(self.comps.len());
-        let mut e = vec![0.0; self.cfg.dim];
-        for c in &self.comps {
-            sub_into(x, &c.mean, &mut e);
-            let chol = Cholesky::new(&c.cov).expect("covariance must stay PD");
-            d2s.push(chol.quad_form_inv(&e));
-            log_dets.push(chol.log_det());
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        let mut d2s = vec![0.0; k];
+        let mut log_dets = vec![0.0; k];
+        // Gate on the real per-component cost: the Cholesky here is
+        // O(D³), not the O(D²) the precision-path gate assumes.
+        match &self.engine {
+            Some(pool) if worth_sharding_work(k, d * d * d, pool.threads()) => {
+                let comps = &self.comps;
+                let d2p = SharedMut::new(d2s.as_mut_ptr());
+                let ldp = SharedMut::new(log_dets.as_mut_ptr());
+                pool.run(k, &move |_, range, scratch| {
+                    scratch.ensure(d);
+                    for j in range {
+                        let c = &comps[j];
+                        let e = &mut scratch.e[..d];
+                        sub_into(x, &c.mean, e);
+                        let chol = Cholesky::new(&c.cov).expect("covariance must stay PD");
+                        // Safety: slot j is owned by exactly one shard.
+                        unsafe {
+                            *d2p.at(j) = chol.quad_form_inv(e);
+                            *ldp.at(j) = chol.log_det();
+                        }
+                    }
+                });
+            }
+            _ => {
+                let mut e = vec![0.0; d];
+                for (j, c) in self.comps.iter().enumerate() {
+                    sub_into(x, &c.mean, &mut e);
+                    let chol = Cholesky::new(&c.cov).expect("covariance must stay PD");
+                    d2s[j] = chol.quad_form_inv(&e);
+                    log_dets[j] = chol.log_det();
+                }
+            }
         }
         (d2s, log_dets)
     }
@@ -101,28 +155,33 @@ impl Igmn {
             sps.push(c.sp);
         }
         let post = softmax_posteriors(&lls, &sps);
-        for (j, c) in self.comps.iter_mut().enumerate() {
-            let p = post[j];
-            c.v += 1; // Eq. 4
-            c.sp += p; // Eq. 5
-            let omega = p / c.sp; // Eq. 7
-            if omega <= 0.0 {
-                continue; // Eqs. 8–11 are exact no-ops when ω underflows
+        let k = self.comps.len();
+        let Igmn { comps, engine, buf_e, buf_dmu, .. } = self;
+        match engine.as_ref() {
+            Some(pool) if worth_sharding(k, dim, pool.threads()) => {
+                let cptr = SharedMut::new(comps.as_mut_ptr());
+                let post = &post[..];
+                pool.run(k, &move |_, range, scratch| {
+                    scratch.ensure(dim);
+                    for j in range {
+                        // Safety: component j is owned by exactly one
+                        // shard.
+                        let c = unsafe { &mut *cptr.at(j) };
+                        update_cov_component(
+                            c,
+                            x,
+                            post[j],
+                            &mut scratch.e[..dim],
+                            &mut scratch.tmp[..dim],
+                        );
+                    }
+                });
             }
-            sub_into(x, &c.mean, &mut self.buf_e); // Eq. 6
-            for i in 0..dim {
-                self.buf_dmu[i] = omega * self.buf_e[i]; // Eq. 8
-                c.mean[i] += self.buf_dmu[i]; // Eq. 9
+            _ => {
+                for (j, c) in comps.iter_mut().enumerate() {
+                    update_cov_component(c, x, post[j], &mut buf_e[..dim], &mut buf_dmu[..dim]);
+                }
             }
-            // Eq. 11, exact form: C ← (1−ω)C + ω·e·eᵀ − Δμ·Δμᵀ with the
-            // OLD-mean error e (Engel & Heinen 2010). The FIGMN paper
-            // prints e* (the new-mean error) here; that variant is not
-            // the exact weighted-covariance recurrence and loses positive
-            // definiteness at ω = ½ (a component's second point) for
-            // D ≥ 2. Both forms cost the same; see DESIGN.md §Deviations.
-            c.cov.scale_in_place(1.0 - omega);
-            syr(&mut c.cov, omega, &self.buf_e);
-            syr(&mut c.cov, -1.0, &self.buf_dmu);
         }
     }
 
@@ -135,6 +194,38 @@ impl Igmn {
             self.comps.retain(|c| !(c.v > v_min && c.sp < sp_min));
         }
     }
+}
+
+/// Component-local body of the covariance update (Eqs. 4–11), shared by
+/// the serial and sharded paths — one instruction sequence, so the two
+/// are bit-identical.
+fn update_cov_component(
+    c: &mut CovarianceComponent,
+    x: &[f64],
+    p: f64,
+    e: &mut [f64],
+    dmu: &mut [f64],
+) {
+    c.v += 1; // Eq. 4
+    c.sp += p; // Eq. 5
+    let omega = p / c.sp; // Eq. 7
+    if omega <= 0.0 {
+        return; // Eqs. 8–11 are exact no-ops when ω underflows
+    }
+    sub_into(x, &c.mean, e); // Eq. 6
+    for ((m, &ei), di) in c.mean.iter_mut().zip(e.iter()).zip(dmu.iter_mut()) {
+        *di = omega * ei; // Eq. 8
+        *m += *di; // Eq. 9
+    }
+    // Eq. 11, exact form: C ← (1−ω)C + ω·e·eᵀ − Δμ·Δμᵀ with the
+    // OLD-mean error e (Engel & Heinen 2010). The FIGMN paper prints e*
+    // (the new-mean error) here; that variant is not the exact
+    // weighted-covariance recurrence and loses positive definiteness at
+    // ω = ½ (a component's second point) for D ≥ 2. Both forms cost the
+    // same; see DESIGN.md §Deviations.
+    c.cov.scale_in_place(1.0 - omega);
+    syr(&mut c.cov, omega, e);
+    syr(&mut c.cov, -1.0, dmu);
 }
 
 impl IncrementalMixture for Igmn {
@@ -194,17 +285,16 @@ impl IncrementalMixture for Igmn {
         assert!(!self.comps.is_empty());
         let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
         let (d2s, lds) = self.score(x);
-        let mut best = f64::NEG_INFINITY;
-        let mut terms = Vec::with_capacity(self.comps.len());
-        for ((c, &d2), &ld) in self.comps.iter().zip(d2s.iter()).zip(lds.iter()) {
-            let t = log_gaussian(d2, ld, self.cfg.dim) + (c.sp / total_sp).ln();
-            terms.push(t);
-            best = best.max(t);
-        }
-        if !best.is_finite() {
-            return f64::NEG_INFINITY;
-        }
-        best + terms.iter().map(|t| (t - best).exp()).sum::<f64>().ln()
+        // Same deterministic tree merge as the fast variant, so the two
+        // implementations produce the same numbers (paper §4).
+        let terms: Vec<f64> = self
+            .comps
+            .iter()
+            .zip(d2s.iter())
+            .zip(lds.iter())
+            .map(|((c, &d2), &ld)| log_gaussian(d2, ld, self.cfg.dim) + (c.sp / total_sp).ln())
+            .collect();
+        logsumexp_tree(&terms)
     }
 
     fn posteriors(&self, x: &[f64]) -> Vec<f64> {
@@ -301,6 +391,40 @@ mod tests {
         assert!((c[(0, 0)] - 4.0).abs() < 0.5, "var_x {}", c[(0, 0)]);
         assert!((c[(0, 1)] - 2.0).abs() < 0.4, "cov_xy {}", c[(0, 1)]);
         assert!((c[(1, 1)] - 1.25).abs() < 0.3, "var_y {}", c[(1, 1)]);
+    }
+
+    #[test]
+    fn engine_matches_serial_bitwise() {
+        // Sized so K·D² crosses the engine's parallel-work gate
+        // (K ≈ 80, D = 16 → 80·256 ≫ 2¹⁴) and the pool actually runs.
+        let d = 16;
+        let cfg = GmmConfig::new(d)
+            .with_delta(0.05)
+            .with_beta(0.2)
+            .with_max_components(80)
+            .without_pruning();
+        let stds = vec![2.0; d];
+        let mut serial = Igmn::new(cfg.clone(), &stds);
+        let mut pooled = Igmn::new(cfg, &stds).with_engine(EngineConfig::new(3));
+        assert_eq!(pooled.engine_threads(), 3);
+        let mut rng = Pcg64::seed(12);
+        for _ in 0..220 {
+            let x: Vec<f64> = (0..d).map(|_| rng.normal() * 6.0).collect();
+            assert_eq!(serial.learn(&x), pooled.learn(&x));
+        }
+        assert_eq!(serial.num_components(), pooled.num_components());
+        assert!(serial.num_components() >= 60, "gate never crossed");
+        for j in 0..serial.num_components() {
+            assert_eq!(serial.component_mean(j), pooled.component_mean(j));
+            assert_eq!(
+                serial.component_cov(j).as_slice(),
+                pooled.component_cov(j).as_slice()
+            );
+            assert_eq!(serial.component_stats(j), pooled.component_stats(j));
+        }
+        let probe: Vec<f64> = (0..d).map(|_| rng.normal() * 6.0).collect();
+        assert_eq!(serial.log_density(&probe), pooled.log_density(&probe));
+        assert_eq!(serial.posteriors(&probe), pooled.posteriors(&probe));
     }
 
     #[test]

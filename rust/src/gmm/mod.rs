@@ -55,6 +55,13 @@ pub enum LearnOutcome {
 
 /// Common interface of both IGMN variants (and of remote/XLA-backed
 /// models in the coordinator).
+///
+/// The `*_batch` methods are the engine-facing surface: the provided
+/// defaults loop over the serial entry points, and the two native
+/// implementations override the scoring ones to amortize their
+/// component-sharded thread pool across the whole batch (see
+/// [`crate::engine`]). Batch results are always identical to the serial
+/// loop — batching changes scheduling, never semantics.
 pub trait IncrementalMixture {
     /// Present one joint data vector (paper Algorithm 1 body).
     fn learn(&mut self, x: &[f64]) -> LearnOutcome;
@@ -77,11 +84,41 @@ pub trait IncrementalMixture {
 
     /// Total points presented.
     fn points_seen(&self) -> u64;
+
+    /// Present a batch of joint vectors in stream order. Learning is
+    /// sequential in the stream (each point scores against the state the
+    /// previous point produced), so this is exactly the serial loop —
+    /// implementations may still shard the per-point component work.
+    fn learn_batch(&mut self, xs: &[Vec<f64>]) -> Vec<LearnOutcome> {
+        xs.iter().map(|x| self.learn(x)).collect()
+    }
+
+    /// Joint log-densities `ln p(x)` for a batch of points.
+    fn score_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.log_density(x)).collect()
+    }
+
+    /// Conditional reconstructions for a batch of points sharing one
+    /// known/target index split (paper Eq. 15 / Eq. 27 per point).
+    fn predict_batch(
+        &self,
+        known_vals: &[Vec<f64>],
+        known_idx: &[usize],
+        target_idx: &[usize],
+    ) -> Vec<Vec<f64>> {
+        known_vals.iter().map(|x| self.predict(x, known_idx, target_idx)).collect()
+    }
 }
 
 /// Shared log-space posterior computation: given per-component
 /// `ln p(x|j)` and unnormalized priors (sp), return normalized `p(j|x)`.
 /// Uses the max-shift trick so D=3072 log-likelihoods don't underflow.
+///
+/// The normalizer is a deterministic pairwise [`crate::engine::tree_sum`]
+/// whose reduction shape depends only on K — the "merge posteriors"
+/// step the engine's determinism guarantee rests on (serial and sharded
+/// execution both funnel per-component scores through this one
+/// function, so they agree bit-for-bit).
 pub(crate) fn softmax_posteriors(log_liks: &[f64], sps: &[f64]) -> Vec<f64> {
     debug_assert_eq!(log_liks.len(), sps.len());
     let mut best = f64::NEG_INFINITY;
@@ -99,11 +136,10 @@ pub(crate) fn softmax_posteriors(log_liks: &[f64], sps: &[f64]) -> Vec<f64> {
         let k = log_liks.len().max(1);
         return vec![1.0 / k as f64; log_liks.len()];
     }
-    let mut total = 0.0;
     for s in &mut scores {
         *s = (*s - best).exp();
-        total += *s;
     }
+    let total = crate::engine::tree_sum(&scores);
     for s in &mut scores {
         *s /= total;
     }

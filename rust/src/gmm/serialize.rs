@@ -32,6 +32,10 @@ impl Figmn {
             .collect();
         Json::obj(vec![
             ("version", CHECKPOINT_VERSION.into()),
+            // Which build wrote this checkpoint — the real
+            // CARGO_PKG_VERSION, for post-mortem provenance. Loaders
+            // only validate the *format* version above.
+            ("crate_version", crate::version().into()),
             ("kind", "figmn".into()),
             ("dim", cfg.dim.into()),
             ("delta", cfg.delta.into()),
@@ -55,6 +59,13 @@ impl Figmn {
         }
         if get("kind")?.as_str() != Some("figmn") {
             return Err("not a figmn checkpoint".into());
+        }
+        // `crate_version` is provenance metadata: optional (pre-manifest
+        // checkpoints lack it) but must be a string when present.
+        if let Some(cv) = j.get("crate_version") {
+            if cv.as_str().is_none() {
+                return Err("bad crate_version".into());
+            }
         }
         let dim = get("dim")?.as_usize().ok_or("bad dim")?;
         let delta = get("delta")?.as_f64().ok_or("bad delta")?;
@@ -154,6 +165,35 @@ mod tests {
             assert_eq!(original.learn(&x), restored.learn(&x));
         }
         assert_eq!(original.num_components(), restored.num_components());
+    }
+
+    #[test]
+    fn checkpoint_carries_real_crate_version() {
+        let m = trained_model();
+        let doc = m.to_json();
+        // The checkpoint records the build that wrote it…
+        assert_eq!(
+            doc.get("crate_version").and_then(|v| v.as_str()),
+            Some(crate::version()),
+        );
+        // …which is the real manifest version, not a placeholder.
+        assert_eq!(crate::version(), env!("CARGO_PKG_VERSION"));
+        assert!(!crate::version().is_empty());
+        // Round trip preserves behaviour with the field present.
+        let restored = Figmn::from_json(&parse(&doc.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(restored.num_components(), m.num_components());
+        // Pre-manifest checkpoints (no crate_version) still load…
+        let mut obj = match doc.clone() {
+            crate::json::Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.remove("crate_version");
+        assert!(Figmn::from_json(&crate::json::Json::Obj(obj)).is_ok());
+        // …but a malformed crate_version is rejected.
+        let bad = doc
+            .to_string_compact()
+            .replace(&format!("\"crate_version\":\"{}\"", crate::version()), "\"crate_version\":42");
+        assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
     }
 
     #[test]

@@ -45,6 +45,11 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
         &self.model
     }
 
+    /// Mutable access to the wrapped mixture (e.g. to attach an engine).
+    pub fn model_mut(&mut self) -> &mut M {
+        &mut self.model
+    }
+
     /// Present one labeled example (single-pass, online).
     pub fn train_one(&mut self, x: &[f64], class: usize) -> LearnOutcome {
         assert_eq!(x.len(), self.n_features);
@@ -55,6 +60,19 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
             joint.push(if c == class { 1.0 } else { 0.0 });
         }
         self.model.learn(&joint)
+    }
+
+    /// Present a batch of labeled examples in stream order (identical
+    /// to looping [`SupervisedGmm::train_one`]). Learning is sequential
+    /// in the stream, so joints are built one at a time — O(D) extra
+    /// memory — rather than materializing a second copy of the dataset;
+    /// an attached engine still shards each point's component work.
+    pub fn train_batch(&mut self, xs: &[Vec<f64>], classes: &[usize]) -> Vec<LearnOutcome> {
+        assert_eq!(xs.len(), classes.len());
+        xs.iter()
+            .zip(classes.iter())
+            .map(|(x, &class)| self.train_one(x, class))
+            .collect()
     }
 
     /// Present one raw joint vector `[features…, outputs…]` — regression
@@ -81,25 +99,20 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
     pub fn class_scores(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n_features);
         let raw = self.model.predict(x, &self.feature_idx, &self.class_idx);
-        let mut scores: Vec<f64> = raw.iter().map(|&v| v.max(0.0)).collect();
-        let total: f64 = scores.iter().sum();
-        if total <= 0.0 {
-            // Every activation clipped: fall back to softmax of raw.
-            let best = raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            let mut t = 0.0;
-            for (s, &r) in scores.iter_mut().zip(raw.iter()) {
-                *s = (r - best).exp();
-                t += *s;
-            }
-            for s in &mut scores {
-                *s /= t;
-            }
-        } else {
-            for s in &mut scores {
-                *s /= total;
-            }
+        clip_normalize(raw)
+    }
+
+    /// Batched class scores through the mixture's `predict_batch`
+    /// (identical to mapping [`SupervisedGmm::class_scores`]).
+    pub fn class_scores_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n_features);
         }
-        scores
+        self.model
+            .predict_batch(xs, &self.feature_idx, &self.class_idx)
+            .into_iter()
+            .map(clip_normalize)
+            .collect()
     }
 
     /// Hard classification: argmax of the class scores.
@@ -163,6 +176,30 @@ fn joint_stds(feature_stds: &[f64], n_classes: usize) -> Vec<f64> {
     stds
 }
 
+/// Clip the reconstructed one-hot block to non-negative and normalize to
+/// sum 1, falling back to a softmax when every activation clipped.
+fn clip_normalize(raw: Vec<f64>) -> Vec<f64> {
+    let mut scores: Vec<f64> = raw.iter().map(|&v| v.max(0.0)).collect();
+    let total: f64 = scores.iter().sum();
+    if total <= 0.0 {
+        // Every activation clipped: fall back to softmax of raw.
+        let best = raw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut t = 0.0;
+        for (s, &r) in scores.iter_mut().zip(raw.iter()) {
+            *s = (r - best).exp();
+            t += *s;
+        }
+        for s in &mut scores {
+            *s /= t;
+        }
+    } else {
+        for s in &mut scores {
+            *s /= total;
+        }
+    }
+    scores
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +249,27 @@ mod tests {
         assert_eq!(s.len(), 3);
         assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn batch_training_and_scoring_match_serial() {
+        let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.05).without_pruning();
+        let mut a = supervised_figmn(cfg.clone(), &[3.0, 3.0], 3);
+        let mut b = supervised_figmn(cfg, &[3.0, 3.0], 3);
+        let data = gaussian_blobs(150, 6);
+        for (x, y) in &data {
+            a.train_one(x, *y);
+        }
+        let xs: Vec<Vec<f64>> = data.iter().map(|(x, _)| x.clone()).collect();
+        let ys: Vec<usize> = data.iter().map(|(_, y)| *y).collect();
+        b.train_batch(&xs, &ys);
+        assert_eq!(a.num_components(), b.num_components());
+        let probes: Vec<Vec<f64>> =
+            gaussian_blobs(10, 7).into_iter().map(|(x, _)| x).collect();
+        let batch_scores = b.class_scores_batch(&probes);
+        for (x, bs) in probes.iter().zip(batch_scores.iter()) {
+            assert_eq!(&a.class_scores(x), bs);
+        }
     }
 
     #[test]

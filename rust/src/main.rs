@@ -14,6 +14,7 @@
 use figmn::coordinator::{serve, CheckpointStore, Metrics, Registry, ServerConfig};
 use figmn::data::synth::{self, TABLE1};
 use figmn::data::Dataset;
+use figmn::engine::EngineConfig;
 use figmn::eval::{multiclass_auc, Stopwatch};
 use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
 use figmn::gmm::GmmConfig;
@@ -82,7 +83,10 @@ fn cmd_datasets() -> i32 {
 fn cmd_train(args: &[String]) -> i32 {
     let (pos, flags) = parse_flags(args);
     let Some(name) = pos.first() else {
-        eprintln!("usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] [--seed N]");
+        eprintln!(
+            "usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] \
+             [--seed N] [--threads T]"
+        );
         return 2;
     };
     let Some(spec) = synth::spec(name) else {
@@ -93,6 +97,9 @@ fn cmd_train(args: &[String]) -> i32 {
     let beta: f64 = flags.get("beta").map(|s| s.parse().unwrap()).unwrap_or(0.05);
     let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap()).unwrap_or(42);
     let algo = flags.get("algo").map(String::as_str).unwrap_or("fast");
+    // Component-sharded engine threads (1 = serial; results identical).
+    let threads: usize = flags.get("threads").map(|s| s.parse().unwrap()).unwrap_or(1);
+    let engine = (threads > 1).then(|| EngineConfig::new(threads));
 
     let data = synth::generate(spec, seed);
     let stds = data.feature_stds();
@@ -107,20 +114,14 @@ fn cmd_train(args: &[String]) -> i32 {
     let mut sw = Stopwatch::new();
     let (scores, components): (Vec<Vec<f64>>, usize) = if algo == "orig" {
         let mut clf = supervised_igmn(cfg, &stds, data.n_classes);
-        sw.time(|| {
-            for (x, &y) in train.features.iter().zip(train.labels.iter()) {
-                clf.train_one(x, y);
-            }
-        });
-        (test.features.iter().map(|x| clf.class_scores(x)).collect(), clf.num_components())
+        clf.model_mut().set_engine(engine);
+        sw.time(|| clf.train_batch(&train.features, &train.labels));
+        (clf.class_scores_batch(&test.features), clf.num_components())
     } else {
         let mut clf = supervised_figmn(cfg, &stds, data.n_classes);
-        sw.time(|| {
-            for (x, &y) in train.features.iter().zip(train.labels.iter()) {
-                clf.train_one(x, y);
-            }
-        });
-        (test.features.iter().map(|x| clf.class_scores(x)).collect(), clf.num_components())
+        clf.model_mut().set_engine(engine);
+        sw.time(|| clf.train_batch(&train.features, &train.labels));
+        (clf.class_scores_batch(&test.features), clf.num_components())
     };
 
     let auc = multiclass_auc(&scores, &test.labels, data.n_classes);

@@ -1,0 +1,180 @@
+//! Engine determinism property tests (the crate's headline guarantee):
+//! on the paper's Table 1 synthetic streams, `Figmn` must produce
+//! **bit-identical** components, log-dets, posteriors, and predictions
+//! for thread counts {1, 2, 4} (and the serial no-engine path), and the
+//! sharded `Figmn` must still match `Igmn` within the paper's §4
+//! equivalence tolerance.
+
+use figmn::data::synth;
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture};
+use figmn::rng::Pcg64;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn figmn_with_threads(cfg: &GmmConfig, stds: &[f64], threads: Option<usize>) -> Figmn {
+    let mut m = Figmn::new(cfg.clone(), stds);
+    if let Some(t) = threads {
+        m.set_engine(Some(EngineConfig::new(t)));
+    }
+    m
+}
+
+/// Bitwise equality of full model state plus probe-point outputs.
+fn assert_bit_identical(a: &Figmn, b: &Figmn, probes: &[Vec<f64>], tag: &str) {
+    assert_eq!(a.num_components(), b.num_components(), "{tag}: K");
+    for j in 0..a.num_components() {
+        assert_eq!(a.component_mean(j), b.component_mean(j), "{tag}: mean[{j}]");
+        assert_eq!(
+            a.component_lambda(j).as_slice(),
+            b.component_lambda(j).as_slice(),
+            "{tag}: lambda[{j}]"
+        );
+        assert!(
+            a.component_log_det(j) == b.component_log_det(j),
+            "{tag}: log_det[{j}] {} vs {}",
+            a.component_log_det(j),
+            b.component_log_det(j)
+        );
+        assert_eq!(a.component_stats(j), b.component_stats(j), "{tag}: sp/v[{j}]");
+    }
+    for (i, x) in probes.iter().enumerate() {
+        assert_eq!(a.posteriors(x), b.posteriors(x), "{tag}: posteriors[{i}]");
+        assert!(
+            a.log_density(x) == b.log_density(x),
+            "{tag}: log_density[{i}]"
+        );
+        let d = a.dim();
+        let known: Vec<usize> = (0..d - 1).collect();
+        assert_eq!(
+            a.predict(&x[..d - 1], &known, &[d - 1]),
+            b.predict(&x[..d - 1], &known, &[d - 1]),
+            "{tag}: predict[{i}]"
+        );
+    }
+    // Batch entry points agree with each other too.
+    assert_eq!(a.score_batch(probes), b.score_batch(probes), "{tag}: score_batch");
+}
+
+/// Table 1 streams → every thread count produces the serial model, bit
+/// for bit.
+#[test]
+fn table1_streams_bit_identical_across_thread_counts() {
+    for name in ["iris", "Glass", "ionosphere"] {
+        let spec = synth::spec(name).unwrap();
+        let data = synth::generate(spec, 7);
+        let stds = data.feature_stds();
+        // Growth-friendly config so K climbs well past the parallel-work
+        // gate on the wider datasets.
+        let cfg = GmmConfig::new(data.dim())
+            .with_delta(0.1)
+            .with_beta(0.1)
+            .with_max_components(64)
+            .without_pruning();
+
+        let mut serial = figmn_with_threads(&cfg, &stds, None);
+        for x in &data.features {
+            serial.learn(x);
+        }
+        assert!(serial.num_components() >= 2, "{name}: stream too tame");
+
+        let mut rng = Pcg64::seed(11);
+        let probes: Vec<Vec<f64>> = (0..10)
+            .map(|_| (0..data.dim()).map(|_| rng.normal() * 2.0).collect())
+            .collect();
+
+        for t in THREAD_COUNTS {
+            let mut pooled = figmn_with_threads(&cfg, &stds, Some(t));
+            // Exercise the batch learn path on the engine side.
+            pooled.learn_batch(&data.features);
+            assert_bit_identical(&serial, &pooled, &probes, &format!("{name} T={t}"));
+        }
+    }
+}
+
+/// A wide high-K stream (K ≈ 64, D = 24) that is guaranteed to cross the
+/// engine's parallel-work gate, so the pool demonstrably runs.
+#[test]
+fn high_k_stream_bit_identical_and_gate_crossed() {
+    let d = 24;
+    let k_cap = 64;
+    let mut rng = Pcg64::seed(3);
+    let centers: Vec<Vec<f64>> =
+        (0..k_cap).map(|_| (0..d).map(|_| rng.normal() * 30.0).collect()).collect();
+    let stream: Vec<Vec<f64>> = (0..600)
+        .map(|i| centers[i % k_cap].iter().map(|&c| c + rng.normal() * 0.5).collect())
+        .collect();
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(k_cap)
+        .without_pruning();
+    let stds = vec![1.0; d];
+
+    let mut serial = Figmn::new(cfg.clone(), &stds);
+    for x in &stream {
+        serial.learn(x);
+    }
+    // K·D² = 64·576 ≫ the gate threshold: the sharded path really ran.
+    assert_eq!(serial.num_components(), k_cap);
+
+    let probes: Vec<Vec<f64>> = stream[..8].to_vec();
+    for t in THREAD_COUNTS {
+        let mut pooled = Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(t));
+        pooled.learn_batch(&stream);
+        assert_bit_identical(&serial, &pooled, &probes, &format!("high-K T={t}"));
+        // predict_batch through the pool matches per-point predict.
+        let known: Vec<usize> = (0..d - 1).collect();
+        let kvs: Vec<Vec<f64>> = probes.iter().map(|x| x[..d - 1].to_vec()).collect();
+        let batch = pooled.predict_batch(&kvs, &known, &[d - 1]);
+        for (kv, b) in kvs.iter().zip(batch.iter()) {
+            assert_eq!(&serial.predict(kv, &known, &[d - 1]), b, "predict_batch T={t}");
+        }
+    }
+}
+
+/// The sharded fast model still matches the covariance baseline within
+/// the paper's §4 equivalence tolerance.
+#[test]
+fn sharded_figmn_matches_igmn_within_paper_tolerance() {
+    let rel = |a: f64, b: f64| {
+        let scale = a.abs().max(b.abs()).max(1e-300);
+        (a - b).abs() / scale
+    };
+    for name in ["iris", "Glass"] {
+        let spec = synth::spec(name).unwrap();
+        let data = synth::generate(spec, 13);
+        let stds = data.feature_stds();
+        let cfg = GmmConfig::new(data.dim()).with_delta(0.5).with_beta(0.05).without_pruning();
+
+        let mut fast = Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(4));
+        let mut slow = Igmn::new(cfg, &stds).with_engine(EngineConfig::new(2));
+        for (step, x) in data.features.iter().enumerate() {
+            let a = fast.learn(x);
+            let b = slow.learn(x);
+            assert_eq!(a, b, "{name}: create/update diverged at step {step}");
+        }
+        assert_eq!(fast.num_components(), slow.num_components(), "{name}");
+
+        for j in 0..fast.num_components() {
+            for (u, v) in fast.component_mean(j).iter().zip(slow.component_mean(j).iter()) {
+                assert!(rel(*u, *v) < 1e-6, "{name}: mean[{j}] {u} vs {v}");
+            }
+            let (sp_a, v_a) = fast.component_stats(j);
+            let (sp_b, v_b) = slow.component_stats(j);
+            assert!(rel(sp_a, sp_b) < 1e-6, "{name}: sp[{j}]");
+            assert_eq!(v_a, v_b, "{name}: v[{j}]");
+        }
+        let mut rng = Pcg64::seed(29);
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..data.dim()).map(|_| rng.normal() * 2.0).collect();
+            assert!(
+                rel(fast.log_density(&x), slow.log_density(&x)) < 1e-6,
+                "{name}: log_density"
+            );
+            for (u, v) in fast.posteriors(&x).iter().zip(slow.posteriors(&x).iter()) {
+                assert!((u - v).abs() < 1e-6, "{name}: posterior {u} vs {v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Offline stand-in for the `log` facade crate.
+//!
+//! The container's vendor set has no crates.io access, so this tiny
+//! path-dependency provides the macro surface the codebase uses
+//! (`log::warn!`, `log::debug!`, …). Messages go to stderr only when
+//! `FIGMN_LOG=1` is set; otherwise logging is a no-op. Replace with the
+//! real `log` crate via a registry dependency when one is available.
+
+/// Emit a record (used by the macros; not part of the real `log` API).
+pub fn __emit(level: &str, args: std::fmt::Arguments<'_>) {
+    if std::env::var_os("FIGMN_LOG").is_some() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_run() {
+        crate::error!("e {}", 1);
+        crate::warn!("w {}", 2);
+        crate::info!("i {}", 3);
+        crate::debug!("d {}", 4);
+        crate::trace!("t {}", 5);
+    }
+}

@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` (xla_extension) PJRT binding.
+//!
+//! The real binding links against a prebuilt XLA shared library that is
+//! not in this container. This stub keeps `figmn::runtime` compiling with
+//! the exact same API surface; [`PjRtClient::cpu`] fails cleanly, so every
+//! caller falls back to the native Rust path (the coordinator workers and
+//! the CLI already handle that fallback — artifacts are optional).
+//!
+//! To use real XLA artifacts, point Cargo at the actual binding with a
+//! `[patch]` section; no source changes are needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only here).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!("{what}: xla runtime not available in this offline build"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// A host-side literal (shape-erased; carries nothing in the stub).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device, per-output
+    /// buffers in the real binding.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub, so
+/// no other method here is reachable in practice.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn constructors_are_callable() {
+        let l = Literal::vec1(&[1.0, 2.0]);
+        assert!(l.reshape(&[2, 1]).is_ok());
+        let _ = Literal::scalar(0.5);
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
