@@ -1,0 +1,237 @@
+//! Serving read-path experiment: snapshot-served read throughput vs
+//! scorer-thread count while a learner streams concurrently through the
+//! same model's write path.
+//!
+//! This is the empirical check for the coordinator's read–write split:
+//! scoring is pure and served from immutable `ModelSnapshot`s, so read
+//! throughput should scale with scorer threads even though the learn
+//! path stays strictly sequential per shard. It also re-verifies the
+//! split's correctness contract: snapshot scoring is bit-identical to a
+//! serial model trained on the same prefix.
+//!
+//! Acceptance target (full mode, ≥ 4 cores): ≥ 2× read throughput at
+//! D = 64 features, K ≥ 32 components with 4 scorers vs. 1 scorer,
+//! under concurrent learn traffic.
+//!
+//! Run: `cargo bench --bench serving_read_path`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench serving_read_path`
+//! Writes `BENCH_serving_read_path.json`.
+
+use figmn::bench_support::{quick_mode, write_bench_json, TablePrinter};
+use figmn::coordinator::{Metrics, ModelSpec, Registry, RoutingPolicy};
+use figmn::gmm::supervised::supervised_figmn;
+use figmn::gmm::{GmmConfig, IncrementalMixture};
+use figmn::json::Json;
+use figmn::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const D: usize = 64; // feature dims (joint = D + N_CLASSES)
+const N_CLASSES: usize = 2;
+const K_TARGET: usize = 40; // component cap; stream is built to reach ≥ 32
+const SNAPSHOT_INTERVAL: usize = 32;
+
+fn gmm_config() -> GmmConfig {
+    GmmConfig::new(1)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(K_TARGET)
+        .without_pruning()
+}
+
+/// Labeled stream around K_TARGET well-separated centers.
+fn build_stream(n: usize, seed: u64) -> Vec<(Vec<f64>, usize)> {
+    let mut rng = Pcg64::seed(seed);
+    let centers: Vec<Vec<f64>> = (0..K_TARGET)
+        .map(|_| (0..D).map(|_| rng.normal() * 40.0).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let c = i % K_TARGET;
+            let x: Vec<f64> =
+                centers[c].iter().map(|&v| v + rng.normal() * 0.5).collect();
+            (x, c % N_CLASSES)
+        })
+        .collect()
+}
+
+/// The correctness gate: a snapshot exported after the prefix scores
+/// bit-identically to the serial model that learned the same prefix.
+fn verify_bit_identity(prefix: &[(Vec<f64>, usize)]) {
+    let mut serial = supervised_figmn(gmm_config(), &[1.0; D], N_CLASSES);
+    for (x, y) in prefix {
+        serial.train_one(x, *y);
+    }
+    let snap = serial.snapshot().expect("trained model must snapshot");
+    let mut rng = Pcg64::seed(7);
+    for _ in 0..20 {
+        let probe: Vec<f64> = (0..D).map(|_| rng.normal() * 30.0).collect();
+        assert_eq!(
+            snap.class_scores(&probe),
+            serial.class_scores(&probe),
+            "snapshot predict diverged from serial model"
+        );
+        let mut joint = probe.clone();
+        joint.extend([1.0, 0.0]);
+        assert!(
+            snap.log_density(&joint) == serial.model().log_density(&joint),
+            "snapshot log_density bits diverged from serial model"
+        );
+    }
+    println!("  bit-identity OK (snapshot ≡ serial model on the same prefix)");
+}
+
+/// Measure read throughput with `scorers` scorer threads and `clients`
+/// concurrent readers while a learner streams. Returns reads/sec.
+fn measure(
+    scorers: usize,
+    clients: usize,
+    reads_per_client: usize,
+    warmup: &[(Vec<f64>, usize)],
+    learn_stream: &[(Vec<f64>, usize)],
+) -> f64 {
+    let registry = Arc::new(Registry::new(Arc::new(Metrics::new())).with_scorers(scorers));
+    registry
+        .create(
+            ModelSpec::new("serve", D, N_CLASSES)
+                .with_gmm(gmm_config())
+                .with_stds(vec![1.0; D])
+                .with_shards(1, RoutingPolicy::RoundRobin)
+                .with_snapshot_interval(SNAPSHOT_INTERVAL),
+        )
+        .unwrap();
+    let router = registry.router("serve").unwrap();
+    for (x, y) in warmup {
+        router.learn(x.clone(), *y).unwrap();
+    }
+    // Drain the queue so the model holds the full warmup, then wait for
+    // the snapshot to cover it (interval or idle republish) — bounded,
+    // so a publishing regression fails the bench instead of hanging CI.
+    registry.stats("serve").unwrap();
+    let snap = router.shards()[0]
+        .wait_snapshot_points(warmup.len() as u64, 5000)
+        .expect("snapshot never caught up to the warmup stream");
+    assert!(snap.num_components() >= 32, "stream must grow K ≥ 32");
+
+    // Learner: keeps write traffic flowing for the whole measurement.
+    let stop = Arc::new(AtomicBool::new(false));
+    let learner = {
+        let router = registry.router("serve").unwrap();
+        let stop = stop.clone();
+        let stream = learn_stream.to_vec();
+        std::thread::spawn(move || {
+            let mut i = 0usize;
+            let mut learned = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let (x, y) = &stream[i % stream.len()];
+                if router.learn(x.clone(), *y).is_err() {
+                    break;
+                }
+                learned += 1;
+                i += 1;
+            }
+            learned
+        })
+    };
+
+    // Readers: each issues snapshot-served predicts and scores.
+    let total_reads = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let router = registry.router("serve").unwrap();
+        let total = total_reads.clone();
+        let probes: Vec<Vec<f64>> = {
+            let mut rng = Pcg64::seed(100 + c as u64);
+            (0..16).map(|_| (0..D).map(|_| rng.normal() * 30.0).collect()).collect()
+        };
+        handles.push(std::thread::spawn(move || {
+            for r in 0..reads_per_client {
+                let p = &probes[r % probes.len()];
+                router.predict_read(p).expect("read path must serve");
+                total.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    let learned = learner.join().unwrap();
+    let reads = total_reads.load(Ordering::Relaxed);
+    assert!(learned > 0, "learner must actually stream during the measurement");
+    reads as f64 / secs
+}
+
+fn main() {
+    let quick = quick_mode();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let scorer_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let clients = 8;
+    let warmup_n = if quick { 600 } else { 2000 };
+    let reads_per_client = if quick { 100 } else { 1500 };
+
+    println!(
+        "serving_read_path — snapshot read throughput vs scorers \
+         (D={D}+{N_CLASSES}, K≥32, clients={clients}, cores={cores}{})",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let warmup = build_stream(warmup_n, 42);
+    let learn_stream = build_stream(2000, 43);
+    verify_bit_identity(&warmup);
+
+    let table = TablePrinter::new(&["scorers", "reads/s", "speedup"], &[8, 12, 10]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_rate = 0.0;
+    let mut speedup_1_to_4 = 0.0;
+    for &s in scorer_counts {
+        let rate = measure(s, clients, reads_per_client, &warmup, &learn_stream);
+        if s == 1 {
+            base_rate = rate;
+        }
+        let speedup = rate / base_rate;
+        if s == 4 {
+            speedup_1_to_4 = speedup;
+        }
+        table.row(&[s.to_string(), format!("{rate:10.0}"), format!("{speedup:7.2}×")]);
+        rows.push(Json::obj(vec![
+            ("scorers", s.into()),
+            ("clients", clients.into()),
+            ("reads_per_sec", rate.into()),
+            ("speedup_vs_one_scorer", speedup.into()),
+        ]));
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", "serving_read_path".into()),
+        ("dim_features", D.into()),
+        ("n_classes", N_CLASSES.into()),
+        ("k_target", K_TARGET.into()),
+        ("snapshot_interval", SNAPSHOT_INTERVAL.into()),
+        ("quick", quick.into()),
+        ("cores", cores.into()),
+        ("bit_identical", true.into()),
+        ("speedup_1_to_4_scorers", speedup_1_to_4.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("serving_read_path", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    if !quick && cores >= 4 {
+        assert!(
+            speedup_1_to_4 >= 2.0,
+            "4-scorer read speedup is {speedup_1_to_4:.2}× (< 2×) at D={D}, K≥32"
+        );
+        println!("serving_read_path OK — {speedup_1_to_4:.2}× read throughput 1→4 scorers");
+    } else {
+        println!(
+            "serving_read_path done (speedup {speedup_1_to_4:.2}×; \
+             assertion skipped: quick={quick}, cores={cores})"
+        );
+    }
+}

@@ -17,6 +17,13 @@ pub struct Metrics {
     learn_latency: Mutex<Welford>,
     predict_latency: Mutex<Welford>,
     batch_sizes: Mutex<Welford>,
+    // --- read-path (snapshot) counters ---
+    snapshots_published: AtomicU64,
+    snapshot_reads: AtomicU64,
+    snapshot_fallbacks: AtomicU64,
+    /// Learn steps between consecutive publishes — the staleness bound
+    /// actually observed (≤ snapshot_interval by construction).
+    snapshot_lag: Mutex<Welford>,
 }
 
 impl Metrics {
@@ -43,10 +50,29 @@ impl Metrics {
         self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A worker republished its read snapshot after `lag_points` learn
+    /// steps (the staleness the previous snapshot had accumulated).
+    pub fn record_snapshot_publish(&self, lag_points: u64) {
+        self.snapshots_published.fetch_add(1, Ordering::Relaxed);
+        self.snapshot_lag.lock().unwrap().push(lag_points as f64);
+    }
+
+    /// A read-class request (score/predict) was served from snapshots.
+    pub fn record_snapshot_read(&self) {
+        self.snapshot_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A read-class request fell back to the sequential write path
+    /// (no snapshot published yet).
+    pub fn record_snapshot_fallback(&self) {
+        self.snapshot_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let learn = self.learn_latency.lock().unwrap().clone();
         let predict = self.predict_latency.lock().unwrap().clone();
         let batch = self.batch_sizes.lock().unwrap().clone();
+        let lag = self.snapshot_lag.lock().unwrap().clone();
         MetricsSnapshot {
             learned: self.learned.load(Ordering::Relaxed),
             predicted: self.predicted.load(Ordering::Relaxed),
@@ -57,6 +83,11 @@ impl Metrics {
             predict_latency_mean_s: predict.mean(),
             predict_latency_max_s: if predict.count() > 0 { predict.max() } else { 0.0 },
             mean_batch: batch.mean(),
+            snapshots_published: self.snapshots_published.load(Ordering::Relaxed),
+            snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
+            snapshot_fallbacks: self.snapshot_fallbacks.load(Ordering::Relaxed),
+            snapshot_lag_mean_points: lag.mean(),
+            snapshot_lag_max_points: if lag.count() > 0 { lag.max() } else { 0.0 },
         }
     }
 }
@@ -73,6 +104,11 @@ pub struct MetricsSnapshot {
     pub predict_latency_mean_s: f64,
     pub predict_latency_max_s: f64,
     pub mean_batch: f64,
+    pub snapshots_published: u64,
+    pub snapshot_reads: u64,
+    pub snapshot_fallbacks: u64,
+    pub snapshot_lag_mean_points: f64,
+    pub snapshot_lag_max_points: f64,
 }
 
 impl MetricsSnapshot {
@@ -87,6 +123,11 @@ impl MetricsSnapshot {
             ("predict_latency_mean_s", self.predict_latency_mean_s.into()),
             ("predict_latency_max_s", self.predict_latency_max_s.into()),
             ("mean_batch", self.mean_batch.into()),
+            ("snapshots_published", (self.snapshots_published as usize).into()),
+            ("snapshot_reads", (self.snapshot_reads as usize).into()),
+            ("snapshot_fallbacks", (self.snapshot_fallbacks as usize).into()),
+            ("snapshot_lag_mean_points", self.snapshot_lag_mean_points.into()),
+            ("snapshot_lag_max_points", self.snapshot_lag_max_points.into()),
         ])
     }
 }
@@ -109,6 +150,21 @@ mod tests {
         assert_eq!(s.shed, 1);
         assert_eq!(s.mean_batch, 8.0);
         assert!(s.learn_latency_mean_s >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_read_path_counters() {
+        let m = Metrics::new();
+        m.record_snapshot_publish(8);
+        m.record_snapshot_publish(4);
+        m.record_snapshot_read();
+        m.record_snapshot_fallback();
+        let s = m.snapshot();
+        assert_eq!(s.snapshots_published, 2);
+        assert_eq!(s.snapshot_reads, 1);
+        assert_eq!(s.snapshot_fallbacks, 1);
+        assert_eq!(s.snapshot_lag_mean_points, 6.0);
+        assert_eq!(s.snapshot_lag_max_points, 8.0);
     }
 
     #[test]

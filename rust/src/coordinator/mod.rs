@@ -7,22 +7,53 @@
 //! - [`worker`] — one OS thread per model shard; owns a native
 //!   [`crate::gmm::SupervisedGmm`] (learning is inherently sequential per
 //!   model) and, when AOT artifacts are available, an XLA batch-scoring
-//!   path for inference traffic.
+//!   path for inference traffic. Every `snapshot_interval` learn steps it
+//!   republishes an immutable [`crate::gmm::ModelSnapshot`] into a shared
+//!   [`worker::SnapshotCell`] for the read path.
+//! - [`scorer`] — the read half of the read–write split: a fixed pool of
+//!   scorer threads serving `score`/`predict` traffic from published
+//!   snapshots, never queueing behind the learn path.
 //! - [`router`] — spreads records across shards (round-robin /
-//!   feature-hash / broadcast-ensemble policies).
+//!   feature-hash / broadcast-ensemble policies) and splits traffic into
+//!   a **write class** (learn + sequential read-your-writes predict,
+//!   through the worker queues) and a **read class**
+//!   (`score_read`/`predict_read`/`*_batch_read`, served from snapshots
+//!   on the scorer pool).
 //! - [`batcher`] — groups inference requests into size-or-deadline
 //!   micro-batches before they hit a worker.
 //! - [`backpressure`] — bounded queues with block/drop policies between
 //!   all stages.
 //! - [`registry`] — named-model lifecycle (create, lookup, drop,
-//!   checkpoint).
+//!   checkpoint); owns the shared scorer pool.
 //! - [`server`] — a line-delimited-JSON TCP front end over the
-//!   [`protocol`] types.
-//! - [`metrics`] — per-stage counters and latency statistics.
+//!   [`protocol`] types; connection handlers are tracked and joined on
+//!   shutdown.
+//! - [`metrics`] — per-stage counters and latency statistics, including
+//!   snapshot publish counts and observed read staleness.
+//!
+//! ## Snapshot staleness contract
+//!
+//! Read-class results may lag the model's **applied** learn stream by
+//! fewer than `snapshot_interval` learn steps while the stream flows
+//! (the worker republishes every N applied learns), plus at most one
+//! worker queue timeout (~50 ms) when the stream pauses (the idle
+//! republish catches the snapshot up). Learns that are accepted but
+//! still sitting in a shard's command queue are not yet applied, so
+//! under backlog the lag relative to *enqueued* writes can additionally
+//! reach the queue depth (`WorkerConfig::queue_capacity`) — the
+//! sequential `predict` path is the one that observes every queued
+//! learn. Within one snapshot, results are deterministic and
+//! bit-identical to a serial model trained on the same prefix. Pick a
+//! small `snapshot_interval` (the default is 8) when reads must track
+//! writes closely; raise it — or set it to 0 on write-only workloads —
+//! to avoid the `O(K·D²)` copy per publish when learn throughput
+//! matters more than read freshness.
 //!
 //! Threading model: plain `std::thread` + `std::sync::mpsc` (the offline
 //! vendor set has no tokio — DESIGN.md §5); every queue is bounded, so
-//! backpressure propagates from workers to the ingest edge.
+//! backpressure propagates from workers to the ingest edge. Read traffic
+//! is the exception by design: it touches only the snapshot cells and
+//! the scorer pool, so a saturated learn queue cannot stall scoring.
 
 pub mod backpressure;
 pub mod batcher;
@@ -31,6 +62,7 @@ pub mod metrics;
 pub mod protocol;
 pub mod registry;
 pub mod router;
+pub mod scorer;
 pub mod server;
 pub mod worker;
 
@@ -40,8 +72,9 @@ pub use checkpoint::CheckpointStore;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{ModelSpec, Registry};
 pub use router::{Router, RoutingPolicy};
+pub use scorer::ScorerPool;
 pub use server::{serve, ServerConfig};
-pub use worker::{Worker, WorkerHandle, WorkerStats};
+pub use worker::{SnapshotCell, Worker, WorkerHandle, WorkerStats, DEFAULT_SNAPSHOT_INTERVAL};
 
 /// Coordinator-level errors.
 #[derive(Debug)]

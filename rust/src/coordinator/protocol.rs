@@ -22,8 +22,22 @@ pub enum Request {
     },
     /// Present one labeled example.
     Learn { model: String, features: Vec<f64>, label: usize },
-    /// Request class scores for one example.
+    /// Request class scores for one example (write/sequential class:
+    /// observes every learn queued before it).
     Predict { model: String, features: Vec<f64> },
+    /// Request class scores from the snapshot read path (`{"op":
+    /// "predict","snapshot":true}`): served lock-free from the latest
+    /// published model snapshot, lagging learns by fewer than the
+    /// model's `snapshot_interval` points; falls back to the sequential
+    /// path until a first snapshot exists.
+    PredictSnapshot { model: String, features: Vec<f64> },
+    /// Joint log-density of one full joint vector (features + output
+    /// block), served from the snapshot read path.
+    Score { model: String, x: Vec<f64> },
+    /// Batched [`Request::Score`].
+    ScoreBatch { model: String, xs: Vec<Vec<f64>> },
+    /// Batched class scores, served from the snapshot read path.
+    PredictBatch { model: String, xs: Vec<Vec<f64>> },
     /// Present one regression example (continuous targets — the paper's
     /// autoassociative mode, §1/§2.4).
     LearnReg { model: String, features: Vec<f64>, targets: Vec<f64> },
@@ -49,6 +63,12 @@ pub enum Response {
     Scores { scores: Vec<f64>, class: usize },
     /// Reconstructed continuous targets.
     Targets { targets: Vec<f64> },
+    /// Joint log-density (snapshot read path).
+    Density { density: f64 },
+    /// Batched joint log-densities.
+    Densities { densities: Vec<f64> },
+    /// Batched class scores + argmax classes.
+    ScoresBatch { scores: Vec<Vec<f64>>, classes: Vec<usize> },
     Stats(Json),
     Error(String),
 }
@@ -78,6 +98,27 @@ impl Request {
                 ("op", "predict".into()),
                 ("model", model.as_str().into()),
                 ("features", Json::num_array(features)),
+            ]),
+            Request::PredictSnapshot { model, features } => Json::obj(vec![
+                ("op", "predict".into()),
+                ("model", model.as_str().into()),
+                ("features", Json::num_array(features)),
+                ("snapshot", true.into()),
+            ]),
+            Request::Score { model, x } => Json::obj(vec![
+                ("op", "score".into()),
+                ("model", model.as_str().into()),
+                ("x", Json::num_array(x)),
+            ]),
+            Request::ScoreBatch { model, xs } => Json::obj(vec![
+                ("op", "score_batch".into()),
+                ("model", model.as_str().into()),
+                ("xs", Json::Arr(xs.iter().map(|x| Json::num_array(x)).collect())),
+            ]),
+            Request::PredictBatch { model, xs } => Json::obj(vec![
+                ("op", "predict_batch".into()),
+                ("model", model.as_str().into()),
+                ("xs", Json::Arr(xs.iter().map(|x| Json::num_array(x)).collect())),
             ]),
             Request::LearnReg { model, features, targets } => Json::obj(vec![
                 ("op", "learn_reg".into()),
@@ -121,6 +162,12 @@ impl Request {
                 .and_then(Json::to_f64_vec)
                 .ok_or_else(|| CoordError::Protocol("missing features".into()))
         };
+        let rows = |key: &str| -> Result<Vec<Vec<f64>>, CoordError> {
+            doc.get(key)
+                .and_then(Json::as_array)
+                .and_then(|a| a.iter().map(Json::to_f64_vec).collect::<Option<Vec<_>>>())
+                .ok_or_else(|| CoordError::Protocol(format!("missing/malformed {key}")))
+        };
         match op {
             "create_model" => {
                 let get_n = |k: &str| {
@@ -153,7 +200,24 @@ impl Request {
                     .and_then(Json::as_usize)
                     .ok_or_else(|| CoordError::Protocol("missing label".into()))?,
             }),
-            "predict" => Ok(Request::Predict { model: model()?, features: features()? }),
+            "predict" => {
+                let snapshot =
+                    doc.get("snapshot").and_then(Json::as_bool).unwrap_or(false);
+                if snapshot {
+                    Ok(Request::PredictSnapshot { model: model()?, features: features()? })
+                } else {
+                    Ok(Request::Predict { model: model()?, features: features()? })
+                }
+            }
+            "score" => Ok(Request::Score {
+                model: model()?,
+                x: doc
+                    .get("x")
+                    .and_then(Json::to_f64_vec)
+                    .ok_or_else(|| CoordError::Protocol("missing x".into()))?,
+            }),
+            "score_batch" => Ok(Request::ScoreBatch { model: model()?, xs: rows("xs")? }),
+            "predict_batch" => Ok(Request::PredictBatch { model: model()?, xs: rows("xs")? }),
             "learn_reg" => Ok(Request::LearnReg {
                 model: model()?,
                 features: features()?,
@@ -187,6 +251,22 @@ impl Response {
                 ("ok", true.into()),
                 ("targets", Json::num_array(targets)),
             ]),
+            Response::Density { density } => Json::obj(vec![
+                ("ok", true.into()),
+                ("density", (*density).into()),
+            ]),
+            Response::Densities { densities } => Json::obj(vec![
+                ("ok", true.into()),
+                ("densities", Json::num_array(densities)),
+            ]),
+            Response::ScoresBatch { scores, classes } => Json::obj(vec![
+                ("ok", true.into()),
+                ("batch", Json::Arr(scores.iter().map(|s| Json::num_array(s)).collect())),
+                (
+                    "classes",
+                    Json::Arr(classes.iter().map(|&c| Json::from(c)).collect()),
+                ),
+            ]),
             Response::Stats(j) => {
                 Json::obj(vec![("ok", true.into()), ("stats", j.clone())])
             }
@@ -210,6 +290,24 @@ impl Response {
         if let Some(scores) = doc.get("scores").and_then(Json::to_f64_vec) {
             let class = doc.get("class").and_then(Json::as_usize).unwrap_or(0);
             return Ok(Response::Scores { scores, class });
+        }
+        if let Some(density) = doc.get("density").and_then(Json::as_f64) {
+            return Ok(Response::Density { density });
+        }
+        if let Some(densities) = doc.get("densities").and_then(Json::to_f64_vec) {
+            return Ok(Response::Densities { densities });
+        }
+        if let Some(batch) = doc.get("batch").and_then(Json::as_array) {
+            let scores: Option<Vec<Vec<f64>>> =
+                batch.iter().map(Json::to_f64_vec).collect();
+            let scores =
+                scores.ok_or_else(|| CoordError::Protocol("malformed batch".into()))?;
+            let classes: Vec<usize> = doc
+                .get("classes")
+                .and_then(Json::as_array)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            return Ok(Response::ScoresBatch { scores, classes });
         }
         if let Some(targets) = doc.get("targets").and_then(Json::to_f64_vec) {
             return Ok(Response::Targets { targets });
@@ -239,6 +337,16 @@ mod tests {
             },
             Request::Learn { model: "m".into(), features: vec![0.5, -1.0], label: 2 },
             Request::Predict { model: "m".into(), features: vec![0.0, 1.0] },
+            Request::PredictSnapshot { model: "m".into(), features: vec![0.0, 1.0] },
+            Request::Score { model: "m".into(), x: vec![0.0, 1.0, 0.5] },
+            Request::ScoreBatch {
+                model: "m".into(),
+                xs: vec![vec![0.0, 1.0, 0.5], vec![1.0, 0.0, 0.5]],
+            },
+            Request::PredictBatch {
+                model: "m".into(),
+                xs: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+            },
             Request::LearnReg {
                 model: "m".into(),
                 features: vec![0.5],
@@ -265,6 +373,12 @@ mod tests {
             Response::Pong,
             Response::Scores { scores: vec![0.2, 0.8], class: 1 },
             Response::Targets { targets: vec![3.25, -1.0] },
+            Response::Density { density: -12.5 },
+            Response::Densities { densities: vec![-1.0, -2.5] },
+            Response::ScoresBatch {
+                scores: vec![vec![0.9, 0.1], vec![0.25, 0.75]],
+                classes: vec![0, 1],
+            },
             Response::Error("boom".into()),
         ];
         for r in resps {
@@ -296,5 +410,22 @@ mod tests {
         assert!(Request::from_line(r#"{"op":"zap"}"#).is_err());
         assert!(Request::from_line(r#"{"op":"learn","model":"m"}"#).is_err());
         assert!(Request::from_line(r#"{"op":"learn","features":[1],"label":0}"#).is_err());
+        assert!(Request::from_line(r#"{"op":"score","model":"m"}"#).is_err());
+        assert!(Request::from_line(r#"{"op":"score_batch","model":"m","xs":[1]}"#).is_err());
+        assert!(Request::from_line(r#"{"op":"predict_batch","model":"m"}"#).is_err());
+    }
+
+    #[test]
+    fn predict_snapshot_flag_selects_read_class() {
+        let r = Request::from_line(
+            r#"{"op":"predict","model":"m","features":[1.0],"snapshot":true}"#,
+        )
+        .unwrap();
+        assert!(matches!(r, Request::PredictSnapshot { .. }));
+        let r = Request::from_line(
+            r#"{"op":"predict","model":"m","features":[1.0],"snapshot":false}"#,
+        )
+        .unwrap();
+        assert!(matches!(r, Request::Predict { .. }));
     }
 }

@@ -3,13 +3,14 @@
 use super::checkpoint::CheckpointStore;
 use super::metrics::Metrics;
 use super::router::{Router, RoutingPolicy};
-use super::worker::{Worker, WorkerConfig, WorkerStats};
+use super::scorer::ScorerPool;
+use super::worker::{Worker, WorkerConfig, WorkerStats, DEFAULT_SNAPSHOT_INTERVAL};
 use super::{CoordError, Result};
 use crate::engine::EngineConfig;
 use crate::gmm::GmmConfig;
 use crate::json::Json;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Everything needed to create a model's shard group.
 #[derive(Clone)]
@@ -26,6 +27,10 @@ pub struct ModelSpec {
     /// Optional component-sharded engine for every shard's model (see
     /// [`WorkerConfig::with_engine`]).
     pub engine: Option<EngineConfig>,
+    /// Learn steps between read-snapshot republishes per shard — the
+    /// read path's staleness bound (0 disables snapshot publishing; see
+    /// [`WorkerConfig::snapshot_interval`]).
+    pub snapshot_interval: usize,
 }
 
 impl ModelSpec {
@@ -40,6 +45,7 @@ impl ModelSpec {
             policy: RoutingPolicy::RoundRobin,
             xla_config: None,
             engine: None,
+            snapshot_interval: DEFAULT_SNAPSHOT_INTERVAL,
         }
     }
 
@@ -74,6 +80,13 @@ impl ModelSpec {
         self.engine = Some(engine);
         self
     }
+
+    /// Set the per-shard snapshot republish interval (0 disables the
+    /// snapshot read path for this model).
+    pub fn with_snapshot_interval(mut self, every: usize) -> Self {
+        self.snapshot_interval = every;
+        self
+    }
 }
 
 struct Entry {
@@ -87,17 +100,53 @@ pub struct Registry {
     models: Mutex<HashMap<String, Entry>>,
     metrics: Arc<Metrics>,
     checkpoints: Option<CheckpointStore>,
+    /// Shared scorer pool serving every model's snapshot read class —
+    /// spawned lazily on first use so registries that never create a
+    /// model (or set an explicit size) carry no idle threads.
+    scorers: OnceLock<Arc<ScorerPool>>,
+}
+
+/// Default scorer-thread count: half the machine (the other half is for
+/// learners/workers), clamped to [1, 4] — override with
+/// [`Registry::with_scorers`].
+fn default_scorer_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| (n.get() / 2).clamp(1, 4))
+        .unwrap_or(1)
 }
 
 impl Registry {
     pub fn new(metrics: Arc<Metrics>) -> Self {
-        Registry { models: Mutex::new(HashMap::new()), metrics, checkpoints: None }
+        Registry {
+            models: Mutex::new(HashMap::new()),
+            metrics,
+            checkpoints: None,
+            scorers: OnceLock::new(),
+        }
     }
 
     /// Enable checkpointing into a directory.
     pub fn with_checkpoints(mut self, store: CheckpointStore) -> Self {
         self.checkpoints = Some(store);
         self
+    }
+
+    /// Use a scorer pool of `threads` threads. Call before creating
+    /// models — routers capture the pool at create time.
+    pub fn with_scorers(mut self, threads: usize) -> Self {
+        self.scorers = OnceLock::new();
+        let _ = self.scorers.set(Arc::new(ScorerPool::new(threads)));
+        self
+    }
+
+    /// The scorer pool, created on first use.
+    fn scorers(&self) -> &Arc<ScorerPool> {
+        self.scorers.get_or_init(|| Arc::new(ScorerPool::new(default_scorer_threads())))
+    }
+
+    /// Scorer threads serving the snapshot read path.
+    pub fn scorer_threads(&self) -> usize {
+        self.scorers().threads()
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {
@@ -118,7 +167,8 @@ impl Registry {
                 spec.n_classes,
                 spec.gmm.clone(),
                 spec.feature_stds.clone(),
-            );
+            )
+            .with_snapshot_interval(spec.snapshot_interval);
             if let Some(x) = &spec.xla_config {
                 wc = wc.with_xla(x.clone());
             }
@@ -137,7 +187,11 @@ impl Registry {
             handles.push(w.handle.clone());
             workers.push(w);
         }
-        let router = Arc::new(Router::new(handles, spec.policy));
+        let router = Arc::new(
+            Router::new(handles, spec.policy)
+                .with_read_path(self.scorers().clone(), self.metrics.clone())
+                .with_shape(spec.n_features, spec.n_classes),
+        );
         models.insert(spec.name.clone(), Entry { router, workers, spec });
         Ok(())
     }
@@ -164,6 +218,7 @@ impl Registry {
         };
         Ok(Json::obj(vec![
             ("shards", shard_stats.len().into()),
+            ("scorers", self.scorers().threads().into()),
             ("components", shard_stats.iter().map(|s| s.components).sum::<usize>().into()),
             ("learned", total(|s| s.learned).into()),
             ("predicted", total(|s| s.predicted).into()),
@@ -300,6 +355,40 @@ mod tests {
         }
         assert_eq!(router.predict(&[0.0, 0.0]).unwrap().len(), 3);
         reg.drop_model("e").unwrap();
+    }
+
+    #[test]
+    fn read_path_serves_through_registry_scorers() {
+        let reg = registry().with_scorers(2);
+        assert_eq!(reg.scorer_threads(), 2);
+        reg.create(blob_spec("r").with_snapshot_interval(4)).unwrap();
+        let router = reg.router("r").unwrap();
+        let mut rng = Pcg64::seed(7);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..16 {
+            let c = i % 3;
+            router
+                .learn(
+                    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7],
+                    c,
+                )
+                .unwrap();
+        }
+        // Drain the queue, then wait for the snapshot to catch up.
+        let _ = reg.stats("r").unwrap();
+        router.shards()[0]
+            .wait_snapshot_points(16, 1000)
+            .expect("snapshot never caught up");
+        let scores = router.predict_read(&[7.0, 7.0]).unwrap();
+        assert_eq!(scores, router.predict(&[7.0, 7.0]).unwrap());
+        let joint = vec![7.0, 7.0, 0.0, 1.0, 0.0];
+        assert!(router.score_read(&joint).unwrap().is_finite());
+        let stats = reg.stats("r").unwrap();
+        assert_eq!(stats.get("scorers").unwrap().as_usize(), Some(2));
+        let coord = stats.get("coordinator").unwrap();
+        assert!(coord.get("snapshots_published").unwrap().as_usize().unwrap() >= 1);
+        assert!(coord.get("snapshot_reads").unwrap().as_usize().unwrap() >= 2);
+        reg.drop_model("r").unwrap();
     }
 
     #[test]

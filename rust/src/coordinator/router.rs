@@ -12,9 +12,31 @@
 //! Prediction always fans out to every shard and averages the score
 //! vectors (for RoundRobin/FeatureHash the shards are partial models;
 //! averaging is the natural ensemble read-out).
+//!
+//! ## Read/write traffic classes
+//!
+//! The router splits traffic into two classes:
+//!
+//! - **Write class** — `learn`/`learn_reg` plus the sequential
+//!   `predict`/`predict_reg`: everything goes through the shard
+//!   workers' command queues, so a predict observes every learn queued
+//!   before it (read-your-writes).
+//! - **Read class** — `score_read`/`score_batch_read`/`predict_read`/
+//!   `predict_batch_read`: served from each shard's latest published
+//!   [`ModelSnapshot`] (optionally on a [`ScorerPool`]), never touching
+//!   the command queues. Reads may lag writes by fewer than the
+//!   worker's `snapshot_interval` learn steps (the staleness
+//!   contract); within one snapshot, results are deterministic and
+//!   bit-identical to the serial model at that version. Until a first
+//!   snapshot exists, predicts fall back to the write class and scores
+//!   error out.
 
+use super::metrics::Metrics;
+use super::scorer::{execute, ReadKind, ReadResult, ScorerPool};
 use super::worker::WorkerHandle;
 use super::{CoordError, Result};
+use crate::gmm::ModelSnapshot;
+use std::sync::Arc;
 
 /// Shard-selection policy for learn traffic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,12 +51,43 @@ pub struct Router {
     shards: Vec<WorkerHandle>,
     policy: RoutingPolicy,
     next: std::sync::atomic::AtomicUsize,
+    /// Scorer pool for the read class (`None` = compute snapshot reads
+    /// inline on the calling thread — same results, no fan-out).
+    scorers: Option<Arc<ScorerPool>>,
+    metrics: Option<Arc<Metrics>>,
+    /// Expected request shapes `(n_features, joint_dim)` for validating
+    /// read-class requests even before the first snapshot is published
+    /// (the registry wires this from the model spec).
+    shape: Option<(usize, usize)>,
 }
 
 impl Router {
     pub fn new(shards: Vec<WorkerHandle>, policy: RoutingPolicy) -> Self {
         assert!(!shards.is_empty(), "router needs ≥1 shard");
-        Router { shards, policy, next: std::sync::atomic::AtomicUsize::new(0) }
+        Router {
+            shards,
+            policy,
+            next: std::sync::atomic::AtomicUsize::new(0),
+            scorers: None,
+            metrics: None,
+            shape: None,
+        }
+    }
+
+    /// Attach the read path: snapshot reads run on `scorers` and are
+    /// counted in `metrics` (the registry wires this at create time).
+    pub fn with_read_path(mut self, scorers: Arc<ScorerPool>, metrics: Arc<Metrics>) -> Self {
+        self.scorers = Some(scorers);
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Record the model's feature/class split so read-class requests are
+    /// shape-validated even before the first snapshot exists (otherwise a
+    /// malformed fallback predict could panic a shard worker).
+    pub fn with_shape(mut self, n_features: usize, n_classes: usize) -> Self {
+        self.shape = Some((n_features, n_features + n_classes));
+        self
     }
 
     pub fn num_shards(&self) -> usize {
@@ -144,7 +197,196 @@ impl Router {
         }
         Ok(scores)
     }
+
+    // ---- read traffic class (snapshot-served) ----
+
+    /// Latest published snapshot of every shard that has one.
+    fn shard_snapshots(&self) -> Vec<Arc<ModelSnapshot>> {
+        self.shards.iter().filter_map(|s| s.snapshot()).collect()
+    }
+
+    /// Any one published snapshot (for validating request shapes).
+    fn any_snapshot(&self) -> Option<Arc<ModelSnapshot>> {
+        self.shards.iter().find_map(|s| s.snapshot())
+    }
+
+    /// Expected feature-vector length for read requests, from a live
+    /// snapshot or the configured shape.
+    fn expected_features(&self) -> Option<usize> {
+        self.any_snapshot()
+            .map(|s| s.n_features())
+            .or_else(|| self.shape.map(|(f, _)| f))
+    }
+
+    /// Expected joint-vector length for read requests.
+    fn expected_dim(&self) -> Option<usize> {
+        self.any_snapshot()
+            .map(|s| s.dim())
+            .or_else(|| self.shape.map(|(_, d)| d))
+    }
+
+    /// Reject a malformed read request up front — a wrong-dimension
+    /// vector must become a clean protocol error here, not a panic
+    /// inside a scorer thread (or, via the fallback, a shard worker).
+    fn check_read_dim(&self, got: usize, want: Option<usize>, what: &str) -> Result<()> {
+        if let Some(want) = want {
+            if got != want {
+                return Err(CoordError::Protocol(format!(
+                    "{what}: expected {want} dims, got {got}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Fan one read out to every published shard snapshot: all jobs are
+    /// submitted before any reply is awaited, so shards score in
+    /// parallel on the scorer pool (inline, serially, without one).
+    fn fan_read(&self, mk: impl Fn() -> ReadKind) -> Result<Vec<ReadResult>> {
+        let snaps = self.shard_snapshots();
+        if snaps.is_empty() {
+            return Err(CoordError::Rejected(NO_SNAPSHOT));
+        }
+        if let Some(m) = &self.metrics {
+            m.record_snapshot_read();
+        }
+        match &self.scorers {
+            Some(pool) => {
+                let rxs: Vec<_> = snaps
+                    .into_iter()
+                    .map(|s| pool.submit(s, mk()))
+                    .collect::<Result<_>>()?;
+                rxs.into_iter()
+                    .map(|rx| rx.recv().map_err(|_| CoordError::Rejected("scorer died")))
+                    .collect()
+            }
+            None => Ok(snaps.iter().map(|s| execute(s, mk())).collect()),
+        }
+    }
+
+    /// Average per-point densities across shard results.
+    fn merge_densities(results: Vec<ReadResult>, expect_len: usize) -> Result<Vec<f64>> {
+        let mut acc = vec![0.0; expect_len];
+        let mut n = 0usize;
+        for r in results {
+            if let ReadResult::Densities(d) = r {
+                if d.len() == expect_len {
+                    n += 1;
+                    for (a, v) in acc.iter_mut().zip(d.iter()) {
+                        *a += v;
+                    }
+                }
+            }
+        }
+        if n == 0 {
+            return Err(CoordError::Rejected("no shard could score"));
+        }
+        for a in &mut acc {
+            *a /= n as f64;
+        }
+        Ok(acc)
+    }
+
+    /// Average per-point score vectors across shard results.
+    fn merge_scores(results: Vec<ReadResult>, expect_len: usize) -> Result<Vec<Vec<f64>>> {
+        let mut acc: Option<Vec<Vec<f64>>> = None;
+        let mut n = 0usize;
+        for r in results {
+            if let ReadResult::Scores(rows) = r {
+                if rows.len() == expect_len {
+                    n += 1;
+                    match &mut acc {
+                        None => acc = Some(rows),
+                        Some(a) => {
+                            for (ar, row) in a.iter_mut().zip(rows.iter()) {
+                                for (x, y) in ar.iter_mut().zip(row.iter()) {
+                                    *x += y;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = acc.ok_or(CoordError::Rejected("no shard could predict"))?;
+        for row in &mut out {
+            for v in row {
+                *v /= n as f64;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Joint log-density served from the latest snapshots (read class;
+    /// averaged across shards). Errors until a snapshot is published.
+    pub fn score_read(&self, x: &[f64]) -> Result<f64> {
+        self.check_read_dim(x.len(), self.expected_dim(), "score")?;
+        let x = x.to_vec();
+        let results = self.fan_read(|| ReadKind::Score { x: x.clone() })?;
+        Ok(Self::merge_densities(results, 1)?[0])
+    }
+
+    /// Batched [`Router::score_read`].
+    pub fn score_batch_read(&self, xs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let want = self.expected_dim();
+        for row in xs {
+            self.check_read_dim(row.len(), want, "score_batch")?;
+        }
+        // One shared copy of the batch; shards clone only the Arc.
+        let shared = Arc::new(xs.to_vec());
+        let results = self.fan_read(|| ReadKind::ScoreBatch { xs: shared.clone() })?;
+        Self::merge_densities(results, xs.len())
+    }
+
+    /// Class scores served from the latest snapshots (read class). When
+    /// no shard has published yet, falls back to the sequential
+    /// [`Router::predict`] so predict-before-first-snapshot still works;
+    /// other read-path failures surface as errors.
+    pub fn predict_read(&self, features: &[f64]) -> Result<Vec<f64>> {
+        self.check_read_dim(features.len(), self.expected_features(), "predict")?;
+        let f = features.to_vec();
+        match self.fan_read(|| ReadKind::ClassScores { features: f.clone() }) {
+            Ok(results) => Ok(Self::merge_scores(results, 1)?.pop().expect("len 1")),
+            Err(CoordError::Rejected(r)) if r == NO_SNAPSHOT => {
+                if let Some(m) = &self.metrics {
+                    m.record_snapshot_fallback();
+                }
+                self.predict(features)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Batched [`Router::predict_read`] (same fallback semantics).
+    pub fn predict_batch_read(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let want = self.expected_features();
+        for row in xs {
+            self.check_read_dim(row.len(), want, "predict_batch")?;
+        }
+        // One shared copy of the batch; shards clone only the Arc.
+        let shared = Arc::new(xs.to_vec());
+        match self.fan_read(|| ReadKind::ClassScoresBatch { xs: shared.clone() }) {
+            Ok(results) => Self::merge_scores(results, xs.len()),
+            Err(CoordError::Rejected(r)) if r == NO_SNAPSHOT => {
+                if let Some(m) = &self.metrics {
+                    m.record_snapshot_fallback();
+                }
+                xs.iter().map(|x| self.predict(x)).collect()
+            }
+            Err(e) => Err(e),
+        }
+    }
 }
+
+/// Sentinel reason for "the read class has nothing published yet" —
+/// the only fan-out failure the predict paths fall back on.
+const NO_SNAPSHOT: &str = "no snapshot published";
 
 /// FNV-1a over the raw feature bytes — stable, order-sensitive.
 fn feature_hash(features: &[f64]) -> usize {
@@ -247,6 +489,82 @@ mod tests {
         for w in workers {
             w.join();
         }
+    }
+
+    #[test]
+    fn read_class_matches_sequential_path_when_caught_up() {
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let w = Worker::spawn(
+            WorkerConfig::new(2, 2, gmm, vec![3.0, 3.0]).with_snapshot_interval(4),
+            metrics.clone(),
+        );
+        let handle = w.handle.clone();
+        let pool = Arc::new(crate::coordinator::scorer::ScorerPool::new(2));
+        let router = Router::new(vec![handle.clone()], RoutingPolicy::RoundRobin)
+            .with_read_path(pool, metrics.clone());
+        let mut rng = Pcg64::seed(11);
+        for i in 0..12 {
+            let c = i % 2;
+            router
+                .learn(vec![c as f64 * 6.0 + rng.normal() * 0.5, rng.normal() * 0.5], c)
+                .unwrap();
+        }
+        let _ = handle.stats().unwrap();
+        handle.wait_snapshot_points(12, 1000).expect("snapshot never caught up");
+        // With the queue drained and the snapshot caught up, the read
+        // class and the sequential path agree bit-for-bit.
+        let probe = vec![6.0, 0.0];
+        assert_eq!(router.predict_read(&probe).unwrap(), router.predict(&probe).unwrap());
+        let snap = handle.snapshot().unwrap();
+        let joint = vec![6.0, 0.0, 1.0, 0.0];
+        assert!(router.score_read(&joint).unwrap() == snap.log_density(&joint));
+        assert_eq!(
+            router.score_batch_read(&[joint.clone()]).unwrap(),
+            vec![snap.log_density(&joint)]
+        );
+        let rows = router.predict_batch_read(&[probe.clone(), probe.clone()]).unwrap();
+        assert_eq!(rows[0], rows[1]);
+        assert_eq!(rows[0], router.predict_read(&probe).unwrap());
+        assert!(metrics.snapshot().snapshot_reads >= 4);
+        // Malformed reads are clean protocol errors, not scorer panics.
+        assert!(matches!(router.predict_read(&[1.0]), Err(CoordError::Protocol(_))));
+        assert!(matches!(router.score_read(&[1.0]), Err(CoordError::Protocol(_))));
+        drop(router);
+        w.join();
+    }
+
+    #[test]
+    fn predict_read_falls_back_before_first_snapshot() {
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let w = Worker::spawn(
+            WorkerConfig::new(2, 2, gmm, vec![3.0, 3.0]).with_snapshot_interval(0),
+            metrics.clone(),
+        );
+        let handle = w.handle.clone();
+        let pool = Arc::new(crate::coordinator::scorer::ScorerPool::new(1));
+        let router = Router::new(vec![handle.clone()], RoutingPolicy::RoundRobin)
+            .with_read_path(pool, metrics.clone())
+            .with_shape(2, 2);
+        let mut rng = Pcg64::seed(12);
+        for i in 0..10 {
+            let c = i % 2;
+            router
+                .learn(vec![c as f64 * 6.0 + rng.normal() * 0.5, rng.normal() * 0.5], c)
+                .unwrap();
+        }
+        let _ = handle.stats().unwrap();
+        // Publishing disabled → predicts fall back to the write path…
+        assert_eq!(router.predict_read(&[6.0, 0.0]).unwrap(), router.predict(&[6.0, 0.0]).unwrap());
+        assert!(metrics.snapshot().snapshot_fallbacks >= 1);
+        // …and pure density reads (no sequential equivalent) error out.
+        assert!(router.score_read(&[6.0, 0.0, 1.0, 0.0]).is_err());
+        // Even with no snapshot, the configured shape rejects malformed
+        // reads before they can reach (and panic) the shard worker.
+        assert!(matches!(router.predict_read(&[1.0]), Err(CoordError::Protocol(_))));
+        drop(router);
+        w.join();
     }
 
     #[test]

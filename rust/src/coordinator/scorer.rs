@@ -1,0 +1,215 @@
+//! Scorer pool — the read half of the coordinator's read–write split.
+//!
+//! Learn traffic is inherently sequential per model shard (each point
+//! mutates the state the next point scores against), but scoring is
+//! pure: any number of threads can serve `score`/`predict` requests
+//! from the same immutable [`ModelSnapshot`]. This module supplies
+//! those threads: a fixed pool consuming a bounded queue of
+//! [`ReadJob`]s, each carrying an `Arc` to the snapshot it must score
+//! against (loaded by the router from the worker's [`SnapshotCell`]
+//! *before* enqueueing, so a job is pinned to one model version and
+//! never blocks on the learner).
+//!
+//! Staleness contract: a read served from a snapshot lags the write
+//! path by fewer than `snapshot_interval` learn steps (plus one queue
+//! timeout when the stream pauses) — see `WorkerConfig::snapshot_interval`.
+//!
+//! [`SnapshotCell`]: super::worker::SnapshotCell
+
+use super::backpressure::{BoundedQueue, OverflowPolicy};
+use super::{CoordError, Result};
+use crate::gmm::ModelSnapshot;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// What a read job computes against its snapshot. Batch payloads ride
+/// in an `Arc` so a multi-shard fan-out shares one copy of the batch
+/// instead of cloning it per shard.
+pub(crate) enum ReadKind {
+    /// Joint log-density of one full joint vector.
+    Score { x: Vec<f64> },
+    /// Joint log-densities of a batch.
+    ScoreBatch { xs: Arc<Vec<Vec<f64>>> },
+    /// Classifier scores for one feature vector.
+    ClassScores { features: Vec<f64> },
+    /// Classifier scores for a batch of feature vectors.
+    ClassScoresBatch { xs: Arc<Vec<Vec<f64>>> },
+}
+
+/// Result of a read job.
+pub(crate) enum ReadResult {
+    /// One density per input point (length 1 for `Score`).
+    Densities(Vec<f64>),
+    /// One score vector per input point (length 1 for `ClassScores`).
+    Scores(Vec<Vec<f64>>),
+}
+
+/// Run one read job — shared by the pool threads and the router's
+/// inline path (no pool attached), so both produce identical results.
+pub(crate) fn execute(snap: &ModelSnapshot, kind: ReadKind) -> ReadResult {
+    match kind {
+        ReadKind::Score { x } => ReadResult::Densities(vec![snap.log_density(&x)]),
+        ReadKind::ScoreBatch { xs } => ReadResult::Densities(snap.score_batch(&xs)),
+        ReadKind::ClassScores { features } => {
+            ReadResult::Scores(vec![snap.class_scores(&features)])
+        }
+        ReadKind::ClassScoresBatch { xs } => ReadResult::Scores(snap.class_scores_batch(&xs)),
+    }
+}
+
+pub(crate) struct ReadJob {
+    snap: Arc<ModelSnapshot>,
+    kind: ReadKind,
+    reply: mpsc::Sender<ReadResult>,
+}
+
+/// A fixed pool of scorer threads serving snapshot reads. One pool is
+/// shared by every model in a [`super::Registry`]; scorers are
+/// stateless (all model state rides in on the job's snapshot `Arc`).
+pub struct ScorerPool {
+    queue: Arc<BoundedQueue<ReadJob>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ScorerPool {
+    /// Spawn `threads` scorer threads (at least 1).
+    pub fn new(threads: usize) -> ScorerPool {
+        let n = threads.max(1);
+        // Deep enough that transient bursts queue instead of shedding;
+        // Block keeps the read edge lossless under sustained overload.
+        let queue = Arc::new(BoundedQueue::new(1024, OverflowPolicy::Block));
+        let handles = (0..n)
+            .map(|i| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("figmn-scorer-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = q.pop() {
+                            let ReadJob { snap, kind, reply } = job;
+                            // Contain panics (malformed input reaching a
+                            // scoring assert): the reply sender drops, so
+                            // the requester gets a clean "scorer died"
+                            // error while this thread keeps serving.
+                            if let Ok(result) =
+                                catch_unwind(AssertUnwindSafe(|| execute(&snap, kind)))
+                            {
+                                // The requester may have given up (recv
+                                // dropped) — sending then fails harmlessly.
+                                let _ = reply.send(result);
+                            }
+                        }
+                    })
+                    .expect("spawn scorer")
+            })
+            .collect();
+        ScorerPool { queue, threads: handles }
+    }
+
+    /// Scorer threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Enqueue a job against `snap`; returns the reply channel so a
+    /// caller can fan out one job per shard before collecting any.
+    pub(crate) fn submit(
+        &self,
+        snap: Arc<ModelSnapshot>,
+        kind: ReadKind,
+    ) -> Result<mpsc::Receiver<ReadResult>> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(ReadJob { snap, kind, reply: tx }) {
+            return Err(CoordError::Rejected("scorer queue"));
+        }
+        Ok(rx)
+    }
+}
+
+impl Drop for ScorerPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::{Figmn, GmmConfig, IncrementalMixture};
+
+    fn snapshot() -> Arc<ModelSnapshot> {
+        let cfg = GmmConfig::new(2).with_delta(0.3).with_beta(0.1).without_pruning();
+        let mut m = Figmn::new(cfg, &[5.0, 5.0]);
+        for i in 0..40 {
+            let t = (i % 10) as f64 * 0.1;
+            m.learn(&[t, -t]);
+            m.learn(&[10.0 + t, 10.0 - t]);
+        }
+        Arc::new(m.snapshot())
+    }
+
+    #[test]
+    fn pool_results_match_inline_execution() {
+        let snap = snapshot();
+        let pool = ScorerPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let xs = Arc::new(vec![vec![0.0, 0.0], vec![10.0, 10.0], vec![5.0, 5.0]]);
+        let rx = pool
+            .submit(snap.clone(), ReadKind::ScoreBatch { xs: xs.clone() })
+            .unwrap();
+        let got = match rx.recv().unwrap() {
+            ReadResult::Densities(d) => d,
+            _ => panic!("wrong result kind"),
+        };
+        assert_eq!(got, snap.score_batch(&xs));
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_pool() {
+        let snap = snapshot();
+        let pool = ScorerPool::new(1);
+        // Wrong-dimension input trips a scoring assert inside the job;
+        // the requester must get a clean disconnect, and the same
+        // (only) scorer thread must keep serving afterwards.
+        let rx = pool
+            .submit(snap.clone(), ReadKind::Score { x: vec![1.0] })
+            .unwrap();
+        assert!(rx.recv().is_err(), "panicked job must drop its reply");
+        let rx = pool
+            .submit(snap.clone(), ReadKind::Score { x: vec![0.0, 0.0] })
+            .unwrap();
+        match rx.recv().expect("pool must survive a panicking job") {
+            ReadResult::Densities(d) => assert!(d[0].is_finite()),
+            _ => panic!("wrong result kind"),
+        }
+    }
+
+    #[test]
+    fn many_concurrent_submitters() {
+        let snap = snapshot();
+        let pool = Arc::new(ScorerPool::new(2));
+        let mut clients = Vec::new();
+        for c in 0..6 {
+            let pool = pool.clone();
+            let snap = snap.clone();
+            clients.push(std::thread::spawn(move || {
+                let expect = snap.log_density(&[c as f64, c as f64]);
+                for _ in 0..50 {
+                    let rx = pool
+                        .submit(snap.clone(), ReadKind::Score { x: vec![c as f64, c as f64] })
+                        .unwrap();
+                    match rx.recv().unwrap() {
+                        ReadResult::Densities(d) => assert!(d[0] == expect),
+                        _ => panic!("wrong result kind"),
+                    }
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+    }
+}

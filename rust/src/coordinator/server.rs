@@ -1,17 +1,28 @@
 //! TCP front end: line-delimited JSON over `std::net`, one thread per
 //! connection (adequate for the online-learning use case where a handful
 //! of producers stream records; the heavy lifting is already pipelined
-//! behind the workers' bounded queues).
+//! behind the workers' bounded queues, and heavy read traffic is served
+//! from model snapshots by the registry's scorer pool).
+//!
+//! Lifecycle: connection handler threads are tracked, read with a short
+//! timeout so they observe the shutdown flag even while idle, and are
+//! joined by [`Server::shutdown`]/`Drop` — once `shutdown()` returns,
+//! no handler thread is still touching the registry.
 
 use super::protocol::{Request, Response};
 use super::registry::{ModelSpec, Registry};
 use super::router::RoutingPolicy;
 use super::{CoordError, Result};
 use crate::gmm::GmmConfig;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How often an idle connection handler wakes up to check the shutdown
+/// flag (the stream's read timeout).
+const CONN_POLL: Duration = Duration::from_millis(50);
 
 /// Server knobs.
 #[derive(Debug, Clone)]
@@ -33,26 +44,35 @@ pub struct Server {
     pub local_addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Live connection-handler threads, joined on shutdown so no
+    /// handler outlives the server (or keeps using the registry).
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl Server {
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // Poke the acceptor so it notices the flag.
         let _ = TcpStream::connect(self.local_addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        // Join every handler: they observe the flag within one read
+        // timeout (CONN_POLL), finish their in-flight request, and exit.
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.local_addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.stop();
     }
 }
 
@@ -62,6 +82,9 @@ pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
     let local_addr = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
     let flag = shutdown.clone();
+    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let conns2 = conns.clone();
     let accept_thread = std::thread::Builder::new()
         .name("figmn-accept".into())
         .spawn(move || {
@@ -74,17 +97,24 @@ pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
                         let reg = registry.clone();
                         let flag = flag.clone();
                         let xla = cfg.xla_config.clone();
-                        std::thread::Builder::new()
+                        let handle = std::thread::Builder::new()
                             .name("figmn-conn".into())
                             .spawn(move || handle_connection(s, reg, flag, xla))
                             .ok();
+                        if let Some(h) = handle {
+                            let mut conns = conns2.lock().unwrap();
+                            // Reap finished handlers so the vec stays
+                            // bounded on long-lived servers.
+                            conns.retain(|c| !c.is_finished());
+                            conns.push(h);
+                        }
                     }
                     Err(_) => break,
                 }
             }
         })
         .expect("spawn acceptor");
-    Ok(Server { local_addr, shutdown, accept_thread: Some(accept_thread) })
+    Ok(Server { local_addr, shutdown, accept_thread: Some(accept_thread), conns })
 }
 
 fn handle_connection(
@@ -94,37 +124,62 @@ fn handle_connection(
     xla_config: Option<String>,
 ) {
     let peer = stream.peer_addr().ok();
+    // A short read timeout so an idle handler still observes shutdown.
+    let _ = stream.set_read_timeout(Some(CONN_POLL));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let response = match Request::from_line(&line) {
-            Err(e) => Response::Error(e.to_string()),
-            Ok(req) => {
-                let is_shutdown = req == Request::Shutdown;
-                let resp = dispatch(req, &registry, &xla_config);
-                if is_shutdown {
-                    shutdown.store(true, Ordering::SeqCst);
-                }
-                resp
-            }
-        };
-        let mut out = response.to_json().to_string_compact();
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        if shutdown.load(Ordering::SeqCst) {
+        // `read_line` appends, so a line split across timeout ticks
+        // accumulates in `buf` until its newline arrives.
+        let at_eof = match reader.read_line(&mut buf) {
+            Ok(0) => true,
+            Ok(_) => !buf.ends_with('\n'), // EOF mid-line: serve, then stop
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                continue; // idle tick — re-check the shutdown flag
+            }
+            Err(_) => break,
+        };
+        let line = std::mem::take(&mut buf);
+        if !line.trim().is_empty() {
+            let response = match Request::from_line(&line) {
+                Err(e) => Response::Error(e.to_string()),
+                Ok(req) => {
+                    let is_shutdown = req == Request::Shutdown;
+                    let resp = dispatch(req, &registry, &xla_config);
+                    if is_shutdown {
+                        shutdown.store(true, Ordering::SeqCst);
+                    }
+                    resp
+                }
+            };
+            let mut out = response.to_json().to_string_compact();
+            out.push('\n');
+            if writer.write_all(out.as_bytes()).is_err() {
+                break;
+            }
+        }
+        if at_eof {
             break;
         }
     }
     log::debug!("connection from {peer:?} closed");
+}
+
+/// Argmax class of a score vector (0 for an empty one).
+fn argmax(scores: &[f64]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 /// Map a request onto the registry.
@@ -186,13 +241,60 @@ fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Re
         Request::Predict { model, features } => {
             let router = registry.router(&model)?;
             let scores = router.predict(&features)?;
-            let class = scores
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0);
+            let class = argmax(&scores);
             Ok(Response::Scores { scores, class })
+        }
+        Request::PredictSnapshot { model, features } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            if features.len() != spec.n_features {
+                return Err(CoordError::Protocol(format!(
+                    "expected {} features, got {}",
+                    spec.n_features,
+                    features.len()
+                )));
+            }
+            let scores = router.predict_read(&features)?;
+            let class = argmax(&scores);
+            Ok(Response::Scores { scores, class })
+        }
+        Request::Score { model, x } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            let dim = spec.n_features + spec.n_classes;
+            if x.len() != dim {
+                return Err(CoordError::Protocol(format!(
+                    "score expects the full joint vector ({dim} dims), got {}",
+                    x.len()
+                )));
+            }
+            Ok(Response::Density { density: router.score_read(&x)? })
+        }
+        Request::ScoreBatch { model, xs } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            let dim = spec.n_features + spec.n_classes;
+            if let Some(bad) = xs.iter().find(|x| x.len() != dim) {
+                return Err(CoordError::Protocol(format!(
+                    "score_batch expects {dim}-dim joint vectors, got {}",
+                    bad.len()
+                )));
+            }
+            Ok(Response::Densities { densities: router.score_batch_read(&xs)? })
+        }
+        Request::PredictBatch { model, xs } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            if let Some(bad) = xs.iter().find(|x| x.len() != spec.n_features) {
+                return Err(CoordError::Protocol(format!(
+                    "predict_batch expects {} features per row, got {}",
+                    spec.n_features,
+                    bad.len()
+                )));
+            }
+            let scores = router.predict_batch_read(&xs)?;
+            let classes = scores.iter().map(|s| argmax(s)).collect();
+            Ok(Response::ScoresBatch { scores, classes })
         }
         Request::Stats { model } => Ok(Response::Stats(registry.stats(&model)?)),
         Request::Checkpoint { model } => {
@@ -292,6 +394,121 @@ mod tests {
         assert!(matches!(resp, Response::Error(_)));
 
         server.shutdown();
+    }
+
+    #[test]
+    fn read_ops_over_tcp() {
+        let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+        let server = serve(registry.clone(), ServerConfig::default()).unwrap();
+        let (mut reader, mut writer) = client(server.local_addr);
+
+        let create = Request::CreateModel {
+            model: "m".into(),
+            n_features: 2,
+            n_classes: 2,
+            delta: 0.5,
+            beta: 0.05,
+            stds: vec![3.0, 3.0],
+            shards: 1,
+        };
+        assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
+        let mut rng = Pcg64::seed(4);
+        for i in 0..64 {
+            let c = i % 2;
+            let req = Request::Learn {
+                model: "m".into(),
+                features: vec![c as f64 * 6.0 + rng.normal() * 0.5, rng.normal() * 0.5],
+                label: c,
+            };
+            assert_eq!(roundtrip(&mut reader, &mut writer, &req), Response::Ok);
+        }
+        // Drain the worker queue, then wait for the snapshot to catch up
+        // (64 is a multiple of the default interval, but the idle
+        // republish makes this robust regardless).
+        let _ = roundtrip(&mut reader, &mut writer, &Request::Stats { model: "m".into() });
+        let router = registry.router("m").unwrap();
+        router.shards()[0]
+            .wait_snapshot_points(64, 1000)
+            .expect("snapshot never published");
+
+        // Snapshot-served single predict.
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::PredictSnapshot { model: "m".into(), features: vec![6.0, 0.0] },
+        );
+        match resp {
+            Response::Scores { class, scores } => {
+                assert_eq!(class, 1);
+                assert_eq!(scores.len(), 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Batched class scores.
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::PredictBatch {
+                model: "m".into(),
+                xs: vec![vec![6.0, 0.0], vec![0.0, 0.0]],
+            },
+        );
+        match resp {
+            Response::ScoresBatch { scores, classes } => {
+                assert_eq!(scores.len(), 2);
+                assert_eq!(classes, vec![1, 0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Joint densities (full joint vector: features + one-hot block).
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::Score { model: "m".into(), x: vec![6.0, 0.0, 0.0, 1.0] },
+        );
+        match resp {
+            Response::Density { density } => assert!(density.is_finite()),
+            other => panic!("unexpected {other:?}"),
+        }
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::ScoreBatch {
+                model: "m".into(),
+                xs: vec![vec![6.0, 0.0, 0.0, 1.0], vec![0.0, 0.0, 1.0, 0.0]],
+            },
+        );
+        match resp {
+            Response::Densities { densities } => {
+                assert_eq!(densities.len(), 2);
+                assert!(densities.iter().all(|d| d.is_finite()));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Wrong arity on the read class is a protocol error.
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::Score { model: "m".into(), x: vec![6.0, 0.0] },
+        );
+        assert!(matches!(resp, Response::Error(_)));
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_connection_handlers() {
+        let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+        let server = serve(registry.clone(), ServerConfig::default()).unwrap();
+        // Two connections: one active (did a roundtrip), one idle that
+        // never sends anything — both must be joined by shutdown().
+        let (mut reader, mut writer) = client(server.local_addr);
+        assert_eq!(roundtrip(&mut reader, &mut writer, &Request::Ping), Response::Pong);
+        let _idle = TcpStream::connect(server.local_addr).unwrap();
+        // Give the acceptor a beat to register both handlers.
+        std::thread::sleep(Duration::from_millis(20));
+        server.shutdown();
+        // Handlers joined ⇒ every registry clone they held is gone.
+        assert_eq!(Arc::strong_count(&registry), 1, "a handler outlived shutdown");
     }
 
     #[test]

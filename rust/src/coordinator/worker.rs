@@ -13,12 +13,45 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::{CoordError, Result};
 use crate::engine::EngineConfig;
-use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, SupervisedGmm};
+use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, ModelSnapshot, SupervisedGmm};
 use crate::json::Json;
 use crate::runtime::{PackedState, Runtime};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Single-writer / many-reader slot for the worker's published read
+/// snapshot. The worker (sole writer) swaps in a fresh
+/// `Arc<ModelSnapshot>` every `snapshot_interval` learn steps; readers
+/// clone the `Arc` out — the critical section on either side is one
+/// pointer copy, so read traffic never queues behind the learn path.
+#[derive(Default)]
+pub struct SnapshotCell {
+    slot: Mutex<Option<Arc<ModelSnapshot>>>,
+    publishes: AtomicU64,
+}
+
+impl SnapshotCell {
+    pub fn new() -> SnapshotCell {
+        SnapshotCell::default()
+    }
+
+    /// Latest published snapshot (`None` until the first publish).
+    pub fn load(&self) -> Option<Arc<ModelSnapshot>> {
+        self.slot.lock().unwrap().clone()
+    }
+
+    /// Number of publishes so far (tests / staleness accounting).
+    pub fn publish_count(&self) -> u64 {
+        self.publishes.load(Ordering::Acquire)
+    }
+
+    fn store(&self, snap: Arc<ModelSnapshot>) {
+        *self.slot.lock().unwrap() = Some(snap);
+        self.publishes.fetch_add(1, Ordering::Release);
+    }
+}
 
 /// Commands accepted by a worker.
 pub(crate) enum Command {
@@ -52,6 +85,15 @@ pub struct WorkerConfig {
     /// learn/score passes serial; `Some` splits the K components across
     /// a fixed thread pool (results are bit-identical either way).
     pub engine: Option<EngineConfig>,
+    /// Republish the read-path snapshot every this many **applied**
+    /// learn steps (plus once whenever the queue goes idle with
+    /// unpublished learns), bounding read staleness to
+    /// < `snapshot_interval` applied points while the stream flows —
+    /// learns still waiting in the command queue add up to
+    /// `queue_capacity` on top under backlog. `0` disables snapshot
+    /// publishing entirely (write-only workloads skip the `O(K·D²)`
+    /// copy per publish).
+    pub snapshot_interval: usize,
 }
 
 impl WorkerConfig {
@@ -66,6 +108,7 @@ impl WorkerConfig {
             batcher: BatcherConfig::default(),
             xla_config: None,
             engine: None,
+            snapshot_interval: DEFAULT_SNAPSHOT_INTERVAL,
         }
     }
 
@@ -79,7 +122,17 @@ impl WorkerConfig {
         self.engine = Some(engine);
         self
     }
+
+    /// Set the snapshot republish interval (0 disables publishing).
+    pub fn with_snapshot_interval(mut self, every: usize) -> Self {
+        self.snapshot_interval = every;
+        self
+    }
 }
+
+/// Default learn steps between snapshot republishes — small, so the
+/// read path lags the write path by at most a few points.
+pub const DEFAULT_SNAPSHOT_INTERVAL: usize = 8;
 
 /// Statistics reported by a worker.
 #[derive(Debug, Clone, PartialEq)]
@@ -107,6 +160,7 @@ impl WorkerStats {
 #[derive(Clone)]
 pub struct WorkerHandle {
     queue: Arc<BoundedQueue<Command>>,
+    snapshot: Arc<SnapshotCell>,
 }
 
 /// A spawned worker (join handle + command handle).
@@ -119,12 +173,14 @@ impl Worker {
     /// Spawn a worker thread.
     pub fn spawn(cfg: WorkerConfig, metrics: Arc<Metrics>) -> Worker {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity, cfg.overflow));
+        let snapshot = Arc::new(SnapshotCell::new());
         let q2 = queue.clone();
+        let cell = snapshot.clone();
         let thread = std::thread::Builder::new()
             .name("figmn-worker".into())
-            .spawn(move || worker_loop(cfg, q2, metrics))
+            .spawn(move || worker_loop(cfg, q2, cell, metrics))
             .expect("spawn worker");
-        Worker { handle: WorkerHandle { queue }, thread: Some(thread) }
+        Worker { handle: WorkerHandle { queue, snapshot }, thread: Some(thread) }
     }
 
     /// Signal shutdown and join.
@@ -204,6 +260,39 @@ impl WorkerHandle {
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
+
+    /// Latest published read snapshot — loaded directly from the shared
+    /// cell, **not** through the command queue, so read traffic never
+    /// waits behind queued learns. `None` until the worker has learned
+    /// and published at least once (or when publishing is disabled).
+    pub fn snapshot(&self) -> Option<Arc<ModelSnapshot>> {
+        self.snapshot.load()
+    }
+
+    /// Number of snapshots the worker has published so far.
+    pub fn snapshot_publishes(&self) -> u64 {
+        self.snapshot.publish_count()
+    }
+
+    /// Poll (2 ms period, at most `max_tries` polls) until the published
+    /// snapshot covers at least `points` learn steps — a read-after-write
+    /// barrier for tests, benches, and catch-up waits. `None` if the
+    /// snapshot never catches up within the budget.
+    pub fn wait_snapshot_points(
+        &self,
+        points: u64,
+        max_tries: usize,
+    ) -> Option<Arc<ModelSnapshot>> {
+        for _ in 0..max_tries {
+            if let Some(s) = self.snapshot() {
+                if s.points_seen() >= points {
+                    return Some(s);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        None
+    }
 }
 
 struct XlaPath {
@@ -213,7 +302,27 @@ struct XlaPath {
     batch: usize,
 }
 
-fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Arc<Metrics>) {
+/// Copy the model out and swap it into the shared cell (one `O(K·D²)`
+/// clone per `snapshot_interval` learns — the price of lock-free reads).
+fn publish_snapshot(
+    clf: &SupervisedGmm<Figmn>,
+    cell: &SnapshotCell,
+    metrics: &Metrics,
+    dirty: &mut usize,
+) {
+    if let Some(snap) = clf.snapshot() {
+        metrics.record_snapshot_publish(*dirty as u64);
+        cell.store(Arc::new(snap));
+        *dirty = 0;
+    }
+}
+
+fn worker_loop(
+    cfg: WorkerConfig,
+    queue: Arc<BoundedQueue<Command>>,
+    snapshot_cell: Arc<SnapshotCell>,
+    metrics: Arc<Metrics>,
+) {
     let joint_dim = cfg.n_features + cfg.n_classes;
     let mut joint_cfg = GmmConfig::new(joint_dim)
         .with_delta(cfg.gmm.delta)
@@ -257,6 +366,10 @@ fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Ar
     let mut learned: u64 = 0;
     let mut predicted: u64 = 0;
     let mut xla_batches: u64 = 0;
+    // Learn steps since the last snapshot publish (the read path's
+    // staleness); republished every `snapshot_interval` and on idle.
+    let mut dirty: usize = 0;
+    let publish_every = cfg.snapshot_interval;
     let mut batcher: Batcher<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Batcher::new(cfg.batcher);
 
     let flush = |batch: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)>,
@@ -332,6 +445,10 @@ fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Ar
                 }
                 learned += 1;
                 metrics.record_learn(started);
+                dirty += 1;
+                if publish_every > 0 && dirty >= publish_every {
+                    publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
+                }
             }
             Some(Command::Predict { features, reply }) => {
                 if let Some(b) = batcher.push((features, reply)) {
@@ -349,6 +466,10 @@ fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Ar
                     clf.train_joint(&joint);
                     learned += 1;
                     metrics.record_learn(started);
+                    dirty += 1;
+                    if publish_every > 0 && dirty >= publish_every {
+                        publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
+                    }
                 } // else: malformed record — counted nowhere, rejected upstream
             }
             Some(Command::PredictReg { features, reply }) => {
@@ -381,6 +502,12 @@ fn worker_loop(cfg: WorkerConfig, queue: Arc<BoundedQueue<Command>>, metrics: Ar
                 // Timeout (batcher deadline) or closed-and-drained.
                 if let Some(b) = batcher.poll() {
                     flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+                }
+                // Idle republish: when the stream pauses mid-interval
+                // the snapshot still catches up, so staleness is also
+                // bounded in wall time (one queue timeout).
+                if publish_every > 0 && dirty > 0 {
+                    publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
                 }
                 if queue.is_closed() && queue.is_empty() {
                     break;
@@ -533,6 +660,53 @@ mod tests {
         );
         serial.join();
         pooled.join();
+    }
+
+    #[test]
+    fn publishes_snapshots_on_interval_and_idle() {
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let cfg = WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]).with_snapshot_interval(4);
+        let worker = Worker::spawn(cfg, metrics.clone());
+        let mut rng = Pcg64::seed(8);
+        for i in 0..8 {
+            worker.handle.learn(blob_point(&mut rng, i % 3), i % 3).unwrap();
+        }
+        // stats() serializes behind the learns; the snapshot then catches
+        // up to all 8 points via the interval or the idle republish.
+        let stats = worker.handle.stats().unwrap();
+        assert_eq!(stats.learned, 8);
+        let snap = worker
+            .handle
+            .wait_snapshot_points(8, 1000)
+            .expect("snapshot never caught up to the stream");
+        assert_eq!(snap.points_seen(), 8);
+        assert!(worker.handle.snapshot_publishes() >= 1);
+        assert_eq!(
+            metrics.snapshot().snapshots_published,
+            worker.handle.snapshot_publishes()
+        );
+        // With the queue drained, the snapshot and the sequential
+        // predict path see the same model — scores match bit-for-bit.
+        let x = blob_point(&mut rng, 1);
+        assert_eq!(snap.class_scores(&x), worker.handle.predict(x).unwrap());
+        worker.join();
+    }
+
+    #[test]
+    fn snapshot_publishing_can_be_disabled() {
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+        let cfg = WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]).with_snapshot_interval(0);
+        let worker = Worker::spawn(cfg, metrics);
+        let mut rng = Pcg64::seed(9);
+        for i in 0..12 {
+            worker.handle.learn(blob_point(&mut rng, i % 3), i % 3).unwrap();
+        }
+        let _ = worker.handle.stats().unwrap();
+        assert!(worker.handle.snapshot().is_none());
+        assert_eq!(worker.handle.snapshot_publishes(), 0);
+        worker.join();
     }
 
     #[test]

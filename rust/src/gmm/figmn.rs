@@ -140,6 +140,21 @@ impl Figmn {
         self.engine.as_ref().map_or(1, |p| p.threads())
     }
 
+    /// Export an immutable read-path snapshot of the current mixture
+    /// (see [`super::ModelSnapshot`]): an `O(K·D²)` copy whose scoring
+    /// is bit-identical to this model's serial path. The snapshot is a
+    /// plain joint-density view; `SupervisedGmm::snapshot` records the
+    /// feature/class split on top.
+    pub fn snapshot(&self) -> super::ModelSnapshot {
+        super::ModelSnapshot::new(
+            self.cfg.clone(),
+            self.comps.clone(),
+            self.points,
+            self.cfg.dim,
+            0,
+        )
+    }
+
     /// Mean of component `j` (exposed for tests/benches/tools).
     pub fn component_mean(&self, j: usize) -> &[f64] {
         &self.comps[j].mean
@@ -188,10 +203,16 @@ impl Figmn {
         if !self.cfg.prune {
             return;
         }
-        let (v_min, sp_min) = (self.cfg.v_min, self.cfg.sp_min);
-        if self.comps.len() > 1 {
-            self.comps.retain(|c| !(c.v > v_min && c.sp < sp_min));
-        }
+        // Shared with Igmn so both variants make identical prune
+        // decisions, and the mixture can never empty (§2.3 sweep keeps
+        // the strongest component when everything trips the predicate).
+        super::prune_components(
+            &mut self.comps,
+            self.cfg.v_min,
+            self.cfg.sp_min,
+            |c| c.v,
+            |c| c.sp,
+        );
         // Priors (Eq. 12) are derived from sp on demand; nothing else to
         // renormalize.
     }
@@ -780,6 +801,29 @@ mod tests {
         for j in 0..m.num_components() {
             assert!(m.component_mean(j)[0] < 50.0);
         }
+    }
+
+    #[test]
+    fn prune_never_empties_the_mixture() {
+        // Regression: one accepted point ages every component (v += 1)
+        // while their posterior mass is still tiny, so with aggressive
+        // thresholds *all* components trip `v > v_min && sp < sp_min`
+        // at once. The old prune retained nothing, after which
+        // log_density/predict panicked and prior() divided by zero.
+        let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.9).with_pruning(1, 100.0);
+        let mut m = Figmn::new(cfg, &[1.0]);
+        m.learn(&[0.0]); // component A
+        m.learn(&[1000.0]); // far away: component B
+        assert_eq!(m.num_components(), 2);
+        // Accepted by A (d² = 0): both components now have v = 2 > 1
+        // and sp ≪ 100 — every one is "spurious".
+        m.learn(&[0.0]);
+        assert_eq!(m.num_components(), 1, "strongest component must survive");
+        // The survivor is the one that actually absorbed the mass.
+        assert!(m.component_mean(0)[0].abs() < 1.0);
+        assert!((m.prior(0) - 1.0).abs() < 1e-12);
+        assert!(m.log_density(&[0.0]).is_finite());
+        assert!(m.posteriors(&[0.0]) == vec![1.0]);
     }
 
     #[test]

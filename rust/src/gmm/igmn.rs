@@ -189,10 +189,15 @@ impl Igmn {
         if !self.cfg.prune {
             return;
         }
-        let (v_min, sp_min) = (self.cfg.v_min, self.cfg.sp_min);
-        if self.comps.len() > 1 {
-            self.comps.retain(|c| !(c.v > v_min && c.sp < sp_min));
-        }
+        // Same sweep as Figmn::prune (shared helper): identical prune
+        // decisions, and the mixture never empties.
+        super::prune_components(
+            &mut self.comps,
+            self.cfg.v_min,
+            self.cfg.sp_min,
+            |c| c.v,
+            |c| c.sp,
+        );
     }
 }
 
@@ -372,6 +377,84 @@ mod tests {
                 assert_close(&pa, &pb, 1e-6);
             }
         });
+    }
+
+    /// The §4 equivalence must hold *through pruning*: with aggressive
+    /// prune thresholds on random streams, both variants make identical
+    /// create/update/prune decisions at every step (same K after every
+    /// point), pruning actually fires, and neither mixture ever empties.
+    #[test]
+    fn igmn_equals_figmn_with_pruning_enabled() {
+        check(12, |rng| {
+            let d = 2 + rng.below(3);
+            let cfg = GmmConfig::new(d)
+                .with_delta(0.2 + 0.5 * rng.uniform())
+                .with_beta(0.2)
+                .with_pruning(2 + rng.below(3) as u64, 1.5 + rng.uniform());
+            let stds = vec![2.0; d];
+            let mut slow = Igmn::new(cfg.clone(), &stds);
+            let mut fast = Figmn::new(cfg, &stds);
+
+            let n_clusters = 2 + rng.below(3);
+            let centers: Vec<Vec<f64>> = (0..n_clusters)
+                .map(|_| (0..d).map(|_| rng.normal() * 10.0).collect())
+                .collect();
+            let mut max_k = 0usize;
+            let mut pruned_total = 0usize;
+            for step in 0..150 {
+                // Mostly clustered points with occasional far outliers so
+                // spurious components appear and get pruned.
+                let x: Vec<f64> = if step % 11 == 10 {
+                    (0..d).map(|_| rng.normal() * 60.0).collect()
+                } else {
+                    centers[step % n_clusters]
+                        .iter()
+                        .map(|&m| m + rng.normal() * 0.8)
+                        .collect()
+                };
+                let before = fast.num_components();
+                let a = slow.learn(&x);
+                let b = fast.learn(&x);
+                assert_eq!(a, b, "create/update diverged at step {step}");
+                assert_eq!(
+                    slow.num_components(),
+                    fast.num_components(),
+                    "prune decisions diverged at step {step}"
+                );
+                assert!(fast.num_components() >= 1, "mixture emptied at step {step}");
+                max_k = max_k.max(fast.num_components());
+                // K before prune = before (+1 on a create step).
+                let base = before + usize::from(b == LearnOutcome::Created);
+                pruned_total += base - fast.num_components();
+            }
+            assert!(pruned_total > 0 || max_k == 1, "pruning never fired (max K = {max_k})");
+
+            // Surviving components still match across variants.
+            for j in 0..fast.num_components() {
+                assert_close(slow.component_mean(j), fast.component_mean(j), 1e-5);
+                let (sp_a, v_a) = slow.component_stats(j);
+                let (sp_b, v_b) = fast.component_stats(j);
+                assert_rel(sp_a, sp_b, 1e-5);
+                assert_eq!(v_a, v_b);
+            }
+        });
+    }
+
+    #[test]
+    fn prune_never_empties_the_mixture() {
+        // Same regression stream as the Figmn test: after one accepted
+        // point every component trips the spuriousness predicate at
+        // once; the strongest must survive.
+        let cfg = GmmConfig::new(1).with_delta(1.0).with_beta(0.9).with_pruning(1, 100.0);
+        let mut m = Igmn::new(cfg, &[1.0]);
+        m.learn(&[0.0]);
+        m.learn(&[1000.0]);
+        assert_eq!(m.num_components(), 2);
+        m.learn(&[0.0]);
+        assert_eq!(m.num_components(), 1, "strongest component must survive");
+        assert!(m.component_mean(0)[0].abs() < 1.0);
+        assert!(m.log_density(&[0.0]).is_finite());
+        assert!(m.posteriors(&[0.0]) == vec![1.0]);
     }
 
     #[test]

@@ -25,11 +25,13 @@ mod figmn;
 mod igmn;
 pub mod inference;
 mod serialize;
+mod snapshot;
 pub mod supervised;
 
 pub use config::GmmConfig;
 pub use figmn::Figmn;
 pub use igmn::Igmn;
+pub use snapshot::ModelSnapshot;
 pub use supervised::SupervisedGmm;
 
 /// Build a precision component from raw parts (used by the runtime's
@@ -108,6 +110,48 @@ pub trait IncrementalMixture {
     ) -> Vec<Vec<f64>> {
         known_vals.iter().map(|x| self.predict(x, known_idx, target_idx)).collect()
     }
+}
+
+/// The §2.3 spuriousness sweep shared by both variants: remove every
+/// component with `v > v_min && sp < sp_min` — except that the mixture
+/// is never allowed to empty. When *every* component trips the
+/// predicate at once (possible on short/adversarial streams: one
+/// accepted point ages all components while their posterior mass is
+/// still small), the single strongest component — highest `sp`, lowest
+/// index on ties — survives, so `log_density`/`predict`/`posteriors`
+/// and the `sp/Σsp` priors stay well-defined. Both `Figmn` and `Igmn`
+/// funnel through this one function, so their prune decisions are
+/// identical by construction (the paper's §4 equivalence).
+///
+/// Returns how many components were removed.
+pub(crate) fn prune_components<C>(
+    comps: &mut Vec<C>,
+    v_min: u64,
+    sp_min: f64,
+    v_of: impl Fn(&C) -> u64,
+    sp_of: impl Fn(&C) -> f64,
+) -> usize {
+    if comps.len() <= 1 {
+        return 0;
+    }
+    let before = comps.len();
+    let doomed = |c: &C| v_of(c) > v_min && sp_of(c) < sp_min;
+    if comps.iter().all(doomed) {
+        let mut keep = 0usize;
+        let mut best = sp_of(&comps[0]);
+        for (j, c) in comps.iter().enumerate().skip(1) {
+            let s = sp_of(c);
+            if s > best {
+                best = s;
+                keep = j;
+            }
+        }
+        comps.swap(0, keep);
+        comps.truncate(1);
+    } else {
+        comps.retain(|c| !doomed(c));
+    }
+    before - comps.len()
 }
 
 /// Shared log-space posterior computation: given per-component

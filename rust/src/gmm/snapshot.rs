@@ -1,0 +1,307 @@
+//! Immutable, shareable read-path view of a trained [`Figmn`].
+//!
+//! The learner only ever mutates `O(K·D²)` of state (means, precision
+//! matrices, log-dets, accumulators), which is cheap to copy out and
+//! publish behind an `Arc`: a [`ModelSnapshot`] is that copy. Scorer
+//! threads serve `score`/`predict` traffic from the latest snapshot
+//! without taking any lock the learner holds — the coordinator's
+//! read–write split (see `crate::coordinator`).
+//!
+//! ## Equivalence guarantee
+//!
+//! Every scoring method here runs the *same instruction sequence* as the
+//! serial path of [`Figmn`] (`log_density`, `predict`, `posteriors`,
+//! `score_batch`, `predict_batch`), sharing the same helpers
+//! (`log_gaussian`, `softmax_posteriors`, `logsumexp_tree`,
+//! `precision_conditional`). A snapshot taken after N learn steps
+//! therefore returns **bit-identical** results to calling the serial
+//! model trained on the same N-point prefix — enforced by this module's
+//! tests and the `serving_read_path` bench.
+//!
+//! [`Figmn`]: super::Figmn
+
+use super::figmn::PrecisionComponent;
+use super::inference::precision_conditional;
+use super::supervised::clip_normalize;
+use super::{log_gaussian, softmax_posteriors, GmmConfig};
+use crate::engine::logsumexp_tree;
+use crate::linalg::sub_into;
+
+/// An immutable copy of a [`super::Figmn`]'s mixture state, safe to
+/// share across scorer threads (`Send + Sync`, plain data only).
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    cfg: GmmConfig,
+    comps: Vec<PrecisionComponent>,
+    /// Σ sp, precomputed with the same left-fold the live model uses so
+    /// priors come out bit-identical.
+    total_sp: f64,
+    /// Learn steps the source model had seen when this snapshot was
+    /// taken — the snapshot's version for staleness accounting.
+    points: u64,
+    /// Supervised split: leading `n_features` dims are features. Equals
+    /// `dim` (with `n_classes == 0`) for a plain joint-density model.
+    n_features: usize,
+    n_classes: usize,
+}
+
+impl ModelSnapshot {
+    pub(crate) fn new(
+        cfg: GmmConfig,
+        comps: Vec<PrecisionComponent>,
+        points: u64,
+        n_features: usize,
+        n_classes: usize,
+    ) -> ModelSnapshot {
+        let total_sp: f64 = comps.iter().map(|c| c.sp).sum();
+        ModelSnapshot { cfg, comps, total_sp, points, n_features, n_classes }
+    }
+
+    /// Record the supervised feature/class split (for
+    /// [`ModelSnapshot::class_scores`]). The blocks must tile the joint
+    /// dimension.
+    pub fn with_split(mut self, n_features: usize, n_classes: usize) -> ModelSnapshot {
+        assert_eq!(
+            n_features + n_classes,
+            self.cfg.dim,
+            "split must tile the joint dimension"
+        );
+        self.n_features = n_features;
+        self.n_classes = n_classes;
+        self
+    }
+
+    pub fn num_components(&self) -> usize {
+        self.comps.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Learn steps the source model had seen at publish time.
+    pub fn points_seen(&self) -> u64 {
+        self.points
+    }
+
+    /// How many learn steps a model that has now seen `current_points`
+    /// is ahead of this snapshot (the read path's staleness).
+    pub fn staleness(&self, current_points: u64) -> u64 {
+        current_points.saturating_sub(self.points)
+    }
+
+    /// Joint log-density `ln p(x)` — bit-identical to
+    /// [`super::IncrementalMixture::log_density`] on the source model.
+    pub fn log_density(&self, x: &[f64]) -> f64 {
+        assert!(!self.comps.is_empty(), "log_density on empty snapshot");
+        assert_eq!(x.len(), self.cfg.dim, "log_density: dimensionality mismatch");
+        let d = self.cfg.dim;
+        let mut e = vec![0.0; d];
+        let mut terms = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            let ll = log_gaussian(c.lambda.quad_form(&e), c.log_det, d);
+            terms.push(ll + (c.sp / self.total_sp).ln());
+        }
+        logsumexp_tree(&terms)
+    }
+
+    /// Joint log-densities for a batch (identical to mapping
+    /// [`ModelSnapshot::log_density`]; read-path parallelism comes from
+    /// concurrent scorer threads, not intra-call sharding).
+    pub fn score_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.log_density(x)).collect()
+    }
+
+    /// Conditional reconstruction of the `target_idx` elements —
+    /// bit-identical to [`super::IncrementalMixture::predict`] on the
+    /// source model.
+    pub fn predict(
+        &self,
+        known_vals: &[f64],
+        known_idx: &[usize],
+        target_idx: &[usize],
+    ) -> Vec<f64> {
+        assert_eq!(known_vals.len(), known_idx.len());
+        assert!(!self.comps.is_empty(), "predict on empty snapshot");
+        let k = self.comps.len();
+        let mut log_liks = vec![0.0; k];
+        let mut recons: Vec<Vec<f64>> = vec![Vec::new(); k];
+        for (j, c) in self.comps.iter().enumerate() {
+            let r = precision_conditional(
+                &c.lambda,
+                &c.mean,
+                c.log_det,
+                known_vals,
+                known_idx,
+                target_idx,
+            );
+            log_liks[j] = r.log_lik;
+            recons[j] = r.reconstruction;
+        }
+        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
+        let post = softmax_posteriors(&log_liks, &sps);
+        let mut out = vec![0.0; target_idx.len()];
+        for (p, r) in post.iter().zip(recons.iter()) {
+            for (o, &v) in out.iter_mut().zip(r.iter()) {
+                *o += p * v;
+            }
+        }
+        out
+    }
+
+    /// Conditional reconstructions for a batch sharing one index split.
+    pub fn predict_batch(
+        &self,
+        known_vals: &[Vec<f64>],
+        known_idx: &[usize],
+        target_idx: &[usize],
+    ) -> Vec<Vec<f64>> {
+        known_vals.iter().map(|kv| self.predict(kv, known_idx, target_idx)).collect()
+    }
+
+    /// Posterior responsibilities `p(j|x)` — bit-identical to
+    /// [`super::IncrementalMixture::posteriors`] on the source model.
+    pub fn posteriors(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cfg.dim, "posteriors: dimensionality mismatch");
+        let d = self.cfg.dim;
+        let mut e = vec![0.0; d];
+        let mut ll = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            ll.push(log_gaussian(c.lambda.quad_form(&e), c.log_det, d));
+        }
+        let sp: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
+        softmax_posteriors(&ll, &sp)
+    }
+
+    /// Classifier scores for the recorded feature/class split —
+    /// bit-identical to `SupervisedGmm::class_scores` on the source
+    /// model. Panics unless the snapshot was taken through
+    /// `SupervisedGmm::snapshot` (or [`ModelSnapshot::with_split`]).
+    pub fn class_scores(&self, features: &[f64]) -> Vec<f64> {
+        assert!(self.n_classes > 0, "snapshot has no class split");
+        assert_eq!(features.len(), self.n_features);
+        let feature_idx: Vec<usize> = (0..self.n_features).collect();
+        let class_idx: Vec<usize> =
+            (self.n_features..self.n_features + self.n_classes).collect();
+        clip_normalize(self.predict(features, &feature_idx, &class_idx))
+    }
+
+    /// Batched [`ModelSnapshot::class_scores`].
+    pub fn class_scores_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.class_scores(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Figmn, GmmConfig, IncrementalMixture};
+    use crate::gmm::supervised::supervised_figmn;
+    use crate::rng::Pcg64;
+
+    fn trained_model(n: usize) -> (Figmn, Vec<Vec<f64>>) {
+        let cfg = GmmConfig::new(3).with_delta(0.4).with_beta(0.1).without_pruning();
+        let mut m = Figmn::new(cfg, &[2.0, 2.0, 2.0]);
+        let mut rng = Pcg64::seed(21);
+        let centers = [[0.0, 0.0, 0.0], [8.0, 8.0, 0.0], [0.0, 8.0, 8.0]];
+        let mut stream = Vec::new();
+        for i in 0..n {
+            let c = &centers[i % 3];
+            let x: Vec<f64> = c.iter().map(|&v| v + rng.normal() * 0.6).collect();
+            m.learn(&x);
+            stream.push(x);
+        }
+        (m, stream)
+    }
+
+    #[test]
+    fn snapshot_scoring_is_bit_identical_to_serial_model() {
+        let (m, stream) = trained_model(120);
+        let snap = m.snapshot();
+        assert_eq!(snap.num_components(), m.num_components());
+        assert_eq!(snap.points_seen(), m.points_seen());
+        let probes: Vec<Vec<f64>> = stream.iter().rev().take(10).cloned().collect();
+        for x in &probes {
+            assert!(snap.log_density(x) == m.log_density(x), "log_density bits differ");
+            assert_eq!(snap.posteriors(x), m.posteriors(x));
+            assert_eq!(
+                snap.predict(&x[..2], &[0, 1], &[2]),
+                m.predict(&x[..2], &[0, 1], &[2])
+            );
+        }
+        let expect: Vec<f64> = probes.iter().map(|x| m.log_density(x)).collect();
+        assert_eq!(snap.score_batch(&probes), expect);
+        let knowns: Vec<Vec<f64>> = probes.iter().map(|x| x[..2].to_vec()).collect();
+        assert_eq!(
+            snap.predict_batch(&knowns, &[0, 1], &[2]),
+            knowns.iter().map(|kv| m.predict(kv, &[0, 1], &[2])).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn snapshot_is_isolated_from_later_learns() {
+        let (mut m, stream) = trained_model(60);
+        let snap = m.snapshot();
+        let before = snap.log_density(&stream[0]);
+        // Keep learning on the live model; the snapshot must not move.
+        for x in stream.iter().take(30) {
+            m.learn(x);
+        }
+        assert!(snap.log_density(&stream[0]) == before);
+        assert_eq!(snap.staleness(m.points_seen()), 30);
+    }
+
+    #[test]
+    fn supervised_snapshot_matches_class_scores() {
+        let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.05).without_pruning();
+        let mut clf = supervised_figmn(cfg, &[3.0, 3.0], 3);
+        let mut rng = Pcg64::seed(5);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..150 {
+            let c = i % 3;
+            let x = vec![
+                centers[c][0] + rng.normal() * 0.7,
+                centers[c][1] + rng.normal() * 0.7,
+            ];
+            clf.train_one(&x, c);
+        }
+        let snap = clf.snapshot().expect("trained model must snapshot");
+        assert_eq!(snap.n_features(), 2);
+        assert_eq!(snap.n_classes(), 3);
+        for i in 0..20 {
+            let c = i % 3;
+            let x = vec![
+                centers[c][0] + rng.normal() * 0.7,
+                centers[c][1] + rng.normal() * 0.7,
+            ];
+            assert_eq!(snap.class_scores(&x), clf.class_scores(&x));
+        }
+        assert_eq!(
+            snap.class_scores_batch(&[vec![0.0, 0.0], vec![7.0, 7.0]]),
+            vec![clf.class_scores(&[0.0, 0.0]), clf.class_scores(&[7.0, 7.0])]
+        );
+    }
+
+    #[test]
+    fn empty_model_has_no_snapshot() {
+        let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.05).without_pruning();
+        let clf = supervised_figmn(cfg, &[1.0, 1.0], 2);
+        assert!(clf.snapshot().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_must_tile_dim() {
+        let (m, _) = trained_model(30);
+        let _ = m.snapshot().with_split(1, 1); // dim is 3
+    }
+}

@@ -131,6 +131,20 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
     }
 }
 
+impl SupervisedGmm<Figmn> {
+    /// Export an immutable read-path snapshot of the joint mixture with
+    /// the feature/class split recorded, so scorer threads can serve
+    /// [`super::ModelSnapshot::class_scores`] bit-identically to this
+    /// wrapper. `None` until the model has seen at least one point (an
+    /// empty mixture has nothing to score).
+    pub fn snapshot(&self) -> Option<super::ModelSnapshot> {
+        if self.model.num_components() == 0 {
+            return None;
+        }
+        Some(self.model.snapshot().with_split(self.n_features, self.n_classes))
+    }
+}
+
 /// Convenience constructor for the fast variant.
 ///
 /// `feature_stds` are the per-feature standard deviations; class one-hot
@@ -178,7 +192,9 @@ fn joint_stds(feature_stds: &[f64], n_classes: usize) -> Vec<f64> {
 
 /// Clip the reconstructed one-hot block to non-negative and normalize to
 /// sum 1, falling back to a softmax when every activation clipped.
-fn clip_normalize(raw: Vec<f64>) -> Vec<f64> {
+/// Shared with [`super::ModelSnapshot::class_scores`] so the snapshot
+/// read path is bit-identical to this wrapper.
+pub(crate) fn clip_normalize(raw: Vec<f64>) -> Vec<f64> {
     let mut scores: Vec<f64> = raw.iter().map(|&v| v.max(0.0)).collect();
     let total: f64 = scores.iter().sum();
     if total <= 0.0 {

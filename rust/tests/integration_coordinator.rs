@@ -6,6 +6,7 @@ use figmn::coordinator::server::dispatch;
 use figmn::coordinator::{
     CheckpointStore, Metrics, ModelSpec, Registry, RoutingPolicy,
 };
+use figmn::gmm::supervised::supervised_figmn;
 use figmn::gmm::{GmmConfig, IncrementalMixture};
 use figmn::rng::Pcg64;
 use std::sync::Arc;
@@ -122,6 +123,53 @@ fn dispatch_covers_full_protocol_surface() {
         dispatch(Request::Stats { model: "p".into() }, &registry, &xla),
         Response::Error(_)
     ));
+}
+
+/// The serving read path's core guarantee: scores served from a
+/// published snapshot are bit-identical to a serial model trained on
+/// the same prefix (no engine, no coordinator).
+#[test]
+fn snapshot_read_path_is_bit_identical_to_serial_model() {
+    let registry = Registry::new(Arc::new(Metrics::new())).with_scorers(2);
+    let gmm = GmmConfig::new(1).with_delta(0.5).with_beta(0.05).without_pruning();
+    registry
+        .create(
+            ModelSpec::new("m", 2, 3)
+                .with_gmm(gmm.clone())
+                .with_stds(vec![3.0, 3.0])
+                .with_snapshot_interval(4),
+        )
+        .unwrap();
+    let router = registry.router("m").unwrap();
+    // Serial twin fed the same stream (supervised_figmn builds the same
+    // joint config the worker does).
+    let mut serial = supervised_figmn(gmm, &[3.0, 3.0], 3);
+    let mut rng = Pcg64::seed(6);
+    for i in 0..32 {
+        let c = i % 3;
+        let x = blob(&mut rng, c);
+        router.learn(x.clone(), c).unwrap();
+        serial.train_one(&x, c);
+    }
+    // Drain the queue; 32 is a multiple of the interval, so the last
+    // publish already covers the full prefix.
+    registry.stats("m").unwrap();
+    router.shards()[0]
+        .wait_snapshot_points(32, 1000)
+        .expect("snapshot never caught up");
+    for i in 0..20 {
+        let c = i % 3;
+        let x = blob(&mut rng, c);
+        assert_eq!(
+            router.predict_read(&x).unwrap(),
+            serial.class_scores(&x),
+            "snapshot read diverged from the serial model"
+        );
+    }
+    let snap = router.shards()[0].snapshot().unwrap();
+    let joint = vec![7.0, 7.0, 0.0, 1.0, 0.0];
+    assert!(snap.log_density(&joint) == serial.model().log_density(&joint));
+    assert!(router.score_read(&joint).unwrap() == serial.model().log_density(&joint));
 }
 
 #[test]
