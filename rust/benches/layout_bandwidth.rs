@@ -1,0 +1,193 @@
+//! Layout micro-benchmark: dense array-of-structs vs the packed
+//! flat-arena component layout, on the paper's two hot kernels — the
+//! `Λ·v` quadratic form (Eq. 22) and the fused Sherman–Morrison update
+//! (Eqs. 20–21/25–26). Both are memory-bandwidth-bound at scale, so the
+//! packed layout's ~2× fewer bytes per component is the quantity under
+//! test, alongside the bit-identity gate (packed sweeps must reproduce
+//! the dense trajectory exactly).
+//!
+//! Run: `cargo bench --bench layout_bandwidth`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench layout_bandwidth`
+//! Writes `BENCH_layout_bandwidth.json` with dense-vs-packed throughput
+//! and bytes-per-component on the `scaling_dim` grid D ∈ {16, 64, 128}.
+
+use figmn::bench_support::{quick_mode, write_bench_json, TablePrinter};
+use figmn::gmm::ComponentStore;
+use figmn::json::Json;
+use figmn::linalg::packed;
+use figmn::linalg::rank_one::{figmn_fused_update, figmn_fused_update_packed};
+use figmn::linalg::Matrix;
+use figmn::rng::Pcg64;
+use std::time::Instant;
+
+/// Dense mirror of one component (the pre-store array-of-structs shape).
+struct DenseComp {
+    mean: Vec<f64>,
+    lambda: Matrix,
+    log_det: f64,
+}
+
+/// Packed flat arenas (the ComponentStore shape, inlined so the bench
+/// depends only on the public linalg kernels).
+struct PackedArenas {
+    means: Vec<f64>,
+    mats: Vec<f64>,
+    log_dets: Vec<f64>,
+}
+
+fn build(d: usize, k: usize, seed: u64) -> (Vec<DenseComp>, PackedArenas) {
+    let mut rng = Pcg64::seed(seed);
+    let tri = packed::packed_len(d);
+    let mut dense = Vec::with_capacity(k);
+    let mut arenas = PackedArenas {
+        means: Vec::with_capacity(k * d),
+        mats: Vec::with_capacity(k * tri),
+        log_dets: Vec::with_capacity(k),
+    };
+    for _ in 0..k {
+        // Diagonally-dominant SPD precision: diag 2+|n|, small off-diag.
+        let mut lam = Matrix::zeros(d, d);
+        for i in 0..d {
+            lam[(i, i)] = 2.0 + rng.uniform();
+        }
+        for i in 0..d {
+            for j in i + 1..d {
+                let v = rng.normal() * 0.01;
+                lam[(i, j)] = v;
+                lam[(j, i)] = v;
+            }
+        }
+        let mean: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let log_det = rng.normal() * 0.1;
+        arenas.means.extend_from_slice(&mean);
+        arenas.mats.extend(packed::pack_symmetric(&lam));
+        arenas.log_dets.push(log_det);
+        dense.push(DenseComp { mean, lambda: lam, log_det });
+    }
+    (dense, arenas)
+}
+
+/// One learn-like sweep over all K components in the dense layout:
+/// distance pass (quad_form_with) + fused update per component.
+fn dense_sweep(comps: &mut [DenseComp], x: &[f64], w: &mut [f64], e: &mut [f64], omega: f64) {
+    for c in comps.iter_mut() {
+        for ((ei, &xi), &mi) in e.iter_mut().zip(x.iter()).zip(c.mean.iter()) {
+            *ei = xi - mi;
+        }
+        let q = c.lambda.quad_form_with(e, w);
+        if let Some(r) = figmn_fused_update(&mut c.lambda, w, q, omega, c.log_det) {
+            c.log_det = r.log_det;
+        }
+    }
+}
+
+/// The same sweep over the packed flat arenas.
+fn packed_sweep(
+    arenas: &mut PackedArenas,
+    d: usize,
+    x: &[f64],
+    w: &mut [f64],
+    e: &mut [f64],
+    omega: f64,
+) {
+    let tri = packed::packed_len(d);
+    let k = arenas.log_dets.len();
+    for j in 0..k {
+        let mean = &arenas.means[j * d..(j + 1) * d];
+        for ((ei, &xi), &mi) in e.iter_mut().zip(x.iter()).zip(mean.iter()) {
+            *ei = xi - mi;
+        }
+        let mat = &mut arenas.mats[j * tri..(j + 1) * tri];
+        let q = packed::quad_form_with(mat, d, e, w);
+        if let Some(r) = figmn_fused_update_packed(mat, d, w, q, omega, arenas.log_dets[j]) {
+            arenas.log_dets[j] = r.log_det;
+        }
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let dims: &[usize] = &[16, 64, 128];
+    let k = if quick { 32 } else { 128 };
+    println!(
+        "layout_bandwidth — dense AoS vs packed SoA, K={k}{}",
+        if quick { " [quick]" } else { "" }
+    );
+    let t = TablePrinter::new(
+        &["D", "dense pts/s", "packed pts/s", "speedup", "dense B/comp", "packed B/comp"],
+        &[6, 14, 14, 9, 13, 13],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &d in dims {
+        let points = if quick { 200_000 / (d * d) + 20 } else { 4_000_000 / (d * d) + 50 };
+        let (mut dense, mut arenas) = build(d, k, 7);
+        let mut rng = Pcg64::seed(11);
+        let xs: Vec<Vec<f64>> =
+            (0..points).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let omega = 0.01;
+        let mut w = vec![0.0; d];
+        let mut e = vec![0.0; d];
+
+        let t0 = Instant::now();
+        for x in &xs {
+            dense_sweep(&mut dense, x, &mut w, &mut e, omega);
+        }
+        let dense_pts = points as f64 / t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for x in &xs {
+            packed_sweep(&mut arenas, d, x, &mut w, &mut e, omega);
+        }
+        let packed_pts = points as f64 / t0.elapsed().as_secs_f64();
+
+        // Bit-identity gate: after identical update streams, every
+        // packed row must equal the dense matrix's upper triangle and
+        // every log-det must match exactly.
+        let tri = packed::packed_len(d);
+        for (j, c) in dense.iter().enumerate() {
+            assert_eq!(
+                packed::pack_symmetric(&c.lambda),
+                arenas.mats[j * tri..(j + 1) * tri].to_vec(),
+                "D={d}: packed trajectory diverged from dense at component {j}"
+            );
+            assert!(
+                c.log_det.to_bits() == arenas.log_dets[j].to_bits(),
+                "D={d}: log-det bits diverged at component {j}"
+            );
+        }
+
+        // Payload bytes per component in each layout, from the store's
+        // own accounting (one source of truth with `model_bytes`).
+        let dense_bytes = ComponentStore::dense_equivalent_bytes(d);
+        let packed_bytes = ComponentStore::new(d).bytes_per_component();
+        t.row(&[
+            d.to_string(),
+            format!("{dense_pts:.3e}"),
+            format!("{packed_pts:.3e}"),
+            format!("{:6.2}×", packed_pts / dense_pts),
+            dense_bytes.to_string(),
+            packed_bytes.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("d", Json::from(d)),
+            ("k", Json::from(k)),
+            ("points", Json::from(points)),
+            ("dense_pts_per_s", dense_pts.into()),
+            ("packed_pts_per_s", packed_pts.into()),
+            ("speedup", (packed_pts / dense_pts).into()),
+            ("dense_bytes_per_component", dense_bytes.into()),
+            ("packed_bytes_per_component", packed_bytes.into()),
+        ]));
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", "layout_bandwidth".into()),
+        ("quick", quick.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("layout_bandwidth", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+    println!("layout_bandwidth OK — packed trajectories bit-identical to dense");
+}

@@ -8,12 +8,15 @@
 //! Writes `BENCH_scaling_dim.json`.
 
 use figmn::bench_support::{fit_power_law, quick_mode, write_bench_json, TablePrinter};
-use figmn::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture};
+use figmn::gmm::{ComponentStore, Figmn, GmmConfig, Igmn, IncrementalMixture};
 use figmn::json::Json;
 use figmn::rng::Pcg64;
 use std::time::Instant;
 
-fn per_point_seconds(dim: usize, n: usize, fast: bool, seed: u64) -> f64 {
+/// Returns `(seconds per point, arena bytes per component)` — the
+/// second term makes the packed layout's ~2× memory saving visible in
+/// `BENCH_scaling_dim.json` alongside the speed numbers.
+fn per_point_seconds(dim: usize, n: usize, fast: bool, seed: u64) -> (f64, usize) {
     let cfg = GmmConfig::new(dim).with_delta(1.0).with_beta(0.0).without_pruning();
     let stds = vec![1.0; dim];
     let mut rng = Pcg64::seed(seed);
@@ -24,14 +27,14 @@ fn per_point_seconds(dim: usize, n: usize, fast: bool, seed: u64) -> f64 {
         for p in &points {
             m.learn(p);
         }
-        t.elapsed().as_secs_f64() / n as f64
+        (t.elapsed().as_secs_f64() / n as f64, m.bytes_per_component())
     } else {
         let mut m = Igmn::new(cfg, &stds);
         let t = Instant::now();
         for p in &points {
             m.learn(p);
         }
-        t.elapsed().as_secs_f64() / n as f64
+        (t.elapsed().as_secs_f64() / n as f64, m.bytes_per_component())
     }
 }
 
@@ -55,12 +58,20 @@ fn main() {
     for &d in dims_figmn {
         let n_cap = if quick { 200 } else { 2000 };
         let n = (200_000 / d).clamp(20, n_cap); // keep each cell ~fixed work
-        let fast = per_point_seconds(d, n, true, 42);
+        let (fast, bytes_per_comp) = per_point_seconds(d, n, true, 42);
         figmn_pts.push((d as f64, fast));
-        let mut row = vec![("d", Json::from(d)), ("figmn_s_per_pt", fast.into())];
+        // Packed-arena footprint next to the dense-equivalent payload,
+        // so the layout's ~2× memory saving shows up in the JSON.
+        let dense_equiv = ComponentStore::dense_equivalent_bytes(d);
+        let mut row = vec![
+            ("d", Json::from(d)),
+            ("figmn_s_per_pt", fast.into()),
+            ("bytes_per_component", bytes_per_comp.into()),
+            ("dense_bytes_per_component", dense_equiv.into()),
+        ];
         if dims_igmn.contains(&d) {
             let n_slow = (60 * 1024 / d.max(1)).clamp(10, if quick { 100 } else { 500 });
-            let slow = per_point_seconds(d, n_slow, false, 42);
+            let (slow, _) = per_point_seconds(d, n_slow, false, 42);
             igmn_pts.push((d as f64, slow));
             row.push(("igmn_s_per_pt", slow.into()));
             t.row(&[

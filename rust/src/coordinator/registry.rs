@@ -223,6 +223,9 @@ impl Registry {
             ("learned", total(|s| s.learned).into()),
             ("predicted", total(|s| s.predicted).into()),
             ("xla_batches", total(|s| s.xla_batches).into()),
+            // Model memory footprint: total arena payload across shards
+            // (packed-symmetric layout — about half the dense size).
+            ("model_bytes", shard_stats.iter().map(|s| s.model_bytes).sum::<usize>().into()),
             ("coordinator", self.metrics.snapshot().to_json()),
             (
                 "per_shard",
@@ -321,6 +324,15 @@ mod tests {
         assert_eq!(best, 1);
         let stats = reg.stats("m").unwrap();
         assert_eq!(stats.get("learned").unwrap().as_usize(), Some(150));
+        // The memory footprint gauge reflects the packed arenas: joint
+        // dim is 2 features + 3 classes = 5 → 5 + 15 + 2 floats + age.
+        let per_comp = (5 + 15 + 2) * 8 + 8;
+        let components = stats.get("components").unwrap().as_usize().unwrap();
+        assert!(components > 0);
+        assert_eq!(
+            stats.get("model_bytes").unwrap().as_usize(),
+            Some(components * per_comp)
+        );
         reg.drop_model("m").unwrap();
         assert!(reg.router("m").is_err());
     }

@@ -264,22 +264,33 @@ impl Router {
         }
     }
 
-    /// Average per-point densities across shard results.
+    /// Average per-point densities across shard results. A shard that
+    /// replied [`ReadResult::Failed`] (protocol mismatch) is skipped;
+    /// when *no* shard produced densities, the first failure reason is
+    /// surfaced as a protocol error to the client.
     fn merge_densities(results: Vec<ReadResult>, expect_len: usize) -> Result<Vec<f64>> {
         let mut acc = vec![0.0; expect_len];
         let mut n = 0usize;
+        let mut failure: Option<String> = None;
         for r in results {
-            if let ReadResult::Densities(d) = r {
-                if d.len() == expect_len {
+            match r {
+                ReadResult::Densities(d) if d.len() == expect_len => {
                     n += 1;
                     for (a, v) in acc.iter_mut().zip(d.iter()) {
                         *a += v;
                     }
                 }
+                ReadResult::Failed(msg) => {
+                    failure.get_or_insert(msg);
+                }
+                _ => {}
             }
         }
         if n == 0 {
-            return Err(CoordError::Rejected("no shard could score"));
+            return Err(match failure {
+                Some(msg) => CoordError::Protocol(msg),
+                None => CoordError::Rejected("no shard could score"),
+            });
         }
         for a in &mut acc {
             *a /= n as f64;
@@ -287,13 +298,15 @@ impl Router {
         Ok(acc)
     }
 
-    /// Average per-point score vectors across shard results.
+    /// Average per-point score vectors across shard results (same
+    /// failure semantics as [`Router::merge_densities`]).
     fn merge_scores(results: Vec<ReadResult>, expect_len: usize) -> Result<Vec<Vec<f64>>> {
         let mut acc: Option<Vec<Vec<f64>>> = None;
         let mut n = 0usize;
+        let mut failure: Option<String> = None;
         for r in results {
-            if let ReadResult::Scores(rows) = r {
-                if rows.len() == expect_len {
+            match r {
+                ReadResult::Scores(rows) if rows.len() == expect_len => {
                     n += 1;
                     match &mut acc {
                         None => acc = Some(rows),
@@ -306,9 +319,16 @@ impl Router {
                         }
                     }
                 }
+                ReadResult::Failed(msg) => {
+                    failure.get_or_insert(msg);
+                }
+                _ => {}
             }
         }
-        let mut out = acc.ok_or(CoordError::Rejected("no shard could predict"))?;
+        let mut out = acc.ok_or(match failure {
+            Some(msg) => CoordError::Protocol(msg),
+            None => CoordError::Rejected("no shard could predict"),
+        })?;
         for row in &mut out {
             for v in row {
                 *v /= n as f64;
@@ -565,6 +585,30 @@ mod tests {
         assert!(matches!(router.predict_read(&[1.0]), Err(CoordError::Protocol(_))));
         drop(router);
         w.join();
+    }
+
+    /// Regression: when every shard replies `Failed` (protocol
+    /// mismatch), the client gets the failure reason as a clean
+    /// protocol error — previously a mismatch could only surface as a
+    /// dead-scorer disconnect.
+    #[test]
+    fn merge_surfaces_shard_failure_reason() {
+        let results = vec![ReadResult::Failed("predict: model has no class split".into())];
+        match Router::merge_scores(results, 1) {
+            Err(CoordError::Protocol(msg)) => assert!(msg.contains("no class split")),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+        let results = vec![ReadResult::Failed("score: expected 4 dims, got 1".into())];
+        match Router::merge_densities(results, 1) {
+            Err(CoordError::Protocol(msg)) => assert!(msg.contains("expected 4 dims")),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+        // A healthy shard still wins over a failed one.
+        let results = vec![
+            ReadResult::Failed("score: expected 4 dims, got 1".into()),
+            ReadResult::Densities(vec![-1.0]),
+        ];
+        assert_eq!(Router::merge_densities(results, 1).unwrap(), vec![-1.0]);
     }
 
     #[test]

@@ -43,18 +43,66 @@ pub(crate) enum ReadResult {
     Densities(Vec<f64>),
     /// One score vector per input point (length 1 for `ClassScores`).
     Scores(Vec<Vec<f64>>),
+    /// The job could not run against this snapshot (protocol mismatch:
+    /// wrong dimensionality, a class-scores request against a model
+    /// with no class split, an empty snapshot). A failed job is a clean
+    /// *reply* — the router surfaces it to the client as an error
+    /// `Response` — never a panic inside a scorer thread.
+    Failed(String),
 }
 
 /// Run one read job — shared by the pool threads and the router's
 /// inline path (no pool attached), so both produce identical results.
+///
+/// Every request-shape mismatch is validated *before* touching the
+/// scoring paths (whose asserts would otherwise panic the thread), so a
+/// protocol mismatch comes back as [`ReadResult::Failed`].
 pub(crate) fn execute(snap: &ModelSnapshot, kind: ReadKind) -> ReadResult {
+    if snap.num_components() == 0 {
+        return ReadResult::Failed("snapshot has no components".into());
+    }
+    let check_dim = |got: usize, want: usize, what: &str| -> Option<ReadResult> {
+        if got != want {
+            Some(ReadResult::Failed(format!("{what}: expected {want} dims, got {got}")))
+        } else {
+            None
+        }
+    };
     match kind {
-        ReadKind::Score { x } => ReadResult::Densities(vec![snap.log_density(&x)]),
-        ReadKind::ScoreBatch { xs } => ReadResult::Densities(snap.score_batch(&xs)),
+        ReadKind::Score { x } => {
+            if let Some(fail) = check_dim(x.len(), snap.dim(), "score") {
+                return fail;
+            }
+            ReadResult::Densities(vec![snap.log_density(&x)])
+        }
+        ReadKind::ScoreBatch { xs } => {
+            for row in xs.iter() {
+                if let Some(fail) = check_dim(row.len(), snap.dim(), "score_batch") {
+                    return fail;
+                }
+            }
+            ReadResult::Densities(snap.score_batch(&xs))
+        }
         ReadKind::ClassScores { features } => {
+            if snap.n_classes() == 0 {
+                return ReadResult::Failed("predict: model has no class split".into());
+            }
+            if let Some(fail) = check_dim(features.len(), snap.n_features(), "predict") {
+                return fail;
+            }
             ReadResult::Scores(vec![snap.class_scores(&features)])
         }
-        ReadKind::ClassScoresBatch { xs } => ReadResult::Scores(snap.class_scores_batch(&xs)),
+        ReadKind::ClassScoresBatch { xs } => {
+            if snap.n_classes() == 0 {
+                return ReadResult::Failed("predict_batch: model has no class split".into());
+            }
+            for row in xs.iter() {
+                if let Some(fail) = check_dim(row.len(), snap.n_features(), "predict_batch") {
+                    return fail;
+                }
+            }
+            ReadResult::Scores(snap.class_scores_batch(&xs))
+        }
     }
 }
 
@@ -168,20 +216,59 @@ mod tests {
     }
 
     #[test]
-    fn panicking_job_does_not_kill_the_pool() {
+    fn malformed_read_is_a_failed_reply_not_a_dead_scorer() {
         let snap = snapshot();
         let pool = ScorerPool::new(1);
-        // Wrong-dimension input trips a scoring assert inside the job;
-        // the requester must get a clean disconnect, and the same
-        // (only) scorer thread must keep serving afterwards.
+        // Wrong-dimension input must come back as a clean Failed reply
+        // (previously it tripped a scoring assert and the requester saw
+        // only a disconnect), and the same (only) scorer thread must
+        // keep serving afterwards.
         let rx = pool
             .submit(snap.clone(), ReadKind::Score { x: vec![1.0] })
             .unwrap();
-        assert!(rx.recv().is_err(), "panicked job must drop its reply");
+        match rx.recv().expect("malformed job must reply, not die") {
+            ReadResult::Failed(msg) => assert!(msg.contains("expected 2 dims"), "got: {msg}"),
+            _ => panic!("expected a Failed reply"),
+        }
         let rx = pool
             .submit(snap.clone(), ReadKind::Score { x: vec![0.0, 0.0] })
             .unwrap();
-        match rx.recv().expect("pool must survive a panicking job") {
+        match rx.recv().expect("pool must survive a failed job") {
+            ReadResult::Densities(d) => assert!(d[0].is_finite()),
+            _ => panic!("wrong result kind"),
+        }
+    }
+
+    /// Regression for the read-path protocol mismatch: a class-scores
+    /// request against a joint-density snapshot (no class split) used to
+    /// panic inside the scorer thread — the client saw "scorer died".
+    /// It must instead produce an error reply the router can forward as
+    /// an error `Response`, with the thread still alive.
+    #[test]
+    fn class_scores_without_split_is_failed_reply() {
+        let snap = snapshot(); // plain Figmn snapshot: n_classes == 0
+        assert_eq!(snap.n_classes(), 0);
+        let pool = ScorerPool::new(1);
+        let rx = pool
+            .submit(snap.clone(), ReadKind::ClassScores { features: vec![0.0, 0.0] })
+            .unwrap();
+        match rx.recv().expect("mismatched job must reply, not die") {
+            ReadResult::Failed(msg) => assert!(msg.contains("no class split"), "got: {msg}"),
+            _ => panic!("expected a Failed reply"),
+        }
+        let xs = Arc::new(vec![vec![0.0, 0.0]]);
+        let rx = pool
+            .submit(snap.clone(), ReadKind::ClassScoresBatch { xs })
+            .unwrap();
+        match rx.recv().unwrap() {
+            ReadResult::Failed(msg) => assert!(msg.contains("no class split")),
+            _ => panic!("expected a Failed reply"),
+        }
+        // The same scorer thread still serves well-formed traffic.
+        let rx = pool
+            .submit(snap.clone(), ReadKind::Score { x: vec![0.0, 0.0] })
+            .unwrap();
+        match rx.recv().expect("pool must survive protocol mismatches") {
             ReadResult::Densities(d) => assert!(d[0].is_finite()),
             _ => panic!("wrong result kind"),
         }

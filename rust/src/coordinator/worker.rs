@@ -142,6 +142,9 @@ pub struct WorkerStats {
     pub learned: u64,
     pub predicted: u64,
     pub xla_batches: u64,
+    /// Arena payload bytes of this shard's live mixture (packed layout;
+    /// see `gmm::ComponentStore::model_bytes`).
+    pub model_bytes: usize,
 }
 
 impl WorkerStats {
@@ -152,6 +155,7 @@ impl WorkerStats {
             ("learned", (self.learned as usize).into()),
             ("predicted", (self.predicted as usize).into()),
             ("xla_batches", (self.xla_batches as usize).into()),
+            ("model_bytes", self.model_bytes.into()),
         ])
     }
 }
@@ -492,6 +496,7 @@ fn worker_loop(
                     learned,
                     predicted,
                     xla_batches,
+                    model_bytes: clf.model().model_bytes(),
                 });
             }
             Some(Command::CheckpointJson { reply }) => {

@@ -6,22 +6,35 @@
 //! all `O(D²)`. No matrix is ever inverted or factorized on the learn
 //! path.
 //!
+//! All component state lives in the flat arenas of a
+//! [`super::ComponentStore`]: means in one `K×D` block, precisions in
+//! one `K×D(D+1)/2` block of packed upper-triangular symmetric storage,
+//! and `log|C|`/`sp`/`v` in parallel scalar arrays. The two hot kernels
+//! ([`packed::quad_form_with`] and
+//! [`crate::linalg::rank_one::figmn_fused_update_packed`]) sweep packed
+//! rows — half the bytes of the dense layout — while performing the
+//! same floating-point operations in the same order, so results are
+//! bit-identical to the dense formulation (see
+//! `tests/layout_equivalence.rs`).
+//!
 //! Both passes are component-local, so when an engine is attached
 //! ([`Figmn::with_engine`]) the K components are sharded across the
 //! fixed thread pool of [`crate::engine::WorkerPool`]: each worker runs
-//! the distance pass and the fused update for its shard with its own
-//! scratch arena, and the O(K) posterior merge runs serially through the
-//! deterministic tree reduction in [`super::softmax_posteriors`].
-//! Results are bit-identical to the serial path for every thread count
-//! (see the crate-level determinism guarantee).
+//! the distance pass and the fused update over the contiguous arena
+//! rows of its shard with its own scratch arena, and the O(K) posterior
+//! merge runs serially through the deterministic tree reduction in
+//! [`super::softmax_posteriors`]. Results are bit-identical to the
+//! serial path for every thread count (see the crate-level determinism
+//! guarantee).
 
 use super::inference::precision_conditional;
+use super::store::ComponentStore;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
 use crate::engine::{
     logsumexp_tree, worth_sharding, worth_sharding_batch, EngineConfig, SharedMut, WorkerPool,
 };
-use crate::linalg::rank_one::figmn_fused_update;
-use crate::linalg::{sub_into, Matrix};
+use crate::linalg::rank_one::figmn_fused_update_packed;
+use crate::linalg::{packed, sub_into, Matrix};
 
 /// Cap on live per-(point, component) slots in the batch scoring paths:
 /// batches are processed in chunks of `BATCH_CHUNK_SLOTS / K` points so
@@ -29,26 +42,14 @@ use crate::linalg::{sub_into, Matrix};
 /// regroups pool dispatches — per-point results are unchanged.
 const BATCH_CHUNK_SLOTS: usize = 1 << 16;
 
-/// One Gaussian component in precision form.
-#[derive(Debug, Clone)]
-pub(crate) struct PrecisionComponent {
-    pub mean: Vec<f64>,
-    /// Λ = C⁻¹ (kept exactly symmetric by the update rules).
-    pub lambda: Matrix,
-    /// log |C| — note: determinant of the *covariance*, as in the paper
-    /// ("we keep the precision matrix Λ, but the determinant of C").
-    pub log_det: f64,
-    /// Accumulator sp_j (Eq. 5).
-    pub sp: f64,
-    /// Age v_j (Eq. 4).
-    pub v: u64,
-}
-
 /// The fast IGMN (paper §3). See [`crate::gmm`] for the shared semantics.
 pub struct Figmn {
     cfg: GmmConfig,
     sigma_ini: Vec<f64>,
-    comps: Vec<PrecisionComponent>,
+    /// All component state: means, packed precisions Λ = C⁻¹ (kept
+    /// exactly symmetric by the update rules), log|C| (determinant of
+    /// the *covariance*, as in the paper), sp (Eq. 5) and age v (Eq. 4).
+    store: ComponentStore,
     points: u64,
     /// Optional component-sharded thread pool (None = serial).
     engine: Option<WorkerPool>,
@@ -56,7 +57,7 @@ pub struct Figmn {
     buf_e: Vec<f64>,
     buf_d2: Vec<f64>,
     /// Per-component `w = Λ·e` saved by the distance pass (K·D flat) and
-    /// reused by the fused update — see rank_one::figmn_fused_update.
+    /// reused by the fused update — see rank_one::figmn_fused_update_packed.
     buf_ws: Vec<f64>,
     buf_ll: Vec<f64>,
     buf_sp: Vec<f64>,
@@ -71,7 +72,7 @@ impl Figmn {
         Figmn {
             cfg,
             sigma_ini,
-            comps: Vec::new(),
+            store: ComponentStore::new(d),
             points: 0,
             engine: None,
             buf_e: vec![0.0; d],
@@ -90,25 +91,28 @@ impl Figmn {
         &self.sigma_ini
     }
 
-    pub(crate) fn components(&self) -> &[PrecisionComponent] {
-        &self.comps
+    /// The flat component arenas backing this model.
+    pub fn store(&self) -> &ComponentStore {
+        &self.store
     }
 
-    pub(crate) fn components_mut(&mut self) -> &mut Vec<PrecisionComponent> {
-        &mut self.comps
+    /// Mutable arena access (runtime state unpacking; not public API).
+    pub(crate) fn store_mut(&mut self) -> &mut ComponentStore {
+        &mut self.store
     }
 
     pub(crate) fn from_parts(
         cfg: GmmConfig,
         sigma_ini: Vec<f64>,
-        comps: Vec<PrecisionComponent>,
+        store: ComponentStore,
         points: u64,
     ) -> Self {
         let d = cfg.dim;
+        assert_eq!(store.dim(), d, "from_parts: store dim mismatch");
         Figmn {
             cfg,
             sigma_ini,
-            comps,
+            store,
             points,
             engine: None,
             buf_e: vec![0.0; d],
@@ -141,14 +145,14 @@ impl Figmn {
     }
 
     /// Export an immutable read-path snapshot of the current mixture
-    /// (see [`super::ModelSnapshot`]): an `O(K·D²)` copy whose scoring
-    /// is bit-identical to this model's serial path. The snapshot is a
-    /// plain joint-density view; `SupervisedGmm::snapshot` records the
-    /// feature/class split on top.
+    /// (see [`super::ModelSnapshot`]): a bulk copy of the component
+    /// arenas whose scoring is bit-identical to this model's serial
+    /// path. The snapshot is a plain joint-density view;
+    /// `SupervisedGmm::snapshot` records the feature/class split on top.
     pub fn snapshot(&self) -> super::ModelSnapshot {
         super::ModelSnapshot::new(
             self.cfg.clone(),
-            self.comps.clone(),
+            self.store.clone(),
             self.points,
             self.cfg.dim,
             0,
@@ -157,93 +161,100 @@ impl Figmn {
 
     /// Mean of component `j` (exposed for tests/benches/tools).
     pub fn component_mean(&self, j: usize) -> &[f64] {
-        &self.comps[j].mean
+        self.store.mean(j)
     }
 
     /// `(sp_j, v_j)` bookkeeping of component `j`.
     pub fn component_stats(&self, j: usize) -> (f64, u64) {
-        (self.comps[j].sp, self.comps[j].v)
+        (self.store.sp(j), self.store.v(j))
     }
 
-    /// Precision matrix of component `j`.
-    pub fn component_lambda(&self, j: usize) -> &Matrix {
-        &self.comps[j].lambda
+    /// Precision matrix of component `j`, expanded to dense form
+    /// (tests/benches/interop; the arenas store it packed).
+    pub fn component_lambda(&self, j: usize) -> Matrix {
+        self.store.mat_dense(j)
     }
 
     /// `log|C_j|`.
     pub fn component_log_det(&self, j: usize) -> f64 {
-        self.comps[j].log_det
+        self.store.log_det(j)
     }
 
     /// Prior p(j) = sp_j / Σ sp (Eq. 12).
     pub fn prior(&self, j: usize) -> f64 {
-        let total: f64 = self.comps.iter().map(|c| c.sp).sum();
-        self.comps[j].sp / total
+        self.store.sp(j) / self.store.total_sp()
+    }
+
+    /// Arena bytes per component (packed layout; see
+    /// [`ComponentStore::bytes_per_component`]).
+    pub fn bytes_per_component(&self) -> usize {
+        self.store.bytes_per_component()
+    }
+
+    /// Total arena payload of the live mixture.
+    pub fn model_bytes(&self) -> usize {
+        self.store.model_bytes()
     }
 
     fn create(&mut self, x: &[f64]) {
         let d = self.cfg.dim;
-        let mut lambda = Matrix::zeros(d, d);
+        let mut lambda = vec![0.0; self.store.mat_len()];
         let mut log_det = 0.0;
         for i in 0..d {
             let s2 = self.sigma_ini[i] * self.sigma_ini[i];
-            lambda[(i, i)] = 1.0 / s2;
+            lambda[packed::row_start(i, d)] = 1.0 / s2;
             log_det += s2.ln();
         }
-        self.comps.push(PrecisionComponent {
-            mean: x.to_vec(),
-            lambda,
-            log_det,
-            sp: 1.0,
-            v: 1,
-        });
+        self.store.push(x, &lambda, log_det, 1.0, 1);
     }
 
     fn prune(&mut self) {
         if !self.cfg.prune {
             return;
         }
-        // Shared with Igmn so both variants make identical prune
-        // decisions, and the mixture can never empty (§2.3 sweep keeps
-        // the strongest component when everything trips the predicate).
-        super::prune_components(
-            &mut self.comps,
-            self.cfg.v_min,
-            self.cfg.sp_min,
-            |c| c.v,
-            |c| c.sp,
-        );
+        // The store's sweep is shared with Igmn, so both variants make
+        // identical prune decisions, and the mixture can never empty
+        // (§2.3 sweep keeps the strongest component when everything
+        // trips the predicate).
+        self.store.prune(self.cfg.v_min, self.cfg.sp_min);
         // Priors (Eq. 12) are derived from sp on demand; nothing else to
         // renormalize.
     }
 
     /// `ln p(x|j)` for every component, via the engine when attached.
     fn per_component_loglik(&self, x: &[f64]) -> Vec<f64> {
-        let k = self.comps.len();
+        let k = self.store.len();
         let d = self.cfg.dim;
         let mut ll = vec![0.0; k];
         match &self.engine {
             Some(pool) if worth_sharding(k, d, pool.threads()) => {
-                let comps = &self.comps;
+                let store = &self.store;
                 let out = SharedMut::new(ll.as_mut_ptr());
                 pool.run(k, &move |_, range, scratch| {
                     scratch.ensure(d);
                     for j in range {
-                        let c = &comps[j];
                         let e = &mut scratch.e[..d];
-                        sub_into(x, &c.mean, e);
+                        sub_into(x, store.mean(j), e);
                         // Safety: slot j is owned by exactly one shard.
                         unsafe {
-                            *out.at(j) = log_gaussian(c.lambda.quad_form(e), c.log_det, d);
+                            *out.at(j) = log_gaussian(
+                                packed::quad_form(store.mat(j), d, e),
+                                store.log_det(j),
+                                d,
+                            );
                         }
                     }
                 });
             }
             _ => {
                 let mut e = vec![0.0; d];
-                for (j, c) in self.comps.iter().enumerate() {
-                    sub_into(x, &c.mean, &mut e);
-                    ll[j] = log_gaussian(c.lambda.quad_form(&e), c.log_det, d);
+                for (j, slot) in ll.iter_mut().enumerate() {
+                    sub_into(x, self.store.mean(j), &mut e);
+                    *slot = log_gaussian(
+                        packed::quad_form(self.store.mat(j), d, &e),
+                        self.store.log_det(j),
+                        d,
+                    );
                 }
             }
         }
@@ -255,7 +266,7 @@ impl Figmn {
 /// component (Eq. 22), saving each component's `w = Λ·e` for the fused
 /// update. Free function so the caller can split `Figmn`'s field borrows.
 fn distance_pass(
-    comps: &[PrecisionComponent],
+    store: &ComponentStore,
     x: &[f64],
     d: usize,
     buf_d2: &mut [f64],
@@ -263,7 +274,7 @@ fn distance_pass(
     buf_e: &mut [f64],
     pool: Option<&WorkerPool>,
 ) {
-    let k = comps.len();
+    let k = store.len();
     match pool {
         Some(pool) if worth_sharding(k, d, pool.threads()) => {
             let d2 = SharedMut::new(buf_d2.as_mut_ptr());
@@ -271,21 +282,26 @@ fn distance_pass(
             pool.run(k, &move |_, range, scratch| {
                 scratch.ensure(d);
                 for j in range {
-                    let c = &comps[j];
                     let e = &mut scratch.e[..d];
-                    sub_into(x, &c.mean, e);
+                    sub_into(x, store.mean(j), e);
                     // Safety: slot j / row j are owned by this shard only.
                     unsafe {
-                        *d2.at(j) = c.lambda.quad_form_with(e, ws.slice(j * d, d));
+                        *d2.at(j) =
+                            packed::quad_form_with(store.mat(j), d, e, ws.slice(j * d, d));
                     }
                 }
             });
         }
         _ => {
             let e = &mut buf_e[..d];
-            for (j, c) in comps.iter().enumerate() {
-                sub_into(x, &c.mean, e);
-                buf_d2[j] = c.lambda.quad_form_with(e, &mut buf_ws[j * d..(j + 1) * d]);
+            for (j, slot) in buf_d2.iter_mut().enumerate() {
+                sub_into(x, store.mean(j), e);
+                *slot = packed::quad_form_with(
+                    store.mat(j),
+                    d,
+                    e,
+                    &mut buf_ws[j * d..(j + 1) * d],
+                );
             }
         }
     }
@@ -293,10 +309,11 @@ fn distance_pass(
 
 /// Phase B of one learn step: apply Eqs. 4–9 and the fused rank-two
 /// update to every component given its posterior. Component-local, so it
-/// shards exactly like the distance pass.
+/// shards exactly like the distance pass — each worker streams the
+/// contiguous arena rows of its component range.
 #[allow(clippy::too_many_arguments)]
 fn update_pass(
-    comps: &mut [PrecisionComponent],
+    store: &mut ComponentStore,
     x: &[f64],
     d: usize,
     post: &[f64],
@@ -306,17 +323,21 @@ fn update_pass(
     sigma_ini: &[f64],
     pool: Option<&WorkerPool>,
 ) {
-    let k = comps.len();
+    let k = store.len();
     match pool {
         Some(pool) if worth_sharding(k, d, pool.threads()) => {
-            let cptr = SharedMut::new(comps.as_mut_ptr());
+            let raw = store.raw_mut();
             pool.run(k, &move |_, range, scratch| {
                 scratch.ensure(d);
                 for j in range {
-                    // Safety: component j is owned by exactly one shard.
-                    let c = unsafe { &mut *cptr.at(j) };
+                    // Safety: arena row j is owned by exactly one shard.
+                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
                     update_component(
-                        c,
+                        mean,
+                        lambda,
+                        log_det,
+                        sp,
+                        v,
                         x,
                         d,
                         post[j],
@@ -329,17 +350,21 @@ fn update_pass(
             });
         }
         _ => {
-            let e = &mut buf_e[..d];
-            for (j, c) in comps.iter_mut().enumerate() {
+            for j in 0..k {
+                let (mean, lambda, log_det, sp, v) = store.row_mut(j);
                 update_component(
-                    c,
+                    mean,
+                    lambda,
+                    log_det,
+                    sp,
+                    v,
                     x,
                     d,
                     post[j],
                     buf_d2[j],
                     &buf_ws[j * d..(j + 1) * d],
                     sigma_ini,
-                    e,
+                    &mut buf_e[..d],
                 );
             }
         }
@@ -350,7 +375,11 @@ fn update_pass(
 /// paths — one instruction sequence, so the two are bit-identical.
 #[allow(clippy::too_many_arguments)]
 fn update_component(
-    c: &mut PrecisionComponent,
+    mean: &mut [f64],
+    lambda: &mut [f64],
+    log_det: &mut f64,
+    sp: &mut f64,
+    v: &mut u64,
     x: &[f64],
     d: usize,
     p: f64,
@@ -359,34 +388,39 @@ fn update_component(
     sigma_ini: &[f64],
     e: &mut [f64],
 ) {
-    c.v += 1; // Eq. 4
-    c.sp += p; // Eq. 5
-    let omega = p / c.sp; // Eq. 7 (with the *updated* sp)
+    *v += 1; // Eq. 4
+    *sp += p; // Eq. 5
+    let omega = p / *sp; // Eq. 7 (with the *updated* sp)
     if omega <= 0.0 {
         // ω = 0: Eqs. 8–11 are exact no-ops; skip the O(D²) work.
         return;
     }
-    sub_into(x, &c.mean, e); // Eq. 6
-    for (m, &ei) in c.mean.iter_mut().zip(e.iter()) {
+    sub_into(x, mean, e); // Eq. 6
+    for (m, &ei) in mean.iter_mut().zip(e.iter()) {
         *m += omega * ei; // Eqs. 8–9
     }
     // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean Eq. 11 —
     // DESIGN.md §Deviations; single-pass rewrite — EXPERIMENTS.md §Perf
-    // L3-1), reusing w/q from the distance pass.
-    match figmn_fused_update(&mut c.lambda, w, d2j, omega, c.log_det) {
-        Some(r) => c.log_det = r.log_det,
+    // L3-1), reusing w/q from the distance pass, on the packed row.
+    match figmn_fused_update_packed(lambda, d, w, d2j, omega, *log_det) {
+        Some(r) => *log_det = r.log_det,
         None => {
             // Float underflow destroyed positive-definiteness (reachable
             // only at extreme conditioning). Reset the component's shape
-            // to σ_ini around its current mean.
-            let mut log_det = 0.0;
-            c.lambda.scale_in_place(0.0);
+            // to σ_ini around its current mean. Multiply-by-zero, not
+            // fill: the dense path's `scale_in_place(0.0)` preserves
+            // the sign of zeros (−x·0.0 = −0.0), and the bit-identity
+            // contract covers even this branch.
+            for v in lambda.iter_mut() {
+                *v *= 0.0;
+            }
+            let mut ld = 0.0;
             for i in 0..d {
                 let s2 = sigma_ini[i] * sigma_ini[i];
-                c.lambda[(i, i)] = 1.0 / s2;
-                log_det += s2.ln();
+                lambda[packed::row_start(i, d)] = 1.0 / s2;
+                ld += s2.ln();
             }
-            c.log_det = log_det;
+            *log_det = ld;
         }
     }
 }
@@ -395,37 +429,37 @@ impl IncrementalMixture for Figmn {
     fn learn(&mut self, x: &[f64]) -> LearnOutcome {
         assert_eq!(x.len(), self.cfg.dim, "learn: dimensionality mismatch");
         self.points += 1;
-        if self.comps.is_empty() {
+        if self.store.is_empty() {
             self.create(x);
             return LearnOutcome::Created;
         }
-        let k = self.comps.len();
+        let k = self.store.len();
         let d = self.cfg.dim;
         self.buf_d2.resize(k, 0.0);
         self.buf_ws.resize(k * d, 0.0);
         {
-            let Figmn { comps, buf_d2, buf_ws, buf_e, engine, .. } = self;
-            distance_pass(comps, x, d, buf_d2, buf_ws, buf_e, engine.as_ref());
+            let Figmn { store, buf_d2, buf_ws, buf_e, engine, .. } = self;
+            distance_pass(store, x, d, buf_d2, buf_ws, buf_e, engine.as_ref());
         }
         let accept = self
             .buf_d2
             .iter()
             .any(|&d2| d2 < self.cfg.chi2_threshold());
         let cap_full =
-            self.cfg.max_components > 0 && self.comps.len() >= self.cfg.max_components;
+            self.cfg.max_components > 0 && self.store.len() >= self.cfg.max_components;
         if accept || cap_full {
             // Posteriors p(j|x) (Eqs. 2–3, log space) — the O(K) serial
             // merge between the two sharded passes.
             self.buf_ll.clear();
             self.buf_sp.clear();
-            for (c, &d2j) in self.comps.iter().zip(self.buf_d2.iter()) {
-                self.buf_ll.push(log_gaussian(d2j, c.log_det, d));
-                self.buf_sp.push(c.sp);
+            for (j, &d2j) in self.buf_d2.iter().enumerate() {
+                self.buf_ll.push(log_gaussian(d2j, self.store.log_det(j), d));
+                self.buf_sp.push(self.store.sp(j));
             }
             let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
             {
-                let Figmn { comps, sigma_ini, buf_d2, buf_ws, buf_e, engine, .. } = self;
-                update_pass(comps, x, d, &post, buf_d2, buf_ws, buf_e, sigma_ini, engine.as_ref());
+                let Figmn { store, sigma_ini, buf_d2, buf_ws, buf_e, engine, .. } = self;
+                update_pass(store, x, d, &post, buf_d2, buf_ws, buf_e, sigma_ini, engine.as_ref());
             }
             self.prune();
             LearnOutcome::Updated
@@ -437,7 +471,7 @@ impl IncrementalMixture for Figmn {
     }
 
     fn num_components(&self) -> usize {
-        self.comps.len()
+        self.store.len()
     }
 
     fn dim(&self) -> usize {
@@ -446,23 +480,23 @@ impl IncrementalMixture for Figmn {
 
     fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {
         assert_eq!(known_vals.len(), known_idx.len());
-        assert!(!self.comps.is_empty(), "predict on empty model");
-        let k = self.comps.len();
+        assert!(!self.store.is_empty(), "predict on empty model");
+        let k = self.store.len();
         let d = self.cfg.dim;
         let mut log_liks = vec![0.0; k];
         let mut recons: Vec<Vec<f64>> = vec![Vec::new(); k];
         match &self.engine {
             Some(pool) if worth_sharding(k, d, pool.threads()) => {
-                let comps = &self.comps;
+                let store = &self.store;
                 let ll = SharedMut::new(log_liks.as_mut_ptr());
                 let rc = SharedMut::new(recons.as_mut_ptr());
                 pool.run(k, &move |_, range, _| {
                     for j in range {
-                        let c = &comps[j];
                         let r = precision_conditional(
-                            &c.lambda,
-                            &c.mean,
-                            c.log_det,
+                            store.mat(j),
+                            d,
+                            store.mean(j),
+                            store.log_det(j),
                             known_vals,
                             known_idx,
                             target_idx,
@@ -476,22 +510,22 @@ impl IncrementalMixture for Figmn {
                 });
             }
             _ => {
-                for (j, c) in self.comps.iter().enumerate() {
+                for (j, (llj, rcj)) in log_liks.iter_mut().zip(recons.iter_mut()).enumerate() {
                     let r = precision_conditional(
-                        &c.lambda,
-                        &c.mean,
-                        c.log_det,
+                        self.store.mat(j),
+                        d,
+                        self.store.mean(j),
+                        self.store.log_det(j),
                         known_vals,
                         known_idx,
                         target_idx,
                     );
-                    log_liks[j] = r.log_lik;
-                    recons[j] = r.reconstruction;
+                    *llj = r.log_lik;
+                    *rcj = r.reconstruction;
                 }
             }
         }
-        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
-        let post = softmax_posteriors(&log_liks, &sps); // Eq. 14
+        let post = softmax_posteriors(&log_liks, self.store.sps()); // Eq. 14
         let mut out = vec![0.0; target_idx.len()];
         for (p, r) in post.iter().zip(recons.iter()) {
             for (o, &v) in out.iter_mut().zip(r.iter()) {
@@ -502,22 +536,22 @@ impl IncrementalMixture for Figmn {
     }
 
     fn log_density(&self, x: &[f64]) -> f64 {
-        assert!(!self.comps.is_empty());
-        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        assert!(!self.store.is_empty());
+        let total_sp = self.store.total_sp();
         let ll = self.per_component_loglik(x);
         let terms: Vec<f64> = self
-            .comps
+            .store
+            .sps()
             .iter()
             .zip(ll.iter())
-            .map(|(c, &llj)| llj + (c.sp / total_sp).ln())
+            .map(|(&sp, &llj)| llj + (sp / total_sp).ln())
             .collect();
         logsumexp_tree(&terms)
     }
 
     fn posteriors(&self, x: &[f64]) -> Vec<f64> {
         let ll = self.per_component_loglik(x);
-        let sp: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
-        softmax_posteriors(&ll, &sp)
+        softmax_posteriors(&ll, self.store.sps())
     }
 
     fn points_seen(&self) -> u64 {
@@ -536,10 +570,10 @@ impl IncrementalMixture for Figmn {
             // is empty output even on an untrained model.
             return Vec::new();
         }
-        assert!(!self.comps.is_empty(), "score_batch on empty model");
-        let k = self.comps.len();
+        assert!(!self.store.is_empty(), "score_batch on empty model");
+        let k = self.store.len();
         let d = self.cfg.dim;
-        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        let total_sp = self.store.total_sp();
         let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
         // terms[bi*k + j] = ln p(x_bi|j) + ln p(j), reused per chunk.
         let mut terms = vec![0.0; chunk.min(xs.len()) * k];
@@ -552,33 +586,38 @@ impl IncrementalMixture for Figmn {
                 .as_ref()
                 .filter(|p| worth_sharding_batch(b, k, d, p.threads()));
             if let Some(pool) = pool {
-                let comps = &self.comps;
+                let store = &self.store;
                 let outp = SharedMut::new(terms.as_mut_ptr());
                 pool.run(k, &move |_, range, scratch| {
                     scratch.ensure(d);
                     for j in range {
-                        let c = &comps[j];
-                        let prior_ln = (c.sp / total_sp).ln();
+                        let prior_ln = (store.sp(j) / total_sp).ln();
                         for (bi, x) in xs_chunk.iter().enumerate() {
                             let e = &mut scratch.e[..d];
-                            sub_into(x, &c.mean, e);
+                            sub_into(x, store.mean(j), e);
                             // Safety: column j is owned by exactly one
                             // shard.
                             unsafe {
-                                *outp.at(bi * k + j) =
-                                    log_gaussian(c.lambda.quad_form(e), c.log_det, d) + prior_ln;
+                                *outp.at(bi * k + j) = log_gaussian(
+                                    packed::quad_form(store.mat(j), d, e),
+                                    store.log_det(j),
+                                    d,
+                                ) + prior_ln;
                             }
                         }
                     }
                 });
             } else {
                 let mut e = vec![0.0; d];
-                for (j, c) in self.comps.iter().enumerate() {
-                    let prior_ln = (c.sp / total_sp).ln();
+                for j in 0..k {
+                    let prior_ln = (self.store.sp(j) / total_sp).ln();
                     for (bi, x) in xs_chunk.iter().enumerate() {
-                        sub_into(x, &c.mean, &mut e);
-                        terms[bi * k + j] =
-                            log_gaussian(c.lambda.quad_form(&e), c.log_det, d) + prior_ln;
+                        sub_into(x, self.store.mean(j), &mut e);
+                        terms[bi * k + j] = log_gaussian(
+                            packed::quad_form(self.store.mat(j), d, &e),
+                            self.store.log_det(j),
+                            d,
+                        ) + prior_ln;
                     }
                 }
             }
@@ -600,10 +639,10 @@ impl IncrementalMixture for Figmn {
             // Contract parity with mapping `predict`: empty in, empty out.
             return Vec::new();
         }
-        assert!(!self.comps.is_empty(), "predict_batch on empty model");
-        let k = self.comps.len();
+        assert!(!self.store.is_empty(), "predict_batch on empty model");
+        let k = self.store.len();
         let d = self.cfg.dim;
-        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
+        let sps = self.store.sps();
         let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
         let mut out = Vec::with_capacity(known_vals.len());
         for kv_chunk in known_vals.chunks(chunk) {
@@ -615,17 +654,17 @@ impl IncrementalMixture for Figmn {
                 .as_ref()
                 .filter(|p| worth_sharding_batch(b, k, d, p.threads()));
             if let Some(pool) = pool {
-                let comps = &self.comps;
+                let store = &self.store;
                 let ll = SharedMut::new(log_liks.as_mut_ptr());
                 let rc = SharedMut::new(recons.as_mut_ptr());
                 pool.run(k, &move |_, range, _| {
                     for j in range {
-                        let c = &comps[j];
                         for (bi, kv) in kv_chunk.iter().enumerate() {
                             let r = precision_conditional(
-                                &c.lambda,
-                                &c.mean,
-                                c.log_det,
+                                store.mat(j),
+                                d,
+                                store.mean(j),
+                                store.log_det(j),
                                 kv,
                                 known_idx,
                                 target_idx,
@@ -640,12 +679,13 @@ impl IncrementalMixture for Figmn {
                     }
                 });
             } else {
-                for (j, c) in self.comps.iter().enumerate() {
+                for j in 0..k {
                     for (bi, kv) in kv_chunk.iter().enumerate() {
                         let r = precision_conditional(
-                            &c.lambda,
-                            &c.mean,
-                            c.log_det,
+                            self.store.mat(j),
+                            d,
+                            self.store.mean(j),
+                            self.store.log_det(j),
                             kv,
                             known_idx,
                             target_idx,
@@ -657,7 +697,7 @@ impl IncrementalMixture for Figmn {
             }
             out.extend((0..b).map(|bi| {
                 let row_ll = &log_liks[bi * k..(bi + 1) * k];
-                let post = softmax_posteriors(row_ll, &sps);
+                let post = softmax_posteriors(row_ll, sps);
                 let mut acc = vec![0.0; target_idx.len()];
                 for (p, r) in post.iter().zip(recons[bi * k..(bi + 1) * k].iter()) {
                     for (o, &v) in acc.iter_mut().zip(r.iter()) {
@@ -742,7 +782,11 @@ mod tests {
         let m = trained();
         for j in 0..m.num_components() {
             let lam = m.component_lambda(j);
-            let ch = Cholesky::new(lam).expect("Λ must stay PD");
+            let ch = Cholesky::new(&lam).expect("Λ must stay PD");
+            // The packed row factors identically to its dense expansion.
+            let ch_packed =
+                Cholesky::new_packed(m.store().mat(j), m.dim()).expect("packed Λ must stay PD");
+            assert_eq!(ch.factor().as_slice(), ch_packed.factor().as_slice());
             // log|C| = −log|Λ|
             let log_det_c = -ch.log_det();
             assert!(
@@ -890,5 +934,17 @@ mod tests {
         pooled.set_engine(None);
         assert_eq!(pooled.engine_threads(), 1);
         assert_eq!(serial.learn(&[5.0, 5.0]), pooled.learn(&[5.0, 5.0]));
+    }
+
+    #[test]
+    fn memory_footprint_reflects_packed_arenas() {
+        let m = trained();
+        let d = m.dim();
+        let tri = d * (d + 1) / 2;
+        assert_eq!(m.bytes_per_component(), (d + tri + 2) * 8 + 8);
+        assert_eq!(m.model_bytes(), m.num_components() * m.bytes_per_component());
+        // Strictly below the dense array-of-structs payload for D ≥ 2.
+        let dense_payload = (d + d * d + 2) * 8 + 8;
+        assert!(m.bytes_per_component() < dense_payload);
     }
 }

@@ -5,34 +5,31 @@
 //! distance/likelihood needs a fresh factorization of `C_j` (Eq. 1–2),
 //! while the covariance update itself (Eq. 11) is `O(D²)`.
 //!
-//! Implementation notes: the factorization is a Cholesky (numerically
-//! kinder than the explicit inverse the paper's Weka code computes, same
-//! asymptotic cost, same results); likelihoods are evaluated in log space
-//! exactly like the fast path so the two implementations produce the same
-//! numbers — the property the paper verifies in Section 4.
+//! Implementation notes: component state lives in the same flat
+//! [`super::ComponentStore`] arenas as the fast path (the matrices here
+//! are packed covariances `C`; the `log_det` arena stays unused —
+//! determinants come from each factorization). The factorization is a
+//! Cholesky (numerically kinder than the explicit inverse the paper's
+//! Weka code computes, same asymptotic cost, same results), run
+//! directly on the packed row via [`Cholesky::new_packed`]; likelihoods
+//! are evaluated in log space exactly like the fast path so the two
+//! implementations produce the same numbers — the property the paper
+//! verifies in Section 4.
 
 use super::inference::covariance_conditional;
+use super::store::ComponentStore;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
 use crate::engine::{
     logsumexp_tree, worth_sharding, worth_sharding_work, EngineConfig, SharedMut, WorkerPool,
 };
-use crate::linalg::rank_one::syr;
-use crate::linalg::{sub_into, Cholesky, Matrix};
-
-/// One Gaussian component in covariance form.
-#[derive(Debug, Clone)]
-pub(crate) struct CovarianceComponent {
-    pub mean: Vec<f64>,
-    pub cov: Matrix,
-    pub sp: f64,
-    pub v: u64,
-}
+use crate::linalg::{packed, sub_into, Cholesky, Matrix};
 
 /// The original IGMN (paper §2) — the `O(NKD³)` baseline.
 pub struct Igmn {
     cfg: GmmConfig,
     sigma_ini: Vec<f64>,
-    comps: Vec<CovarianceComponent>,
+    /// Component arenas; matrices are packed covariances `C`.
+    store: ComponentStore,
     points: u64,
     /// Optional component-sharded thread pool (None = serial). The
     /// per-component Cholesky factorizations (the O(KD³) cost the paper
@@ -49,7 +46,7 @@ impl Igmn {
         Igmn {
             cfg,
             sigma_ini,
-            comps: Vec::new(),
+            store: ComponentStore::new(d),
             points: 0,
             engine: None,
             buf_e: vec![0.0; d],
@@ -78,28 +75,41 @@ impl Igmn {
         self.engine.as_ref().map_or(1, |p| p.threads())
     }
 
-    /// Mean of component `j`.
-    pub fn component_mean(&self, j: usize) -> &[f64] {
-        &self.comps[j].mean
+    /// The flat component arenas backing this model.
+    pub fn store(&self) -> &ComponentStore {
+        &self.store
     }
 
-    /// Covariance of component `j`.
-    pub fn component_cov(&self, j: usize) -> &Matrix {
-        &self.comps[j].cov
+    /// Mean of component `j`.
+    pub fn component_mean(&self, j: usize) -> &[f64] {
+        self.store.mean(j)
+    }
+
+    /// Covariance of component `j`, expanded to dense form (the arenas
+    /// store it packed).
+    pub fn component_cov(&self, j: usize) -> Matrix {
+        self.store.mat_dense(j)
     }
 
     /// `(sp_j, v_j)`.
     pub fn component_stats(&self, j: usize) -> (f64, u64) {
-        (self.comps[j].sp, self.comps[j].v)
+        (self.store.sp(j), self.store.v(j))
+    }
+
+    /// Arena bytes per component (packed layout).
+    pub fn bytes_per_component(&self) -> usize {
+        self.store.bytes_per_component()
+    }
+
+    /// Total arena payload of the live mixture.
+    pub fn model_bytes(&self) -> usize {
+        self.store.model_bytes()
     }
 
     fn create(&mut self, x: &[f64]) {
-        let d = self.cfg.dim;
-        let mut cov = Matrix::zeros(d, d);
-        for i in 0..d {
-            cov[(i, i)] = self.sigma_ini[i] * self.sigma_ini[i];
-        }
-        self.comps.push(CovarianceComponent { mean: x.to_vec(), cov, sp: 1.0, v: 1 });
+        let s2: Vec<f64> = self.sigma_ini.iter().map(|&s| s * s).collect();
+        let cov = packed::from_diag(&s2);
+        self.store.push(x, &cov, 0.0, 1.0, 1);
     }
 
     /// Distances + log-dets for all components — `O(KD³)`: one Cholesky
@@ -107,7 +117,7 @@ impl Igmn {
     /// and the engine's best case: each factorization shards
     /// independently across the pool.
     fn score(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
-        let k = self.comps.len();
+        let k = self.store.len();
         let d = self.cfg.dim;
         let mut d2s = vec![0.0; k];
         let mut log_dets = vec![0.0; k];
@@ -115,16 +125,16 @@ impl Igmn {
         // O(D³), not the O(D²) the precision-path gate assumes.
         match &self.engine {
             Some(pool) if worth_sharding_work(k, d * d * d, pool.threads()) => {
-                let comps = &self.comps;
+                let store = &self.store;
                 let d2p = SharedMut::new(d2s.as_mut_ptr());
                 let ldp = SharedMut::new(log_dets.as_mut_ptr());
                 pool.run(k, &move |_, range, scratch| {
                     scratch.ensure(d);
                     for j in range {
-                        let c = &comps[j];
                         let e = &mut scratch.e[..d];
-                        sub_into(x, &c.mean, e);
-                        let chol = Cholesky::new(&c.cov).expect("covariance must stay PD");
+                        sub_into(x, store.mean(j), e);
+                        let chol = Cholesky::new_packed(store.mat(j), d)
+                            .expect("covariance must stay PD");
                         // Safety: slot j is owned by exactly one shard.
                         unsafe {
                             *d2p.at(j) = chol.quad_form_inv(e);
@@ -135,9 +145,10 @@ impl Igmn {
             }
             _ => {
                 let mut e = vec![0.0; d];
-                for (j, c) in self.comps.iter().enumerate() {
-                    sub_into(x, &c.mean, &mut e);
-                    let chol = Cholesky::new(&c.cov).expect("covariance must stay PD");
+                for j in 0..k {
+                    sub_into(x, self.store.mean(j), &mut e);
+                    let chol = Cholesky::new_packed(self.store.mat(j), d)
+                        .expect("covariance must stay PD");
                     d2s[j] = chol.quad_form_inv(&e);
                     log_dets[j] = chol.log_det();
                 }
@@ -148,28 +159,30 @@ impl Igmn {
 
     fn update_all(&mut self, x: &[f64], d2s: &[f64], log_dets: &[f64]) {
         let dim = self.cfg.dim;
-        let mut lls = Vec::with_capacity(self.comps.len());
-        let mut sps = Vec::with_capacity(self.comps.len());
-        for ((c, &d2), &ld) in self.comps.iter().zip(d2s.iter()).zip(log_dets.iter()) {
+        let k = self.store.len();
+        let mut lls = Vec::with_capacity(k);
+        for (&d2, &ld) in d2s.iter().zip(log_dets.iter()) {
             lls.push(log_gaussian(d2, ld, dim));
-            sps.push(c.sp);
         }
-        let post = softmax_posteriors(&lls, &sps);
-        let k = self.comps.len();
-        let Igmn { comps, engine, buf_e, buf_dmu, .. } = self;
+        let post = softmax_posteriors(&lls, self.store.sps());
+        let Igmn { store, engine, buf_e, buf_dmu, .. } = self;
         match engine.as_ref() {
             Some(pool) if worth_sharding(k, dim, pool.threads()) => {
-                let cptr = SharedMut::new(comps.as_mut_ptr());
+                let raw = store.raw_mut();
                 let post = &post[..];
                 pool.run(k, &move |_, range, scratch| {
                     scratch.ensure(dim);
                     for j in range {
-                        // Safety: component j is owned by exactly one
+                        // Safety: arena row j is owned by exactly one
                         // shard.
-                        let c = unsafe { &mut *cptr.at(j) };
+                        let (mean, cov, _, sp, v) = unsafe { raw.row_mut(j) };
                         update_cov_component(
-                            c,
+                            mean,
+                            cov,
+                            sp,
+                            v,
                             x,
+                            dim,
                             post[j],
                             &mut scratch.e[..dim],
                             &mut scratch.tmp[..dim],
@@ -178,8 +191,19 @@ impl Igmn {
                 });
             }
             _ => {
-                for (j, c) in comps.iter_mut().enumerate() {
-                    update_cov_component(c, x, post[j], &mut buf_e[..dim], &mut buf_dmu[..dim]);
+                for j in 0..k {
+                    let (mean, cov, _, sp, v) = store.row_mut(j);
+                    update_cov_component(
+                        mean,
+                        cov,
+                        sp,
+                        v,
+                        x,
+                        dim,
+                        post[j],
+                        &mut buf_e[..dim],
+                        &mut buf_dmu[..dim],
+                    );
                 }
             }
         }
@@ -189,36 +213,35 @@ impl Igmn {
         if !self.cfg.prune {
             return;
         }
-        // Same sweep as Figmn::prune (shared helper): identical prune
-        // decisions, and the mixture never empties.
-        super::prune_components(
-            &mut self.comps,
-            self.cfg.v_min,
-            self.cfg.sp_min,
-            |c| c.v,
-            |c| c.sp,
-        );
+        // Same sweep as Figmn::prune (the store's shared compaction):
+        // identical prune decisions, and the mixture never empties.
+        self.store.prune(self.cfg.v_min, self.cfg.sp_min);
     }
 }
 
 /// Component-local body of the covariance update (Eqs. 4–11), shared by
 /// the serial and sharded paths — one instruction sequence, so the two
 /// are bit-identical.
+#[allow(clippy::too_many_arguments)]
 fn update_cov_component(
-    c: &mut CovarianceComponent,
+    mean: &mut [f64],
+    cov: &mut [f64],
+    sp: &mut f64,
+    v: &mut u64,
     x: &[f64],
+    d: usize,
     p: f64,
     e: &mut [f64],
     dmu: &mut [f64],
 ) {
-    c.v += 1; // Eq. 4
-    c.sp += p; // Eq. 5
-    let omega = p / c.sp; // Eq. 7
+    *v += 1; // Eq. 4
+    *sp += p; // Eq. 5
+    let omega = p / *sp; // Eq. 7
     if omega <= 0.0 {
         return; // Eqs. 8–11 are exact no-ops when ω underflows
     }
-    sub_into(x, &c.mean, e); // Eq. 6
-    for ((m, &ei), di) in c.mean.iter_mut().zip(e.iter()).zip(dmu.iter_mut()) {
+    sub_into(x, mean, e); // Eq. 6
+    for ((m, &ei), di) in mean.iter_mut().zip(e.iter()).zip(dmu.iter_mut()) {
         *di = omega * ei; // Eq. 8
         *m += *di; // Eq. 9
     }
@@ -228,23 +251,23 @@ fn update_cov_component(
     // weighted-covariance recurrence and loses positive definiteness at
     // ω = ½ (a component's second point) for D ≥ 2. Both forms cost the
     // same; see DESIGN.md §Deviations.
-    c.cov.scale_in_place(1.0 - omega);
-    syr(&mut c.cov, omega, e);
-    syr(&mut c.cov, -1.0, dmu);
+    packed::scale(cov, 1.0 - omega);
+    packed::syr_packed(cov, d, omega, e);
+    packed::syr_packed(cov, d, -1.0, dmu);
 }
 
 impl IncrementalMixture for Igmn {
     fn learn(&mut self, x: &[f64]) -> LearnOutcome {
         assert_eq!(x.len(), self.cfg.dim, "learn: dimensionality mismatch");
         self.points += 1;
-        if self.comps.is_empty() {
+        if self.store.is_empty() {
             self.create(x);
             return LearnOutcome::Created;
         }
         let (d2s, log_dets) = self.score(x);
         let accept = d2s.iter().any(|&d2| d2 < self.cfg.chi2_threshold());
         let cap_full =
-            self.cfg.max_components > 0 && self.comps.len() >= self.cfg.max_components;
+            self.cfg.max_components > 0 && self.store.len() >= self.cfg.max_components;
         if accept || cap_full {
             self.update_all(x, &d2s, &log_dets);
             self.prune();
@@ -257,7 +280,7 @@ impl IncrementalMixture for Igmn {
     }
 
     fn num_components(&self) -> usize {
-        self.comps.len()
+        self.store.len()
     }
 
     fn dim(&self) -> usize {
@@ -266,17 +289,24 @@ impl IncrementalMixture for Igmn {
 
     fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {
         assert_eq!(known_vals.len(), known_idx.len());
-        assert!(!self.comps.is_empty(), "predict on empty model");
-        let mut log_liks = Vec::with_capacity(self.comps.len());
-        let mut sps = Vec::with_capacity(self.comps.len());
-        let mut recons = Vec::with_capacity(self.comps.len());
-        for c in &self.comps {
-            let r = covariance_conditional(&c.cov, &c.mean, known_vals, known_idx, target_idx);
+        assert!(!self.store.is_empty(), "predict on empty model");
+        let k = self.store.len();
+        let d = self.cfg.dim;
+        let mut log_liks = Vec::with_capacity(k);
+        let mut recons = Vec::with_capacity(k);
+        for j in 0..k {
+            let r = covariance_conditional(
+                self.store.mat(j),
+                d,
+                self.store.mean(j),
+                known_vals,
+                known_idx,
+                target_idx,
+            );
             log_liks.push(r.log_lik);
-            sps.push(c.sp);
             recons.push(r.reconstruction);
         }
-        let post = softmax_posteriors(&log_liks, &sps); // Eq. 14
+        let post = softmax_posteriors(&log_liks, self.store.sps()); // Eq. 14
         let mut out = vec![0.0; target_idx.len()];
         for (p, r) in post.iter().zip(recons.iter()) {
             for (o, &v) in out.iter_mut().zip(r.iter()) {
@@ -287,17 +317,18 @@ impl IncrementalMixture for Igmn {
     }
 
     fn log_density(&self, x: &[f64]) -> f64 {
-        assert!(!self.comps.is_empty());
-        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        assert!(!self.store.is_empty());
+        let total_sp = self.store.total_sp();
         let (d2s, lds) = self.score(x);
         // Same deterministic tree merge as the fast variant, so the two
         // implementations produce the same numbers (paper §4).
         let terms: Vec<f64> = self
-            .comps
+            .store
+            .sps()
             .iter()
             .zip(d2s.iter())
             .zip(lds.iter())
-            .map(|((c, &d2), &ld)| log_gaussian(d2, ld, self.cfg.dim) + (c.sp / total_sp).ln())
+            .map(|((&sp, &d2), &ld)| log_gaussian(d2, ld, self.cfg.dim) + (sp / total_sp).ln())
             .collect();
         logsumexp_tree(&terms)
     }
@@ -309,8 +340,7 @@ impl IncrementalMixture for Igmn {
             .zip(lds.iter())
             .map(|(&d2, &ld)| log_gaussian(d2, ld, self.cfg.dim))
             .collect();
-        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
-        softmax_posteriors(&lls, &sps)
+        softmax_posteriors(&lls, self.store.sps())
     }
 
     fn points_seen(&self) -> u64 {
@@ -358,8 +388,9 @@ mod tests {
                 assert_eq!(v_a, v_b);
                 // Λ ≡ C⁻¹.
                 let c_inv = slow.component_cov(j).inverse().unwrap();
+                let lam = fast.component_lambda(j);
                 assert!(
-                    c_inv.max_abs_diff(fast.component_lambda(j))
+                    c_inv.max_abs_diff(&lam)
                         < 1e-5 * (1.0 + c_inv.as_slice().iter().fold(0.0f64, |m, v| m.max(v.abs()))),
                     "Λ vs C⁻¹ diverged for component {j}"
                 );
@@ -499,10 +530,7 @@ mod tests {
         assert!(serial.num_components() >= 60, "gate never crossed");
         for j in 0..serial.num_components() {
             assert_eq!(serial.component_mean(j), pooled.component_mean(j));
-            assert_eq!(
-                serial.component_cov(j).as_slice(),
-                pooled.component_cov(j).as_slice()
-            );
+            assert_eq!(serial.store().mat(j), pooled.store().mat(j));
             assert_eq!(serial.component_stats(j), pooled.component_stats(j));
         }
         let probe: Vec<f64> = (0..d).map(|_| rng.normal() * 6.0).collect();

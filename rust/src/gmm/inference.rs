@@ -17,8 +17,15 @@
 //!
 //! Only `W` (t×t, t = number of outputs, usually ≪ D) is ever factorized —
 //! the `O(o³)` the paper accepts in §3's closing discussion.
+//!
+//! Both conditionals read the joint matrix from the **packed
+//! upper-triangular** component arenas (see [`crate::linalg::packed`]):
+//! every `(i, j)` access goes through the symmetric accessor, which
+//! returns exactly the value the dense (exactly symmetric) matrix held,
+//! so results are bit-identical to the dense formulation.
 
 use super::log_gaussian;
+use crate::linalg::packed::sym_at;
 use crate::linalg::{dot, Cholesky, Matrix};
 
 /// Per-component conditional result.
@@ -32,11 +39,13 @@ pub struct Conditional {
 
 /// Precision-form conditional (FIGMN, Eq. 27 + Schur marginal).
 ///
-/// `lambda` is the joint precision, `log_det` is `log|C|` (covariance
+/// `lambda` is the joint precision in packed upper-triangular form
+/// (length `dim·(dim+1)/2`), `log_det` is `log|C|` (covariance
 /// determinant), `known_vals[k]` is the value of joint element
 /// `known_idx[k]`.
 pub fn precision_conditional(
-    lambda: &Matrix,
+    lambda: &[f64],
+    dim: usize,
     mean: &[f64],
     log_det: f64,
     known_vals: &[f64],
@@ -46,6 +55,7 @@ pub fn precision_conditional(
     let ni = known_idx.len();
     let nt = target_idx.len();
     debug_assert_eq!(known_vals.len(), ni);
+    debug_assert_eq!(lambda.len(), crate::linalg::packed::packed_len(dim));
 
     // d = x_i − μ_i
     let mut d = vec![0.0; ni];
@@ -58,7 +68,7 @@ pub fn precision_conditional(
     for (r, &ti) in target_idx.iter().enumerate() {
         let mut acc = 0.0;
         for (k, &ki) in known_idx.iter().enumerate() {
-            acc += lambda[(ki, ti)] * d[k];
+            acc += sym_at(lambda, dim, ki, ti) * d[k];
         }
         ytd[r] = acc;
     }
@@ -66,7 +76,7 @@ pub fn precision_conditional(
     for (a, &ia) in known_idx.iter().enumerate() {
         let mut acc = 0.0;
         for (b, &ib) in known_idx.iter().enumerate() {
-            acc += lambda[(ia, ib)] * d[b];
+            acc += sym_at(lambda, dim, ia, ib) * d[b];
         }
         dxd += d[a] * acc;
     }
@@ -75,7 +85,7 @@ pub fn precision_conditional(
     let mut w = Matrix::zeros(nt, nt);
     for (a, &ta) in target_idx.iter().enumerate() {
         for (b, &tb) in target_idx.iter().enumerate() {
-            w[(a, b)] = lambda[(ta, tb)];
+            w[(a, b)] = sym_at(lambda, dim, ta, tb);
         }
     }
     let chol = Cholesky::new(&w)
@@ -96,9 +106,12 @@ pub fn precision_conditional(
 }
 
 /// Covariance-form conditional (original IGMN, Eq. 15). Factorizes the
-/// known-block covariance `C_i` per call — the `O(D³)` the paper removes.
+/// known-block covariance `C_i` per call — the `O(D³)` the paper
+/// removes. `cov` is the joint covariance in packed upper-triangular
+/// form (length `dim·(dim+1)/2`).
 pub fn covariance_conditional(
-    cov: &Matrix,
+    cov: &[f64],
+    dim: usize,
     mean: &[f64],
     known_vals: &[f64],
     known_idx: &[usize],
@@ -107,13 +120,19 @@ pub fn covariance_conditional(
     let ni = known_idx.len();
     let nt = target_idx.len();
     debug_assert_eq!(known_vals.len(), ni);
+    debug_assert_eq!(cov.len(), crate::linalg::packed::packed_len(dim));
 
     let mut d = vec![0.0; ni];
     for (k, (&idx, &v)) in known_idx.iter().zip(known_vals.iter()).enumerate() {
         d[k] = v - mean[idx];
     }
 
-    let c_i = cov.submatrix(known_idx, known_idx);
+    let mut c_i = Matrix::zeros(ni, ni);
+    for (a, &ia) in known_idx.iter().enumerate() {
+        for (b, &ib) in known_idx.iter().enumerate() {
+            c_i[(a, b)] = sym_at(cov, dim, ia, ib);
+        }
+    }
     let chol = Cholesky::new(&c_i).expect("C_i must be PD for a PD joint covariance");
     // s = C_i⁻¹·d
     let s = chol.solve(&d);
@@ -122,7 +141,7 @@ pub fn covariance_conditional(
     for (r, &ti) in target_idx.iter().enumerate() {
         let mut acc = 0.0;
         for (k, &ki) in known_idx.iter().enumerate() {
-            acc += cov[(ti, ki)] * s[k];
+            acc += sym_at(cov, dim, ti, ki) * s[k];
         }
         recon[r] = mean[ti] + acc;
     }
@@ -134,6 +153,7 @@ pub fn covariance_conditional(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::packed::pack_symmetric;
     use crate::testutil::{assert_close, assert_rel, check, random_spd};
 
     /// The paper's §3 block-decomposition identity: precision-form and
@@ -158,8 +178,14 @@ mod tests {
             target.sort_unstable();
             let known_vals: Vec<f64> = known.iter().map(|&i| mean[i] + rng.normal()).collect();
 
-            let a = precision_conditional(&lambda, &mean, log_det, &known_vals, &known, &target);
-            let b = covariance_conditional(&cov, &mean, &known_vals, &known, &target);
+            let mut cov_sym = cov.clone();
+            cov_sym.symmetrize();
+            let lambda_p = pack_symmetric(&lambda);
+            let cov_p = pack_symmetric(&cov_sym);
+            let a = precision_conditional(
+                &lambda_p, n, &mean, log_det, &known_vals, &known, &target,
+            );
+            let b = covariance_conditional(&cov_p, n, &mean, &known_vals, &known, &target);
             assert_close(&a.reconstruction, &b.reconstruction, 1e-7);
             assert_rel(a.log_lik, b.log_lik, 1e-7);
         });
@@ -171,14 +197,18 @@ mod tests {
     fn bivariate_closed_form() {
         let (s1, s2, rho) = (2.0, 0.5, 0.7);
         let cov = Matrix::from_rows(2, 2, &[s1 * s1, rho * s1 * s2, rho * s1 * s2, s2 * s2]);
-        let lambda = cov.inverse().unwrap();
+        let mut lambda = cov.inverse().unwrap();
+        lambda.symmetrize();
         let mean = [1.0, -1.0];
         let x1 = 3.0;
         let expect = mean[1] + rho * (s2 / s1) * (x1 - mean[0]);
 
-        let r = precision_conditional(&lambda, &mean, cov.determinant().ln(), &[x1], &[0], &[1]);
+        let lambda_p = pack_symmetric(&lambda);
+        let r = precision_conditional(
+            &lambda_p, 2, &mean, cov.determinant().ln(), &[x1], &[0], &[1],
+        );
         assert_rel(r.reconstruction[0], expect, 1e-10);
-        let r2 = covariance_conditional(&cov, &mean, &[x1], &[0], &[1]);
+        let r2 = covariance_conditional(&pack_symmetric(&cov), 2, &mean, &[x1], &[0], &[1]);
         assert_rel(r2.reconstruction[0], expect, 1e-10);
     }
 
@@ -199,8 +229,17 @@ mod tests {
             let d: Vec<f64> = known.iter().zip(kv.iter()).map(|(&i, &v)| v - mean[i]).collect();
             let expect = log_gaussian(chol.quad_form_inv(&d), chol.log_det(), known.len());
 
-            let lambda = cov.inverse().unwrap();
-            let r = precision_conditional(&lambda, &mean, cov.determinant().ln(), &kv, &known, &target);
+            let mut lambda = cov.inverse().unwrap();
+            lambda.symmetrize();
+            let r = precision_conditional(
+                &pack_symmetric(&lambda),
+                n,
+                &mean,
+                cov.determinant().ln(),
+                &kv,
+                &known,
+                &target,
+            );
             assert_rel(r.log_lik, expect, 1e-7);
         });
     }

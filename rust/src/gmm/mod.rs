@@ -15,6 +15,32 @@
 //! Both implement [`IncrementalMixture`], which the evaluation harness,
 //! the coordinator workers, and the benchmarks are generic over.
 //!
+//! ## Component storage: flat SoA arenas
+//!
+//! Both variants keep all mixture state in a [`ComponentStore`] — flat
+//! contiguous arenas (a `K×D` mean block, a `K×D(D+1)/2` block of
+//! **packed upper-triangular symmetric** matrices, and parallel
+//! `log_det`/`sp`/`v` arrays) instead of K per-component heap objects.
+//! The paper's two hot kernels (the `Λ·v` product of Eq. 22 and the
+//! fused Sherman–Morrison update of Eqs. 20–21/25–26) are
+//! memory-bandwidth-bound at scale, and the packed layout halves the
+//! bytes each sweep moves while streaming components contiguously.
+//!
+//! **Packed-symmetric invariant:** the update rules keep every
+//! component matrix *exactly* symmetric in floating point (the
+//! `α·(uᵢ·uⱼ)` trick in `linalg::rank_one`), so the upper triangle is
+//! the whole matrix, and the packed kernels in [`crate::linalg::packed`]
+//! perform the same floating-point operations in the same order as
+//! their dense counterparts. Every density, posterior, prediction and
+//! learn trajectory is therefore **bit-identical** to the dense
+//! formulation — see `tests/layout_equivalence.rs`, which replays a
+//! dense array-of-structs reference implementation side by side.
+//!
+//! Component lifecycle is arena row manipulation: create appends a row,
+//! the §2.3 prune compacts rows in place (order-preserving, so the
+//! deterministic tree merges see the same component order regardless of
+//! layout), and snapshot publishing bulk-copies the arenas.
+//!
 //! [`SupervisedGmm`] layers the paper's "any element predicts any other
 //! element" autoassociative trick into a conventional classifier
 //! interface (features + one-hot class concatenated into the joint input
@@ -26,25 +52,16 @@ mod igmn;
 pub mod inference;
 mod serialize;
 mod snapshot;
+mod store;
 pub mod supervised;
 
 pub use config::GmmConfig;
 pub use figmn::Figmn;
 pub use igmn::Igmn;
+pub use serialize::{CHECKPOINT_MIN_VERSION, CHECKPOINT_VERSION};
 pub use snapshot::ModelSnapshot;
+pub use store::ComponentStore;
 pub use supervised::SupervisedGmm;
-
-/// Build a precision component from raw parts (used by the runtime's
-/// state unpacking; not part of the public API).
-pub(crate) fn new_precision_component(
-    mean: Vec<f64>,
-    lambda: crate::linalg::Matrix,
-    log_det: f64,
-    sp: f64,
-    v: u64,
-) -> figmn::PrecisionComponent {
-    figmn::PrecisionComponent { mean, lambda, log_det, sp, v }
-}
 
 /// Outcome of presenting one data point to the model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,48 +127,6 @@ pub trait IncrementalMixture {
     ) -> Vec<Vec<f64>> {
         known_vals.iter().map(|x| self.predict(x, known_idx, target_idx)).collect()
     }
-}
-
-/// The §2.3 spuriousness sweep shared by both variants: remove every
-/// component with `v > v_min && sp < sp_min` — except that the mixture
-/// is never allowed to empty. When *every* component trips the
-/// predicate at once (possible on short/adversarial streams: one
-/// accepted point ages all components while their posterior mass is
-/// still small), the single strongest component — highest `sp`, lowest
-/// index on ties — survives, so `log_density`/`predict`/`posteriors`
-/// and the `sp/Σsp` priors stay well-defined. Both `Figmn` and `Igmn`
-/// funnel through this one function, so their prune decisions are
-/// identical by construction (the paper's §4 equivalence).
-///
-/// Returns how many components were removed.
-pub(crate) fn prune_components<C>(
-    comps: &mut Vec<C>,
-    v_min: u64,
-    sp_min: f64,
-    v_of: impl Fn(&C) -> u64,
-    sp_of: impl Fn(&C) -> f64,
-) -> usize {
-    if comps.len() <= 1 {
-        return 0;
-    }
-    let before = comps.len();
-    let doomed = |c: &C| v_of(c) > v_min && sp_of(c) < sp_min;
-    if comps.iter().all(doomed) {
-        let mut keep = 0usize;
-        let mut best = sp_of(&comps[0]);
-        for (j, c) in comps.iter().enumerate().skip(1) {
-            let s = sp_of(c);
-            if s > best {
-                best = s;
-                keep = j;
-            }
-        }
-        comps.swap(0, keep);
-        comps.truncate(1);
-    } else {
-        comps.retain(|c| !doomed(c));
-    }
-    before - comps.len()
 }
 
 /// Shared log-space posterior computation: given per-component

@@ -4,29 +4,43 @@
 //! [`crate::coordinator::checkpoint`]); the format is versioned and
 //! validated on load — a corrupt or non-PD checkpoint is rejected rather
 //! than silently producing NaNs mid-stream.
+//!
+//! ## Format history
+//!
+//! - **v2 (current)** — components carry `lambda_packed`: the packed
+//!   upper-triangular precision (`D·(D+1)/2` floats), written straight
+//!   from the [`super::ComponentStore`] arenas.
+//! - **v1 (read-only compat)** — the pre-store per-component format:
+//!   `lambda` as a dense row-major `D×D` matrix. The loader packs its
+//!   upper triangle; the update rules kept v1 matrices exactly
+//!   symmetric, so the packed values equal the dense ones and a v1
+//!   checkpoint scores **bit-identically** after loading (see
+//!   `tests/checkpoint_compat.rs`).
 
-use super::figmn::PrecisionComponent;
+use super::store::ComponentStore;
 use super::{Figmn, GmmConfig, IncrementalMixture};
 use crate::json::Json;
-use crate::linalg::Matrix;
+use crate::linalg::packed;
 
 /// Current checkpoint format version.
-pub const CHECKPOINT_VERSION: f64 = 1.0;
+pub const CHECKPOINT_VERSION: f64 = 2.0;
+
+/// Oldest format version the loader still accepts.
+pub const CHECKPOINT_MIN_VERSION: f64 = 1.0;
 
 impl Figmn {
-    /// Serialize the full model state to JSON.
+    /// Serialize the full model state to JSON (v2 packed layout).
     pub fn to_json(&self) -> Json {
         let cfg = self.config();
-        let comps: Vec<Json> = self
-            .components()
-            .iter()
-            .map(|c| {
+        let store = self.store();
+        let comps: Vec<Json> = (0..store.len())
+            .map(|j| {
                 Json::obj(vec![
-                    ("mean", Json::num_array(&c.mean)),
-                    ("lambda", Json::num_array(c.lambda.as_slice())),
-                    ("log_det", c.log_det.into()),
-                    ("sp", c.sp.into()),
-                    ("v", (c.v as usize).into()),
+                    ("mean", Json::num_array(store.mean(j))),
+                    ("lambda_packed", Json::num_array(store.mat(j))),
+                    ("log_det", store.log_det(j).into()),
+                    ("sp", store.sp(j).into()),
+                    ("v", (store.v(j) as usize).into()),
                 ])
             })
             .collect();
@@ -50,11 +64,12 @@ impl Figmn {
         ])
     }
 
-    /// Restore a model from [`Figmn::to_json`] output.
+    /// Restore a model from [`Figmn::to_json`] output (v2), or from a
+    /// pre-store v1 checkpoint (dense per-component `lambda`).
     pub fn from_json(j: &Json) -> Result<Figmn, String> {
         let get = |k: &str| j.get(k).ok_or_else(|| format!("checkpoint missing '{k}'"));
         let version = get("version")?.as_f64().ok_or("bad version")?;
-        if version != CHECKPOINT_VERSION {
+        if version != CHECKPOINT_VERSION && version != CHECKPOINT_MIN_VERSION {
             return Err(format!("unsupported checkpoint version {version}"));
         }
         if get("kind")?.as_str() != Some("figmn") {
@@ -86,13 +101,47 @@ impl Figmn {
             .with_max_components(max_components);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
-        let mut comps = Vec::new();
+        let tri = packed::packed_len(dim);
+        let mut store = ComponentStore::new(dim);
         for (i, cj) in get("components")?.as_array().ok_or("bad components")?.iter().enumerate() {
             let mean = cj.get("mean").and_then(Json::to_f64_vec).ok_or("bad mean")?;
-            let flat = cj.get("lambda").and_then(Json::to_f64_vec).ok_or("bad lambda")?;
-            if mean.len() != dim || flat.len() != dim * dim {
-                return Err(format!("component {i}: shape mismatch"));
+            if mean.len() != dim {
+                return Err(format!("component {i}: mean shape mismatch"));
             }
+            // v2 stores the packed upper triangle directly; v1 stored
+            // the dense matrix — validate the *whole* dense payload
+            // (finite everywhere, symmetric), then pack its upper
+            // triangle. The v1 writer kept Λ exactly symmetric, so
+            // genuine old checkpoints always pass; a corrupt or
+            // tampered lower triangle is rejected rather than silently
+            // dropped (packing an asymmetric matrix would change what
+            // the v1 reader computed).
+            let lam = if version == CHECKPOINT_VERSION {
+                let p = cj
+                    .get("lambda_packed")
+                    .and_then(Json::to_f64_vec)
+                    .ok_or("bad lambda_packed")?;
+                if p.len() != tri {
+                    return Err(format!("component {i}: packed lambda shape mismatch"));
+                }
+                p
+            } else {
+                let flat = cj.get("lambda").and_then(Json::to_f64_vec).ok_or("bad lambda")?;
+                if flat.len() != dim * dim {
+                    return Err(format!("component {i}: lambda shape mismatch"));
+                }
+                if flat.iter().any(|x| !x.is_finite()) {
+                    return Err(format!("component {i}: non-finite values"));
+                }
+                for r in 0..dim {
+                    for c in r + 1..dim {
+                        if flat[r * dim + c] != flat[c * dim + r] {
+                            return Err(format!("component {i}: asymmetric lambda"));
+                        }
+                    }
+                }
+                packed::pack_symmetric_slice(&flat, dim)
+            };
             let log_det =
                 cj.get("log_det").and_then(Json::as_f64).ok_or("bad log_det")?;
             let sp = cj.get("sp").and_then(Json::as_f64).ok_or("bad sp")?;
@@ -100,18 +149,12 @@ impl Figmn {
             if !log_det.is_finite() || !sp.is_finite() || sp <= 0.0 {
                 return Err(format!("component {i}: corrupt scalars"));
             }
-            if mean.iter().chain(flat.iter()).any(|x| !x.is_finite()) {
+            if mean.iter().chain(lam.iter()).any(|x| !x.is_finite()) {
                 return Err(format!("component {i}: non-finite values"));
             }
-            comps.push(PrecisionComponent {
-                mean,
-                lambda: Matrix::from_vec(dim, dim, flat),
-                log_det,
-                sp,
-                v,
-            });
+            store.push(&mean, &lam, log_det, sp, v);
         }
-        Ok(Figmn::from_parts(cfg, sigma_ini, comps, points))
+        Ok(Figmn::from_parts(cfg, sigma_ini, store, points))
     }
 }
 
@@ -150,6 +193,20 @@ mod tests {
             let p1 = m.predict(&x[..2], &[0, 1], &[2]);
             let p2 = restored.predict(&x[..2], &[0, 1], &[2]);
             assert_close(&p1, &p2, 1e-12);
+        }
+    }
+
+    #[test]
+    fn checkpoint_is_packed_v2() {
+        let m = trained_model();
+        let doc = m.to_json();
+        assert_eq!(doc.get("version").and_then(|v| v.as_f64()), Some(2.0));
+        let comps = doc.get("components").unwrap().as_array().unwrap();
+        let tri = 3 * (3 + 1) / 2;
+        for c in comps {
+            let packed = c.get("lambda_packed").and_then(crate::json::Json::to_f64_vec).unwrap();
+            assert_eq!(packed.len(), tri, "v2 stores the packed triangle");
+            assert!(c.get("lambda").is_none(), "v2 must not store the dense matrix");
         }
     }
 
@@ -206,8 +263,13 @@ mod tests {
         // Wrong kind.
         let bad = good.replace("\"figmn\"", "\"other\"");
         assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
-        // Wrong version.
-        let bad = good.replace("\"version\":1", "\"version\":999");
+        // Wrong version (v1 is still accepted — see
+        // tests/checkpoint_compat.rs — but unknown versions are not).
+        let bad = good.replace("\"version\":2", "\"version\":999");
+        assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+        // A v1 claim with a packed payload is rejected (v1 requires the
+        // dense `lambda` field).
+        let bad = good.replace("\"version\":2", "\"version\":1");
         assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
         // Missing field.
         assert!(Figmn::from_json(&parse(r#"{"version":1,"kind":"figmn"}"#).unwrap()).is_err());

@@ -1,11 +1,12 @@
 //! Immutable, shareable read-path view of a trained [`Figmn`].
 //!
-//! The learner only ever mutates `O(K·D²)` of state (means, precision
-//! matrices, log-dets, accumulators), which is cheap to copy out and
-//! publish behind an `Arc`: a [`ModelSnapshot`] is that copy. Scorer
-//! threads serve `score`/`predict` traffic from the latest snapshot
-//! without taking any lock the learner holds — the coordinator's
-//! read–write split (see `crate::coordinator`).
+//! The learner's entire mutable state is the flat component arenas of
+//! its [`ComponentStore`], so publishing a snapshot is a bulk copy of
+//! five contiguous buffers (`store.clone()`) — no per-component
+//! traversal, no pointer chasing. Scorer threads serve
+//! `score`/`predict` traffic from the latest snapshot without taking
+//! any lock the learner holds — the coordinator's read–write split (see
+//! `crate::coordinator`).
 //!
 //! ## Equivalence guarantee
 //!
@@ -13,26 +14,28 @@
 //! serial path of [`Figmn`] (`log_density`, `predict`, `posteriors`,
 //! `score_batch`, `predict_batch`), sharing the same helpers
 //! (`log_gaussian`, `softmax_posteriors`, `logsumexp_tree`,
-//! `precision_conditional`). A snapshot taken after N learn steps
-//! therefore returns **bit-identical** results to calling the serial
-//! model trained on the same N-point prefix — enforced by this module's
-//! tests and the `serving_read_path` bench.
+//! `precision_conditional`) over the same packed arenas. A snapshot
+//! taken after N learn steps therefore returns **bit-identical**
+//! results to calling the serial model trained on the same N-point
+//! prefix — enforced by this module's tests and the
+//! `serving_read_path` bench.
 //!
 //! [`Figmn`]: super::Figmn
+//! [`ComponentStore`]: super::ComponentStore
 
-use super::figmn::PrecisionComponent;
 use super::inference::precision_conditional;
+use super::store::ComponentStore;
 use super::supervised::clip_normalize;
 use super::{log_gaussian, softmax_posteriors, GmmConfig};
 use crate::engine::logsumexp_tree;
-use crate::linalg::sub_into;
+use crate::linalg::{packed, sub_into};
 
 /// An immutable copy of a [`super::Figmn`]'s mixture state, safe to
 /// share across scorer threads (`Send + Sync`, plain data only).
 #[derive(Debug, Clone)]
 pub struct ModelSnapshot {
     cfg: GmmConfig,
-    comps: Vec<PrecisionComponent>,
+    store: ComponentStore,
     /// Σ sp, precomputed with the same left-fold the live model uses so
     /// priors come out bit-identical.
     total_sp: f64,
@@ -48,13 +51,13 @@ pub struct ModelSnapshot {
 impl ModelSnapshot {
     pub(crate) fn new(
         cfg: GmmConfig,
-        comps: Vec<PrecisionComponent>,
+        store: ComponentStore,
         points: u64,
         n_features: usize,
         n_classes: usize,
     ) -> ModelSnapshot {
-        let total_sp: f64 = comps.iter().map(|c| c.sp).sum();
-        ModelSnapshot { cfg, comps, total_sp, points, n_features, n_classes }
+        let total_sp = store.total_sp();
+        ModelSnapshot { cfg, store, total_sp, points, n_features, n_classes }
     }
 
     /// Record the supervised feature/class split (for
@@ -72,7 +75,7 @@ impl ModelSnapshot {
     }
 
     pub fn num_components(&self) -> usize {
-        self.comps.len()
+        self.store.len()
     }
 
     pub fn dim(&self) -> usize {
@@ -92,6 +95,12 @@ impl ModelSnapshot {
         self.points
     }
 
+    /// Arena payload bytes this snapshot holds (same accounting as the
+    /// source model's `model_bytes`).
+    pub fn model_bytes(&self) -> usize {
+        self.store.model_bytes()
+    }
+
     /// How many learn steps a model that has now seen `current_points`
     /// is ahead of this snapshot (the read path's staleness).
     pub fn staleness(&self, current_points: u64) -> u64 {
@@ -101,15 +110,19 @@ impl ModelSnapshot {
     /// Joint log-density `ln p(x)` — bit-identical to
     /// [`super::IncrementalMixture::log_density`] on the source model.
     pub fn log_density(&self, x: &[f64]) -> f64 {
-        assert!(!self.comps.is_empty(), "log_density on empty snapshot");
+        assert!(!self.store.is_empty(), "log_density on empty snapshot");
         assert_eq!(x.len(), self.cfg.dim, "log_density: dimensionality mismatch");
         let d = self.cfg.dim;
         let mut e = vec![0.0; d];
-        let mut terms = Vec::with_capacity(self.comps.len());
-        for c in &self.comps {
-            sub_into(x, &c.mean, &mut e);
-            let ll = log_gaussian(c.lambda.quad_form(&e), c.log_det, d);
-            terms.push(ll + (c.sp / self.total_sp).ln());
+        let mut terms = Vec::with_capacity(self.store.len());
+        for j in 0..self.store.len() {
+            sub_into(x, self.store.mean(j), &mut e);
+            let ll = log_gaussian(
+                packed::quad_form(self.store.mat(j), d, &e),
+                self.store.log_det(j),
+                d,
+            );
+            terms.push(ll + (self.store.sp(j) / self.total_sp).ln());
         }
         logsumexp_tree(&terms)
     }
@@ -131,24 +144,25 @@ impl ModelSnapshot {
         target_idx: &[usize],
     ) -> Vec<f64> {
         assert_eq!(known_vals.len(), known_idx.len());
-        assert!(!self.comps.is_empty(), "predict on empty snapshot");
-        let k = self.comps.len();
+        assert!(!self.store.is_empty(), "predict on empty snapshot");
+        let k = self.store.len();
+        let d = self.cfg.dim;
         let mut log_liks = vec![0.0; k];
         let mut recons: Vec<Vec<f64>> = vec![Vec::new(); k];
-        for (j, c) in self.comps.iter().enumerate() {
+        for (j, (llj, rcj)) in log_liks.iter_mut().zip(recons.iter_mut()).enumerate() {
             let r = precision_conditional(
-                &c.lambda,
-                &c.mean,
-                c.log_det,
+                self.store.mat(j),
+                d,
+                self.store.mean(j),
+                self.store.log_det(j),
                 known_vals,
                 known_idx,
                 target_idx,
             );
-            log_liks[j] = r.log_lik;
-            recons[j] = r.reconstruction;
+            *llj = r.log_lik;
+            *rcj = r.reconstruction;
         }
-        let sps: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
-        let post = softmax_posteriors(&log_liks, &sps);
+        let post = softmax_posteriors(&log_liks, self.store.sps());
         let mut out = vec![0.0; target_idx.len()];
         for (p, r) in post.iter().zip(recons.iter()) {
             for (o, &v) in out.iter_mut().zip(r.iter()) {
@@ -174,13 +188,16 @@ impl ModelSnapshot {
         assert_eq!(x.len(), self.cfg.dim, "posteriors: dimensionality mismatch");
         let d = self.cfg.dim;
         let mut e = vec![0.0; d];
-        let mut ll = Vec::with_capacity(self.comps.len());
-        for c in &self.comps {
-            sub_into(x, &c.mean, &mut e);
-            ll.push(log_gaussian(c.lambda.quad_form(&e), c.log_det, d));
+        let mut ll = Vec::with_capacity(self.store.len());
+        for j in 0..self.store.len() {
+            sub_into(x, self.store.mean(j), &mut e);
+            ll.push(log_gaussian(
+                packed::quad_form(self.store.mat(j), d, &e),
+                self.store.log_det(j),
+                d,
+            ));
         }
-        let sp: Vec<f64> = self.comps.iter().map(|c| c.sp).collect();
-        softmax_posteriors(&ll, &sp)
+        softmax_posteriors(&ll, self.store.sps())
     }
 
     /// Classifier scores for the recorded feature/class split —
@@ -229,6 +246,7 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.num_components(), m.num_components());
         assert_eq!(snap.points_seen(), m.points_seen());
+        assert_eq!(snap.model_bytes(), m.model_bytes());
         let probes: Vec<Vec<f64>> = stream.iter().rev().take(10).cloned().collect();
         for x in &probes {
             assert!(snap.log_density(x) == m.log_density(x), "log_density bits differ");

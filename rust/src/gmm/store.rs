@@ -1,0 +1,442 @@
+//! Flat structure-of-arrays storage for the mixture's components.
+//!
+//! The pre-refactor layout was an array of structs — each component a
+//! heap `Vec` for its mean plus a dense `Matrix` for its symmetric
+//! matrix — which scattered the learn hot path's working set across K
+//! allocations and stored every symmetric matrix twice over. A
+//! [`ComponentStore`] instead owns all mixture state in five contiguous
+//! arenas:
+//!
+//! - `means` — `K×D` row-major,
+//! - `mats` — `K×D(D+1)/2` **packed upper-triangular symmetric**
+//!   matrices (`Λ` for the precision path, `C` for the covariance
+//!   baseline; see [`crate::linalg::packed`] for layout and the
+//!   bit-identity contract of the packed kernels),
+//! - `log_dets`, `sps`, `vs` — `K` scalars each.
+//!
+//! Component `j` is row `j` of every arena, so the engine's contiguous
+//! component shards map to contiguous arena slices — each worker
+//! streams its rows sequentially, and the packed matrices halve the
+//! bytes per sweep (the `layout_bandwidth` bench quantifies this).
+//!
+//! Lifecycle: `create` is an arena row append ([`ComponentStore::push`]);
+//! the §2.3 prune is a stable in-place compaction (plus a swap+truncate
+//! when only the strongest component survives) — **order-preserving**,
+//! exactly like the pre-refactor `Vec::retain`, because component order
+//! feeds the deterministic tree reductions and must not depend on the
+//! storage layout.
+//!
+//! Publishing a read snapshot is `Clone` — five `memcpy`s, no
+//! per-component traversal.
+
+use crate::engine::SharedMut;
+use crate::linalg::packed;
+use crate::linalg::Matrix;
+
+/// All mixture component state, in flat contiguous arenas (see the
+/// module docs). Shared by `Figmn` (matrices are precisions `Λ`) and
+/// `Igmn` (matrices are covariances `C`; `log_dets` stays unused).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComponentStore {
+    dim: usize,
+    /// Packed matrix row length `D·(D+1)/2`.
+    tri: usize,
+    means: Vec<f64>,
+    mats: Vec<f64>,
+    log_dets: Vec<f64>,
+    sps: Vec<f64>,
+    vs: Vec<u64>,
+}
+
+impl ComponentStore {
+    /// Empty store for `dim`-dimensional components.
+    pub fn new(dim: usize) -> ComponentStore {
+        assert!(dim > 0, "ComponentStore: dim must be positive");
+        ComponentStore {
+            dim,
+            tri: packed::packed_len(dim),
+            means: Vec::new(),
+            mats: Vec::new(),
+            log_dets: Vec::new(),
+            sps: Vec::new(),
+            vs: Vec::new(),
+        }
+    }
+
+    /// Number of live components `K`.
+    pub fn len(&self) -> usize {
+        self.sps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sps.is_empty()
+    }
+
+    /// Joint dimensionality `D`.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Packed matrix length per component, `D·(D+1)/2`.
+    pub fn mat_len(&self) -> usize {
+        self.tri
+    }
+
+    /// Append a component row to every arena. `mat` is packed
+    /// upper-triangular (length `D·(D+1)/2`).
+    pub(crate) fn push(&mut self, mean: &[f64], mat: &[f64], log_det: f64, sp: f64, v: u64) {
+        assert_eq!(mean.len(), self.dim, "push: mean length");
+        assert_eq!(mat.len(), self.tri, "push: packed matrix length");
+        self.means.extend_from_slice(mean);
+        self.mats.extend_from_slice(mat);
+        self.log_dets.push(log_det);
+        self.sps.push(sp);
+        self.vs.push(v);
+    }
+
+    /// Mean of component `j` (row `j` of the means arena).
+    pub fn mean(&self, j: usize) -> &[f64] {
+        &self.means[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Packed symmetric matrix of component `j`.
+    pub fn mat(&self, j: usize) -> &[f64] {
+        &self.mats[j * self.tri..(j + 1) * self.tri]
+    }
+
+    /// Dense expansion of component `j`'s matrix (interop/tests; the
+    /// hot paths never unpack).
+    pub fn mat_dense(&self, j: usize) -> Matrix {
+        packed::unpack_symmetric(self.mat(j), self.dim)
+    }
+
+    pub fn log_det(&self, j: usize) -> f64 {
+        self.log_dets[j]
+    }
+
+    pub fn sp(&self, j: usize) -> f64 {
+        self.sps[j]
+    }
+
+    pub fn v(&self, j: usize) -> u64 {
+        self.vs[j]
+    }
+
+    /// The whole `sp` arena (posterior priors are derived from it).
+    pub fn sps(&self) -> &[f64] {
+        &self.sps
+    }
+
+    /// `Σ sp` with the same left-fold the array-of-structs path used,
+    /// so priors come out bit-identical.
+    pub fn total_sp(&self) -> f64 {
+        self.sps.iter().sum()
+    }
+
+    /// Disjoint mutable views of row `j` across all arenas:
+    /// `(mean, mat, log_det, sp, v)`.
+    pub(crate) fn row_mut(
+        &mut self,
+        j: usize,
+    ) -> (&mut [f64], &mut [f64], &mut f64, &mut f64, &mut u64) {
+        let d = self.dim;
+        let t = self.tri;
+        (
+            &mut self.means[j * d..(j + 1) * d],
+            &mut self.mats[j * t..(j + 1) * t],
+            &mut self.log_dets[j],
+            &mut self.sps[j],
+            &mut self.vs[j],
+        )
+    }
+
+    /// Raw-pointer view for the engine's sharded update pass: each
+    /// worker mutates only the rows of its own contiguous component
+    /// shard (see [`StoreRawMut::row_mut`]'s safety contract).
+    pub(crate) fn raw_mut(&mut self) -> StoreRawMut {
+        StoreRawMut {
+            dim: self.dim,
+            tri: self.tri,
+            means: SharedMut::new(self.means.as_mut_ptr()),
+            mats: SharedMut::new(self.mats.as_mut_ptr()),
+            log_dets: SharedMut::new(self.log_dets.as_mut_ptr()),
+            sps: SharedMut::new(self.sps.as_mut_ptr()),
+            vs: SharedMut::new(self.vs.as_mut_ptr()),
+        }
+    }
+
+    /// Swap rows `a` and `b` in every arena.
+    pub(crate) fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let d = self.dim;
+        let t = self.tri;
+        for off in 0..d {
+            self.means.swap(a * d + off, b * d + off);
+        }
+        for off in 0..t {
+            self.mats.swap(a * t + off, b * t + off);
+        }
+        self.log_dets.swap(a, b);
+        self.sps.swap(a, b);
+        self.vs.swap(a, b);
+    }
+
+    /// Overwrite row `dst` with row `src` (compaction helper).
+    fn copy_row(&mut self, src: usize, dst: usize) {
+        let d = self.dim;
+        let t = self.tri;
+        self.means.copy_within(src * d..(src + 1) * d, dst * d);
+        self.mats.copy_within(src * t..(src + 1) * t, dst * t);
+        self.log_dets[dst] = self.log_dets[src];
+        self.sps[dst] = self.sps[src];
+        self.vs[dst] = self.vs[src];
+    }
+
+    /// Drop every row past the first `k`.
+    pub(crate) fn truncate(&mut self, k: usize) {
+        self.means.truncate(k * self.dim);
+        self.mats.truncate(k * self.tri);
+        self.log_dets.truncate(k);
+        self.sps.truncate(k);
+        self.vs.truncate(k);
+    }
+
+    /// The §2.3 spuriousness sweep shared by both variants: remove every
+    /// component with `v > v_min && sp < sp_min` — except that the
+    /// mixture is never allowed to empty. When *every* component trips
+    /// the predicate at once (possible on short/adversarial streams),
+    /// the single strongest component — highest `sp`, lowest index on
+    /// ties — survives, so densities/predictions and the `sp/Σsp`
+    /// priors stay well-defined. Survivors keep their relative order
+    /// (stable compaction, like the pre-refactor `Vec::retain`), so
+    /// pruning is layout-invariant. Both `Figmn` and `Igmn` funnel
+    /// through this one function, so their prune decisions are
+    /// identical by construction (the paper's §4 equivalence).
+    ///
+    /// Returns how many components were removed.
+    pub(crate) fn prune(&mut self, v_min: u64, sp_min: f64) -> usize {
+        let k = self.len();
+        if k <= 1 {
+            return 0;
+        }
+        let doomed = |sp: f64, v: u64| v > v_min && sp < sp_min;
+        if (0..k).all(|j| doomed(self.sps[j], self.vs[j])) {
+            let mut keep = 0usize;
+            let mut best = self.sps[0];
+            for (j, &s) in self.sps.iter().enumerate().skip(1) {
+                if s > best {
+                    best = s;
+                    keep = j;
+                }
+            }
+            self.swap_rows(0, keep);
+            self.truncate(1);
+        } else {
+            let mut w = 0usize;
+            for j in 0..k {
+                if doomed(self.sps[j], self.vs[j]) {
+                    continue;
+                }
+                if w != j {
+                    self.copy_row(j, w);
+                }
+                w += 1;
+            }
+            self.truncate(w);
+        }
+        k - self.len()
+    }
+
+    /// Arena bytes one component occupies: `D` mean + `D(D+1)/2` packed
+    /// matrix + `log_det` + `sp` floats, plus the `u64` age. The dense
+    /// array-of-structs layout paid `D²` matrix floats (plus two heap
+    /// headers) for the same state — about 2× this at large `D`.
+    pub fn bytes_per_component(&self) -> usize {
+        (self.dim + self.tri + 2) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>()
+    }
+
+    /// Total arena payload for the live mixture.
+    pub fn model_bytes(&self) -> usize {
+        self.len() * self.bytes_per_component()
+    }
+
+    /// Payload bytes one component occupied in the pre-refactor dense
+    /// array-of-structs layout (`D` mean + `D²` matrix + 2 scalar
+    /// floats + the `u64` age) — the baseline the layout benches
+    /// compare [`ComponentStore::bytes_per_component`] against.
+    pub fn dense_equivalent_bytes(dim: usize) -> usize {
+        (dim + dim * dim + 2) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>()
+    }
+}
+
+/// Raw-pointer row access for the engine's sharded update pass; `Copy`
+/// so the shard closure can capture it by value.
+#[derive(Clone, Copy)]
+pub(crate) struct StoreRawMut {
+    dim: usize,
+    tri: usize,
+    means: SharedMut<f64>,
+    mats: SharedMut<f64>,
+    log_dets: SharedMut<f64>,
+    sps: SharedMut<f64>,
+    vs: SharedMut<u64>,
+}
+
+impl StoreRawMut {
+    /// Mutable views of row `j`: `(mean, mat, log_det, sp, v)`.
+    ///
+    /// # Safety
+    /// `j` must be in bounds of the source store, and no other thread
+    /// may access row `j` during the same engine pass — guaranteed when
+    /// `j` comes from the pool's disjoint shard ranges.
+    pub unsafe fn row_mut(
+        &self,
+        j: usize,
+    ) -> (&mut [f64], &mut [f64], &mut f64, &mut f64, &mut u64) {
+        (
+            self.means.slice(j * self.dim, self.dim),
+            self.mats.slice(j * self.tri, self.tri),
+            &mut *self.log_dets.at(j),
+            &mut *self.sps.at(j),
+            &mut *self.vs.at(j),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(rows: &[(f64, f64, u64)]) -> ComponentStore {
+        // 2-D store; mean/diag tagged by the row's sp so moves are visible.
+        let mut s = ComponentStore::new(2);
+        for &(tag, sp, v) in rows {
+            let mean = [tag, -tag];
+            let mat = packed::from_diag(&[tag, tag]);
+            s.push(&mean, &mat, tag.ln(), sp, v);
+        }
+        s
+    }
+
+    #[test]
+    fn push_and_accessors() {
+        let s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.dim(), 2);
+        assert_eq!(s.mat_len(), 3);
+        assert_eq!(s.mean(1), &[4.0, -4.0]);
+        assert_eq!(s.mat(1), &[4.0, 0.0, 4.0]);
+        assert_eq!(s.log_det(1), 4.0f64.ln());
+        assert_eq!(s.sp(0), 2.0);
+        assert_eq!(s.v(0), 3);
+        assert_eq!(s.sps(), &[2.0, 5.0]);
+        assert_eq!(s.total_sp(), 7.0);
+        let dense = s.mat_dense(0);
+        assert_eq!(dense.as_slice(), &[1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn row_mut_is_disjoint_per_field() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        {
+            let (mean, mat, log_det, sp, v) = s.row_mut(0);
+            mean[0] = 9.0;
+            mat[2] = 8.0;
+            *log_det = 7.0;
+            *sp = 6.0;
+            *v = 5;
+        }
+        assert_eq!(s.mean(0), &[9.0, -1.0]);
+        assert_eq!(s.mat(0), &[1.0, 0.0, 8.0]);
+        assert_eq!(s.log_det(0), 7.0);
+        assert_eq!(s.sp(0), 6.0);
+        assert_eq!(s.v(0), 5);
+        // Row 1 untouched.
+        assert_eq!(s.mean(1), &[4.0, -4.0]);
+    }
+
+    #[test]
+    fn swap_and_truncate() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6), (7.0, 8.0, 9)]);
+        s.swap_rows(0, 2);
+        assert_eq!(s.mean(0), &[7.0, -7.0]);
+        assert_eq!(s.sp(0), 8.0);
+        assert_eq!(s.mean(2), &[1.0, -1.0]);
+        s.truncate(1);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.mean(0), &[7.0, -7.0]);
+        assert_eq!(s.mat(0), &[7.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn prune_is_stable_and_order_preserving() {
+        // Rows 1 and 3 are doomed (v > 1, sp < 4); survivors keep order.
+        let mut s = store_with(&[(1.0, 5.0, 0), (2.0, 1.0, 3), (3.0, 6.0, 4), (4.0, 2.0, 5)]);
+        let removed = s.prune(1, 4.0);
+        assert_eq!(removed, 2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.mean(0), &[1.0, -1.0]);
+        assert_eq!(s.mean(1), &[3.0, -3.0]);
+        assert_eq!(s.sps(), &[5.0, 6.0]);
+        assert_eq!(s.v(1), 4);
+    }
+
+    #[test]
+    fn prune_keeps_strongest_when_all_doomed() {
+        let mut s = store_with(&[(1.0, 0.5, 9), (2.0, 2.5, 9), (3.0, 2.5, 9)]);
+        let removed = s.prune(1, 100.0);
+        assert_eq!(removed, 2);
+        assert_eq!(s.len(), 1);
+        // Highest sp, lowest index on ties → row 1 (tag 2.0).
+        assert_eq!(s.mean(0), &[2.0, -2.0]);
+        assert_eq!(s.sp(0), 2.5);
+    }
+
+    #[test]
+    fn prune_never_empties_single_component() {
+        let mut s = store_with(&[(1.0, 0.1, 99)]);
+        assert_eq!(s.prune(0, 1e9), 0);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn clone_is_independent_bulk_copy() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        let snap = s.clone();
+        let (mean, ..) = s.row_mut(0);
+        mean[0] = 100.0;
+        assert_eq!(snap.mean(0), &[1.0, -1.0], "clone must not alias");
+        assert_eq!(snap, store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]));
+    }
+
+    #[test]
+    fn byte_accounting_tracks_packed_layout() {
+        let s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        // D=2: 2 mean + 3 packed + log_det + sp floats, + u64 age.
+        assert_eq!(s.bytes_per_component(), 7 * 8 + 8);
+        assert_eq!(s.model_bytes(), 2 * s.bytes_per_component());
+        // The packed matrix is strictly smaller than dense for D ≥ 2.
+        assert!(s.mat_len() < s.dim() * s.dim());
+    }
+
+    #[test]
+    fn raw_mut_rows_address_the_arenas() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        let raw = s.raw_mut();
+        unsafe {
+            let (mean, mat, log_det, sp, v) = raw.row_mut(1);
+            mean[1] = 42.0;
+            mat[0] = 41.0;
+            *log_det = 40.0;
+            *sp = 39.0;
+            *v = 38;
+        }
+        assert_eq!(s.mean(1), &[4.0, 42.0]);
+        assert_eq!(s.mat(1), &[41.0, 0.0, 4.0]);
+        assert_eq!(s.log_det(1), 40.0);
+        assert_eq!(s.sp(1), 39.0);
+        assert_eq!(s.v(1), 38);
+    }
+}

@@ -37,6 +37,36 @@ impl Cholesky {
         Some(Cholesky { l })
     }
 
+    /// Factor a **packed upper-triangular** symmetric matrix (see
+    /// [`crate::linalg::packed`]) without expanding it to dense form.
+    /// Reads element `(i, j)` through the symmetric accessor, which for
+    /// `j ≤ i` yields the packed `(j, i)` slot — the same value the
+    /// dense factorization reads from its (exactly symmetric) lower
+    /// triangle, so the factor is bit-identical to
+    /// [`Cholesky::new`] on the dense expansion.
+    pub fn new_packed(ap: &[f64], d: usize) -> Option<Self> {
+        use crate::linalg::packed::{packed_len, sym_at};
+        assert_eq!(ap.len(), packed_len(d), "cholesky: packed length mismatch");
+        let mut l = Matrix::zeros(d, d);
+        for i in 0..d {
+            for j in 0..=i {
+                let mut sum = sym_at(ap, d, i, j);
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
     /// The lower-triangular factor.
     pub fn factor(&self) -> &Matrix {
         &self.l
@@ -164,5 +194,18 @@ mod tests {
     fn non_spd_rejected() {
         let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // indefinite
         assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn packed_factor_bit_identical_to_dense() {
+        use crate::linalg::packed::pack_symmetric;
+        let a = spd3();
+        let dense = Cholesky::new(&a).unwrap();
+        let packed = Cholesky::new_packed(&pack_symmetric(&a), 3).unwrap();
+        assert_eq!(dense.factor().as_slice(), packed.factor().as_slice());
+        assert!(dense.log_det().to_bits() == packed.log_det().to_bits());
+        // Non-PD packed input rejected too.
+        let bad = pack_symmetric(&Matrix::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]));
+        assert!(Cholesky::new_packed(&bad, 2).is_none());
     }
 }

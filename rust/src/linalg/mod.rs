@@ -1,4 +1,4 @@
-//! Dense linear algebra substrate.
+//! Dense and packed-symmetric linear algebra substrate.
 //!
 //! The offline vendor set has no BLAS/LAPACK/ndarray, so the paper's
 //! numerical kernels are built on this module: a row-major [`Matrix`] of
@@ -7,11 +7,19 @@
 //! `O(D³)` operations the paper *removes*), and the rank-one update
 //! primitives (the operations the paper *adds*).
 //!
+//! The mixture's per-component matrices are symmetric, so the hot-path
+//! kernels also come in [`packed`] upper-triangular form — half the
+//! bytes per sweep, bit-identical results (see the [`packed`] module
+//! docs for the layout and the bit-identity contract). The component
+//! arenas of `gmm::ComponentStore` store exclusively packed matrices;
+//! the dense [`Matrix`] remains the interop/oracle type.
+//!
 //! Everything here is deliberately allocation-conscious: the GMM hot path
 //! calls [`rank_one`] routines that write in place and allocate nothing.
 
 mod cholesky;
 mod matrix;
+pub mod packed;
 pub mod rank_one;
 mod vector;
 

@@ -1,0 +1,285 @@
+//! Packed upper-triangular storage for symmetric matrices.
+//!
+//! A symmetric `D×D` matrix is fully determined by its upper triangle —
+//! `D·(D+1)/2` values instead of `D²`. The mixture's per-component
+//! matrices (the precision `Λ` of the fast path, the covariance `C` of
+//! the baseline) are kept *exactly* symmetric by the update rules (the
+//! `α·(uᵢ·uⱼ)` trick in [`super::rank_one`]), so packing loses nothing —
+//! and the component arenas of `gmm::ComponentStore` move roughly half
+//! the bytes per kernel sweep.
+//!
+//! ## Layout
+//!
+//! Row-major upper triangle: row `i` stores entries `(i, i..D)`
+//! contiguously, so element `(i, j)` with `i ≤ j` lives at
+//! `row_start(i, d) + (j − i)`.
+//!
+//! ## Bit-identity contract
+//!
+//! Every kernel here performs the **same floating-point operations in
+//! the same order** as its dense counterpart in [`super::Matrix`] /
+//! [`super::rank_one`]: a mat-vec still accumulates `Σⱼ A(i,j)·xⱼ` in
+//! ascending `j` (reading `(j, i)` from earlier packed rows when
+//! `j < i` — the same value, since the dense matrices are exactly
+//! symmetric), and per-entry updates use identical expressions. Packing
+//! therefore changes *where a value is stored*, never the value — the
+//! crate's determinism guarantee extends across layouts, enforced by
+//! this module's side-by-side tests and `tests/layout_equivalence.rs`.
+
+use super::Matrix;
+
+/// Packed length of a symmetric `d×d` matrix: `d·(d+1)/2`.
+#[inline]
+pub fn packed_len(d: usize) -> usize {
+    d * (d + 1) / 2
+}
+
+/// Offset of packed row `i` (the diagonal element `(i, i)`):
+/// `Σ_{r<i} (d − r) = i·d − i·(i−1)/2`, written underflow-free.
+#[inline]
+pub fn row_start(i: usize, d: usize) -> usize {
+    i * (2 * d + 1 - i) / 2
+}
+
+/// Symmetric element access for arbitrary `(i, j)`.
+#[inline]
+pub fn sym_at(ap: &[f64], d: usize, i: usize, j: usize) -> f64 {
+    if i <= j {
+        ap[row_start(i, d) + (j - i)]
+    } else {
+        ap[row_start(j, d) + (i - j)]
+    }
+}
+
+/// Pack the upper triangle of a (symmetric) dense matrix.
+pub fn pack_symmetric(m: &Matrix) -> Vec<f64> {
+    assert_eq!(m.rows(), m.cols(), "pack_symmetric: square only");
+    pack_symmetric_slice(m.as_slice(), m.rows())
+}
+
+/// Pack the upper triangle of a row-major `d×d` slice.
+pub fn pack_symmetric_slice(flat: &[f64], d: usize) -> Vec<f64> {
+    assert_eq!(flat.len(), d * d, "pack_symmetric_slice: shape mismatch");
+    let mut out = Vec::with_capacity(packed_len(d));
+    for i in 0..d {
+        out.extend_from_slice(&flat[i * d + i..(i + 1) * d]);
+    }
+    out
+}
+
+/// Expand a packed symmetric matrix back to dense (both triangles).
+pub fn unpack_symmetric(ap: &[f64], d: usize) -> Matrix {
+    assert_eq!(ap.len(), packed_len(d), "unpack_symmetric: length mismatch");
+    let mut m = Matrix::zeros(d, d);
+    for i in 0..d {
+        let rs = row_start(i, d);
+        for j in i..d {
+            let v = ap[rs + (j - i)];
+            m[(i, j)] = v;
+            m[(j, i)] = v;
+        }
+    }
+    m
+}
+
+/// Packed diagonal matrix from the given entries.
+pub fn from_diag(entries: &[f64]) -> Vec<f64> {
+    let d = entries.len();
+    let mut out = vec![0.0; packed_len(d)];
+    for (i, &v) in entries.iter().enumerate() {
+        out[row_start(i, d)] = v;
+    }
+    out
+}
+
+/// Symmetric mat-vec `y = A·x` — bit-identical to
+/// [`Matrix::matvec_into`] on the dense expansion (same accumulation
+/// order, same values).
+pub fn spmv(ap: &[f64], d: usize, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(x.len(), d, "spmv: x length");
+    assert_eq!(y.len(), d, "spmv: y length");
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = row_dot(ap, d, i, x);
+    }
+}
+
+/// Quadratic form `xᵀ·A·x` — bit-identical to [`Matrix::quad_form`].
+pub fn quad_form(ap: &[f64], d: usize, x: &[f64]) -> f64 {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(x.len(), d, "quad_form: x length");
+    let mut total = 0.0;
+    for i in 0..d {
+        total += x[i] * row_dot(ap, d, i, x);
+    }
+    total
+}
+
+/// Quadratic form that also writes `w = A·x` — bit-identical to
+/// [`Matrix::quad_form_with`]. The learn hot path reuses `w` for the
+/// fused rank-one update (see `rank_one::figmn_fused_update_packed`).
+pub fn quad_form_with(ap: &[f64], d: usize, x: &[f64], w: &mut [f64]) -> f64 {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(x.len(), d, "quad_form_with: x length");
+    assert_eq!(w.len(), d, "quad_form_with: w length");
+    let mut total = 0.0;
+    for i in 0..d {
+        let acc = row_dot(ap, d, i, x);
+        w[i] = acc;
+        total += x[i] * acc;
+    }
+    total
+}
+
+/// `Σⱼ A(i,j)·xⱼ` in ascending `j` — the dense row dot product, reading
+/// the `j < i` entries from earlier packed rows (their `(j, i)` slot).
+#[inline]
+fn row_dot(ap: &[f64], d: usize, i: usize, x: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    // Entries (i, j) with j < i: element (j, i) at pk(j, i); successive
+    // j differ by d − j − 1 (one shorter packed row each step).
+    let mut idx = i; // pk(0, i) = i
+    for (j, &xj) in x[..i].iter().enumerate() {
+        acc += ap[idx] * xj;
+        idx += d - j - 1;
+    }
+    // Entries (i, j) with j ≥ i: the contiguous packed row i.
+    let rs = row_start(i, d);
+    for (a, &xj) in ap[rs..rs + d - i].iter().zip(x[i..].iter()) {
+        acc += a * xj;
+    }
+    acc
+}
+
+/// Symmetric rank-one accumulate `A += α·u·uᵀ` on packed storage —
+/// per-entry expressions identical to [`super::rank_one::syr`].
+pub fn syr_packed(ap: &mut [f64], d: usize, alpha: f64, u: &[f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    debug_assert_eq!(u.len(), d);
+    for i in 0..d {
+        let ui = u[i];
+        if ui == 0.0 {
+            continue;
+        }
+        let rs = row_start(i, d);
+        for (r, &uj) in ap[rs..rs + d - i].iter_mut().zip(u[i..].iter()) {
+            *r += alpha * (ui * uj);
+        }
+    }
+}
+
+/// Scale every entry in place — the packed analog of
+/// [`Matrix::scale_in_place`].
+pub fn scale(ap: &mut [f64], s: f64) {
+    for v in ap {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rank_one::syr;
+    use crate::rng::Pcg64;
+    use crate::testutil::random_spd;
+
+    fn random_sym(n: usize, rng: &mut Pcg64) -> Matrix {
+        let mut m = random_spd(n, rng);
+        m.symmetrize();
+        m
+    }
+
+    #[test]
+    fn indexing_round_trips() {
+        for d in [1usize, 2, 3, 5, 8] {
+            assert_eq!(packed_len(d), (0..d).map(|i| d - i).sum::<usize>());
+            let mut seen = vec![false; packed_len(d)];
+            for i in 0..d {
+                for j in i..d {
+                    let idx = row_start(i, d) + (j - i);
+                    assert!(!seen[idx], "slot ({i},{j}) collides at {idx}");
+                    seen[idx] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "packed slots not covered for d={d}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let mut rng = Pcg64::seed(5);
+        for n in 1..8 {
+            let m = random_sym(n, &mut rng);
+            let ap = pack_symmetric(&m);
+            assert_eq!(ap.len(), packed_len(n));
+            let back = unpack_symmetric(&ap, n);
+            assert_eq!(back.as_slice(), m.as_slice(), "n={n}");
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(sym_at(&ap, n, i, j), m[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_diag_places_diagonal() {
+        let ap = from_diag(&[2.0, 3.0, 4.0]);
+        let m = unpack_symmetric(&ap, 3);
+        assert_eq!(m.as_slice(), Matrix::diag(&[2.0, 3.0, 4.0]).as_slice());
+    }
+
+    /// The bit-identity contract: packed kernels equal their dense
+    /// counterparts *exactly*, not just to tolerance.
+    #[test]
+    fn kernels_bit_identical_to_dense() {
+        let mut rng = Pcg64::seed(42);
+        for trial in 0..60 {
+            let n = 1 + (trial % 9);
+            let m = random_sym(n, &mut rng);
+            let ap = pack_symmetric(&m);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+            let mut y_dense = vec![0.0; n];
+            m.matvec_into(&x, &mut y_dense);
+            let mut y_packed = vec![0.0; n];
+            spmv(&ap, n, &x, &mut y_packed);
+            assert_eq!(y_dense, y_packed, "trial {trial}: spmv bits differ");
+
+            assert!(
+                m.quad_form(&x).to_bits() == quad_form(&ap, n, &x).to_bits(),
+                "trial {trial}: quad_form bits differ"
+            );
+
+            let mut w_dense = vec![0.0; n];
+            let q_dense = m.quad_form_with(&x, &mut w_dense);
+            let mut w_packed = vec![0.0; n];
+            let q_packed = quad_form_with(&ap, n, &x, &mut w_packed);
+            assert_eq!(w_dense, w_packed, "trial {trial}: w bits differ");
+            assert!(q_dense.to_bits() == q_packed.to_bits(), "trial {trial}: q bits differ");
+        }
+    }
+
+    #[test]
+    fn syr_and_scale_bit_identical_to_dense() {
+        let mut rng = Pcg64::seed(9);
+        for trial in 0..40 {
+            let n = 1 + (trial % 7);
+            let mut dense = random_sym(n, &mut rng);
+            let mut ap = pack_symmetric(&dense);
+            let u: Vec<f64> = (0..n)
+                .map(|_| if rng.uniform() < 0.2 { 0.0 } else { rng.normal() })
+                .collect();
+            let alpha = rng.normal();
+
+            syr(&mut dense, alpha, &u);
+            syr_packed(&mut ap, n, alpha, &u);
+            assert_eq!(pack_symmetric(&dense), ap, "trial {trial}: syr bits differ");
+
+            let s = rng.normal();
+            dense.scale_in_place(s);
+            scale(&mut ap, s);
+            assert_eq!(pack_symmetric(&dense), ap, "trial {trial}: scale bits differ");
+        }
+    }
+}

@@ -45,24 +45,35 @@ impl PackedState {
 
     /// Pack a native [`Figmn`] into the wire format (f64 → f32).
     /// Panics if the model has more components than `capacity`.
+    ///
+    /// The model stores each Λ as a packed upper triangle; both
+    /// triangles of the dense wire matrix are written from it directly
+    /// (no intermediate dense `Matrix` allocation on the XLA flush
+    /// path).
     pub fn from_figmn(model: &Figmn, capacity: usize) -> Self {
+        use crate::linalg::packed::row_start;
         let dim = model.dim();
         let k = model.num_components();
         assert!(k <= capacity, "model has {k} components > capacity {capacity}");
         let mut s = PackedState::empty(capacity, dim);
+        let store = model.store();
         for j in 0..k {
-            let mean = model.component_mean(j);
-            for (i, &v) in mean.iter().enumerate() {
+            for (i, &v) in store.mean(j).iter().enumerate() {
                 s.mus[j * dim + i] = v as f32;
             }
-            let lam = model.component_lambda(j);
-            for (i, &v) in lam.as_slice().iter().enumerate() {
-                s.lambdas[j * dim * dim + i] = v as f32;
+            let ap = store.mat(j);
+            let dense = &mut s.lambdas[j * dim * dim..(j + 1) * dim * dim];
+            for r in 0..dim {
+                let rs = row_start(r, dim);
+                for c in r..dim {
+                    let v = ap[rs + (c - r)] as f32;
+                    dense[r * dim + c] = v;
+                    dense[c * dim + r] = v;
+                }
             }
-            s.log_dets[j] = model.component_log_det(j) as f32;
-            let (sp, v) = model.component_stats(j);
-            s.sps[j] = sp as f32;
-            s.vs[j] = v as f32;
+            s.log_dets[j] = store.log_det(j) as f32;
+            s.sps[j] = store.sp(j) as f32;
+            s.vs[j] = store.v(j) as f32;
             s.mask[j] = 1.0;
         }
         s
@@ -70,13 +81,18 @@ impl PackedState {
 
     /// Unpack into a native [`Figmn`] (f32 → f64), e.g. after running
     /// learn steps on the XLA path. `cfg`/`stds` must describe the same
-    /// joint space the state was built for.
+    /// joint space the state was built for. The wire format carries the
+    /// dense f32 matrix; only its upper triangle enters the model's
+    /// packed arenas. Producers are expected to keep it symmetric
+    /// ([`PackedState::from_figmn`] always does); debug builds assert
+    /// this, while release builds trust the wire contract and use the
+    /// upper triangle as authoritative.
     pub fn to_figmn(&self, cfg: GmmConfig, stds: &[f64], points: u64) -> Figmn {
-        use crate::linalg::Matrix;
+        use crate::linalg::packed::pack_symmetric_slice;
         let mut model = Figmn::new(cfg, stds);
         let d = self.dim;
         {
-            let comps = model.components_mut();
+            let store = model.store_mut();
             for j in 0..self.capacity {
                 if self.mask[j] < 0.5 {
                     continue;
@@ -87,13 +103,22 @@ impl PackedState {
                     .iter()
                     .map(|&v| v as f64)
                     .collect();
-                comps.push(crate::gmm::new_precision_component(
-                    mean,
-                    Matrix::from_vec(d, d, flat),
+                #[cfg(debug_assertions)]
+                for r in 0..d {
+                    for c in r + 1..d {
+                        debug_assert!(
+                            flat[r * d + c] == flat[c * d + r],
+                            "to_figmn: asymmetric wire Λ for component {j} at ({r},{c})"
+                        );
+                    }
+                }
+                store.push(
+                    &mean,
+                    &pack_symmetric_slice(&flat, d),
                     self.log_dets[j] as f64,
                     self.sps[j] as f64,
                     self.vs[j] as u64,
-                ));
+                );
             }
         }
         let _ = points; // points counter is advisory; Figmn tracks its own

@@ -1,0 +1,179 @@
+//! Checkpoint backward compatibility: pre-refactor (v1) checkpoints —
+//! the per-component format with a dense row-major `lambda` — must load
+//! into the new packed `ComponentStore` and score **bit-identically**.
+//!
+//! Two angles:
+//! - `v1_document_loads_and_scores_bit_identically` synthesizes a v1
+//!   document with exactly the pre-refactor writer's fields (the dense
+//!   matrix reconstructed from the packed arenas — identical values,
+//!   since the update rules keep Λ exactly symmetric) and checks the
+//!   loaded model against the live one, bit for bit, including
+//!   continued learning.
+//! - `static_v1_fixture_loads` pins the on-disk format itself with a
+//!   committed fixture file, cross-checked against an identical model
+//!   assembled through the independent `PackedState` wire-format path.
+
+use figmn::gmm::{CHECKPOINT_MIN_VERSION, Figmn, GmmConfig, IncrementalMixture};
+use figmn::json::{parse, Json};
+use figmn::rng::Pcg64;
+use figmn::runtime::PackedState;
+
+fn trained_model() -> Figmn {
+    let cfg = GmmConfig::new(3).with_delta(0.4).with_beta(0.1).with_pruning(5, 0.5);
+    let mut m = Figmn::new(cfg, &[2.0, 2.0, 2.0]);
+    let mut rng = Pcg64::seed(31);
+    for _ in 0..250 {
+        let c = if rng.uniform() < 0.5 { 0.0 } else { 8.0 };
+        let x: Vec<f64> = (0..3).map(|_| c + rng.normal()).collect();
+        m.learn(&x);
+    }
+    m
+}
+
+/// Re-emit a live model in the exact pre-refactor v1 checkpoint format:
+/// version 1, per-component dense row-major `lambda`.
+fn to_v1_doc(m: &Figmn) -> Json {
+    let cfg = m.config();
+    let comps: Vec<Json> = (0..m.num_components())
+        .map(|j| {
+            let lam = m.component_lambda(j); // dense expansion
+            let (sp, v) = m.component_stats(j);
+            Json::obj(vec![
+                ("mean", Json::num_array(m.component_mean(j))),
+                ("lambda", Json::num_array(lam.as_slice())),
+                ("log_det", m.component_log_det(j).into()),
+                ("sp", sp.into()),
+                ("v", (v as usize).into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", CHECKPOINT_MIN_VERSION.into()),
+        ("crate_version", "0.1.0".into()),
+        ("kind", "figmn".into()),
+        ("dim", cfg.dim.into()),
+        ("delta", cfg.delta.into()),
+        ("beta", cfg.beta.into()),
+        ("v_min", (cfg.v_min as usize).into()),
+        ("sp_min", cfg.sp_min.into()),
+        ("prune", cfg.prune.into()),
+        ("max_components", cfg.max_components.into()),
+        ("sigma_ini", Json::num_array(m.sigma_ini())),
+        ("points", (m.points_seen() as usize).into()),
+        ("components", Json::Arr(comps)),
+    ])
+}
+
+#[test]
+fn v1_document_loads_and_scores_bit_identically() {
+    let mut live = trained_model();
+    let text = to_v1_doc(&live).to_string_compact();
+    assert!(text.contains("\"version\":1"), "doc must be v1: {}", &text[..60]);
+    assert!(text.contains("\"lambda\":["), "doc must carry the dense matrix");
+    let mut restored = Figmn::from_json(&parse(&text).unwrap()).unwrap();
+
+    assert_eq!(restored.num_components(), live.num_components());
+    assert_eq!(restored.points_seen(), live.points_seen());
+    let mut rng = Pcg64::seed(77);
+    for _ in 0..20 {
+        let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+        assert!(
+            live.log_density(&x).to_bits() == restored.log_density(&x).to_bits(),
+            "v1-loaded log_density bits differ"
+        );
+        assert_eq!(live.posteriors(&x), restored.posteriors(&x));
+        assert_eq!(
+            live.predict(&x[..2], &[0, 1], &[2]),
+            restored.predict(&x[..2], &[0, 1], &[2]),
+            "v1-loaded predict bits differ"
+        );
+    }
+    // The restored model keeps learning exactly like the live one —
+    // same outcomes, same state (full trajectory equivalence).
+    for _ in 0..40 {
+        let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+        assert_eq!(live.learn(&x), restored.learn(&x));
+    }
+    assert_eq!(live.num_components(), restored.num_components());
+    for j in 0..live.num_components() {
+        assert_eq!(live.component_mean(j), restored.component_mean(j));
+        assert_eq!(
+            live.component_lambda(j).as_slice(),
+            restored.component_lambda(j).as_slice()
+        );
+    }
+    // And re-saving produces a current-format (v2, packed) checkpoint.
+    let resaved = restored.to_json().to_string_compact();
+    assert!(resaved.contains("\"version\":2"));
+    assert!(resaved.contains("\"lambda_packed\":["));
+}
+
+/// The v1 loader must reject corruption anywhere in the dense matrix —
+/// including the lower triangle, which the packed store no longer
+/// keeps. Silently dropping it would load a checkpoint the pre-refactor
+/// reader either rejected (non-finite) or scored differently
+/// (asymmetric).
+#[test]
+fn v1_corrupt_lower_triangle_is_rejected() {
+    let good = r#"{"version":1,"kind":"figmn","dim":2,"delta":0.5,"beta":0.1,
+        "v_min":5,"sp_min":3,"prune":false,"max_components":0,
+        "sigma_ini":[1,1],"points":1,"components":[
+        {"mean":[0,0],"lambda":[1,0.25,0.25,1],"log_det":0,"sp":1,"v":1}]}"#;
+    assert!(Figmn::from_json(&parse(good).unwrap()).is_ok());
+    // Non-numeric payload in the lower-triangle slot.
+    let bad = good.replace("[1,0.25,0.25,1]", "[1,0.25,null,1]");
+    assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "null lower triangle");
+    // Non-finite value (1e999 parses to +inf) hiding in the lower
+    // triangle the packed store would otherwise drop.
+    let bad = good.replace("[1,0.25,0.25,1]", "[1,0.25,1e999,1]");
+    assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "non-finite lower triangle");
+    // Asymmetric dense matrix: the two readers would disagree — reject.
+    let bad = good.replace("[1,0.25,0.25,1]", "[1,0.25,0.75,1]");
+    assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "asymmetric lambda");
+}
+
+#[test]
+fn static_v1_fixture_loads() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/checkpoint_v1_figmn.json"
+    );
+    let text = std::fs::read_to_string(path).expect("fixture must exist");
+    let loaded = Figmn::from_json(&parse(&text).unwrap()).expect("v1 fixture must load");
+    assert_eq!(loaded.dim(), 2);
+    assert_eq!(loaded.num_components(), 2);
+    assert_eq!(loaded.points_seen(), 7);
+    assert_eq!(loaded.component_mean(1), &[4.0, 4.0]);
+    assert_eq!(loaded.component_stats(0), (1.5, 3));
+
+    // Cross-check against the same mixture assembled through the
+    // independent PackedState wire-format path (identity Λ, log|C|=0 —
+    // every value exactly representable, so f32 round-trip is exact).
+    let mut st = PackedState::empty(2, 2);
+    for (j, (mean, sp, v)) in
+        [([0.0f32, 0.0], 1.5f32, 3.0f32), ([4.0, 4.0], 2.5, 4.0)].iter().enumerate()
+    {
+        st.mus[j * 2] = mean[0];
+        st.mus[j * 2 + 1] = mean[1];
+        st.lambdas[j * 4] = 1.0;
+        st.lambdas[j * 4 + 3] = 1.0;
+        st.log_dets[j] = 0.0;
+        st.sps[j] = *sp;
+        st.vs[j] = *v;
+        st.mask[j] = 1.0;
+    }
+    let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.1).without_pruning();
+    let twin = st.to_figmn(cfg, &[2.0, 2.0], 7);
+    assert_eq!(twin.num_components(), 2);
+    for x in [[0.5, -0.25], [3.5, 4.25], [2.0, 2.0]] {
+        assert!(
+            loaded.log_density(&x).to_bits() == twin.log_density(&x).to_bits(),
+            "fixture scoring diverged from wire-format twin at {x:?}"
+        );
+        assert_eq!(loaded.posteriors(&x), twin.posteriors(&x));
+        assert_eq!(
+            loaded.predict(&x[..1], &[0], &[1]),
+            twin.predict(&x[..1], &[0], &[1])
+        );
+    }
+}

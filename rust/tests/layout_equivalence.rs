@@ -1,0 +1,411 @@
+//! Dense-vs-packed layout equivalence — the refactor's acceptance gate.
+//!
+//! `Figmn` now keeps all component state in flat packed-symmetric
+//! arenas (`gmm::ComponentStore`). The packed kernels are specified to
+//! perform the **same floating-point operations in the same order** as
+//! the dense formulation, so every trajectory must be *bit-identical*
+//! to the pre-refactor array-of-structs path. This test replays that
+//! pre-refactor path: `DenseRef` below is a faithful reimplementation
+//! of the old serial `Figmn` (per-component `mean: Vec<f64>` + dense
+//! `Matrix` Λ, dense `quad_form_with`, dense `figmn_fused_update`,
+//! `retain`-style prune), built exclusively from the crate's public
+//! dense primitives — and the store-backed `Figmn` must match it bit
+//! for bit on learn outcomes, component state, densities, posteriors
+//! and predictions, for the serial path and thread counts {1, 2, 4},
+//! and through `ModelSnapshot` scoring.
+
+use figmn::engine::{logsumexp_tree, tree_sum, EngineConfig};
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, LearnOutcome};
+use figmn::linalg::rank_one::figmn_fused_update;
+use figmn::linalg::{dot, sub_into, Cholesky, Matrix};
+use figmn::rng::Pcg64;
+
+// ---- pre-refactor dense reference -----------------------------------
+
+struct DenseComp {
+    mean: Vec<f64>,
+    lambda: Matrix,
+    log_det: f64,
+    sp: f64,
+    v: u64,
+}
+
+struct DenseRef {
+    cfg: GmmConfig,
+    sigma_ini: Vec<f64>,
+    comps: Vec<DenseComp>,
+}
+
+fn log_gaussian(d2: f64, log_det: f64, dim: usize) -> f64 {
+    -0.5 * (dim as f64) * (2.0 * std::f64::consts::PI).ln() - 0.5 * log_det - 0.5 * d2
+}
+
+/// Replica of the crate's `softmax_posteriors` (same ops, same order,
+/// same deterministic `tree_sum` normalizer).
+fn softmax_ref(log_liks: &[f64], sps: &[f64]) -> Vec<f64> {
+    let mut best = f64::NEG_INFINITY;
+    let mut scores = Vec::with_capacity(log_liks.len());
+    for (&ll, &sp) in log_liks.iter().zip(sps.iter()) {
+        let s = ll + sp.max(1e-300).ln();
+        scores.push(s);
+        if s > best {
+            best = s;
+        }
+    }
+    if !best.is_finite() {
+        let k = log_liks.len().max(1);
+        return vec![1.0 / k as f64; log_liks.len()];
+    }
+    for s in &mut scores {
+        *s = (*s - best).exp();
+    }
+    let total = tree_sum(&scores);
+    for s in &mut scores {
+        *s /= total;
+    }
+    scores
+}
+
+impl DenseRef {
+    fn new(cfg: GmmConfig, stds: &[f64]) -> DenseRef {
+        let sigma_ini = cfg.sigma_ini(stds);
+        DenseRef { cfg, sigma_ini, comps: Vec::new() }
+    }
+
+    fn create(&mut self, x: &[f64]) {
+        let d = self.cfg.dim;
+        let mut lambda = Matrix::zeros(d, d);
+        let mut log_det = 0.0;
+        for i in 0..d {
+            let s2 = self.sigma_ini[i] * self.sigma_ini[i];
+            lambda[(i, i)] = 1.0 / s2;
+            log_det += s2.ln();
+        }
+        self.comps.push(DenseComp { mean: x.to_vec(), lambda, log_det, sp: 1.0, v: 1 });
+    }
+
+    fn prune(&mut self) {
+        if !self.cfg.prune || self.comps.len() <= 1 {
+            return;
+        }
+        let (v_min, sp_min) = (self.cfg.v_min, self.cfg.sp_min);
+        let doomed = |c: &DenseComp| c.v > v_min && c.sp < sp_min;
+        if self.comps.iter().all(doomed) {
+            let mut keep = 0usize;
+            let mut best = self.comps[0].sp;
+            for (j, c) in self.comps.iter().enumerate().skip(1) {
+                if c.sp > best {
+                    best = c.sp;
+                    keep = j;
+                }
+            }
+            self.comps.swap(0, keep);
+            self.comps.truncate(1);
+        } else {
+            self.comps.retain(|c| !doomed(c));
+        }
+    }
+
+    fn learn(&mut self, x: &[f64]) -> LearnOutcome {
+        if self.comps.is_empty() {
+            self.create(x);
+            return LearnOutcome::Created;
+        }
+        let k = self.comps.len();
+        let d = self.cfg.dim;
+        let mut d2 = vec![0.0; k];
+        let mut ws = vec![0.0; k * d];
+        let mut e = vec![0.0; d];
+        for (j, c) in self.comps.iter().enumerate() {
+            sub_into(x, &c.mean, &mut e);
+            d2[j] = c.lambda.quad_form_with(&e, &mut ws[j * d..(j + 1) * d]);
+        }
+        let accept = d2.iter().any(|&v| v < self.cfg.chi2_threshold());
+        let cap_full = self.cfg.max_components > 0 && k >= self.cfg.max_components;
+        if accept || cap_full {
+            let mut ll = Vec::with_capacity(k);
+            let mut sps = Vec::with_capacity(k);
+            for (c, &d2j) in self.comps.iter().zip(d2.iter()) {
+                ll.push(log_gaussian(d2j, c.log_det, d));
+                sps.push(c.sp);
+            }
+            let post = softmax_ref(&ll, &sps);
+            for (j, c) in self.comps.iter_mut().enumerate() {
+                c.v += 1;
+                c.sp += post[j];
+                let omega = post[j] / c.sp;
+                if omega <= 0.0 {
+                    continue;
+                }
+                sub_into(x, &c.mean, &mut e);
+                for (m, &ei) in c.mean.iter_mut().zip(e.iter()) {
+                    *m += omega * ei;
+                }
+                match figmn_fused_update(
+                    &mut c.lambda,
+                    &ws[j * d..(j + 1) * d],
+                    d2[j],
+                    omega,
+                    c.log_det,
+                ) {
+                    Some(r) => c.log_det = r.log_det,
+                    None => {
+                        c.lambda.scale_in_place(0.0);
+                        let mut ld = 0.0;
+                        for i in 0..d {
+                            let s2 = self.sigma_ini[i] * self.sigma_ini[i];
+                            c.lambda[(i, i)] = 1.0 / s2;
+                            ld += s2.ln();
+                        }
+                        c.log_det = ld;
+                    }
+                }
+            }
+            self.prune();
+            LearnOutcome::Updated
+        } else {
+            self.create(x);
+            self.prune();
+            LearnOutcome::Created
+        }
+    }
+
+    fn log_density(&self, x: &[f64]) -> f64 {
+        let d = self.cfg.dim;
+        let total_sp: f64 = self.comps.iter().map(|c| c.sp).sum();
+        let mut e = vec![0.0; d];
+        let mut terms = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            let ll = log_gaussian(c.lambda.quad_form(&e), c.log_det, d);
+            terms.push(ll + (c.sp / total_sp).ln());
+        }
+        logsumexp_tree(&terms)
+    }
+
+    fn posteriors(&self, x: &[f64]) -> Vec<f64> {
+        let d = self.cfg.dim;
+        let mut e = vec![0.0; d];
+        let mut ll = Vec::with_capacity(self.comps.len());
+        let mut sps = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            sub_into(x, &c.mean, &mut e);
+            ll.push(log_gaussian(c.lambda.quad_form(&e), c.log_det, d));
+            sps.push(c.sp);
+        }
+        softmax_ref(&ll, &sps)
+    }
+
+    /// Pre-refactor dense `precision_conditional` (Eq. 27 + Schur
+    /// marginal) reading the dense Λ directly.
+    fn conditional(
+        c: &DenseComp,
+        known_vals: &[f64],
+        known_idx: &[usize],
+        target_idx: &[usize],
+    ) -> (f64, Vec<f64>) {
+        let ni = known_idx.len();
+        let nt = target_idx.len();
+        let mut d = vec![0.0; ni];
+        for (k, (&idx, &v)) in known_idx.iter().zip(known_vals.iter()).enumerate() {
+            d[k] = v - c.mean[idx];
+        }
+        let mut ytd = vec![0.0; nt];
+        for (r, &ti) in target_idx.iter().enumerate() {
+            let mut acc = 0.0;
+            for (k, &ki) in known_idx.iter().enumerate() {
+                acc += c.lambda[(ki, ti)] * d[k];
+            }
+            ytd[r] = acc;
+        }
+        let mut dxd = 0.0;
+        for (a, &ia) in known_idx.iter().enumerate() {
+            let mut acc = 0.0;
+            for (b, &ib) in known_idx.iter().enumerate() {
+                acc += c.lambda[(ia, ib)] * d[b];
+            }
+            dxd += d[a] * acc;
+        }
+        let mut w = Matrix::zeros(nt, nt);
+        for (a, &ta) in target_idx.iter().enumerate() {
+            for (b, &tb) in target_idx.iter().enumerate() {
+                w[(a, b)] = c.lambda[(ta, tb)];
+            }
+        }
+        let chol = Cholesky::new(&w).expect("W must be PD");
+        let z = chol.solve(&ytd);
+        let mut recon = vec![0.0; nt];
+        for (r, &ti) in target_idx.iter().enumerate() {
+            recon[r] = c.mean[ti] - z[r];
+        }
+        let d2 = dxd - dot(&ytd, &z);
+        let log_det_a = c.log_det + chol.log_det();
+        (log_gaussian(d2.max(0.0), log_det_a, ni), recon)
+    }
+
+    fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {
+        let mut log_liks = Vec::with_capacity(self.comps.len());
+        let mut recons = Vec::with_capacity(self.comps.len());
+        let mut sps = Vec::with_capacity(self.comps.len());
+        for c in &self.comps {
+            let (ll, rc) = DenseRef::conditional(c, known_vals, known_idx, target_idx);
+            log_liks.push(ll);
+            recons.push(rc);
+            sps.push(c.sp);
+        }
+        let post = softmax_ref(&log_liks, &sps);
+        let mut out = vec![0.0; target_idx.len()];
+        for (p, r) in post.iter().zip(recons.iter()) {
+            for (o, &v) in out.iter_mut().zip(r.iter()) {
+                *o += p * v;
+            }
+        }
+        out
+    }
+}
+
+// ---- assertions ------------------------------------------------------
+
+fn assert_matches_dense(dense: &DenseRef, m: &Figmn, probes: &[Vec<f64>], tag: &str) {
+    assert_eq!(dense.comps.len(), m.num_components(), "{tag}: K");
+    for (j, c) in dense.comps.iter().enumerate() {
+        assert_eq!(c.mean.as_slice(), m.component_mean(j), "{tag}: mean[{j}]");
+        assert_eq!(
+            c.lambda.as_slice(),
+            m.component_lambda(j).as_slice(),
+            "{tag}: lambda[{j}]"
+        );
+        assert!(
+            c.log_det.to_bits() == m.component_log_det(j).to_bits(),
+            "{tag}: log_det[{j}] {} vs {}",
+            c.log_det,
+            m.component_log_det(j)
+        );
+        let (sp, v) = m.component_stats(j);
+        assert!(c.sp.to_bits() == sp.to_bits(), "{tag}: sp[{j}]");
+        assert_eq!(c.v, v, "{tag}: v[{j}]");
+    }
+    let d = m.dim();
+    let known: Vec<usize> = (0..d - 1).collect();
+    let snap = m.snapshot();
+    for (i, x) in probes.iter().enumerate() {
+        assert!(
+            dense.log_density(x).to_bits() == m.log_density(x).to_bits(),
+            "{tag}: log_density[{i}]"
+        );
+        assert_eq!(dense.posteriors(x), m.posteriors(x), "{tag}: posteriors[{i}]");
+        assert_eq!(
+            dense.predict(&x[..d - 1], &known, &[d - 1]),
+            m.predict(&x[..d - 1], &known, &[d - 1]),
+            "{tag}: predict[{i}]"
+        );
+        // The arena-copied snapshot scores bit-identically too.
+        assert!(
+            snap.log_density(x).to_bits() == dense.log_density(x).to_bits(),
+            "{tag}: snapshot log_density[{i}]"
+        );
+        assert_eq!(snap.posteriors(x), dense.posteriors(x), "{tag}: snapshot posteriors[{i}]");
+    }
+}
+
+fn cluster_stream(d: usize, n_clusters: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..n_clusters).map(|_| (0..d).map(|_| rng.normal() * 12.0).collect()).collect();
+    (0..n)
+        .map(|i| centers[i % n_clusters].iter().map(|&c| c + rng.normal() * 0.7).collect())
+        .collect()
+}
+
+// ---- the property tests ---------------------------------------------
+
+/// Serial + thread counts {1, 2, 4}: the store-backed model replays the
+/// dense reference bit for bit on multi-cluster streams.
+#[test]
+fn packed_store_matches_dense_reference_bitwise() {
+    for (seed, d) in [(1u64, 3usize), (2, 5), (3, 7)] {
+        let cfg = GmmConfig::new(d).with_delta(0.4).with_beta(0.1).without_pruning();
+        let stds = vec![2.0; d];
+        let stream = cluster_stream(d, 3, 150, seed);
+        let probes = cluster_stream(d, 3, 8, seed + 100);
+
+        let mut dense = DenseRef::new(cfg.clone(), &stds);
+        let mut serial = Figmn::new(cfg.clone(), &stds);
+        let mut pooled: Vec<Figmn> = [1usize, 2, 4]
+            .iter()
+            .map(|&t| Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(t)))
+            .collect();
+        for (step, x) in stream.iter().enumerate() {
+            let want = dense.learn(x);
+            assert_eq!(want, serial.learn(x), "seed {seed}: outcome diverged at step {step}");
+            for m in pooled.iter_mut() {
+                assert_eq!(want, m.learn(x), "seed {seed}: pooled outcome at step {step}");
+            }
+        }
+        assert!(dense.comps.len() >= 2, "seed {seed}: stream too tame");
+        assert_matches_dense(&dense, &serial, &probes, &format!("seed {seed} serial"));
+        for (m, t) in pooled.iter().zip([1usize, 2, 4]) {
+            assert_matches_dense(&dense, m, &probes, &format!("seed {seed} T={t}"));
+        }
+    }
+}
+
+/// A high-K wide stream that crosses the engine's parallel-work gate
+/// (K·D² ≫ 2¹⁴), so the sharded arenas demonstrably run — and still
+/// replay the dense reference bit for bit.
+#[test]
+fn packed_store_matches_dense_reference_high_k() {
+    let d = 24;
+    let k_cap = 64;
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(k_cap)
+        .without_pruning();
+    let stds = vec![1.0; d];
+    let stream = cluster_stream(d, k_cap, 500, 17);
+    let probes: Vec<Vec<f64>> = stream[..6].to_vec();
+
+    let mut dense = DenseRef::new(cfg.clone(), &stds);
+    for x in &stream {
+        dense.learn(x);
+    }
+    assert_eq!(dense.comps.len(), k_cap, "gate never crossed");
+    for t in [1usize, 2, 4] {
+        let mut m = Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(t));
+        m.learn_batch(&stream);
+        assert_matches_dense(&dense, &m, &probes, &format!("high-K T={t}"));
+    }
+}
+
+/// The prune path (stable compaction + keep-strongest) is also
+/// layout-invariant: trajectories with aggressive pruning stay
+/// bit-identical, including component order after removals.
+#[test]
+fn packed_store_matches_dense_reference_with_pruning() {
+    for seed in [5u64, 6, 7] {
+        let d = 3;
+        let cfg = GmmConfig::new(d).with_delta(0.3).with_beta(0.2).with_pruning(3, 2.0);
+        let stds = vec![2.0; d];
+        let mut rng = Pcg64::seed(seed);
+        let mut dense = DenseRef::new(cfg.clone(), &stds);
+        let mut m = Figmn::new(cfg, &stds);
+        for step in 0..200 {
+            // Clustered points with periodic far outliers so spurious
+            // components appear and the prune sweep actually fires.
+            let x: Vec<f64> = if step % 9 == 8 {
+                (0..d).map(|_| rng.normal() * 50.0).collect()
+            } else {
+                (0..d).map(|i| (step % 2 * 10) as f64 + i as f64 + rng.normal() * 0.5).collect()
+            };
+            assert_eq!(dense.learn(&x), m.learn(&x), "seed {seed}: outcome at step {step}");
+            assert_eq!(
+                dense.comps.len(),
+                m.num_components(),
+                "seed {seed}: prune diverged at step {step}"
+            );
+        }
+        let probes = cluster_stream(d, 2, 6, seed + 50);
+        assert_matches_dense(&dense, &m, &probes, &format!("prune seed {seed}"));
+    }
+}
