@@ -129,6 +129,7 @@ fn phase2_full_pipeline() {
         beta: 0.05,
         stds: vec![4.0, 4.0],
         shards: 1,
+        kernel_mode: figmn::gmm::KernelMode::Strict,
     };
     assert_eq!(send(&mut reader, &mut writer, &create), Response::Ok);
 

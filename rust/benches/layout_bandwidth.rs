@@ -6,16 +6,28 @@
 //! test, alongside the bit-identity gate (packed sweeps must reproduce
 //! the dense trajectory exactly).
 //!
+//! Since the dual-mode kernels landed, the bench also records the
+//! **strict-vs-fast** series on the packed layout (D ∈ {16, 64, 128,
+//! 1024} in full mode): same sweeps, `KernelMode::Fast`'s blocked
+//! auto-vectorizable loops against `Strict`'s scalar reference, with a
+//! tolerance gate (fast trajectories must track strict ones) and a
+//! full-mode ≥1.5× throughput assertion at D ≥ 64. A reservation probe
+//! records that `ComponentStore` arenas stay at fixed base addresses
+//! across creates when `max_components` is set.
+//!
 //! Run: `cargo bench --bench layout_bandwidth`
 //! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench layout_bandwidth`
-//! Writes `BENCH_layout_bandwidth.json` with dense-vs-packed throughput
-//! and bytes-per-component on the `scaling_dim` grid D ∈ {16, 64, 128}.
+//! Writes `BENCH_layout_bandwidth.json` (dense-vs-packed rows, the
+//! strict-vs-fast series, and the reservation record) at the current
+//! directory — `scripts/bench_smoke.sh` runs it from the repo root.
 
 use figmn::bench_support::{quick_mode, write_bench_json, TablePrinter};
-use figmn::gmm::ComponentStore;
+use figmn::gmm::{ComponentStore, Figmn, GmmConfig, IncrementalMixture, KernelMode};
 use figmn::json::Json;
 use figmn::linalg::packed;
-use figmn::linalg::rank_one::{figmn_fused_update, figmn_fused_update_packed};
+use figmn::linalg::rank_one::{
+    figmn_fused_update, figmn_fused_update_packed, figmn_fused_update_packed_mode,
+};
 use figmn::linalg::Matrix;
 use figmn::rng::Pcg64;
 use std::time::Instant;
@@ -105,6 +117,56 @@ fn packed_sweep(
     }
 }
 
+/// The packed sweep with a selectable kernel mode (the strict arm is
+/// the same instruction sequence as [`packed_sweep`]).
+fn packed_sweep_mode(
+    arenas: &mut PackedArenas,
+    d: usize,
+    x: &[f64],
+    w: &mut [f64],
+    e: &mut [f64],
+    omega: f64,
+    mode: KernelMode,
+) {
+    let tri = packed::packed_len(d);
+    let k = arenas.log_dets.len();
+    for j in 0..k {
+        let mean = &arenas.means[j * d..(j + 1) * d];
+        for ((ei, &xi), &mi) in e.iter_mut().zip(x.iter()).zip(mean.iter()) {
+            *ei = xi - mi;
+        }
+        let mat = &mut arenas.mats[j * tri..(j + 1) * tri];
+        let q = packed::quad_form_with_mode(mat, d, e, w, mode);
+        if let Some(r) =
+            figmn_fused_update_packed_mode(mat, d, w, q, omega, arenas.log_dets[j], mode)
+        {
+            arenas.log_dets[j] = r.log_det;
+        }
+    }
+}
+
+/// Reservation probe: drive creates through the public model API and
+/// record whether the arena base address moved. With `max_components`
+/// reserved the base must stay put; without a bound it is allowed (and
+/// expected, for enough creates) to move.
+fn reservation_probe(reserve: bool) -> (bool, usize) {
+    let rows = 128;
+    let d = 4;
+    let mut cfg = GmmConfig::new(d).with_beta(0.5).with_delta(0.001).without_pruning();
+    if reserve {
+        cfg = cfg.with_max_components(rows);
+    }
+    let mut m = Figmn::new(cfg, &[1.0; 4]);
+    m.learn(&[0.0; 4]);
+    let base = m.store().mean(0).as_ptr();
+    for i in 1..rows {
+        // Every point is far from everything seen → a create per point.
+        m.learn(&[i as f64 * 1e4, 0.0, 0.0, 0.0]);
+    }
+    assert_eq!(m.num_components(), rows, "probe stream must create {rows} components");
+    (!std::ptr::eq(base, m.store().mean(0).as_ptr()), m.store().capacity_rows())
+}
+
 fn main() {
     let quick = quick_mode();
     let dims: &[usize] = &[16, 64, 128];
@@ -180,14 +242,121 @@ fn main() {
         ]));
     }
 
+    // ---- strict vs fast kernel modes on the packed layout -----------
+    let mode_dims: &[usize] = if quick { &[16, 64] } else { &[16, 64, 128, 1024] };
+    println!("\nstrict vs fast packed kernels{}", if quick { " [quick]" } else { "" });
+    let t2 = TablePrinter::new(
+        &["D", "K", "strict pts/s", "fast pts/s", "speedup"],
+        &[6, 5, 14, 14, 9],
+    );
+    let mut mode_rows: Vec<Json> = Vec::new();
+    for &d in mode_dims {
+        // Shrink K at D=1024 so the full-mode arenas stay ~130 MB.
+        let km = if quick || d >= 512 { 16 } else { 128 };
+        let points = if quick { 200_000 / (d * d) + 20 } else { 4_000_000 / (d * d) + 50 };
+        let mut rng = Pcg64::seed(23);
+        let xs: Vec<Vec<f64>> =
+            (0..points).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+        let omega = 0.01;
+        let mut w = vec![0.0; d];
+        let mut e = vec![0.0; d];
+
+        let (_, mut strict_arenas) = build(d, km, 13);
+        let mut fast_arenas = PackedArenas {
+            means: strict_arenas.means.clone(),
+            mats: strict_arenas.mats.clone(),
+            log_dets: strict_arenas.log_dets.clone(),
+        };
+
+        let t0 = Instant::now();
+        for x in &xs {
+            packed_sweep_mode(&mut strict_arenas, d, x, &mut w, &mut e, omega, KernelMode::Strict);
+        }
+        let strict_pts = points as f64 / t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for x in &xs {
+            packed_sweep_mode(&mut fast_arenas, d, x, &mut w, &mut e, omega, KernelMode::Fast);
+        }
+        let fast_pts = points as f64 / t0.elapsed().as_secs_f64();
+        let speedup = fast_pts / strict_pts;
+
+        // Tolerance gate: after identical update streams, the fast
+        // trajectory must track the strict one (same math, blocked
+        // summation order).
+        let tri = packed::packed_len(d);
+        for j in 0..km {
+            let s_row = &strict_arenas.mats[j * tri..(j + 1) * tri];
+            let f_row = &fast_arenas.mats[j * tri..(j + 1) * tri];
+            let scale = s_row.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for (i, (a, b)) in s_row.iter().zip(f_row.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6 * scale,
+                    "D={d}: fast trajectory diverged at component {j} entry {i} ({a} vs {b})"
+                );
+            }
+            let (ls, lf) = (strict_arenas.log_dets[j], fast_arenas.log_dets[j]);
+            assert!(
+                (ls - lf).abs() <= 1e-6 * (1.0 + ls.abs()),
+                "D={d}: log-det diverged at component {j} ({ls} vs {lf})"
+            );
+        }
+        if !quick && d >= 64 {
+            assert!(
+                speedup >= 1.5,
+                "D={d}: fast kernels must be ≥1.5× strict, got {speedup:.2}×"
+            );
+        }
+
+        t2.row(&[
+            d.to_string(),
+            km.to_string(),
+            format!("{strict_pts:.3e}"),
+            format!("{fast_pts:.3e}"),
+            format!("{speedup:6.2}×"),
+        ]);
+        mode_rows.push(Json::obj(vec![
+            ("d", Json::from(d)),
+            ("k", Json::from(km)),
+            ("points", Json::from(points)),
+            ("strict_pts_per_s", strict_pts.into()),
+            ("fast_pts_per_s", fast_pts.into()),
+            ("fast_speedup", speedup.into()),
+        ]));
+    }
+
+    // ---- ComponentStore reservation record --------------------------
+    let (reserved_moved, reserved_cap) = reservation_probe(true);
+    let (unreserved_moved, unreserved_cap) = reservation_probe(false);
+    assert!(
+        !reserved_moved,
+        "reserved arenas must keep stable base addresses across creates"
+    );
+    println!(
+        "\nreservation: reserved base moved = {reserved_moved} (cap {reserved_cap} rows), \
+         unreserved base moved = {unreserved_moved} (cap {unreserved_cap} rows)"
+    );
+
     let payload = Json::obj(vec![
         ("bench", "layout_bandwidth".into()),
         ("quick", quick.into()),
         ("rows", Json::Arr(rows)),
+        ("strict_vs_fast", Json::Arr(mode_rows)),
+        (
+            "reservation",
+            Json::obj(vec![
+                ("reserved_base_moved", reserved_moved.into()),
+                ("reserved_capacity_rows", reserved_cap.into()),
+                ("unreserved_base_moved", unreserved_moved.into()),
+                ("unreserved_capacity_rows", unreserved_cap.into()),
+            ]),
+        ),
     ]);
     match write_bench_json("layout_bandwidth", &payload) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }
-    println!("layout_bandwidth OK — packed trajectories bit-identical to dense");
+    println!(
+        "layout_bandwidth OK — packed ≡ dense bitwise; fast kernels within tolerance of strict"
+    );
 }

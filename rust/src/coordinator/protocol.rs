@@ -4,6 +4,7 @@
 
 use super::CoordError;
 use crate::json::{parse, Json};
+use crate::linalg::KernelMode;
 
 /// A client request.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,6 +20,10 @@ pub enum Request {
         stds: Vec<f64>,
         /// Number of worker shards (ensemble size), ≥ 1.
         shards: usize,
+        /// Packed-kernel implementation for every shard's model
+        /// (`"strict"` default / `"fast"`; see
+        /// [`crate::linalg::KernelMode`]).
+        kernel_mode: KernelMode,
     },
     /// Present one labeled example.
     Learn { model: String, features: Vec<f64>, label: usize },
@@ -76,18 +81,26 @@ pub enum Response {
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::CreateModel { model, n_features, n_classes, delta, beta, stds, shards } => {
-                Json::obj(vec![
-                    ("op", "create_model".into()),
-                    ("model", model.as_str().into()),
-                    ("n_features", (*n_features).into()),
-                    ("n_classes", (*n_classes).into()),
-                    ("delta", (*delta).into()),
-                    ("beta", (*beta).into()),
-                    ("stds", Json::num_array(stds)),
-                    ("shards", (*shards).into()),
-                ])
-            }
+            Request::CreateModel {
+                model,
+                n_features,
+                n_classes,
+                delta,
+                beta,
+                stds,
+                shards,
+                kernel_mode,
+            } => Json::obj(vec![
+                ("op", "create_model".into()),
+                ("model", model.as_str().into()),
+                ("n_features", (*n_features).into()),
+                ("n_classes", (*n_classes).into()),
+                ("delta", (*delta).into()),
+                ("beta", (*beta).into()),
+                ("stds", Json::num_array(stds)),
+                ("shards", (*shards).into()),
+                ("kernel_mode", kernel_mode.as_str().into()),
+            ]),
             Request::Learn { model, features, label } => Json::obj(vec![
                 ("op", "learn".into()),
                 ("model", model.as_str().into()),
@@ -179,6 +192,15 @@ impl Request {
                     doc.get(k).and_then(Json::as_f64).unwrap_or(dflt)
                 };
                 let n_features = get_n("n_features")?;
+                // Optional kernel mode: absent → Strict; present but
+                // unknown → protocol error (don't silently train in
+                // the wrong mode).
+                let kernel_mode = match doc.get("kernel_mode") {
+                    None => KernelMode::Strict,
+                    Some(v) => v.as_str().and_then(KernelMode::parse).ok_or_else(|| {
+                        CoordError::Protocol("bad kernel_mode (want \"strict\"/\"fast\")".into())
+                    })?,
+                };
                 Ok(Request::CreateModel {
                     model: model()?,
                     n_features,
@@ -190,6 +212,7 @@ impl Request {
                         .and_then(Json::to_f64_vec)
                         .unwrap_or_else(|| vec![1.0; n_features]),
                     shards: doc.get("shards").and_then(Json::as_usize).unwrap_or(1),
+                    kernel_mode,
                 })
             }
             "learn" => Ok(Request::Learn {
@@ -334,6 +357,7 @@ mod tests {
                 beta: 0.01,
                 stds: vec![1.0, 2.0],
                 shards: 2,
+                kernel_mode: KernelMode::Fast,
             },
             Request::Learn { model: "m".into(), features: vec![0.5, -1.0], label: 2 },
             Request::Predict { model: "m".into(), features: vec![0.0, 1.0] },
@@ -395,13 +419,32 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::CreateModel { stds, shards, delta, .. } => {
+            Request::CreateModel { stds, shards, delta, kernel_mode, .. } => {
                 assert_eq!(stds, vec![1.0; 3]);
                 assert_eq!(shards, 1);
                 assert!(delta > 0.0);
+                assert_eq!(kernel_mode, KernelMode::Strict);
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn create_model_kernel_mode_parses_and_rejects_unknown() {
+        let r = Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"kernel_mode":"fast"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::CreateModel { kernel_mode, .. } => {
+                assert_eq!(kernel_mode, KernelMode::Fast)
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"kernel_mode":"warp"}"#,
+        )
+        .is_err());
     }
 
     #[test]

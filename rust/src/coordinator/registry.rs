@@ -72,6 +72,14 @@ impl ModelSpec {
         self
     }
 
+    /// Select the packed-kernel implementation for every shard's model
+    /// (carried in the spec's `GmmConfig`; see
+    /// [`crate::linalg::KernelMode`]).
+    pub fn with_kernel_mode(mut self, mode: crate::linalg::KernelMode) -> Self {
+        self.gmm = self.gmm.with_kernel_mode(mode);
+        self
+    }
+
     /// Attach a component-sharded engine to every shard of this model.
     /// Each shard gets its own pool; `EngineConfig::auto()` (threads=0)
     /// is resolved at create time as `cores / shards` so a sharded model
@@ -367,6 +375,28 @@ mod tests {
         }
         assert_eq!(router.predict(&[0.0, 0.0]).unwrap().len(), 3);
         reg.drop_model("e").unwrap();
+    }
+
+    #[test]
+    fn kernel_mode_spec_propagates_and_serves() {
+        use crate::linalg::KernelMode;
+        let reg = registry();
+        reg.create(blob_spec("f").with_kernel_mode(KernelMode::Fast)).unwrap();
+        let router = reg.router("f").unwrap();
+        let mut rng = Pcg64::seed(3);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..60 {
+            let c = i % 3;
+            router
+                .learn(
+                    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7],
+                    c,
+                )
+                .unwrap();
+        }
+        assert_eq!(router.predict(&[7.0, 7.0]).unwrap().len(), 3);
+        assert_eq!(reg.spec("f").unwrap().gmm.kernel_mode, KernelMode::Fast);
+        reg.drop_model("f").unwrap();
     }
 
     #[test]

@@ -194,8 +194,20 @@ fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Re
     match req {
         Request::Ping => Ok(Response::Pong),
         Request::Shutdown => Ok(Response::Ok),
-        Request::CreateModel { model, n_features, n_classes, delta, beta, stds, shards } => {
-            let gmm = GmmConfig::new(1).with_delta(delta).with_beta(beta);
+        Request::CreateModel {
+            model,
+            n_features,
+            n_classes,
+            delta,
+            beta,
+            stds,
+            shards,
+            kernel_mode,
+        } => {
+            let gmm = GmmConfig::new(1)
+                .with_delta(delta)
+                .with_beta(beta)
+                .with_kernel_mode(kernel_mode);
             let mut spec = ModelSpec::new(&model, n_features, n_classes)
                 .with_gmm(gmm)
                 .with_stds(stds)
@@ -349,6 +361,7 @@ mod tests {
             beta: 0.05,
             stds: vec![3.0, 3.0],
             shards: 1,
+            kernel_mode: crate::linalg::KernelMode::Strict,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
 
@@ -410,6 +423,7 @@ mod tests {
             beta: 0.05,
             stds: vec![3.0, 3.0],
             shards: 1,
+            kernel_mode: crate::linalg::KernelMode::Fast,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
         let mut rng = Pcg64::seed(4);

@@ -46,6 +46,13 @@ impl Scratch {
             self.tmp.resize(d, 0.0);
         }
     }
+
+    /// Both buffers, sized to `d`, as disjoint mutable slices — for
+    /// call sites that need the error vector and a kernel scratch in
+    /// the same expression (call [`Scratch::ensure`] first).
+    pub fn pair(&mut self, d: usize) -> (&mut [f64], &mut [f64]) {
+        (&mut self.e[..d], &mut self.tmp[..d])
+    }
 }
 
 /// The task signature: `(worker_index, component_range, scratch)`.

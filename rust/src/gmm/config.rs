@@ -1,5 +1,6 @@
 //! Shared configuration for both IGMN variants.
 
+use crate::linalg::KernelMode;
 use crate::stats::chi2_quantile;
 
 /// Hyper-parameters of the (F)IGMN (paper §2).
@@ -28,6 +29,14 @@ pub struct GmmConfig {
     /// Whether pruning (§2.3) runs at all (the paper's timing experiments
     /// effectively disable it via β = 0).
     pub prune: bool,
+    /// Which implementation the hot packed kernels run in:
+    /// [`KernelMode::Strict`] (default; bit-identical scalar reference)
+    /// or [`KernelMode::Fast`] (blocked SIMD-friendly loops,
+    /// tolerance-equivalent — see [`KernelMode`] for the contract).
+    /// Affects the precision path's distance/score sweeps and fused
+    /// update; conditional inference (`predict`) and the covariance
+    /// baseline always run the strict kernels.
+    pub kernel_mode: KernelMode,
     chi2_threshold: f64,
 }
 
@@ -44,6 +53,7 @@ impl GmmConfig {
             sp_min: 3.0,
             max_components: 0,
             prune: true,
+            kernel_mode: KernelMode::Strict,
             chi2_threshold: 0.0,
         };
         cfg.recompute_threshold();
@@ -77,6 +87,13 @@ impl GmmConfig {
 
     pub fn with_max_components(mut self, k: usize) -> Self {
         self.max_components = k;
+        self
+    }
+
+    /// Select the packed-kernel implementation (see
+    /// [`GmmConfig::kernel_mode`]).
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.kernel_mode = mode;
         self
     }
 
@@ -122,6 +139,19 @@ mod tests {
     fn threshold_matches_chi2_quantile() {
         let cfg = GmmConfig::new(9).with_beta(0.1);
         assert!((cfg.chi2_threshold() - chi2_quantile(9.0, 0.9)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn kernel_mode_defaults_strict_and_round_trips() {
+        let cfg = GmmConfig::new(4);
+        assert_eq!(cfg.kernel_mode, KernelMode::Strict);
+        let cfg = cfg.with_kernel_mode(KernelMode::Fast);
+        assert_eq!(cfg.kernel_mode, KernelMode::Fast);
+        assert_eq!(KernelMode::parse("fast"), Some(KernelMode::Fast));
+        assert_eq!(KernelMode::parse("strict"), Some(KernelMode::Strict));
+        assert_eq!(KernelMode::parse("turbo"), None);
+        assert_eq!(KernelMode::Fast.as_str(), "fast");
+        assert_eq!(KernelMode::default(), KernelMode::Strict);
     }
 
     #[test]

@@ -12,10 +12,19 @@
 //! and `log|C|`/`sp`/`v` in parallel scalar arrays. The two hot kernels
 //! ([`packed::quad_form_with`] and
 //! [`crate::linalg::rank_one::figmn_fused_update_packed`]) sweep packed
-//! rows — half the bytes of the dense layout — while performing the
-//! same floating-point operations in the same order, so results are
-//! bit-identical to the dense formulation (see
-//! `tests/layout_equivalence.rs`).
+//! rows — half the bytes of the dense layout — while, in the default
+//! [`KernelMode::Strict`], performing the same floating-point
+//! operations in the same order, so results are bit-identical to the
+//! dense formulation (see `tests/layout_equivalence.rs`). A model
+//! configured with [`KernelMode::Fast`]
+//! (`GmmConfig::with_kernel_mode`) runs the blocked SIMD-friendly
+//! variants of those kernels on its distance, scoring, and update
+//! sweeps instead: tolerance-equivalent to `Strict` (see
+//! [`KernelMode`]), still bit-deterministic across thread counts.
+//! Conditional inference (`predict`/`predict_batch`) always runs the
+//! strict kernels — its Cholesky-based Schur complement has no blocked
+//! variant, and prediction traffic is not the per-point bottleneck the
+//! paper attacks.
 //!
 //! Both passes are component-local, so when an engine is attached
 //! ([`Figmn::with_engine`]) the K components are sharded across the
@@ -33,8 +42,8 @@ use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, Lea
 use crate::engine::{
     logsumexp_tree, worth_sharding, worth_sharding_batch, EngineConfig, SharedMut, WorkerPool,
 };
-use crate::linalg::rank_one::figmn_fused_update_packed;
-use crate::linalg::{packed, sub_into, Matrix};
+use crate::linalg::rank_one::figmn_fused_update_packed_mode;
+use crate::linalg::{packed, sub_into, KernelMode, Matrix};
 
 /// Cap on live per-(point, component) slots in the batch scoring paths:
 /// batches are processed in chunks of `BATCH_CHUNK_SLOTS / K` points so
@@ -69,10 +78,25 @@ impl Figmn {
     pub fn new(cfg: GmmConfig, dataset_stds: &[f64]) -> Self {
         let sigma_ini = cfg.sigma_ini(dataset_stds);
         let d = cfg.dim;
+        // Reserve the arenas up front when the component count is
+        // bounded: create never reallocates (or moves) the hot rows
+        // mid-stream, and the engine's raw row views stay at stable
+        // bases for the model's whole life. The eager reservation is
+        // budget-clamped (see `bounded_reservation_rows`) so a generous
+        // cap at large D doesn't commit gigabytes for components that
+        // may never exist.
+        let store = if cfg.max_components > 0 {
+            ComponentStore::with_capacity(
+                d,
+                ComponentStore::bounded_reservation_rows(d, cfg.max_components),
+            )
+        } else {
+            ComponentStore::new(d)
+        };
         Figmn {
             cfg,
             sigma_ini,
-            store: ComponentStore::new(d),
+            store,
             points: 0,
             engine: None,
             buf_e: vec![0.0; d],
@@ -104,11 +128,17 @@ impl Figmn {
     pub(crate) fn from_parts(
         cfg: GmmConfig,
         sigma_ini: Vec<f64>,
-        store: ComponentStore,
+        mut store: ComponentStore,
         points: u64,
     ) -> Self {
         let d = cfg.dim;
         assert_eq!(store.dim(), d, "from_parts: store dim mismatch");
+        let target = ComponentStore::bounded_reservation_rows(d, cfg.max_components);
+        if target > store.len() {
+            // Same (budget-clamped) reservation as `new`: restored
+            // models get stable arena bases for the remaining headroom.
+            store.reserve(target - store.len());
+        }
         Figmn {
             cfg,
             sigma_ini,
@@ -225,6 +255,7 @@ impl Figmn {
     fn per_component_loglik(&self, x: &[f64]) -> Vec<f64> {
         let k = self.store.len();
         let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
         let mut ll = vec![0.0; k];
         match &self.engine {
             Some(pool) if worth_sharding(k, d, pool.threads()) => {
@@ -233,12 +264,12 @@ impl Figmn {
                 pool.run(k, &move |_, range, scratch| {
                     scratch.ensure(d);
                     for j in range {
-                        let e = &mut scratch.e[..d];
+                        let (e, tmp) = scratch.pair(d);
                         sub_into(x, store.mean(j), e);
                         // Safety: slot j is owned by exactly one shard.
                         unsafe {
                             *out.at(j) = log_gaussian(
-                                packed::quad_form(store.mat(j), d, e),
+                                packed::quad_form_scratch(store.mat(j), d, e, tmp, mode),
                                 store.log_det(j),
                                 d,
                             );
@@ -248,10 +279,12 @@ impl Figmn {
             }
             _ => {
                 let mut e = vec![0.0; d];
+                // Kernel scratch is only read by the fast path.
+                let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
                 for (j, slot) in ll.iter_mut().enumerate() {
                     sub_into(x, self.store.mean(j), &mut e);
                     *slot = log_gaussian(
-                        packed::quad_form(self.store.mat(j), d, &e),
+                        packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
                         self.store.log_det(j),
                         d,
                     );
@@ -265,6 +298,7 @@ impl Figmn {
 /// Phase A of one learn step: squared Mahalanobis distances to every
 /// component (Eq. 22), saving each component's `w = Λ·e` for the fused
 /// update. Free function so the caller can split `Figmn`'s field borrows.
+#[allow(clippy::too_many_arguments)]
 fn distance_pass(
     store: &ComponentStore,
     x: &[f64],
@@ -272,6 +306,7 @@ fn distance_pass(
     buf_d2: &mut [f64],
     buf_ws: &mut [f64],
     buf_e: &mut [f64],
+    mode: KernelMode,
     pool: Option<&WorkerPool>,
 ) {
     let k = store.len();
@@ -286,8 +321,13 @@ fn distance_pass(
                     sub_into(x, store.mean(j), e);
                     // Safety: slot j / row j are owned by this shard only.
                     unsafe {
-                        *d2.at(j) =
-                            packed::quad_form_with(store.mat(j), d, e, ws.slice(j * d, d));
+                        *d2.at(j) = packed::quad_form_with_mode(
+                            store.mat(j),
+                            d,
+                            e,
+                            ws.slice(j * d, d),
+                            mode,
+                        );
                     }
                 }
             });
@@ -296,11 +336,12 @@ fn distance_pass(
             let e = &mut buf_e[..d];
             for (j, slot) in buf_d2.iter_mut().enumerate() {
                 sub_into(x, store.mean(j), e);
-                *slot = packed::quad_form_with(
+                *slot = packed::quad_form_with_mode(
                     store.mat(j),
                     d,
                     e,
                     &mut buf_ws[j * d..(j + 1) * d],
+                    mode,
                 );
             }
         }
@@ -321,6 +362,7 @@ fn update_pass(
     buf_ws: &[f64],
     buf_e: &mut [f64],
     sigma_ini: &[f64],
+    mode: KernelMode,
     pool: Option<&WorkerPool>,
 ) {
     let k = store.len();
@@ -344,6 +386,7 @@ fn update_pass(
                         buf_d2[j],
                         &buf_ws[j * d..(j + 1) * d],
                         sigma_ini,
+                        mode,
                         &mut scratch.e[..d],
                     );
                 }
@@ -364,6 +407,7 @@ fn update_pass(
                     buf_d2[j],
                     &buf_ws[j * d..(j + 1) * d],
                     sigma_ini,
+                    mode,
                     &mut buf_e[..d],
                 );
             }
@@ -386,6 +430,7 @@ fn update_component(
     d2j: f64,
     w: &[f64],
     sigma_ini: &[f64],
+    mode: KernelMode,
     e: &mut [f64],
 ) {
     *v += 1; // Eq. 4
@@ -402,7 +447,7 @@ fn update_component(
     // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean Eq. 11 —
     // DESIGN.md §Deviations; single-pass rewrite — EXPERIMENTS.md §Perf
     // L3-1), reusing w/q from the distance pass, on the packed row.
-    match figmn_fused_update_packed(lambda, d, w, d2j, omega, *log_det) {
+    match figmn_fused_update_packed_mode(lambda, d, w, d2j, omega, *log_det, mode) {
         Some(r) => *log_det = r.log_det,
         None => {
             // Float underflow destroyed positive-definiteness (reachable
@@ -435,11 +480,12 @@ impl IncrementalMixture for Figmn {
         }
         let k = self.store.len();
         let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
         self.buf_d2.resize(k, 0.0);
         self.buf_ws.resize(k * d, 0.0);
         {
             let Figmn { store, buf_d2, buf_ws, buf_e, engine, .. } = self;
-            distance_pass(store, x, d, buf_d2, buf_ws, buf_e, engine.as_ref());
+            distance_pass(store, x, d, buf_d2, buf_ws, buf_e, mode, engine.as_ref());
         }
         let accept = self
             .buf_d2
@@ -459,7 +505,18 @@ impl IncrementalMixture for Figmn {
             let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
             {
                 let Figmn { store, sigma_ini, buf_d2, buf_ws, buf_e, engine, .. } = self;
-                update_pass(store, x, d, &post, buf_d2, buf_ws, buf_e, sigma_ini, engine.as_ref());
+                update_pass(
+                    store,
+                    x,
+                    d,
+                    &post,
+                    buf_d2,
+                    buf_ws,
+                    buf_e,
+                    sigma_ini,
+                    mode,
+                    engine.as_ref(),
+                );
             }
             self.prune();
             LearnOutcome::Updated
@@ -573,6 +630,7 @@ impl IncrementalMixture for Figmn {
         assert!(!self.store.is_empty(), "score_batch on empty model");
         let k = self.store.len();
         let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
         let total_sp = self.store.total_sp();
         let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
         // terms[bi*k + j] = ln p(x_bi|j) + ln p(j), reused per chunk.
@@ -593,13 +651,13 @@ impl IncrementalMixture for Figmn {
                     for j in range {
                         let prior_ln = (store.sp(j) / total_sp).ln();
                         for (bi, x) in xs_chunk.iter().enumerate() {
-                            let e = &mut scratch.e[..d];
+                            let (e, tmp) = scratch.pair(d);
                             sub_into(x, store.mean(j), e);
                             // Safety: column j is owned by exactly one
                             // shard.
                             unsafe {
                                 *outp.at(bi * k + j) = log_gaussian(
-                                    packed::quad_form(store.mat(j), d, e),
+                                    packed::quad_form_scratch(store.mat(j), d, e, tmp, mode),
                                     store.log_det(j),
                                     d,
                                 ) + prior_ln;
@@ -609,12 +667,13 @@ impl IncrementalMixture for Figmn {
                 });
             } else {
                 let mut e = vec![0.0; d];
+                let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
                 for j in 0..k {
                     let prior_ln = (self.store.sp(j) / total_sp).ln();
                     for (bi, x) in xs_chunk.iter().enumerate() {
                         sub_into(x, self.store.mean(j), &mut e);
                         terms[bi * k + j] = log_gaussian(
-                            packed::quad_form(self.store.mat(j), d, &e),
+                            packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
                             self.store.log_det(j),
                             d,
                         ) + prior_ln;
@@ -934,6 +993,73 @@ mod tests {
         pooled.set_engine(None);
         assert_eq!(pooled.engine_threads(), 1);
         assert_eq!(serial.learn(&[5.0, 5.0]), pooled.learn(&[5.0, 5.0]));
+    }
+
+    #[test]
+    fn fast_mode_tracks_strict_within_tolerance() {
+        let stds = [5.0, 5.0];
+        let strict_cfg = GmmConfig::new(2).with_delta(0.3).with_beta(0.1).without_pruning();
+        let fast_cfg = strict_cfg.clone().with_kernel_mode(KernelMode::Fast);
+        let mut strict = Figmn::new(strict_cfg, &stds);
+        let mut fast = Figmn::new(fast_cfg, &stds);
+        for p in two_cluster_data() {
+            assert_eq!(strict.learn(&p), fast.learn(&p));
+        }
+        assert_eq!(strict.num_components(), fast.num_components());
+        for x in [[0.0, 0.0], [10.0, 10.0], [5.0, 5.0]] {
+            let a = strict.log_density(&x);
+            let b = fast.log_density(&x);
+            assert!(
+                (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                "log_density diverged: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_mode_is_bit_deterministic_across_thread_counts() {
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.3)
+            .with_beta(0.1)
+            .with_kernel_mode(KernelMode::Fast)
+            .without_pruning();
+        let stds = [5.0, 5.0];
+        let mut serial = Figmn::new(cfg.clone(), &stds);
+        let mut pooled = Figmn::new(cfg, &stds).with_engine(EngineConfig::new(2));
+        for p in two_cluster_data() {
+            assert_eq!(serial.learn(&p), pooled.learn(&p));
+        }
+        assert_eq!(serial.num_components(), pooled.num_components());
+        for j in 0..serial.num_components() {
+            assert_eq!(serial.component_mean(j), pooled.component_mean(j));
+            assert_eq!(serial.store().mat(j), pooled.store().mat(j));
+            assert_eq!(serial.component_log_det(j), pooled.component_log_det(j));
+        }
+        let probe = [1.0, -1.0];
+        assert_eq!(serial.log_density(&probe), pooled.log_density(&probe));
+        assert_eq!(serial.posteriors(&probe), pooled.posteriors(&probe));
+    }
+
+    #[test]
+    fn max_components_reserves_the_arenas() {
+        let cap = 16;
+        let cfg = GmmConfig::new(2)
+            .with_beta(0.5)
+            .with_delta(0.001)
+            .with_max_components(cap)
+            .without_pruning();
+        let mut m = Figmn::new(cfg, &[1.0, 1.0]);
+        assert!(m.store().capacity_rows() >= cap);
+        m.learn(&[0.0, 0.0]);
+        let base = m.store().mean(0).as_ptr();
+        for i in 1..cap * 2 {
+            m.learn(&[i as f64 * 100.0, 0.0]); // every point is novel
+        }
+        assert_eq!(m.num_components(), cap);
+        assert!(
+            std::ptr::eq(base, m.store().mean(0).as_ptr()),
+            "reserved arena bases must be stable across creates"
+        );
     }
 
     #[test]

@@ -43,10 +43,22 @@ impl Igmn {
     pub fn new(cfg: GmmConfig, dataset_stds: &[f64]) -> Self {
         let sigma_ini = cfg.sigma_ini(dataset_stds);
         let d = cfg.dim;
+        // Covariance-variant store (the log_det lane is unused here, so
+        // byte accounting skips it), reserved up front when the
+        // component count is bounded — same budget-clamped
+        // no-mid-stream-reallocation contract as the fast path.
+        let store = if cfg.max_components > 0 {
+            ComponentStore::with_capacity_covariance(
+                d,
+                ComponentStore::bounded_reservation_rows(d, cfg.max_components),
+            )
+        } else {
+            ComponentStore::new_covariance(d)
+        };
         Igmn {
             cfg,
             sigma_ini,
-            store: ComponentStore::new(d),
+            store,
             points: 0,
             engine: None,
             buf_e: vec![0.0; d],
@@ -56,6 +68,35 @@ impl Igmn {
 
     pub fn config(&self) -> &GmmConfig {
         &self.cfg
+    }
+
+    /// Per-dimension `σ_ini` (Eq. 13) this model was built with.
+    pub fn sigma_ini(&self) -> &[f64] {
+        &self.sigma_ini
+    }
+
+    /// Reassemble a model from restored state (checkpoint loading).
+    pub(crate) fn from_parts(
+        cfg: GmmConfig,
+        sigma_ini: Vec<f64>,
+        mut store: ComponentStore,
+        points: u64,
+    ) -> Self {
+        let d = cfg.dim;
+        assert_eq!(store.dim(), d, "from_parts: store dim mismatch");
+        let target = ComponentStore::bounded_reservation_rows(d, cfg.max_components);
+        if target > store.len() {
+            store.reserve(target - store.len());
+        }
+        Igmn {
+            cfg,
+            sigma_ini,
+            store,
+            points,
+            engine: None,
+            buf_e: vec![0.0; d],
+            buf_dmu: vec![0.0; d],
+        }
     }
 
     /// Attach a component-sharded execution engine (bit-identical
@@ -536,6 +577,23 @@ mod tests {
         let probe: Vec<f64> = (0..d).map(|_| rng.normal() * 6.0).collect();
         assert_eq!(serial.log_density(&probe), pooled.log_density(&probe));
         assert_eq!(serial.posteriors(&probe), pooled.posteriors(&probe));
+    }
+
+    #[test]
+    fn byte_accounting_skips_unused_log_det_lane() {
+        let cfg = GmmConfig::new(3).with_beta(0.0).with_delta(1.0).without_pruning();
+        let mut m = Igmn::new(cfg, &[1.0, 1.0, 1.0]);
+        m.learn(&[0.0, 0.0, 0.0]);
+        // D=3: 3 mean + 6 packed + sp floats + u64 age — no log_det,
+        // which the covariance baseline never tracks.
+        assert_eq!(m.bytes_per_component(), (3 + 6 + 1) * 8 + 8);
+        assert_eq!(m.model_bytes(), m.num_components() * m.bytes_per_component());
+        // One f64 per component less than the precision path reports.
+        let fast = Figmn::new(
+            GmmConfig::new(3).with_beta(0.0).with_delta(1.0).without_pruning(),
+            &[1.0, 1.0, 1.0],
+        );
+        assert_eq!(m.bytes_per_component() + 8, fast.bytes_per_component());
     }
 
     #[test]

@@ -39,7 +39,30 @@
 //! Component lifecycle is arena row manipulation: create appends a row,
 //! the §2.3 prune compacts rows in place (order-preserving, so the
 //! deterministic tree merges see the same component order regardless of
-//! layout), and snapshot publishing bulk-copies the arenas.
+//! layout), and snapshot publishing bulk-copies the arenas. The arenas
+//! are **capacity-reserved** from `GmmConfig::max_components` (and grow
+//! geometrically in lock-step otherwise), so a mid-stream create never
+//! moves the hot rows under the engine's raw row views.
+//!
+//! ## Kernel modes: when bit-identity holds
+//!
+//! Each model carries a [`KernelMode`] (`GmmConfig::kernel_mode`):
+//!
+//! - **`Strict`** (default): every density, posterior, prediction and
+//!   learn trajectory is bit-identical to the dense formulation, across
+//!   layouts, thread counts, checkpoint round-trips, and snapshots.
+//! - **`Fast`**: the precision path's distance/score sweeps and fused
+//!   update run blocked SIMD-friendly kernels. Results are
+//!   tolerance-equivalent to `Strict` (relative ~1e-12 on
+//!   log-densities; `tests/kernel_mode_equivalence.rs`) and still
+//!   bit-deterministic across thread counts *within* the mode.
+//!   Conditional inference (`predict`) and the `Igmn` baseline always
+//!   run strict kernels.
+//!
+//! The mode round-trips through checkpoints (v2 `kernel_mode` field;
+//! older readers that ignore the field still load the document and
+//! score within tolerance) and is selectable per model over the
+//! coordinator protocol and the CLI.
 //!
 //! [`SupervisedGmm`] layers the paper's "any element predicts any other
 //! element" autoassociative trick into a conventional classifier
@@ -60,8 +83,13 @@ pub use figmn::Figmn;
 pub use igmn::Igmn;
 pub use serialize::{CHECKPOINT_MIN_VERSION, CHECKPOINT_VERSION};
 pub use snapshot::ModelSnapshot;
-pub use store::ComponentStore;
+pub use store::{ComponentStore, MatKind};
 pub use supervised::SupervisedGmm;
+
+// The per-model kernel-mode selector lives in `linalg` (it gates the
+// packed kernels) but is configured here (`GmmConfig::kernel_mode`), so
+// re-export it where model builders look for it.
+pub use crate::linalg::KernelMode;
 
 /// Outcome of presenting one data point to the model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -9,24 +9,48 @@
 //!
 //! - **v2 (current)** — components carry `lambda_packed`: the packed
 //!   upper-triangular precision (`D·(D+1)/2` floats), written straight
-//!   from the [`super::ComponentStore`] arenas.
+//!   from the [`super::ComponentStore`] arenas. Since the dual-mode
+//!   kernels landed, v2 documents also carry an optional top-level
+//!   `kernel_mode` (`"strict"`/`"fast"`): it round-trips the model's
+//!   configured [`KernelMode`], and readers that predate (or ignore)
+//!   the field still load the document — the arenas are mode-agnostic
+//!   state, so a `Fast`-trained checkpoint loads everywhere and scores
+//!   within the fast-mode tolerance contract on strict readers.
 //! - **v1 (read-only compat)** — the pre-store per-component format:
 //!   `lambda` as a dense row-major `D×D` matrix. The loader packs its
 //!   upper triangle; the update rules kept v1 matrices exactly
 //!   symmetric, so the packed values equal the dense ones and a v1
 //!   checkpoint scores **bit-identically** after loading (see
 //!   `tests/checkpoint_compat.rs`).
+//!
+//! The covariance baseline ([`Igmn`]) checkpoints with the same
+//! versioning: v2 writes `cov_packed` rows (no `log_det` — the baseline
+//! derives determinants from each factorization), v1 read-compat
+//! accepts the dense `cov` per-component form under `"kind":"igmn"`.
 
 use super::store::ComponentStore;
-use super::{Figmn, GmmConfig, IncrementalMixture};
+use super::{Figmn, GmmConfig, Igmn, IncrementalMixture};
 use crate::json::Json;
-use crate::linalg::packed;
+use crate::linalg::{packed, KernelMode};
 
 /// Current checkpoint format version.
 pub const CHECKPOINT_VERSION: f64 = 2.0;
 
 /// Oldest format version the loader still accepts.
 pub const CHECKPOINT_MIN_VERSION: f64 = 1.0;
+
+/// Read the optional `kernel_mode` field: absent (pre-dual-mode and v1
+/// documents) defaults to [`KernelMode::Strict`]; present-but-invalid
+/// is rejected like any other corrupt field.
+fn read_kernel_mode(j: &Json) -> Result<KernelMode, String> {
+    match j.get("kernel_mode") {
+        None => Ok(KernelMode::Strict),
+        Some(v) => v
+            .as_str()
+            .and_then(KernelMode::parse)
+            .ok_or_else(|| "bad kernel_mode".to_string()),
+    }
+}
 
 impl Figmn {
     /// Serialize the full model state to JSON (v2 packed layout).
@@ -58,6 +82,10 @@ impl Figmn {
             ("sp_min", cfg.sp_min.into()),
             ("prune", cfg.prune.into()),
             ("max_components", cfg.max_components.into()),
+            // Additive since the dual-mode kernels: readers that ignore
+            // it still load the document (the arenas carry no
+            // mode-specific state).
+            ("kernel_mode", cfg.kernel_mode.as_str().into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -98,7 +126,8 @@ impl Figmn {
         let mut cfg = GmmConfig::new(dim)
             .with_delta(delta)
             .with_beta(beta)
-            .with_max_components(max_components);
+            .with_max_components(max_components)
+            .with_kernel_mode(read_kernel_mode(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -158,9 +187,130 @@ impl Figmn {
     }
 }
 
+impl Igmn {
+    /// Serialize the covariance baseline to JSON (v2 packed layout,
+    /// `kind: "igmn"`, `cov_packed` rows — no `log_det`: the baseline
+    /// derives determinants from each factorization).
+    pub fn to_json(&self) -> Json {
+        let cfg = self.config();
+        let store = self.store();
+        let comps: Vec<Json> = (0..store.len())
+            .map(|j| {
+                Json::obj(vec![
+                    ("mean", Json::num_array(store.mean(j))),
+                    ("cov_packed", Json::num_array(store.mat(j))),
+                    ("sp", store.sp(j).into()),
+                    ("v", (store.v(j) as usize).into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", CHECKPOINT_VERSION.into()),
+            ("crate_version", crate::version().into()),
+            ("kind", "igmn".into()),
+            ("dim", cfg.dim.into()),
+            ("delta", cfg.delta.into()),
+            ("beta", cfg.beta.into()),
+            ("v_min", (cfg.v_min as usize).into()),
+            ("sp_min", cfg.sp_min.into()),
+            ("prune", cfg.prune.into()),
+            ("max_components", cfg.max_components.into()),
+            ("kernel_mode", cfg.kernel_mode.as_str().into()),
+            ("sigma_ini", Json::num_array(self.sigma_ini())),
+            ("points", (self.points_seen() as usize).into()),
+            ("components", Json::Arr(comps)),
+        ])
+    }
+
+    /// Restore from [`Igmn::to_json`] output (v2 `cov_packed`), or from
+    /// a v1-format document carrying dense per-component `cov` matrices
+    /// (validated finite + symmetric, exactly like the Figmn v1 path).
+    pub fn from_json(j: &Json) -> Result<Igmn, String> {
+        let get = |k: &str| j.get(k).ok_or_else(|| format!("checkpoint missing '{k}'"));
+        let version = get("version")?.as_f64().ok_or("bad version")?;
+        if version != CHECKPOINT_VERSION && version != CHECKPOINT_MIN_VERSION {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        if get("kind")?.as_str() != Some("igmn") {
+            return Err("not an igmn checkpoint".into());
+        }
+        if let Some(cv) = j.get("crate_version") {
+            if cv.as_str().is_none() {
+                return Err("bad crate_version".into());
+            }
+        }
+        let dim = get("dim")?.as_usize().ok_or("bad dim")?;
+        let delta = get("delta")?.as_f64().ok_or("bad delta")?;
+        let beta = get("beta")?.as_f64().ok_or("bad beta")?;
+        let v_min = get("v_min")?.as_usize().ok_or("bad v_min")? as u64;
+        let sp_min = get("sp_min")?.as_f64().ok_or("bad sp_min")?;
+        let prune = get("prune")?.as_bool().ok_or("bad prune")?;
+        let max_components = get("max_components")?.as_usize().ok_or("bad max_components")?;
+        let sigma_ini = get("sigma_ini")?.to_f64_vec().ok_or("bad sigma_ini")?;
+        if sigma_ini.len() != dim {
+            return Err("sigma_ini length != dim".into());
+        }
+        let points = get("points")?.as_usize().ok_or("bad points")? as u64;
+
+        let mut cfg = GmmConfig::new(dim)
+            .with_delta(delta)
+            .with_beta(beta)
+            .with_max_components(max_components)
+            .with_kernel_mode(read_kernel_mode(j)?);
+        cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
+
+        let tri = packed::packed_len(dim);
+        let mut store = ComponentStore::new_covariance(dim);
+        for (i, cj) in get("components")?.as_array().ok_or("bad components")?.iter().enumerate() {
+            let mean = cj.get("mean").and_then(Json::to_f64_vec).ok_or("bad mean")?;
+            if mean.len() != dim {
+                return Err(format!("component {i}: mean shape mismatch"));
+            }
+            let cov = if version == CHECKPOINT_VERSION {
+                let p = cj
+                    .get("cov_packed")
+                    .and_then(Json::to_f64_vec)
+                    .ok_or("bad cov_packed")?;
+                if p.len() != tri {
+                    return Err(format!("component {i}: packed cov shape mismatch"));
+                }
+                p
+            } else {
+                // v1: dense row-major matrix, validated everywhere
+                // before the lower triangle is dropped by packing.
+                let flat = cj.get("cov").and_then(Json::to_f64_vec).ok_or("bad cov")?;
+                if flat.len() != dim * dim {
+                    return Err(format!("component {i}: cov shape mismatch"));
+                }
+                if flat.iter().any(|x| !x.is_finite()) {
+                    return Err(format!("component {i}: non-finite values"));
+                }
+                for r in 0..dim {
+                    for c in r + 1..dim {
+                        if flat[r * dim + c] != flat[c * dim + r] {
+                            return Err(format!("component {i}: asymmetric cov"));
+                        }
+                    }
+                }
+                packed::pack_symmetric_slice(&flat, dim)
+            };
+            let sp = cj.get("sp").and_then(Json::as_f64).ok_or("bad sp")?;
+            let v = cj.get("v").and_then(Json::as_usize).ok_or("bad v")? as u64;
+            if !sp.is_finite() || sp <= 0.0 {
+                return Err(format!("component {i}: corrupt scalars"));
+            }
+            if mean.iter().chain(cov.iter()).any(|x| !x.is_finite()) {
+                return Err(format!("component {i}: non-finite values"));
+            }
+            store.push(&mean, &cov, 0.0, sp, v);
+        }
+        Ok(Igmn::from_parts(cfg, sigma_ini, store, points))
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use crate::gmm::{Figmn, GmmConfig, IncrementalMixture};
+    use crate::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture, KernelMode};
     use crate::json::parse;
     use crate::rng::Pcg64;
     use crate::testutil::assert_close;
@@ -251,6 +401,89 @@ mod tests {
             .to_string_compact()
             .replace(&format!("\"crate_version\":\"{}\"", crate::version()), "\"crate_version\":42");
         assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_mode_round_trips_and_defaults_strict() {
+        // Fast-trained models write and restore their mode…
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.5)
+            .with_beta(0.1)
+            .with_kernel_mode(KernelMode::Fast);
+        let mut m = Figmn::new(cfg, &[2.0, 2.0]);
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..60 {
+            let x: Vec<f64> = (0..2).map(|_| rng.normal() * 3.0).collect();
+            m.learn(&x);
+        }
+        let doc = m.to_json();
+        assert_eq!(doc.get("kernel_mode").and_then(|v| v.as_str()), Some("fast"));
+        let restored = Figmn::from_json(&doc).unwrap();
+        assert_eq!(restored.config().kernel_mode, KernelMode::Fast);
+        // …and score bit-identically to the source (same mode, same
+        // arenas).
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..2).map(|_| rng.normal() * 3.0).collect();
+            assert_eq!(m.log_density(&x), restored.log_density(&x));
+        }
+        // A reader (or writer) without the field gets Strict — the
+        // additive-field degrade path.
+        let stripped = match doc.clone() {
+            crate::json::Json::Obj(mut o) => {
+                o.remove("kernel_mode");
+                crate::json::Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let as_strict = Figmn::from_json(&stripped).unwrap();
+        assert_eq!(as_strict.config().kernel_mode, KernelMode::Strict);
+        // Invalid values are rejected like any corrupt field.
+        let bad = doc
+            .to_string_compact()
+            .replace("\"kernel_mode\":\"fast\"", "\"kernel_mode\":\"warp\"");
+        assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+        let bad = doc
+            .to_string_compact()
+            .replace("\"kernel_mode\":\"fast\"", "\"kernel_mode\":3");
+        assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn igmn_round_trip_preserves_behaviour() {
+        let cfg = GmmConfig::new(3).with_delta(0.4).with_beta(0.1);
+        let mut m = Igmn::new(cfg, &[2.0, 2.0, 2.0]);
+        let mut rng = Pcg64::seed(41);
+        for _ in 0..120 {
+            let c = if rng.uniform() < 0.5 { 0.0 } else { 8.0 };
+            let x: Vec<f64> = (0..3).map(|_| c + rng.normal()).collect();
+            m.learn(&x);
+        }
+        let doc = m.to_json();
+        assert_eq!(doc.get("kind").and_then(|v| v.as_str()), Some("igmn"));
+        assert_eq!(doc.get("version").and_then(|v| v.as_f64()), Some(2.0));
+        let comps = doc.get("components").unwrap().as_array().unwrap();
+        for c in comps {
+            assert!(c.get("cov_packed").is_some(), "v2 igmn stores the packed triangle");
+            assert!(c.get("cov").is_none());
+            assert!(c.get("log_det").is_none(), "the baseline tracks no log_det");
+        }
+        let mut restored = Igmn::from_json(&parse(&doc.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(restored.num_components(), m.num_components());
+        assert_eq!(restored.points_seen(), m.points_seen());
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+            assert_eq!(m.log_density(&x), restored.log_density(&x));
+            assert_eq!(m.posteriors(&x), restored.posteriors(&x));
+        }
+        // Restored baselines keep learning identically.
+        for _ in 0..30 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+            assert_eq!(m.learn(&x), restored.learn(&x));
+        }
+        assert_eq!(m.num_components(), restored.num_components());
+        // A figmn doc is not an igmn doc and vice versa.
+        assert!(Igmn::from_json(&trained_model().to_json()).is_err());
+        assert!(Figmn::from_json(&doc).is_err());
     }
 
     #[test]

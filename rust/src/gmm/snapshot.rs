@@ -28,7 +28,7 @@ use super::store::ComponentStore;
 use super::supervised::clip_normalize;
 use super::{log_gaussian, softmax_posteriors, GmmConfig};
 use crate::engine::logsumexp_tree;
-use crate::linalg::{packed, sub_into};
+use crate::linalg::{packed, sub_into, KernelMode};
 
 /// An immutable copy of a [`super::Figmn`]'s mixture state, safe to
 /// share across scorer threads (`Send + Sync`, plain data only).
@@ -108,17 +108,23 @@ impl ModelSnapshot {
     }
 
     /// Joint log-density `ln p(x)` — bit-identical to
-    /// [`super::IncrementalMixture::log_density`] on the source model.
+    /// [`super::IncrementalMixture::log_density`] on the source model
+    /// (the snapshot runs the same kernels in the same
+    /// `cfg.kernel_mode` the source model was configured with).
     pub fn log_density(&self, x: &[f64]) -> f64 {
         assert!(!self.store.is_empty(), "log_density on empty snapshot");
         assert_eq!(x.len(), self.cfg.dim, "log_density: dimensionality mismatch");
         let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
         let mut e = vec![0.0; d];
+        // Kernel scratch is only read by the fast path; don't pay the
+        // allocation on the (default) strict read path.
+        let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
         let mut terms = Vec::with_capacity(self.store.len());
         for j in 0..self.store.len() {
             sub_into(x, self.store.mean(j), &mut e);
             let ll = log_gaussian(
-                packed::quad_form(self.store.mat(j), d, &e),
+                packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
                 self.store.log_det(j),
                 d,
             );
@@ -187,12 +193,14 @@ impl ModelSnapshot {
     pub fn posteriors(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cfg.dim, "posteriors: dimensionality mismatch");
         let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
         let mut e = vec![0.0; d];
+        let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
         let mut ll = Vec::with_capacity(self.store.len());
         for j in 0..self.store.len() {
             sub_into(x, self.store.mean(j), &mut e);
             ll.push(log_gaussian(
-                packed::quad_form(self.store.mat(j), d, &e),
+                packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
                 self.store.log_det(j),
                 d,
             ));

@@ -28,19 +28,57 @@
 //!
 //! Publishing a read snapshot is `Clone` — five `memcpy`s, no
 //! per-component traversal.
+//!
+//! ## Capacity reservation
+//!
+//! The engine's sharded passes stream the arenas through raw base
+//! pointers ([`StoreRawMut`]), so a `push` that reallocates an arena
+//! would leave any outstanding raw view dangling — and even off the
+//! engine path, mid-stream reallocation moves the hot rows. Models
+//! therefore reserve up front: [`ComponentStore::with_capacity`] sizes
+//! all five arenas for `max_components` rows (or a growth hint), and
+//! [`ComponentStore::push`] grows all arenas *together*, geometrically,
+//! when unreserved — O(log K) moves over a stream instead of per-arena
+//! drift. A generation counter (bumped by every push/truncate) lets
+//! [`StoreRawMut::row_mut`] assert in debug builds that no such
+//! mutation happened while a raw view was live.
 
 use crate::engine::SharedMut;
 use crate::linalg::packed;
 use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What the packed per-component matrices of a store semantically are —
+/// drives the byte accounting: the precision path (`Figmn`) tracks
+/// `log|C|` per component, while the covariance baseline (`Igmn`)
+/// derives determinants from each factorization, so its `log_dets` lane
+/// carries no model state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatKind {
+    /// Matrices are precisions `Λ = C⁻¹`; `log_dets` is live state.
+    Precision,
+    /// Matrices are covariances `C`; `log_dets` is unused padding.
+    Covariance,
+}
 
 /// All mixture component state, in flat contiguous arenas (see the
 /// module docs). Shared by `Figmn` (matrices are precisions `Λ`) and
 /// `Igmn` (matrices are covariances `C`; `log_dets` stays unused).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct ComponentStore {
     dim: usize,
     /// Packed matrix row length `D·(D+1)/2`.
     tri: usize,
+    kind: MatKind,
+    /// Bumped by every mutation that can change K or move the arenas
+    /// (push/truncate/reserve); [`StoreRawMut`] snapshots it so stale
+    /// raw views are caught in debug builds. Shared-ownership atomic so
+    /// the guard's read has provenance *independent* of the `&mut self`
+    /// borrows it detects (sound under Stacked/Tree Borrows — a plain
+    /// field pointer would itself be invalidated by the very mutation
+    /// it is trying to catch).
+    generation: Arc<AtomicU64>,
     means: Vec<f64>,
     mats: Vec<f64>,
     log_dets: Vec<f64>,
@@ -48,19 +86,104 @@ pub struct ComponentStore {
     vs: Vec<u64>,
 }
 
+/// A clone is an independent store (the snapshot path): fresh data
+/// buffers and a fresh staleness domain — mutating the original must
+/// not invalidate views of the clone or vice versa.
+impl Clone for ComponentStore {
+    fn clone(&self) -> ComponentStore {
+        ComponentStore {
+            dim: self.dim,
+            tri: self.tri,
+            kind: self.kind,
+            generation: Arc::new(AtomicU64::new(0)),
+            means: self.means.clone(),
+            mats: self.mats.clone(),
+            log_dets: self.log_dets.clone(),
+            sps: self.sps.clone(),
+            vs: self.vs.clone(),
+        }
+    }
+}
+
 impl ComponentStore {
-    /// Empty store for `dim`-dimensional components.
+    /// Empty store for `dim`-dimensional components (precision variant).
     pub fn new(dim: usize) -> ComponentStore {
+        ComponentStore::new_with_kind(dim, MatKind::Precision)
+    }
+
+    /// Empty store whose matrices are covariances (the `Igmn` baseline).
+    pub fn new_covariance(dim: usize) -> ComponentStore {
+        ComponentStore::new_with_kind(dim, MatKind::Covariance)
+    }
+
+    fn new_with_kind(dim: usize, kind: MatKind) -> ComponentStore {
         assert!(dim > 0, "ComponentStore: dim must be positive");
         ComponentStore {
             dim,
             tri: packed::packed_len(dim),
+            kind,
+            generation: Arc::new(AtomicU64::new(0)),
             means: Vec::new(),
             mats: Vec::new(),
             log_dets: Vec::new(),
             sps: Vec::new(),
             vs: Vec::new(),
         }
+    }
+
+    /// Empty precision store with all five arenas pre-sized for `rows`
+    /// components, so the first `rows` pushes never reallocate (and
+    /// never move the hot rows mid-stream).
+    pub fn with_capacity(dim: usize, rows: usize) -> ComponentStore {
+        let mut s = ComponentStore::new(dim);
+        s.reserve(rows);
+        s
+    }
+
+    /// Covariance-variant [`ComponentStore::with_capacity`].
+    pub fn with_capacity_covariance(dim: usize, rows: usize) -> ComponentStore {
+        let mut s = ComponentStore::new_covariance(dim);
+        s.reserve(rows);
+        s
+    }
+
+    /// Reserve room for at least `additional` more component rows in
+    /// every arena. Reserving does not move live rows' *values*, but it
+    /// may reallocate (and move) the arenas, so it bumps the generation:
+    /// any outstanding [`StoreRawMut`] view is stale afterwards, and the
+    /// debug guard in [`StoreRawMut::row_mut`] will catch it.
+    pub fn reserve(&mut self, additional: usize) {
+        self.means.reserve(additional * self.dim);
+        self.mats.reserve(additional * self.tri);
+        self.log_dets.reserve(additional);
+        self.sps.reserve(additional);
+        self.vs.reserve(additional);
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    /// How many rows to reserve eagerly for a model capped at `rows`
+    /// components: the full cap while the arena footprint stays within
+    /// a fixed budget (so `push` never reallocates for bounded models
+    /// of ordinary size), clamped so a generous defensive cap at large
+    /// `D` — where one packed row alone is megabytes — does not commit
+    /// gigabytes up front for components that may never exist. Beyond
+    /// the clamp, [`ComponentStore::push`]'s lock-step geometric growth
+    /// takes over.
+    pub(crate) fn bounded_reservation_rows(dim: usize, rows: usize) -> usize {
+        // Eager-reservation budget per model (bytes of arena payload).
+        const RESERVE_BYTES_CAP: usize = 256 << 20;
+        let tri = packed::packed_len(dim);
+        let row_bytes = (dim + tri + 2) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>();
+        rows.min((RESERVE_BYTES_CAP / row_bytes).max(1))
+    }
+
+    /// Component rows that fit before *any* arena must reallocate.
+    pub fn capacity_rows(&self) -> usize {
+        (self.means.capacity() / self.dim)
+            .min(self.mats.capacity() / self.tri)
+            .min(self.log_dets.capacity())
+            .min(self.sps.capacity())
+            .min(self.vs.capacity())
     }
 
     /// Number of live components `K`.
@@ -84,14 +207,24 @@ impl ComponentStore {
 
     /// Append a component row to every arena. `mat` is packed
     /// upper-triangular (length `D·(D+1)/2`).
+    ///
+    /// When the reservation is exhausted, all five arenas grow together
+    /// (geometric doubling, minimum 8 rows) so their capacities stay in
+    /// lock-step and a stream of creates moves the hot rows at most
+    /// O(log K) times. Bumps the generation: any [`StoreRawMut`] view
+    /// taken before this call is stale afterwards.
     pub(crate) fn push(&mut self, mean: &[f64], mat: &[f64], log_det: f64, sp: f64, v: u64) {
         assert_eq!(mean.len(), self.dim, "push: mean length");
         assert_eq!(mat.len(), self.tri, "push: packed matrix length");
+        if self.len() >= self.capacity_rows() {
+            self.reserve(self.len().max(8));
+        }
         self.means.extend_from_slice(mean);
         self.mats.extend_from_slice(mat);
         self.log_dets.push(log_det);
         self.sps.push(sp);
         self.vs.push(v);
+        self.generation.fetch_add(1, Ordering::Release);
     }
 
     /// Mean of component `j` (row `j` of the means arena).
@@ -152,11 +285,17 @@ impl ComponentStore {
 
     /// Raw-pointer view for the engine's sharded update pass: each
     /// worker mutates only the rows of its own contiguous component
-    /// shard (see [`StoreRawMut::row_mut`]'s safety contract).
+    /// shard (see [`StoreRawMut::row_mut`]'s safety contract). The view
+    /// snapshots the store generation; `row_mut` debug-asserts it is
+    /// still current, catching any push/truncate (and therefore any
+    /// possible arena reallocation) that slipped in while the raw base
+    /// pointers were live.
     pub(crate) fn raw_mut(&mut self) -> StoreRawMut {
         StoreRawMut {
             dim: self.dim,
             tri: self.tri,
+            gen_seen: self.generation.load(Ordering::Acquire),
+            gen_live: self.generation.clone(),
             means: SharedMut::new(self.means.as_mut_ptr()),
             mats: SharedMut::new(self.mats.as_mut_ptr()),
             log_dets: SharedMut::new(self.log_dets.as_mut_ptr()),
@@ -165,25 +304,32 @@ impl ComponentStore {
         }
     }
 
-    /// Swap rows `a` and `b` in every arena.
+    /// Swap rows `a` and `b` in every arena — bulk `split_at_mut` +
+    /// `swap_with_slice` per arena (one bounds check each) instead of
+    /// the per-element `Vec::swap` walk.
     pub(crate) fn swap_rows(&mut self, a: usize, b: usize) {
         if a == b {
             return;
         }
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
         let d = self.dim;
         let t = self.tri;
-        for off in 0..d {
-            self.means.swap(a * d + off, b * d + off);
+        {
+            let (head, tail) = self.means.split_at_mut(hi * d);
+            head[lo * d..(lo + 1) * d].swap_with_slice(&mut tail[..d]);
         }
-        for off in 0..t {
-            self.mats.swap(a * t + off, b * t + off);
+        {
+            let (head, tail) = self.mats.split_at_mut(hi * t);
+            head[lo * t..(lo + 1) * t].swap_with_slice(&mut tail[..t]);
         }
-        self.log_dets.swap(a, b);
-        self.sps.swap(a, b);
-        self.vs.swap(a, b);
+        self.log_dets.swap(lo, hi);
+        self.sps.swap(lo, hi);
+        self.vs.swap(lo, hi);
     }
 
-    /// Overwrite row `dst` with row `src` (compaction helper).
+    /// Overwrite row `dst` with row `src` (compaction helper). Already
+    /// bulk moves: `copy_within` is a `memmove` per arena, the
+    /// row-granular analogue of `swap_rows`' `swap_with_slice`.
     fn copy_row(&mut self, src: usize, dst: usize) {
         let d = self.dim;
         let t = self.tri;
@@ -194,13 +340,15 @@ impl ComponentStore {
         self.vs[dst] = self.vs[src];
     }
 
-    /// Drop every row past the first `k`.
+    /// Drop every row past the first `k`. Bumps the generation (K
+    /// changes), invalidating outstanding [`StoreRawMut`] views.
     pub(crate) fn truncate(&mut self, k: usize) {
         self.means.truncate(k * self.dim);
         self.mats.truncate(k * self.tri);
         self.log_dets.truncate(k);
         self.sps.truncate(k);
         self.vs.truncate(k);
+        self.generation.fetch_add(1, Ordering::Release);
     }
 
     /// The §2.3 spuriousness sweep shared by both variants: remove every
@@ -249,15 +397,25 @@ impl ComponentStore {
         k - self.len()
     }
 
-    /// Arena bytes one component occupies: `D` mean + `D(D+1)/2` packed
-    /// matrix + `log_det` + `sp` floats, plus the `u64` age. The dense
-    /// array-of-structs layout paid `D²` matrix floats (plus two heap
-    /// headers) for the same state — about 2× this at large `D`.
+    /// Model-state bytes one component occupies, **variant-aware**: `D`
+    /// mean + `D(D+1)/2` packed matrix + `sp` floats + the `u64` age,
+    /// plus the tracked `log_det` float on the precision path only —
+    /// the covariance baseline documents that lane as unused (it
+    /// derives determinants from each factorization), so counting it
+    /// would overstate `Igmn` memory in `WorkerStats`/registry stats.
+    /// The dense array-of-structs layout paid `D²` matrix floats (plus
+    /// two heap headers) for the same state — about 2× this at large
+    /// `D`.
     pub fn bytes_per_component(&self) -> usize {
-        (self.dim + self.tri + 2) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>()
+        let scalars = match self.kind {
+            MatKind::Precision => 2, // log_det + sp
+            MatKind::Covariance => 1, // sp only
+        };
+        (self.dim + self.tri + scalars) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>()
     }
 
-    /// Total arena payload for the live mixture.
+    /// Total model-state bytes for the live mixture (see
+    /// [`ComponentStore::bytes_per_component`] for what counts).
     pub fn model_bytes(&self) -> usize {
         self.len() * self.bytes_per_component()
     }
@@ -271,12 +429,36 @@ impl ComponentStore {
     }
 }
 
-/// Raw-pointer row access for the engine's sharded update pass; `Copy`
-/// so the shard closure can capture it by value.
-#[derive(Clone, Copy)]
+/// Stores are equal when they hold the same components of the same
+/// variant — the generation (a history counter) deliberately does not
+/// participate, so e.g. a pruned store equals a freshly built one with
+/// the same survivors.
+impl PartialEq for ComponentStore {
+    fn eq(&self, other: &ComponentStore) -> bool {
+        self.dim == other.dim
+            && self.kind == other.kind
+            && self.means == other.means
+            && self.mats == other.mats
+            && self.log_dets == other.log_dets
+            && self.sps == other.sps
+            && self.vs == other.vs
+    }
+}
+
+/// Raw-pointer row access for the engine's sharded update pass; cheap
+/// to clone, and the shard closure captures it by value.
+#[derive(Clone)]
 pub(crate) struct StoreRawMut {
     dim: usize,
     tri: usize,
+    /// Store generation when this view was taken.
+    gen_seen: u64,
+    /// The store's live generation counter. Shared ownership (not a
+    /// pointer derived from the store borrow), so reading it stays
+    /// sound even after a `&mut ComponentStore` mutation invalidated
+    /// the arena base pointers — which is exactly the situation the
+    /// guard exists to catch.
+    gen_live: Arc<AtomicU64>,
     means: SharedMut<f64>,
     mats: SharedMut<f64>,
     log_dets: SharedMut<f64>,
@@ -288,13 +470,23 @@ impl StoreRawMut {
     /// Mutable views of row `j`: `(mean, mat, log_det, sp, v)`.
     ///
     /// # Safety
-    /// `j` must be in bounds of the source store, and no other thread
-    /// may access row `j` during the same engine pass — guaranteed when
-    /// `j` comes from the pool's disjoint shard ranges.
+    /// `j` must be in bounds of the source store, no other thread may
+    /// access row `j` during the same engine pass (guaranteed when `j`
+    /// comes from the pool's disjoint shard ranges), and the store must
+    /// not have been mutated through `&mut self` methods since
+    /// `raw_mut` — a push could have reallocated the arenas out from
+    /// under these base pointers. Debug builds assert the last
+    /// condition via the generation counter.
     pub unsafe fn row_mut(
         &self,
         j: usize,
     ) -> (&mut [f64], &mut [f64], &mut f64, &mut f64, &mut u64) {
+        debug_assert!(
+            self.gen_live.load(Ordering::Acquire) == self.gen_seen,
+            "StoreRawMut is stale: the store was mutated (push/truncate/reserve) while raw \
+             arena base pointers were live — K and arena capacities must be frozen for the \
+             lifetime of a StoreRawMut"
+        );
         (
             self.means.slice(j * self.dim, self.dim),
             self.mats.slice(j * self.tri, self.tri),
@@ -413,12 +605,117 @@ mod tests {
 
     #[test]
     fn byte_accounting_tracks_packed_layout() {
+        // Precision variant: D=2 → 2 mean + 3 packed + log_det + sp
+        // floats, + u64 age.
         let s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
-        // D=2: 2 mean + 3 packed + log_det + sp floats, + u64 age.
         assert_eq!(s.bytes_per_component(), 7 * 8 + 8);
         assert_eq!(s.model_bytes(), 2 * s.bytes_per_component());
         // The packed matrix is strictly smaller than dense for D ≥ 2.
         assert!(s.mat_len() < s.dim() * s.dim());
+
+        // Covariance variant: the unused log_det lane is not billed —
+        // one f64 less per component than the precision variant.
+        let mut c = ComponentStore::new_covariance(2);
+        c.push(&[0.0, 0.0], &packed::from_diag(&[1.0, 1.0]), 0.0, 1.0, 1);
+        c.push(&[1.0, 1.0], &packed::from_diag(&[2.0, 2.0]), 0.0, 1.0, 1);
+        assert_eq!(c.bytes_per_component(), 6 * 8 + 8);
+        assert_eq!(c.bytes_per_component() + 8, s.bytes_per_component());
+        assert_eq!(c.model_bytes(), 2 * c.bytes_per_component());
+    }
+
+    #[test]
+    fn reservation_prevents_arena_moves() {
+        let rows = 64;
+        let mut s = ComponentStore::with_capacity(2, rows);
+        assert!(s.capacity_rows() >= rows);
+        let mat = packed::from_diag(&[1.0, 1.0]);
+        s.push(&[0.0, 0.0], &mat, 0.0, 1.0, 1);
+        let base = s.mean(0).as_ptr();
+        for i in 1..rows {
+            s.push(&[i as f64, 0.0], &mat, 0.0, 1.0, 1);
+        }
+        assert_eq!(s.len(), rows);
+        assert!(
+            std::ptr::eq(base, s.mean(0).as_ptr()),
+            "reserved arenas must not move across {rows} pushes"
+        );
+        // reserve() grows room without touching live rows.
+        s.reserve(rows);
+        assert!(s.capacity_rows() >= 2 * rows);
+        assert_eq!(s.mean(1), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn eager_reservation_is_budget_clamped() {
+        // Ordinary bounded models reserve their full cap…
+        assert_eq!(ComponentStore::bounded_reservation_rows(8, 256), 256);
+        assert_eq!(ComponentStore::bounded_reservation_rows(64, 1024), 1024);
+        // …but at CIFAR-scale D a packed row is megabytes, so a
+        // generous defensive cap clamps to the byte budget instead of
+        // committing gigabytes up front (never to zero, though).
+        let rows = ComponentStore::bounded_reservation_rows(3072, 1024);
+        assert!((1..1024).contains(&rows), "clamped rows = {rows}");
+        assert_eq!(ComponentStore::bounded_reservation_rows(3072, 0), 0);
+    }
+
+    #[test]
+    fn unreserved_push_grows_all_arenas_in_lockstep() {
+        let mut s = ComponentStore::new(3);
+        let mat = packed::from_diag(&[1.0, 1.0, 1.0]);
+        let mut growths = 0;
+        let mut last_cap = s.capacity_rows();
+        for i in 0..100 {
+            s.push(&[i as f64, 0.0, 0.0], &mat, 0.0, 1.0, 1);
+            // Every arena keeps up with K: the five capacities grow
+            // together, geometrically (O(log K) growth events).
+            assert!(s.capacity_rows() >= s.len());
+            if s.capacity_rows() != last_cap {
+                growths += 1;
+                last_cap = s.capacity_rows();
+            }
+        }
+        assert!(s.capacity_rows() >= 100);
+        assert!(growths <= 8, "expected geometric growth, saw {growths} reallocations");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "StoreRawMut is stale")]
+    fn stale_raw_view_is_caught_after_push() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        let raw = s.raw_mut();
+        // A create while raw base pointers are live: the generation
+        // bump makes the next row_mut fail fast instead of risking a
+        // dangling-pointer write after a reallocation.
+        s.push(&[9.0, 9.0], &packed::from_diag(&[1.0, 1.0]), 0.0, 1.0, 1);
+        unsafe {
+            let _ = raw.row_mut(0);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "StoreRawMut is stale")]
+    fn stale_raw_view_is_caught_after_truncate() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        let raw = s.raw_mut();
+        s.truncate(1);
+        unsafe {
+            let _ = raw.row_mut(0);
+        }
+    }
+
+    #[test]
+    fn equality_ignores_generation_history() {
+        // A pruned store equals a freshly built one with the same
+        // survivors, despite different generation histories.
+        let mut pruned = store_with(&[(1.0, 5.0, 0), (2.0, 1.0, 3), (3.0, 6.0, 4)]);
+        pruned.prune(1, 4.0);
+        let fresh = store_with(&[(1.0, 5.0, 0), (3.0, 6.0, 4)]);
+        assert_eq!(pruned, fresh);
+        // Variants with identical payloads still differ.
+        let cov = ComponentStore::new_covariance(2);
+        assert!(ComponentStore::new(2) != cov);
     }
 
     #[test]

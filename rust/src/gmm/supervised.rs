@@ -175,7 +175,8 @@ fn joint_config(cfg: &GmmConfig, n_features: usize, n_classes: usize) -> GmmConf
     let mut joint = GmmConfig::new(n_features + n_classes)
         .with_delta(cfg.delta)
         .with_beta(cfg.beta)
-        .with_max_components(cfg.max_components);
+        .with_max_components(cfg.max_components)
+        .with_kernel_mode(cfg.kernel_mode);
     if cfg.prune {
         joint = joint.with_pruning(cfg.v_min, cfg.sp_min);
     } else {

@@ -29,3 +29,59 @@ pub use vector::{add, axpy, dot, norm2, outer_into, scale, sub, sub_into};
 
 /// Numerical tolerance used by the test-suite comparisons in this crate.
 pub const TEST_EPS: f64 = 1e-9;
+
+/// Which implementation the three hot packed kernels
+/// ([`packed::quad_form_with`]-family, [`packed::spmv`],
+/// [`rank_one::figmn_fused_update_packed`]) run in.
+///
+/// - [`KernelMode::Strict`] (the default) is the scalar reference path:
+///   the same floating-point operations in the same order as the dense
+///   formulation, so every result is **bit-identical** across layouts,
+///   thread counts, and checkpoint round-trips (the crate's determinism
+///   guarantee; see `tests/layout_equivalence.rs`).
+/// - [`KernelMode::Fast`] trades bit-identity for throughput: the
+///   reduction kernels accumulate in four independent lanes with a
+///   scalar tail (a shape LLVM auto-vectorizes to SIMD on every
+///   target), and the fused update hoists `β·wᵢ` out of its inner loop.
+///   Results are **tolerance-equivalent** to `Strict` (relative ~1e-12
+///   on log-densities over the paper's Table 1 streams — enforced by
+///   `tests/kernel_mode_equivalence.rs`), and still deterministic: for
+///   a fixed mode, every thread count and the serial path agree bit for
+///   bit, because the per-component instruction sequence is unchanged.
+///
+/// The mode is carried per model (`gmm::GmmConfig::kernel_mode`),
+/// serialized with checkpoints, and selectable over the coordinator
+/// protocol and the CLI (`train --kernel-mode fast`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Scalar reference loops — bit-identical to the dense formulation.
+    #[default]
+    Strict,
+    /// 4-wide blocked (auto-vectorizable) loops — tolerance-equivalent.
+    Fast,
+}
+
+impl KernelMode {
+    /// Wire/CLI name: `"strict"` or `"fast"`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Strict => "strict",
+            KernelMode::Fast => "fast",
+        }
+    }
+
+    /// Parse a wire/CLI name; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s {
+            "strict" => Some(KernelMode::Strict),
+            "fast" => Some(KernelMode::Fast),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}

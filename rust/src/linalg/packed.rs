@@ -14,7 +14,7 @@
 //! contiguously, so element `(i, j)` with `i ≤ j` lives at
 //! `row_start(i, d) + (j − i)`.
 //!
-//! ## Bit-identity contract
+//! ## Bit-identity contract (`Strict` mode)
 //!
 //! Every kernel here performs the **same floating-point operations in
 //! the same order** as its dense counterpart in [`super::Matrix`] /
@@ -25,8 +25,25 @@
 //! therefore changes *where a value is stored*, never the value — the
 //! crate's determinism guarantee extends across layouts, enforced by
 //! this module's side-by-side tests and `tests/layout_equivalence.rs`.
+//!
+//! ## Fast mode (tolerance contract)
+//!
+//! The strict mat-vec is a scalar left-fold — a loop-carried FP
+//! dependence the compiler may not reorder, so it runs one lane wide no
+//! matter the hardware. The `*_fast` kernels below (selected per model
+//! via [`KernelMode::Fast`]) rewrite the two reduction-bound sweeps as
+//! **4-wide blocked accumulations with a scalar tail** and stream each
+//! packed row exactly once (the row's entries serve `y[i]`'s dot
+//! product and the `y[j] += A(i,j)·x[i]` scatter in the same pass).
+//! Those loops auto-vectorize on every SIMD target without `unsafe` or
+//! nightly intrinsics. The price is a *different summation order*:
+//! results are no longer bit-identical to `Strict`, only
+//! tolerance-equivalent (relative ~1e-12 on log-densities; see
+//! [`super::KernelMode`] for the full contract). Within `Fast` mode
+//! results remain deterministic — the blocked order is fixed, so every
+//! thread count agrees bit for bit.
 
-use super::Matrix;
+use super::{KernelMode, Matrix};
 
 /// Packed length of a symmetric `d×d` matrix: `d·(d+1)/2`.
 #[inline]
@@ -176,6 +193,110 @@ pub fn scale(ap: &mut [f64], s: f64) {
     }
 }
 
+// ---- Fast-mode kernels ------------------------------------------------
+//
+// See the module docs: same math, blocked summation order, explicitly
+// NOT bit-identical to the strict kernels above.
+
+/// Dot product in four independent accumulator lanes plus a scalar
+/// tail. The lane sums combine as `(s0+s2) + (s1+s3) + tail` — a fixed
+/// order, so fast-mode results are deterministic, just not equal to the
+/// strict left-fold.
+#[inline]
+fn dot_blocked(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f64; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        lanes[0] += xa[0] * xb[0];
+        lanes[1] += xa[1] * xb[1];
+        lanes[2] += xa[2] * xb[2];
+        lanes[3] += xa[3] * xb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder().iter()) {
+        tail += x * y;
+    }
+    (lanes[0] + lanes[2]) + (lanes[1] + lanes[3]) + tail
+}
+
+/// Fast symmetric mat-vec `y = A·x`: one pass over the packed rows.
+/// Row `i`'s contiguous entries `(i, i..d)` feed both `y[i]`'s blocked
+/// dot product and the `y[j] += A(i,j)·x[i]` update for `j > i`, so
+/// each packed element is touched in cache-friendly contiguous loops
+/// that LLVM vectorizes (the strict kernel's `j < i` column walk is a
+/// strided scalar chain).
+pub fn spmv_fast(ap: &[f64], d: usize, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(x.len(), d, "spmv_fast: x length");
+    assert_eq!(y.len(), d, "spmv_fast: y length");
+    y.fill(0.0);
+    let mut rs = 0usize;
+    for i in 0..d {
+        let len = d - i;
+        let row = &ap[rs..rs + len];
+        let diag_dot = dot_blocked(row, &x[i..]);
+        let xi = x[i];
+        for (yj, &aij) in y[i + 1..].iter_mut().zip(row[1..].iter()) {
+            *yj += aij * xi;
+        }
+        y[i] += diag_dot;
+        rs += len;
+    }
+}
+
+/// Fast quadratic form `xᵀ·A·x` that also writes `w = A·x` — the
+/// fast-mode analog of [`quad_form_with`]. `xᵀ·w` is taken as one final
+/// blocked dot over the assembled `w`.
+pub fn quad_form_with_fast(ap: &[f64], d: usize, x: &[f64], w: &mut [f64]) -> f64 {
+    spmv_fast(ap, d, x, w);
+    dot_blocked(x, w)
+}
+
+/// Mode dispatcher for the distance-pass kernel: strict scalar loops or
+/// the blocked fast sweep.
+#[inline]
+pub fn quad_form_with_mode(
+    ap: &[f64],
+    d: usize,
+    x: &[f64],
+    w: &mut [f64],
+    mode: KernelMode,
+) -> f64 {
+    match mode {
+        KernelMode::Strict => quad_form_with(ap, d, x, w),
+        KernelMode::Fast => quad_form_with_fast(ap, d, x, w),
+    }
+}
+
+/// Mode dispatcher for the plain quadratic form. The fast path needs a
+/// `D`-float scratch buffer for `w = A·x` (the strict path ignores it),
+/// so scoring loops hand in their per-thread scratch arena instead of
+/// allocating.
+#[inline]
+pub fn quad_form_scratch(
+    ap: &[f64],
+    d: usize,
+    x: &[f64],
+    scratch: &mut [f64],
+    mode: KernelMode,
+) -> f64 {
+    match mode {
+        KernelMode::Strict => quad_form(ap, d, x),
+        KernelMode::Fast => quad_form_with_fast(ap, d, x, scratch),
+    }
+}
+
+/// Mode dispatcher for the symmetric mat-vec.
+#[inline]
+pub fn spmv_mode(ap: &[f64], d: usize, x: &[f64], y: &mut [f64], mode: KernelMode) {
+    match mode {
+        KernelMode::Strict => spmv(ap, d, x, y),
+        KernelMode::Fast => spmv_fast(ap, d, x, y),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +379,80 @@ mod tests {
             assert_eq!(w_dense, w_packed, "trial {trial}: w bits differ");
             assert!(q_dense.to_bits() == q_packed.to_bits(), "trial {trial}: q bits differ");
         }
+    }
+
+    /// The fast-mode contract: blocked kernels agree with the strict
+    /// ones to tight relative tolerance (they are the same math in a
+    /// different summation order), and are deterministic run to run.
+    #[test]
+    fn fast_kernels_match_strict_within_tolerance() {
+        let mut rng = Pcg64::seed(77);
+        for trial in 0..80 {
+            let n = 1 + (trial % 17);
+            let m = random_sym(n, &mut rng);
+            let ap = pack_symmetric(&m);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+            let mut y_strict = vec![0.0; n];
+            spmv(&ap, n, &x, &mut y_strict);
+            let mut y_fast = vec![0.0; n];
+            spmv_fast(&ap, n, &x, &mut y_fast);
+            for (i, (a, b)) in y_strict.iter().zip(y_fast.iter()).enumerate() {
+                let tol = 1e-12 * (1.0 + a.abs());
+                assert!((a - b).abs() <= tol, "trial {trial}: spmv[{i}] {a} vs {b}");
+            }
+
+            let mut w_strict = vec![0.0; n];
+            let q_strict = quad_form_with(&ap, n, &x, &mut w_strict);
+            let mut w_fast = vec![0.0; n];
+            let q_fast = quad_form_with_fast(&ap, n, &x, &mut w_fast);
+            assert!(
+                (q_strict - q_fast).abs() <= 1e-12 * (1.0 + q_strict.abs()),
+                "trial {trial}: quad_form {q_strict} vs {q_fast}"
+            );
+            assert_eq!(y_fast, w_fast, "trial {trial}: fast w must equal fast spmv");
+
+            // Determinism within a mode: re-running gives the same bits.
+            let mut w_again = vec![0.0; n];
+            let q_again = quad_form_with_fast(&ap, n, &x, &mut w_again);
+            assert_eq!(w_fast, w_again, "trial {trial}: fast w not deterministic");
+            assert!(q_fast.to_bits() == q_again.to_bits(), "trial {trial}: fast q bits");
+        }
+    }
+
+    /// Mode dispatchers route to the right kernel: `Strict` stays
+    /// bit-identical to the reference loops, `Fast` to the blocked ones.
+    #[test]
+    fn mode_dispatchers_route_correctly() {
+        let mut rng = Pcg64::seed(8);
+        let n = 13;
+        let m = random_sym(n, &mut rng);
+        let ap = pack_symmetric(&m);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut scratch = vec![0.0; n];
+
+        let q_ref = quad_form(&ap, n, &x);
+        assert!(
+            quad_form_scratch(&ap, n, &x, &mut scratch, KernelMode::Strict).to_bits()
+                == q_ref.to_bits()
+        );
+        let mut w_fast = vec![0.0; n];
+        let q_fast_ref = quad_form_with_fast(&ap, n, &x, &mut w_fast);
+        assert!(
+            quad_form_scratch(&ap, n, &x, &mut scratch, KernelMode::Fast).to_bits()
+                == q_fast_ref.to_bits()
+        );
+
+        let mut w = vec![0.0; n];
+        assert!(
+            quad_form_with_mode(&ap, n, &x, &mut w, KernelMode::Strict).to_bits()
+                == quad_form_with(&ap, n, &x, &mut scratch).to_bits()
+        );
+        let mut y_mode = vec![0.0; n];
+        let mut y_fast = vec![0.0; n];
+        spmv_mode(&ap, n, &x, &mut y_mode, KernelMode::Fast);
+        spmv_fast(&ap, n, &x, &mut y_fast);
+        assert_eq!(y_mode, y_fast);
     }
 
     #[test]

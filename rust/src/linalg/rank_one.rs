@@ -12,7 +12,7 @@
 //! `f64` for any σ ≠ 1, while the recurrences translate verbatim into log
 //! space (products become sums). The equivalence tests compare log-dets.
 
-use super::{dot, Matrix};
+use super::{dot, KernelMode, Matrix};
 
 /// Symmetric rank-one accumulate: `A += α·u·uᵀ` (full storage).
 #[inline]
@@ -234,6 +234,65 @@ pub fn figmn_fused_update_packed(
     Some(UpdateResult { log_det: new_log_det, quad_estar: q })
 }
 
+/// Fast-mode variant of [`figmn_fused_update_packed`]: the per-entry
+/// expression becomes `a·Λᵢⱼ + (β·wᵢ)·wⱼ` — `β·wᵢ` is hoisted out of
+/// the inner loop, saving one multiply per entry and leaving a pure
+/// scale-and-axpy body that LLVM vectorizes. The factoring is the one
+/// deliberate deviation from the strict kernel, so results are
+/// tolerance-equivalent rather than bit-identical (see
+/// [`crate::linalg::KernelMode`]). Packed storage keeps the matrix
+/// structurally symmetric regardless of rounding, and the `log|C|`
+/// recurrence is unchanged, so the determinism-within-a-mode guarantee
+/// still holds.
+pub fn figmn_fused_update_packed_fast(
+    lambda: &mut [f64],
+    d: usize,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+) -> Option<UpdateResult> {
+    debug_assert_eq!(lambda.len(), crate::linalg::packed::packed_len(d));
+    debug_assert_eq!(w.len(), d);
+    debug_assert!(omega > 0.0 && omega < 1.0, "omega must be in (0,1), got {omega}");
+    let one_minus = 1.0 - omega;
+    let denom = 1.0 + omega * q;
+    if !(denom > 0.0) || !denom.is_finite() {
+        return None;
+    }
+    let a = 1.0 / one_minus;
+    let beta = -(omega * a) / denom;
+    let mut rs = 0usize;
+    for i in 0..d {
+        let bwi = beta * w[i];
+        let row = &mut lambda[rs..rs + d - i];
+        for (r, &wj) in row.iter_mut().zip(w[i..].iter()) {
+            *r = a * *r + bwi * wj;
+        }
+        rs += d - i;
+    }
+    let new_log_det = (d as f64) * one_minus.ln() + log_det + denom.ln();
+    Some(UpdateResult { log_det: new_log_det, quad_estar: q })
+}
+
+/// Mode dispatcher for the packed fused update (see
+/// [`crate::linalg::KernelMode`] for the contract of each arm).
+#[inline]
+pub fn figmn_fused_update_packed_mode(
+    lambda: &mut [f64],
+    d: usize,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+    mode: KernelMode,
+) -> Option<UpdateResult> {
+    match mode {
+        KernelMode::Strict => figmn_fused_update_packed(lambda, d, w, q, omega, log_det),
+        KernelMode::Fast => figmn_fused_update_packed_fast(lambda, d, w, q, omega, log_det),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -450,6 +509,74 @@ mod tests {
                 r_dense.log_det.to_bits() == r_packed.log_det.to_bits(),
                 "trial {trial}: log-det bits differ"
             );
+        }
+    }
+
+    /// The fast fused update agrees with the strict one to tight
+    /// relative tolerance (same math, `β·wᵢ` hoisted), rejects the same
+    /// degenerate denominators, and its log-det recurrence — which does
+    /// not involve the refactored loop — stays bit-identical.
+    #[test]
+    fn packed_fast_update_matches_strict_within_tolerance() {
+        use crate::linalg::packed::pack_symmetric;
+        let mut rng = Pcg64::seed(321);
+        for trial in 0..200 {
+            let n = 1 + (trial % 12);
+            let mut dense = random_spd(n, &mut rng);
+            dense.symmetrize();
+            let mut strict = pack_symmetric(&dense);
+            let mut fast = strict.clone();
+            let log_det = rng.normal();
+
+            let e: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let omega = 0.01 + 0.95 * rng.uniform();
+            let mut w = vec![0.0; n];
+            dense.matvec_into(&e, &mut w);
+            let q = dot(&e, &w);
+
+            let r_strict = figmn_fused_update_packed(&mut strict, n, &w, q, omega, log_det)
+                .expect("strict must succeed");
+            let r_fast = figmn_fused_update_packed_fast(&mut fast, n, &w, q, omega, log_det)
+                .expect("fast must succeed");
+            let scale = strict.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for (i, (a, b)) in strict.iter().zip(fast.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * scale,
+                    "trial {trial}: entry {i} diverged ({a} vs {b})"
+                );
+            }
+            assert!(
+                r_strict.log_det.to_bits() == r_fast.log_det.to_bits(),
+                "trial {trial}: log-det recurrence must not change"
+            );
+
+            // Dispatcher routes: Strict arm is bit-identical to the
+            // strict kernel, Fast arm to the fast one.
+            let base = pack_symmetric(&dense);
+            let mut via_mode = base.clone();
+            figmn_fused_update_packed_mode(
+                &mut via_mode,
+                n,
+                &w,
+                q,
+                omega,
+                log_det,
+                KernelMode::Fast,
+            )
+            .unwrap();
+            assert_eq!(via_mode, fast, "trial {trial}: Fast dispatch mismatch");
+            let mut via_strict = base;
+            figmn_fused_update_packed_mode(
+                &mut via_strict,
+                n,
+                &w,
+                q,
+                omega,
+                log_det,
+                KernelMode::Strict,
+            )
+            .unwrap();
+            assert_eq!(via_strict, strict, "trial {trial}: Strict dispatch mismatch");
         }
     }
 

@@ -17,7 +17,7 @@ use figmn::data::Dataset;
 use figmn::engine::EngineConfig;
 use figmn::eval::{multiclass_auc, Stopwatch};
 use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
-use figmn::gmm::GmmConfig;
+use figmn::gmm::{GmmConfig, KernelMode};
 use figmn::rng::Pcg64;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -85,7 +85,7 @@ fn cmd_train(args: &[String]) -> i32 {
     let Some(name) = pos.first() else {
         eprintln!(
             "usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] \
-             [--seed N] [--threads T]"
+             [--seed N] [--threads T] [--kernel-mode strict|fast]"
         );
         return 2;
     };
@@ -100,6 +100,18 @@ fn cmd_train(args: &[String]) -> i32 {
     // Component-sharded engine threads (1 = serial; results identical).
     let threads: usize = flags.get("threads").map(|s| s.parse().unwrap()).unwrap_or(1);
     let engine = (threads > 1).then(|| EngineConfig::new(threads));
+    // Packed-kernel mode: strict (default, bit-identical scalar loops)
+    // or fast (blocked SIMD lanes, tolerance-equivalent).
+    let kernel_mode = match flags.get("kernel-mode").map(String::as_str) {
+        None => KernelMode::Strict,
+        Some(s) => match KernelMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("unknown --kernel-mode '{s}' (want strict|fast)");
+                return 2;
+            }
+        },
+    };
 
     let data = synth::generate(spec, seed);
     let stds = data.feature_stds();
@@ -110,7 +122,18 @@ fn cmd_train(args: &[String]) -> i32 {
     let train: Dataset = data.subset(train_idx);
     let test: Dataset = data.subset(test_idx);
 
-    let cfg = GmmConfig::new(1).with_delta(delta).with_beta(beta);
+    // The covariance baseline always runs strict (Cholesky) kernels;
+    // report the mode that actually executes instead of echoing the
+    // flag back.
+    let effective_mode = if algo == "orig" { KernelMode::Strict } else { kernel_mode };
+    if algo == "orig" && kernel_mode != effective_mode {
+        eprintln!("note: --algo orig always runs strict kernels; ignoring --kernel-mode fast");
+    }
+
+    let cfg = GmmConfig::new(1)
+        .with_delta(delta)
+        .with_beta(beta)
+        .with_kernel_mode(effective_mode);
     let mut sw = Stopwatch::new();
     let (scores, components): (Vec<Vec<f64>>, usize) = if algo == "orig" {
         let mut clf = supervised_igmn(cfg, &stds, data.n_classes);
@@ -134,7 +157,8 @@ fn cmd_train(args: &[String]) -> i32 {
         .count() as f64
         / test.len() as f64;
     println!(
-        "{name}: algo={algo} N_train={} D={} → {} components, train {:.3}s, AUC {:.3}, acc {:.3}",
+        "{name}: algo={algo} kernels={effective_mode} N_train={} D={} → {} components, \
+         train {:.3}s, AUC {:.3}, acc {:.3}",
         train.len(),
         data.dim(),
         components,

@@ -1,0 +1,168 @@
+//! Arena reservation + raw-pointer-staleness regression tests.
+//!
+//! The engine's sharded passes hold raw arena base pointers
+//! (`StoreRawMut`) for the duration of a pass. PR 3 left a latent
+//! hazard: if any `push` reallocated an arena while such a view was
+//! live, the pointers would dangle. Two defenses landed together:
+//!
+//! - **Reservation**: `GmmConfig::max_components` pre-sizes all five
+//!   `ComponentStore` arenas, so creates never reallocate (and never
+//!   move the hot rows) mid-stream; unreserved stores grow all arenas
+//!   together, geometrically.
+//! - **Generation guard**: every push/truncate bumps a store
+//!   generation; `StoreRawMut::row_mut` debug-asserts the generation
+//!   is unchanged (covered by unit tests in `gmm::store`).
+//!
+//! The tests here drive the public API: streams that interleave
+//! creates with engine passes at thread counts {1, 2, 4} must stay
+//! bit-identical to the serial path (in debug builds the generation
+//! guard would fire if a pass ever held a view across a create), and
+//! reserved models must keep stable arena bases for their whole life.
+
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode};
+use figmn::rng::Pcg64;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// A stream engineered to keep creating components between (and only
+/// between) engine passes: clustered points that update, interleaved
+/// with novel far-away points that create, all the way up to the cap.
+fn creating_stream(d: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    let mut centers: Vec<Vec<f64>> = vec![(0..d).map(|_| rng.normal()).collect()];
+    (0..n)
+        .map(|i| {
+            if i % 3 == 0 {
+                // Novel: a fresh far-away center → create.
+                let c: Vec<f64> =
+                    (0..d).map(|_| rng.normal() * 5.0 + (centers.len() * 50) as f64).collect();
+                centers.push(c.clone());
+                c
+            } else {
+                // Revisit a known center → update pass over all rows.
+                let c = &centers[i % centers.len()];
+                c.iter().map(|&m| m + rng.normal() * 0.3).collect()
+            }
+        })
+        .collect()
+}
+
+/// Creates interleaved with sharded engine passes, at every thread
+/// count, with and without reservation: trajectories stay bit-identical
+/// to the serial path, and (in debug builds) the generation guard
+/// proves no raw view ever spanned a create.
+#[test]
+fn creates_across_engine_passes_bit_identical() {
+    let d = 16;
+    let stream = creating_stream(d, 400, 29);
+    for (reserve, mode) in
+        [(true, KernelMode::Strict), (false, KernelMode::Strict), (true, KernelMode::Fast)]
+    {
+        let mut cfg = GmmConfig::new(d)
+            .with_delta(1.0)
+            .with_beta(0.05)
+            .with_kernel_mode(mode)
+            .without_pruning();
+        if reserve {
+            cfg = cfg.with_max_components(256);
+        }
+        let stds = vec![2.0; d];
+
+        let mut serial = Figmn::new(cfg.clone(), &stds);
+        for x in &stream {
+            serial.learn(x);
+        }
+        assert!(
+            serial.num_components() >= 32,
+            "stream too tame: only {} components",
+            serial.num_components()
+        );
+
+        for t in THREAD_COUNTS {
+            let mut pooled = Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(t));
+            for x in &stream {
+                pooled.learn(x);
+            }
+            assert_eq!(
+                serial.num_components(),
+                pooled.num_components(),
+                "reserve={reserve} T={t}: K diverged"
+            );
+            for j in 0..serial.num_components() {
+                assert_eq!(
+                    serial.component_mean(j),
+                    pooled.component_mean(j),
+                    "reserve={reserve} T={t}: mean[{j}]"
+                );
+                assert_eq!(
+                    serial.store().mat(j),
+                    pooled.store().mat(j),
+                    "reserve={reserve} T={t}: mat[{j}]"
+                );
+                assert_eq!(
+                    serial.component_stats(j),
+                    pooled.component_stats(j),
+                    "reserve={reserve} T={t}: sp/v[{j}]"
+                );
+            }
+        }
+    }
+}
+
+/// With `max_components` set, the arena bases never move: the address
+/// of row 0 is stable from first create to cap, across engine passes.
+#[test]
+fn reserved_arenas_keep_stable_bases() {
+    let d = 8;
+    let cap = 96;
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(cap)
+        .without_pruning();
+    let stds = vec![2.0; d];
+    let mut m = Figmn::new(cfg, &stds).with_engine(EngineConfig::new(2));
+    assert!(m.store().capacity_rows() >= cap);
+
+    let stream = creating_stream(d, 600, 41);
+    m.learn(&stream[0]);
+    let mean_base = m.store().mean(0).as_ptr();
+    let mat_base = m.store().mat(0).as_ptr();
+    for x in &stream[1..] {
+        m.learn(x);
+    }
+    assert_eq!(m.num_components(), cap, "stream must fill the cap");
+    assert!(
+        std::ptr::eq(mean_base, m.store().mean(0).as_ptr()),
+        "means arena moved despite reservation"
+    );
+    assert!(
+        std::ptr::eq(mat_base, m.store().mat(0).as_ptr()),
+        "matrix arena moved despite reservation"
+    );
+}
+
+/// Restored (checkpoint-loaded) models re-reserve their headroom.
+#[test]
+fn restored_models_reserve_remaining_headroom() {
+    let d = 4;
+    let cap = 32;
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(cap)
+        .without_pruning();
+    let mut m = Figmn::new(cfg, &[2.0; 4]);
+    for x in creating_stream(d, 30, 77) {
+        m.learn(&x);
+    }
+    assert!(m.num_components() < cap);
+    let restored =
+        Figmn::from_json(&figmn::json::parse(&m.to_json().to_string_compact()).unwrap()).unwrap();
+    assert!(
+        restored.store().capacity_rows() >= cap,
+        "restored model must reserve up to max_components ({} < {cap})",
+        restored.store().capacity_rows()
+    );
+}

@@ -2,7 +2,7 @@
 //! the per-component format with a dense row-major `lambda` — must load
 //! into the new packed `ComponentStore` and score **bit-identically**.
 //!
-//! Two angles:
+//! Three angles:
 //! - `v1_document_loads_and_scores_bit_identically` synthesizes a v1
 //!   document with exactly the pre-refactor writer's fields (the dense
 //!   matrix reconstructed from the packed arenas — identical values,
@@ -12,8 +12,13 @@
 //! - `static_v1_fixture_loads` pins the on-disk format itself with a
 //!   committed fixture file, cross-checked against an identical model
 //!   assembled through the independent `PackedState` wire-format path.
+//! - The same contract for the covariance baseline: a committed v1
+//!   `Igmn` fixture (dense per-component `cov`) loads and scores
+//!   bit-identically to its v2 re-save, and v2 documents carrying the
+//!   additive `kernel_mode` field degrade gracefully on readers that
+//!   drop it.
 
-use figmn::gmm::{CHECKPOINT_MIN_VERSION, Figmn, GmmConfig, IncrementalMixture};
+use figmn::gmm::{CHECKPOINT_MIN_VERSION, Figmn, GmmConfig, Igmn, IncrementalMixture, KernelMode};
 use figmn::json::{parse, Json};
 use figmn::rng::Pcg64;
 use figmn::runtime::PackedState;
@@ -130,6 +135,156 @@ fn v1_corrupt_lower_triangle_is_rejected() {
     // Asymmetric dense matrix: the two readers would disagree — reject.
     let bad = good.replace("[1,0.25,0.25,1]", "[1,0.25,0.75,1]");
     assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "asymmetric lambda");
+}
+
+fn trained_igmn() -> Igmn {
+    let cfg = GmmConfig::new(3).with_delta(0.4).with_beta(0.1).with_pruning(5, 0.5);
+    let mut m = Igmn::new(cfg, &[2.0, 2.0, 2.0]);
+    let mut rng = Pcg64::seed(37);
+    for _ in 0..150 {
+        let c = if rng.uniform() < 0.5 { 0.0 } else { 8.0 };
+        let x: Vec<f64> = (0..3).map(|_| c + rng.normal()).collect();
+        m.learn(&x);
+    }
+    m
+}
+
+/// Re-emit a live Igmn in the v1 format: version 1, per-component
+/// dense row-major `cov`.
+fn to_v1_igmn_doc(m: &Igmn) -> Json {
+    let cfg = m.config();
+    let comps: Vec<Json> = (0..m.num_components())
+        .map(|j| {
+            let cov = m.component_cov(j); // dense expansion
+            let (sp, v) = m.component_stats(j);
+            Json::obj(vec![
+                ("mean", Json::num_array(m.component_mean(j))),
+                ("cov", Json::num_array(cov.as_slice())),
+                ("sp", sp.into()),
+                ("v", (v as usize).into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", CHECKPOINT_MIN_VERSION.into()),
+        ("crate_version", "0.1.0".into()),
+        ("kind", "igmn".into()),
+        ("dim", cfg.dim.into()),
+        ("delta", cfg.delta.into()),
+        ("beta", cfg.beta.into()),
+        ("v_min", (cfg.v_min as usize).into()),
+        ("sp_min", cfg.sp_min.into()),
+        ("prune", cfg.prune.into()),
+        ("max_components", cfg.max_components.into()),
+        ("sigma_ini", Json::num_array(m.sigma_ini())),
+        ("points", (m.points_seen() as usize).into()),
+        ("components", Json::Arr(comps)),
+    ])
+}
+
+#[test]
+fn v1_igmn_document_loads_and_scores_bit_identically() {
+    let mut live = trained_igmn();
+    let text = to_v1_igmn_doc(&live).to_string_compact();
+    assert!(text.contains("\"version\":1"));
+    assert!(text.contains("\"cov\":["), "doc must carry the dense covariance");
+    let mut restored = Igmn::from_json(&parse(&text).unwrap()).unwrap();
+
+    assert_eq!(restored.num_components(), live.num_components());
+    assert_eq!(restored.points_seen(), live.points_seen());
+    let mut rng = Pcg64::seed(71);
+    for _ in 0..20 {
+        let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+        assert!(
+            live.log_density(&x).to_bits() == restored.log_density(&x).to_bits(),
+            "v1-loaded igmn log_density bits differ"
+        );
+        assert_eq!(live.posteriors(&x), restored.posteriors(&x));
+    }
+    // Continued learning stays identical too.
+    for _ in 0..30 {
+        let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+        assert_eq!(live.learn(&x), restored.learn(&x));
+    }
+    assert_eq!(live.num_components(), restored.num_components());
+    for j in 0..live.num_components() {
+        assert_eq!(live.component_mean(j), restored.component_mean(j));
+        assert_eq!(
+            live.component_cov(j).as_slice(),
+            restored.component_cov(j).as_slice()
+        );
+    }
+    // Re-saving produces a current-format (v2, packed) checkpoint.
+    let resaved = restored.to_json().to_string_compact();
+    assert!(resaved.contains("\"version\":2"));
+    assert!(resaved.contains("\"cov_packed\":["));
+}
+
+#[test]
+fn v1_igmn_corrupt_lower_triangle_is_rejected() {
+    let good = r#"{"version":1,"kind":"igmn","dim":2,"delta":0.5,"beta":0.1,
+        "v_min":5,"sp_min":3,"prune":false,"max_components":0,
+        "sigma_ini":[1,1],"points":1,"components":[
+        {"mean":[0,0],"cov":[1,0.25,0.25,1],"sp":1,"v":1}]}"#;
+    assert!(Igmn::from_json(&parse(good).unwrap()).is_ok());
+    let bad = good.replace("[1,0.25,0.25,1]", "[1,0.25,1e999,1]");
+    assert!(Igmn::from_json(&parse(&bad).unwrap()).is_err(), "non-finite lower triangle");
+    let bad = good.replace("[1,0.25,0.25,1]", "[1,0.25,0.75,1]");
+    assert!(Igmn::from_json(&parse(&bad).unwrap()).is_err(), "asymmetric cov");
+    // A v1 igmn doc is not loadable as figmn and vice versa.
+    assert!(Figmn::from_json(&parse(good).unwrap()).is_err());
+}
+
+#[test]
+fn static_v1_igmn_fixture_loads() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/checkpoint_v1_igmn.json"
+    );
+    let text = std::fs::read_to_string(path).expect("fixture must exist");
+    let loaded = Igmn::from_json(&parse(&text).unwrap()).expect("v1 igmn fixture must load");
+    assert_eq!(loaded.dim(), 2);
+    assert_eq!(loaded.num_components(), 2);
+    assert_eq!(loaded.points_seen(), 7);
+    assert_eq!(loaded.component_mean(1), &[4.0, 4.0]);
+    assert_eq!(loaded.component_stats(0), (1.5, 3));
+    assert_eq!(loaded.component_cov(0).as_slice(), &[1.0, 0.0, 0.0, 1.0]);
+    // v1 docs predate kernel_mode: Strict by construction.
+    assert_eq!(loaded.config().kernel_mode, KernelMode::Strict);
+
+    // The v2 re-save round-trips to the exact same scoring behaviour.
+    let resaved = Igmn::from_json(&parse(&loaded.to_json().to_string_compact()).unwrap()).unwrap();
+    for x in [[0.5, -0.25], [3.5, 4.25], [2.0, 2.0]] {
+        assert!(
+            loaded.log_density(&x).to_bits() == resaved.log_density(&x).to_bits(),
+            "fixture scoring diverged through the v2 round trip at {x:?}"
+        );
+        assert_eq!(loaded.posteriors(&x), resaved.posteriors(&x));
+    }
+}
+
+/// v2 documents now carry the additive `kernel_mode` field; readers
+/// that drop it (the pre-dual-mode reader behaviour) still load the
+/// checkpoint — for both kinds.
+#[test]
+fn v2_kernel_mode_field_degrades_gracefully() {
+    let fig = trained_model();
+    let text = fig.to_json().to_string_compact();
+    assert!(text.contains("\"kernel_mode\":\"strict\""));
+    let stripped = text.replace("\"kernel_mode\":\"strict\",", "");
+    let loaded = Figmn::from_json(&parse(&stripped).unwrap()).unwrap();
+    assert_eq!(loaded.num_components(), fig.num_components());
+    let mut rng = Pcg64::seed(13);
+    for _ in 0..10 {
+        let x: Vec<f64> = (0..3).map(|_| rng.normal() * 4.0).collect();
+        assert_eq!(fig.log_density(&x), loaded.log_density(&x));
+    }
+
+    let ig = trained_igmn();
+    let text = ig.to_json().to_string_compact();
+    let stripped = text.replace("\"kernel_mode\":\"strict\",", "");
+    let loaded = Igmn::from_json(&parse(&stripped).unwrap()).unwrap();
+    assert_eq!(loaded.num_components(), ig.num_components());
 }
 
 #[test]

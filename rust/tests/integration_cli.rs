@@ -48,6 +48,35 @@ fn train_runs_both_variants() {
 }
 
 #[test]
+fn train_kernel_mode_flag() {
+    // Fast kernels are tolerance-equivalent: same discovered structure,
+    // same AUC to the printed precision on this easy stream.
+    let (strict_out, stderr, ok) =
+        figmn(&["train", "iris", "--delta", "1", "--beta", "0.001", "--kernel-mode", "strict"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(strict_out.contains("kernels=strict"), "{strict_out}");
+    let (fast_out, stderr, ok) =
+        figmn(&["train", "iris", "--delta", "1", "--beta", "0.001", "--kernel-mode", "fast"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(fast_out.contains("kernels=fast"), "{fast_out}");
+    let auc = |s: &str| s.split("AUC ").nth(1).unwrap()[..5].to_string();
+    assert_eq!(auc(&strict_out), auc(&fast_out));
+    // The covariance baseline always runs strict kernels: the flag is
+    // noted-and-ignored, and the output reports what actually ran.
+    let (orig_out, stderr, ok) = figmn(&[
+        "train", "iris", "--delta", "1", "--beta", "0.001", "--algo", "orig",
+        "--kernel-mode", "fast",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(orig_out.contains("kernels=strict"), "{orig_out}");
+    assert!(stderr.contains("strict kernels"), "{stderr}");
+    // Unknown modes fail cleanly.
+    let (_, stderr, ok) = figmn(&["train", "iris", "--kernel-mode", "warp"]);
+    assert!(!ok);
+    assert!(stderr.contains("kernel-mode"), "{stderr}");
+}
+
+#[test]
 fn unknown_commands_fail_cleanly() {
     let (_, _, ok) = figmn(&["bogus"]);
     assert!(!ok);

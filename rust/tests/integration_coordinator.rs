@@ -72,6 +72,7 @@ fn dispatch_covers_full_protocol_surface() {
         beta: 0.05,
         stds: vec![2.0, 2.0],
         shards: 2,
+        kernel_mode: figmn::gmm::KernelMode::Strict,
     };
     assert_eq!(dispatch(create.clone(), &registry, &xla), Response::Ok);
     // Duplicate create fails.

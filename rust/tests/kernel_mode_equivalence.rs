@@ -1,0 +1,191 @@
+//! Strict ≡ Fast kernel-mode equivalence — the dual-mode contract.
+//!
+//! A model configured with `KernelMode::Fast` runs blocked
+//! SIMD-friendly variants of the three hot packed kernels instead of
+//! the bit-identical scalar reference. The contract
+//! (`linalg::KernelMode`):
+//!
+//! - **tolerance equivalence**: on the paper's Table 1 streams, a
+//!   fast-mode model's log-densities track the strict model's to
+//!   relative 1e-12, with the same discovered structure (same
+//!   create/update decisions, same K);
+//! - **determinism within a mode**: for a fixed mode, every engine
+//!   thread count reproduces the serial path bit for bit;
+//! - **checkpoint portability**: fast-trained checkpoints round-trip
+//!   their mode, and readers that drop the additive `kernel_mode`
+//!   field still load the document (defaulting to Strict) and score
+//!   within the same tolerance.
+
+use figmn::data::synth;
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode};
+use figmn::json::parse;
+use figmn::rng::Pcg64;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Table 1 streams: fast mode discovers the same mixture as strict
+/// mode and scores within relative 1e-12.
+#[test]
+fn table1_streams_fast_tracks_strict_to_1e12() {
+    for name in ["iris", "Glass", "ionosphere"] {
+        let spec = synth::spec(name).unwrap();
+        let data = synth::generate(spec, 7);
+        let stds = data.feature_stds();
+        let strict_cfg = GmmConfig::new(data.dim())
+            .with_delta(0.1)
+            .with_beta(0.1)
+            .with_max_components(64)
+            .without_pruning();
+        let fast_cfg = strict_cfg.clone().with_kernel_mode(KernelMode::Fast);
+
+        let mut strict = Figmn::new(strict_cfg, &stds);
+        let mut fast = Figmn::new(fast_cfg, &stds);
+        for (step, x) in data.features.iter().enumerate() {
+            assert_eq!(
+                strict.learn(x),
+                fast.learn(x),
+                "{name}: create/update decisions diverged at step {step}"
+            );
+        }
+        assert_eq!(strict.num_components(), fast.num_components(), "{name}: K diverged");
+        assert!(strict.num_components() >= 2, "{name}: stream too tame");
+
+        let mut rng = Pcg64::seed(11);
+        for i in 0..20 {
+            let x: Vec<f64> =
+                (0..data.dim()).map(|_| rng.normal() * 2.0).collect();
+            let a = strict.log_density(&x);
+            let b = fast.log_density(&x);
+            assert!(
+                rel_close(a, b, 1e-12),
+                "{name}: log_density[{i}] diverged past 1e-12 ({a} vs {b})"
+            );
+            // Batch scoring runs the same mode-aware kernels.
+            assert_eq!(fast.score_batch(&[x.clone()])[0], b, "{name}: batch != serial");
+        }
+        // Component state tracks too (the update kernel's tolerance).
+        for j in 0..strict.num_components() {
+            for (a, b) in strict
+                .component_mean(j)
+                .iter()
+                .zip(fast.component_mean(j).iter())
+            {
+                assert!(rel_close(*a, *b, 1e-9), "{name}: mean[{j}] diverged");
+            }
+            assert!(
+                rel_close(strict.component_log_det(j), fast.component_log_det(j), 1e-9),
+                "{name}: log_det[{j}] diverged"
+            );
+        }
+    }
+}
+
+/// Fast mode keeps the crate's determinism guarantee *within the
+/// mode*: thread counts {1, 2, 4} reproduce the serial fast path bit
+/// for bit, including snapshot scoring.
+#[test]
+fn fast_mode_bit_identical_across_thread_counts() {
+    let d = 24;
+    let k_cap = 64;
+    let mut rng = Pcg64::seed(3);
+    let centers: Vec<Vec<f64>> =
+        (0..k_cap).map(|_| (0..d).map(|_| rng.normal() * 30.0).collect()).collect();
+    let stream: Vec<Vec<f64>> = (0..600)
+        .map(|i| centers[i % k_cap].iter().map(|&c| c + rng.normal() * 0.5).collect())
+        .collect();
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(k_cap)
+        .with_kernel_mode(KernelMode::Fast)
+        .without_pruning();
+    let stds = vec![1.0; d];
+
+    let mut serial = Figmn::new(cfg.clone(), &stds);
+    for x in &stream {
+        serial.learn(x);
+    }
+    // K·D² = 64·576 ≫ the engine gate: the sharded fast path really runs.
+    assert_eq!(serial.num_components(), k_cap);
+    let probes: Vec<Vec<f64>> = stream[..8].to_vec();
+    let snap = serial.snapshot();
+
+    for t in THREAD_COUNTS {
+        let mut pooled =
+            Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(t));
+        pooled.learn_batch(&stream);
+        assert_eq!(serial.num_components(), pooled.num_components(), "T={t}: K");
+        for j in 0..serial.num_components() {
+            assert_eq!(serial.component_mean(j), pooled.component_mean(j), "T={t}: mean[{j}]");
+            assert_eq!(serial.store().mat(j), pooled.store().mat(j), "T={t}: lambda[{j}]");
+            assert_eq!(
+                serial.component_log_det(j),
+                pooled.component_log_det(j),
+                "T={t}: log_det[{j}]"
+            );
+            assert_eq!(serial.component_stats(j), pooled.component_stats(j), "T={t}: sp/v[{j}]");
+        }
+        for (i, x) in probes.iter().enumerate() {
+            assert_eq!(serial.log_density(x), pooled.log_density(x), "T={t}: density[{i}]");
+            assert_eq!(serial.posteriors(x), pooled.posteriors(x), "T={t}: posteriors[{i}]");
+            // The snapshot runs the source model's mode, so it matches
+            // the serial fast path bit for bit.
+            assert_eq!(snap.log_density(x), serial.log_density(x), "snapshot density[{i}]");
+        }
+        assert_eq!(serial.score_batch(&probes), pooled.score_batch(&probes), "T={t}: batch");
+    }
+}
+
+/// Fast-trained checkpoints load everywhere: the mode round-trips, and
+/// a reader that drops the additive field still loads the document and
+/// scores within the fast-mode tolerance.
+#[test]
+fn fast_checkpoints_round_trip_and_degrade_gracefully() {
+    let spec = synth::spec("iris").unwrap();
+    let data = synth::generate(spec, 5);
+    let stds = data.feature_stds();
+    let cfg = GmmConfig::new(data.dim())
+        .with_delta(0.2)
+        .with_beta(0.1)
+        .with_kernel_mode(KernelMode::Fast)
+        .without_pruning();
+    let mut m = Figmn::new(cfg, &stds);
+    for x in &data.features {
+        m.learn(x);
+    }
+
+    let text = m.to_json().to_string_compact();
+    assert!(text.contains("\"kernel_mode\":\"fast\""), "v2 must carry the mode");
+
+    // Same-version reader: mode preserved, scoring bit-identical.
+    let restored = Figmn::from_json(&parse(&text).unwrap()).unwrap();
+    assert_eq!(restored.config().kernel_mode, KernelMode::Fast);
+    let mut rng = Pcg64::seed(9);
+    for _ in 0..10 {
+        let x: Vec<f64> = (0..data.dim()).map(|_| rng.normal() * 2.0).collect();
+        assert_eq!(m.log_density(&x), restored.log_density(&x));
+    }
+
+    // A reader that ignores/drops the field (the pre-dual-mode format)
+    // still loads the same arenas — Strict by default — and scores
+    // within the tolerance contract.
+    let stripped = text.replace("\"kernel_mode\":\"fast\",", "");
+    assert!(!stripped.contains("kernel_mode"));
+    let as_strict = Figmn::from_json(&parse(&stripped).unwrap()).unwrap();
+    assert_eq!(as_strict.config().kernel_mode, KernelMode::Strict);
+    assert_eq!(as_strict.num_components(), m.num_components());
+    for _ in 0..10 {
+        let x: Vec<f64> = (0..data.dim()).map(|_| rng.normal() * 2.0).collect();
+        let a = m.log_density(&x);
+        let b = as_strict.log_density(&x);
+        assert!(
+            rel_close(a, b, 1e-12),
+            "strict reader of fast checkpoint diverged ({a} vs {b})"
+        );
+    }
+}

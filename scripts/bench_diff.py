@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Diff-report fresh BENCH_*.json results against the committed baselines.
+
+Usage: bench_diff.py BENCH_scaling_dim.json [BENCH_layout_bandwidth.json ...]
+
+For each file, the committed baseline is read from `git show HEAD:<file>`
+(the checkout's version before the bench overwrote it). Metrics are
+compared row by row with direction-aware semantics: higher-is-better
+fields (`*_per_s`, `speedup`/`fast_speedup`) regress when they drop,
+lower-is-better fields (`*_s_per_pt`, the scaling_dim per-point times)
+regress when they rise; either direction beyond THRESHOLD is reported.
+
+Report-only by design: quick-mode numbers on shared CI runners are
+noisy, so this prints a table (and ::warning:: lines GitHub renders on
+the run page) but always exits 0. Refresh the baselines with
+`scripts/bench_smoke.sh` and commit the rewritten files.
+"""
+
+import json
+import subprocess
+import sys
+
+THRESHOLD = 0.30  # flag drops of more than 30%
+
+
+def baseline_of(path):
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"], capture_output=True, text=True, check=True
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def metric_keys(row):
+    """(key, higher_is_better) pairs for the numeric metrics of a row."""
+    out = []
+    for k, v in row.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            continue
+        if k.endswith("_per_s") or k in ("speedup", "fast_speedup"):
+            out.append((k, True))
+        elif k.endswith("_s_per_pt"):
+            out.append((k, False))
+    return out
+
+
+def row_key(row):
+    return tuple(sorted((k, v) for k, v in row.items() if k in ("d", "k", "threads", "mode")))
+
+
+def series(doc):
+    """All named row-arrays in a bench document."""
+    out = {}
+    for key, val in (doc or {}).items():
+        if isinstance(val, list) and val and isinstance(val[0], dict):
+            out[key] = val
+    return out
+
+
+def main(paths):
+    regressions = 0
+    for path in paths:
+        try:
+            with open(path) as f:
+                fresh = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: cannot read fresh results ({e}); skipping")
+            continue
+        base = baseline_of(path)
+        if base is None:
+            print(f"{path}: no committed baseline (or unparsable); recording only")
+            continue
+        if base.get("quick") != fresh.get("quick"):
+            print(f"{path}: baseline/fresh quick-mode mismatch; recording only")
+            continue
+        base_series = series(base)
+        for name, fresh_rows in series(fresh).items():
+            base_rows = {row_key(r): r for r in base_series.get(name, [])}
+            if not base_rows:
+                print(f"{path}:{name}: baseline has no rows; recording only")
+                continue
+            for row in fresh_rows:
+                b = base_rows.get(row_key(row))
+                if b is None:
+                    continue
+                for k, higher_better in metric_keys(row):
+                    if k not in b or not b[k]:
+                        continue
+                    ratio = row[k] / b[k]
+                    # Normalize so "goodness < 1 - THRESHOLD" always
+                    # means the fresh number is worse than baseline.
+                    goodness = ratio if higher_better else 1.0 / ratio
+                    tag = f"{path}:{name} {dict(row_key(row))} {k}"
+                    if goodness < 1.0 - THRESHOLD:
+                        regressions += 1
+                        print(
+                            f"::warning::bench regression {tag}: "
+                            f"{b[k]:.3e} -> {row[k]:.3e} ({ratio:.2f}x)"
+                        )
+                    else:
+                        print(f"ok {tag}: {b[k]:.3e} -> {row[k]:.3e} ({ratio:.2f}x)")
+    print(f"bench_diff: {regressions} regression(s) beyond {THRESHOLD:.0%} (report-only)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["BENCH_scaling_dim.json", "BENCH_layout_bandwidth.json"]))
