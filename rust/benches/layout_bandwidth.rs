@@ -8,12 +8,21 @@
 //!
 //! Since the dual-mode kernels landed, the bench also records the
 //! **strict-vs-fast** series on the packed layout (D ∈ {16, 64, 128,
-//! 1024} in full mode): same sweeps, `KernelMode::Fast`'s blocked
-//! auto-vectorizable loops against `Strict`'s scalar reference, with a
-//! tolerance gate (fast trajectories must track strict ones) and a
-//! full-mode ≥1.5× throughput assertion at D ≥ 64. A reservation probe
-//! records that `ComponentStore` arenas stay at fixed base addresses
-//! across creates when `max_components` is set.
+//! 1024, 3072} in full mode — 3072 is the paper's CIFAR scale, where a
+//! packed triangle alone is ~38 MB and every sweep runs from DRAM): same
+//! sweeps, `KernelMode::Fast`'s blocked auto-vectorizable loops against
+//! `Strict`'s scalar reference, with a tolerance gate (fast
+//! trajectories must track strict ones) and a full-mode ≥1.5×
+//! throughput assertion at D ≥ 64.
+//!
+//! The **blocked multi-query** series times the serving read path's
+//! tentpole: per-point `quad_form` (each query re-streams the packed
+//! triangle) against `quad_form_multi`/`quad_form_multi_fast` at
+//! B ∈ {1, 8, 32}, with bitwise gates (blocking must not change any
+//! query's value) and a full-mode ≥2× assertion for the strict blocked
+//! kernel at B = 32, 256 ≤ D ≤ 1024. A reservation probe records that
+//! `ComponentStore` arenas stay at fixed base addresses across creates
+//! when `max_components` is set.
 //!
 //! Run: `cargo bench --bench layout_bandwidth`
 //! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench layout_bandwidth`
@@ -77,6 +86,31 @@ fn build(d: usize, k: usize, seed: u64) -> (Vec<DenseComp>, PackedArenas) {
         dense.push(DenseComp { mean, lambda: lam, log_det });
     }
     (dense, arenas)
+}
+
+/// Packed-only builder for the large-D series (the dense mirror of
+/// [`build`] would cost `K·D²` doubles — ~75 MB per component at
+/// D = 3072 — and those series never touch it). Same diagonally-
+/// dominant SPD shape, written straight into packed storage.
+fn build_packed(d: usize, k: usize, seed: u64) -> PackedArenas {
+    let mut rng = Pcg64::seed(seed);
+    let tri = packed::packed_len(d);
+    let mut arenas = PackedArenas {
+        means: Vec::with_capacity(k * d),
+        mats: Vec::with_capacity(k * tri),
+        log_dets: Vec::with_capacity(k),
+    };
+    for _ in 0..k {
+        for i in 0..d {
+            arenas.mats.push(2.0 + rng.uniform()); // diagonal (i, i)
+            for _ in i + 1..d {
+                arenas.mats.push(rng.normal() * 0.01 / (d as f64)); // (i, j>i)
+            }
+        }
+        arenas.means.extend((0..d).map(|_| rng.normal()));
+        arenas.log_dets.push(rng.normal() * 0.1);
+    }
+    arenas
 }
 
 /// One learn-like sweep over all K components in the dense layout:
@@ -243,7 +277,10 @@ fn main() {
     }
 
     // ---- strict vs fast kernel modes on the packed layout -----------
-    let mode_dims: &[usize] = if quick { &[16, 64] } else { &[16, 64, 128, 1024] };
+    // Full mode now reaches the paper's CIFAR-scale D = 3072, where one
+    // packed triangle alone is ~38 MB — far past every cache level, so the
+    // series records where the strict/fast sweeps saturate bandwidth.
+    let mode_dims: &[usize] = if quick { &[16, 64] } else { &[16, 64, 128, 1024, 3072] };
     println!("\nstrict vs fast packed kernels{}", if quick { " [quick]" } else { "" });
     let t2 = TablePrinter::new(
         &["D", "K", "strict pts/s", "fast pts/s", "speedup"],
@@ -251,8 +288,15 @@ fn main() {
     );
     let mut mode_rows: Vec<Json> = Vec::new();
     for &d in mode_dims {
-        // Shrink K at D=1024 so the full-mode arenas stay ~130 MB.
-        let km = if quick || d >= 512 { 16 } else { 128 };
+        // Shrink K as D grows so the full-mode arenas stay bounded
+        // (~130 MB at D=1024; ~300 MB for the two D=3072 arenas).
+        let km = if d >= 2048 {
+            4
+        } else if quick || d >= 512 {
+            16
+        } else {
+            128
+        };
         let points = if quick { 200_000 / (d * d) + 20 } else { 4_000_000 / (d * d) + 50 };
         let mut rng = Pcg64::seed(23);
         let xs: Vec<Vec<f64>> =
@@ -261,7 +305,7 @@ fn main() {
         let mut w = vec![0.0; d];
         let mut e = vec![0.0; d];
 
-        let (_, mut strict_arenas) = build(d, km, 13);
+        let mut strict_arenas = build_packed(d, km, 13);
         let mut fast_arenas = PackedArenas {
             means: strict_arenas.means.clone(),
             mats: strict_arenas.mats.clone(),
@@ -301,7 +345,11 @@ fn main() {
                 "D={d}: log-det diverged at component {j} ({ls} vs {lf})"
             );
         }
-        if !quick && d >= 64 {
+        // No floor at D=3072: that dim exists to *record* where both
+        // modes hit the bandwidth ceiling (the fast speedup is allowed
+        // to collapse there), mirroring the blocked series' 256..=1024
+        // assert range below.
+        if !quick && (64..=1024).contains(&d) {
             assert!(
                 speedup >= 1.5,
                 "D={d}: fast kernels must be ≥1.5× strict, got {speedup:.2}×"
@@ -325,6 +373,201 @@ fn main() {
         ]));
     }
 
+    // ---- blocked multi-query scoring kernels ------------------------
+    // The serving read path's tentpole: per-point scoring re-streams
+    // every packed triangle once per query; the multi-query kernels
+    // stream each packed row once per B-query block. This series times
+    // both, per mode, at B ∈ {1, 8, 32} — and extends to the paper's
+    // CIFAR-scale D = 3072 in full mode to record where the blocked
+    // sweep, too, saturates bandwidth.
+    let blk_dims: &[usize] = if quick { &[16, 64] } else { &[64, 256, 1024, 3072] };
+    let tag = if quick { " [quick]" } else { "" };
+    println!("\nblocked multi-query vs per-point scoring kernels{tag}");
+    let t3 = TablePrinter::new(
+        &[
+            "D",
+            "K",
+            "B",
+            "strict pp q/s",
+            "strict blk q/s",
+            "spd",
+            "fast pp q/s",
+            "fast blk q/s",
+            "spd",
+        ],
+        &[6, 5, 4, 14, 14, 7, 14, 14, 7],
+    );
+    let mut blk_rows: Vec<Json> = Vec::new();
+    let mut min_blk_speedup_mid_d = f64::INFINITY;
+    for &d in blk_dims {
+        let kb = if d >= 2048 {
+            4
+        } else if d >= 512 {
+            16
+        } else if quick {
+            32
+        } else {
+            64
+        };
+        let arenas = build_packed(d, kb, 31);
+        let tri = packed::packed_len(d);
+        let nq = if quick { 32 } else { (64_000_000 / (kb * d * d)).clamp(32, 256) };
+        let mut rng = Pcg64::seed(37);
+        // Residual blocks directly (the mean subtraction is O(B·D) and
+        // identical on both paths — this series times the kernels).
+        let es: Vec<f64> = (0..nq * d).map(|_| rng.normal()).collect();
+        let mut w1 = vec![0.0; d];
+        let mut wide = vec![0.0; 32 * d];
+        let mut out = vec![0.0; 32];
+
+        // Per-point and blocked sweeps per mode; bitwise gates prove
+        // blocking changes no query's value.
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for q in 0..nq {
+            let x = &es[q * d..(q + 1) * d];
+            for j in 0..kb {
+                sink += packed::quad_form(&arenas.mats[j * tri..(j + 1) * tri], d, x);
+            }
+        }
+        let strict_pp = nq as f64 / t0.elapsed().as_secs_f64();
+        assert!(sink.is_finite());
+
+        let mut strict_blk_rates = Vec::new();
+        let mut fast_blk_rates = Vec::new();
+        for &bsz in &[1usize, 8, 32] {
+            let t0 = Instant::now();
+            let mut check = 0.0;
+            for qs in (0..nq).step_by(bsz) {
+                let b = bsz.min(nq - qs);
+                let block = &es[qs * d..(qs + b) * d];
+                for j in 0..kb {
+                    packed::quad_form_multi(
+                        &arenas.mats[j * tri..(j + 1) * tri],
+                        d,
+                        block,
+                        b,
+                        &mut out[..b],
+                    );
+                    check += out[..b].iter().sum::<f64>();
+                }
+            }
+            strict_blk_rates.push((bsz, nq as f64 / t0.elapsed().as_secs_f64()));
+            assert!(check.is_finite());
+        }
+        // Bitwise gate (strict): one block's results equal the scalar kernel.
+        {
+            let b = 32.min(nq);
+            packed::quad_form_multi(&arenas.mats[..tri], d, &es[..b * d], b, &mut out[..b]);
+            for (q, o) in out[..b].iter().enumerate() {
+                let expect = packed::quad_form(&arenas.mats[..tri], d, &es[q * d..(q + 1) * d]);
+                assert!(
+                    o.to_bits() == expect.to_bits(),
+                    "D={d}: strict blocked bits diverged at query {q}"
+                );
+            }
+        }
+
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for q in 0..nq {
+            let x = &es[q * d..(q + 1) * d];
+            for j in 0..kb {
+                sink += packed::quad_form_with_fast(
+                    &arenas.mats[j * tri..(j + 1) * tri],
+                    d,
+                    x,
+                    &mut w1,
+                );
+            }
+        }
+        let fast_pp = nq as f64 / t0.elapsed().as_secs_f64();
+        assert!(sink.is_finite());
+
+        for &bsz in &[1usize, 8, 32] {
+            let t0 = Instant::now();
+            let mut check = 0.0;
+            for qs in (0..nq).step_by(bsz) {
+                let b = bsz.min(nq - qs);
+                let block = &es[qs * d..(qs + b) * d];
+                for j in 0..kb {
+                    packed::quad_form_multi_fast(
+                        &arenas.mats[j * tri..(j + 1) * tri],
+                        d,
+                        block,
+                        b,
+                        &mut wide[..b * d],
+                        &mut out[..b],
+                    );
+                    check += out[..b].iter().sum::<f64>();
+                }
+            }
+            fast_blk_rates.push((bsz, nq as f64 / t0.elapsed().as_secs_f64()));
+            assert!(check.is_finite());
+        }
+        // Bitwise gate (fast): blocked equals the per-point fast kernel.
+        {
+            let b = 32.min(nq);
+            packed::quad_form_multi_fast(
+                &arenas.mats[..tri],
+                d,
+                &es[..b * d],
+                b,
+                &mut wide[..b * d],
+                &mut out[..b],
+            );
+            for (q, o) in out[..b].iter().enumerate() {
+                let expect = packed::quad_form_with_fast(
+                    &arenas.mats[..tri],
+                    d,
+                    &es[q * d..(q + 1) * d],
+                    &mut w1,
+                );
+                assert!(
+                    o.to_bits() == expect.to_bits(),
+                    "D={d}: fast blocked bits diverged at query {q}"
+                );
+            }
+        }
+
+        for (&(bsz, s_rate), &(_, f_rate)) in strict_blk_rates.iter().zip(fast_blk_rates.iter()) {
+            let s_spd = s_rate / strict_pp;
+            let f_spd = f_rate / fast_pp;
+            if bsz == 32 && (256..=1024).contains(&d) {
+                min_blk_speedup_mid_d = min_blk_speedup_mid_d.min(s_spd);
+            }
+            t3.row(&[
+                d.to_string(),
+                kb.to_string(),
+                bsz.to_string(),
+                format!("{strict_pp:.3e}"),
+                format!("{s_rate:.3e}"),
+                format!("{s_spd:5.2}×"),
+                format!("{fast_pp:.3e}"),
+                format!("{f_rate:.3e}"),
+                format!("{f_spd:5.2}×"),
+            ]);
+            blk_rows.push(Json::obj(vec![
+                ("d", Json::from(d)),
+                ("k", Json::from(kb)),
+                ("b", Json::from(bsz)),
+                ("strict_per_point_q_per_s", strict_pp.into()),
+                ("strict_blocked_q_per_s", s_rate.into()),
+                ("strict_blocked_speedup", s_spd.into()),
+                ("fast_per_point_q_per_s", fast_pp.into()),
+                ("fast_blocked_q_per_s", f_rate.into()),
+                ("fast_blocked_speedup", f_spd.into()),
+            ]));
+        }
+    }
+    if !quick {
+        assert!(
+            min_blk_speedup_mid_d >= 2.0,
+            "strict blocked kernels at B=32 must be ≥2× per-point for 256 ≤ D ≤ 1024, \
+             got {min_blk_speedup_mid_d:.2}×"
+        );
+    }
+
     // ---- ComponentStore reservation record --------------------------
     let (reserved_moved, reserved_cap) = reservation_probe(true);
     let (unreserved_moved, unreserved_cap) = reservation_probe(false);
@@ -342,6 +585,7 @@ fn main() {
         ("quick", quick.into()),
         ("rows", Json::Arr(rows)),
         ("strict_vs_fast", Json::Arr(mode_rows)),
+        ("blocked_multi_query", Json::Arr(blk_rows)),
         (
             "reservation",
             Json::obj(vec![
@@ -357,6 +601,7 @@ fn main() {
         Err(e) => eprintln!("could not write bench json: {e}"),
     }
     println!(
-        "layout_bandwidth OK — packed ≡ dense bitwise; fast kernels within tolerance of strict"
+        "layout_bandwidth OK — packed ≡ dense bitwise; fast kernels within tolerance of \
+         strict; blocked multi-query kernels ≡ per-point bitwise"
     );
 }

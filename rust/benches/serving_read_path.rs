@@ -9,18 +9,23 @@
 //! split's correctness contract: snapshot scoring is bit-identical to a
 //! serial model trained on the same prefix.
 //!
-//! Acceptance target (full mode, ≥ 4 cores): ≥ 2× read throughput at
-//! D = 64 features, K ≥ 32 components with 4 scorers vs. 1 scorer,
-//! under concurrent learn traffic.
+//! Acceptance targets (full mode):
+//!
+//! - ≥ 2× read throughput at D = 64 features, K ≥ 32 components with 4
+//!   scorers vs. 1 scorer, under concurrent learn traffic (≥ 4 cores).
+//! - **Blocked-batch series**: the query-blocked `score_batch` at
+//!   B = 32 sustains ≥ 2× the per-point `log_density` throughput at
+//!   D ≥ 256, K ≥ 32 — the single-thread bandwidth win of streaming
+//!   each packed component row once per query block.
 //!
 //! Run: `cargo bench --bench serving_read_path`
 //! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench serving_read_path`
 //! Writes `BENCH_serving_read_path.json`.
 
-use figmn::bench_support::{quick_mode, write_bench_json, TablePrinter};
+use figmn::bench_support::{grown_model, quick_mode, write_bench_json, TablePrinter};
 use figmn::coordinator::{Metrics, ModelSpec, Registry, RoutingPolicy};
 use figmn::gmm::supervised::supervised_figmn;
-use figmn::gmm::{GmmConfig, IncrementalMixture};
+use figmn::gmm::{GmmConfig, IncrementalMixture, KernelMode, ModelSnapshot};
 use figmn::json::Json;
 use figmn::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -165,6 +170,77 @@ fn measure(
     reads as f64 / secs
 }
 
+/// Snapshot with exactly `k` components at joint dimension `d` for the
+/// blocked-batch series (the shared grow-exactly-K recipe in
+/// `bench_support`, also used by `tests/blocked_scoring_equivalence.rs`).
+fn block_series_snapshot(d: usize, k: usize) -> ModelSnapshot {
+    grown_model(d, k, KernelMode::Strict, 19).snapshot()
+}
+
+/// Blocked-vs-per-point scoring series: the same snapshot and probes,
+/// scored through the per-point `log_density` loop (each query streams
+/// all K packed matrices) and through the component-outer `score_batch`
+/// at block sizes B ∈ {1, 8, 32}. Returns the minimum B=32 speedup
+/// observed at D ≥ 256 (∞ when no such dim ran).
+fn run_block_series(quick: bool, rows: &mut Vec<Json>) -> f64 {
+    let dims: &[usize] = if quick { &[32] } else { &[64, 256, 1024] };
+    let k = 32;
+    let t = TablePrinter::new(
+        &["D", "B", "per-pt q/s", "blocked q/s", "speedup"],
+        &[6, 4, 13, 13, 9],
+    );
+    let mut min_speedup_large_d = f64::INFINITY;
+    for &d in dims {
+        let snap = block_series_snapshot(d, k);
+        let n = if quick { 64 } else { (64_000_000 / (k * d * d)).clamp(32, 512) };
+        let mut rng = Pcg64::seed(101);
+        let probes: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.normal() * 500.0).collect()).collect();
+
+        // Correctness gate first: blocking must not change any bits.
+        let expect: Vec<f64> = probes.iter().map(|x| snap.log_density(x)).collect();
+        assert_eq!(snap.score_batch(&probes), expect, "D={d}: blocked scoring diverged");
+
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for x in &probes {
+            sink += snap.log_density(x);
+        }
+        let per_point = n as f64 / t0.elapsed().as_secs_f64();
+        assert!(sink.is_finite());
+
+        for &bsz in &[1usize, 8, 32] {
+            let t0 = Instant::now();
+            let mut sink = 0.0;
+            for chunk in probes.chunks(bsz) {
+                sink += snap.score_batch(chunk).iter().sum::<f64>();
+            }
+            let blocked = n as f64 / t0.elapsed().as_secs_f64();
+            assert!(sink.is_finite());
+            let speedup = blocked / per_point;
+            if bsz == 32 && d >= 256 {
+                min_speedup_large_d = min_speedup_large_d.min(speedup);
+            }
+            t.row(&[
+                d.to_string(),
+                bsz.to_string(),
+                format!("{per_point:.3e}"),
+                format!("{blocked:.3e}"),
+                format!("{speedup:7.2}×"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("d", Json::from(d)),
+                ("k", Json::from(k)),
+                ("b", Json::from(bsz)),
+                ("per_point_q_per_s", per_point.into()),
+                ("blocked_q_per_s", blocked.into()),
+                ("blocked_speedup", speedup.into()),
+            ]));
+        }
+    }
+    min_speedup_large_d
+}
+
 fn main() {
     let quick = quick_mode();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -205,6 +281,14 @@ fn main() {
         ]));
     }
 
+    println!(
+        "\nblocked-batch series — per-point log_density vs query-blocked \
+         score_batch (K=32, single thread{})",
+        if quick { ", quick mode" } else { "" }
+    );
+    let mut block_rows: Vec<Json> = Vec::new();
+    let min_block_speedup = run_block_series(quick, &mut block_rows);
+
     let payload = Json::obj(vec![
         ("bench", "serving_read_path".into()),
         ("dim_features", D.into()),
@@ -216,12 +300,30 @@ fn main() {
         ("bit_identical", true.into()),
         ("speedup_1_to_4_scorers", speedup_1_to_4.into()),
         ("rows", Json::Arr(rows)),
+        ("block_series", Json::Arr(block_rows)),
     ]);
     match write_bench_json("serving_read_path", &payload) {
         Ok(path) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }
 
+    if !quick {
+        // The ≥2× floor holds even on machines whose L3 swallows the
+        // D=256 model (~8.4 MB): the strict per-point quadratic form is
+        // one loop-carried FP chain (latency-bound at any cache level),
+        // while the blocked kernel runs four independent per-query
+        // chains per row — ILP the per-point path cannot reach — on top
+        // of the bandwidth saving that dominates once the triangles
+        // outgrow cache (D ≥ 1024).
+        assert!(
+            min_block_speedup >= 2.0,
+            "blocked score_batch at B=32 is {min_block_speedup:.2}× (< 2×) the per-point \
+             path at some D ≥ 256, K=32"
+        );
+        println!(
+            "blocked-batch OK — ≥{min_block_speedup:.2}× over per-point at D≥256, K=32, B=32"
+        );
+    }
     if !quick && cores >= 4 {
         assert!(
             speedup_1_to_4 >= 2.0,
@@ -231,7 +333,7 @@ fn main() {
     } else {
         println!(
             "serving_read_path done (speedup {speedup_1_to_4:.2}×; \
-             assertion skipped: quick={quick}, cores={cores})"
+             scorer assertion skipped: quick={quick}, cores={cores})"
         );
     }
 }

@@ -8,9 +8,51 @@
 
 pub mod gmm_eval;
 
+use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode};
 use crate::json::Json;
+use crate::rng::Pcg64;
 use crate::stats::{mean, paired_t_test, std_dev};
 use std::time::Instant;
+
+/// Config under which [`grow_stream`] grows **exactly** `k` components:
+/// σ_ini tiny (every far-apart center is novel), component count capped
+/// at `k` (everything after the cap updates), pruning off.
+pub fn grow_config(d: usize, k: usize, mode: KernelMode) -> GmmConfig {
+    GmmConfig::new(d)
+        .with_delta(0.001)
+        .with_beta(0.3)
+        .with_max_components(k)
+        .with_kernel_mode(mode)
+        .without_pruning()
+}
+
+/// Training stream for [`grow_config`]: `k` far-apart centers (each
+/// creates a component) followed by one noisy revisit per center (cap
+/// full → updates, so sp/log_det move off their initial values). One
+/// recipe shared by the blocked-scoring benches and
+/// `tests/blocked_scoring_equivalence.rs`, so the grow-exactly-K
+/// behavior cannot drift between them.
+pub fn grow_stream(d: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.normal() * 1e3).collect())
+        .collect();
+    let mut out: Vec<Vec<f64>> = centers.clone();
+    for c in &centers {
+        out.push(c.iter().map(|&v| v + rng.normal() * 0.1).collect());
+    }
+    out
+}
+
+/// A trained [`Figmn`] with exactly `k` components at dimension `d`.
+pub fn grown_model(d: usize, k: usize, mode: KernelMode, seed: u64) -> Figmn {
+    let mut m = Figmn::new(grow_config(d, k, mode), &vec![1.0; d]);
+    for x in grow_stream(d, k, seed) {
+        m.learn(&x);
+    }
+    assert_eq!(m.num_components(), k, "grow stream must create exactly K={k} components");
+    m
+}
 
 /// True when benches should run in CI-smoke "quick mode"
 /// (`FIGMN_BENCH_QUICK=1`): shrunken sweeps, perf assertions skipped.

@@ -14,6 +14,15 @@
 //! path by fewer than `snapshot_interval` learn steps (plus one queue
 //! timeout when the stream pauses) — see `WorkerConfig::snapshot_interval`.
 //!
+//! Batch read jobs ([`ReadKind::ScoreBatch`] /
+//! [`ReadKind::ClassScoresBatch`]) execute through the snapshot's
+//! **query-blocked** batch surfaces (`ModelSnapshot::score_batch` /
+//! `class_scores_batch`): each packed component row is streamed once
+//! per 32-query block instead of once per point, so a batch read stops
+//! paying the per-point matrix re-stream that made the old read path
+//! bandwidth-bound at large `D`. Results are unchanged — blocking is
+//! bit-identical to mapping the per-point scorers.
+//!
 //! [`SnapshotCell`]: super::worker::SnapshotCell
 
 use super::backpressure::{BoundedQueue, OverflowPolicy};

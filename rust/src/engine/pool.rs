@@ -30,11 +30,15 @@ pub struct Scratch {
     /// Second general-purpose D-float buffer (e.g. `Δμ` for the
     /// covariance-form update).
     pub tmp: Vec<f64>,
+    /// Wide arena for the query-block scoring paths (a `B×D` residual
+    /// block plus kernel scratch — see [`Scratch::split3`]). Grows on
+    /// demand and persists across tasks like the other buffers.
+    wide: Vec<f64>,
 }
 
 impl Scratch {
     fn new() -> Scratch {
-        Scratch { e: Vec::new(), tmp: Vec::new() }
+        Scratch { e: Vec::new(), tmp: Vec::new(), wide: Vec::new() }
     }
 
     /// Make sure both buffers hold at least `d` elements.
@@ -52,6 +56,21 @@ impl Scratch {
     /// the same expression (call [`Scratch::ensure`] first).
     pub fn pair(&mut self, d: usize) -> (&mut [f64], &mut [f64]) {
         (&mut self.e[..d], &mut self.tmp[..d])
+    }
+
+    /// Three disjoint mutable slices of `a`, `b` and `c` floats carved
+    /// from the wide arena (growing it on demand) — the block scoring
+    /// path's (residual block, kernel w-block, per-query terms)
+    /// scratch. Contents are whatever the previous task left behind;
+    /// callers overwrite before reading.
+    pub fn split3(&mut self, a: usize, b: usize, c: usize) -> (&mut [f64], &mut [f64], &mut [f64]) {
+        let n = a + b + c;
+        if self.wide.len() < n {
+            self.wide.resize(n, 0.0);
+        }
+        let (x, rest) = self.wide.split_at_mut(a);
+        let (y, rest) = rest.split_at_mut(b);
+        (x, y, &mut rest[..c])
     }
 }
 
@@ -399,6 +418,23 @@ mod tests {
             }
         });
         assert!(ok.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn scratch_split3_is_disjoint_and_grows() {
+        let pool = WorkerPool::new(2);
+        for (a, b, c) in [(8usize, 8usize, 2usize), (32, 0, 4), (4, 4, 1)] {
+            pool.run(4, &move |_, _, scratch| {
+                let (x, y, z) = scratch.split3(a, b, c);
+                assert_eq!((x.len(), y.len(), z.len()), (a, b, c));
+                x.fill(1.0);
+                y.fill(2.0);
+                z.fill(3.0);
+                assert!(x.iter().all(|&v| v == 1.0));
+                assert!(y.iter().all(|&v| v == 2.0));
+                assert!(z.iter().all(|&v| v == 3.0));
+            });
+        }
     }
 
     #[test]

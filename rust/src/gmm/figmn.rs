@@ -35,8 +35,19 @@
 //! [`super::softmax_posteriors`]. Results are bit-identical to the
 //! serial path for every thread count (see the crate-level determinism
 //! guarantee).
+//!
+//! The batch scoring surfaces (`score_batch`/`predict_batch`)
+//! additionally tile the query axis: queries are grouped into blocks of
+//! [`super::score_block::SCORE_BLOCK`] and every packed component row
+//! is streamed once per block through the multi-query kernels of
+//! [`crate::linalg::packed`] — the `K×B` tiling that keeps the serving
+//! read path off the memory wall at large `D`. Blocking never reorders
+//! a query's own floating-point operations, so batch results stay
+//! bit-identical to mapping the per-point entry points in both kernel
+//! modes (`tests/blocked_scoring_equivalence.rs`).
 
-use super::inference::precision_conditional;
+use super::inference::{precision_conditional, precision_conditional_multi};
+use super::score_block::{component_block_terms, wblock_len, ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
 use crate::engine::{
@@ -615,12 +626,18 @@ impl IncrementalMixture for Figmn {
         self.points
     }
 
-    /// Batch scoring amortizes one pool dispatch over each
-    /// memory-bounded chunk of the batch: each worker evaluates its
-    /// component shard against every point in the chunk, then the
-    /// per-point merges run serially through the deterministic tree
-    /// reduction. Values are identical to mapping
-    /// [`IncrementalMixture::log_density`].
+    /// Batch scoring runs **component-outer / query-inner** over `K×B`
+    /// tiles: queries are grouped into [`SCORE_BLOCK`]-sized blocks and
+    /// each packed component row is streamed once per block through the
+    /// multi-query kernels (instead of once per query — the per-point
+    /// path is bandwidth-bound at large `D`). With an engine attached,
+    /// one pool dispatch per memory-bounded chunk shards the K axis:
+    /// each worker sweeps its component shard against every query block
+    /// of the chunk with its own block scratch, then the per-point
+    /// merges run serially through the deterministic tree reduction.
+    /// Values are identical to mapping
+    /// [`IncrementalMixture::log_density`] — blocking never reorders a
+    /// query's own floating-point operations, in either kernel mode.
     fn score_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         if xs.is_empty() {
             // Contract parity with mapping `log_density`: an empty batch
@@ -631,11 +648,18 @@ impl IncrementalMixture for Figmn {
         let k = self.store.len();
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
+        for x in xs {
+            assert_eq!(x.len(), d, "score_batch: dimensionality mismatch");
+        }
         let total_sp = self.store.total_sp();
         let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
         // terms[bi*k + j] = ln p(x_bi|j) + ln p(j), reused per chunk.
         let mut terms = vec![0.0; chunk.min(xs.len()) * k];
         let mut out = Vec::with_capacity(xs.len());
+        // Serial-path block scratch, built on first use and reused
+        // across chunks (engine workers use their per-thread scratch
+        // arenas instead, so pooled calls never pay this allocation).
+        let mut blk: Option<ScoreBlock> = None;
         for xs_chunk in xs.chunks(chunk) {
             let b = xs_chunk.len();
             let terms = &mut terms[..b * k];
@@ -646,37 +670,52 @@ impl IncrementalMixture for Figmn {
             if let Some(pool) = pool {
                 let store = &self.store;
                 let outp = SharedMut::new(terms.as_mut_ptr());
+                let wlen = wblock_len(d, SCORE_BLOCK, mode);
                 pool.run(k, &move |_, range, scratch| {
-                    scratch.ensure(d);
                     for j in range {
                         let prior_ln = (store.sp(j) / total_sp).ln();
-                        for (bi, x) in xs_chunk.iter().enumerate() {
-                            let (e, tmp) = scratch.pair(d);
-                            sub_into(x, store.mean(j), e);
-                            // Safety: column j is owned by exactly one
-                            // shard.
-                            unsafe {
-                                *outp.at(bi * k + j) = log_gaussian(
-                                    packed::quad_form_scratch(store.mat(j), d, e, tmp, mode),
-                                    store.log_det(j),
-                                    d,
-                                ) + prior_ln;
+                        for (bs, block) in xs_chunk.chunks(SCORE_BLOCK).enumerate() {
+                            let (e, w, q) = scratch.split3(SCORE_BLOCK * d, wlen, SCORE_BLOCK);
+                            component_block_terms(
+                                store.mat(j),
+                                store.mean(j),
+                                store.log_det(j),
+                                d,
+                                block,
+                                prior_ln,
+                                mode,
+                                e,
+                                w,
+                                q,
+                            );
+                            let base = bs * SCORE_BLOCK;
+                            for (bi, &t) in q[..block.len()].iter().enumerate() {
+                                // Safety: column j is owned by exactly
+                                // one shard.
+                                unsafe {
+                                    *outp.at((base + bi) * k + j) = t;
+                                }
                             }
                         }
                     }
                 });
             } else {
-                let mut e = vec![0.0; d];
-                let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
+                let blk = blk.get_or_insert_with(|| ScoreBlock::new(d, xs.len(), mode));
                 for j in 0..k {
                     let prior_ln = (self.store.sp(j) / total_sp).ln();
-                    for (bi, x) in xs_chunk.iter().enumerate() {
-                        sub_into(x, self.store.mean(j), &mut e);
-                        terms[bi * k + j] = log_gaussian(
-                            packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
+                    for (bs, block) in xs_chunk.chunks(SCORE_BLOCK).enumerate() {
+                        let q = blk.component_terms(
+                            self.store.mat(j),
+                            self.store.mean(j),
                             self.store.log_det(j),
-                            d,
-                        ) + prior_ln;
+                            block,
+                            prior_ln,
+                            mode,
+                        );
+                        let base = bs * SCORE_BLOCK;
+                        for (bi, &t) in q.iter().enumerate() {
+                            terms[(base + bi) * k + j] = t;
+                        }
                     }
                 }
             }
@@ -685,9 +724,13 @@ impl IncrementalMixture for Figmn {
         out
     }
 
-    /// Batch conditional inference with the same chunked sharding as
-    /// [`IncrementalMixture::score_batch`]; identical to mapping
-    /// [`IncrementalMixture::predict`].
+    /// Batch conditional inference with the same chunked sharding and
+    /// `K×B` tiling as [`IncrementalMixture::score_batch`]: per
+    /// component, each query block runs through
+    /// [`precision_conditional_multi`], which streams the component's
+    /// `Λ` entries once per block and factorizes the target-block
+    /// Cholesky once per block instead of once per query. Identical to
+    /// mapping [`IncrementalMixture::predict`].
     fn predict_batch(
         &self,
         known_vals: &[Vec<f64>],
@@ -718,39 +761,45 @@ impl IncrementalMixture for Figmn {
                 let rc = SharedMut::new(recons.as_mut_ptr());
                 pool.run(k, &move |_, range, _| {
                     for j in range {
-                        for (bi, kv) in kv_chunk.iter().enumerate() {
-                            let r = precision_conditional(
+                        for (bs, block) in kv_chunk.chunks(SCORE_BLOCK).enumerate() {
+                            let conds = precision_conditional_multi(
                                 store.mat(j),
                                 d,
                                 store.mean(j),
                                 store.log_det(j),
-                                kv,
+                                block,
                                 known_idx,
                                 target_idx,
                             );
-                            // Safety: column j is owned by exactly one
-                            // shard.
-                            unsafe {
-                                *ll.at(bi * k + j) = r.log_lik;
-                                *rc.at(bi * k + j) = r.reconstruction;
+                            let base = bs * SCORE_BLOCK;
+                            for (bi, c) in conds.into_iter().enumerate() {
+                                // Safety: column j is owned by exactly
+                                // one shard.
+                                unsafe {
+                                    *ll.at((base + bi) * k + j) = c.log_lik;
+                                    *rc.at((base + bi) * k + j) = c.reconstruction;
+                                }
                             }
                         }
                     }
                 });
             } else {
                 for j in 0..k {
-                    for (bi, kv) in kv_chunk.iter().enumerate() {
-                        let r = precision_conditional(
+                    for (bs, block) in kv_chunk.chunks(SCORE_BLOCK).enumerate() {
+                        let conds = precision_conditional_multi(
                             self.store.mat(j),
                             d,
                             self.store.mean(j),
                             self.store.log_det(j),
-                            kv,
+                            block,
                             known_idx,
                             target_idx,
                         );
-                        log_liks[bi * k + j] = r.log_lik;
-                        recons[bi * k + j] = r.reconstruction;
+                        let base = bs * SCORE_BLOCK;
+                        for (bi, c) in conds.into_iter().enumerate() {
+                            log_liks[(base + bi) * k + j] = c.log_lik;
+                            recons[(base + bi) * k + j] = c.reconstruction;
+                        }
                     }
                 }
             }

@@ -73,6 +73,7 @@ mod config;
 mod figmn;
 mod igmn;
 pub mod inference;
+mod score_block;
 mod serialize;
 mod snapshot;
 mod store;
@@ -198,6 +199,18 @@ pub(crate) fn softmax_posteriors(log_liks: &[f64], sps: &[f64]) -> Vec<f64> {
 #[inline]
 pub(crate) fn log_gaussian(d2: f64, log_det: f64, dim: usize) -> f64 {
     -0.5 * (dim as f64) * (2.0 * std::f64::consts::PI).ln() - 0.5 * log_det - 0.5 * d2
+}
+
+/// The supervised joint-vector convention, in one place: the leading
+/// `n_features` joint dims are features, the trailing `n_classes` the
+/// one-hot (or regression-target) block. Shared by `SupervisedGmm` and
+/// `ModelSnapshot` so the two can never disagree about which dims are
+/// targets.
+pub(crate) fn index_split(n_features: usize, n_classes: usize) -> (Vec<usize>, Vec<usize>) {
+    (
+        (0..n_features).collect(),
+        (n_features..n_features + n_classes).collect(),
+    )
 }
 
 #[cfg(test)]

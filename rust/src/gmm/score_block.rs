@@ -1,0 +1,192 @@
+//! Query-block scratch for the batched scoring read path.
+//!
+//! Every batch scoring surface (`score_batch`, `posteriors_batch`,
+//! `predict_batch`, `class_scores_batch` — on [`super::Figmn`],
+//! [`super::ModelSnapshot`] and [`super::SupervisedGmm`]) runs
+//! **component-outer / query-inner**: queries are grouped into blocks
+//! of [`SCORE_BLOCK`], and each packed component row is streamed once
+//! per block through the multi-query kernels of
+//! [`crate::linalg::packed`] instead of once per query. At large `D`
+//! the per-point path is memory-bound (each query re-streams all
+//! `K·D(D+1)/2` packed doubles at ~1 flop/byte), so blocking raises
+//! arithmetic intensity — and therefore throughput — by up to the
+//! block factor; the `serving_read_path` and `layout_bandwidth`
+//! benches quantify it.
+//!
+//! ## Equivalence contract
+//!
+//! Blocking reorders *which query* consumes a matrix value next, never
+//! the floating-point operations within a query (see the multi-kernel
+//! contract in [`crate::linalg::packed`]). Every blocked batch surface
+//! therefore returns results **bit-identical to mapping its per-point
+//! counterpart**, in both kernel modes — enforced by
+//! `tests/blocked_scoring_equivalence.rs`.
+
+use super::log_gaussian;
+use crate::linalg::{packed, sub_into, KernelMode};
+
+/// Queries per block. Sized so a block's per-row working set (the
+/// packed row plus `SCORE_BLOCK` residual lanes) stays cache-resident
+/// while the arithmetic-intensity gain saturates; fixed (rather than
+/// adaptive) so results never depend on batch size.
+pub(crate) const SCORE_BLOCK: usize = 32;
+
+/// Floats of w-block kernel scratch a mode needs for a `b`-query block
+/// at dimension `d`: the fast multi kernel assembles `w_q = Λ·e_q` per
+/// query; the strict kernel reads none.
+pub(crate) fn wblock_len(d: usize, b: usize, mode: KernelMode) -> usize {
+    match mode {
+        KernelMode::Strict => 0,
+        KernelMode::Fast => b * d,
+    }
+}
+
+/// Per-component log-density terms for one query block:
+/// `terms[bi] = ln N(xs[bi]; mean, mat) + offset` for every query in
+/// `xs` (at most [`SCORE_BLOCK`]).
+///
+/// `e` (≥ `b·d`) receives the residual block, `w` (≥
+/// [`wblock_len`]) the fast path's mat-vec block, `terms` (≥ `b`) the
+/// output. Per query, the operations are exactly the per-point scoring
+/// sequence (`sub_into` → quadratic form → [`log_gaussian`] → `+
+/// offset`), so the terms are bit-identical to the per-point path in
+/// both modes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn component_block_terms(
+    mat: &[f64],
+    mean: &[f64],
+    log_det: f64,
+    d: usize,
+    xs: &[Vec<f64>],
+    offset: f64,
+    mode: KernelMode,
+    e: &mut [f64],
+    w: &mut [f64],
+    terms: &mut [f64],
+) {
+    let b = xs.len();
+    debug_assert!(b <= SCORE_BLOCK, "query block larger than SCORE_BLOCK");
+    debug_assert!(e.len() >= b * d);
+    debug_assert!(terms.len() >= b);
+    for (bi, x) in xs.iter().enumerate() {
+        sub_into(x, mean, &mut e[bi * d..(bi + 1) * d]);
+    }
+    packed::quad_form_multi_mode(
+        mat,
+        d,
+        &e[..b * d],
+        b,
+        &mut w[..wblock_len(d, b, mode)],
+        &mut terms[..b],
+        mode,
+    );
+    for t in terms[..b].iter_mut() {
+        *t = log_gaussian(*t, log_det, d) + offset;
+    }
+}
+
+/// Owned scratch for the serial block-scoring paths (the engine's
+/// sharded paths use each worker's `Scratch::split3` arena instead):
+/// one residual block, one fast-mode w-block, one per-query term
+/// buffer, all reused across every (component, block) pair of a batch.
+pub(crate) struct ScoreBlock {
+    d: usize,
+    e: Vec<f64>,
+    w: Vec<f64>,
+    q: Vec<f64>,
+}
+
+impl ScoreBlock {
+    /// Scratch for blocks of up to `min(queries, SCORE_BLOCK)` rows —
+    /// sized to the batch, so a 1-query serving call doesn't allocate
+    /// full 32-row buffers.
+    pub(crate) fn new(d: usize, queries: usize, mode: KernelMode) -> ScoreBlock {
+        let rows = queries.clamp(1, SCORE_BLOCK);
+        ScoreBlock {
+            d,
+            e: vec![0.0; rows * d],
+            w: vec![0.0; wblock_len(d, rows, mode)],
+            q: vec![0.0; rows],
+        }
+    }
+
+    /// [`component_block_terms`] against this scratch; returns the
+    /// terms for the block's queries.
+    pub(crate) fn component_terms(
+        &mut self,
+        mat: &[f64],
+        mean: &[f64],
+        log_det: f64,
+        xs: &[Vec<f64>],
+        offset: f64,
+        mode: KernelMode,
+    ) -> &[f64] {
+        let b = xs.len();
+        component_block_terms(
+            mat,
+            mean,
+            log_det,
+            self.d,
+            xs,
+            offset,
+            mode,
+            &mut self.e,
+            &mut self.w,
+            &mut self.q,
+        );
+        &self.q[..b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::packed::{pack_symmetric, quad_form};
+    use crate::rng::Pcg64;
+    use crate::testutil::random_spd;
+
+    /// Block terms equal the per-point scoring sequence bit for bit in
+    /// strict mode, and the fast path matches the fast per-point
+    /// kernels (which `tests/blocked_scoring_equivalence.rs` exercises
+    /// end to end).
+    #[test]
+    fn block_terms_match_per_point_sequence() {
+        let d = 9;
+        let mut rng = Pcg64::seed(17);
+        let mut m = random_spd(d, &mut rng);
+        m.symmetrize();
+        let mat = pack_symmetric(&m);
+        let mean: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let log_det = rng.normal();
+        let offset = rng.normal();
+        let xs: Vec<Vec<f64>> =
+            (0..7).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+
+        let mut blk = ScoreBlock::new(d, xs.len(), KernelMode::Strict);
+        let terms = blk.component_terms(&mat, &mean, log_det, &xs, offset, KernelMode::Strict);
+        assert_eq!(terms.len(), xs.len());
+        let mut e = vec![0.0; d];
+        for (bi, x) in xs.iter().enumerate() {
+            sub_into(x, &mean, &mut e);
+            let expect = log_gaussian(quad_form(&mat, d, &e), log_det, d) + offset;
+            assert!(
+                terms[bi].to_bits() == expect.to_bits(),
+                "strict block term {bi} diverged from per-point sequence"
+            );
+        }
+
+        let mut fast = ScoreBlock::new(d, xs.len(), KernelMode::Fast);
+        let fast_terms =
+            fast.component_terms(&mat, &mean, log_det, &xs, offset, KernelMode::Fast);
+        let mut w = vec![0.0; d];
+        for (bi, x) in xs.iter().enumerate() {
+            sub_into(x, &mean, &mut e);
+            let q = crate::linalg::packed::quad_form_with_fast(&mat, d, &e, &mut w);
+            let expect = log_gaussian(q, log_det, d) + offset;
+            assert!(
+                fast_terms[bi].to_bits() == expect.to_bits(),
+                "fast block term {bi} diverged from per-point fast sequence"
+            );
+        }
+    }
+}

@@ -20,13 +20,25 @@
 //! prefix — enforced by this module's tests and the
 //! `serving_read_path` bench.
 //!
+//! ## Batch surfaces are query-blocked
+//!
+//! The `*_batch` methods run **component-outer / query-inner** over
+//! blocks of [`SCORE_BLOCK`] queries (see [`super::score_block`]): each
+//! packed component row is streamed once per block through the
+//! multi-query kernels instead of once per query, which is what makes
+//! the snapshot read path bandwidth-efficient at large `D`. Blocking
+//! never changes a query's floating-point sequence, so every batch
+//! method stays bit-identical to mapping its per-point counterpart —
+//! in both kernel modes (`tests/blocked_scoring_equivalence.rs`).
+//!
 //! [`Figmn`]: super::Figmn
 //! [`ComponentStore`]: super::ComponentStore
 
-use super::inference::precision_conditional;
+use super::inference::{precision_conditional, precision_conditional_multi};
+use super::score_block::{ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
 use super::supervised::clip_normalize;
-use super::{log_gaussian, softmax_posteriors, GmmConfig};
+use super::{index_split, log_gaussian, softmax_posteriors, GmmConfig};
 use crate::engine::logsumexp_tree;
 use crate::linalg::{packed, sub_into, KernelMode};
 
@@ -46,6 +58,11 @@ pub struct ModelSnapshot {
     /// `dim` (with `n_classes == 0`) for a plain joint-density model.
     n_features: usize,
     n_classes: usize,
+    /// Index split for the class-scores conditionals, precomputed once
+    /// at construction so `class_scores`/`class_scores_batch` don't
+    /// rebuild two Vecs per call on the serving hot path.
+    feature_idx: Vec<usize>,
+    class_idx: Vec<usize>,
 }
 
 impl ModelSnapshot {
@@ -57,7 +74,17 @@ impl ModelSnapshot {
         n_classes: usize,
     ) -> ModelSnapshot {
         let total_sp = store.total_sp();
-        ModelSnapshot { cfg, store, total_sp, points, n_features, n_classes }
+        let (feature_idx, class_idx) = index_split(n_features, n_classes);
+        ModelSnapshot {
+            cfg,
+            store,
+            total_sp,
+            points,
+            n_features,
+            n_classes,
+            feature_idx,
+            class_idx,
+        }
     }
 
     /// Record the supervised feature/class split (for
@@ -71,6 +98,9 @@ impl ModelSnapshot {
         );
         self.n_features = n_features;
         self.n_classes = n_classes;
+        let (feature_idx, class_idx) = index_split(n_features, n_classes);
+        self.feature_idx = feature_idx;
+        self.class_idx = class_idx;
         self
     }
 
@@ -133,11 +163,71 @@ impl ModelSnapshot {
         logsumexp_tree(&terms)
     }
 
-    /// Joint log-densities for a batch (identical to mapping
-    /// [`ModelSnapshot::log_density`]; read-path parallelism comes from
-    /// concurrent scorer threads, not intra-call sharding).
+    /// The component-outer blocked sweep shared by the density and
+    /// posterior batch surfaces: fill each query's per-component term
+    /// row (`ln N(x_bi; μ_j, Λ_j) + offset(j)`) block by block, then
+    /// reduce every row to one result. One copy of the block/chunk
+    /// indexing, so the two read paths cannot drift.
+    fn blocked_term_rows<R>(
+        &self,
+        xs: &[Vec<f64>],
+        offset: impl Fn(usize) -> f64,
+        mut reduce: impl FnMut(&[f64]) -> R,
+    ) -> Vec<R> {
+        let k = self.store.len();
+        let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
+        for x in xs {
+            assert_eq!(x.len(), d, "batch scoring: dimensionality mismatch");
+        }
+        let mut blk = ScoreBlock::new(d, xs.len(), mode);
+        let mut terms = vec![0.0; SCORE_BLOCK.min(xs.len()) * k];
+        let mut out = Vec::with_capacity(xs.len());
+        for block in xs.chunks(SCORE_BLOCK) {
+            let b = block.len();
+            for j in 0..k {
+                let q = blk.component_terms(
+                    self.store.mat(j),
+                    self.store.mean(j),
+                    self.store.log_det(j),
+                    block,
+                    offset(j),
+                    mode,
+                );
+                for (bi, &t) in q.iter().enumerate() {
+                    terms[bi * k + j] = t;
+                }
+            }
+            out.extend((0..b).map(|bi| reduce(&terms[bi * k..(bi + 1) * k])));
+        }
+        out
+    }
+
+    /// Joint log-densities for a batch — bit-identical to mapping
+    /// [`ModelSnapshot::log_density`], computed component-outer over
+    /// [`SCORE_BLOCK`]-query blocks so each packed component row is
+    /// streamed once per block instead of once per query (cross-call
+    /// parallelism still comes from concurrent scorer threads).
     pub fn score_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter().map(|x| self.log_density(x)).collect()
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        assert!(!self.store.is_empty(), "score_batch on empty snapshot");
+        self.blocked_term_rows(
+            xs,
+            |j| (self.store.sp(j) / self.total_sp).ln(),
+            logsumexp_tree,
+        )
+    }
+
+    /// Posterior responsibilities for a batch — bit-identical to mapping
+    /// [`ModelSnapshot::posteriors`], on the same component-outer
+    /// blocked sweep as [`ModelSnapshot::score_batch`].
+    pub fn posteriors_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        self.blocked_term_rows(xs, |_| 0.0, |row| softmax_posteriors(row, self.store.sps()))
     }
 
     /// Conditional reconstruction of the `target_idx` elements —
@@ -178,14 +268,61 @@ impl ModelSnapshot {
         out
     }
 
-    /// Conditional reconstructions for a batch sharing one index split.
+    /// Conditional reconstructions for a batch sharing one index split —
+    /// bit-identical to mapping [`ModelSnapshot::predict`]. Component-
+    /// outer over query blocks: each component's `Λ` entries are
+    /// streamed once per block and its target-block Cholesky is
+    /// factorized once per block instead of once per query (see
+    /// [`precision_conditional_multi`]).
     pub fn predict_batch(
         &self,
         known_vals: &[Vec<f64>],
         known_idx: &[usize],
         target_idx: &[usize],
     ) -> Vec<Vec<f64>> {
-        known_vals.iter().map(|kv| self.predict(kv, known_idx, target_idx)).collect()
+        if known_vals.is_empty() {
+            return Vec::new();
+        }
+        assert!(!self.store.is_empty(), "predict_batch on empty snapshot");
+        let k = self.store.len();
+        let d = self.cfg.dim;
+        let sps = self.store.sps();
+        let mut out = Vec::with_capacity(known_vals.len());
+        // Per-block buffers hoisted out of the loop; every (query,
+        // component) slot is overwritten before it is read, so reuse
+        // across blocks is safe.
+        let bmax = SCORE_BLOCK.min(known_vals.len());
+        let mut log_liks = vec![0.0; bmax * k];
+        let mut recons: Vec<Vec<f64>> = vec![Vec::new(); bmax * k];
+        for block in known_vals.chunks(SCORE_BLOCK) {
+            let b = block.len();
+            for j in 0..k {
+                let conds = precision_conditional_multi(
+                    self.store.mat(j),
+                    d,
+                    self.store.mean(j),
+                    self.store.log_det(j),
+                    block,
+                    known_idx,
+                    target_idx,
+                );
+                for (bi, c) in conds.into_iter().enumerate() {
+                    log_liks[bi * k + j] = c.log_lik;
+                    recons[bi * k + j] = c.reconstruction;
+                }
+            }
+            for bi in 0..b {
+                let post = softmax_posteriors(&log_liks[bi * k..(bi + 1) * k], sps);
+                let mut acc = vec![0.0; target_idx.len()];
+                for (p, r) in post.iter().zip(recons[bi * k..(bi + 1) * k].iter()) {
+                    for (o, &v) in acc.iter_mut().zip(r.iter()) {
+                        *o += p * v;
+                    }
+                }
+                out.push(acc);
+            }
+        }
+        out
     }
 
     /// Posterior responsibilities `p(j|x)` — bit-identical to
@@ -210,20 +347,30 @@ impl ModelSnapshot {
 
     /// Classifier scores for the recorded feature/class split —
     /// bit-identical to `SupervisedGmm::class_scores` on the source
-    /// model. Panics unless the snapshot was taken through
-    /// `SupervisedGmm::snapshot` (or [`ModelSnapshot::with_split`]).
+    /// model (the index split is precomputed at construction). Panics
+    /// unless the snapshot was taken through `SupervisedGmm::snapshot`
+    /// (or [`ModelSnapshot::with_split`]).
     pub fn class_scores(&self, features: &[f64]) -> Vec<f64> {
         assert!(self.n_classes > 0, "snapshot has no class split");
         assert_eq!(features.len(), self.n_features);
-        let feature_idx: Vec<usize> = (0..self.n_features).collect();
-        let class_idx: Vec<usize> =
-            (self.n_features..self.n_features + self.n_classes).collect();
-        clip_normalize(self.predict(features, &feature_idx, &class_idx))
+        clip_normalize(self.predict(features, &self.feature_idx, &self.class_idx))
     }
 
-    /// Batched [`ModelSnapshot::class_scores`].
+    /// Batched [`ModelSnapshot::class_scores`], routed through the
+    /// blocked [`ModelSnapshot::predict_batch`] — bit-identical to the
+    /// per-point mapping.
     pub fn class_scores_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
-        xs.iter().map(|x| self.class_scores(x)).collect()
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        assert!(self.n_classes > 0, "snapshot has no class split");
+        for x in xs {
+            assert_eq!(x.len(), self.n_features);
+        }
+        self.predict_batch(xs, &self.feature_idx, &self.class_idx)
+            .into_iter()
+            .map(clip_normalize)
+            .collect()
     }
 }
 
@@ -271,6 +418,30 @@ mod tests {
             snap.predict_batch(&knowns, &[0, 1], &[2]),
             knowns.iter().map(|kv| m.predict(kv, &[0, 1], &[2])).collect::<Vec<_>>()
         );
+    }
+
+    /// The blocked batch surfaces stay bit-identical to the per-point
+    /// mappings across block boundaries (batch > SCORE_BLOCK, ragged
+    /// tail included).
+    #[test]
+    fn blocked_batches_match_per_point_across_boundaries() {
+        let (m, stream) = trained_model(150);
+        let snap = m.snapshot();
+        // 70 probes = two full 32-blocks + a 6-query tail.
+        let probes: Vec<Vec<f64>> = stream.iter().rev().take(70).cloned().collect();
+        let expect: Vec<f64> = probes.iter().map(|x| snap.log_density(x)).collect();
+        assert_eq!(snap.score_batch(&probes), expect);
+        let expect_post: Vec<Vec<f64>> = probes.iter().map(|x| snap.posteriors(x)).collect();
+        assert_eq!(snap.posteriors_batch(&probes), expect_post);
+        let knowns: Vec<Vec<f64>> = probes.iter().map(|x| x[..2].to_vec()).collect();
+        assert_eq!(
+            snap.predict_batch(&knowns, &[0, 1], &[2]),
+            knowns.iter().map(|kv| snap.predict(kv, &[0, 1], &[2])).collect::<Vec<_>>()
+        );
+        // Empty batches stay empty.
+        assert!(snap.score_batch(&[]).is_empty());
+        assert!(snap.posteriors_batch(&[]).is_empty());
+        assert!(snap.predict_batch(&[], &[0, 1], &[2]).is_empty());
     }
 
     #[test]

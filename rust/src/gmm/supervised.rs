@@ -24,13 +24,8 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
     /// `n_features + n_classes`.
     pub fn from_model(model: M, n_features: usize, n_classes: usize) -> Self {
         assert_eq!(model.dim(), n_features + n_classes, "joint dim mismatch");
-        SupervisedGmm {
-            model,
-            n_features,
-            n_classes,
-            feature_idx: (0..n_features).collect(),
-            class_idx: (n_features..n_features + n_classes).collect(),
-        }
+        let (feature_idx, class_idx) = super::index_split(n_features, n_classes);
+        SupervisedGmm { model, n_features, n_classes, feature_idx, class_idx }
     }
 
     pub fn n_features(&self) -> usize {
@@ -103,7 +98,10 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
     }
 
     /// Batched class scores through the mixture's `predict_batch`
-    /// (identical to mapping [`SupervisedGmm::class_scores`]).
+    /// (identical to mapping [`SupervisedGmm::class_scores`]). On the
+    /// native mixtures this rides the component-outer query-blocked
+    /// conditional path, so each component's matrix is streamed once
+    /// per query block instead of once per example.
     pub fn class_scores_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         for x in xs {
             assert_eq!(x.len(), self.n_features);
@@ -115,15 +113,27 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
             .collect()
     }
 
+    /// Batched regression reconstructions of the output block through
+    /// the mixture's blocked `predict_batch` (identical to mapping
+    /// [`SupervisedGmm::predict_targets`]).
+    pub fn predict_targets_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n_features);
+        }
+        self.model.predict_batch(xs, &self.feature_idx, &self.class_idx)
+    }
+
     /// Hard classification: argmax of the class scores.
     pub fn predict_class(&self, x: &[f64]) -> usize {
         let scores = self.class_scores(x);
-        scores
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+        argmax(&scores)
+    }
+
+    /// Batched hard classification — identical to mapping
+    /// [`SupervisedGmm::predict_class`], through the blocked batch
+    /// scoring path.
+    pub fn predict_class_batch(&self, xs: &[Vec<f64>]) -> Vec<usize> {
+        self.class_scores_batch(xs).iter().map(|scores| argmax(scores)).collect()
     }
 
     pub fn num_components(&self) -> usize {
@@ -189,6 +199,18 @@ fn joint_stds(feature_stds: &[f64], n_classes: usize) -> Vec<f64> {
     let mut stds = feature_stds.to_vec();
     stds.extend(std::iter::repeat(0.5).take(n_classes));
     stds
+}
+
+/// Index of the maximum score — the exact argmax expression
+/// `predict_class` always used (ties resolve to the highest index, per
+/// `Iterator::max_by`), factored out so the batched path cannot drift.
+fn argmax(scores: &[f64]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
 }
 
 /// Clip the reconstructed one-hot block to non-negative and normalize to
@@ -287,6 +309,27 @@ mod tests {
         for (x, bs) in probes.iter().zip(batch_scores.iter()) {
             assert_eq!(&a.class_scores(x), bs);
         }
+    }
+
+    #[test]
+    fn batched_classification_matches_per_point() {
+        let cfg = GmmConfig::new(2).with_delta(0.5).with_beta(0.05).without_pruning();
+        let mut clf = supervised_figmn(cfg, &[3.0, 3.0], 3);
+        for (x, y) in gaussian_blobs(200, 8) {
+            clf.train_one(&x, y);
+        }
+        // 40 probes: one full 32-block plus a ragged tail.
+        let probes: Vec<Vec<f64>> =
+            gaussian_blobs(40, 9).into_iter().map(|(x, _)| x).collect();
+        assert_eq!(
+            clf.predict_class_batch(&probes),
+            probes.iter().map(|x| clf.predict_class(x)).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            clf.predict_targets_batch(&probes),
+            probes.iter().map(|x| clf.predict_targets(x)).collect::<Vec<_>>()
+        );
+        assert!(clf.predict_class_batch(&[]).is_empty());
     }
 
     #[test]

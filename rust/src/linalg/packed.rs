@@ -42,6 +42,35 @@
 //! [`super::KernelMode`] for the full contract). Within `Fast` mode
 //! results remain deterministic — the blocked order is fixed, so every
 //! thread count agrees bit for bit.
+//!
+//! ## Multi-query kernels (query blocking)
+//!
+//! The batch scoring read path is memory-bound: every query that scores
+//! a mixture independently re-streams all `K` packed triangles
+//! (`K·D(D+1)/2` doubles at ~1 flop/byte), so at large `D` throughput
+//! is bandwidth, not compute. The `*_multi` kernels below take a `B×D`
+//! block of residuals and walk the packed matrix **row-outer /
+//! query-inner**: each packed row (≤ `D` contiguous doubles — L1-sized
+//! even at `D` in the thousands) is loaded once and applied to every
+//! query in the block while hot, raising arithmetic intensity `B×`.
+//!
+//! Crucially, blocking only reorders *which query* consumes a value
+//! next — never the floating-point operations *within* a query. Each
+//! query keeps its own accumulators and folds in exactly the per-point
+//! kernel's order, so:
+//!
+//! - [`quad_form_multi`] / [`spmv_multi`] are **bit-identical** per
+//!   query to [`quad_form`] / [`spmv`] (the `Strict` contract extends
+//!   to query blocks), and
+//! - [`quad_form_multi_fast`] / [`spmv_multi_fast`] are
+//!   **bit-identical** per query to [`quad_form_with_fast`] /
+//!   [`spmv_fast`] (the `Fast`-mode value of a query does not depend
+//!   on its block, its block size, or its position in the block).
+//!
+//! On top of the row-outer sweep, the hot inner loops register-tile
+//! four queries at a time (independent accumulator chains, so the four
+//! serial FP dependences overlap), with a per-query tail for ragged
+//! blocks.
 
 use super::{KernelMode, Matrix};
 
@@ -254,6 +283,191 @@ pub fn quad_form_with_fast(ap: &[f64], d: usize, x: &[f64], w: &mut [f64]) -> f6
     dot_blocked(x, w)
 }
 
+// ---- Multi-query kernels ----------------------------------------------
+//
+// See the module docs: row-outer/query-inner sweeps that stream each
+// packed row once per query block. Per query, the floating-point
+// operations run in exactly the corresponding per-point kernel's order,
+// so strict multi ≡ strict per-point and fast multi ≡ fast per-point,
+// bit for bit.
+
+/// Multi-query quadratic forms `out[q] = e_qᵀ·A·e_q` over a `b×d`
+/// row-major block of residuals `es` — bit-identical per query to
+/// [`quad_form`] on `es[q·d..(q+1)·d]`.
+///
+/// Row-outer/query-inner: packed row `i` (plus its strided `j < i`
+/// column prefix) is touched once per block instead of once per query,
+/// and four queries are register-tiled so their serial accumulator
+/// chains overlap.
+pub fn quad_form_multi(ap: &[f64], d: usize, es: &[f64], b: usize, out: &mut [f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(es.len(), b * d, "quad_form_multi: residual block shape");
+    assert_eq!(out.len(), b, "quad_form_multi: out length");
+    out.fill(0.0);
+    for i in 0..d {
+        let rs = row_start(i, d);
+        let row = &ap[rs..rs + d - i];
+        let mut q = 0usize;
+        while q + 4 <= b {
+            let x0 = &es[q * d..(q + 1) * d];
+            let x1 = &es[(q + 1) * d..(q + 2) * d];
+            let x2 = &es[(q + 2) * d..(q + 3) * d];
+            let x3 = &es[(q + 3) * d..(q + 4) * d];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            // Entries (i, j) with j < i — the same strided index walk as
+            // `row_dot`, each element applied to all four queries.
+            let mut idx = i; // pk(0, i) = i
+            for j in 0..i {
+                let a = ap[idx];
+                a0 += a * x0[j];
+                a1 += a * x1[j];
+                a2 += a * x2[j];
+                a3 += a * x3[j];
+                idx += d - j - 1;
+            }
+            // Entries (i, j) with j ≥ i — the contiguous packed row.
+            for (t, &a) in row.iter().enumerate() {
+                let j = i + t;
+                a0 += a * x0[j];
+                a1 += a * x1[j];
+                a2 += a * x2[j];
+                a3 += a * x3[j];
+            }
+            out[q] += x0[i] * a0;
+            out[q + 1] += x1[i] * a1;
+            out[q + 2] += x2[i] * a2;
+            out[q + 3] += x3[i] * a3;
+            q += 4;
+        }
+        // Ragged tail: plain per-query row dot, same order.
+        for bi in q..b {
+            let x = &es[bi * d..(bi + 1) * d];
+            out[bi] += x[i] * row_dot(ap, d, i, x);
+        }
+    }
+}
+
+/// Multi-RHS symmetric mat-vec `ys[q] = A·xs[q]` over `b×d` row-major
+/// blocks — bit-identical per query to [`spmv`]. Row-outer/query-inner,
+/// so each packed row (and its column prefix) is streamed once per
+/// block.
+///
+/// This is the strict reference of the multi-RHS pair
+/// ([`spmv_multi_fast`] backs the fast blocked quadratic forms); no
+/// scoring surface needs the full strict mat-vec per query yet — the
+/// blocked conditional path works on index subsets via
+/// `gmm::inference::precision_conditional_multi` — so its callers today
+/// are the equivalence tests that pin it to [`spmv`].
+pub fn spmv_multi(ap: &[f64], d: usize, xs: &[f64], b: usize, ys: &mut [f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(xs.len(), b * d, "spmv_multi: x block shape");
+    assert_eq!(ys.len(), b * d, "spmv_multi: y block shape");
+    for i in 0..d {
+        for bi in 0..b {
+            ys[bi * d + i] = row_dot(ap, d, i, &xs[bi * d..(bi + 1) * d]);
+        }
+    }
+}
+
+/// Fast-mode multi-RHS symmetric mat-vec — bit-identical per query to
+/// [`spmv_fast`]: one pass over the packed rows serving every query,
+/// with the `j > i` scatter register-tiled four queries wide (each row
+/// element is loaded once per tile instead of once per query).
+pub fn spmv_multi_fast(ap: &[f64], d: usize, xs: &[f64], b: usize, ys: &mut [f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(xs.len(), b * d, "spmv_multi_fast: x block shape");
+    assert_eq!(ys.len(), b * d, "spmv_multi_fast: y block shape");
+    ys.fill(0.0);
+    let mut rs = 0usize;
+    for i in 0..d {
+        let len = d - i;
+        let row = &ap[rs..rs + len];
+        let mut q = 0usize;
+        while q + 4 <= b {
+            let x0 = &xs[q * d..(q + 1) * d];
+            let x1 = &xs[(q + 1) * d..(q + 2) * d];
+            let x2 = &xs[(q + 2) * d..(q + 3) * d];
+            let x3 = &xs[(q + 3) * d..(q + 4) * d];
+            // Per query: blocked diagonal dot, then the j > i scatter,
+            // then the y[i] update — exactly `spmv_fast`'s order (the
+            // queries' FP streams are independent, so interleaving them
+            // cannot change any query's bits).
+            let d0 = dot_blocked(row, &x0[i..]);
+            let d1 = dot_blocked(row, &x1[i..]);
+            let d2 = dot_blocked(row, &x2[i..]);
+            let d3 = dot_blocked(row, &x3[i..]);
+            let (xi0, xi1, xi2, xi3) = (x0[i], x1[i], x2[i], x3[i]);
+            let tile = &mut ys[q * d..(q + 4) * d];
+            let (y01, y23) = tile.split_at_mut(2 * d);
+            let (y0, y1) = y01.split_at_mut(d);
+            let (y2, y3) = y23.split_at_mut(d);
+            for (t, &aij) in row[1..].iter().enumerate() {
+                let j = i + 1 + t;
+                y0[j] += aij * xi0;
+                y1[j] += aij * xi1;
+                y2[j] += aij * xi2;
+                y3[j] += aij * xi3;
+            }
+            y0[i] += d0;
+            y1[i] += d1;
+            y2[i] += d2;
+            y3[i] += d3;
+            q += 4;
+        }
+        // Ragged tail: the per-point fast body, one query at a time.
+        for bi in q..b {
+            let x = &xs[bi * d..(bi + 1) * d];
+            let y = &mut ys[bi * d..(bi + 1) * d];
+            let diag_dot = dot_blocked(row, &x[i..]);
+            let xi = x[i];
+            for (yj, &aij) in y[i + 1..].iter_mut().zip(row[1..].iter()) {
+                *yj += aij * xi;
+            }
+            y[i] += diag_dot;
+        }
+        rs += len;
+    }
+}
+
+/// Fast-mode multi-query quadratic forms — bit-identical per query to
+/// [`quad_form_with_fast`]: the block mat-vec assembles `w_q = A·e_q`
+/// into the caller's `b×d` scratch `ws` (streamed from L2 while the
+/// matrix streams from memory once per block), then each query's form
+/// is one final blocked dot.
+pub fn quad_form_multi_fast(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+) {
+    assert_eq!(out.len(), b, "quad_form_multi_fast: out length");
+    spmv_multi_fast(ap, d, es, b, ws);
+    for (bi, o) in out.iter_mut().enumerate() {
+        *o = dot_blocked(&es[bi * d..(bi + 1) * d], &ws[bi * d..(bi + 1) * d]);
+    }
+}
+
+/// Mode dispatcher for the multi-query quadratic form. `ws` is the
+/// fast path's `b×d` w-block scratch; the strict path never reads it
+/// (callers pass an empty slice in strict mode).
+#[inline]
+pub fn quad_form_multi_mode(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+    mode: KernelMode,
+) {
+    match mode {
+        KernelMode::Strict => quad_form_multi(ap, d, es, b, out),
+        KernelMode::Fast => quad_form_multi_fast(ap, d, es, b, ws, out),
+    }
+}
+
 /// Mode dispatcher for the distance-pass kernel: strict scalar loops or
 /// the blocked fast sweep.
 #[inline]
@@ -453,6 +667,129 @@ mod tests {
         spmv_mode(&ap, n, &x, &mut y_mode, KernelMode::Fast);
         spmv_fast(&ap, n, &x, &mut y_fast);
         assert_eq!(y_mode, y_fast);
+    }
+
+    /// The multi-query contract: strict multi kernels are bit-identical
+    /// per query to the strict per-point kernels, across block sizes
+    /// that exercise the 4-query register tile and its ragged tail.
+    #[test]
+    fn multi_kernels_bit_identical_to_per_point() {
+        let mut rng = Pcg64::seed(61);
+        for &b in &[1usize, 2, 3, 4, 5, 7, 8, 9, 33] {
+            for n in [1usize, 2, 5, 13, 24] {
+                let m = random_sym(n, &mut rng);
+                let ap = pack_symmetric(&m);
+                let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+
+                let mut out = vec![0.0; b];
+                quad_form_multi(&ap, n, &es, b, &mut out);
+                let mut ys = vec![0.0; b * n];
+                spmv_multi(&ap, n, &es, b, &mut ys);
+                for bi in 0..b {
+                    let x = &es[bi * n..(bi + 1) * n];
+                    let expect = quad_form(&ap, n, x);
+                    assert!(
+                        out[bi].to_bits() == expect.to_bits(),
+                        "b={b} n={n}: quad_form_multi[{bi}] bits differ"
+                    );
+                    let mut y = vec![0.0; n];
+                    spmv(&ap, n, x, &mut y);
+                    assert_eq!(&ys[bi * n..(bi + 1) * n], &y[..], "b={b} n={n}: spmv_multi[{bi}]");
+                }
+            }
+        }
+    }
+
+    /// Fast multi kernels are bit-identical per query to the fast
+    /// per-point kernels — the `Fast`-mode value of a query does not
+    /// depend on its block, the block size, or its tile position.
+    #[test]
+    fn fast_multi_kernels_bit_identical_to_fast_per_point() {
+        let mut rng = Pcg64::seed(62);
+        for &b in &[1usize, 3, 4, 6, 8, 33] {
+            for n in [1usize, 2, 5, 16, 24] {
+                let m = random_sym(n, &mut rng);
+                let ap = pack_symmetric(&m);
+                let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+
+                let mut ys = vec![0.0; b * n];
+                spmv_multi_fast(&ap, n, &es, b, &mut ys);
+                let mut ws = vec![0.0; b * n];
+                let mut out = vec![0.0; b];
+                quad_form_multi_fast(&ap, n, &es, b, &mut ws, &mut out);
+                for bi in 0..b {
+                    let x = &es[bi * n..(bi + 1) * n];
+                    let mut y = vec![0.0; n];
+                    spmv_fast(&ap, n, x, &mut y);
+                    assert_eq!(
+                        &ys[bi * n..(bi + 1) * n],
+                        &y[..],
+                        "b={b} n={n}: spmv_multi_fast[{bi}]"
+                    );
+                    let mut w = vec![0.0; n];
+                    let expect = quad_form_with_fast(&ap, n, x, &mut w);
+                    assert!(
+                        out[bi].to_bits() == expect.to_bits(),
+                        "b={b} n={n}: quad_form_multi_fast[{bi}] bits differ"
+                    );
+                    assert_eq!(&ws[bi * n..(bi + 1) * n], &w[..], "b={b} n={n}: w block[{bi}]");
+                }
+            }
+        }
+    }
+
+    /// Block composition cannot change a query's value: scoring a batch
+    /// in one call equals scoring any partition of it, bitwise, in both
+    /// modes.
+    #[test]
+    fn multi_kernels_are_block_boundary_invariant() {
+        let mut rng = Pcg64::seed(63);
+        let n = 11;
+        let b = 9;
+        let m = random_sym(n, &mut rng);
+        let ap = pack_symmetric(&m);
+        let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+
+        let mut whole = vec![0.0; b];
+        quad_form_multi(&ap, n, &es, b, &mut whole);
+        let mut whole_fast = vec![0.0; b];
+        let mut ws = vec![0.0; b * n];
+        quad_form_multi_fast(&ap, n, &es, b, &mut ws, &mut whole_fast);
+        // Split 9 = 4 + 5 (one full tile + tile-with-tail).
+        for (lo, hi) in [(0usize, 4usize), (4, 9)] {
+            let part = &es[lo * n..hi * n];
+            let pb = hi - lo;
+            let mut out = vec![0.0; pb];
+            quad_form_multi(&ap, n, part, pb, &mut out);
+            assert_eq!(&whole[lo..hi], &out[..], "strict split {lo}..{hi}");
+            let mut wpart = vec![0.0; pb * n];
+            quad_form_multi_fast(&ap, n, part, pb, &mut wpart, &mut out);
+            assert_eq!(&whole_fast[lo..hi], &out[..], "fast split {lo}..{hi}");
+        }
+    }
+
+    /// The multi mode dispatcher routes to the matching kernel.
+    #[test]
+    fn multi_mode_dispatcher_routes_correctly() {
+        let mut rng = Pcg64::seed(64);
+        let n = 7;
+        let b = 5;
+        let m = random_sym(n, &mut rng);
+        let ap = pack_symmetric(&m);
+        let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+
+        let mut expect = vec![0.0; b];
+        quad_form_multi(&ap, n, &es, b, &mut expect);
+        let mut out = vec![0.0; b];
+        quad_form_multi_mode(&ap, n, &es, b, &mut [], &mut out, KernelMode::Strict);
+        assert_eq!(out, expect);
+
+        let mut ws = vec![0.0; b * n];
+        quad_form_multi_fast(&ap, n, &es, b, &mut ws, &mut expect);
+        let mut ws2 = vec![0.0; b * n];
+        quad_form_multi_mode(&ap, n, &es, b, &mut ws2, &mut out, KernelMode::Fast);
+        assert_eq!(out, expect);
+        assert_eq!(ws, ws2);
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Blocked batch scoring ≡ per-point scoring — the query-blocking
+//! contract.
+//!
+//! Every batch scoring surface (`Figmn::{score_batch, predict_batch}`,
+//! `ModelSnapshot::{score_batch, posteriors_batch, predict_batch,
+//! class_scores_batch}`, `SupervisedGmm::class_scores_batch`) runs
+//! component-outer over 32-query blocks, streaming each packed
+//! component row once per block. Blocking reorders *which query*
+//! consumes a matrix value next — never the operations within a query —
+//! so batch results must equal mapping the per-point entry points:
+//!
+//! - **Strict mode: bit-identical**, by the multi-kernel contract
+//!   (`linalg::packed`).
+//! - **Fast mode: bit-identical too** (the fast multi kernels perform
+//!   each query's fast per-point sequence), which is strictly stronger
+//!   than the 1e-12 tolerance the mode guarantees against Strict.
+//!
+//! The matrix covers B ∈ {1, 3, 8, 33} (tile tails and the ragged
+//! 32+1 block), K ∈ {1, 4, 64}, D ∈ {2, 16, 128}, engine thread counts
+//! {1, 2, 4}, and snapshot ⇄ model agreement.
+
+use figmn::bench_support::{grow_config, grow_stream, grown_model};
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode};
+use figmn::rng::Pcg64;
+
+const DIMS: [usize; 3] = [2, 16, 128];
+const KS: [usize; 3] = [1, 4, 64];
+const BS: [usize; 4] = [1, 3, 8, 33];
+
+fn probes(d: usize, b: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..b).map(|_| (0..d).map(|_| rng.normal() * 500.0).collect()).collect()
+}
+
+/// Known/target split for the conditional surfaces: all-but-last known,
+/// last dim reconstructed.
+fn split(d: usize) -> (Vec<usize>, Vec<usize>) {
+    ((0..d - 1).collect(), vec![d - 1])
+}
+
+/// Assert every batch surface of `m` (and its snapshot) equals the
+/// per-point mapping, bitwise, on `b` probes.
+fn assert_blocked_equals_per_point(m: &Figmn, d: usize, b: usize, tag: &str) {
+    let xs = probes(d, b, 0xB10C + b as u64);
+    let snap = m.snapshot();
+
+    let expect: Vec<f64> = xs.iter().map(|x| m.log_density(x)).collect();
+    assert_eq!(m.score_batch(&xs), expect, "{tag}: model score_batch");
+    assert_eq!(snap.score_batch(&xs), expect, "{tag}: snapshot score_batch");
+
+    let expect_post: Vec<Vec<f64>> = xs.iter().map(|x| m.posteriors(x)).collect();
+    assert_eq!(snap.posteriors_batch(&xs), expect_post, "{tag}: posteriors_batch");
+
+    let (known, target) = split(d);
+    let kvs: Vec<Vec<f64>> = xs.iter().map(|x| x[..d - 1].to_vec()).collect();
+    let expect_pred: Vec<Vec<f64>> =
+        kvs.iter().map(|kv| m.predict(kv, &known, &target)).collect();
+    assert_eq!(
+        m.predict_batch(&kvs, &known, &target),
+        expect_pred,
+        "{tag}: model predict_batch"
+    );
+    assert_eq!(
+        snap.predict_batch(&kvs, &known, &target),
+        expect_pred,
+        "{tag}: snapshot predict_batch"
+    );
+}
+
+/// Strict mode: blocked ≡ per-point, bitwise, across the full
+/// B × K × D matrix (including the ragged 32+1 tail at B = 33).
+#[test]
+fn strict_blocked_bit_identical_to_per_point() {
+    for &d in &DIMS {
+        for &k in &KS {
+            let m = grown_model(d, k, KernelMode::Strict, 7);
+            for &b in &BS {
+                assert_blocked_equals_per_point(&m, d, b, &format!("strict d={d} k={k} b={b}"));
+            }
+        }
+    }
+}
+
+/// Fast mode: the fast multi kernels run each query's fast per-point
+/// sequence, so blocked ≡ per-point bitwise here too — which subsumes
+/// the mode's 1e-12 tolerance contract.
+#[test]
+fn fast_blocked_bit_identical_to_fast_per_point() {
+    for &d in &DIMS {
+        for &k in &KS {
+            let m = grown_model(d, k, KernelMode::Fast, 7);
+            for &b in &BS {
+                assert_blocked_equals_per_point(&m, d, b, &format!("fast d={d} k={k} b={b}"));
+            }
+        }
+    }
+}
+
+/// Fast-mode blocked scoring tracks a strict twin (same stream, same
+/// decisions) to relative 1e-12 — the cross-mode tolerance contract,
+/// now holding through the blocked path as well.
+#[test]
+fn fast_blocked_tracks_strict_to_1e12() {
+    let (d, k, b) = (16, 4, 33);
+    let mut strict = Figmn::new(grow_config(d, k, KernelMode::Strict), &vec![1.0; d]);
+    let mut fast = Figmn::new(grow_config(d, k, KernelMode::Fast), &vec![1.0; d]);
+    for x in grow_stream(d, k, 7) {
+        assert_eq!(strict.learn(&x), fast.learn(&x), "create/update decisions diverged");
+    }
+    assert_eq!(strict.num_components(), fast.num_components());
+    let xs = probes(d, b, 0xFA57);
+    let a = strict.score_batch(&xs);
+    let c = fast.score_batch(&xs);
+    for (i, (x, y)) in a.iter().zip(c.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-12 * (1.0 + x.abs().max(y.abs())),
+            "query {i}: fast blocked diverged past 1e-12 ({x} vs {y})"
+        );
+    }
+}
+
+/// Engine thread counts {1, 2, 4} reproduce the serial blocked path bit
+/// for bit, in both modes — the K×B tiling shards only the K axis, and
+/// the per-query merges stay schedule-independent.
+#[test]
+fn blocked_batches_bit_identical_across_thread_counts() {
+    for (d, k) in [(16usize, 64usize), (128, 4)] {
+        for mode in [KernelMode::Strict, KernelMode::Fast] {
+            let serial = grown_model(d, k, mode, 11);
+            let xs = probes(d, 33, 0x7EAD);
+            let (known, target) = split(d);
+            let kvs: Vec<Vec<f64>> = xs.iter().map(|x| x[..d - 1].to_vec()).collect();
+            let expect_scores = serial.score_batch(&xs);
+            let expect_preds = serial.predict_batch(&kvs, &known, &target);
+            for t in [1usize, 2, 4] {
+                let mut pooled = Figmn::new(grow_config(d, k, mode), &vec![1.0; d])
+                    .with_engine(EngineConfig::new(t));
+                pooled.learn_batch(&grow_stream(d, k, 11));
+                assert_eq!(pooled.num_components(), k, "d={d} k={k} T={t}: K");
+                assert_eq!(
+                    pooled.score_batch(&xs),
+                    expect_scores,
+                    "d={d} k={k} T={t} {mode}: score_batch"
+                );
+                assert_eq!(
+                    pooled.predict_batch(&kvs, &known, &target),
+                    expect_preds,
+                    "d={d} k={k} T={t} {mode}: predict_batch"
+                );
+            }
+        }
+    }
+}
+
+/// Block boundaries are invisible: scoring a 33-query batch in one call
+/// equals scoring any split of it (32+1, 16+17, 1-at-a-time), bitwise.
+#[test]
+fn batch_results_are_partition_invariant() {
+    let (d, k) = (16, 4);
+    for mode in [KernelMode::Strict, KernelMode::Fast] {
+        let m = grown_model(d, k, mode, 13);
+        let xs = probes(d, 33, 0x5417);
+        let whole = m.score_batch(&xs);
+        for cut in [1usize, 16, 32] {
+            let mut parts = m.score_batch(&xs[..cut]);
+            parts.extend(m.score_batch(&xs[cut..]));
+            assert_eq!(whole, parts, "{mode}: split at {cut}");
+        }
+        let singles: Vec<f64> =
+            xs.iter().map(|x| m.score_batch(std::slice::from_ref(x))[0]).collect();
+        assert_eq!(whole, singles, "{mode}: one-at-a-time");
+    }
+}
+
+/// Supervised batch classification rides the blocked conditional path
+/// and stays bit-identical to the per-point wrapper — model and
+/// snapshot agree.
+#[test]
+fn supervised_blocked_classification_matches_per_point() {
+    use figmn::gmm::supervised::supervised_figmn;
+    let cfg = GmmConfig::new(8).with_delta(0.5).with_beta(0.05).without_pruning();
+    let mut clf = supervised_figmn(cfg, &[3.0; 8], 3);
+    let mut rng = Pcg64::seed(21);
+    for i in 0..240 {
+        let c = i % 3;
+        let x: Vec<f64> = (0..8).map(|f| (c * 7 + f) as f64 + rng.normal() * 0.5).collect();
+        clf.train_one(&x, c);
+    }
+    let snap = clf.snapshot().expect("trained model must snapshot");
+    // 33 probes: ragged tail over the 32-query block.
+    let probes: Vec<Vec<f64>> = (0..33)
+        .map(|i| {
+            let c = i % 3;
+            (0..8).map(|f| (c * 7 + f) as f64 + rng.normal() * 0.5).collect()
+        })
+        .collect();
+    let expect: Vec<Vec<f64>> = probes.iter().map(|x| clf.class_scores(x)).collect();
+    assert_eq!(clf.class_scores_batch(&probes), expect, "wrapper class_scores_batch");
+    assert_eq!(snap.class_scores_batch(&probes), expect, "snapshot class_scores_batch");
+    assert_eq!(
+        clf.predict_class_batch(&probes),
+        probes.iter().map(|x| clf.predict_class(x)).collect::<Vec<_>>(),
+        "predict_class_batch"
+    );
+}
