@@ -130,6 +130,7 @@ fn phase2_full_pipeline() {
         stds: vec![4.0, 4.0],
         shards: 1,
         kernel_mode: figmn::gmm::KernelMode::Strict,
+        search_mode: figmn::gmm::SearchMode::Strict,
     };
     assert_eq!(send(&mut reader, &mut writer, &create), Response::Ok);
 

@@ -1,0 +1,271 @@
+//! K-scaling experiment for the candidate-index search: learn + score
+//! throughput vs K (components) at fixed D, strict full-K sweeps vs
+//! `SearchMode::TopC` — the empirical check that the index actually
+//! breaks the O(K·D²)-per-point wall (per-point cost `O(C·D²)` plus a
+//! cheap candidate lookup). Arms are re-materialized from the *same*
+//! arenas, so the comparison measures nothing but the search mode.
+//!
+//! Correctness gates ride along (and run even in quick mode):
+//!   - strict results bit-identical across 1/2/4 worker threads,
+//!   - TopC results bit-identical across 1/2/4 worker threads,
+//!   - TopC with c ≥ K bit-identical to the strict full sweep
+//!     (create + update decisions, arenas, and scores),
+//!   - TopC scores within 1e-9 of strict on near-center probes.
+//! The gates are recorded in the JSON `gates` array; the CI bench-diff
+//! step fails the job when any gate reports `pass: false`.
+//!
+//! Acceptance target (full mode): ≥ 3× combined learn+score throughput
+//! at K = 4096, D = 64 with TopC(C = 64) vs the strict full-K sweep.
+//!
+//! Run: `cargo bench --bench scaling_k`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench scaling_k`
+//! Writes `BENCH_scaling_k.json`.
+
+use figmn::bench_support::{
+    quick_mode, rematerialize, synthetic_centers, synthetic_grown_model, time_once,
+    write_bench_json, TablePrinter,
+};
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, SearchMode};
+use figmn::json::Json;
+use figmn::rng::Pcg64;
+
+const DIM: usize = 64;
+const TOP_C: usize = 64;
+const SEED: u64 = 42;
+
+/// Points cycling the model's centers with small noise — each lands in
+/// χ² range of exactly one component, so learns take the update path
+/// in both modes and scores have one dominant term.
+fn near_center_stream(centers: &[Vec<f64>], n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n)
+        .map(|i| centers[i % centers.len()].iter().map(|&c| c + rng.normal() * 0.5).collect())
+        .collect()
+}
+
+/// One measured/gated arm: the shared master arenas under `mode`, with
+/// an optional worker pool.
+fn arm(master: &Figmn, mode: SearchMode, threads: usize) -> Figmn {
+    let mut m = rematerialize(master, mode);
+    if threads > 1 {
+        m.set_engine(Some(EngineConfig::new(threads)));
+    }
+    m
+}
+
+/// Bitwise arena comparison. Non-panicking: gate results must reach
+/// the JSON payload (the CI bench-diff step keys off `pass: false`)
+/// before `main` aborts, so mismatches print and return `false`.
+fn models_identical(a: &Figmn, b: &Figmn, tag: &str) -> bool {
+    if a.num_components() != b.num_components() {
+        println!("  MISMATCH {tag}: K {} vs {}", a.num_components(), b.num_components());
+        return false;
+    }
+    for j in 0..a.num_components() {
+        let same = a.component_mean(j) == b.component_mean(j)
+            && a.component_lambda(j).as_slice() == b.component_lambda(j).as_slice()
+            && a.component_log_det(j) == b.component_log_det(j)
+            && a.component_stats(j) == b.component_stats(j);
+        if !same {
+            println!("  MISMATCH {tag}: component {j} diverged");
+            return false;
+        }
+    }
+    true
+}
+
+/// Strict vs TopC thread determinism + the c ≥ K bitwise-identity gate,
+/// on a small fixed K so the gates stay cheap enough for CI quick mode.
+/// Panicking inside a gate would skip the JSON write, so gates run
+/// first and `main` asserts after the payload is on disk.
+fn run_gates(k_gate: usize) -> Vec<(String, bool)> {
+    let master = synthetic_grown_model(DIM, k_gate, SearchMode::Strict, SEED);
+    let centers = synthetic_centers(DIM, k_gate, SEED);
+    let stream = near_center_stream(&centers, 200, 9);
+
+    let mut gates = Vec::new();
+
+    // Thread determinism, both modes: same stream through 1/2/4-thread
+    // arms must leave bit-identical arenas.
+    for (name, mode) in [
+        ("strict_thread_determinism", SearchMode::Strict),
+        ("topc_thread_determinism", SearchMode::TopC { c: (k_gate / 2).clamp(1, TOP_C) }),
+    ] {
+        let mut reference = arm(&master, mode, 1);
+        reference.learn_batch(&stream);
+        let pass = [2usize, 4].iter().all(|&t| {
+            let mut pooled = arm(&master, mode, t);
+            pooled.learn_batch(&stream);
+            models_identical(&reference, &pooled, &format!("{name} T={t}"))
+        });
+        gates.push((name.to_string(), pass));
+    }
+
+    // c ≥ K: the candidate set is all of 0..K ascending — the same
+    // arithmetic in the same order as the strict sweep, so arenas and
+    // scores must match bit for bit, through both the at-cap update
+    // path and a from-scratch create/update mix.
+    {
+        let mut strict = arm(&master, SearchMode::Strict, 1);
+        let mut full_c = arm(&master, SearchMode::TopC { c: k_gate }, 1);
+        strict.learn_batch(&stream);
+        full_c.learn_batch(&stream);
+        let mut pass = models_identical(&strict, &full_c, "full-c at cap");
+        let probes = near_center_stream(&centers, 64, 10);
+        pass &= strict.score_batch(&probes) == full_c.score_batch(&probes);
+
+        // From scratch: the first k_gate points create (novelty), the
+        // rest update at cap — both learn outcomes and final arenas
+        // must track the strict model exactly.
+        let base = GmmConfig::new(DIM)
+            .with_delta(0.5)
+            .with_beta(0.05)
+            .with_max_components(k_gate)
+            .without_pruning();
+        let mut s2 = Figmn::new(base.clone(), &vec![1.0; DIM]);
+        let mut t2 = Figmn::new(
+            base.with_search_mode(SearchMode::TopC { c: k_gate }),
+            &vec![1.0; DIM],
+        );
+        for x in centers.iter().chain(stream.iter()) {
+            let (a, b) = (s2.learn(x), t2.learn(x));
+            pass &= a == b;
+        }
+        pass &= models_identical(&s2, &t2, "full-c from scratch");
+        gates.push(("topc_full_c_bitwise".to_string(), pass));
+    }
+    gates
+}
+
+fn main() {
+    let quick = quick_mode();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let ks: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024, 4096, 16384] };
+    let n_for = |k: usize| if quick { 120 } else { (400_000 / k).clamp(100, 2000) };
+    let k_gate = if quick { 64 } else { 512 };
+
+    println!(
+        "scaling_k — learn+score throughput, strict vs TopC(C={TOP_C}) \
+         (D={DIM}, cores={cores}{})",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let gates = run_gates(k_gate);
+    for (name, pass) in &gates {
+        println!("  gate {name}: {}", if *pass { "OK" } else { "FAILED" });
+    }
+
+    let table = TablePrinter::new(
+        &["K", "learn/s", "topc", "score/s", "topc", "speedup"],
+        &[6, 12, 12, 12, 12, 8],
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_at_4096: f64 = 0.0;
+    let mut max_score_diff: f64 = 0.0;
+    for &k in ks {
+        let n = n_for(k);
+        let master = synthetic_grown_model(DIM, k, SearchMode::Strict, SEED);
+        let centers = synthetic_centers(DIM, k, SEED);
+        let probes = near_center_stream(&centers, n, 7);
+        let updates = near_center_stream(&centers, n, 8);
+
+        // One arm alive at a time (the K=16384 arenas are ~300 MB
+        // each): score first (immutable), then learn on the same arm.
+        let (t_score_s, t_learn_s, scores_s) = {
+            let mut strict = arm(&master, SearchMode::Strict, 1);
+            let (ts, scores) = time_once(|| strict.score_batch(&probes));
+            let (tl, _) = time_once(|| strict.learn_batch(&updates));
+            (ts, tl, scores)
+        };
+        let (t_score_c, t_learn_c, scores_c) = {
+            let mut topc = arm(&master, SearchMode::TopC { c: TOP_C }, 1);
+            let (ts, scores) = time_once(|| topc.score_batch(&probes));
+            let (tl, _) = time_once(|| topc.learn_batch(&updates));
+            (ts, tl, scores)
+        };
+
+        let diff = scores_s
+            .iter()
+            .zip(scores_c.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0_f64, f64::max);
+        max_score_diff = max_score_diff.max(diff);
+
+        let np = n as f64;
+        let (learn_s, learn_c) = (np / t_learn_s, np / t_learn_c);
+        let (score_s, score_c) = (np / t_score_s, np / t_score_c);
+        let combined = (t_learn_s + t_score_s) / (t_learn_c + t_score_c);
+        if k == 4096 {
+            speedup_at_4096 = combined;
+        }
+        table.row(&[
+            k.to_string(),
+            format!("{learn_s:10.0}"),
+            format!("{learn_c:10.0}"),
+            format!("{score_s:10.0}"),
+            format!("{score_c:10.0}"),
+            format!("{combined:6.2}×"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("d", DIM.into()),
+            ("k", k.into()),
+            ("c", TOP_C.into()),
+            ("points", n.into()),
+            ("strict_learn_pts_per_s", learn_s.into()),
+            ("topc_learn_pts_per_s", learn_c.into()),
+            ("strict_score_pts_per_s", score_s.into()),
+            ("topc_score_pts_per_s", score_c.into()),
+            ("combined_speedup", combined.into()),
+            ("max_abs_score_diff", diff.into()),
+        ]));
+    }
+
+    let score_tol_pass = max_score_diff < 1e-9;
+    let mut gate_json: Vec<Json> = gates
+        .iter()
+        .map(|(name, pass)| {
+            Json::obj(vec![("name", name.as_str().into()), ("pass", (*pass).into())])
+        })
+        .collect();
+    gate_json.push(Json::obj(vec![
+        ("name", "topc_score_tolerance".into()),
+        ("pass", score_tol_pass.into()),
+    ]));
+
+    let payload = Json::obj(vec![
+        ("bench", "scaling_k".into()),
+        ("dim", DIM.into()),
+        ("top_c", TOP_C.into()),
+        ("quick", quick.into()),
+        ("cores", cores.into()),
+        ("speedup_d64_k4096", speedup_at_4096.into()),
+        ("max_abs_score_diff", max_score_diff.into()),
+        ("gates", Json::Arr(gate_json)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("scaling_k", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    // Gates assert *after* the JSON is written so CI sees the failing
+    // `gates` entry as well as the panic.
+    assert!(gates.iter().all(|(_, p)| *p), "bitwise gate failed (see above)");
+    assert!(
+        score_tol_pass,
+        "TopC scores drifted {max_score_diff:.3e} from strict (tolerance 1e-9)"
+    );
+
+    if !quick {
+        assert!(
+            speedup_at_4096 >= 3.0,
+            "TopC(C={TOP_C}) combined learn+score speedup at D={DIM}, K=4096 \
+             is {speedup_at_4096:.2}× (< 3×)"
+        );
+        println!("scaling_k OK — {speedup_at_4096:.2}× combined at K=4096 (target ≥ 3×)");
+    } else {
+        println!("scaling_k done (quick mode; perf assertion skipped)");
+    }
+}

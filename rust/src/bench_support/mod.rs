@@ -8,7 +8,7 @@
 
 pub mod gmm_eval;
 
-use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode};
+use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode, SearchMode};
 use crate::json::Json;
 use crate::rng::Pcg64;
 use crate::stats::{mean, paired_t_test, std_dev};
@@ -52,6 +52,61 @@ pub fn grown_model(d: usize, k: usize, mode: KernelMode, seed: u64) -> Figmn {
     }
     assert_eq!(m.num_components(), k, "grow stream must create exactly K={k} components");
     m
+}
+
+/// A `k`-component model at dimension `d` built directly in the arenas
+/// (no training): well-separated means (scale 40, so components stay
+/// astronomically apart at D≥8), diagonal precisions `λ = 1/0.25`, and
+/// realistic `sp`/`v` bookkeeping. Growing state this size via `learn`
+/// is `O(N·K·D²)` — minutes of setup at K=16384 before the first
+/// measurement — and the K-scaling bench only needs *some* realistic
+/// K-component state to sweep; every measured arm re-materializes from
+/// the same arenas (see [`rematerialize`]), so the shortcut cannot
+/// favor one search mode over the other.
+pub fn synthetic_grown_model(d: usize, k: usize, mode: SearchMode, seed: u64) -> Figmn {
+    use crate::gmm::ComponentStore;
+    use crate::linalg::packed;
+
+    let mut rng = Pcg64::seed(seed);
+    let sigma = 0.5_f64;
+    let lambda = packed::from_diag(&vec![1.0 / (sigma * sigma); d]);
+    // log|C| for C = σ²·I.
+    let log_det = d as f64 * (sigma * sigma).ln();
+    let mut store = ComponentStore::with_capacity(d, k);
+    for j in 0..k {
+        let mean: Vec<f64> = (0..d).map(|_| rng.normal() * 40.0).collect();
+        store.push(&mean, &lambda, log_det, 2.0 + (j % 7) as f64 * 0.25, 2);
+    }
+    let cfg = GmmConfig::new(d)
+        .with_delta(sigma)
+        .with_beta(0.05)
+        .with_max_components(k)
+        .with_search_mode(mode)
+        .without_pruning();
+    let sigma_ini = cfg.sigma_ini(&vec![1.0; d]);
+    Figmn::from_parts(cfg, sigma_ini, store, 2 * k as u64)
+}
+
+/// The centers [`synthetic_grown_model`] drew for seed `seed` — probe
+/// and update streams are built around these.
+pub fn synthetic_centers(d: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..k).map(|_| (0..d).map(|_| rng.normal() * 40.0).collect()).collect()
+}
+
+/// Re-materialize `m` over a clone of its arenas under a different
+/// [`SearchMode`]. Both models share bit-identical component state, so
+/// benches can compare full-K vs top-C sweeps (or strict vs strict at
+/// different thread counts) without paying to grow the model twice —
+/// growing a full-mode model at K=16384 is O(N·K·D²) and infeasible,
+/// while growing once and cloning the arenas is a memcpy.
+pub fn rematerialize(m: &Figmn, mode: SearchMode) -> Figmn {
+    Figmn::from_parts(
+        m.config().clone().with_search_mode(mode),
+        m.sigma_ini().to_vec(),
+        m.store().clone(),
+        m.points_seen(),
+    )
 }
 
 /// True when benches should run in CI-smoke "quick mode"

@@ -3,6 +3,7 @@
 //! in-process client.
 
 use super::CoordError;
+use crate::gmm::SearchMode;
 use crate::json::{parse, Json};
 use crate::linalg::KernelMode;
 
@@ -24,6 +25,10 @@ pub enum Request {
         /// (`"strict"` default / `"fast"`; see
         /// [`crate::linalg::KernelMode`]).
         kernel_mode: KernelMode,
+        /// Component-axis search strategy for every shard's model
+        /// (`"strict"` default / `"topc:C"`; see
+        /// [`crate::gmm::SearchMode`]).
+        search_mode: SearchMode,
     },
     /// Present one labeled example.
     Learn { model: String, features: Vec<f64>, label: usize },
@@ -90,6 +95,7 @@ impl Request {
                 stds,
                 shards,
                 kernel_mode,
+                search_mode,
             } => Json::obj(vec![
                 ("op", "create_model".into()),
                 ("model", model.as_str().into()),
@@ -100,6 +106,7 @@ impl Request {
                 ("stds", Json::num_array(stds)),
                 ("shards", (*shards).into()),
                 ("kernel_mode", kernel_mode.as_str().into()),
+                ("search_mode", search_mode.to_wire().into()),
             ]),
             Request::Learn { model, features, label } => Json::obj(vec![
                 ("op", "learn".into()),
@@ -201,6 +208,16 @@ impl Request {
                         CoordError::Protocol("bad kernel_mode (want \"strict\"/\"fast\")".into())
                     })?,
                 };
+                // Optional search mode, same contract: absent → Strict
+                // (exact full-K); present but unknown → protocol error.
+                let search_mode = match doc.get("search_mode") {
+                    None => SearchMode::Strict,
+                    Some(v) => v.as_str().and_then(SearchMode::parse).ok_or_else(|| {
+                        CoordError::Protocol(
+                            "bad search_mode (want \"strict\"/\"topc:C\")".into(),
+                        )
+                    })?,
+                };
                 Ok(Request::CreateModel {
                     model: model()?,
                     n_features,
@@ -213,6 +230,7 @@ impl Request {
                         .unwrap_or_else(|| vec![1.0; n_features]),
                     shards: doc.get("shards").and_then(Json::as_usize).unwrap_or(1),
                     kernel_mode,
+                    search_mode,
                 })
             }
             "learn" => Ok(Request::Learn {
@@ -358,6 +376,7 @@ mod tests {
                 stds: vec![1.0, 2.0],
                 shards: 2,
                 kernel_mode: KernelMode::Fast,
+                search_mode: SearchMode::TopC { c: 16 },
             },
             Request::Learn { model: "m".into(), features: vec![0.5, -1.0], label: 2 },
             Request::Predict { model: "m".into(), features: vec![0.0, 1.0] },
@@ -419,13 +438,36 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::CreateModel { stds, shards, delta, kernel_mode, .. } => {
+            Request::CreateModel { stds, shards, delta, kernel_mode, search_mode, .. } => {
                 assert_eq!(stds, vec![1.0; 3]);
                 assert_eq!(shards, 1);
                 assert!(delta > 0.0);
                 assert_eq!(kernel_mode, KernelMode::Strict);
+                assert_eq!(search_mode, SearchMode::Strict);
             }
             _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn create_model_search_mode_parses_and_rejects_unknown() {
+        let r = Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"search_mode":"topc:32"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::CreateModel { search_mode, .. } => {
+                assert_eq!(search_mode, SearchMode::TopC { c: 32 })
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Unknown strategies and degenerate C are protocol errors, not
+        // silent strict fallbacks.
+        for bad in ["\"near\"", "\"topc:0\"", "\"topc:\"", "7"] {
+            let line = format!(
+                r#"{{"op":"create_model","model":"m","n_features":3,"n_classes":2,"search_mode":{bad}}}"#
+            );
+            assert!(Request::from_line(&line).is_err(), "{line}");
         }
     }
 

@@ -80,6 +80,14 @@ impl ModelSpec {
         self
     }
 
+    /// Select the component-axis search strategy for every shard's
+    /// model (carried in the spec's `GmmConfig`; see
+    /// [`crate::gmm::SearchMode`]).
+    pub fn with_search_mode(mut self, mode: crate::gmm::SearchMode) -> Self {
+        self.gmm = self.gmm.with_search_mode(mode);
+        self
+    }
+
     /// Attach a component-sharded engine to every shard of this model.
     /// Each shard gets its own pool; `EngineConfig::auto()` (threads=0)
     /// is resolved at create time as `cores / shards` so a sharded model
@@ -397,6 +405,28 @@ mod tests {
         assert_eq!(router.predict(&[7.0, 7.0]).unwrap().len(), 3);
         assert_eq!(reg.spec("f").unwrap().gmm.kernel_mode, KernelMode::Fast);
         reg.drop_model("f").unwrap();
+    }
+
+    #[test]
+    fn search_mode_spec_propagates_and_serves() {
+        use crate::gmm::SearchMode;
+        let reg = registry();
+        reg.create(blob_spec("t").with_search_mode(SearchMode::TopC { c: 4 })).unwrap();
+        let router = reg.router("t").unwrap();
+        let mut rng = Pcg64::seed(9);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..60 {
+            let c = i % 3;
+            router
+                .learn(
+                    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7],
+                    c,
+                )
+                .unwrap();
+        }
+        assert_eq!(router.predict(&[7.0, 7.0]).unwrap().len(), 3);
+        assert_eq!(reg.spec("t").unwrap().gmm.search_mode, SearchMode::TopC { c: 4 });
+        reg.drop_model("t").unwrap();
     }
 
     #[test]

@@ -203,11 +203,13 @@ fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Re
             stds,
             shards,
             kernel_mode,
+            search_mode,
         } => {
             let gmm = GmmConfig::new(1)
                 .with_delta(delta)
                 .with_beta(beta)
-                .with_kernel_mode(kernel_mode);
+                .with_kernel_mode(kernel_mode)
+                .with_search_mode(search_mode);
             let mut spec = ModelSpec::new(&model, n_features, n_classes)
                 .with_gmm(gmm)
                 .with_stds(stds)
@@ -362,6 +364,7 @@ mod tests {
             stds: vec![3.0, 3.0],
             shards: 1,
             kernel_mode: crate::linalg::KernelMode::Strict,
+            search_mode: crate::gmm::SearchMode::Strict,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
 
@@ -424,6 +427,7 @@ mod tests {
             stds: vec![3.0, 3.0],
             shards: 1,
             kernel_mode: crate::linalg::KernelMode::Fast,
+            search_mode: crate::gmm::SearchMode::TopC { c: 8 },
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
         let mut rng = Pcg64::seed(4);

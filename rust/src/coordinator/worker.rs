@@ -332,7 +332,8 @@ fn worker_loop(
         .with_delta(cfg.gmm.delta)
         .with_beta(cfg.gmm.beta)
         .with_max_components(cfg.gmm.max_components)
-        .with_kernel_mode(cfg.gmm.kernel_mode);
+        .with_kernel_mode(cfg.gmm.kernel_mode)
+        .with_search_mode(cfg.gmm.search_mode);
     joint_cfg = if cfg.gmm.prune {
         joint_cfg.with_pruning(cfg.gmm.v_min, cfg.gmm.sp_min)
     } else {

@@ -1,0 +1,581 @@
+//! Sublinear top-C candidate search over the flat component arenas.
+//!
+//! Learn and score are `O(K·D²)` per point because every packed
+//! component row is evaluated for every input. Following the candidate-
+//! set idea of "Sublinear Variational Optimization of GMMs" (PAPERS.md,
+//! arxiv 2501.12299), this module adds a cheap coarse partition over the
+//! component *means* — a [`CandidateIndex`] of k-means-style cells held
+//! in arenas parallel to [`ComponentStore`] — so the hot surfaces can
+//! evaluate only a top-C candidate set per query plus an exact-fallback
+//! gate, dropping the per-point cost to `O(√K·D + C·D²)`.
+//!
+//! ## The two modes ([`SearchMode`])
+//!
+//! - [`SearchMode::Strict`] (the default) bypasses the index entirely:
+//!   every surface runs the existing full-K sweeps, so results are
+//!   **bit-identical** to every release before the index existed — the
+//!   crate's determinism guarantee is untouched.
+//! - [`SearchMode::TopC`] evaluates the C nearest components (by
+//!   Euclidean distance of the query to the component means) on the
+//!   learn and density surfaces. Accuracy is tolerance-gated, **but the
+//!   accept/create decision sequence of `learn` is exactly the full-K
+//!   one**: if any candidate passes the χ² novelty test the full sweep
+//!   would have accepted too, and when *no* candidate passes, an exact
+//!   fallback gate scans the remaining cells — pruning only those whose
+//!   Mahalanobis lower bound proves no member can pass — before a
+//!   create is allowed. Only the posterior mass assignment (restricted
+//!   to the candidate set) is approximate.
+//!
+//! ## Bounds
+//!
+//! Each cell keeps its member set, a centroid, a covering `radius`
+//! (max Euclidean centroid→member-mean distance, plus accumulated
+//! drift `slack` as member means move), and a `lambda_floor`: the
+//! minimum Gershgorin lower bound on `λ_min(Λ_j)` over members (zeroed
+//! when any member's Λ changes). For a query `x` at Euclidean distance
+//! `t` from the centroid, every member mean is at distance
+//! `≥ lb = max(0, t − radius − slack)`, hence every member's squared
+//! Mahalanobis distance is `≥ lambda_floor·lb²` — a sound (sometimes
+//! vacuous, never wrong) bound used to order cells in the top-C scan
+//! and to skip whole cells in the exact fallback gate.
+//!
+//! The index is rebuilt deterministically (serial, input-order
+//! dependent only), so TopC results are bit-identical across thread
+//! counts and engine attach/detach, and a restored checkpoint rebuilds
+//! the identical index from its arenas — the index itself is never
+//! serialized.
+
+use super::store::ComponentStore;
+use crate::linalg::{packed, sq_dist};
+
+/// How the learn/score surfaces search the component axis. Carried per
+/// model (`GmmConfig::search_mode`), serialized with checkpoints,
+/// and selectable over the coordinator protocol and the CLI
+/// (`train --search-mode topc:64`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// Full-K sweeps on every surface — bit-identical to the pre-index
+    /// code paths (the default).
+    #[default]
+    Strict,
+    /// Evaluate only the `c` nearest components per query (plus the
+    /// exact-fallback gate on learn). Tolerance-gated accuracy,
+    /// `O(C·D²)` per point.
+    TopC {
+        /// Candidate-set size (≥ 1). `c ≥ K` degenerates to the exact
+        /// full-K evaluation.
+        c: usize,
+    },
+}
+
+impl SearchMode {
+    /// Wire/CLI encoding: `"strict"` or `"topc:C"` (e.g. `"topc:64"`).
+    pub fn to_wire(&self) -> String {
+        match self {
+            SearchMode::Strict => "strict".to_string(),
+            SearchMode::TopC { c } => format!("topc:{c}"),
+        }
+    }
+
+    /// Parse a wire/CLI name; `None` for anything unknown (including
+    /// `topc:0` — an empty candidate set is meaningless).
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        if s == "strict" {
+            return Some(SearchMode::Strict);
+        }
+        let c = s.strip_prefix("topc:")?.parse::<usize>().ok()?;
+        (c >= 1).then_some(SearchMode::TopC { c })
+    }
+
+    /// The candidate-set size, `None` in strict mode.
+    pub fn top_c(&self) -> Option<usize> {
+        match self {
+            SearchMode::Strict => None,
+            SearchMode::TopC { c } => Some(*c),
+        }
+    }
+}
+
+impl std::fmt::Display for SearchMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_wire())
+    }
+}
+
+/// One coarse cell of the quantizer: a centroid over member means with
+/// covering and spectral bounds (see the module docs).
+#[derive(Debug, Clone)]
+struct Cell {
+    centroid: Vec<f64>,
+    /// Max Euclidean centroid→member-mean distance at build/insert time.
+    radius: f64,
+    /// Accumulated member mean drift since build (added to `radius` in
+    /// every bound, keeping bounds sound without per-update rebuilds).
+    slack: f64,
+    /// `min_j max(0, Gershgorin λ_min(Λ_j))` over members; zeroed when
+    /// any member's Λ is updated, which keeps the Mahalanobis bound
+    /// sound (a zero floor is vacuous, never wrong).
+    lambda_floor: f64,
+    /// Component indices, ascending.
+    members: Vec<u32>,
+}
+
+/// Coarse quantizer over the component means — see the module docs.
+///
+/// All operations are serial and depend only on the arena contents, so
+/// two stores with equal rows always produce bit-identical indexes
+/// (determinism across thread counts and checkpoint round-trips).
+#[derive(Debug, Clone)]
+pub struct CandidateIndex {
+    dim: usize,
+    /// Component count the index describes.
+    k: usize,
+    /// Store generation at build / last structural note.
+    generation: u64,
+    cells: Vec<Cell>,
+    /// Component → cell containing it.
+    assign: Vec<u32>,
+    /// Per-component accumulated mean drift since build.
+    drift: Vec<f64>,
+    /// Rebuild once any component's accumulated drift exceeds this.
+    drift_budget: f64,
+    max_drift: f64,
+}
+
+impl CandidateIndex {
+    /// Build the quantizer over the store's current means: `⌈√K⌉`
+    /// stride-seeded cells, one Lloyd refinement sweep, then covering
+    /// radii and Gershgorin floors from the packed Λ rows. `O(K·√K·D)`
+    /// for assignment plus `O(K·D²)` for the floors — rebuild-time cost
+    /// only, amortized over many `O(C·D²)` queries.
+    pub fn build(store: &ComponentStore) -> CandidateIndex {
+        let k = store.len();
+        let d = store.dim();
+        assert!(k > 0, "CandidateIndex::build on empty store");
+        let n_cells = ((k as f64).sqrt().ceil() as usize).clamp(1, k);
+
+        // Stride-seeded leaders (deterministic spread over arena order).
+        let mut centroids: Vec<Vec<f64>> =
+            (0..n_cells).map(|i| store.mean(i * k / n_cells).to_vec()).collect();
+
+        // Assign → recompute centroids → assign once more (one Lloyd
+        // sweep is enough for a coarse quantizer; more sweeps buy
+        // little and cost rebuild latency).
+        let mut assign = vec![0u32; k];
+        for _sweep in 0..2 {
+            for (j, a) in assign.iter_mut().enumerate() {
+                *a = nearest_centroid(&centroids, store.mean(j)) as u32;
+            }
+            let mut counts = vec![0usize; centroids.len()];
+            let mut sums = vec![vec![0.0; d]; centroids.len()];
+            for (j, &a) in assign.iter().enumerate() {
+                counts[a as usize] += 1;
+                for (s, &m) in sums[a as usize].iter_mut().zip(store.mean(j)) {
+                    *s += m;
+                }
+            }
+            for ((c, s), &n) in centroids.iter_mut().zip(sums.iter()).zip(counts.iter()) {
+                if n > 0 {
+                    for (ci, &si) in c.iter_mut().zip(s.iter()) {
+                        *ci = si / n as f64;
+                    }
+                }
+                // Empty cells keep their seed centroid; they are dropped
+                // below after the final assignment.
+            }
+        }
+
+        // Materialize non-empty cells, preserving centroid order so the
+        // construction stays deterministic.
+        let mut cells: Vec<Cell> = Vec::with_capacity(centroids.len());
+        let mut cell_of_centroid = vec![u32::MAX; centroids.len()];
+        for (ci, centroid) in centroids.into_iter().enumerate() {
+            let members: Vec<u32> = assign
+                .iter()
+                .enumerate()
+                .filter(|&(_, &a)| a as usize == ci)
+                .map(|(j, _)| j as u32)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            cell_of_centroid[ci] = cells.len() as u32;
+            let mut radius = 0.0_f64;
+            let mut lambda_floor = f64::INFINITY;
+            for &j in &members {
+                let j = j as usize;
+                radius = radius.max(sq_dist(&centroid, store.mean(j)).sqrt());
+                lambda_floor = lambda_floor.min(packed::gershgorin_floor(store.mat(j), d));
+            }
+            cells.push(Cell { centroid, radius, slack: 0.0, lambda_floor, members });
+        }
+        for a in assign.iter_mut() {
+            *a = cell_of_centroid[*a as usize];
+        }
+
+        let avg_radius = cells.iter().map(|c| c.radius).sum::<f64>() / cells.len() as f64;
+        let drift_budget = if avg_radius > 0.0 {
+            0.5 * avg_radius
+        } else if cells.len() > 1 {
+            // All-singleton cells (K small): budget off the coarse
+            // geometry instead — a quarter of the closest centroid gap.
+            let mut min_gap = f64::INFINITY;
+            for i in 0..cells.len() {
+                for j in i + 1..cells.len() {
+                    min_gap = min_gap.min(sq_dist(&cells[i].centroid, &cells[j].centroid));
+                }
+            }
+            0.25 * min_gap.sqrt()
+        } else {
+            f64::INFINITY // one cell covers everything; drift is harmless
+        };
+
+        CandidateIndex {
+            dim: d,
+            k,
+            generation: store.generation(),
+            cells,
+            assign,
+            drift: vec![0.0; k],
+            drift_budget,
+            max_drift: 0.0,
+        }
+    }
+
+    /// Rebuild `slot` in place when it is missing or stale for `store`.
+    pub fn ensure(slot: &mut Option<CandidateIndex>, store: &ComponentStore) {
+        let stale = match slot {
+            None => true,
+            Some(idx) => idx.needs_rebuild(store),
+        };
+        if stale && store.len() > 0 {
+            *slot = Some(CandidateIndex::build(store));
+        }
+    }
+
+    /// Does the index still describe this store's row set? (Structural
+    /// freshness only — drift is tracked separately.)
+    pub fn matches(&self, store: &ComponentStore) -> bool {
+        self.generation == store.generation() && self.k == store.len()
+    }
+
+    /// Structural mismatch or accumulated mean drift past budget.
+    pub fn needs_rebuild(&self, store: &ComponentStore) -> bool {
+        !self.matches(store) || self.max_drift > self.drift_budget
+    }
+
+    /// Number of coarse cells.
+    pub fn num_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cell containing component `j` (test/diagnostic surface).
+    pub fn cell_of(&self, j: usize) -> usize {
+        self.assign[j] as usize
+    }
+
+    /// The `min(c, K)` components nearest `x` by Euclidean mean
+    /// distance, written into `out` in **ascending component order**.
+    /// Cells are scanned nearest-bound-first with an early exit once the
+    /// next cell's lower bound cannot beat the current C-th best, so
+    /// typical cost is `O(√K·D + C·D + |scanned|·D)`. Deterministic:
+    /// ties break on the lower component/cell index.
+    pub fn query(&self, x: &[f64], c: usize, store: &ComponentStore, out: &mut Vec<u32>) {
+        debug_assert!(self.matches(store), "query against a stale index");
+        debug_assert_eq!(x.len(), self.dim);
+        out.clear();
+        let c = c.min(self.k).max(1);
+
+        // Cell scan order: ascending squared Euclidean lower bound.
+        let mut order: Vec<(f64, u32)> = self
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(ci, cell)| {
+                let t = sq_dist(x, &cell.centroid).sqrt();
+                let lb = (t - cell.radius - cell.slack).max(0.0);
+                (lb * lb, ci as u32)
+            })
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        // Top-C selection, kept sorted ascending by (d², j).
+        let mut best: Vec<(f64, u32)> = Vec::with_capacity(c + 1);
+        for &(lb2, ci) in &order {
+            if best.len() == c && lb2 >= best[c - 1].0 {
+                break; // no member of this (or any later) cell can enter
+            }
+            for &j in &self.cells[ci as usize].members {
+                let d2 = sq_dist(x, store.mean(j as usize));
+                if best.len() == c && !((d2, j) < best[c - 1]) {
+                    continue;
+                }
+                let pos = best.partition_point(|&(bd, bj)| {
+                    bd.total_cmp(&d2).then(bj.cmp(&j)).is_lt()
+                });
+                best.insert(pos, (d2, j));
+                best.truncate(c);
+            }
+        }
+        out.extend(best.iter().map(|&(_, j)| j));
+        out.sort_unstable();
+    }
+
+    /// The exact-fallback gate's cell scan: visit every component that
+    /// could still pass the χ² novelty test and is not already in the
+    /// (ascending) `exclude` list. A cell is skipped only when its
+    /// Mahalanobis lower bound `lambda_floor·lb²` proves **no** member
+    /// can reach `d²_Λ < chi2` — so a create decision after this scan is
+    /// exactly the full-K decision.
+    pub fn scan_possible(
+        &self,
+        x: &[f64],
+        chi2: f64,
+        exclude: &[u32],
+        mut visit: impl FnMut(u32),
+    ) {
+        for cell in &self.cells {
+            let t = sq_dist(x, &cell.centroid).sqrt();
+            let lb = (t - cell.radius - cell.slack).max(0.0);
+            if cell.lambda_floor > 0.0 && cell.lambda_floor * lb * lb >= chi2 {
+                continue; // provably out of χ² reach for every member
+            }
+            for &j in &cell.members {
+                if exclude.binary_search(&j).is_err() {
+                    visit(j);
+                }
+            }
+        }
+    }
+
+    /// Record a freshly pushed component (must be the store's last row):
+    /// assign it to the nearest cell, growing that cell's covering
+    /// radius and tightening nothing — `O(√K·D + D²)`, no rebuild.
+    pub fn note_create(&mut self, store: &ComponentStore) {
+        let j = store.len() - 1;
+        debug_assert_eq!(self.k, j, "note_create: index missed a row");
+        let mean = store.mean(j);
+        let ci = self
+            .cells
+            .iter()
+            .enumerate()
+            .min_by(|(ai, a), (bi, b)| {
+                sq_dist(mean, &a.centroid)
+                    .total_cmp(&sq_dist(mean, &b.centroid))
+                    .then(ai.cmp(bi))
+            })
+            .map(|(ci, _)| ci)
+            .expect("index has at least one cell");
+        let cell = &mut self.cells[ci];
+        cell.radius = cell.radius.max(sq_dist(mean, &cell.centroid).sqrt());
+        cell.lambda_floor =
+            cell.lambda_floor.min(packed::gershgorin_floor(store.mat(j), self.dim));
+        cell.members.push(j as u32);
+        cell.members.sort_unstable();
+        self.assign.push(ci as u32);
+        self.drift.push(0.0);
+        self.k += 1;
+        self.generation = store.generation();
+    }
+
+    /// Record an in-place update of component `j` whose mean moved by at
+    /// most `shift` (Euclidean): the containing cell's slack absorbs the
+    /// motion (bounds stay sound) and its Λ floor is invalidated. Once
+    /// any component's accumulated drift exceeds the budget,
+    /// [`CandidateIndex::needs_rebuild`] turns true.
+    pub fn note_update(&mut self, j: usize, shift: f64) {
+        if shift <= 0.0 {
+            return;
+        }
+        let ci = self.assign[j] as usize;
+        self.cells[ci].slack += shift;
+        self.cells[ci].lambda_floor = 0.0;
+        self.drift[j] += shift;
+        self.max_drift = self.max_drift.max(self.drift[j]);
+    }
+}
+
+fn nearest_centroid(centroids: &[Vec<f64>], x: &[f64]) -> usize {
+    let mut best = 0;
+    let mut best_d2 = f64::INFINITY;
+    for (ci, c) in centroids.iter().enumerate() {
+        let d2 = sq_dist(x, c);
+        if d2 < best_d2 {
+            best_d2 = d2;
+            best = ci;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::packed::from_diag;
+
+    fn store_with_means(means: &[&[f64]]) -> ComponentStore {
+        let d = means[0].len();
+        let mut s = ComponentStore::new(d);
+        let lambda = from_diag(&vec![1.0; d]);
+        for m in means {
+            s.push(m, &lambda, 0.0, 1.0, 1);
+        }
+        s
+    }
+
+    #[test]
+    fn wire_format_round_trips() {
+        assert_eq!(SearchMode::parse("strict"), Some(SearchMode::Strict));
+        assert_eq!(SearchMode::parse("topc:64"), Some(SearchMode::TopC { c: 64 }));
+        assert_eq!(SearchMode::parse("topc:0"), None);
+        assert_eq!(SearchMode::parse("topc:"), None);
+        assert_eq!(SearchMode::parse("topk:4"), None);
+        for m in [SearchMode::Strict, SearchMode::TopC { c: 7 }] {
+            assert_eq!(SearchMode::parse(&m.to_wire()), Some(m));
+            assert_eq!(format!("{m}"), m.to_wire());
+        }
+        assert_eq!(SearchMode::default(), SearchMode::Strict);
+        assert_eq!(SearchMode::TopC { c: 3 }.top_c(), Some(3));
+        assert_eq!(SearchMode::Strict.top_c(), None);
+    }
+
+    #[test]
+    fn query_returns_true_nearest_ascending() {
+        // 8 means on a line; nearest-c to any probe is checkable by hand.
+        let means: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 * 10.0, 0.0]).collect();
+        let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
+        let store = store_with_means(&refs);
+        let idx = CandidateIndex::build(&store);
+        assert!(idx.matches(&store));
+        let mut out = Vec::new();
+        idx.query(&[31.0, 0.0], 3, &store, &mut out);
+        assert_eq!(out, vec![2, 3, 4]); // means 20, 30, 40
+        // c ≥ K returns everything.
+        idx.query(&[31.0, 0.0], 100, &store, &mut out);
+        assert_eq!(out, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn query_matches_brute_force_on_clustered_means() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed(11);
+        let d = 5;
+        let mut s = ComponentStore::new(d);
+        let lambda = from_diag(&vec![1.0; d]);
+        for g in 0..6 {
+            for _ in 0..7 {
+                let m: Vec<f64> =
+                    (0..d).map(|i| g as f64 * 20.0 + i as f64 + 0.1 * rng.normal()).collect();
+                s.push(&m, &lambda, 0.0, 1.0, 1);
+            }
+        }
+        let idx = CandidateIndex::build(&s);
+        let mut out = Vec::new();
+        for probe in 0..20 {
+            let x: Vec<f64> = (0..d).map(|_| 60.0 * rng.uniform()).collect();
+            for c in [1, 4, 13] {
+                idx.query(&x, c, &s, &mut out);
+                // Brute force: sort all (d², j), take c, compare sets.
+                let mut all: Vec<(f64, u32)> = (0..s.len())
+                    .map(|j| (sq_dist(&x, s.mean(j)), j as u32))
+                    .collect();
+                all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let mut want: Vec<u32> = all[..c].iter().map(|&(_, j)| j).collect();
+                want.sort_unstable();
+                assert_eq!(out, want, "probe {probe} c {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn note_create_tracks_push_without_rebuild() {
+        let means: Vec<Vec<f64>> = (0..9).map(|i| vec![i as f64]).collect();
+        let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
+        let mut store = store_with_means(&refs);
+        let mut idx = CandidateIndex::build(&store);
+        store.push(&[4.5], &from_diag(&[1.0]), 0.0, 1.0, 1);
+        assert!(!idx.matches(&store));
+        idx.note_create(&store);
+        assert!(idx.matches(&store));
+        assert!(!idx.needs_rebuild(&store));
+        let mut out = Vec::new();
+        idx.query(&[4.4, ], 2, &store, &mut out);
+        assert!(out.contains(&9), "new row must be findable: {out:?}");
+    }
+
+    #[test]
+    fn drift_budget_triggers_rebuild() {
+        let means: Vec<Vec<f64>> = (0..16).map(|i| vec![(i % 4) as f64, (i / 4) as f64]).collect();
+        let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
+        let store = store_with_means(&refs);
+        let mut idx = CandidateIndex::build(&store);
+        assert!(!idx.needs_rebuild(&store));
+        // Small drifts accumulate; eventually the budget trips.
+        for _ in 0..10_000 {
+            idx.note_update(3, 0.05);
+            if idx.needs_rebuild(&store) {
+                return;
+            }
+        }
+        panic!("accumulated drift never tripped the rebuild budget");
+    }
+
+    #[test]
+    fn scan_possible_visits_all_reachable_members() {
+        // Identity Λ on every component → lambda_floor = 1, so a cell
+        // at Euclidean lower bound lb is prunable iff lb² ≥ chi2.
+        let means: Vec<Vec<f64>> = (0..12).map(|i| vec![i as f64 * 100.0]).collect();
+        let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
+        let store = store_with_means(&refs);
+        let idx = CandidateIndex::build(&store);
+        let x = [0.0];
+        let chi2 = 25.0; // only component 0 (distance 0) can pass
+        let mut visited = Vec::new();
+        idx.scan_possible(&x, chi2, &[], |j| visited.push(j));
+        visited.sort_unstable();
+        assert!(visited.contains(&0));
+        // Soundness: every component with d²_Λ < chi2 must be visited.
+        for j in 0..store.len() {
+            if sq_dist(&x, store.mean(j)) < chi2 {
+                assert!(visited.contains(&(j as u32)), "missed reachable component {j}");
+            }
+        }
+        // Exclusion list suppresses already-evaluated candidates.
+        let mut without0 = Vec::new();
+        idx.scan_possible(&x, chi2, &[0], |j| without0.push(j));
+        assert!(!without0.contains(&0));
+        // After an update invalidates a cell's floor, its members are
+        // always visited (vacuous bound).
+        let mut idx2 = idx.clone();
+        let far = (store.len() - 1) as u32;
+        idx2.note_update(far as usize, 0.01);
+        let mut v2 = Vec::new();
+        idx2.scan_possible(&x, chi2, &[], |j| v2.push(j));
+        assert!(v2.contains(&far), "zeroed floor must make the cell unprunable");
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seed(3);
+        let d = 3;
+        let mut s = ComponentStore::new(d);
+        let lambda = from_diag(&vec![2.0; d]);
+        for _ in 0..40 {
+            let m: Vec<f64> = (0..d).map(|_| 10.0 * rng.normal()).collect();
+            s.push(&m, &lambda, 0.0, 1.0, 1);
+        }
+        let a = CandidateIndex::build(&s);
+        let b = CandidateIndex::build(&s);
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.num_cells(), b.num_cells());
+        let mut oa = Vec::new();
+        let mut ob = Vec::new();
+        for probe in 0..10 {
+            let x: Vec<f64> = (0..d).map(|_| 10.0 * rng.normal()).collect();
+            a.query(&x, 5, &s, &mut oa);
+            b.query(&x, 5, &s, &mut ob);
+            assert_eq!(oa, ob, "probe {probe}");
+        }
+    }
+}

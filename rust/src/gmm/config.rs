@@ -1,5 +1,6 @@
 //! Shared configuration for both IGMN variants.
 
+use super::candidates::SearchMode;
 use crate::linalg::KernelMode;
 use crate::stats::chi2_quantile;
 
@@ -37,6 +38,14 @@ pub struct GmmConfig {
     /// update; conditional inference (`predict`) and the covariance
     /// baseline always run the strict kernels.
     pub kernel_mode: KernelMode,
+    /// How the learn/score surfaces search the component axis:
+    /// [`SearchMode::Strict`] (default; full-K sweeps, bit-identical to
+    /// the pre-index code paths) or [`SearchMode::TopC`] (evaluate only
+    /// the C nearest components per query with an exact-fallback gate
+    /// on learn — see [`SearchMode`] for the contract). Affects the
+    /// precision path only; conditional inference (`predict`) and the
+    /// covariance baseline always run the full-K sweep.
+    pub search_mode: SearchMode,
     chi2_threshold: f64,
 }
 
@@ -54,6 +63,7 @@ impl GmmConfig {
             max_components: 0,
             prune: true,
             kernel_mode: KernelMode::Strict,
+            search_mode: SearchMode::Strict,
             chi2_threshold: 0.0,
         };
         cfg.recompute_threshold();
@@ -94,6 +104,13 @@ impl GmmConfig {
     /// [`GmmConfig::kernel_mode`]).
     pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
         self.kernel_mode = mode;
+        self
+    }
+
+    /// Select the component-axis search strategy (see
+    /// [`GmmConfig::search_mode`]).
+    pub fn with_search_mode(mut self, mode: SearchMode) -> Self {
+        self.search_mode = mode;
         self
     }
 
@@ -152,6 +169,15 @@ mod tests {
         assert_eq!(KernelMode::parse("turbo"), None);
         assert_eq!(KernelMode::Fast.as_str(), "fast");
         assert_eq!(KernelMode::default(), KernelMode::Strict);
+    }
+
+    #[test]
+    fn search_mode_defaults_strict_and_round_trips() {
+        let cfg = GmmConfig::new(4);
+        assert_eq!(cfg.search_mode, SearchMode::Strict);
+        let cfg = cfg.with_search_mode(SearchMode::TopC { c: 32 });
+        assert_eq!(cfg.search_mode, SearchMode::TopC { c: 32 });
+        assert_eq!(cfg.search_mode.to_wire(), "topc:32");
     }
 
     #[test]

@@ -46,7 +46,10 @@
 //! bit-identical to mapping the per-point entry points in both kernel
 //! modes (`tests/blocked_scoring_equivalence.rs`).
 
-use super::inference::{precision_conditional, precision_conditional_multi};
+use super::candidates::{CandidateIndex, SearchMode};
+use super::inference::{
+    precision_conditional, precision_conditional_multi_with, target_block_cholesky,
+};
 use super::score_block::{component_block_terms, wblock_len, ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
@@ -54,7 +57,7 @@ use crate::engine::{
     logsumexp_tree, worth_sharding, worth_sharding_batch, EngineConfig, SharedMut, WorkerPool,
 };
 use crate::linalg::rank_one::figmn_fused_update_packed_mode;
-use crate::linalg::{packed, sub_into, KernelMode, Matrix};
+use crate::linalg::{norm2, packed, sub_into, Cholesky, KernelMode, Matrix};
 
 /// Cap on live per-(point, component) slots in the batch scoring paths:
 /// batches are processed in chunks of `BATCH_CHUNK_SLOTS / K` points so
@@ -73,6 +76,12 @@ pub struct Figmn {
     points: u64,
     /// Optional component-sharded thread pool (None = serial).
     engine: Option<WorkerPool>,
+    /// Coarse quantizer over the component means, maintained by the
+    /// learn path when `cfg.search_mode` is [`SearchMode::TopC`]
+    /// (`None` in strict mode and before the first component exists).
+    /// Never serialized: a restored model rebuilds it deterministically
+    /// from its arenas.
+    index: Option<CandidateIndex>,
     // --- reusable scratch (learn() allocates nothing after warm-up) ---
     buf_e: Vec<f64>,
     buf_d2: Vec<f64>,
@@ -81,6 +90,11 @@ pub struct Figmn {
     buf_ws: Vec<f64>,
     buf_ll: Vec<f64>,
     buf_sp: Vec<f64>,
+    /// TopC learn scratch: the candidate set of the current point…
+    buf_cand: Vec<u32>,
+    /// …and each candidate's Euclidean mean distance `‖x − μ_j‖`
+    /// (drift bookkeeping for the index).
+    buf_en: Vec<f64>,
 }
 
 impl Figmn {
@@ -110,11 +124,14 @@ impl Figmn {
             store,
             points: 0,
             engine: None,
+            index: None,
             buf_e: vec![0.0; d],
             buf_d2: Vec::new(),
             buf_ws: Vec::new(),
             buf_ll: Vec::new(),
             buf_sp: Vec::new(),
+            buf_cand: Vec::new(),
+            buf_en: Vec::new(),
         }
     }
 
@@ -150,17 +167,27 @@ impl Figmn {
             // models get stable arena bases for the remaining headroom.
             store.reserve(target - store.len());
         }
+        // Restored TopC models rebuild their candidate index up front
+        // (deterministic: equal arenas always produce equal indexes, so
+        // a checkpoint round-trip scores identically to the live model).
+        let index = match cfg.search_mode {
+            SearchMode::TopC { .. } if !store.is_empty() => Some(CandidateIndex::build(&store)),
+            _ => None,
+        };
         Figmn {
             cfg,
             sigma_ini,
             store,
             points,
             engine: None,
+            index,
             buf_e: vec![0.0; d],
             buf_d2: Vec::new(),
             buf_ws: Vec::new(),
             buf_ll: Vec::new(),
             buf_sp: Vec::new(),
+            buf_cand: Vec::new(),
+            buf_en: Vec::new(),
         }
     }
 
@@ -303,6 +330,104 @@ impl Figmn {
             }
         }
         ll
+    }
+
+    /// The `(index, C)` pair when top-C search is active *and* the index
+    /// is current for the store. Scoring surfaces fall back to the
+    /// exact full-K sweep when this is `None` — which only happens in
+    /// strict mode or on a TopC model before its first component/learn
+    /// (the learn path keeps the index current from then on).
+    fn active_index(&self) -> Option<(&CandidateIndex, usize)> {
+        let c = self.cfg.search_mode.top_c()?;
+        let idx = self.index.as_ref()?;
+        idx.matches(&self.store).then_some((idx, c))
+    }
+
+    /// `ln p(x|j)` over the top-C candidate set of `x`, with the
+    /// (ascending) candidate list. Every evaluated term is exact; the
+    /// non-candidate tail is dropped ([`SearchMode::TopC`] contract).
+    fn topc_loglik(&self, index: &CandidateIndex, x: &[f64], c: usize) -> (Vec<u32>, Vec<f64>) {
+        let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
+        let mut cands = Vec::new();
+        index.query(x, c, &self.store, &mut cands);
+        let mut e = vec![0.0; d];
+        let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
+        let ll = cands
+            .iter()
+            .map(|&j| {
+                let j = j as usize;
+                sub_into(x, self.store.mean(j), &mut e);
+                log_gaussian(
+                    packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
+                    self.store.log_det(j),
+                    d,
+                )
+            })
+            .collect();
+        (cands, ll)
+    }
+
+    /// Top-C batch scoring: per query, candidate lookup + `O(C·D²)`
+    /// exact terms + the deterministic tree reduction over the
+    /// candidate set. With an engine attached the *query* axis is
+    /// sharded — every point's own instruction sequence (index walk,
+    /// term order, reduction shape) is untouched by sharding, so
+    /// results are bit-identical across thread counts.
+    fn score_batch_topc(&self, index: &CandidateIndex, c: usize, xs: &[Vec<f64>]) -> Vec<f64> {
+        let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
+        let store = &self.store;
+        let total_sp = store.total_sp();
+        let score_one = move |x: &[f64],
+                              cands: &mut Vec<u32>,
+                              terms: &mut Vec<f64>,
+                              e: &mut [f64],
+                              tmp: &mut [f64]|
+              -> f64 {
+            index.query(x, c, store, cands);
+            terms.clear();
+            for &j in cands.iter() {
+                let j = j as usize;
+                sub_into(x, store.mean(j), e);
+                terms.push(
+                    log_gaussian(
+                        packed::quad_form_scratch(store.mat(j), d, e, tmp, mode),
+                        store.log_det(j),
+                        d,
+                    ) + (store.sp(j) / total_sp).ln(),
+                );
+            }
+            logsumexp_tree(terms)
+        };
+        let b = xs.len();
+        let c_eff = c.min(store.len());
+        match &self.engine {
+            Some(pool) if worth_sharding_batch(b, c_eff, d, pool.threads()) => {
+                let mut out = vec![0.0; b];
+                let outp = SharedMut::new(out.as_mut_ptr());
+                pool.run(b, &move |_, range, scratch| {
+                    scratch.ensure(d);
+                    let mut cands = Vec::new();
+                    let mut terms = Vec::new();
+                    for bi in range {
+                        let (e, tmp) = scratch.pair(d);
+                        // Safety: slot bi is owned by exactly one shard.
+                        unsafe {
+                            *outp.at(bi) = score_one(&xs[bi], &mut cands, &mut terms, e, tmp);
+                        }
+                    }
+                });
+                out
+            }
+            _ => {
+                let mut cands = Vec::new();
+                let mut terms = Vec::new();
+                let mut e = vec![0.0; d];
+                let mut tmp = vec![0.0; d];
+                xs.iter().map(|x| score_one(x, &mut cands, &mut terms, &mut e, &mut tmp)).collect()
+            }
+        }
     }
 }
 
@@ -481,14 +606,146 @@ fn update_component(
     }
 }
 
-impl IncrementalMixture for Figmn {
-    fn learn(&mut self, x: &[f64]) -> LearnOutcome {
-        assert_eq!(x.len(), self.cfg.dim, "learn: dimensionality mismatch");
-        self.points += 1;
-        if self.store.is_empty() {
-            self.create(x);
-            return LearnOutcome::Created;
+/// Candidate-set variant of the distance pass: Mahalanobis distances
+/// and `w = Λ·e` for the `cands` components only, plus each candidate's
+/// Euclidean mean distance (index drift bookkeeping). With an engine
+/// attached the *candidate positions* are sharded — the per-shard
+/// candidate intersection of the engine docs — with merges unchanged.
+#[allow(clippy::too_many_arguments)]
+fn candidate_distance_pass(
+    store: &ComponentStore,
+    x: &[f64],
+    d: usize,
+    cands: &[u32],
+    buf_d2: &mut [f64],
+    buf_ws: &mut [f64],
+    buf_en: &mut [f64],
+    buf_e: &mut [f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let cn = cands.len();
+    match pool {
+        Some(pool) if worth_sharding(cn, d, pool.threads()) => {
+            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
+            let ws = SharedMut::new(buf_ws.as_mut_ptr());
+            let en = SharedMut::new(buf_en.as_mut_ptr());
+            pool.run(cn, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for i in range {
+                    let j = cands[i] as usize;
+                    let e = &mut scratch.e[..d];
+                    sub_into(x, store.mean(j), e);
+                    // Safety: slot i is owned by exactly one shard.
+                    unsafe {
+                        *en.at(i) = norm2(e).sqrt();
+                        *d2.at(i) = packed::quad_form_with_mode(
+                            store.mat(j),
+                            d,
+                            e,
+                            ws.slice(i * d, d),
+                            mode,
+                        );
+                    }
+                }
+            });
         }
+        _ => {
+            let e = &mut buf_e[..d];
+            for (i, &jc) in cands.iter().enumerate() {
+                let j = jc as usize;
+                sub_into(x, store.mean(j), e);
+                buf_en[i] = norm2(e).sqrt();
+                buf_d2[i] = packed::quad_form_with_mode(
+                    store.mat(j),
+                    d,
+                    e,
+                    &mut buf_ws[i * d..(i + 1) * d],
+                    mode,
+                );
+            }
+        }
+    }
+}
+
+/// Candidate-set variant of the update pass: Eqs. 4–9 plus the fused
+/// rank-two update for the `cands` components only. Candidate indices
+/// are unique, so sharding the candidate positions gives each worker
+/// exclusive ownership of its arena rows — same safety argument as the
+/// full pass.
+#[allow(clippy::too_many_arguments)]
+fn candidate_update_pass(
+    store: &mut ComponentStore,
+    x: &[f64],
+    d: usize,
+    post: &[f64],
+    cands: &[u32],
+    buf_d2: &[f64],
+    buf_ws: &[f64],
+    buf_e: &mut [f64],
+    sigma_ini: &[f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let cn = cands.len();
+    match pool {
+        Some(pool) if worth_sharding(cn, d, pool.threads()) => {
+            let raw = store.raw_mut();
+            pool.run(cn, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for i in range {
+                    let j = cands[i] as usize;
+                    // Safety: candidate indices are unique, so arena row
+                    // j is owned by exactly one shard position.
+                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
+                    update_component(
+                        mean,
+                        lambda,
+                        log_det,
+                        sp,
+                        v,
+                        x,
+                        d,
+                        post[i],
+                        buf_d2[i],
+                        &buf_ws[i * d..(i + 1) * d],
+                        sigma_ini,
+                        mode,
+                        &mut scratch.e[..d],
+                    );
+                }
+            });
+        }
+        _ => {
+            for (i, &jc) in cands.iter().enumerate() {
+                let (mean, lambda, log_det, sp, v) = store.row_mut(jc as usize);
+                update_component(
+                    mean,
+                    lambda,
+                    log_det,
+                    sp,
+                    v,
+                    x,
+                    d,
+                    post[i],
+                    buf_d2[i],
+                    &buf_ws[i * d..(i + 1) * d],
+                    sigma_ini,
+                    mode,
+                    &mut buf_e[..d],
+                );
+            }
+        }
+    }
+}
+
+impl Figmn {
+    /// The pre-index full-K learn body — strict mode runs exactly this,
+    /// so a strict model is bit-identical to every pre-index release.
+    /// (`TopC` with `c ≥ K` reproduces these results bit-for-bit through
+    /// the candidate path: the candidate set is all of `0..K` ascending,
+    /// the same arithmetic in the same order.)
+    fn learn_full(&mut self, x: &[f64]) -> LearnOutcome {
         let k = self.store.len();
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
@@ -535,6 +792,162 @@ impl IncrementalMixture for Figmn {
             self.create(x);
             self.prune();
             LearnOutcome::Created
+        }
+    }
+
+    /// The top-C learn body. The accept/create **decision** is exactly
+    /// the full-K one: a candidate passing χ² means the full sweep
+    /// accepts too, and when no candidate passes, the exact fallback
+    /// gate scans every component the index cannot *prove* out of χ²
+    /// reach (Mahalanobis cell bound) before a create is allowed. Only
+    /// the posterior mass assignment — restricted to the candidate set
+    /// plus any fallback acceptors — is approximate.
+    fn learn_topc(&mut self, x: &[f64], c: usize) -> LearnOutcome {
+        let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
+        let chi2 = self.cfg.chi2_threshold();
+        // Maintain the index (serial and data-dependent only, so TopC
+        // stays bit-deterministic across thread counts).
+        CandidateIndex::ensure(&mut self.index, &self.store);
+        {
+            let Figmn { index, store, buf_cand, .. } = self;
+            index.as_ref().expect("ensured above").query(x, c, store, buf_cand);
+        }
+        let cn = self.buf_cand.len();
+        self.buf_d2.resize(cn, 0.0);
+        self.buf_ws.resize(cn * d, 0.0);
+        self.buf_en.resize(cn, 0.0);
+        {
+            let Figmn { store, buf_cand, buf_d2, buf_ws, buf_en, buf_e, engine, .. } = self;
+            candidate_distance_pass(
+                store,
+                x,
+                d,
+                buf_cand,
+                buf_d2,
+                buf_ws,
+                buf_en,
+                buf_e,
+                mode,
+                engine.as_ref(),
+            );
+        }
+        let mut accept = self.buf_d2.iter().any(|&d2| d2 < chi2);
+        let cap_full =
+            self.cfg.max_components > 0 && self.store.len() >= self.cfg.max_components;
+        if !accept && !cap_full {
+            // Exact fallback gate: before a create, scan every
+            // non-candidate component whose cell the index cannot prove
+            // out of χ² reach. Acceptors join the candidate arrays (in
+            // ascending component order); evaluated non-acceptors are
+            // discarded — their posterior tail is the same tolerance
+            // class as the unevaluated one.
+            let mut extra: Vec<(u32, f64, f64)> = Vec::new();
+            let mut extra_ws: Vec<f64> = Vec::new();
+            {
+                let Figmn { index, store, buf_cand, .. } = self;
+                let mut e = vec![0.0; d];
+                index.as_ref().expect("ensured above").scan_possible(
+                    x,
+                    chi2,
+                    buf_cand,
+                    |jc| {
+                        let j = jc as usize;
+                        sub_into(x, store.mean(j), &mut e);
+                        let start = extra_ws.len();
+                        extra_ws.resize(start + d, 0.0);
+                        let d2 = packed::quad_form_with_mode(
+                            store.mat(j),
+                            d,
+                            &e,
+                            &mut extra_ws[start..],
+                            mode,
+                        );
+                        if d2 < chi2 {
+                            extra.push((jc, d2, norm2(&e).sqrt()));
+                        } else {
+                            extra_ws.truncate(start);
+                        }
+                    },
+                );
+            }
+            for (i, &(j, d2, en)) in extra.iter().enumerate() {
+                accept = true;
+                let pos = self.buf_cand.partition_point(|&cj| cj < j);
+                self.buf_cand.insert(pos, j);
+                self.buf_d2.insert(pos, d2);
+                self.buf_en.insert(pos, en);
+                let row = i * d;
+                self.buf_ws.splice(pos * d..pos * d, extra_ws[row..row + d].iter().copied());
+            }
+        }
+        if accept || cap_full {
+            // Posteriors restricted to the candidate set, reduced in
+            // ascending component order (thread-count independent).
+            self.buf_ll.clear();
+            self.buf_sp.clear();
+            for (i, &jc) in self.buf_cand.iter().enumerate() {
+                let j = jc as usize;
+                self.buf_ll.push(log_gaussian(self.buf_d2[i], self.store.log_det(j), d));
+                self.buf_sp.push(self.store.sp(j));
+            }
+            let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
+            {
+                let Figmn { store, sigma_ini, buf_cand, buf_d2, buf_ws, buf_e, engine, .. } =
+                    self;
+                candidate_update_pass(
+                    store,
+                    x,
+                    d,
+                    &post,
+                    buf_cand,
+                    buf_d2,
+                    buf_ws,
+                    buf_e,
+                    sigma_ini,
+                    mode,
+                    engine.as_ref(),
+                );
+            }
+            // Drift bookkeeping: each updated mean moved by ω‖e‖ with
+            // ω = p/sp_new (sp already includes p after the update).
+            {
+                let Figmn { index, store, buf_cand, buf_en, .. } = self;
+                let index = index.as_mut().expect("ensured above");
+                for (i, &jc) in buf_cand.iter().enumerate() {
+                    let sp_new = store.sp(jc as usize);
+                    if post[i] > 0.0 && sp_new > 0.0 {
+                        index.note_update(jc as usize, post[i] / sp_new * buf_en[i]);
+                    }
+                }
+            }
+            self.prune();
+            LearnOutcome::Updated
+        } else {
+            self.create(x);
+            if let Some(index) = self.index.as_mut() {
+                index.note_create(&self.store);
+            }
+            self.prune();
+            LearnOutcome::Created
+        }
+    }
+}
+
+impl IncrementalMixture for Figmn {
+    fn learn(&mut self, x: &[f64]) -> LearnOutcome {
+        assert_eq!(x.len(), self.cfg.dim, "learn: dimensionality mismatch");
+        self.points += 1;
+        if self.store.is_empty() {
+            self.create(x);
+            if self.cfg.search_mode.top_c().is_some() {
+                self.index = Some(CandidateIndex::build(&self.store));
+            }
+            return LearnOutcome::Created;
+        }
+        match self.cfg.search_mode {
+            SearchMode::Strict => self.learn_full(x),
+            SearchMode::TopC { c } => self.learn_topc(x, c),
         }
     }
 
@@ -606,6 +1019,15 @@ impl IncrementalMixture for Figmn {
     fn log_density(&self, x: &[f64]) -> f64 {
         assert!(!self.store.is_empty());
         let total_sp = self.store.total_sp();
+        if let Some((index, c)) = self.active_index() {
+            let (cands, ll) = self.topc_loglik(index, x, c);
+            let terms: Vec<f64> = cands
+                .iter()
+                .zip(ll.iter())
+                .map(|(&j, &llj)| llj + (self.store.sp(j as usize) / total_sp).ln())
+                .collect();
+            return logsumexp_tree(&terms);
+        }
         let ll = self.per_component_loglik(x);
         let terms: Vec<f64> = self
             .store
@@ -618,6 +1040,19 @@ impl IncrementalMixture for Figmn {
     }
 
     fn posteriors(&self, x: &[f64]) -> Vec<f64> {
+        if let Some((index, c)) = self.active_index() {
+            // Full-length posterior vector (API shape contract), with
+            // the mass renormalized over the candidate set and zeros
+            // everywhere else.
+            let (cands, ll) = self.topc_loglik(index, x, c);
+            let sps: Vec<f64> = cands.iter().map(|&j| self.store.sp(j as usize)).collect();
+            let post = softmax_posteriors(&ll, &sps);
+            let mut out = vec![0.0; self.store.len()];
+            for (&j, &p) in cands.iter().zip(post.iter()) {
+                out[j as usize] = p;
+            }
+            return out;
+        }
         let ll = self.per_component_loglik(x);
         softmax_posteriors(&ll, self.store.sps())
     }
@@ -650,6 +1085,9 @@ impl IncrementalMixture for Figmn {
         let mode = self.cfg.kernel_mode;
         for x in xs {
             assert_eq!(x.len(), d, "score_batch: dimensionality mismatch");
+        }
+        if let Some((index, c)) = self.active_index() {
+            return self.score_batch_topc(index, c, xs);
         }
         let total_sp = self.store.total_sp();
         let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
@@ -727,9 +1165,10 @@ impl IncrementalMixture for Figmn {
     /// Batch conditional inference with the same chunked sharding and
     /// `K×B` tiling as [`IncrementalMixture::score_batch`]: per
     /// component, each query block runs through
-    /// [`precision_conditional_multi`], which streams the component's
-    /// `Λ` entries once per block and factorizes the target-block
-    /// Cholesky once per block instead of once per query. Identical to
+    /// [`precision_conditional_multi_with`], which streams the
+    /// component's `Λ` entries once per block, against a target-block
+    /// Cholesky factorized **once per component per call** (the factor
+    /// depends on neither the queries nor the blocks). Identical to
     /// mapping [`IncrementalMixture::predict`].
     fn predict_batch(
         &self,
@@ -746,6 +1185,11 @@ impl IncrementalMixture for Figmn {
         let d = self.cfg.dim;
         let sps = self.store.sps();
         let chunk = (BATCH_CHUNK_SLOTS / k).max(1);
+        // Per-component target-block factors, hoisted out of the chunk
+        // and block loops (read-only below, shared across the pool).
+        let factors: Vec<Cholesky> = (0..k)
+            .map(|j| target_block_cholesky(self.store.mat(j), d, target_idx))
+            .collect();
         let mut out = Vec::with_capacity(known_vals.len());
         for kv_chunk in known_vals.chunks(chunk) {
             let b = kv_chunk.len();
@@ -757,12 +1201,13 @@ impl IncrementalMixture for Figmn {
                 .filter(|p| worth_sharding_batch(b, k, d, p.threads()));
             if let Some(pool) = pool {
                 let store = &self.store;
+                let factors = &factors;
                 let ll = SharedMut::new(log_liks.as_mut_ptr());
                 let rc = SharedMut::new(recons.as_mut_ptr());
                 pool.run(k, &move |_, range, _| {
                     for j in range {
                         for (bs, block) in kv_chunk.chunks(SCORE_BLOCK).enumerate() {
-                            let conds = precision_conditional_multi(
+                            let conds = precision_conditional_multi_with(
                                 store.mat(j),
                                 d,
                                 store.mean(j),
@@ -770,6 +1215,7 @@ impl IncrementalMixture for Figmn {
                                 block,
                                 known_idx,
                                 target_idx,
+                                &factors[j],
                             );
                             let base = bs * SCORE_BLOCK;
                             for (bi, c) in conds.into_iter().enumerate() {
@@ -786,7 +1232,7 @@ impl IncrementalMixture for Figmn {
             } else {
                 for j in 0..k {
                     for (bs, block) in kv_chunk.chunks(SCORE_BLOCK).enumerate() {
-                        let conds = precision_conditional_multi(
+                        let conds = precision_conditional_multi_with(
                             self.store.mat(j),
                             d,
                             self.store.mean(j),
@@ -794,6 +1240,7 @@ impl IncrementalMixture for Figmn {
                             block,
                             known_idx,
                             target_idx,
+                            &factors[j],
                         );
                         let base = bs * SCORE_BLOCK;
                         for (bi, c) in conds.into_iter().enumerate() {

@@ -105,18 +105,41 @@ pub fn precision_conditional(
     Conditional { log_lik: log_gaussian(d2.max(0.0), log_det_a, ni), reconstruction: recon }
 }
 
+/// The Cholesky factor of a component's target block `W = Λ_tt`.
+///
+/// `W` depends only on the component's precision and the target split —
+/// not on the queries or the block — so batch callers compute it **once
+/// per component per call** (and [`super::ModelSnapshot`] caches it for
+/// its recorded split) instead of once per (component, block) as the
+/// pre-hoist code did. Reads `Λ` through the symmetric accessor in the
+/// same `(a, b)` order as the scalar path, so the factor — and
+/// everything derived from it — is bit-identical.
+pub fn target_block_cholesky(lambda: &[f64], dim: usize, target_idx: &[usize]) -> Cholesky {
+    let nt = target_idx.len();
+    let mut w = Matrix::zeros(nt, nt);
+    for (a, &ta) in target_idx.iter().enumerate() {
+        for (c, &tb) in target_idx.iter().enumerate() {
+            w[(a, c)] = sym_at(lambda, dim, ta, tb);
+        }
+    }
+    Cholesky::new(&w).expect("W = Λ_tt must be PD for a PD joint precision")
+}
+
 /// Block-batched [`precision_conditional`]: conditionals for a block of
 /// query rows sharing one known/target split, against one component.
 ///
 /// The scalar path re-reads every `Λ(k,t)`/`Λ(a,b)` entry and
 /// re-factorizes the target block `W` once *per query*; this variant
 /// streams each matrix entry once per **block** (applying it to every
-/// query while hot) and factorizes `W` — which does not depend on the
-/// query at all — exactly once. Per query, the floating-point
-/// operations run in the scalar path's order with per-query
-/// accumulators, so each returned [`Conditional`] is **bit-identical**
-/// to calling [`precision_conditional`] on that row alone.
-pub fn precision_conditional_multi(
+/// query while hot) and takes `W`'s factor precomputed by
+/// [`target_block_cholesky`] — hoisted all the way to once per
+/// (component, call) by the batch surfaces. Per query, the
+/// floating-point operations run in the scalar path's order with
+/// per-query accumulators, so each returned [`Conditional`] is
+/// **bit-identical** to calling [`precision_conditional`] on that row
+/// alone.
+#[allow(clippy::too_many_arguments)]
+pub fn precision_conditional_multi_with(
     lambda: &[f64],
     dim: usize,
     mean: &[f64],
@@ -124,6 +147,7 @@ pub fn precision_conditional_multi(
     known_vals_block: &[Vec<f64>],
     known_idx: &[usize],
     target_idx: &[usize],
+    chol: &Cholesky,
 ) -> Vec<Conditional> {
     let b = known_vals_block.len();
     let ni = known_idx.len();
@@ -170,15 +194,6 @@ pub fn precision_conditional_multi(
         }
     }
 
-    // W (t×t) and its Cholesky — query-independent, factorized once per
-    // (component, block) instead of once per (component, query).
-    let mut w = Matrix::zeros(nt, nt);
-    for (a, &ta) in target_idx.iter().enumerate() {
-        for (c, &tb) in target_idx.iter().enumerate() {
-            w[(a, c)] = sym_at(lambda, dim, ta, tb);
-        }
-    }
-    let chol = Cholesky::new(&w).expect("W = Λ_tt must be PD for a PD joint precision");
     let log_det_a = log_det + chol.log_det();
 
     (0..b)
@@ -196,6 +211,31 @@ pub fn precision_conditional_multi(
             }
         })
         .collect()
+}
+
+/// [`precision_conditional_multi_with`] with the target-block factor
+/// computed inline — the convenience form for one-shot callers (and the
+/// test oracle for the hoisted variant).
+pub fn precision_conditional_multi(
+    lambda: &[f64],
+    dim: usize,
+    mean: &[f64],
+    log_det: f64,
+    known_vals_block: &[Vec<f64>],
+    known_idx: &[usize],
+    target_idx: &[usize],
+) -> Vec<Conditional> {
+    let chol = target_block_cholesky(lambda, dim, target_idx);
+    precision_conditional_multi_with(
+        lambda,
+        dim,
+        mean,
+        log_det,
+        known_vals_block,
+        known_idx,
+        target_idx,
+        &chol,
+    )
 }
 
 /// Covariance-form conditional (original IGMN, Eq. 15). Factorizes the
@@ -325,6 +365,42 @@ mod tests {
                     multi[bi].reconstruction, single.reconstruction,
                     "block query {bi}: reconstruction diverged"
                 );
+            }
+        });
+    }
+
+    /// A target-block factor computed once and reused across blocks is
+    /// bit-identical to factorizing per block (the snapshot caches the
+    /// factor for its recorded split — this is the contract it relies
+    /// on).
+    #[test]
+    fn hoisted_factor_reuse_is_bit_identical() {
+        check(20, |rng| {
+            let n = 4 + rng.below(4);
+            let cov = random_spd(n, rng);
+            let mut lambda = cov.inverse().unwrap();
+            lambda.symmetrize();
+            let log_det = cov.determinant().ln();
+            let mean: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let known: Vec<usize> = (0..n - 2).collect();
+            let target = [n - 2, n - 1];
+            let lambda_p = pack_symmetric(&lambda);
+            let chol = target_block_cholesky(&lambda_p, n, &target);
+            for _block in 0..3 {
+                let b = 1 + rng.below(5);
+                let block: Vec<Vec<f64>> = (0..b)
+                    .map(|_| known.iter().map(|&i| mean[i] + rng.normal()).collect())
+                    .collect();
+                let hoisted = precision_conditional_multi_with(
+                    &lambda_p, n, &mean, log_det, &block, &known, &target, &chol,
+                );
+                let inline = precision_conditional_multi(
+                    &lambda_p, n, &mean, log_det, &block, &known, &target,
+                );
+                for (h, i) in hoisted.iter().zip(inline.iter()) {
+                    assert!(h.log_lik.to_bits() == i.log_lik.to_bits());
+                    assert_eq!(h.reconstruction, i.reconstruction);
+                }
             }
         });
     }

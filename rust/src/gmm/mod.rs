@@ -69,6 +69,7 @@
 //! interface (features + one-hot class concatenated into the joint input
 //! vector; class scores reconstructed at query time via Eq. 15/27).
 
+pub mod candidates;
 mod config;
 mod figmn;
 mod igmn;
@@ -79,6 +80,7 @@ mod snapshot;
 mod store;
 pub mod supervised;
 
+pub use candidates::{CandidateIndex, SearchMode};
 pub use config::GmmConfig;
 pub use figmn::Figmn;
 pub use igmn::Igmn;

@@ -29,7 +29,7 @@
 //! accepts the dense `cov` per-component form under `"kind":"igmn"`.
 
 use super::store::ComponentStore;
-use super::{Figmn, GmmConfig, Igmn, IncrementalMixture};
+use super::{Figmn, GmmConfig, Igmn, IncrementalMixture, SearchMode};
 use crate::json::Json;
 use crate::linalg::{packed, KernelMode};
 
@@ -49,6 +49,22 @@ fn read_kernel_mode(j: &Json) -> Result<KernelMode, String> {
             .as_str()
             .and_then(KernelMode::parse)
             .ok_or_else(|| "bad kernel_mode".to_string()),
+    }
+}
+
+/// Read the optional `search_mode` field (additive since the candidate
+/// index landed): absent defaults to [`SearchMode::Strict`] — the
+/// exact full-K sweep every pre-index reader ran — and
+/// present-but-invalid is rejected like any other corrupt field. The
+/// candidate index itself is never serialized; a top-C model rebuilds
+/// it deterministically from the restored arenas.
+fn read_search_mode(j: &Json) -> Result<SearchMode, String> {
+    match j.get("search_mode") {
+        None => Ok(SearchMode::Strict),
+        Some(v) => v
+            .as_str()
+            .and_then(SearchMode::parse)
+            .ok_or_else(|| "bad search_mode".to_string()),
     }
 }
 
@@ -86,6 +102,10 @@ impl Figmn {
             // it still load the document (the arenas carry no
             // mode-specific state).
             ("kernel_mode", cfg.kernel_mode.as_str().into()),
+            // Additive since the candidate index: the index is derived
+            // state (rebuilt from the arenas on load), so only the mode
+            // selector travels. Old readers ignore it and score full-K.
+            ("search_mode", cfg.search_mode.to_wire().into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -127,7 +147,8 @@ impl Figmn {
             .with_delta(delta)
             .with_beta(beta)
             .with_max_components(max_components)
-            .with_kernel_mode(read_kernel_mode(j)?);
+            .with_kernel_mode(read_kernel_mode(j)?)
+            .with_search_mode(read_search_mode(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -216,6 +237,9 @@ impl Igmn {
             ("prune", cfg.prune.into()),
             ("max_components", cfg.max_components.into()),
             ("kernel_mode", cfg.kernel_mode.as_str().into()),
+            // Config fidelity only — the covariance baseline always
+            // sweeps every component regardless of mode.
+            ("search_mode", cfg.search_mode.to_wire().into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -256,7 +280,8 @@ impl Igmn {
             .with_delta(delta)
             .with_beta(beta)
             .with_max_components(max_components)
-            .with_kernel_mode(read_kernel_mode(j)?);
+            .with_kernel_mode(read_kernel_mode(j)?)
+            .with_search_mode(read_search_mode(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -310,7 +335,7 @@ impl Igmn {
 
 #[cfg(test)]
 mod tests {
-    use crate::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture, KernelMode};
+    use crate::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture, KernelMode, SearchMode};
     use crate::json::parse;
     use crate::rng::Pcg64;
     use crate::testutil::assert_close;
@@ -446,6 +471,56 @@ mod tests {
             .to_string_compact()
             .replace("\"kernel_mode\":\"fast\"", "\"kernel_mode\":3");
         assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn search_mode_round_trips_and_defaults_strict() {
+        // Top-C models write and restore their mode, and the restored
+        // model rebuilds its candidate index from the arenas: scores
+        // are bit-identical to the source evaluated through a fresh
+        // index on the same state.
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.5)
+            .with_beta(0.1)
+            .with_search_mode(SearchMode::TopC { c: 2 });
+        let mut m = Figmn::new(cfg, &[2.0, 2.0]);
+        let mut rng = Pcg64::seed(13);
+        for _ in 0..80 {
+            let c = if rng.uniform() < 0.5 { 0.0 } else { 10.0 };
+            let x: Vec<f64> = (0..2).map(|_| c + rng.normal()).collect();
+            m.learn(&x);
+        }
+        let doc = m.to_json();
+        assert_eq!(doc.get("search_mode").and_then(|v| v.as_str()), Some("topc:2"));
+        let restored = Figmn::from_json(&doc).unwrap();
+        assert_eq!(restored.config().search_mode, SearchMode::TopC { c: 2 });
+        assert_eq!(restored.num_components(), m.num_components());
+        // The snapshots of both models walk freshly built indexes over
+        // identical arenas, so they agree bit-for-bit.
+        let (s1, s2) = (m.snapshot(), restored.snapshot());
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..2).map(|_| rng.normal() * 5.0).collect();
+            assert_eq!(s1.log_density(&x), s2.log_density(&x));
+            assert_eq!(s1.posteriors(&x), s2.posteriors(&x));
+        }
+        // A document without the field loads as Strict — the
+        // additive-field degrade path for pre-index readers/writers.
+        let stripped = match doc.clone() {
+            crate::json::Json::Obj(mut o) => {
+                o.remove("search_mode");
+                crate::json::Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let as_strict = Figmn::from_json(&stripped).unwrap();
+        assert_eq!(as_strict.config().search_mode, SearchMode::Strict);
+        // Invalid values are rejected like any corrupt field.
+        let bad_vals =
+            ["\"search_mode\":\"topc:0\"", "\"search_mode\":\"near\"", "\"search_mode\":7"];
+        for bad_val in bad_vals {
+            let bad = doc.to_string_compact().replace("\"search_mode\":\"topc:2\"", bad_val);
+            assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "{bad_val}");
+        }
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //! prefix — enforced by this module's tests and the
 //! `serving_read_path` bench.
 //!
+//! In [`SearchMode::TopC`] the density/posterior surfaces instead walk
+//! a [`CandidateIndex`] **frozen at publish**: rebuilt deterministically
+//! from the copied arenas at construction and never mutated, so every
+//! scorer thread sees one immutable candidate partition and repeated
+//! queries are bit-identical to each other. Candidate terms are exact;
+//! only the non-candidate tail is dropped (the [`SearchMode`] tolerance
+//! contract). Conditional inference (`predict*`, `class_scores*`)
+//! always evaluates every component.
+//!
 //! ## Batch surfaces are query-blocked
 //!
 //! The `*_batch` methods run **component-outer / query-inner** over
@@ -34,13 +43,16 @@
 //! [`Figmn`]: super::Figmn
 //! [`ComponentStore`]: super::ComponentStore
 
-use super::inference::{precision_conditional, precision_conditional_multi};
+use super::candidates::{CandidateIndex, SearchMode};
+use super::inference::{
+    precision_conditional, precision_conditional_multi_with, target_block_cholesky,
+};
 use super::score_block::{ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
 use super::supervised::clip_normalize;
 use super::{index_split, log_gaussian, softmax_posteriors, GmmConfig};
 use crate::engine::logsumexp_tree;
-use crate::linalg::{packed, sub_into, KernelMode};
+use crate::linalg::{packed, sub_into, Cholesky, KernelMode};
 
 /// An immutable copy of a [`super::Figmn`]'s mixture state, safe to
 /// share across scorer threads (`Send + Sync`, plain data only).
@@ -63,6 +75,17 @@ pub struct ModelSnapshot {
     /// rebuild two Vecs per call on the serving hot path.
     feature_idx: Vec<usize>,
     class_idx: Vec<usize>,
+    /// Candidate index for [`SearchMode::TopC`] serving, rebuilt
+    /// deterministically from the frozen arenas at construction and
+    /// never mutated again — the read path's "index frozen at publish".
+    /// `None` in strict mode (and on an empty store), where every
+    /// surface runs the exact full-K sweep.
+    index: Option<CandidateIndex>,
+    /// Per-component target-block Cholesky factors (`W = Λ_tt`) for the
+    /// recorded class split, hoisted out of the per-(component, block)
+    /// inner loop of the serving conditional path. Empty when the
+    /// snapshot has no class split.
+    split_factors: Vec<Cholesky>,
 }
 
 impl ModelSnapshot {
@@ -75,6 +98,11 @@ impl ModelSnapshot {
     ) -> ModelSnapshot {
         let total_sp = store.total_sp();
         let (feature_idx, class_idx) = index_split(n_features, n_classes);
+        let index = match cfg.search_mode {
+            SearchMode::TopC { .. } if !store.is_empty() => Some(CandidateIndex::build(&store)),
+            _ => None,
+        };
+        let split_factors = split_factors(&store, cfg.dim, &class_idx);
         ModelSnapshot {
             cfg,
             store,
@@ -84,6 +112,8 @@ impl ModelSnapshot {
             n_classes,
             feature_idx,
             class_idx,
+            index,
+            split_factors,
         }
     }
 
@@ -101,6 +131,7 @@ impl ModelSnapshot {
         let (feature_idx, class_idx) = index_split(n_features, n_classes);
         self.feature_idx = feature_idx;
         self.class_idx = class_idx;
+        self.split_factors = split_factors(&self.store, self.cfg.dim, &self.class_idx);
         self
     }
 
@@ -137,13 +168,59 @@ impl ModelSnapshot {
         current_points.saturating_sub(self.points)
     }
 
+    /// The top-C candidate list and exact `ln p(x|j)` terms for one
+    /// query against the frozen index — the same per-candidate
+    /// instruction sequence as `Figmn::topc_loglik`, so a snapshot and
+    /// a fresh-indexed model agree bit-for-bit on the same arenas.
+    fn topc_loglik(&self, index: &CandidateIndex, x: &[f64], c: usize) -> (Vec<u32>, Vec<f64>) {
+        let d = self.cfg.dim;
+        let mode = self.cfg.kernel_mode;
+        let mut cands = Vec::new();
+        index.query(x, c, &self.store, &mut cands);
+        let mut e = vec![0.0; d];
+        let mut tmp = vec![0.0; if mode == KernelMode::Fast { d } else { 0 }];
+        let ll = cands
+            .iter()
+            .map(|&j| {
+                let j = j as usize;
+                sub_into(x, self.store.mean(j), &mut e);
+                log_gaussian(
+                    packed::quad_form_scratch(self.store.mat(j), d, &e, &mut tmp, mode),
+                    self.store.log_det(j),
+                    d,
+                )
+            })
+            .collect();
+        (cands, ll)
+    }
+
+    /// The `(index, C)` pair when this snapshot serves top-C traffic.
+    fn active_index(&self) -> Option<(&CandidateIndex, usize)> {
+        let c = self.cfg.search_mode.top_c()?;
+        self.index.as_ref().map(|idx| (idx, c))
+    }
+
     /// Joint log-density `ln p(x)` — bit-identical to
     /// [`super::IncrementalMixture::log_density`] on the source model
-    /// (the snapshot runs the same kernels in the same
-    /// `cfg.kernel_mode` the source model was configured with).
+    /// in strict search mode (the snapshot runs the same kernels in the
+    /// same `cfg.kernel_mode` the source model was configured with). In
+    /// [`SearchMode::TopC`] the snapshot evaluates its own frozen
+    /// candidate index — deterministic and exact per candidate, but the
+    /// candidate *set* is rebuilt from the published arenas, so values
+    /// are tolerance-equivalent (not bitwise) to a live model whose
+    /// index has accumulated drift bookkeeping.
     pub fn log_density(&self, x: &[f64]) -> f64 {
         assert!(!self.store.is_empty(), "log_density on empty snapshot");
         assert_eq!(x.len(), self.cfg.dim, "log_density: dimensionality mismatch");
+        if let Some((index, c)) = self.active_index() {
+            let (cands, ll) = self.topc_loglik(index, x, c);
+            let terms: Vec<f64> = cands
+                .iter()
+                .zip(ll.iter())
+                .map(|(&j, &llj)| llj + (self.store.sp(j as usize) / self.total_sp).ln())
+                .collect();
+            return logsumexp_tree(&terms);
+        }
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
         let mut e = vec![0.0; d];
@@ -213,6 +290,13 @@ impl ModelSnapshot {
             return Vec::new();
         }
         assert!(!self.store.is_empty(), "score_batch on empty snapshot");
+        if self.active_index().is_some() {
+            // Candidate sets differ per query, so there is no shared
+            // component-outer block to stream; top-C serving is the
+            // per-point map (`O(C·D²)` each, cross-call parallelism
+            // from concurrent scorer threads).
+            return xs.iter().map(|x| self.log_density(x)).collect();
+        }
         self.blocked_term_rows(
             xs,
             |j| (self.store.sp(j) / self.total_sp).ln(),
@@ -226,6 +310,9 @@ impl ModelSnapshot {
     pub fn posteriors_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         if xs.is_empty() {
             return Vec::new();
+        }
+        if self.active_index().is_some() {
+            return xs.iter().map(|x| self.posteriors(x)).collect();
         }
         self.blocked_term_rows(xs, |_| 0.0, |row| softmax_posteriors(row, self.store.sps()))
     }
@@ -271,9 +358,11 @@ impl ModelSnapshot {
     /// Conditional reconstructions for a batch sharing one index split —
     /// bit-identical to mapping [`ModelSnapshot::predict`]. Component-
     /// outer over query blocks: each component's `Λ` entries are
-    /// streamed once per block and its target-block Cholesky is
-    /// factorized once per block instead of once per query (see
-    /// [`precision_conditional_multi`]).
+    /// streamed once per block, and its target-block Cholesky is
+    /// factorized **once per call** (or reused from the factors cached
+    /// at construction when the split is the recorded class split)
+    /// instead of once per (component, block) — see
+    /// [`precision_conditional_multi_with`].
     pub fn predict_batch(
         &self,
         known_vals: &[Vec<f64>],
@@ -287,6 +376,19 @@ impl ModelSnapshot {
         let k = self.store.len();
         let d = self.cfg.dim;
         let sps = self.store.sps();
+        // Hoisted per-component factors: the cached class-split set when
+        // this call targets the recorded split, otherwise computed once
+        // here and shared by every query block.
+        let computed: Vec<Cholesky>;
+        let factors: &[Cholesky] =
+            if !self.split_factors.is_empty() && target_idx == &self.class_idx[..] {
+                &self.split_factors
+            } else {
+                computed = (0..k)
+                    .map(|j| target_block_cholesky(self.store.mat(j), d, target_idx))
+                    .collect();
+                &computed
+            };
         let mut out = Vec::with_capacity(known_vals.len());
         // Per-block buffers hoisted out of the loop; every (query,
         // component) slot is overwritten before it is read, so reuse
@@ -297,7 +399,7 @@ impl ModelSnapshot {
         for block in known_vals.chunks(SCORE_BLOCK) {
             let b = block.len();
             for j in 0..k {
-                let conds = precision_conditional_multi(
+                let conds = precision_conditional_multi_with(
                     self.store.mat(j),
                     d,
                     self.store.mean(j),
@@ -305,6 +407,7 @@ impl ModelSnapshot {
                     block,
                     known_idx,
                     target_idx,
+                    &factors[j],
                 );
                 for (bi, c) in conds.into_iter().enumerate() {
                     log_liks[bi * k + j] = c.log_lik;
@@ -329,6 +432,19 @@ impl ModelSnapshot {
     /// [`super::IncrementalMixture::posteriors`] on the source model.
     pub fn posteriors(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cfg.dim, "posteriors: dimensionality mismatch");
+        if let Some((index, c)) = self.active_index() {
+            // Full-length posterior vector (API shape contract), with
+            // the mass renormalized over the candidate set and zeros
+            // everywhere else — same convention as the live model.
+            let (cands, ll) = self.topc_loglik(index, x, c);
+            let sps: Vec<f64> = cands.iter().map(|&j| self.store.sp(j as usize)).collect();
+            let post = softmax_posteriors(&ll, &sps);
+            let mut out = vec![0.0; self.store.len()];
+            for (&j, &p) in cands.iter().zip(post.iter()) {
+                out[j as usize] = p;
+            }
+            return out;
+        }
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
         let mut e = vec![0.0; d];
@@ -374,9 +490,23 @@ impl ModelSnapshot {
     }
 }
 
+/// Per-component `W = Λ_tt` Cholesky factors for a recorded class
+/// split, precomputed once at snapshot construction so the serving
+/// conditional path (`class_scores_batch`) never re-factorizes inside
+/// the per-(component, block) loop. Empty when there is no class split
+/// (or no components yet).
+fn split_factors(store: &ComponentStore, dim: usize, class_idx: &[usize]) -> Vec<Cholesky> {
+    if class_idx.is_empty() {
+        return Vec::new();
+    }
+    (0..store.len())
+        .map(|j| target_block_cholesky(store.mat(j), dim, class_idx))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::{Figmn, GmmConfig, IncrementalMixture};
+    use super::super::{Figmn, GmmConfig, IncrementalMixture, SearchMode};
     use crate::gmm::supervised::supervised_figmn;
     use crate::rng::Pcg64;
 
@@ -442,6 +572,52 @@ mod tests {
         assert!(snap.score_batch(&[]).is_empty());
         assert!(snap.posteriors_batch(&[]).is_empty());
         assert!(snap.predict_batch(&[], &[0, 1], &[2]).is_empty());
+    }
+
+    /// A TopC snapshot serves from an index frozen at publish:
+    /// batch surfaces are the per-point maps bit-for-bit, posteriors
+    /// restrict their support to ≤ C candidates, two snapshots of the
+    /// same state agree bitwise, and scores stay tolerance-equivalent
+    /// to a strict model trained on the same well-separated stream.
+    #[test]
+    fn topc_snapshot_serves_from_frozen_index() {
+        let mk = |mode: SearchMode| {
+            GmmConfig::new(3)
+                .with_delta(0.4)
+                .with_beta(0.1)
+                .without_pruning()
+                .with_search_mode(mode)
+        };
+        let mut topc = Figmn::new(mk(SearchMode::TopC { c: 2 }), &[2.0, 2.0, 2.0]);
+        let mut strict = Figmn::new(mk(SearchMode::Strict), &[2.0, 2.0, 2.0]);
+        let mut rng = Pcg64::seed(77);
+        let centers = [[0.0, 0.0, 0.0], [40.0, 40.0, 0.0], [0.0, 40.0, 40.0]];
+        let mut stream = Vec::new();
+        for i in 0..150 {
+            let c = &centers[i % 3];
+            let x: Vec<f64> = c.iter().map(|&v| v + rng.normal() * 0.5).collect();
+            assert_eq!(topc.learn(&x), strict.learn(&x), "decisions must be exact");
+            stream.push(x);
+        }
+        assert_eq!(topc.num_components(), strict.num_components());
+        let snap = topc.snapshot();
+        let snap2 = topc.snapshot();
+        let probes: Vec<Vec<f64>> = stream.iter().rev().take(12).cloned().collect();
+        for x in &probes {
+            let ld = snap.log_density(x);
+            assert!(ld == snap2.log_density(x), "snapshots of one state must agree");
+            let rel = (ld - strict.log_density(x)).abs() / strict.log_density(x).abs().max(1.0);
+            assert!(rel < 1e-6, "top-C tail loss out of tolerance: rel={rel}");
+            let post = snap.posteriors(x);
+            assert_eq!(post.len(), snap.num_components());
+            assert!(post.iter().filter(|&&p| p > 0.0).count() <= 2);
+            let sum: f64 = post.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+        }
+        let expect: Vec<f64> = probes.iter().map(|x| snap.log_density(x)).collect();
+        assert_eq!(snap.score_batch(&probes), expect);
+        let expect_post: Vec<Vec<f64>> = probes.iter().map(|x| snap.posteriors(x)).collect();
+        assert_eq!(snap.posteriors_batch(&probes), expect_post);
     }
 
     #[test]

@@ -283,6 +283,13 @@ impl ComponentStore {
         )
     }
 
+    /// Current arena generation — bumped by every push/truncate/reserve
+    /// (anything that may reallocate or change the row set). The
+    /// candidate index keys its freshness off this counter.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
     /// Raw-pointer view for the engine's sharded update pass: each
     /// worker mutates only the rows of its own contiguous component
     /// shard (see [`StoreRawMut::row_mut`]'s safety contract). The view

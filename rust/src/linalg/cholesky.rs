@@ -7,6 +7,7 @@
 use super::Matrix;
 
 /// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
+#[derive(Debug, Clone)]
 pub struct Cholesky {
     l: Matrix,
 }

@@ -25,7 +25,7 @@ mod vector;
 
 pub use cholesky::Cholesky;
 pub use matrix::Matrix;
-pub use vector::{add, axpy, dot, norm2, outer_into, scale, sub, sub_into};
+pub use vector::{add, axpy, dot, norm2, outer_into, scale, sq_dist, sub, sub_into};
 
 /// Numerical tolerance used by the test-suite comparisons in this crate.
 pub const TEST_EPS: f64 = 1e-9;

@@ -511,6 +511,36 @@ pub fn spmv_mode(ap: &[f64], d: usize, x: &[f64], y: &mut [f64], mode: KernelMod
     }
 }
 
+/// Gershgorin lower bound on the smallest eigenvalue of a packed
+/// symmetric matrix, clamped at zero: `max(0, minᵢ(aᵢᵢ − Σ_{j≠i}|aᵢⱼ|))`.
+///
+/// One pass over the packed upper triangle, accumulating each entry into
+/// the off-diagonal sums of *both* its row and its column. Used by the
+/// candidate index to turn a Euclidean distance-to-cell bound into a
+/// valid Mahalanobis lower bound (`d²_Λ ≥ λ_min·d²_euclid`); a zero
+/// return makes the bound vacuous, never wrong.
+pub fn gershgorin_floor(ap: &[f64], d: usize) -> f64 {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    let mut diag = vec![0.0; d];
+    let mut off = vec![0.0; d];
+    let mut idx = 0;
+    for i in 0..d {
+        diag[i] = ap[idx];
+        idx += 1;
+        for j in i + 1..d {
+            let a = ap[idx].abs();
+            off[i] += a;
+            off[j] += a;
+            idx += 1;
+        }
+    }
+    let mut floor = f64::INFINITY;
+    for i in 0..d {
+        floor = floor.min(diag[i] - off[i]);
+    }
+    floor.max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -522,6 +552,24 @@ mod tests {
         let mut m = random_spd(n, rng);
         m.symmetrize();
         m
+    }
+
+    #[test]
+    fn gershgorin_floor_bounds_lambda_min() {
+        // Diagonally dominant: floor is min_i(a_ii − Σ|a_ij|) > 0.
+        let m = Matrix::from_rows(3, 3, &[5.0, 1.0, -0.5, 1.0, 4.0, 0.25, -0.5, 0.25, 3.0]);
+        let ap = pack_symmetric(&m);
+        let floor = gershgorin_floor(&ap, 3);
+        assert!((floor - (5.0 - 1.5)).abs() < 1e-12);
+        // The bound is a true eigenvalue lower bound: x^T A x >= floor·‖x‖².
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            assert!(quad_form(&ap, 3, &x) >= floor * crate::linalg::norm2(&x) - 1e-12);
+        }
+        // Not diagonally dominant → clamps to 0 (vacuous, never negative).
+        let w = Matrix::from_rows(2, 2, &[1.0, 5.0, 5.0, 1.0]);
+        assert_eq!(gershgorin_floor(&pack_symmetric(&w), 2), 0.0);
     }
 
     #[test]

@@ -50,6 +50,18 @@ pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
     }
 }
 
+/// Squared Euclidean distance `‖a − b‖²` without an intermediate buffer.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
 /// Scale in place.
 #[inline]
 pub fn scale(a: &mut [f64], s: f64) {
@@ -106,5 +118,13 @@ mod tests {
     #[test]
     fn norm2_is_self_dot() {
         assert_eq!(norm2(&[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn sq_dist_matches_sub_norm2() {
+        let a = [1.0, -2.0, 3.5];
+        let b = [0.5, 1.0, -1.0];
+        assert_eq!(sq_dist(&a, &b), norm2(&sub(&a, &b)));
+        assert_eq!(sq_dist(&a, &a), 0.0);
     }
 }

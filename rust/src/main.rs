@@ -17,7 +17,7 @@ use figmn::data::Dataset;
 use figmn::engine::EngineConfig;
 use figmn::eval::{multiclass_auc, Stopwatch};
 use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
-use figmn::gmm::{GmmConfig, KernelMode};
+use figmn::gmm::{GmmConfig, KernelMode, SearchMode};
 use figmn::rng::Pcg64;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -85,7 +85,8 @@ fn cmd_train(args: &[String]) -> i32 {
     let Some(name) = pos.first() else {
         eprintln!(
             "usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] \
-             [--seed N] [--threads T] [--kernel-mode strict|fast]"
+             [--seed N] [--threads T] [--kernel-mode strict|fast] \
+             [--search-mode strict|topc:C]"
         );
         return 2;
     };
@@ -112,6 +113,19 @@ fn cmd_train(args: &[String]) -> i32 {
             }
         },
     };
+    // Component-axis search: strict (default, exact full-K sweeps) or
+    // topc:C (candidate-index search, tolerance-gated — see
+    // figmn::gmm::SearchMode).
+    let search_mode = match flags.get("search-mode").map(String::as_str) {
+        None => SearchMode::Strict,
+        Some(s) => match SearchMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("unknown --search-mode '{s}' (want strict|topc:C with C >= 1)");
+                return 2;
+            }
+        },
+    };
 
     let data = synth::generate(spec, seed);
     let stds = data.feature_stds();
@@ -129,11 +143,17 @@ fn cmd_train(args: &[String]) -> i32 {
     if algo == "orig" && kernel_mode != effective_mode {
         eprintln!("note: --algo orig always runs strict kernels; ignoring --kernel-mode fast");
     }
+    // Likewise: the baseline has no candidate index.
+    let effective_search = if algo == "orig" { SearchMode::Strict } else { search_mode };
+    if algo == "orig" && search_mode != effective_search {
+        eprintln!("note: --algo orig always sweeps full-K; ignoring --search-mode");
+    }
 
     let cfg = GmmConfig::new(1)
         .with_delta(delta)
         .with_beta(beta)
-        .with_kernel_mode(effective_mode);
+        .with_kernel_mode(effective_mode)
+        .with_search_mode(effective_search);
     let mut sw = Stopwatch::new();
     let (scores, components): (Vec<Vec<f64>>, usize) = if algo == "orig" {
         let mut clf = supervised_igmn(cfg, &stds, data.n_classes);
@@ -157,8 +177,8 @@ fn cmd_train(args: &[String]) -> i32 {
         .count() as f64
         / test.len() as f64;
     println!(
-        "{name}: algo={algo} kernels={effective_mode} N_train={} D={} → {} components, \
-         train {:.3}s, AUC {:.3}, acc {:.3}",
+        "{name}: algo={algo} kernels={effective_mode} search={effective_search} \
+         N_train={} D={} → {} components, train {:.3}s, AUC {:.3}, acc {:.3}",
         train.len(),
         data.dim(),
         components,

@@ -1,0 +1,262 @@
+//! Candidate-index search (`SearchMode::TopC`) property tests, through
+//! the public API only:
+//!
+//!   - the accept/create **decision** always matches the full-K sweep,
+//!     including streams where only the exact-fallback gate can find
+//!     the accepting component (top-C candidates are ranked by
+//!     Euclidean mean distance; acceptance is Mahalanobis),
+//!   - `c ≥ K` reproduces the strict path bit for bit,
+//!   - TopC results are bit-identical across worker thread counts,
+//!     with the index surviving create + prune churn,
+//!   - top-C recall on clustered streams.
+
+use figmn::engine::EngineConfig;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, LearnOutcome, SearchMode};
+use figmn::rng::Pcg64;
+
+/// Bitwise arena comparison. `include_v`: the update-count bookkeeping
+/// `v` only advances for evaluated components under TopC (it feeds
+/// nothing but pruning), so strict-vs-TopC comparisons on separated
+/// data exclude it while same-mode thread comparisons include it.
+fn assert_models_match(a: &Figmn, b: &Figmn, include_v: bool, tag: &str) {
+    assert_eq!(a.num_components(), b.num_components(), "{tag}: K diverged");
+    for j in 0..a.num_components() {
+        assert_eq!(a.component_mean(j), b.component_mean(j), "{tag}: mean[{j}]");
+        assert_eq!(
+            a.component_lambda(j).as_slice(),
+            b.component_lambda(j).as_slice(),
+            "{tag}: lambda[{j}]"
+        );
+        assert!(a.component_log_det(j) == b.component_log_det(j), "{tag}: log_det[{j}]");
+        let (sp_a, v_a) = a.component_stats(j);
+        let (sp_b, v_b) = b.component_stats(j);
+        assert!(sp_a == sp_b, "{tag}: sp[{j}]");
+        if include_v {
+            assert_eq!(v_a, v_b, "{tag}: v[{j}]");
+        }
+    }
+}
+
+fn clustered_stream(d: usize, n_clusters: usize, reps: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    let centers: Vec<Vec<f64>> = (0..n_clusters)
+        .map(|_| (0..d).map(|_| rng.normal() * 50.0).collect())
+        .collect();
+    let mut out: Vec<Vec<f64>> = centers.clone();
+    for _ in 0..reps {
+        for c in &centers {
+            out.push(c.iter().map(|&v| v + rng.normal() * 0.3).collect());
+        }
+    }
+    out
+}
+
+/// On well-separated clusters every non-candidate posterior underflows
+/// below the arenas' representable contribution, so TopC must track the
+/// strict model **bitwise** (except `v`) while genuinely restricting
+/// its sweeps to C ≪ K components.
+#[test]
+fn topc_tracks_strict_bitwise_on_separated_clusters() {
+    assert_eq!(SearchMode::default(), SearchMode::Strict);
+    let d = 8;
+    let stream = clustered_stream(d, 24, 8, 5);
+    for c in [2usize, 4] {
+        // β = 0.005: the χ² update region comfortably covers the 0.3σ
+        // in-cluster noise, so exactly one component per cluster.
+        let base = GmmConfig::new(d).with_delta(1.0).with_beta(0.005).without_pruning();
+        let mut strict = Figmn::new(base.clone(), &vec![1.0; d]);
+        let mut topc = Figmn::new(
+            base.with_search_mode(SearchMode::TopC { c }),
+            &vec![1.0; d],
+        );
+        for (i, x) in stream.iter().enumerate() {
+            let (a, b) = (strict.learn(x), topc.learn(x));
+            assert_eq!(a, b, "c={c}: outcome diverged at step {i}");
+        }
+        assert_eq!(strict.num_components(), 24, "c={c}: cluster count");
+        assert_models_match(&strict, &topc, false, &format!("c={c}"));
+        // Scores on near-cluster probes agree to tolerance (the dropped
+        // tail is below double-precision resolution here).
+        for x in stream.iter().rev().take(48) {
+            let (ls, lt) = (strict.log_density(x), topc.log_density(x));
+            let rel = (ls - lt).abs() / ls.abs().max(1.0);
+            assert!(rel < 1e-9, "log_density drifted: {ls} vs {lt}");
+        }
+    }
+}
+
+/// The exact-fallback gate: candidates are ranked by Euclidean mean
+/// distance, so a tight component can shadow a wide one whose χ² region
+/// actually contains the point. The gate must find the wide component
+/// and update — without it, TopC would create where full-K updates.
+#[test]
+fn fallback_gate_matches_full_k_where_euclidean_ranking_misleads() {
+    let d = 2;
+    let base = GmmConfig::new(d).with_delta(1.0).with_beta(0.05).without_pruning();
+    let mut strict = Figmn::new(base.clone(), &vec![1.0; d]);
+    let mut topc = Figmn::new(
+        base.with_search_mode(SearchMode::TopC { c: 1 }),
+        &vec![1.0; d],
+    );
+
+    // Component A at (0, 2), trained tight: its χ² region shrinks far
+    // below its Euclidean footprint.
+    let mut stream: Vec<Vec<f64>> = vec![vec![0.0, 2.0]];
+    let mut rng = Pcg64::seed(17);
+    for _ in 0..20 {
+        stream.push(vec![rng.normal() * 0.05, 2.0 + rng.normal() * 0.05]);
+    }
+    // Component B at (0, -6), trained with a widening spread along
+    // dim 1 (each stage stays inside the current χ² region, so no
+    // stage creates): B ends up reaching most of the way toward A.
+    stream.push(vec![0.0, -6.0]);
+    for &u in &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5] {
+        for _ in 0..2 {
+            stream.push(vec![0.0, -6.0 + u]);
+            stream.push(vec![0.0, -6.0 - u]);
+        }
+    }
+    for (i, x) in stream.iter().enumerate() {
+        let (a, b) = (strict.learn(x), topc.learn(x));
+        assert_eq!(a, b, "outcome diverged at step {i}");
+    }
+    // The construction must have produced exactly the two components.
+    assert_eq!(strict.num_components(), 2, "construction drifted");
+    assert_eq!(topc.num_components(), 2, "construction drifted (topc)");
+
+    // The probe: Euclidean-nearest mean is A (3.0 vs 5.0 away), but
+    // only B's χ² region contains it. With c = 1 the candidate set is
+    // {A}; the fallback gate must surface B in both the decision and
+    // the update, exactly as the full sweep does.
+    let probe = vec![0.0, -1.0];
+    let (a, b) = (strict.learn(&probe), topc.learn(&probe));
+    assert_eq!(a, LearnOutcome::Updated, "construction drifted: full-K created");
+    assert_eq!(b, LearnOutcome::Updated, "fallback gate missed the accepting component");
+    assert_models_match(&strict, &topc, false, "post-probe");
+}
+
+/// `c ≥ K`: the candidate set is all of `0..K` in ascending order —
+/// the same arithmetic in the same order as the strict sweep, so
+/// outcomes, arenas (including `v`), and scores match bit for bit even
+/// on heavily overlapping streams.
+#[test]
+fn full_c_is_bitwise_identical_to_strict_on_overlapping_stream() {
+    let d = 4;
+    let mut rng = Pcg64::seed(23);
+    // Overlapping clusters: posterior mass genuinely spreads across
+    // components, so this exercises the shared-order reductions.
+    let stream: Vec<Vec<f64>> = (0..400)
+        .map(|i| {
+            let c = (i % 5) as f64 * 2.0;
+            (0..d).map(|_| c + rng.normal()).collect()
+        })
+        .collect();
+    let base = GmmConfig::new(d).with_delta(1.0).with_beta(0.1).without_pruning();
+    let mut strict = Figmn::new(base.clone(), &vec![1.0; d]);
+    let mut topc = Figmn::new(
+        base.with_search_mode(SearchMode::TopC { c: 4096 }),
+        &vec![1.0; d],
+    );
+    for (i, x) in stream.iter().enumerate() {
+        assert_eq!(strict.learn(x), topc.learn(x), "outcome diverged at step {i}");
+    }
+    assert_models_match(&strict, &topc, true, "full-c");
+    let probes: Vec<Vec<f64>> = stream.iter().rev().take(50).cloned().collect();
+    assert!(
+        strict.score_batch(&probes) == topc.score_batch(&probes),
+        "full-c scores not bitwise identical"
+    );
+    for x in probes.iter().take(10) {
+        assert!(strict.posteriors(x) == topc.posteriors(x), "full-c posteriors diverged");
+    }
+}
+
+/// TopC determinism across worker thread counts, with pruning on: the
+/// index survives create + prune churn (every prune bumps the arena
+/// generation and forces a rebuild) and the arenas stay bit-identical
+/// at every thread count, `v` included.
+#[test]
+fn topc_is_thread_invariant_across_create_and_prune() {
+    let d = 2;
+    let mut rng = Pcg64::seed(31);
+    // A strong origin cluster plus three one-shot outliers: the
+    // outliers' components age as candidates (v grows, sp stays ~1)
+    // until the §2.3 sweep removes them.
+    let mut stream: Vec<Vec<f64>> = (0..20)
+        .map(|_| vec![rng.normal() * 0.5, rng.normal() * 0.5])
+        .collect();
+    stream.push(vec![8.0, 8.0]);
+    stream.push(vec![-8.0, 8.0]);
+    stream.push(vec![8.0, -8.0]);
+    for _ in 0..80 {
+        stream.push(vec![rng.normal() * 0.5, rng.normal() * 0.5]);
+    }
+
+    let build = |threads: usize| {
+        // β = 1e-4: the χ² region covers the whole origin cluster, so
+        // exactly the three outliers create (asserted below).
+        let cfg = GmmConfig::new(d)
+            .with_delta(1.0)
+            .with_beta(0.0001)
+            .with_pruning(5, 3.0)
+            .with_search_mode(SearchMode::TopC { c: 3 });
+        let mut m = Figmn::new(cfg, &vec![1.0; d]);
+        if threads > 1 {
+            m.set_engine(Some(EngineConfig::new(threads)));
+        }
+        let created = stream.iter().filter(|x| m.learn(x) == LearnOutcome::Created).count();
+        (m, created)
+    };
+
+    let (reference, created) = build(1);
+    // The scenario must actually churn: 4 creates, 3 prunes.
+    assert_eq!(created, 4, "expected the three outliers to create");
+    assert_eq!(reference.num_components(), 1, "expected the outliers to be pruned");
+    assert!(reference.log_density(&[0.0, 0.0]).is_finite());
+    for threads in [2usize, 4] {
+        let (pooled, created_t) = build(threads);
+        assert_eq!(created, created_t, "T={threads}: create count diverged");
+        assert_models_match(&reference, &pooled, true, &format!("T={threads}"));
+    }
+}
+
+/// Recall on a clustered stream: for near-cluster probes the strict
+/// model's best component must be inside the candidate set TopC
+/// renormalizes over (visible as a nonzero TopC posterior).
+#[test]
+fn topc_recall_on_clustered_probes() {
+    let d = 8;
+    let c = 4;
+    let stream = clustered_stream(d, 30, 10, 41);
+    let base = GmmConfig::new(d).with_delta(1.0).with_beta(0.005).without_pruning();
+    let mut strict = Figmn::new(base.clone(), &vec![1.0; d]);
+    let mut topc = Figmn::new(
+        base.with_search_mode(SearchMode::TopC { c }),
+        &vec![1.0; d],
+    );
+    for x in &stream {
+        strict.learn(x);
+        topc.learn(x);
+    }
+    assert_eq!(strict.num_components(), 30);
+    assert!(strict.num_components() > c, "recall test needs C < K");
+
+    let mut rng = Pcg64::seed(43);
+    let probes: Vec<&Vec<f64>> = (0..100).map(|_| &stream[rng.below(stream.len())]).collect();
+    let mut hits = 0usize;
+    for &x in &probes {
+        let ps = strict.posteriors(x);
+        let pt = topc.posteriors(x);
+        assert_eq!(ps.len(), pt.len(), "posterior shape contract");
+        let best = ps
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap();
+        if pt[best] > 0.0 {
+            hits += 1;
+        }
+    }
+    assert!(hits >= 95, "top-C recall {hits}/100 below threshold");
+}

@@ -73,6 +73,7 @@ fn dispatch_covers_full_protocol_surface() {
         stds: vec![2.0, 2.0],
         shards: 2,
         kernel_mode: figmn::gmm::KernelMode::Strict,
+        search_mode: figmn::gmm::SearchMode::Strict,
     };
     assert_eq!(dispatch(create.clone(), &registry, &xla), Response::Ok);
     // Duplicate create fails.

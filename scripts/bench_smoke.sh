@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
-# Quick-mode bench smoke: writes BENCH_scaling_dim.json and
-# BENCH_layout_bandwidth.json at the repo root — the same files CI's
-# bench-smoke job produces and diffs against the committed baselines.
+# Quick-mode bench smoke: writes BENCH_scaling_dim.json,
+# BENCH_layout_bandwidth.json and BENCH_scaling_k.json at the repo
+# root — the same files CI's bench-smoke job produces and diffs against
+# the committed baselines.
 #
 #   ./scripts/bench_smoke.sh            # quick mode (default)
 #   FIGMN_BENCH_QUICK=0 ./scripts/bench_smoke.sh   # full mode (slow;
 #                                       # runs the perf assertions)
 #
-# To refresh the committed baselines, run this and commit the two
-# BENCH_*.json files it rewrites.
+# To refresh the committed baselines, run this and commit the
+# BENCH_*.json files it rewrites. bench_diff.py exits nonzero when any
+# bench-embedded correctness gate reports `pass: false` (perf drift
+# stays report-only), and set -e propagates that here.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,7 +19,9 @@ export FIGMN_BENCH_QUICK="${FIGMN_BENCH_QUICK:-1}"
 
 cargo bench --bench scaling_dim
 cargo bench --bench layout_bandwidth
+cargo bench --bench scaling_k
 
 if command -v python3 >/dev/null 2>&1; then
-  python3 scripts/bench_diff.py BENCH_scaling_dim.json BENCH_layout_bandwidth.json || true
+  python3 scripts/bench_diff.py \
+    BENCH_scaling_dim.json BENCH_layout_bandwidth.json BENCH_scaling_k.json
 fi
