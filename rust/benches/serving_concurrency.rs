@@ -1,0 +1,356 @@
+//! Serving concurrency experiment: the event-loop transport under many
+//! concurrent connections, with and without read coalescing.
+//!
+//! Three claims are on trial:
+//!
+//! 1. **Connection scale** — a fixed driver pool (no thread per
+//!    connection) sustains ≥ 4096 open sockets and still serves every
+//!    one of them (full mode; poll-based, so the fd table is the only
+//!    per-connection cost).
+//! 2. **Coalescing throughput** — at high read concurrency the
+//!    per-driver coalescers gather single-query `score` requests into
+//!    PR 5's 32-query blocked batch jobs, and sustain ≥ 2× the
+//!    per-request (`--no-coalesce`) throughput at 256 clients.
+//! 3. **Bit-identity** — every byte served over either transport mode
+//!    equals the sequential `dispatch()` serialization (the hard
+//!    contract; checked here *and* in `tests/serving_transport.rs`).
+//!
+//! Each sweep point reports throughput plus p50/p95/p99 round-trip
+//! latency; the coalesced low-concurrency rows surface the documented
+//! size-or-deadline cost (a lone read waits out `max_delay`).
+//!
+//! Run: `cargo bench --bench serving_concurrency`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench serving_concurrency`
+//! Writes `BENCH_serving_concurrency.json`.
+
+use figmn::bench_support::{percentile, quick_mode, write_bench_json, TablePrinter};
+use figmn::coordinator::poller::raise_nofile;
+use figmn::coordinator::protocol::{Request, Response};
+use figmn::coordinator::server::dispatch;
+use figmn::coordinator::{serve, Metrics, ModelSpec, Registry, Server, ServerConfig};
+use figmn::gmm::GmmConfig;
+use figmn::json::Json;
+use figmn::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+const N_CLASSES: usize = 2;
+const K_TARGET: usize = 32;
+const SNAPSHOT_INTERVAL: usize = 16;
+const DRIVERS: usize = 2;
+
+fn gmm_config() -> GmmConfig {
+    GmmConfig::new(1)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(K_TARGET)
+        .without_pruning()
+}
+
+/// Registry with one trained model "serve" (K components, snapshot
+/// published over the full warmup) behind a fresh event-loop server.
+fn trained_server(d: usize, coalesce: bool) -> (Arc<Registry>, Server) {
+    let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+    registry
+        .create(
+            ModelSpec::new("serve", d, N_CLASSES)
+                .with_gmm(gmm_config())
+                .with_stds(vec![1.0; d])
+                .with_snapshot_interval(SNAPSHOT_INTERVAL),
+        )
+        .unwrap();
+    let router = registry.router("serve").unwrap();
+    let mut rng = Pcg64::seed(42);
+    let centers: Vec<Vec<f64>> = (0..K_TARGET)
+        .map(|_| (0..d).map(|_| rng.normal() * 40.0).collect())
+        .collect();
+    let warmup = 8 * K_TARGET; // multiple of SNAPSHOT_INTERVAL
+    for i in 0..warmup {
+        let c = i % K_TARGET;
+        let x: Vec<f64> = centers[c].iter().map(|&v| v + rng.normal() * 0.5).collect();
+        router.learn(x, c % N_CLASSES).unwrap();
+    }
+    registry.stats("serve").unwrap();
+    let snap = router.shards()[0]
+        .wait_snapshot_points(warmup as u64, 5000)
+        .expect("snapshot never caught up to the warmup stream");
+    assert!(snap.num_components() >= K_TARGET, "stream must grow K = {K_TARGET}");
+
+    let cfg = ServerConfig { drivers: DRIVERS, coalesce, ..ServerConfig::default() };
+    let server = serve(registry.clone(), cfg).unwrap();
+    (registry, server)
+}
+
+fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (reader, stream)
+}
+
+fn roundtrip_line(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    line: &str,
+) -> String {
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    let mut buf = String::new();
+    reader.read_line(&mut buf).unwrap();
+    buf
+}
+
+/// Deterministic joint probe (features + one-hot class) for client `c`,
+/// request `i`.
+fn probe(d: usize, c: usize, i: usize) -> Vec<f64> {
+    let mut rng = Pcg64::seed(1000 + (c * 131 + i % 16) as u64);
+    let mut x: Vec<f64> = (0..d).map(|_| rng.normal() * 30.0).collect();
+    x.extend([1.0, 0.0]);
+    x
+}
+
+/// The bitwise gate: raw wire bytes ≡ sequential dispatch serialization
+/// for a mixed probe set, on whichever server `addr` points at.
+fn verify_bit_identity(registry: &Arc<Registry>, addr: SocketAddr, d: usize) {
+    let (mut reader, mut writer) = connect(addr);
+    for i in 0..12 {
+        let req = if i % 3 == 2 {
+            let f: Vec<f64> = probe(d, 7, i)[..d].to_vec();
+            Request::PredictSnapshot { model: "serve".into(), features: f }
+        } else {
+            Request::Score { model: "serve".into(), x: probe(d, 7, i) }
+        };
+        let line = req.to_json().to_string_compact();
+        let raw = roundtrip_line(&mut reader, &mut writer, &line);
+        let expect = dispatch(req, registry, &None).to_json().to_string_compact();
+        assert_eq!(
+            raw.trim_end_matches('\n'),
+            expect,
+            "wire response diverged from sequential dispatch"
+        );
+    }
+    println!("  bit-identity OK (wire bytes ≡ sequential dispatch)");
+}
+
+/// One sweep point: `clients` threads, each with its own connection,
+/// issuing `per_client` sequential score round-trips. Returns
+/// (reqs/sec, per-request latency samples in seconds).
+fn sweep_point(addr: SocketAddr, d: usize, clients: usize, per_client: usize) -> (f64, Vec<f64>) {
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let (mut reader, mut writer) = connect(addr);
+            // Pre-serialize outside the timed region.
+            let lines: Vec<String> = (0..16)
+                .map(|i| {
+                    Request::Score { model: "serve".into(), x: probe(d, c, i) }
+                        .to_json()
+                        .to_string_compact()
+                })
+                .collect();
+            barrier.wait();
+            let mut lat = Vec::with_capacity(per_client);
+            for i in 0..per_client {
+                let t0 = Instant::now();
+                let resp = roundtrip_line(&mut reader, &mut writer, &lines[i % lines.len()]);
+                lat.push(t0.elapsed().as_secs_f64());
+                assert!(resp.contains("density"), "unexpected response: {resp}");
+            }
+            lat
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        latencies.extend(h.join().unwrap());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    ((clients * per_client) as f64 / secs, latencies)
+}
+
+/// Open `n` idle connections and prove each is live with one ping.
+fn open_idle_flock(addr: SocketAddr, n: usize) -> Vec<(BufReader<TcpStream>, TcpStream)> {
+    let ping = Request::Ping.to_json().to_string_compact();
+    let mut flock = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (mut reader, mut writer) = connect(addr);
+        let resp = roundtrip_line(&mut reader, &mut writer, &ping);
+        assert!(resp.contains("pong"), "idle connection not served: {resp}");
+        flock.push((reader, writer));
+    }
+    flock
+}
+
+fn main() {
+    let quick = quick_mode();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let d = if quick { 62 } else { 254 }; // joint = d + N_CLASSES
+    let client_counts: &[usize] = if quick { &[4, 16] } else { &[16, 64, 256] };
+    let per_client = if quick { 50 } else { 200 };
+    let idle_target = if quick { 256 } else { 4096 };
+
+    // Both ends of every socket live in this process: ~2 fds per idle
+    // connection plus the sweep clients and headroom.
+    let want_fds = (2 * idle_target + 2048) as u64;
+    let fd_limit = raise_nofile(want_fds);
+    let idle_n = if fd_limit >= want_fds {
+        idle_target
+    } else {
+        let capped = ((fd_limit.saturating_sub(1024)) / 2) as usize;
+        eprintln!(
+            "note: RLIMIT_NOFILE={fd_limit} caps the idle flock at {capped} \
+             (wanted {idle_target})"
+        );
+        capped.min(idle_target)
+    };
+
+    println!(
+        "serving_concurrency — event-loop transport, {DRIVERS} drivers \
+         (D={d}+{N_CLASSES}, K={K_TARGET}, idle={idle_n}, cores={cores}{})",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let table = TablePrinter::new(
+        &["mode", "clients", "reqs/s", "p50 ms", "p95 ms", "p99 ms"],
+        &[12, 8, 11, 9, 9, 9],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gates: Vec<Json> = Vec::new();
+    let mut rate_at_max: [f64; 2] = [0.0, 0.0]; // [coalesced, per_request]
+
+    for (mode_i, &coalesce) in [true, false].iter().enumerate() {
+        let mode = if coalesce { "coalesced" } else { "per_request" };
+        let (registry, server) = trained_server(d, coalesce);
+        let addr = server.local_addr;
+
+        println!("{mode}:");
+        verify_bit_identity(&registry, addr, d);
+
+        // The connection-scale leg rides the coalesced server only —
+        // the transport is identical in both modes.
+        let flock = if coalesce { open_idle_flock(addr, idle_n) } else { Vec::new() };
+
+        for &clients in client_counts {
+            let (rate, mut lat) = sweep_point(addr, d, clients, per_client);
+            if clients == *client_counts.last().unwrap() {
+                rate_at_max[mode_i] = rate;
+            }
+            let p50 = percentile(&mut lat, 50.0);
+            let p95 = percentile(&mut lat, 95.0);
+            let p99 = percentile(&mut lat, 99.0);
+            table.row(&[
+                mode.to_string(),
+                clients.to_string(),
+                format!("{rate:10.0}"),
+                format!("{:8.3}", p50 * 1e3),
+                format!("{:8.3}", p95 * 1e3),
+                format!("{:8.3}", p99 * 1e3),
+            ]);
+            rows.push(Json::obj(vec![
+                ("mode", mode.into()),
+                ("clients", clients.into()),
+                ("d", Json::from(d)),
+                ("k", Json::from(K_TARGET)),
+                ("reqs_per_s", rate.into()),
+                ("p50_s", p50.into()),
+                ("p95_s", p95.into()),
+                ("p99_s", p99.into()),
+            ]));
+        }
+
+        if coalesce {
+            // Liveness after the sweep: a sample of the idle flock must
+            // still answer (slow sockets cannot have been starved out).
+            let ping = Request::Ping.to_json().to_string_compact();
+            let step = (flock.len() / 64).max(1);
+            let mut checked = 0usize;
+            let mut flock = flock;
+            for (reader, writer) in flock.iter_mut().step_by(step) {
+                let resp = roundtrip_line(reader, writer, &ping);
+                assert!(resp.contains("pong"), "idle connection starved: {resp}");
+                checked += 1;
+            }
+            println!(
+                "  idle flock OK — {} connections held, {checked} re-pinged after sweep",
+                flock.len()
+            );
+            // Judged against what the fd limit let us attempt: a capped
+            // rlimit is environmental, not a transport failure.
+            let sustained = flock.len() >= idle_n;
+            gates.push(Json::obj(vec![
+                ("name", format!("sustains_{idle_target}_connections").into()),
+                ("pass", sustained.into()),
+                ("held", Json::from(flock.len())),
+                ("attempted", Json::from(idle_n)),
+                ("target", Json::from(idle_target)),
+            ]));
+            if !quick && fd_limit >= want_fds {
+                assert!(sustained, "idle flock fell short: {} < {idle_target}", flock.len());
+            }
+            let m = registry.metrics().snapshot();
+            assert!(m.coalesced_batches > 0, "coalesced mode never batched");
+            println!(
+                "  coalescing: {} reads in {} batches (mean {:.1}/batch)",
+                m.coalesced_reads,
+                m.coalesced_batches,
+                m.coalesced_reads as f64 / m.coalesced_batches as f64
+            );
+        }
+        server.shutdown();
+    }
+
+    gates.push(Json::obj(vec![
+        ("name", "bitwise_wire_vs_sequential_dispatch".into()),
+        ("pass", true.into()), // asserted above, both modes
+    ]));
+    let max_clients = *client_counts.last().unwrap();
+    let speedup = rate_at_max[0] / rate_at_max[1];
+    if !quick {
+        // Quick mode tops out at 16 clients, where the size-or-deadline
+        // tradeoff legitimately favors per-request — the 2× claim (and
+        // its gate) only applies at high concurrency.
+        gates.push(Json::obj(vec![
+            ("name", "coalesced_2x_at_max_clients".into()),
+            ("pass", (speedup >= 2.0).into()),
+            ("clients", max_clients.into()),
+            ("speedup", speedup.into()),
+        ]));
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", "serving_concurrency".into()),
+        ("quick", quick.into()),
+        ("cores", cores.into()),
+        ("d", Json::from(d)),
+        ("k", Json::from(K_TARGET)),
+        ("drivers", Json::from(DRIVERS)),
+        ("idle_connections", Json::from(idle_n)),
+        ("rows", Json::Arr(rows)),
+        ("gates", Json::Arr(gates)),
+    ]);
+    match write_bench_json("serving_concurrency", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    if !quick {
+        assert!(
+            speedup >= 2.0,
+            "coalesced throughput is {speedup:.2}× (< 2×) per-request at \
+             {max_clients} clients, D={d}, K={K_TARGET}"
+        );
+        println!(
+            "serving_concurrency OK — {speedup:.2}× coalesced vs per-request \
+             at {max_clients} clients"
+        );
+    } else {
+        println!(
+            "serving_concurrency done (quick mode; coalesced/per-request \
+             ratio {speedup:.2}× at {max_clients} clients — gate not enforced)"
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! Incremental, bounded line framing for the multiplexed server.
+//!
+//! The event-loop server reads whatever bytes a socket has ready and
+//! feeds them here; the framer re-assembles newline-delimited request
+//! lines across arbitrarily split reads while enforcing a hard cap on
+//! the bytes a single line may buffer. A line that exceeds the cap
+//! produces exactly one [`Frame::Oversized`] event (the server answers
+//! it with a protocol-error `Response`) and the framer discards input
+//! until the offending line's newline, then resynchronizes — one abusive
+//! line never desynchronizes or disconnects an otherwise healthy client.
+//!
+//! This module is pure (no I/O, no FFI), so its unit tests run under
+//! miri alongside the arena and candidate-index suites (see ci.yml).
+
+/// Default per-connection line cap: 1 MiB. A `score_batch` of 32 rows at
+/// D = 3072 is ~1.1 MB of JSON floats, so anything bigger than this is
+/// either abuse or a workload that should be chunked client-side.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One framing event produced by [`LineFramer::feed`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete line (without its trailing newline), lossily decoded —
+    /// non-UTF-8 bytes become replacement characters and then fail JSON
+    /// parsing downstream, exactly like any other malformed request.
+    Line(String),
+    /// A line exceeded the cap. Emitted once per oversized line, at the
+    /// moment the cap is crossed; the rest of the line is discarded.
+    Oversized,
+}
+
+/// Incremental line-splitting state machine with a bounded buffer.
+pub struct LineFramer {
+    max_line: usize,
+    buf: Vec<u8>,
+    /// Inside an oversized line: drop bytes until its newline.
+    discarding: bool,
+}
+
+impl LineFramer {
+    pub fn new(max_line: usize) -> Self {
+        assert!(max_line >= 1);
+        LineFramer { max_line, buf: Vec::new(), discarding: false }
+    }
+
+    /// Consume one chunk of socket bytes, appending every completed
+    /// frame to `out`.
+    pub fn feed(&mut self, chunk: &[u8], out: &mut Vec<Frame>) {
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            let nl = rest.iter().position(|&b| b == b'\n');
+            if self.discarding {
+                match nl {
+                    Some(i) => {
+                        // The oversized line ends here; resynchronize.
+                        self.discarding = false;
+                        rest = &rest[i + 1..];
+                    }
+                    None => return, // still inside the oversized line
+                }
+                continue;
+            }
+            match nl {
+                Some(i) => {
+                    if self.buf.len() + i > self.max_line {
+                        out.push(Frame::Oversized);
+                        self.buf.clear();
+                    } else {
+                        self.buf.extend_from_slice(&rest[..i]);
+                        let line = std::mem::take(&mut self.buf);
+                        out.push(Frame::Line(
+                            String::from_utf8_lossy(&line).into_owned(),
+                        ));
+                    }
+                    rest = &rest[i + 1..];
+                }
+                None => {
+                    if self.buf.len() + rest.len() > self.max_line {
+                        // Cap crossed mid-line: report once, then discard
+                        // until this line's newline shows up.
+                        out.push(Frame::Oversized);
+                        self.buf.clear();
+                        self.discarding = true;
+                    } else {
+                        self.buf.extend_from_slice(rest);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// EOF: the final unterminated line, if any (the legacy
+    /// thread-per-connection server served an EOF-truncated request, and
+    /// the event loop keeps that behavior).
+    pub fn finish(&mut self) -> Option<Frame> {
+        self.discarding = false;
+        if self.buf.is_empty() {
+            return None;
+        }
+        let line = std::mem::take(&mut self.buf);
+        Some(Frame::Line(String::from_utf8_lossy(&line).into_owned()))
+    }
+
+    /// Bytes currently buffered for an incomplete line.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_all(f: &mut LineFramer, chunks: &[&[u8]]) -> Vec<Frame> {
+        let mut out = Vec::new();
+        for c in chunks {
+            f.feed(c, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn whole_lines_in_one_chunk() {
+        let mut f = LineFramer::new(64);
+        let out = feed_all(&mut f, &[b"alpha\nbeta\n"]);
+        assert_eq!(
+            out,
+            vec![Frame::Line("alpha".into()), Frame::Line("beta".into())]
+        );
+        assert_eq!(f.buffered(), 0);
+    }
+
+    #[test]
+    fn line_split_across_many_feeds() {
+        let mut f = LineFramer::new(64);
+        let out = feed_all(&mut f, &[b"{\"op\":", b"\"pi", b"ng\"}", b"\n"]);
+        assert_eq!(out, vec![Frame::Line("{\"op\":\"ping\"}".into())]);
+    }
+
+    #[test]
+    fn newline_split_from_payload() {
+        let mut f = LineFramer::new(64);
+        let out = feed_all(&mut f, &[b"one", b"\ntwo\nthr", b"ee\n"]);
+        assert_eq!(
+            out,
+            vec![
+                Frame::Line("one".into()),
+                Frame::Line("two".into()),
+                Frame::Line("three".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_lines_are_preserved() {
+        let mut f = LineFramer::new(64);
+        let out = feed_all(&mut f, &[b"\n\nx\n"]);
+        assert_eq!(
+            out,
+            vec![
+                Frame::Line(String::new()),
+                Frame::Line(String::new()),
+                Frame::Line("x".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn oversized_line_reports_once_and_resyncs() {
+        let mut f = LineFramer::new(8);
+        // 12 bytes without a newline: cap crossed → one Oversized.
+        let out = feed_all(&mut f, &[b"0123456789ab"]);
+        assert_eq!(out, vec![Frame::Oversized]);
+        // More of the same line: silent discard, no duplicate event.
+        let out = feed_all(&mut f, &[b"cdefgh"]);
+        assert!(out.is_empty());
+        // Its newline ends the discard; the next line parses normally.
+        let out = feed_all(&mut f, &[b"ij\nok\n"]);
+        assert_eq!(out, vec![Frame::Line("ok".into())]);
+    }
+
+    #[test]
+    fn oversized_line_completed_within_one_chunk() {
+        let mut f = LineFramer::new(4);
+        let out = feed_all(&mut f, &[b"toolong\nfine\n"]);
+        assert_eq!(out, vec![Frame::Oversized, Frame::Line("fine".into())]);
+    }
+
+    #[test]
+    fn exactly_at_the_cap_is_accepted() {
+        let mut f = LineFramer::new(5);
+        let out = feed_all(&mut f, &[b"12345\n123456\n"]);
+        assert_eq!(out, vec![Frame::Line("12345".into()), Frame::Oversized]);
+    }
+
+    #[test]
+    fn oversized_accumulated_across_feeds() {
+        let mut f = LineFramer::new(6);
+        let mut out = Vec::new();
+        f.feed(b"abc", &mut out);
+        f.feed(b"def", &mut out); // exactly 6 buffered: still fine
+        assert!(out.is_empty());
+        assert_eq!(f.buffered(), 6);
+        f.feed(b"g", &mut out); // 7th byte crosses the cap
+        assert_eq!(out, vec![Frame::Oversized]);
+        f.feed(b"\nz\n", &mut out);
+        assert_eq!(out, vec![Frame::Oversized, Frame::Line("z".into())]);
+    }
+
+    #[test]
+    fn finish_returns_trailing_partial_line() {
+        let mut f = LineFramer::new(64);
+        let out = feed_all(&mut f, &[b"done\npartial"]);
+        assert_eq!(out, vec![Frame::Line("done".into())]);
+        assert_eq!(f.finish(), Some(Frame::Line("partial".into())));
+        assert_eq!(f.finish(), None);
+    }
+
+    #[test]
+    fn finish_while_discarding_yields_nothing() {
+        let mut f = LineFramer::new(4);
+        let out = feed_all(&mut f, &[b"oversized-without-newline"]);
+        assert_eq!(out, vec![Frame::Oversized]);
+        assert_eq!(f.finish(), None);
+    }
+
+    #[test]
+    fn invalid_utf8_is_lossy_not_fatal() {
+        let mut f = LineFramer::new(64);
+        let out = feed_all(&mut f, &[&[0xff, 0xfe, b'\n']]);
+        match &out[..] {
+            [Frame::Line(s)] => assert!(!s.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -5,7 +5,110 @@ use crate::json::Json;
 use crate::stats::Welford;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Which latency histogram a request feeds (see
+/// [`crate::coordinator::protocol::Request::traffic_class`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    /// Snapshot-served reads: `score`, `score_batch`, snapshot
+    /// `predict`, `predict_batch`.
+    Read,
+    /// Through the worker queues: `learn`, `learn_reg`, sequential
+    /// `predict`, `predict_reg`.
+    Write,
+    /// Lifecycle / introspection: create, stats, checkpoint, drop,
+    /// ping, shutdown — plus protocol errors.
+    Control,
+}
+
+/// Lock-free latency histogram with power-of-two nanosecond buckets:
+/// bucket `i` holds durations in `(2^(i-1), 2^i]` ns, so 64 buckets
+/// span sub-nanosecond to ~584 years. Quantiles come back as the
+/// bucket's upper bound — at worst a 2× overestimate, which is the
+/// right bias for tail-latency alerting and costs zero locks on the
+/// hot path.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+}
+
+// `[T; 64]` has no derived Default (the std impls stop at 32).
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(d: Duration) -> usize {
+        let nanos = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        (64 - nanos.leading_zeros() as usize).min(63)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.buckets[Self::bucket(d)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Nearest-rank quantile (`q` in [0, 1]) in seconds; 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // Upper bound of bucket i is 2^i ns.
+                return (1u64 << i.min(62)) as f64 * 1e-9;
+            }
+        }
+        (1u64 << 62) as f64 * 1e-9
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count(),
+            p50_s: self.quantile(0.50),
+            p95_s: self.quantile(0.95),
+            p99_s: self.quantile(0.99),
+        }
+    }
+}
+
+/// Tail-latency digest of one traffic class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl LatencySummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", (self.count as usize).into()),
+            ("p50_s", self.p50_s.into()),
+            ("p95_s", self.p95_s.into()),
+            ("p99_s", self.p99_s.into()),
+        ])
+    }
+}
 
 /// Shared metrics hub (one per coordinator; cheap to clone via Arc).
 #[derive(Default)]
@@ -24,6 +127,17 @@ pub struct Metrics {
     /// Learn steps between consecutive publishes — the staleness bound
     /// actually observed (≤ snapshot_interval by construction).
     snapshot_lag: Mutex<Welford>,
+    // --- serving front end (event-loop server) ---
+    /// End-to-end request latency per traffic class, measured from the
+    /// moment a complete request line is framed to the moment its
+    /// response string is ready (includes coalescing queue time).
+    read_latency: LatencyHistogram,
+    write_latency: LatencyHistogram,
+    control_latency: LatencyHistogram,
+    /// Single-query reads that went through a coalescing batcher…
+    coalesced_reads: AtomicU64,
+    /// …and how many blocked-kernel batches they collapsed into.
+    coalesced_batches: AtomicU64,
 }
 
 impl Metrics {
@@ -68,6 +182,22 @@ impl Metrics {
         self.snapshot_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One served request finished (event-loop server front end).
+    pub fn record_request_latency(&self, class: TrafficClass, elapsed: Duration) {
+        match class {
+            TrafficClass::Read => self.read_latency.record(elapsed),
+            TrafficClass::Write => self.write_latency.record(elapsed),
+            TrafficClass::Control => self.control_latency.record(elapsed),
+        }
+    }
+
+    /// A coalescing batcher flushed `size` single-query reads as one
+    /// blocked batch.
+    pub fn record_coalesced_batch(&self, size: u64) {
+        self.coalesced_reads.fetch_add(size, Ordering::Relaxed);
+        self.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let learn = self.learn_latency.lock().unwrap().clone();
         let predict = self.predict_latency.lock().unwrap().clone();
@@ -88,6 +218,11 @@ impl Metrics {
             snapshot_fallbacks: self.snapshot_fallbacks.load(Ordering::Relaxed),
             snapshot_lag_mean_points: lag.mean(),
             snapshot_lag_max_points: if lag.count() > 0 { lag.max() } else { 0.0 },
+            read_latency: self.read_latency.summary(),
+            write_latency: self.write_latency.summary(),
+            control_latency: self.control_latency.summary(),
+            coalesced_reads: self.coalesced_reads.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
         }
     }
 }
@@ -109,6 +244,11 @@ pub struct MetricsSnapshot {
     pub snapshot_fallbacks: u64,
     pub snapshot_lag_mean_points: f64,
     pub snapshot_lag_max_points: f64,
+    pub read_latency: LatencySummary,
+    pub write_latency: LatencySummary,
+    pub control_latency: LatencySummary,
+    pub coalesced_reads: u64,
+    pub coalesced_batches: u64,
 }
 
 impl MetricsSnapshot {
@@ -128,6 +268,16 @@ impl MetricsSnapshot {
             ("snapshot_fallbacks", (self.snapshot_fallbacks as usize).into()),
             ("snapshot_lag_mean_points", self.snapshot_lag_mean_points.into()),
             ("snapshot_lag_max_points", self.snapshot_lag_max_points.into()),
+            (
+                "request_latency",
+                Json::obj(vec![
+                    ("read", self.read_latency.to_json()),
+                    ("write", self.write_latency.to_json()),
+                    ("control", self.control_latency.to_json()),
+                ]),
+            ),
+            ("coalesced_reads", (self.coalesced_reads as usize).into()),
+            ("coalesced_batches", (self.coalesced_batches as usize).into()),
         ])
     }
 }
@@ -173,6 +323,49 @@ mod tests {
         m.record_learn(Instant::now());
         let j = m.snapshot().to_json().to_string_compact();
         assert!(j.contains("\"learned\":1"));
+        crate::json::parse(&j).unwrap();
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_the_samples() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram reads 0");
+        // 99 fast samples (~1 µs) and one slow outlier (~16 ms).
+        for _ in 0..99 {
+            h.record(Duration::from_micros(1));
+        }
+        h.record(Duration::from_millis(16));
+        assert_eq!(h.count(), 100);
+        let s = h.summary();
+        // Power-of-two buckets: p50/p95 land in the ~1 µs bucket
+        // (upper bound ≤ 2 µs), p99… is dominated by bucket bounds but
+        // the p100-ish tail must see the outlier.
+        assert!(s.p50_s > 0.0 && s.p50_s <= 2.1e-6, "p50 {}", s.p50_s);
+        assert!(s.p95_s <= 2.1e-6, "p95 {}", s.p95_s);
+        assert!(h.quantile(1.0) >= 0.016, "p100 {}", h.quantile(1.0));
+        // Quantiles are monotone in q.
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s);
+    }
+
+    #[test]
+    fn traffic_classes_feed_separate_histograms() {
+        let m = Metrics::new();
+        m.record_request_latency(TrafficClass::Read, Duration::from_micros(10));
+        m.record_request_latency(TrafficClass::Read, Duration::from_micros(10));
+        m.record_request_latency(TrafficClass::Write, Duration::from_millis(1));
+        m.record_request_latency(TrafficClass::Control, Duration::from_nanos(100));
+        m.record_coalesced_batch(32);
+        m.record_coalesced_batch(1);
+        let s = m.snapshot();
+        assert_eq!(s.read_latency.count, 2);
+        assert_eq!(s.write_latency.count, 1);
+        assert_eq!(s.control_latency.count, 1);
+        assert!(s.write_latency.p99_s > s.read_latency.p99_s);
+        assert_eq!(s.coalesced_reads, 33);
+        assert_eq!(s.coalesced_batches, 2);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"request_latency\""));
+        assert!(j.contains("\"coalesced_reads\":33"));
         crate::json::parse(&j).unwrap();
     }
 

@@ -19,17 +19,32 @@
 //!   through the worker queues) and a **read class**
 //!   (`score_read`/`predict_read`/`*_batch_read`, served from snapshots
 //!   on the scorer pool).
-//! - [`batcher`] — groups inference requests into size-or-deadline
-//!   micro-batches before they hit a worker.
+//! - [`batcher`] — size-or-deadline micro-batching. The server's
+//!   drivers use it to coalesce concurrent single-query snapshot reads
+//!   for the same model into the blocked batch-read surfaces
+//!   (bit-identical to per-request dispatch; adds at most `max_delay`
+//!   to a lone read).
 //! - [`backpressure`] — bounded queues with block/drop policies between
 //!   all stages.
 //! - [`registry`] — named-model lifecycle (create, lookup, drop,
-//!   checkpoint); owns the shared scorer pool.
+//!   checkpoint); owns the shared scorer pool. The model table is
+//!   name-sharded across 16 locks so unrelated tenants never contend.
 //! - [`server`] — a line-delimited-JSON TCP front end over the
-//!   [`protocol`] types; connection handlers are tracked and joined on
-//!   shutdown.
-//! - [`metrics`] — per-stage counters and latency statistics, including
-//!   snapshot publish counts and observed read staleness.
+//!   [`protocol`] types, run as a readiness-driven multiplexed event
+//!   loop: a small pool of driver threads each `poll(2)`s many
+//!   nonblocking sockets (no idle wakeups; cross-thread wakeup via a
+//!   loopback self-pipe), frames request lines incrementally with a
+//!   bounded buffer, and writes responses back in request order.
+//!   Shutdown wakes and joins every driver — no driver touches the
+//!   registry after `Server::shutdown` returns.
+//! - [`framing`] — the bounded incremental line framer (pure, so its
+//!   tests run under miri).
+//! - [`poller`] — minimal `poll(2)`/`rlimit` FFI plus the loopback
+//!   wake pair (std links libc; no external crates).
+//! - [`metrics`] — per-stage counters and latency statistics:
+//!   snapshot publish counts, observed read staleness, read-coalescing
+//!   counters, and lock-free p50/p95/p99 latency histograms per
+//!   traffic class (read / write / control).
 //!
 //! ## Snapshot staleness contract
 //!
@@ -58,7 +73,9 @@
 pub mod backpressure;
 pub mod batcher;
 pub mod checkpoint;
+pub mod framing;
 pub mod metrics;
+pub mod poller;
 pub mod protocol;
 pub mod registry;
 pub mod router;
@@ -69,11 +86,12 @@ pub mod worker;
 pub use backpressure::{BoundedQueue, OverflowPolicy};
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use checkpoint::CheckpointStore;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use framing::DEFAULT_MAX_LINE_BYTES;
+pub use metrics::{LatencySummary, Metrics, MetricsSnapshot, TrafficClass};
 pub use registry::{ModelSpec, Registry};
 pub use router::{Router, RoutingPolicy};
 pub use scorer::ScorerPool;
-pub use server::{serve, ServerConfig};
+pub use server::{serve, Server, ServerConfig};
 pub use worker::{SnapshotCell, Worker, WorkerHandle, WorkerStats, DEFAULT_SNAPSHOT_INTERVAL};
 
 /// Coordinator-level errors.

@@ -1,0 +1,255 @@
+//! Minimal readiness polling over raw `poll(2)`, plus the wake channel
+//! the event-loop server uses instead of timeout-based busy polling.
+//!
+//! The offline vendor set has no `mio`/`libc` crate, but `std` already
+//! links the platform libc, so a two-symbol `extern "C"` block is all a
+//! readiness loop needs: `poll` for the drivers and `{get,set}rlimit`
+//! for the high-connection-count bench. Everything else stays on
+//! `std::net`.
+//!
+//! [`WakePair`] is the self-pipe idiom built from a loopback TCP pair
+//! (`pipe(2)` would drag in more FFI surface): the reading end sits in a
+//! driver's poll set, and any thread holding the [`WakeHandle`] can make
+//! that driver's `poll` return immediately by writing one byte. This is
+//! what makes shutdown race-free regardless of the *serving* listener's
+//! bind address — the old implementation poked `TcpStream::connect(local_addr)`
+//! at the serving socket itself, which is not connectable-as-advertised
+//! when bound to `0.0.0.0`. The wake pair is always loopback and never
+//! depends on the serving address at all.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::{c_int, c_ulong};
+use std::os::unix::io::RawFd;
+use std::sync::Arc;
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+/// `struct pollfd` — layout fixed by POSIX.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn invalid(&self) -> bool {
+        self.revents & POLLNVAL != 0
+    }
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+}
+
+/// Block until any fd is ready or `timeout_ms` elapses (-1 = no
+/// timeout). Returns the number of ready fds; EINTR counts as zero
+/// ready (callers loop anyway).
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    // SAFETY: `fds` is a valid, exclusively borrowed slice of
+    // repr(C) pollfd records for the duration of the call.
+    let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+    Ok(rc as usize)
+}
+
+/// Cross-thread wakeup for a poll loop: a connected loopback TCP pair.
+/// The reader participates in the poll set; `WakeHandle::wake` writes a
+/// byte from any thread. Cheap (one fd pair per driver) and entirely
+/// `std::net`.
+pub struct WakePair {
+    reader: TcpStream,
+    writer: Arc<TcpStream>,
+}
+
+impl WakePair {
+    pub fn new() -> io::Result<WakePair> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let writer = TcpStream::connect(listener.local_addr()?)?;
+        let ours = writer.local_addr()?;
+        // Accept until we see our own connection (anything else on the
+        // ephemeral port — a stray scanner — is dropped).
+        let reader = loop {
+            let (s, peer) = listener.accept()?;
+            if peer == ours {
+                break s;
+            }
+        };
+        reader.set_nonblocking(true)?;
+        writer.set_nodelay(true)?;
+        Ok(WakePair { reader, writer: Arc::new(writer) })
+    }
+
+    pub fn handle(&self) -> WakeHandle {
+        WakeHandle(self.writer.clone())
+    }
+
+    pub fn reader_fd(&self) -> RawFd {
+        use std::os::unix::io::AsRawFd;
+        self.reader.as_raw_fd()
+    }
+
+    /// Swallow every pending wake byte (level-triggered poll would
+    /// otherwise report the reader ready forever).
+    pub fn drain(&mut self) {
+        let mut sink = [0u8; 64];
+        while matches!(self.reader.read(&mut sink), Ok(n) if n > 0) {}
+    }
+}
+
+/// Clonable, Send + Sync wake trigger.
+#[derive(Clone)]
+pub struct WakeHandle(Arc<TcpStream>);
+
+impl WakeHandle {
+    pub fn wake(&self) {
+        // A full socket buffer means wakes are already pending — the
+        // failure is harmless and must not block the caller.
+        let _ = (&*self.0).write(&[1u8]);
+    }
+}
+
+// ---- RLIMIT_NOFILE (for the high-connection-count bench) ----
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+#[cfg(target_os = "macos")]
+const RLIMIT_NOFILE: c_int = 8;
+#[cfg(not(target_os = "macos"))]
+const RLIMIT_NOFILE: c_int = 7;
+
+extern "C" {
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+}
+
+/// Best-effort raise of the fd soft limit to at least `want`; returns
+/// the soft limit actually in force afterwards. The serving-concurrency
+/// bench calls this before opening thousands of sockets.
+pub fn raise_nofile(want: u64) -> u64 {
+    let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+    // SAFETY: `lim` is a valid repr(C) rlimit out-parameter.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 0;
+    }
+    if lim.rlim_cur >= want {
+        return lim.rlim_cur;
+    }
+    let target = want.min(lim.rlim_max);
+    let new = RLimit { rlim_cur: target, rlim_max: lim.rlim_max };
+    // SAFETY: `new` is a valid repr(C) rlimit.
+    if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+        target
+    } else {
+        lim.rlim_cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::os::unix::io::AsRawFd;
+    use std::time::{Duration, Instant};
+
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn poll_reports_readable_after_write() {
+        let (mut a, b) = tcp_pair();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        // Nothing written yet: an immediate poll sees nothing.
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        assert!(!fds[0].readable());
+        a.write_all(b"x").unwrap();
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+    }
+
+    #[test]
+    fn poll_timeout_elapses_without_events() {
+        let (_a, b) = tcp_pair();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        let t0 = Instant::now();
+        assert_eq!(poll_fds(&mut fds, 30).unwrap(), 0);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn wake_pair_unblocks_poll_and_drains() {
+        let mut wake = WakePair::new().unwrap();
+        let handle = wake.handle();
+        let fd = wake.reader_fd();
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            handle.wake();
+        });
+        let mut fds = [PollFd::new(fd, POLLIN)];
+        let t0 = Instant::now();
+        assert_eq!(poll_fds(&mut fds, 5000).unwrap(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(4), "wake must beat the timeout");
+        waker.join().unwrap();
+        wake.drain();
+        // Drained: the reader is quiet again.
+        let mut fds = [PollFd::new(fd, POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wake_handle_is_cheap_to_spam() {
+        let mut wake = WakePair::new().unwrap();
+        let handle = wake.handle();
+        // Far more wakes than the socket buffer holds: must never block.
+        for _ in 0..100_000 {
+            handle.wake();
+        }
+        wake.drain();
+        let mut fds = [PollFd::new(wake.reader_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn raise_nofile_is_monotone() {
+        let before = raise_nofile(0);
+        assert!(before > 0);
+        let after = raise_nofile(before);
+        assert!(after >= before);
+    }
+}

@@ -2,6 +2,7 @@
 //! responses (one object per line), shared by the TCP server and any
 //! in-process client.
 
+use super::metrics::TrafficClass;
 use super::CoordError;
 use crate::gmm::SearchMode;
 use crate::json::{parse, Json};
@@ -84,6 +85,29 @@ pub enum Response {
 }
 
 impl Request {
+    /// Which latency histogram this request feeds (see
+    /// [`crate::coordinator::metrics::Metrics::record_request_latency`]):
+    /// snapshot-served ops are `Read`, worker-queue ops are `Write`,
+    /// lifecycle/introspection is `Control`.
+    pub fn traffic_class(&self) -> TrafficClass {
+        match self {
+            Request::Score { .. }
+            | Request::ScoreBatch { .. }
+            | Request::PredictSnapshot { .. }
+            | Request::PredictBatch { .. } => TrafficClass::Read,
+            Request::Learn { .. }
+            | Request::LearnReg { .. }
+            | Request::Predict { .. }
+            | Request::PredictReg { .. } => TrafficClass::Write,
+            Request::CreateModel { .. }
+            | Request::Stats { .. }
+            | Request::Checkpoint { .. }
+            | Request::DropModel { .. }
+            | Request::Ping
+            | Request::Shutdown => TrafficClass::Control,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             Request::CreateModel {
@@ -498,6 +522,29 @@ mod tests {
         assert!(Request::from_line(r#"{"op":"score","model":"m"}"#).is_err());
         assert!(Request::from_line(r#"{"op":"score_batch","model":"m","xs":[1]}"#).is_err());
         assert!(Request::from_line(r#"{"op":"predict_batch","model":"m"}"#).is_err());
+    }
+
+    #[test]
+    fn traffic_classes_partition_the_ops() {
+        use TrafficClass::*;
+        let cases = vec![
+            (Request::Score { model: "m".into(), x: vec![] }, Read),
+            (Request::ScoreBatch { model: "m".into(), xs: vec![] }, Read),
+            (Request::PredictSnapshot { model: "m".into(), features: vec![] }, Read),
+            (Request::PredictBatch { model: "m".into(), xs: vec![] }, Read),
+            (Request::Learn { model: "m".into(), features: vec![], label: 0 }, Write),
+            (Request::LearnReg { model: "m".into(), features: vec![], targets: vec![] }, Write),
+            (Request::Predict { model: "m".into(), features: vec![] }, Write),
+            (Request::PredictReg { model: "m".into(), features: vec![] }, Write),
+            (Request::Stats { model: "m".into() }, Control),
+            (Request::Checkpoint { model: "m".into() }, Control),
+            (Request::DropModel { model: "m".into() }, Control),
+            (Request::Ping, Control),
+            (Request::Shutdown, Control),
+        ];
+        for (req, want) in cases {
+            assert_eq!(req.traffic_class(), want, "{req:?}");
+        }
     }
 
     #[test]

@@ -111,9 +111,28 @@ struct Entry {
     spec: ModelSpec,
 }
 
+/// Lock shards for the model table. Lookups hash the model name to one
+/// shard, so unrelated tenants never contend on a registry lock even
+/// when thousands of connections resolve models concurrently (the
+/// event-loop server does a router+spec lookup per request).
+const LOCK_SHARDS: usize = 16;
+
+/// FNV-1a over the model name — stable, cheap, and the same name always
+/// lands on the same shard (which is what makes the create-time
+/// uniqueness check sound under sharding).
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h as usize) % LOCK_SHARDS
+}
+
 /// Thread-safe model registry — the coordinator's control plane.
 pub struct Registry {
-    models: Mutex<HashMap<String, Entry>>,
+    /// Name-sharded model table (see [`shard_of`]).
+    models: Vec<Mutex<HashMap<String, Entry>>>,
     metrics: Arc<Metrics>,
     checkpoints: Option<CheckpointStore>,
     /// Shared scorer pool serving every model's snapshot read class —
@@ -134,11 +153,16 @@ fn default_scorer_threads() -> usize {
 impl Registry {
     pub fn new(metrics: Arc<Metrics>) -> Self {
         Registry {
-            models: Mutex::new(HashMap::new()),
+            models: (0..LOCK_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             metrics,
             checkpoints: None,
             scorers: OnceLock::new(),
         }
+    }
+
+    /// The lock shard owning `name`.
+    fn shard(&self, name: &str) -> &Mutex<HashMap<String, Entry>> {
+        &self.models[shard_of(name)]
     }
 
     /// Enable checkpointing into a directory.
@@ -169,9 +193,11 @@ impl Registry {
         &self.metrics
     }
 
-    /// Create a model; errors if the name exists.
+    /// Create a model; errors if the name exists. Holds only the name's
+    /// lock shard — creates of differently-named models proceed in
+    /// parallel.
     pub fn create(&self, spec: ModelSpec) -> Result<()> {
-        let mut models = self.models.lock().unwrap();
+        let mut models = self.shard(&spec.name).lock().unwrap();
         if models.contains_key(&spec.name) {
             return Err(CoordError::Protocol(format!("model '{}' already exists", spec.name)));
         }
@@ -214,7 +240,7 @@ impl Registry {
 
     /// Look up the router for a model.
     pub fn router(&self, name: &str) -> Result<Arc<Router>> {
-        self.models
+        self.shard(name)
             .lock()
             .unwrap()
             .get(name)
@@ -268,7 +294,7 @@ impl Registry {
     /// Drop a model, joining its workers.
     pub fn drop_model(&self, name: &str) -> Result<()> {
         let entry = self
-            .models
+            .shard(name)
             .lock()
             .unwrap()
             .remove(name)
@@ -281,12 +307,15 @@ impl Registry {
     }
 
     pub fn model_names(&self) -> Vec<String> {
-        self.models.lock().unwrap().keys().cloned().collect()
+        self.models
+            .iter()
+            .flat_map(|m| m.lock().unwrap().keys().cloned().collect::<Vec<_>>())
+            .collect()
     }
 
     /// The spec a model was created with.
     pub fn spec(&self, name: &str) -> Result<ModelSpec> {
-        self.models
+        self.shard(name)
             .lock()
             .unwrap()
             .get(name)
@@ -461,6 +490,38 @@ mod tests {
         assert!(coord.get("snapshots_published").unwrap().as_usize().unwrap() >= 1);
         assert!(coord.get("snapshot_reads").unwrap().as_usize().unwrap() >= 2);
         reg.drop_model("r").unwrap();
+    }
+
+    #[test]
+    fn lock_sharding_keeps_tenants_independent() {
+        // Many tenants created/used/dropped from concurrent threads:
+        // the name-sharded lock table must preserve the uniqueness
+        // check and never lose or cross-wire an entry.
+        let reg = Arc::new(registry());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let reg = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                let name = format!("tenant-{t}");
+                reg.create(blob_spec(&name)).unwrap();
+                // A duplicate create must still be rejected on the same
+                // shard.
+                assert!(reg.create(blob_spec(&name)).is_err());
+                let router = reg.router(&name).unwrap();
+                for i in 0..30 {
+                    router.learn(vec![i as f64, t as f64], i % 3).unwrap();
+                }
+                let stats = reg.stats(&name).unwrap();
+                assert_eq!(stats.get("learned").unwrap().as_usize(), Some(30));
+                assert_eq!(reg.spec(&name).unwrap().name, name);
+                reg.drop_model(&name).unwrap();
+                assert!(reg.router(&name).is_err());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(reg.model_names().is_empty());
     }
 
     #[test]

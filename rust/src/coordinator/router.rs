@@ -30,6 +30,16 @@
 //!   bit-identical to the serial model at that version. Until a first
 //!   snapshot exists, predicts fall back to the write class and scores
 //!   error out.
+//!
+//! The event-loop server's read coalescer maps single-query `score`/
+//! snapshot-`predict` requests onto `score_batch_read`/
+//! `predict_batch_read`. That substitution is sound because the batch
+//! surfaces are per-element bit-identical to their single-query
+//! counterparts: the blocked kernels guarantee it per shard (PR 5),
+//! the merge here sums shard results element-wise in fixed shard order
+//! before one divide (identical arithmetic for a length-1 and a
+//! length-B batch), and the `NO_SNAPSHOT` fallback applies the same
+//! per-item sequential predict in both shapes.
 
 use super::metrics::Metrics;
 use super::scorer::{execute, ReadKind, ReadResult, ScorerPool};

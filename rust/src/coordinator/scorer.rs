@@ -21,7 +21,11 @@
 //! per 32-query block instead of once per point, so a batch read stops
 //! paying the per-point matrix re-stream that made the old read path
 //! bandwidth-bound at large `D`. Results are unchanged — blocking is
-//! bit-identical to mapping the per-point scorers.
+//! bit-identical to mapping the per-point scorers. The event-loop
+//! server leans on exactly this guarantee: its per-driver coalescers
+//! gather concurrent single-query reads for one model into these batch
+//! jobs, so high-concurrency serving rides the blocked kernels without
+//! changing a single response byte.
 //!
 //! [`SnapshotCell`]: super::worker::SnapshotCell
 

@@ -1,28 +1,76 @@
-//! TCP front end: line-delimited JSON over `std::net`, one thread per
-//! connection (adequate for the online-learning use case where a handful
-//! of producers stream records; the heavy lifting is already pipelined
-//! behind the workers' bounded queues, and heavy read traffic is served
-//! from model snapshots by the registry's scorer pool).
+//! TCP front end: line-delimited JSON over `std::net`, served by a
+//! readiness-driven multiplexed event loop.
 //!
-//! Lifecycle: connection handler threads are tracked, read with a short
-//! timeout so they observe the shutdown flag even while idle, and are
-//! joined by [`Server::shutdown`]/`Drop` — once `shutdown()` returns,
-//! no handler thread is still touching the registry.
+//! A small fixed pool of **connection-driver threads** (default
+//! `cores/2` clamped to `[1, 4]`, see [`ServerConfig::drivers`]) each
+//! owns many nonblocking sockets. A driver sleeps in `poll(2)` until a
+//! socket has bytes, a write buffer drains, or its wake pair fires — no
+//! timeout-based busy wakeups, so thousands of idle connections cost
+//! zero CPU. Incoming bytes run through a bounded incremental
+//! [`LineFramer`] (cap: [`ServerConfig::max_line_bytes`]; an oversized
+//! line gets a protocol-error `Response` and the connection resyncs at
+//! its newline), parsed requests dispatch onto the registry, and
+//! responses queue per connection in **request order** regardless of
+//! completion order.
+//!
+//! ## Read coalescing
+//!
+//! When [`ServerConfig::coalesce`] is on (default), single-query
+//! snapshot reads (`score`, `predict`-from-snapshot) are not dispatched
+//! one by one: each driver runs a size-or-deadline [`Batcher`] per
+//! `(model, op)` and flushes whole blocks into the router's *batched*
+//! read surfaces (`score_batch_read` / `predict_batch_read`), which
+//! stream each packed component row once per 32-query block instead of
+//! once per query. The PR 5 blocked kernels are bit-identical to
+//! per-point scoring, the router's merge arithmetic is per-element
+//! identical, and validation error strings are mirrored exactly — so
+//! **every coalesced response is byte-identical to what per-request
+//! dispatch would have produced**. Latency contract: coalescing adds at
+//! most `BatcherConfig::max_delay` (default 2 ms) to a lone read; a
+//! full block flushes immediately.
+//!
+//! Ordering: coalescing only ever groups *consecutive* coalescable
+//! reads. Any other request on a driver (learn, create, drop, stats,
+//! ping, …) first flushes every pending batch on that driver, so the
+//! registry observes effects in exactly the order a sequential
+//! per-request loop would have produced.
+//!
+//! ## Lifecycle
+//!
+//! Shutdown is race-free for any bind address: each driver owns a
+//! loopback [`WakePair`] and [`Server::shutdown`] sets the flag, wakes
+//! every driver, and joins them — once `shutdown()` returns, no driver
+//! thread is still touching the registry. (The previous
+//! thread-per-connection server poked `TcpStream::connect(local_addr)`
+//! at the serving socket, which is not connectable-as-advertised when
+//! bound to `0.0.0.0`.) Pending coalesced reads are answered and write
+//! buffers get a short bounded drain before the sockets close.
 
+use super::batcher::{Batcher, BatcherConfig};
+use super::framing::{Frame, LineFramer, DEFAULT_MAX_LINE_BYTES};
+use super::metrics::{Metrics, TrafficClass};
+use super::poller::{poll_fds, PollFd, WakeHandle, WakePair, POLLIN, POLLOUT};
 use super::protocol::{Request, Response};
 use super::registry::{ModelSpec, Registry};
 use super::router::RoutingPolicy;
 use super::{CoordError, Result};
 use crate::gmm::GmmConfig;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// How often an idle connection handler wakes up to check the shutdown
-/// flag (the stream's read timeout).
-const CONN_POLL: Duration = Duration::from_millis(50);
+/// Per-connection write-buffer high-water mark: above this backlog the
+/// driver stops reading from the connection (natural backpressure on a
+/// client that pipelines faster than it drains responses).
+const OUTBUF_HIGH_WATER: usize = 4 << 20;
+
+/// How long shutdown keeps pumping partially written responses before
+/// closing sockets anyway.
+const SHUTDOWN_DRAIN: Duration = Duration::from_millis(250);
 
 /// Server knobs.
 #[derive(Debug, Clone)]
@@ -31,22 +79,43 @@ pub struct ServerConfig {
     pub addr: String,
     /// Optional XLA config name to give new models (see WorkerConfig).
     pub xla_config: Option<String>,
+    /// Connection-driver threads (0 = auto: `cores/2` clamped to [1,4]).
+    pub drivers: usize,
+    /// Per-connection request-line cap; longer lines get a protocol
+    /// error and are discarded to their newline.
+    pub max_line_bytes: usize,
+    /// Coalesce single-query snapshot reads into blocked batch reads.
+    pub coalesce: bool,
+    /// Size-or-deadline policy for coalesced reads (per driver, per
+    /// model+op).
+    pub batch: BatcherConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:0".into(), xla_config: None }
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            xla_config: None,
+            drivers: 0,
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            coalesce: true,
+            batch: BatcherConfig::default(),
+        }
     }
+}
+
+fn auto_drivers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| (n.get() / 2).clamp(1, 4))
+        .unwrap_or(1)
 }
 
 /// A running server (join on drop).
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    /// Live connection-handler threads, joined on shutdown so no
-    /// handler outlives the server (or keeps using the registry).
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    drivers: Vec<std::thread::JoinHandle<()>>,
+    wakes: Vec<WakeHandle>,
 }
 
 impl Server {
@@ -54,18 +123,22 @@ impl Server {
         self.stop();
     }
 
+    /// True once a client's `shutdown` request (or [`Server::shutdown`])
+    /// has been observed — lets an embedding process park without
+    /// polling the socket.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
     fn stop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Poke the acceptor so it notices the flag.
-        let _ = TcpStream::connect(self.local_addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        for w in &self.wakes {
+            w.wake();
         }
-        // Join every handler: they observe the flag within one read
-        // timeout (CONN_POLL), finish their in-flight request, and exit.
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
+        // Join every driver: once this returns, no thread spawned by
+        // `serve` is still touching the registry.
+        for t in self.drivers.drain(..) {
+            let _ = t.join();
         }
     }
 }
@@ -80,96 +153,658 @@ impl Drop for Server {
 pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
     let shutdown = Arc::new(AtomicBool::new(false));
-    let flag = shutdown.clone();
-    let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-        Arc::new(Mutex::new(Vec::new()));
-    let conns2 = conns.clone();
-    let accept_thread = std::thread::Builder::new()
-        .name("figmn-accept".into())
-        .spawn(move || {
-            for stream in listener.incoming() {
-                if flag.load(Ordering::SeqCst) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        let reg = registry.clone();
-                        let flag = flag.clone();
-                        let xla = cfg.xla_config.clone();
-                        let handle = std::thread::Builder::new()
-                            .name("figmn-conn".into())
-                            .spawn(move || handle_connection(s, reg, flag, xla))
-                            .ok();
-                        if let Some(h) = handle {
-                            let mut conns = conns2.lock().unwrap();
-                            // Reap finished handlers so the vec stays
-                            // bounded on long-lived servers.
-                            conns.retain(|c| !c.is_finished());
-                            conns.push(h);
-                        }
-                    }
-                    Err(_) => break,
-                }
-            }
-        })
-        .expect("spawn acceptor");
-    Ok(Server { local_addr, shutdown, accept_thread: Some(accept_thread), conns })
+    let n = if cfg.drivers == 0 { auto_drivers() } else { cfg.drivers };
+    let mut pairs = Vec::with_capacity(n);
+    for _ in 0..n {
+        pairs.push(WakePair::new()?);
+    }
+    let wakes: Vec<WakeHandle> = pairs.iter().map(|p| p.handle()).collect();
+    let inboxes: Vec<Arc<Mutex<Vec<TcpStream>>>> =
+        (0..n).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+    let mut drivers = Vec::with_capacity(n);
+    let mut listener = Some(listener);
+    for (id, wake) in pairs.into_iter().enumerate() {
+        let driver = Driver {
+            id,
+            registry: registry.clone(),
+            metrics: registry.metrics().clone(),
+            xla_config: cfg.xla_config.clone(),
+            shutdown: shutdown.clone(),
+            wake,
+            inbox: inboxes[id].clone(),
+            inboxes: inboxes.clone(),
+            wakes: wakes.clone(),
+            // Driver 0 owns the accept path; new connections are dealt
+            // round-robin to every driver through the inboxes.
+            listener: listener.take(),
+            next_peer: 0,
+            max_line: cfg.max_line_bytes.max(1),
+            coalesce: cfg.coalesce,
+            batch_cfg: cfg.batch,
+            conns: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            batchers: HashMap::new(),
+        };
+        drivers.push(
+            std::thread::Builder::new()
+                .name(format!("figmn-driver-{id}"))
+                .spawn(move || driver.run())
+                .expect("spawn driver"),
+        );
+    }
+    Ok(Server { local_addr, shutdown, drivers, wakes })
 }
 
-fn handle_connection(
+/// One multiplexed connection: socket, framer, ordered response slots,
+/// write buffer.
+struct Conn {
     stream: TcpStream,
+    /// Generation of this token at registration — guards stale
+    /// [`SlotRef`]s after the token is reused.
+    gen: u64,
+    framer: LineFramer,
+    /// Response slots in request order; `None` = still in flight
+    /// (e.g. waiting in a coalescing batcher). Responses are written out
+    /// strictly front-to-back, so pipelined clients always see answers
+    /// in the order they asked.
+    slots: VecDeque<Option<String>>,
+    /// Sequence number of `slots.front()`.
+    first_seq: u64,
+    /// Sequence number the next request will get.
+    next_seq: u64,
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Peer sent EOF (or `shutdown`): serve what's pending, drain, close.
+    closing: bool,
+}
+
+/// Stable handle to one response slot (survives the connection dying —
+/// a fill for a dropped or reused token is a silent no-op).
+#[derive(Clone, Copy)]
+struct SlotRef {
+    token: usize,
+    gen: u64,
+    seq: u64,
+}
+
+/// A single-query snapshot read parked in a coalescing batcher.
+struct PendingRead {
+    at: SlotRef,
+    x: Vec<f64>,
+    queued_at: Instant,
+}
+
+/// Which blocked read surface a batcher feeds.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum CoalOp {
+    /// `score` → `Router::score_batch_read`.
+    Score,
+    /// snapshot `predict` → `Router::predict_batch_read`.
+    Predict,
+}
+
+#[derive(Clone, Copy)]
+enum FdKind {
+    Wake,
+    Listener,
+    Conn(usize),
+}
+
+struct Driver {
+    id: usize,
     registry: Arc<Registry>,
-    shutdown: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
     xla_config: Option<String>,
-) {
-    let peer = stream.peer_addr().ok();
-    // A short read timeout so an idle handler still observes shutdown.
-    let _ = stream.set_read_timeout(Some(CONN_POLL));
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut buf = String::new();
-    loop {
-        if shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        // `read_line` appends, so a line split across timeout ticks
-        // accumulates in `buf` until its newline arrives.
-        let at_eof = match reader.read_line(&mut buf) {
-            Ok(0) => true,
-            Ok(_) => !buf.ends_with('\n'), // EOF mid-line: serve, then stop
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                continue; // idle tick — re-check the shutdown flag
-            }
-            Err(_) => break,
-        };
-        let line = std::mem::take(&mut buf);
-        if !line.trim().is_empty() {
-            let response = match Request::from_line(&line) {
-                Err(e) => Response::Error(e.to_string()),
-                Ok(req) => {
-                    let is_shutdown = req == Request::Shutdown;
-                    let resp = dispatch(req, &registry, &xla_config);
-                    if is_shutdown {
-                        shutdown.store(true, Ordering::SeqCst);
-                    }
-                    resp
-                }
-            };
-            let mut out = response.to_json().to_string_compact();
-            out.push('\n');
-            if writer.write_all(out.as_bytes()).is_err() {
+    shutdown: Arc<AtomicBool>,
+    wake: WakePair,
+    inbox: Arc<Mutex<Vec<TcpStream>>>,
+    inboxes: Vec<Arc<Mutex<Vec<TcpStream>>>>,
+    wakes: Vec<WakeHandle>,
+    listener: Option<TcpListener>,
+    next_peer: usize,
+    max_line: usize,
+    coalesce: bool,
+    batch_cfg: BatcherConfig,
+    /// Token-indexed connections (`None` = free slot).
+    conns: Vec<Option<Conn>>,
+    /// Per-token generation counters (bumped on close).
+    gens: Vec<u64>,
+    free: Vec<usize>,
+    /// One size-or-deadline batcher per (model, op) with anything
+    /// pending.
+    batchers: HashMap<(String, CoalOp), Batcher<PendingRead>>,
+}
+
+impl Driver {
+    fn run(mut self) {
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut kinds: Vec<FdKind> = Vec::new();
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
                 break;
             }
+            fds.clear();
+            kinds.clear();
+            fds.push(PollFd::new(self.wake.reader_fd(), POLLIN));
+            kinds.push(FdKind::Wake);
+            if let Some(l) = &self.listener {
+                fds.push(PollFd::new(l.as_raw_fd(), POLLIN));
+                kinds.push(FdKind::Listener);
+            }
+            for (token, slot) in self.conns.iter().enumerate() {
+                let Some(c) = slot else { continue };
+                let backlog = c.out.len() - c.out_pos;
+                let mut ev = 0i16;
+                if !c.closing && backlog < OUTBUF_HIGH_WATER {
+                    ev |= POLLIN;
+                }
+                if backlog > 0 {
+                    ev |= POLLOUT;
+                }
+                if ev == 0 {
+                    continue;
+                }
+                fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+                kinds.push(FdKind::Conn(token));
+            }
+            // Sleep until readiness — or the oldest pending coalesced
+            // read's deadline, whichever comes first. With no pending
+            // batches this blocks indefinitely (wakeups come via the
+            // wake pair): zero idle CPU.
+            let timeout = self.poll_timeout_ms();
+            if poll_fds(&mut fds, timeout).is_err() {
+                break;
+            }
+            for i in 0..fds.len() {
+                match kinds[i] {
+                    FdKind::Wake => {
+                        if fds[i].readable() {
+                            self.wake.drain();
+                        }
+                    }
+                    FdKind::Listener => {
+                        if fds[i].readable() {
+                            self.accept_ready();
+                        }
+                    }
+                    FdKind::Conn(token) => {
+                        if fds[i].invalid() {
+                            self.drop_conn(token);
+                            continue;
+                        }
+                        if fds[i].writable() {
+                            self.pump(token);
+                        }
+                        if fds[i].readable() {
+                            self.read_conn(token);
+                        }
+                    }
+                }
+            }
+            self.take_inbox();
+            self.poll_batchers();
+            for token in 0..self.conns.len() {
+                self.pump(token);
+            }
         }
-        if at_eof {
-            break;
+        // Shutdown: answer every parked read, then briefly drain write
+        // buffers so clients get their in-flight responses.
+        self.flush_all_batchers();
+        let deadline = Instant::now() + SHUTDOWN_DRAIN;
+        loop {
+            for token in 0..self.conns.len() {
+                self.pump(token);
+            }
+            let backlog =
+                self.conns.iter().flatten().any(|c| c.out_pos < c.out.len());
+            if !backlog || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        log::debug!("driver {} exiting", self.id);
+    }
+
+    /// Milliseconds until the oldest coalescing deadline (-1 = sleep
+    /// until readiness).
+    fn poll_timeout_ms(&self) -> i32 {
+        let mut best: Option<Duration> = None;
+        for b in self.batchers.values() {
+            if let Some(d) = b.time_to_deadline() {
+                best = Some(match best {
+                    Some(cur) if cur <= d => cur,
+                    _ => d,
+                });
+            }
+        }
+        match best {
+            // Round up so we never wake *before* the deadline and spin.
+            Some(d) => ((d.as_nanos() + 999_999) / 1_000_000).min(1_000) as i32,
+            None => -1,
         }
     }
-    log::debug!("connection from {peer:?} closed");
+
+    fn accept_ready(&mut self) {
+        let Some(listener) = self.listener.take() else { return };
+        loop {
+            match listener.accept() {
+                Ok((s, _)) => self.place(s),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break, // transient (EMFILE etc.) — retry on next readiness
+            }
+        }
+        self.listener = Some(listener);
+    }
+
+    /// Deal a fresh connection round-robin across the driver pool.
+    fn place(&mut self, s: TcpStream) {
+        let target = self.next_peer % self.inboxes.len();
+        self.next_peer = self.next_peer.wrapping_add(1);
+        if target == self.id {
+            self.register(s);
+        } else {
+            self.inboxes[target].lock().unwrap().push(s);
+            self.wakes[target].wake();
+        }
+    }
+
+    /// Adopt connections other drivers dealt to us.
+    fn take_inbox(&mut self) {
+        let handed: Vec<TcpStream> = std::mem::take(&mut *self.inbox.lock().unwrap());
+        for s in handed {
+            self.register(s);
+        }
+    }
+
+    fn register(&mut self, s: TcpStream) {
+        if s.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = s.set_nodelay(true);
+        let token = match self.free.pop() {
+            Some(t) => t,
+            None => {
+                self.conns.push(None);
+                self.gens.push(0);
+                self.conns.len() - 1
+            }
+        };
+        self.conns[token] = Some(Conn {
+            stream: s,
+            gen: self.gens[token],
+            framer: LineFramer::new(self.max_line),
+            slots: VecDeque::new(),
+            first_seq: 0,
+            next_seq: 0,
+            out: Vec::new(),
+            out_pos: 0,
+            closing: false,
+        });
+    }
+
+    fn drop_conn(&mut self, token: usize) {
+        if self.conns[token].take().is_some() {
+            // Invalidate any SlotRef still parked in a batcher.
+            self.gens[token] = self.gens[token].wrapping_add(1);
+            self.free.push(token);
+        }
+    }
+
+    /// Drain every byte the socket has ready through the framer, then
+    /// handle the completed frames.
+    fn read_conn(&mut self, token: usize) {
+        let mut frames = Vec::new();
+        let mut dead = false;
+        {
+            let Some(c) = self.conns.get_mut(token).and_then(|s| s.as_mut()) else {
+                return;
+            };
+            let mut chunk = [0u8; 16 * 1024];
+            loop {
+                match c.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        // EOF mid-line: serve the truncated request,
+                        // then close once everything pending is written
+                        // (legacy server behavior).
+                        if let Some(f) = c.framer.finish() {
+                            frames.push(f);
+                        }
+                        c.closing = true;
+                        break;
+                    }
+                    Ok(n) => c.framer.feed(&chunk[..n], &mut frames),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dead {
+            self.drop_conn(token);
+            return;
+        }
+        for f in frames {
+            self.handle_frame(token, f);
+        }
+    }
+
+    fn handle_frame(&mut self, token: usize, frame: Frame) {
+        match frame {
+            Frame::Oversized => {
+                let started = Instant::now();
+                let Some(at) = self.push_slot(token) else { return };
+                let resp = Response::Error(format!(
+                    "protocol: request line exceeds {} bytes",
+                    self.max_line
+                ));
+                self.finish_slot(at, resp, TrafficClass::Control, started);
+            }
+            Frame::Line(line) => {
+                // Blank lines are skipped without a reply (legacy
+                // behavior).
+                if line.trim().is_empty() {
+                    return;
+                }
+                self.handle_line(token, line);
+            }
+        }
+    }
+
+    fn handle_line(&mut self, token: usize, line: String) {
+        let started = Instant::now();
+        let req = match Request::from_line(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                if let Some(at) = self.push_slot(token) {
+                    self.finish_slot(
+                        at,
+                        Response::Error(e.to_string()),
+                        TrafficClass::Control,
+                        started,
+                    );
+                }
+                return;
+            }
+        };
+        let class = req.traffic_class();
+        let Some(at) = self.push_slot(token) else { return };
+        if self.coalesce {
+            match req {
+                Request::Score { model, x } => {
+                    let item = PendingRead { at, x, queued_at: started };
+                    self.enqueue_read(model, CoalOp::Score, item);
+                    return;
+                }
+                Request::PredictSnapshot { model, features } => {
+                    let item = PendingRead { at, x: features, queued_at: started };
+                    self.enqueue_read(model, CoalOp::Predict, item);
+                    return;
+                }
+                other => return self.dispatch_inline(other, at, class, started),
+            }
+        }
+        self.dispatch_inline(req, at, class, started)
+    }
+
+    fn dispatch_inline(
+        &mut self,
+        req: Request,
+        at: SlotRef,
+        class: TrafficClass,
+        started: Instant,
+    ) {
+        // Barrier: a non-coalescable op must observe (and be observed
+        // by) every read already queued on this driver — flushing first
+        // keeps effect order identical to a sequential per-request
+        // loop. (Coalescing therefore only ever groups *consecutive*
+        // coalescable reads.)
+        self.flush_all_batchers();
+        let is_shutdown = req == Request::Shutdown;
+        let resp = dispatch(req, &self.registry, &self.xla_config);
+        self.finish_slot(at, resp, class, started);
+        if is_shutdown {
+            self.shutdown.store(true, Ordering::SeqCst);
+            for w in &self.wakes {
+                w.wake();
+            }
+            if let Some(c) = self.conns.get_mut(at.token).and_then(|s| s.as_mut()) {
+                if c.gen == at.gen {
+                    c.closing = true;
+                }
+            }
+        }
+    }
+
+    fn enqueue_read(&mut self, model: String, op: CoalOp, item: PendingRead) {
+        let cfg = self.batch_cfg;
+        let full = self
+            .batchers
+            .entry((model.clone(), op))
+            .or_insert_with(|| Batcher::new(cfg))
+            .push(item);
+        if let Some(batch) = full {
+            self.execute_batch(&model, op, batch.items);
+        }
+    }
+
+    /// Flush every batcher whose deadline has passed.
+    fn poll_batchers(&mut self) {
+        if self.batchers.is_empty() {
+            return;
+        }
+        let mut due = Vec::new();
+        for ((model, op), b) in self.batchers.iter_mut() {
+            if let Some(batch) = b.poll() {
+                due.push((model.clone(), *op, batch.items));
+            }
+        }
+        self.batchers.retain(|_, b| b.pending() > 0);
+        for (model, op, items) in due {
+            self.execute_batch(&model, op, items);
+        }
+    }
+
+    /// Unconditional flush (barrier before inline ops; shutdown).
+    fn flush_all_batchers(&mut self) {
+        if self.batchers.is_empty() {
+            return;
+        }
+        let mut due = Vec::new();
+        for ((model, op), b) in self.batchers.iter_mut() {
+            if let Some(batch) = b.flush() {
+                due.push((model.clone(), *op, batch.items));
+            }
+        }
+        self.batchers.clear();
+        for (model, op, items) in due {
+            self.execute_batch(&model, op, items);
+        }
+    }
+
+    fn execute_batch(&mut self, model: &str, op: CoalOp, items: Vec<PendingRead>) {
+        self.metrics.record_coalesced_batch(items.len() as u64);
+        let responses = coalesced_responses(&self.registry, model, op, &items);
+        debug_assert_eq!(responses.len(), items.len());
+        for (item, resp) in items.into_iter().zip(responses) {
+            self.finish_slot(item.at, resp, TrafficClass::Read, item.queued_at);
+        }
+    }
+
+    /// Reserve the next in-order response slot for `token`.
+    fn push_slot(&mut self, token: usize) -> Option<SlotRef> {
+        let c = self.conns.get_mut(token)?.as_mut()?;
+        let seq = c.next_seq;
+        c.next_seq += 1;
+        c.slots.push_back(None);
+        Some(SlotRef { token, gen: c.gen, seq })
+    }
+
+    /// Record latency and fill the slot (no-op if the connection died
+    /// or its token was reused meanwhile).
+    fn finish_slot(
+        &mut self,
+        at: SlotRef,
+        resp: Response,
+        class: TrafficClass,
+        started: Instant,
+    ) {
+        self.metrics.record_request_latency(class, started.elapsed());
+        let Some(c) = self.conns.get_mut(at.token).and_then(|s| s.as_mut()) else {
+            return;
+        };
+        if c.gen != at.gen {
+            return;
+        }
+        let Some(idx) = at.seq.checked_sub(c.first_seq) else { return };
+        if let Some(slot) = c.slots.get_mut(idx as usize) {
+            let mut line = resp.to_json().to_string_compact();
+            line.push('\n');
+            *slot = Some(line);
+        }
+    }
+
+    /// Move completed in-order responses into the write buffer and push
+    /// as many bytes as the socket accepts.
+    fn pump(&mut self, token: usize) {
+        let mut dead = false;
+        let done;
+        {
+            let Some(c) = self.conns.get_mut(token).and_then(|s| s.as_mut()) else {
+                return;
+            };
+            while matches!(c.slots.front(), Some(Some(_))) {
+                let line = c.slots.pop_front().flatten().expect("front checked Some");
+                c.first_seq += 1;
+                c.out.extend_from_slice(line.as_bytes());
+            }
+            while c.out_pos < c.out.len() {
+                match c.stream.write(&c.out[c.out_pos..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => c.out_pos += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if c.out_pos >= c.out.len() {
+                c.out.clear();
+                c.out_pos = 0;
+            } else if c.out_pos > 64 * 1024 {
+                // Reclaim the written prefix of a large backlog.
+                c.out.drain(..c.out_pos);
+                c.out_pos = 0;
+            }
+            done = c.closing && c.out.is_empty() && c.slots.is_empty();
+        }
+        if dead || done {
+            self.drop_conn(token);
+        }
+    }
+}
+
+/// Execute one coalesced block against the blocked read surfaces,
+/// producing responses **byte-identical** to per-request [`dispatch`]:
+/// same lookup order (router before spec, so a dropped model yields the
+/// identical "unknown model" text), same per-item validation strings,
+/// and the PR 5 batch kernels' bitwise guarantee for the values.
+fn coalesced_responses(
+    registry: &Registry,
+    model: &str,
+    op: CoalOp,
+    items: &[PendingRead],
+) -> Vec<Response> {
+    let all = |msg: String| -> Vec<Response> {
+        items.iter().map(|_| Response::Error(msg.clone())).collect()
+    };
+    let router = match registry.router(model) {
+        Ok(r) => r,
+        Err(e) => return all(e.to_string()),
+    };
+    let spec = match registry.spec(model) {
+        Ok(s) => s,
+        Err(e) => return all(e.to_string()),
+    };
+    let mut responses: Vec<Option<Response>> = match op {
+        CoalOp::Score => {
+            let dim = spec.n_features + spec.n_classes;
+            items
+                .iter()
+                .map(|it| {
+                    (it.x.len() != dim).then(|| {
+                        Response::Error(
+                            CoordError::Protocol(format!(
+                                "score expects the full joint vector ({dim} dims), got {}",
+                                it.x.len()
+                            ))
+                            .to_string(),
+                        )
+                    })
+                })
+                .collect()
+        }
+        CoalOp::Predict => items
+            .iter()
+            .map(|it| {
+                (it.x.len() != spec.n_features).then(|| {
+                    Response::Error(
+                        CoordError::Protocol(format!(
+                            "expected {} features, got {}",
+                            spec.n_features,
+                            it.x.len()
+                        ))
+                        .to_string(),
+                    )
+                })
+            })
+            .collect(),
+    };
+    let valid: Vec<usize> = (0..items.len()).filter(|&i| responses[i].is_none()).collect();
+    if !valid.is_empty() {
+        let xs: Vec<Vec<f64>> = valid.iter().map(|&i| items[i].x.clone()).collect();
+        match op {
+            CoalOp::Score => match router.score_batch_read(&xs) {
+                Ok(ds) => {
+                    for (&i, density) in valid.iter().zip(ds) {
+                        responses[i] = Some(Response::Density { density });
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for &i in &valid {
+                        responses[i] = Some(Response::Error(msg.clone()));
+                    }
+                }
+            },
+            CoalOp::Predict => match router.predict_batch_read(&xs) {
+                Ok(rows) => {
+                    for (&i, scores) in valid.iter().zip(rows) {
+                        let class = argmax(&scores);
+                        responses[i] = Some(Response::Scores { scores, class });
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for &i in &valid {
+                        responses[i] = Some(Response::Error(msg.clone()));
+                    }
+                }
+            },
+        }
+    }
+    responses.into_iter().map(|r| r.expect("every slot filled")).collect()
 }
 
 /// Argmax class of a score vector (0 for an empty one).
@@ -327,6 +962,8 @@ mod tests {
     use super::*;
     use crate::coordinator::metrics::Metrics;
     use crate::rng::Pcg64;
+    use std::io::BufRead;
+    use std::io::BufReader;
 
     fn client(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
         let stream = TcpStream::connect(addr).unwrap();

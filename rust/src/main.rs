@@ -38,7 +38,9 @@ fn main() {
             eprintln!(
                 "usage: figmn <datasets|train|serve|client|artifacts|version>\n\
                  \n  figmn train iris --delta 1 --beta 0.001 --algo fast\
-                 \n  figmn serve --addr 127.0.0.1:7464 --checkpoints ckpts/\
+                 \n  figmn serve --addr 127.0.0.1:7464 --checkpoints ckpts/ \
+                 \n              [--drivers N] [--max-line-bytes B] [--no-coalesce] \
+                 \n              [--batch-max B] [--batch-delay-ms MS]\
                  \n  figmn client 127.0.0.1:7464 '{{\"op\":\"ping\"}}'"
             );
             2
@@ -203,18 +205,38 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         }
     }
-    let cfg = ServerConfig { addr, xla_config: flags.get("xla").cloned() };
+    let parse_num = |key: &str| flags.get(key).and_then(|v| v.parse::<usize>().ok());
+    let mut cfg = ServerConfig {
+        addr,
+        xla_config: flags.get("xla").cloned(),
+        ..ServerConfig::default()
+    };
+    if let Some(n) = parse_num("drivers") {
+        cfg.drivers = n;
+    }
+    if let Some(n) = parse_num("max-line-bytes") {
+        cfg.max_line_bytes = n;
+    }
+    if flags.contains_key("no-coalesce") {
+        cfg.coalesce = false;
+    }
+    if let Some(n) = parse_num("batch-max") {
+        cfg.batch.max_batch = n.max(1);
+    }
+    if let Some(ms) = parse_num("batch-delay-ms") {
+        cfg.batch.max_delay = std::time::Duration::from_millis(ms as u64);
+    }
     match serve(Arc::new(registry), cfg) {
         Ok(server) => {
             println!("figmn coordinator listening on {}", server.local_addr);
             println!("(send {{\"op\":\"shutdown\"}} to stop)");
-            // Park until the acceptor exits (shutdown op).
-            loop {
+            // Park until a client's shutdown op flips the flag, then
+            // join the drivers (the event loop's wake pair makes this
+            // race-free for any bind address, 0.0.0.0 included).
+            while !server.shutdown_requested() {
                 std::thread::sleep(std::time::Duration::from_millis(200));
-                if std::net::TcpStream::connect(server.local_addr).is_err() {
-                    break;
-                }
             }
+            server.shutdown();
             0
         }
         Err(e) => {

@@ -1,0 +1,412 @@
+//! Event-loop serving transport: framing bounds, slow clients,
+//! race-free shutdown, coalescing deadline semantics, and the
+//! bitwise coalesced⇄per-request contract — all over real sockets.
+
+use figmn::coordinator::protocol::{Request, Response};
+use figmn::coordinator::server::dispatch;
+use figmn::coordinator::{
+    serve, BatcherConfig, Metrics, ModelSpec, Registry, Server, ServerConfig,
+};
+use figmn::gmm::{GmmConfig, KernelMode, SearchMode};
+use figmn::rng::Pcg64;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn client(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    // A wildcard-bound listener reports 0.0.0.0; connect via loopback.
+    let target = if addr.ip().is_unspecified() {
+        std::net::SocketAddr::new("127.0.0.1".parse().unwrap(), addr.port())
+    } else {
+        addr
+    };
+    let stream = TcpStream::connect(target).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (reader, stream)
+}
+
+fn roundtrip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    req: &Request,
+) -> Response {
+    let mut line = req.to_json().to_string_compact();
+    line.push('\n');
+    writer.write_all(line.as_bytes()).unwrap();
+    let mut buf = String::new();
+    reader.read_line(&mut buf).unwrap();
+    Response::from_line(&buf).unwrap()
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> Response {
+    let mut buf = String::new();
+    reader.read_line(&mut buf).unwrap();
+    Response::from_line(&buf).unwrap()
+}
+
+/// A trained 2-feature / 2-class model named "m" with a published
+/// snapshot covering all 64 learned points.
+fn trained_registry() -> Arc<Registry> {
+    trained_registry_with("m", 2, KernelMode::Strict, SearchMode::Strict)
+}
+
+fn trained_registry_with(
+    name: &str,
+    n_features: usize,
+    kernel: KernelMode,
+    search: SearchMode,
+) -> Arc<Registry> {
+    let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+    let gmm = GmmConfig::new(1)
+        .with_delta(0.5)
+        .with_beta(0.05)
+        .without_pruning()
+        .with_kernel_mode(kernel)
+        .with_search_mode(search);
+    registry
+        .create(
+            ModelSpec::new(name, n_features, 2)
+                .with_gmm(gmm)
+                .with_stds(vec![3.0; n_features])
+                .with_snapshot_interval(8),
+        )
+        .unwrap();
+    let router = registry.router(name).unwrap();
+    let mut rng = Pcg64::seed(11);
+    for i in 0..64 {
+        let c = i % 2;
+        let mut x = vec![c as f64 * 6.0 + rng.normal() * 0.5];
+        for _ in 1..n_features {
+            x.push(rng.normal() * 0.5);
+        }
+        router.learn(x, c).unwrap();
+    }
+    // Drain the worker queue, then wait until the snapshot covers the
+    // full prefix (64 is a multiple of the interval).
+    registry.stats(name).unwrap();
+    router.shards()[0]
+        .wait_snapshot_points(64, 5000)
+        .expect("snapshot never published");
+    registry
+}
+
+/// Joint vector (features + one-hot class block) for the 2-feature
+/// model.
+fn joint(a: f64, b: f64, class: usize) -> Vec<f64> {
+    let mut x = vec![a, b, 0.0, 0.0];
+    x[2 + class] = 1.0;
+    x
+}
+
+#[test]
+fn oversized_request_line_is_rejected_then_conn_recovers() {
+    let registry = trained_registry();
+    let cfg = ServerConfig { max_line_bytes: 1024, ..ServerConfig::default() };
+    let server = serve(registry, cfg).unwrap();
+    let (mut reader, mut writer) = client(server.local_addr);
+
+    // 5000 bytes without a newline blow the 1 KiB cap mid-line…
+    let big = vec![b'a'; 5000];
+    writer.write_all(&big).unwrap();
+    writer.write_all(b"\n").unwrap();
+    // …and the connection must resynchronize at the newline: the next
+    // request parses normally.
+    let mut line = Request::Ping.to_json().to_string_compact();
+    line.push('\n');
+    writer.write_all(line.as_bytes()).unwrap();
+
+    match read_response(&mut reader) {
+        Response::Error(e) => {
+            assert!(e.contains("exceeds"), "unexpected error text: {e}")
+        }
+        other => panic!("expected protocol error, got {other:?}"),
+    }
+    assert_eq!(read_response(&mut reader), Response::Pong);
+    server.shutdown();
+}
+
+#[test]
+fn split_line_request_is_reassembled() {
+    let registry = trained_registry();
+    let server = serve(registry, ServerConfig::default()).unwrap();
+    let (mut reader, mut writer) = client(server.local_addr);
+
+    // One request split across two writes with a pause between them,
+    // pipelined with a second complete request in the same final write.
+    writer.write_all(b"{\"op\":\"pi").unwrap();
+    writer.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    writer.write_all(b"ng\"}\n{\"op\":\"ping\"}\n").unwrap();
+
+    assert_eq!(read_response(&mut reader), Response::Pong);
+    assert_eq!(read_response(&mut reader), Response::Pong);
+    server.shutdown();
+}
+
+#[test]
+fn slowloris_client_does_not_stall_others_or_shutdown() {
+    let registry = trained_registry();
+    // One driver: the stalled socket and the healthy one share the same
+    // event loop thread — the strongest version of the claim.
+    let cfg = ServerConfig { drivers: 1, ..ServerConfig::default() };
+    let server = serve(registry, cfg).unwrap();
+
+    // The slowloris peer trickles a never-completed request line.
+    let (_slow_reader, mut slow) = client(server.local_addr);
+    slow.write_all(b"{\"op\":\"sc").unwrap();
+    slow.flush().unwrap();
+
+    // A healthy client must keep getting served promptly.
+    let (mut reader, mut writer) = client(server.local_addr);
+    let t0 = Instant::now();
+    for _ in 0..50 {
+        assert_eq!(roundtrip(&mut reader, &mut writer, &Request::Ping), Response::Pong);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "healthy client stalled behind slowloris: {:?}",
+        t0.elapsed()
+    );
+
+    // Trickle a few more bytes so the slow connection is mid-line at
+    // shutdown time, then prove shutdown still completes on deadline.
+    slow.write_all(b"ore\",\"model").unwrap();
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("shutdown stalled behind a slow client");
+}
+
+#[test]
+fn shutdown_within_deadline_bound_to_wildcard() {
+    let registry = trained_registry();
+    // The legacy server's shutdown poke (TcpStream::connect(local_addr))
+    // was racy for 0.0.0.0 binds; the wake pair must not care.
+    let cfg = ServerConfig { addr: "0.0.0.0:0".into(), ..ServerConfig::default() };
+    let server = serve(registry.clone(), cfg).unwrap();
+    assert!(server.local_addr.ip().is_unspecified());
+    let (mut reader, mut writer) = client(server.local_addr);
+    assert_eq!(roundtrip(&mut reader, &mut writer, &Request::Ping), Response::Pong);
+    let _idle = client(server.local_addr);
+
+    let t0 = Instant::now();
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("shutdown missed its deadline on a wildcard bind");
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    // Every driver joined ⇒ no thread still holds the registry.
+    assert_eq!(Arc::strong_count(&registry), 1, "a driver outlived shutdown");
+}
+
+#[test]
+fn lone_coalesced_read_flushes_within_max_delay() {
+    let registry = trained_registry();
+    let cfg = ServerConfig {
+        batch: BatcherConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(100),
+        },
+        ..ServerConfig::default()
+    };
+    let server = serve(registry.clone(), cfg).unwrap();
+    let (mut reader, mut writer) = client(server.local_addr);
+
+    // A lone read can never fill a 32-slot block: only the deadline can
+    // answer it.
+    let t0 = Instant::now();
+    let resp = roundtrip(
+        &mut reader,
+        &mut writer,
+        &Request::Score { model: "m".into(), x: joint(6.0, 0.0, 1) },
+    );
+    let elapsed = t0.elapsed();
+    match resp {
+        Response::Density { density } => assert!(density.is_finite()),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "lone read waited past any plausible deadline: {elapsed:?}"
+    );
+    let m = registry.metrics().snapshot();
+    assert!(m.coalesced_batches >= 1, "read bypassed the coalescer");
+    assert!(m.coalesced_reads >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn full_block_flushes_immediately() {
+    let registry = trained_registry();
+    // Deadline far beyond the test timeout: only the size trigger can
+    // answer a full block in time.
+    let cfg = ServerConfig {
+        drivers: 1,
+        batch: BatcherConfig { max_batch: 8, max_delay: Duration::from_secs(10) },
+        ..ServerConfig::default()
+    };
+    let server = serve(registry, cfg).unwrap();
+    let (mut reader, mut writer) = client(server.local_addr);
+
+    let mut pipelined = String::new();
+    for i in 0..8 {
+        let req = Request::Score { model: "m".into(), x: joint(i as f64, 0.0, i % 2) };
+        pipelined.push_str(&req.to_json().to_string_compact());
+        pipelined.push('\n');
+    }
+    let t0 = Instant::now();
+    writer.write_all(pipelined.as_bytes()).unwrap();
+    for _ in 0..8 {
+        match read_response(&mut reader) {
+            Response::Density { density } => assert!(density.is_finite()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "full block waited for the deadline: {:?}",
+        t0.elapsed()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_mixed_ops_preserve_order() {
+    let registry = trained_registry();
+    // Deadline 10 s: the scores below can only be answered promptly if
+    // the non-coalescable ops barrier-flush the batcher — and the
+    // responses must come back in request order.
+    let cfg = ServerConfig {
+        drivers: 1,
+        batch: BatcherConfig { max_batch: 32, max_delay: Duration::from_secs(10) },
+        ..ServerConfig::default()
+    };
+    let server = serve(registry, cfg).unwrap();
+    let (mut reader, mut writer) = client(server.local_addr);
+
+    let reqs = vec![
+        Request::Score { model: "m".into(), x: joint(6.0, 0.0, 1) },
+        Request::Ping,
+        Request::Score { model: "m".into(), x: joint(0.0, 0.0, 0) },
+        Request::PredictSnapshot { model: "m".into(), features: vec![6.0, 0.0] },
+        Request::Stats { model: "m".into() },
+        Request::Ping,
+    ];
+    let mut pipelined = String::new();
+    for r in &reqs {
+        pipelined.push_str(&r.to_json().to_string_compact());
+        pipelined.push('\n');
+    }
+    let t0 = Instant::now();
+    writer.write_all(pipelined.as_bytes()).unwrap();
+    let got: Vec<Response> = (0..reqs.len()).map(|_| read_response(&mut reader)).collect();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "barrier flush missing: {:?}",
+        t0.elapsed()
+    );
+    assert!(matches!(got[0], Response::Density { .. }), "{:?}", got[0]);
+    assert!(matches!(got[1], Response::Pong), "{:?}", got[1]);
+    assert!(matches!(got[2], Response::Density { .. }), "{:?}", got[2]);
+    assert!(matches!(got[3], Response::Scores { .. }), "{:?}", got[3]);
+    assert!(matches!(got[4], Response::Stats(_)), "{:?}", got[4]);
+    assert!(matches!(got[5], Response::Pong), "{:?}", got[5]);
+    server.shutdown();
+}
+
+/// The tentpole contract: responses served through the coalescing event
+/// loop are **byte-identical** to sequential per-request dispatch — in
+/// both kernel modes and both search modes, under concurrent clients.
+#[test]
+fn coalesced_responses_bitwise_equal_per_request() {
+    let combos = [
+        (KernelMode::Strict, SearchMode::Strict),
+        (KernelMode::Strict, SearchMode::TopC { c: 4 }),
+        (KernelMode::Fast, SearchMode::Strict),
+        (KernelMode::Fast, SearchMode::TopC { c: 4 }),
+    ];
+    for (kernel, search) in combos {
+        let registry = trained_registry_with("m", 6, kernel, search);
+        let cfg = ServerConfig {
+            batch: BatcherConfig { max_batch: 32, max_delay: Duration::from_millis(2) },
+            ..ServerConfig::default()
+        };
+        let server = serve(registry.clone(), cfg).unwrap();
+        let n_sent = hammer_and_compare(&registry, &server, 8, 24);
+        server.shutdown();
+        let m = registry.metrics().snapshot();
+        assert_eq!(
+            m.coalesced_reads, n_sent as u64,
+            "every single-query read must route through the coalescer \
+             (kernel {kernel:?}, search {search:?})"
+        );
+        assert!(m.coalesced_batches >= 1);
+        assert!(m.read_latency.count >= n_sent as u64, "histogram missed reads");
+
+        // Same traffic with coalescing disabled: the per-request event
+        // loop must satisfy the identical bitwise contract.
+        let registry = trained_registry_with("m", 6, kernel, search);
+        let cfg = ServerConfig { coalesce: false, ..ServerConfig::default() };
+        let server = serve(registry.clone(), cfg).unwrap();
+        hammer_and_compare(&registry, &server, 2, 12);
+        server.shutdown();
+        assert_eq!(registry.metrics().snapshot().coalesced_reads, 0);
+    }
+}
+
+/// Fire `threads × per_thread` mixed single-query reads at the server
+/// and assert every raw response line equals the sequential
+/// `dispatch()` serialization byte for byte. Returns how many requests
+/// were sent.
+fn hammer_and_compare(
+    registry: &Arc<Registry>,
+    server: &Server,
+    threads: usize,
+    per_thread: usize,
+) -> usize {
+    let addr = server.local_addr;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let registry = registry.clone();
+        handles.push(std::thread::spawn(move || {
+            let (mut reader, mut writer) = client(addr);
+            for i in 0..per_thread {
+                let req = if i % 2 == 0 {
+                    let mut x = vec![(t % 2) as f64 * 6.0, 0.25 * i as f64];
+                    x.resize(6, -0.5);
+                    x.extend_from_slice(&[0.0, 1.0]); // one-hot class 1
+                    Request::Score { model: "m".into(), x }
+                } else {
+                    let mut f = vec![(i % 2) as f64 * 6.0, -0.25 * t as f64];
+                    f.resize(6, 0.5);
+                    Request::PredictSnapshot { model: "m".into(), features: f }
+                };
+                let mut line = req.to_json().to_string_compact();
+                line.push('\n');
+                writer.write_all(line.as_bytes()).unwrap();
+                let mut raw = String::new();
+                reader.read_line(&mut raw).unwrap();
+                let expect =
+                    dispatch(req.clone(), &registry, &None).to_json().to_string_compact();
+                assert_eq!(
+                    raw.trim_end_matches('\n'),
+                    expect,
+                    "coalesced response diverged from sequential dispatch for {req:?}"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    threads * per_thread
+}

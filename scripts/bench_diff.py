@@ -47,6 +47,7 @@ DEFAULT_FILES = [
     "BENCH_scaling_dim.json",
     "BENCH_layout_bandwidth.json",
     "BENCH_scaling_k.json",
+    "BENCH_serving_concurrency.json",
 ]
 
 
