@@ -24,6 +24,13 @@
 //! `ComponentStore` arenas stay at fixed base addresses across creates
 //! when `max_components` is set.
 //!
+//! The **f32 replica** series times the replica tier's kernel
+//! (`quad_form_multi_f32`, at the detected SIMD tier) against the f64
+//! blocked fast kernel at B = 32: half the streamed bytes per sweep,
+//! gated to the replica contract's 1e-3 relative tolerance, with a
+//! full-mode ≥1.5× assertion at D ≥ 1024 where the f64 sweep runs from
+//! DRAM.
+//!
 //! Run: `cargo bench --bench layout_bandwidth`
 //! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench layout_bandwidth`
 //! Writes `BENCH_layout_bandwidth.json` (dense-vs-packed rows, the
@@ -568,6 +575,147 @@ fn main() {
         );
     }
 
+    // ---- f32 replica multi-query kernels ----------------------------
+    // The replica tier's bet: the blocked sweep is bandwidth-bound at
+    // large D, so streaming f32 triangles (half the bytes) should
+    // approach 2× the f64 blocked rate where the f64 sweep runs from
+    // DRAM. Tolerance gate: every f32 quadratic form within 1e-3
+    // relative of the f64 fast kernel (the replica contract's default,
+    // with orders of magnitude of headroom over f32's intrinsic error).
+    let tier = packed::simd_tier();
+    let rep_dims: &[usize] = if quick { &[16, 64] } else { &[64, 256, 1024, 3072] };
+    println!("\nf32 replica vs f64 blocked scoring kernels{tag} (simd tier: {tier})");
+    let t4 = TablePrinter::new(
+        &["D", "K", "B", "f64 blk q/s", "f32 blk q/s", "spd"],
+        &[6, 5, 4, 14, 14, 7],
+    );
+    let mut rep_rows: Vec<Json> = Vec::new();
+    let mut min_rep_speedup_large_d = f64::INFINITY;
+    for &d in rep_dims {
+        let kb = if d >= 2048 {
+            4
+        } else if d >= 512 {
+            16
+        } else if quick {
+            32
+        } else {
+            64
+        };
+        let arenas = build_packed(d, kb, 41);
+        let tri = packed::packed_len(d);
+        let nq = if quick { 32 } else { (64_000_000 / (kb * d * d)).clamp(32, 256) };
+        let mut rng = Pcg64::seed(43);
+        let es: Vec<f64> = (0..nq * d).map(|_| rng.normal()).collect();
+        // Narrow once, off the timed path — exactly what snapshot
+        // publish does for the arenas and the block loader for queries.
+        let mats32: Vec<f32> = arenas.mats.iter().map(|&v| v as f32).collect();
+        let es32: Vec<f32> = es.iter().map(|&v| v as f32).collect();
+        let mut wide = vec![0.0; 32 * d];
+        let mut wide32 = vec![0.0f32; 32 * d];
+        let mut out = vec![0.0; 32];
+        let bsz = 32usize;
+
+        let t0 = Instant::now();
+        let mut check = 0.0;
+        for qs in (0..nq).step_by(bsz) {
+            let b = bsz.min(nq - qs);
+            let block = &es[qs * d..(qs + b) * d];
+            for j in 0..kb {
+                packed::quad_form_multi_fast(
+                    &arenas.mats[j * tri..(j + 1) * tri],
+                    d,
+                    block,
+                    b,
+                    &mut wide[..b * d],
+                    &mut out[..b],
+                );
+                check += out[..b].iter().sum::<f64>();
+            }
+        }
+        let f64_rate = nq as f64 / t0.elapsed().as_secs_f64();
+        assert!(check.is_finite());
+
+        let t0 = Instant::now();
+        let mut check = 0.0;
+        for qs in (0..nq).step_by(bsz) {
+            let b = bsz.min(nq - qs);
+            let block = &es32[qs * d..(qs + b) * d];
+            for j in 0..kb {
+                packed::quad_form_multi_f32(
+                    &mats32[j * tri..(j + 1) * tri],
+                    d,
+                    block,
+                    b,
+                    &mut wide32[..b * d],
+                    &mut out[..b],
+                );
+                check += out[..b].iter().sum::<f64>();
+            }
+        }
+        let f32_rate = nq as f64 / t0.elapsed().as_secs_f64();
+        assert!(check.is_finite());
+        let speedup = f32_rate / f64_rate;
+
+        // Tolerance gate: one block against the f64 fast kernel, every
+        // component.
+        {
+            let b = bsz.min(nq);
+            let mut expect = vec![0.0; b];
+            for j in 0..kb {
+                packed::quad_form_multi_fast(
+                    &arenas.mats[j * tri..(j + 1) * tri],
+                    d,
+                    &es[..b * d],
+                    b,
+                    &mut wide[..b * d],
+                    &mut expect[..b],
+                );
+                packed::quad_form_multi_f32(
+                    &mats32[j * tri..(j + 1) * tri],
+                    d,
+                    &es32[..b * d],
+                    b,
+                    &mut wide32[..b * d],
+                    &mut out[..b],
+                );
+                for (q, (&a, &f)) in out[..b].iter().zip(expect.iter()).enumerate() {
+                    assert!(
+                        (a - f).abs() <= 1e-3 * (1.0 + a.abs().max(f.abs())),
+                        "D={d}: f32 replica diverged past 1e-3 at component {j} \
+                         query {q} ({a} vs {f})"
+                    );
+                }
+            }
+        }
+        if !quick && d >= 1024 {
+            min_rep_speedup_large_d = min_rep_speedup_large_d.min(speedup);
+        }
+
+        t4.row(&[
+            d.to_string(),
+            kb.to_string(),
+            bsz.to_string(),
+            format!("{f64_rate:.3e}"),
+            format!("{f32_rate:.3e}"),
+            format!("{speedup:5.2}×"),
+        ]);
+        rep_rows.push(Json::obj(vec![
+            ("d", Json::from(d)),
+            ("k", Json::from(kb)),
+            ("b", Json::from(bsz)),
+            ("f64_blocked_q_per_s", f64_rate.into()),
+            ("f32_blocked_q_per_s", f32_rate.into()),
+            ("f32_speedup", speedup.into()),
+        ]));
+    }
+    if !quick {
+        assert!(
+            min_rep_speedup_large_d >= 1.5,
+            "f32 replica kernels at B=32 must be ≥1.5× the f64 blocked rate at D ≥ 1024, \
+             got {min_rep_speedup_large_d:.2}×"
+        );
+    }
+
     // ---- ComponentStore reservation record --------------------------
     let (reserved_moved, reserved_cap) = reservation_probe(true);
     let (unreserved_moved, unreserved_cap) = reservation_probe(false);
@@ -586,6 +734,8 @@ fn main() {
         ("rows", Json::Arr(rows)),
         ("strict_vs_fast", Json::Arr(mode_rows)),
         ("blocked_multi_query", Json::Arr(blk_rows)),
+        ("simd_tier", tier.as_str().into()),
+        ("f32_replica", Json::Arr(rep_rows)),
         (
             "reservation",
             Json::obj(vec![

@@ -17,6 +17,10 @@
 //!   B = 32 sustains ≥ 2× the per-point `log_density` throughput at
 //!   D ≥ 256, K ≥ 32 — the single-thread bandwidth win of streaming
 //!   each packed component row once per query block.
+//! - **Replica series** (recorded, gated on tolerance only): the same
+//!   state served with the f32 read replica off vs on — the off arm is
+//!   the f64 blocked path, the on arm streams half the bytes; the hard
+//!   ≥1.5× kernel floor at D ≥ 1024 lives in `layout_bandwidth`.
 //!
 //! Run: `cargo bench --bench serving_read_path`
 //! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench serving_read_path`
@@ -25,7 +29,7 @@
 use figmn::bench_support::{grown_model, quick_mode, write_bench_json, TablePrinter};
 use figmn::coordinator::{Metrics, ModelSpec, Registry, RoutingPolicy};
 use figmn::gmm::supervised::supervised_figmn;
-use figmn::gmm::{GmmConfig, IncrementalMixture, KernelMode, ModelSnapshot};
+use figmn::gmm::{GmmConfig, IncrementalMixture, KernelMode, ModelSnapshot, ReplicaMode};
 use figmn::json::Json;
 use figmn::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -241,6 +245,79 @@ fn run_block_series(quick: bool, rows: &mut Vec<Json>) -> f64 {
     min_speedup_large_d
 }
 
+/// Replica-tier series: identical mixture state served through the
+/// query-blocked `score_batch` with the f32 read replica off vs on.
+/// The off arm is the f64 blocked path (the tier's baseline); the on
+/// arm streams half the bytes per sweep. Tolerance gate: replica-served
+/// densities within the contract's default 1e-3 relative of the f64
+/// path. The hard ≥1.5× kernel floor at D ≥ 1024 lives in
+/// `layout_bandwidth`; this series records the end-to-end snapshot
+/// surface, replica bytes included.
+fn run_replica_series(quick: bool, rows: &mut Vec<Json>) {
+    let dims: &[usize] = if quick { &[32] } else { &[64, 256, 1024] };
+    let k = 32;
+    let bsz = 32;
+    let t = TablePrinter::new(
+        &["D", "off q/s", "replica q/s", "speedup", "replica MB"],
+        &[6, 13, 13, 9, 11],
+    );
+    for &d in dims {
+        let m = grown_model(d, k, KernelMode::Fast, 19);
+        let off = m.snapshot();
+        let rep = m.with_replica_mode(ReplicaMode::f32_default()).snapshot();
+        assert!(!off.has_replica() && rep.has_replica());
+        let n = if quick { 64 } else { (64_000_000 / (k * d * d)).clamp(32, 512) };
+        let mut rng = Pcg64::seed(103);
+        let probes: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.normal() * 500.0).collect()).collect();
+
+        // Tolerance gate: the replica serves within the default
+        // contract of the f64 path on every probe.
+        let expect = off.score_batch(&probes);
+        for (i, (a, f)) in rep.score_batch(&probes).iter().zip(expect.iter()).enumerate() {
+            assert!(
+                (a - f).abs() <= 1e-3 * (1.0 + a.abs().max(f.abs())),
+                "D={d}: replica diverged past 1e-3 at probe {i} ({a} vs {f})"
+            );
+        }
+
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for chunk in probes.chunks(bsz) {
+            sink += off.score_batch(chunk).iter().sum::<f64>();
+        }
+        let off_rate = n as f64 / t0.elapsed().as_secs_f64();
+        assert!(sink.is_finite());
+
+        let t0 = Instant::now();
+        let mut sink = 0.0;
+        for chunk in probes.chunks(bsz) {
+            sink += rep.score_batch(chunk).iter().sum::<f64>();
+        }
+        let rep_rate = n as f64 / t0.elapsed().as_secs_f64();
+        assert!(sink.is_finite());
+        let speedup = rep_rate / off_rate;
+
+        t.row(&[
+            d.to_string(),
+            format!("{off_rate:.3e}"),
+            format!("{rep_rate:.3e}"),
+            format!("{speedup:7.2}×"),
+            format!("{:9.2}", rep.replica_bytes() as f64 / (1 << 20) as f64),
+        ]);
+        rows.push(Json::obj(vec![
+            ("d", Json::from(d)),
+            ("k", Json::from(k)),
+            ("b", Json::from(bsz)),
+            ("replica_off_q_per_s", off_rate.into()),
+            ("replica_on_q_per_s", rep_rate.into()),
+            ("replica_speedup", speedup.into()),
+            ("model_bytes", off.model_bytes().into()),
+            ("replica_bytes", rep.replica_bytes().into()),
+        ]));
+    }
+}
+
 fn main() {
     let quick = quick_mode();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -289,6 +366,14 @@ fn main() {
     let mut block_rows: Vec<Json> = Vec::new();
     let min_block_speedup = run_block_series(quick, &mut block_rows);
 
+    println!(
+        "\nreplica series — f32 read replica off vs on through score_batch \
+         (K=32, B=32, single thread{})",
+        if quick { ", quick mode" } else { "" }
+    );
+    let mut replica_rows: Vec<Json> = Vec::new();
+    run_replica_series(quick, &mut replica_rows);
+
     let payload = Json::obj(vec![
         ("bench", "serving_read_path".into()),
         ("dim_features", D.into()),
@@ -301,6 +386,7 @@ fn main() {
         ("speedup_1_to_4_scorers", speedup_1_to_4.into()),
         ("rows", Json::Arr(rows)),
         ("block_series", Json::Arr(block_rows)),
+        ("replica_series", Json::Arr(replica_rows)),
     ]);
     match write_bench_json("serving_read_path", &payload) {
         Ok(path) => println!("wrote {path}"),

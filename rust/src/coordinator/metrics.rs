@@ -4,7 +4,7 @@
 use crate::json::Json;
 use crate::stats::Welford;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Which latency histogram a request feeds (see
@@ -124,6 +124,9 @@ pub struct Metrics {
     snapshots_published: AtomicU64,
     snapshot_reads: AtomicU64,
     snapshot_fallbacks: AtomicU64,
+    /// Snapshot reads served from an f32 read replica (a subset of
+    /// `snapshot_reads`; 0 for replica-off models).
+    replica_reads: AtomicU64,
     /// Learn steps between consecutive publishes — the staleness bound
     /// actually observed (≤ snapshot_interval by construction).
     snapshot_lag: Mutex<Welford>,
@@ -138,6 +141,10 @@ pub struct Metrics {
     coalesced_reads: AtomicU64,
     /// …and how many blocked-kernel batches they collapsed into.
     coalesced_batches: AtomicU64,
+    /// Live-connection gauge per event-loop driver, registered by the
+    /// server at startup (shared with its accept-time balancer; absent
+    /// when no event-loop server runs on this hub).
+    driver_fds: OnceLock<Arc<Vec<AtomicU64>>>,
 }
 
 impl Metrics {
@@ -182,6 +189,18 @@ impl Metrics {
         self.snapshot_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A snapshot read was served from the f32 read replica.
+    pub fn record_replica_read(&self) {
+        self.replica_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Share the event-loop server's per-driver connection gauges so
+    /// stats can report them. First registration wins (one server per
+    /// hub); re-registering is a no-op.
+    pub fn register_driver_fds(&self, fds: Arc<Vec<AtomicU64>>) {
+        let _ = self.driver_fds.set(fds);
+    }
+
     /// One served request finished (event-loop server front end).
     pub fn record_request_latency(&self, class: TrafficClass, elapsed: Duration) {
         match class {
@@ -216,6 +235,7 @@ impl Metrics {
             snapshots_published: self.snapshots_published.load(Ordering::Relaxed),
             snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
             snapshot_fallbacks: self.snapshot_fallbacks.load(Ordering::Relaxed),
+            replica_reads: self.replica_reads.load(Ordering::Relaxed),
             snapshot_lag_mean_points: lag.mean(),
             snapshot_lag_max_points: if lag.count() > 0 { lag.max() } else { 0.0 },
             read_latency: self.read_latency.summary(),
@@ -223,6 +243,10 @@ impl Metrics {
             control_latency: self.control_latency.summary(),
             coalesced_reads: self.coalesced_reads.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            driver_fds: self
+                .driver_fds
+                .get()
+                .map_or_else(Vec::new, |g| g.iter().map(|c| c.load(Ordering::Relaxed)).collect()),
         }
     }
 }
@@ -242,6 +266,7 @@ pub struct MetricsSnapshot {
     pub snapshots_published: u64,
     pub snapshot_reads: u64,
     pub snapshot_fallbacks: u64,
+    pub replica_reads: u64,
     pub snapshot_lag_mean_points: f64,
     pub snapshot_lag_max_points: f64,
     pub read_latency: LatencySummary,
@@ -249,6 +274,9 @@ pub struct MetricsSnapshot {
     pub control_latency: LatencySummary,
     pub coalesced_reads: u64,
     pub coalesced_batches: u64,
+    /// Live connections currently owned by each event-loop driver
+    /// (empty when no event-loop server registered its gauges).
+    pub driver_fds: Vec<u64>,
 }
 
 impl MetricsSnapshot {
@@ -266,6 +294,7 @@ impl MetricsSnapshot {
             ("snapshots_published", (self.snapshots_published as usize).into()),
             ("snapshot_reads", (self.snapshot_reads as usize).into()),
             ("snapshot_fallbacks", (self.snapshot_fallbacks as usize).into()),
+            ("replica_reads", (self.replica_reads as usize).into()),
             ("snapshot_lag_mean_points", self.snapshot_lag_mean_points.into()),
             ("snapshot_lag_max_points", self.snapshot_lag_max_points.into()),
             (
@@ -278,6 +307,10 @@ impl MetricsSnapshot {
             ),
             ("coalesced_reads", (self.coalesced_reads as usize).into()),
             ("coalesced_batches", (self.coalesced_batches as usize).into()),
+            (
+                "driver_fds",
+                Json::Arr(self.driver_fds.iter().map(|&n| (n as usize).into()).collect()),
+            ),
         ])
     }
 }
@@ -309,12 +342,31 @@ mod tests {
         m.record_snapshot_publish(4);
         m.record_snapshot_read();
         m.record_snapshot_fallback();
+        m.record_replica_read();
         let s = m.snapshot();
         assert_eq!(s.snapshots_published, 2);
         assert_eq!(s.snapshot_reads, 1);
         assert_eq!(s.snapshot_fallbacks, 1);
+        assert_eq!(s.replica_reads, 1);
         assert_eq!(s.snapshot_lag_mean_points, 6.0);
         assert_eq!(s.snapshot_lag_max_points, 8.0);
+    }
+
+    #[test]
+    fn driver_fd_gauges_surface_in_snapshots() {
+        let m = Metrics::new();
+        assert!(m.snapshot().driver_fds.is_empty(), "no server registered yet");
+        let gauges: Arc<Vec<AtomicU64>> = Arc::new((0..3).map(|_| AtomicU64::new(0)).collect());
+        m.register_driver_fds(gauges.clone());
+        gauges[0].fetch_add(2, Ordering::Relaxed);
+        gauges[2].fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.driver_fds, vec![2, 0, 5]);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"driver_fds\":[2,0,5]"), "{j}");
+        // First registration wins.
+        m.register_driver_fds(Arc::new(vec![AtomicU64::new(99)]));
+        assert_eq!(m.snapshot().driver_fds, vec![2, 0, 5]);
     }
 
     #[test]

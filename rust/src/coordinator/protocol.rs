@@ -4,7 +4,7 @@
 
 use super::metrics::TrafficClass;
 use super::CoordError;
-use crate::gmm::SearchMode;
+use crate::gmm::{ReplicaMode, SearchMode};
 use crate::json::{parse, Json};
 use crate::linalg::KernelMode;
 
@@ -30,6 +30,13 @@ pub enum Request {
         /// (`"strict"` default / `"topc:C"`; see
         /// [`crate::gmm::SearchMode`]).
         search_mode: SearchMode,
+        /// Snapshot read-replica mode for every shard's model
+        /// (`"off"` / `"f32"` / `"f32:TOL"`; see
+        /// [`crate::gmm::ReplicaMode`]). `None` when the client omitted
+        /// the field — the server then applies its own default, so a
+        /// `--replica-mode` serve flag covers clients that predate the
+        /// field without overriding clients that set it explicitly.
+        replica_mode: Option<ReplicaMode>,
     },
     /// Present one labeled example.
     Learn { model: String, features: Vec<f64>, label: usize },
@@ -108,6 +115,17 @@ impl Request {
         }
     }
 
+    /// Fill in a server-side default for `create_model` requests that
+    /// left `replica_mode` unset. Explicit client choices — including
+    /// an explicit `"off"` — are never overridden. No-op for every
+    /// other request variant.
+    pub fn with_default_replica_mode(mut self, default: ReplicaMode) -> Request {
+        if let Request::CreateModel { replica_mode, .. } = &mut self {
+            replica_mode.get_or_insert(default);
+        }
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             Request::CreateModel {
@@ -120,18 +138,27 @@ impl Request {
                 shards,
                 kernel_mode,
                 search_mode,
-            } => Json::obj(vec![
-                ("op", "create_model".into()),
-                ("model", model.as_str().into()),
-                ("n_features", (*n_features).into()),
-                ("n_classes", (*n_classes).into()),
-                ("delta", (*delta).into()),
-                ("beta", (*beta).into()),
-                ("stds", Json::num_array(stds)),
-                ("shards", (*shards).into()),
-                ("kernel_mode", kernel_mode.as_str().into()),
-                ("search_mode", search_mode.to_wire().into()),
-            ]),
+                replica_mode,
+            } => {
+                let mut fields = vec![
+                    ("op", "create_model".into()),
+                    ("model", model.as_str().into()),
+                    ("n_features", (*n_features).into()),
+                    ("n_classes", (*n_classes).into()),
+                    ("delta", (*delta).into()),
+                    ("beta", (*beta).into()),
+                    ("stds", Json::num_array(stds)),
+                    ("shards", (*shards).into()),
+                    ("kernel_mode", kernel_mode.as_str().into()),
+                    ("search_mode", search_mode.to_wire().into()),
+                ];
+                // Emitted only when set, so "client left it to the
+                // server default" survives a round trip.
+                if let Some(mode) = replica_mode {
+                    fields.push(("replica_mode", mode.to_wire().into()));
+                }
+                Json::obj(fields)
+            }
             Request::Learn { model, features, label } => Json::obj(vec![
                 ("op", "learn".into()),
                 ("model", model.as_str().into()),
@@ -242,6 +269,18 @@ impl Request {
                         )
                     })?,
                 };
+                // Optional replica mode: absent → None (server default
+                // decides); present but unknown → protocol error.
+                let replica_mode = match doc.get("replica_mode") {
+                    None => None,
+                    Some(v) => Some(v.as_str().and_then(ReplicaMode::parse).ok_or_else(
+                        || {
+                            CoordError::Protocol(
+                                "bad replica_mode (want \"off\"/\"f32\"/\"f32:TOL\")".into(),
+                            )
+                        },
+                    )?),
+                };
                 Ok(Request::CreateModel {
                     model: model()?,
                     n_features,
@@ -255,6 +294,7 @@ impl Request {
                     shards: doc.get("shards").and_then(Json::as_usize).unwrap_or(1),
                     kernel_mode,
                     search_mode,
+                    replica_mode,
                 })
             }
             "learn" => Ok(Request::Learn {
@@ -401,6 +441,20 @@ mod tests {
                 shards: 2,
                 kernel_mode: KernelMode::Fast,
                 search_mode: SearchMode::TopC { c: 16 },
+                replica_mode: Some(ReplicaMode::f32_default()),
+            },
+            Request::CreateModel {
+                model: "m2".into(),
+                n_features: 2,
+                n_classes: 3,
+                delta: 0.5,
+                beta: 0.01,
+                stds: vec![1.0, 2.0],
+                shards: 1,
+                kernel_mode: KernelMode::Strict,
+                search_mode: SearchMode::Strict,
+                // The omitted-field state must survive a round trip too.
+                replica_mode: None,
             },
             Request::Learn { model: "m".into(), features: vec![0.5, -1.0], label: 2 },
             Request::Predict { model: "m".into(), features: vec![0.0, 1.0] },
@@ -462,12 +516,15 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::CreateModel { stds, shards, delta, kernel_mode, search_mode, .. } => {
+            Request::CreateModel {
+                stds, shards, delta, kernel_mode, search_mode, replica_mode, ..
+            } => {
                 assert_eq!(stds, vec![1.0; 3]);
                 assert_eq!(shards, 1);
                 assert!(delta > 0.0);
                 assert_eq!(kernel_mode, KernelMode::Strict);
                 assert_eq!(search_mode, SearchMode::Strict);
+                assert_eq!(replica_mode, None, "absent field leaves the server default");
             }
             _ => panic!("wrong variant"),
         }
@@ -511,6 +568,40 @@ mod tests {
             r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"kernel_mode":"warp"}"#,
         )
         .is_err());
+    }
+
+    #[test]
+    fn create_model_replica_mode_parses_and_rejects_unknown() {
+        let r = Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"replica_mode":"f32:0.005"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::CreateModel { replica_mode, .. } => {
+                assert_eq!(replica_mode, Some(ReplicaMode::F32 { tol: 0.005 }))
+            }
+            _ => panic!("wrong variant"),
+        }
+        // An explicit "off" is distinct from an absent field: it pins
+        // the model to replica-off even under a server f32 default.
+        let r = Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"replica_mode":"off"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::CreateModel { replica_mode, .. } => {
+                assert_eq!(replica_mode, Some(ReplicaMode::Off))
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Unknown modes and degenerate tolerances are protocol errors,
+        // not silent off fallbacks.
+        for bad in ["\"f16\"", "\"f32:0\"", "\"f32:\"", "\"f32:nan\"", "7"] {
+            let line = format!(
+                r#"{{"op":"create_model","model":"m","n_features":3,"n_classes":2,"replica_mode":{bad}}}"#
+            );
+            assert!(Request::from_line(&line).is_err(), "{line}");
+        }
     }
 
     #[test]

@@ -88,6 +88,14 @@ impl ModelSpec {
         self
     }
 
+    /// Select the snapshot read-replica mode for every shard's model
+    /// (carried in the spec's `GmmConfig`; see
+    /// [`crate::gmm::ReplicaMode`]).
+    pub fn with_replica_mode(mut self, mode: crate::gmm::ReplicaMode) -> Self {
+        self.gmm = self.gmm.with_replica_mode(mode);
+        self
+    }
+
     /// Attach a component-sharded engine to every shard of this model.
     /// Each shard gets its own pool; `EngineConfig::auto()` (threads=0)
     /// is resolved at create time as `cores / shards` so a sharded model
@@ -268,6 +276,9 @@ impl Registry {
             // Model memory footprint: total arena payload across shards
             // (packed-symmetric layout — about half the dense size).
             ("model_bytes", shard_stats.iter().map(|s| s.model_bytes).sum::<usize>().into()),
+            // f32 read-replica payload across shards (0 unless the
+            // model was created with a replica mode).
+            ("replica_bytes", shard_stats.iter().map(|s| s.replica_bytes).sum::<usize>().into()),
             ("coordinator", self.metrics.snapshot().to_json()),
             (
                 "per_shard",
@@ -456,6 +467,50 @@ mod tests {
         assert_eq!(router.predict(&[7.0, 7.0]).unwrap().len(), 3);
         assert_eq!(reg.spec("t").unwrap().gmm.search_mode, SearchMode::TopC { c: 4 });
         reg.drop_model("t").unwrap();
+    }
+
+    #[test]
+    fn replica_mode_spec_propagates_and_serves() {
+        use crate::gmm::ReplicaMode;
+        let reg = registry();
+        reg.create(
+            blob_spec("p")
+                .with_replica_mode(ReplicaMode::f32_default())
+                .with_snapshot_interval(4),
+        )
+        .unwrap();
+        let router = reg.router("p").unwrap();
+        let mut rng = Pcg64::seed(11);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        for i in 0..60 {
+            let c = i % 3;
+            router
+                .learn(
+                    vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7],
+                    c,
+                )
+                .unwrap();
+        }
+        assert_eq!(router.predict(&[7.0, 7.0]).unwrap().len(), 3);
+        assert_eq!(reg.spec("p").unwrap().gmm.replica_mode, ReplicaMode::f32_default());
+        router.shards()[0]
+            .wait_snapshot_points(60, 1000)
+            .expect("snapshot never caught up");
+        // The published snapshot carries an f32 replica, and the stats
+        // surface reports its footprint (half the f64 mean+mat payload).
+        let joint = vec![7.0, 7.0, 0.0, 1.0, 0.0];
+        assert!(router.score_read(&joint).unwrap().is_finite());
+        let stats = reg.stats("p").unwrap();
+        let replica_bytes = stats.get("replica_bytes").unwrap().as_usize().unwrap();
+        assert!(replica_bytes > 0, "replica-configured model reports replica bytes");
+        // Replica-off models report zero.
+        reg.create(blob_spec("p0").with_snapshot_interval(4)).unwrap();
+        let r0 = reg.router("p0").unwrap();
+        r0.learn(vec![0.0, 0.0], 0).unwrap();
+        let s0 = reg.stats("p0").unwrap();
+        assert_eq!(s0.get("replica_bytes").unwrap().as_usize(), Some(0));
+        reg.drop_model("p").unwrap();
+        reg.drop_model("p0").unwrap();
     }
 
     #[test]

@@ -259,6 +259,12 @@ impl Router {
         }
         if let Some(m) = &self.metrics {
             m.record_snapshot_read();
+            // Density surfaces on replica-carrying snapshots are served
+            // from the f32 arenas — count those reads separately so
+            // operators can see which tier their traffic hits.
+            if snaps.iter().any(|s| s.has_replica()) {
+                m.record_replica_read();
+            }
         }
         match &self.scorers {
             Some(pool) => {

@@ -11,7 +11,11 @@
 //! line gets a protocol-error `Response` and the connection resyncs at
 //! its newline), parsed requests dispatch onto the registry, and
 //! responses queue per connection in **request order** regardless of
-//! completion order.
+//! completion order. Fresh connections are dealt to whichever driver
+//! currently owns the fewest live sockets (shared per-driver gauges,
+//! charged at deal time and released on drop; surfaced as
+//! `driver_fds` in the metrics snapshot) — plain rotation drifts under
+//! mixed long-lived/short-lived clients.
 //!
 //! ## Read coalescing
 //!
@@ -54,12 +58,12 @@ use super::protocol::{Request, Response};
 use super::registry::{ModelSpec, Registry};
 use super::router::RoutingPolicy;
 use super::{CoordError, Result};
-use crate::gmm::GmmConfig;
+use crate::gmm::{GmmConfig, ReplicaMode};
 use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -89,6 +93,10 @@ pub struct ServerConfig {
     /// Size-or-deadline policy for coalesced reads (per driver, per
     /// model+op).
     pub batch: BatcherConfig,
+    /// Default [`ReplicaMode`] for `create_model` requests that omit
+    /// the `replica_mode` field (a client that sets it explicitly —
+    /// including `"off"` — always wins).
+    pub replica_mode: ReplicaMode,
 }
 
 impl Default for ServerConfig {
@@ -100,6 +108,7 @@ impl Default for ServerConfig {
             max_line_bytes: DEFAULT_MAX_LINE_BYTES,
             coalesce: true,
             batch: BatcherConfig::default(),
+            replica_mode: ReplicaMode::Off,
         }
     }
 }
@@ -163,6 +172,10 @@ pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
     let wakes: Vec<WakeHandle> = pairs.iter().map(|p| p.handle()).collect();
     let inboxes: Vec<Arc<Mutex<Vec<TcpStream>>>> =
         (0..n).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+    // Live-connection gauge per driver, shared by the accept-time
+    // balancer and (via the metrics hub) the stats surface.
+    let fd_counts: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    registry.metrics().register_driver_fds(fd_counts.clone());
     let mut drivers = Vec::with_capacity(n);
     let mut listener = Some(listener);
     for (id, wake) in pairs.into_iter().enumerate() {
@@ -171,15 +184,17 @@ pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
             registry: registry.clone(),
             metrics: registry.metrics().clone(),
             xla_config: cfg.xla_config.clone(),
+            default_replica: cfg.replica_mode,
             shutdown: shutdown.clone(),
             wake,
             inbox: inboxes[id].clone(),
             inboxes: inboxes.clone(),
             wakes: wakes.clone(),
             // Driver 0 owns the accept path; new connections are dealt
-            // round-robin to every driver through the inboxes.
+            // to whichever driver currently owns the fewest live
+            // sockets, through the inboxes.
             listener: listener.take(),
-            next_peer: 0,
+            fd_counts: fd_counts.clone(),
             max_line: cfg.max_line_bytes.max(1),
             coalesce: cfg.coalesce,
             batch_cfg: cfg.batch,
@@ -258,13 +273,20 @@ struct Driver {
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
     xla_config: Option<String>,
+    /// Server default for `create_model` requests without an explicit
+    /// `replica_mode`.
+    default_replica: ReplicaMode,
     shutdown: Arc<AtomicBool>,
     wake: WakePair,
     inbox: Arc<Mutex<Vec<TcpStream>>>,
     inboxes: Vec<Arc<Mutex<Vec<TcpStream>>>>,
     wakes: Vec<WakeHandle>,
     listener: Option<TcpListener>,
-    next_peer: usize,
+    /// Live-connection gauge per driver (shared across the pool): a
+    /// connection is charged to its driver when dealt and released when
+    /// dropped, so the accept path can deal to the least-loaded driver
+    /// instead of blindly rotating.
+    fd_counts: Arc<Vec<AtomicU64>>,
     max_line: usize,
     coalesce: bool,
     batch_cfg: BatcherConfig,
@@ -400,10 +422,24 @@ impl Driver {
         self.listener = Some(listener);
     }
 
-    /// Deal a fresh connection round-robin across the driver pool.
+    /// Deal a fresh connection to the driver with the fewest live
+    /// sockets (ties break toward the lowest id, so a single-driver
+    /// pool and an all-idle pool behave deterministically). Plain
+    /// round-robin drifts badly under mixed workloads: long-lived
+    /// streaming clients pile up on whichever drivers happened to be
+    /// next in rotation while short-lived probes churn the others.
     fn place(&mut self, s: TcpStream) {
-        let target = self.next_peer % self.inboxes.len();
-        self.next_peer = self.next_peer.wrapping_add(1);
+        let target = self
+            .fd_counts
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(self.id);
+        // Charge the connection at deal time, not at registration —
+        // otherwise a burst accepted in one poll round would see stale
+        // zeros and land on a single driver.
+        self.fd_counts[target].fetch_add(1, Ordering::Relaxed);
         if target == self.id {
             self.register(s);
         } else {
@@ -422,6 +458,9 @@ impl Driver {
 
     fn register(&mut self, s: TcpStream) {
         if s.set_nonblocking(true).is_err() {
+            // The connection was charged to this driver at deal time;
+            // release it since it never registers.
+            self.fd_counts[self.id].fetch_sub(1, Ordering::Relaxed);
             return;
         }
         let _ = s.set_nodelay(true);
@@ -451,6 +490,7 @@ impl Driver {
             // Invalidate any SlotRef still parked in a batcher.
             self.gens[token] = self.gens[token].wrapping_add(1);
             self.free.push(token);
+            self.fd_counts[self.id].fetch_sub(1, Ordering::Relaxed);
         }
     }
 
@@ -567,6 +607,7 @@ impl Driver {
         // coalescable reads.)
         self.flush_all_batchers();
         let is_shutdown = req == Request::Shutdown;
+        let req = req.with_default_replica_mode(self.default_replica);
         let resp = dispatch(req, &self.registry, &self.xla_config);
         self.finish_slot(at, resp, class, started);
         if is_shutdown {
@@ -839,12 +880,14 @@ fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Re
             shards,
             kernel_mode,
             search_mode,
+            replica_mode,
         } => {
             let gmm = GmmConfig::new(1)
                 .with_delta(delta)
                 .with_beta(beta)
                 .with_kernel_mode(kernel_mode)
-                .with_search_mode(search_mode);
+                .with_search_mode(search_mode)
+                .with_replica_mode(replica_mode.unwrap_or(ReplicaMode::Off));
             let mut spec = ModelSpec::new(&model, n_features, n_classes)
                 .with_gmm(gmm)
                 .with_stds(stds)
@@ -1002,6 +1045,7 @@ mod tests {
             shards: 1,
             kernel_mode: crate::linalg::KernelMode::Strict,
             search_mode: crate::gmm::SearchMode::Strict,
+            replica_mode: None,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
 
@@ -1065,6 +1109,7 @@ mod tests {
             shards: 1,
             kernel_mode: crate::linalg::KernelMode::Fast,
             search_mode: crate::gmm::SearchMode::TopC { c: 8 },
+            replica_mode: None,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
         let mut rng = Pcg64::seed(4);
@@ -1164,6 +1209,90 @@ mod tests {
         server.shutdown();
         // Handlers joined ⇒ every registry clone they held is gone.
         assert_eq!(Arc::strong_count(&registry), 1, "a handler outlived shutdown");
+    }
+
+    #[test]
+    fn accept_balancing_tracks_driver_fds() {
+        let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(Registry::new(metrics.clone()));
+        let cfg = ServerConfig { drivers: 2, ..ServerConfig::default() };
+        let server = serve(registry, cfg).unwrap();
+
+        // Four live connections dealt least-loaded across two drivers
+        // must split 2/2 (round-robin would too, but the gauges are
+        // what we're really pinning down here).
+        let conns: Vec<_> = (0..4).map(|_| client(server.local_addr)).collect();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let fds = metrics.snapshot().driver_fds;
+            if fds.len() == 2 && fds.iter().sum::<u64>() == 4 {
+                assert_eq!(fds, vec![2, 2], "accept dealing is unbalanced");
+                break;
+            }
+            assert!(Instant::now() < deadline, "gauges never reached 4: {fds:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // Dropping the clients must release every gauge.
+        drop(conns);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let fds = metrics.snapshot().driver_fds;
+            if fds.iter().sum::<u64>() == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "gauges never drained: {fds:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn server_default_replica_mode_applies_to_create() {
+        let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(Registry::new(metrics.clone()));
+        let cfg = ServerConfig {
+            replica_mode: crate::gmm::ReplicaMode::f32_default(),
+            ..ServerConfig::default()
+        };
+        let server = serve(registry.clone(), cfg).unwrap();
+        let (mut reader, mut writer) = client(server.local_addr);
+
+        // Omitted replica_mode → server default (f32).
+        let create = Request::CreateModel {
+            model: "m".into(),
+            n_features: 2,
+            n_classes: 2,
+            delta: 0.5,
+            beta: 0.05,
+            stds: vec![3.0, 3.0],
+            shards: 1,
+            kernel_mode: crate::linalg::KernelMode::Fast,
+            search_mode: crate::gmm::SearchMode::Strict,
+            replica_mode: None,
+        };
+        assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
+        assert_eq!(
+            registry.spec("m").unwrap().gmm.replica_mode,
+            crate::gmm::ReplicaMode::f32_default()
+        );
+
+        // Explicit "off" from the client wins over the server default.
+        let create = Request::CreateModel {
+            model: "m_off".into(),
+            n_features: 2,
+            n_classes: 2,
+            delta: 0.5,
+            beta: 0.05,
+            stds: vec![3.0, 3.0],
+            shards: 1,
+            kernel_mode: crate::linalg::KernelMode::Fast,
+            search_mode: crate::gmm::SearchMode::Strict,
+            replica_mode: Some(crate::gmm::ReplicaMode::Off),
+        };
+        assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
+        assert_eq!(registry.spec("m_off").unwrap().gmm.replica_mode, crate::gmm::ReplicaMode::Off);
+        server.shutdown();
     }
 
     #[test]

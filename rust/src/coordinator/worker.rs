@@ -145,6 +145,10 @@ pub struct WorkerStats {
     /// Arena payload bytes of this shard's live mixture (packed layout;
     /// see `gmm::ComponentStore::model_bytes`).
     pub model_bytes: usize,
+    /// f32 read-replica payload bytes of the latest published snapshot
+    /// (0 when the model runs replica-off or nothing is published yet;
+    /// see `gmm::ReplicaStore::replica_bytes`).
+    pub replica_bytes: usize,
 }
 
 impl WorkerStats {
@@ -156,6 +160,7 @@ impl WorkerStats {
             ("predicted", (self.predicted as usize).into()),
             ("xla_batches", (self.xla_batches as usize).into()),
             ("model_bytes", self.model_bytes.into()),
+            ("replica_bytes", self.replica_bytes.into()),
         ])
     }
 }
@@ -333,7 +338,8 @@ fn worker_loop(
         .with_beta(cfg.gmm.beta)
         .with_max_components(cfg.gmm.max_components)
         .with_kernel_mode(cfg.gmm.kernel_mode)
-        .with_search_mode(cfg.gmm.search_mode);
+        .with_search_mode(cfg.gmm.search_mode)
+        .with_replica_mode(cfg.gmm.replica_mode);
     joint_cfg = if cfg.gmm.prune {
         joint_cfg.with_pruning(cfg.gmm.v_min, cfg.gmm.sp_min)
     } else {
@@ -499,6 +505,7 @@ fn worker_loop(
                     predicted,
                     xla_batches,
                     model_bytes: clf.model().model_bytes(),
+                    replica_bytes: snapshot_cell.load().map_or(0, |s| s.replica_bytes()),
                 });
             }
             Some(Command::CheckpointJson { reply }) => {

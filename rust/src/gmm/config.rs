@@ -1,6 +1,7 @@
 //! Shared configuration for both IGMN variants.
 
 use super::candidates::SearchMode;
+use super::replica::ReplicaMode;
 use crate::linalg::KernelMode;
 use crate::stats::chi2_quantile;
 
@@ -46,6 +47,14 @@ pub struct GmmConfig {
     /// precision path only; conditional inference (`predict`) and the
     /// covariance baseline always run the full-K sweep.
     pub search_mode: SearchMode,
+    /// Whether published snapshots carry an f32 read replica and serve
+    /// the density surfaces from it: [`ReplicaMode::Off`] (default; the
+    /// read path is byte-identical to the pre-replica code) or
+    /// [`ReplicaMode::F32`] (half the bytes per scoring sweep,
+    /// tolerance-gated — see [`ReplicaMode`] for the contract). Affects
+    /// only immutable published snapshots; the write path and
+    /// conditional inference always run f64.
+    pub replica_mode: ReplicaMode,
     chi2_threshold: f64,
 }
 
@@ -64,6 +73,7 @@ impl GmmConfig {
             prune: true,
             kernel_mode: KernelMode::Strict,
             search_mode: SearchMode::Strict,
+            replica_mode: ReplicaMode::Off,
             chi2_threshold: 0.0,
         };
         cfg.recompute_threshold();
@@ -111,6 +121,13 @@ impl GmmConfig {
     /// [`GmmConfig::search_mode`]).
     pub fn with_search_mode(mut self, mode: SearchMode) -> Self {
         self.search_mode = mode;
+        self
+    }
+
+    /// Select the snapshot read-replica mode (see
+    /// [`GmmConfig::replica_mode`]).
+    pub fn with_replica_mode(mut self, mode: ReplicaMode) -> Self {
+        self.replica_mode = mode;
         self
     }
 
@@ -178,6 +195,15 @@ mod tests {
         let cfg = cfg.with_search_mode(SearchMode::TopC { c: 32 });
         assert_eq!(cfg.search_mode, SearchMode::TopC { c: 32 });
         assert_eq!(cfg.search_mode.to_wire(), "topc:32");
+    }
+
+    #[test]
+    fn replica_mode_defaults_off_and_round_trips() {
+        let cfg = GmmConfig::new(4);
+        assert_eq!(cfg.replica_mode, ReplicaMode::Off);
+        let cfg = cfg.with_replica_mode(ReplicaMode::F32 { tol: 1e-2 });
+        assert_eq!(cfg.replica_mode, ReplicaMode::F32 { tol: 1e-2 });
+        assert_eq!(cfg.replica_mode.to_wire(), "f32:0.01");
     }
 
     #[test]

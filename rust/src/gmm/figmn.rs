@@ -191,6 +191,16 @@ impl Figmn {
         }
     }
 
+    /// Select the read-replica mode for snapshots this model publishes
+    /// from here on (see [`super::ReplicaMode`]). Replicas are
+    /// read-path-only derived state, so flipping the mode on a trained
+    /// model is safe: the arenas, the write path, and all previously
+    /// exported snapshots are untouched.
+    pub fn with_replica_mode(mut self, mode: super::ReplicaMode) -> Self {
+        self.cfg.replica_mode = mode;
+        self
+    }
+
     /// Attach a component-sharded execution engine: the K components are
     /// partitioned across a fixed pool of worker threads for the learn
     /// and scoring passes. Results are bit-identical to the serial path

@@ -64,6 +64,19 @@
 //! score within tolerance) and is selectable per model over the
 //! coordinator protocol and the CLI.
 //!
+//! ## Read replicas: when the serving path goes f32
+//!
+//! Each model also carries a [`ReplicaMode`] (`GmmConfig::replica_mode`,
+//! default `Off`): with `F32 { tol }`, every published [`ModelSnapshot`]
+//! additionally materializes a [`ReplicaStore`] — f32 copies of the
+//! mean and packed-matrix arenas — and serves the density surfaces
+//! from it through the f32 multi-query kernels, halving bytes streamed
+//! per scoring sweep. The replica exists *only* on immutable published
+//! snapshots: the write path, conditional inference, and every `Strict`
+//! bit-identity contract stay f64 (see [`replica`] for the tolerance
+//! contract). Like the kernel mode, it round-trips through checkpoint
+//! v2 (additive `replica_mode` field), the protocol, and the CLI.
+//!
 //! [`SupervisedGmm`] layers the paper's "any element predicts any other
 //! element" autoassociative trick into a conventional classifier
 //! interface (features + one-hot class concatenated into the joint input
@@ -74,6 +87,7 @@ mod config;
 mod figmn;
 mod igmn;
 pub mod inference;
+pub mod replica;
 mod score_block;
 mod serialize;
 mod snapshot;
@@ -84,6 +98,7 @@ pub use candidates::{CandidateIndex, SearchMode};
 pub use config::GmmConfig;
 pub use figmn::Figmn;
 pub use igmn::Igmn;
+pub use replica::{ReplicaMode, ReplicaStore, DEFAULT_F32_TOL};
 pub use serialize::{CHECKPOINT_MIN_VERSION, CHECKPOINT_VERSION};
 pub use snapshot::ModelSnapshot;
 pub use store::{ComponentStore, MatKind};

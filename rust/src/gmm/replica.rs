@@ -1,0 +1,372 @@
+//! Compact f32 read replicas of the packed component arenas.
+//!
+//! The serving read path is memory-bandwidth-bound at large `D`: a
+//! scoring sweep streams `K·D(D+1)/2` packed doubles at ~1 flop/byte,
+//! so after the packed layout (PR 3) and query blocking (PR 5) the next
+//! win is streaming *fewer bytes*, not fewer flops. A [`ReplicaStore`]
+//! is an f32 copy of a snapshot's mean and packed-matrix arenas —
+//! half the bytes per sweep again — built once at snapshot publish and
+//! immutable thereafter (plain `Vec<f32>`, `Send + Sync`, no interior
+//! mutability, no raw pointers). The write path never sees it: live
+//! models stay f64, and `Strict`-mode bit-identity contracts are
+//! untouched because replicas are opt-in per model.
+//!
+//! ## Tolerance contract
+//!
+//! [`ReplicaMode::F32 { tol }`](ReplicaMode::F32) declares the accepted
+//! relative error of replica-served log-densities against the f64
+//! snapshot path — a *contract* parameter, enforced by the property
+//! tests and the `layout_bandwidth` bench gate rather than checked per
+//! query (exactly how [`KernelMode::Fast`](crate::linalg::KernelMode)'s
+//! ~1e-12 bound works). The f32 kernels' intrinsic error is
+//! `O(√D · 2⁻²⁴)` relative (≈3e-6 at D = 3072; see
+//! [`crate::linalg::packed`]), so the default tolerance
+//! [`DEFAULT_F32_TOL`] = 1e-3 has orders of magnitude of headroom.
+//! Replica scores are deterministic for a fixed detected
+//! [`SimdTier`](crate::linalg::SimdTier); across hosts whose detected
+//! tiers differ, bits may differ within the tolerance.
+//!
+//! Replicas serve the quadratic-form-bound density surfaces
+//! (`log_density`, `score_batch`, `posteriors`, `posteriors_batch`).
+//! Conditional inference (`predict*`, `class_scores*`) is
+//! Cholesky-bound, not bandwidth-bound, and always runs the f64 path;
+//! a frozen top-C candidate index likewise keeps its exact f64
+//! per-candidate contract and takes precedence on the surfaces it
+//! covers.
+
+use super::log_gaussian;
+use super::score_block::SCORE_BLOCK;
+use super::store::ComponentStore;
+use crate::linalg::packed;
+
+/// Default tolerance for a bare `"f32"` replica-mode flag: three
+/// decimal digits of relative accuracy on log-densities — loose enough
+/// to be honest about f32 at any supported `D`, tight enough that
+/// posterior argmaxes are unaffected in practice.
+pub const DEFAULT_F32_TOL: f64 = 1e-3;
+
+/// Whether (and how) a model's published snapshots carry a compact
+/// read replica.
+///
+/// Wire/CLI format: `"off"`, `"f32"` (= [`DEFAULT_F32_TOL`]), or
+/// `"f32:TOL"` with `TOL > 0` — following the `SearchMode` `"topc:C"`
+/// convention.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ReplicaMode {
+    /// No replica (the default): every read serves from the f64 arenas,
+    /// byte-identical to the pre-replica read path.
+    #[default]
+    Off,
+    /// Publish an f32 [`ReplicaStore`] with each snapshot and serve the
+    /// density surfaces from it, accepting `tol` relative error against
+    /// the f64 path (see the module docs for the contract).
+    F32 {
+        /// Accepted relative error on replica-served log-densities.
+        tol: f64,
+    },
+}
+
+impl ReplicaMode {
+    /// `F32` at the default tolerance — what a bare `"f32"` flag means.
+    pub fn f32_default() -> ReplicaMode {
+        ReplicaMode::F32 { tol: DEFAULT_F32_TOL }
+    }
+
+    /// Whether snapshots publish a replica at all.
+    pub fn is_on(&self) -> bool {
+        matches!(self, ReplicaMode::F32 { .. })
+    }
+
+    /// The configured tolerance, if replicas are on.
+    pub fn tol(&self) -> Option<f64> {
+        match self {
+            ReplicaMode::Off => None,
+            ReplicaMode::F32 { tol } => Some(*tol),
+        }
+    }
+
+    /// Parse a wire/CLI name; `None` for anything unknown (including
+    /// non-positive or non-finite tolerances).
+    pub fn parse(s: &str) -> Option<ReplicaMode> {
+        match s {
+            "off" => Some(ReplicaMode::Off),
+            "f32" => Some(ReplicaMode::f32_default()),
+            _ => s
+                .strip_prefix("f32:")
+                .and_then(|t| t.parse::<f64>().ok())
+                .filter(|t| t.is_finite() && *t > 0.0)
+                .map(|tol| ReplicaMode::F32 { tol }),
+        }
+    }
+
+    /// Wire name that [`ReplicaMode::parse`] round-trips exactly (float
+    /// `Display` prints the shortest round-tripping decimal).
+    pub fn to_wire(&self) -> String {
+        match self {
+            ReplicaMode::Off => "off".to_string(),
+            ReplicaMode::F32 { tol } => format!("f32:{tol}"),
+        }
+    }
+}
+
+impl std::fmt::Display for ReplicaMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_wire())
+    }
+}
+
+/// f32 copy of a snapshot's mean and packed-matrix arenas — the data a
+/// scoring sweep actually streams. `log_det`/`sp` stay on the f64
+/// [`ComponentStore`] (O(K) scalars, not worth narrowing), so a replica
+/// always rides beside its source store, never replaces it.
+#[derive(Debug, Clone)]
+pub struct ReplicaStore {
+    dim: usize,
+    tri: usize,
+    k: usize,
+    /// `K×D` f32 means, row per component.
+    means: Vec<f32>,
+    /// `K×D(D+1)/2` f32 packed upper triangles, row per component.
+    mats: Vec<f32>,
+}
+
+impl ReplicaStore {
+    /// Narrow the live arenas once — O(K·D²) straight-line conversion,
+    /// run at snapshot publish (never on the request path).
+    pub fn from_store(store: &ComponentStore) -> ReplicaStore {
+        let k = store.len();
+        let dim = store.dim();
+        let tri = store.mat_len();
+        let mut means = Vec::with_capacity(k * dim);
+        let mut mats = Vec::with_capacity(k * tri);
+        for j in 0..k {
+            means.extend(store.mean(j).iter().map(|&v| v as f32));
+            mats.extend(store.mat(j).iter().map(|&v| v as f32));
+        }
+        ReplicaStore { dim, tri, k, means, mats }
+    }
+
+    pub fn len(&self) -> usize {
+        self.k
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Component `j`'s f32 mean row.
+    pub fn mean32(&self, j: usize) -> &[f32] {
+        &self.means[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Component `j`'s f32 packed matrix row.
+    pub fn mat32(&self, j: usize) -> &[f32] {
+        &self.mats[j * self.tri..(j + 1) * self.tri]
+    }
+
+    /// Arena payload bytes this replica holds — exactly half the f64
+    /// mean+matrix bytes it mirrors.
+    pub fn replica_bytes(&self) -> usize {
+        (self.means.len() + self.mats.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Owned scratch for the replica block-scoring path — the f32 analog of
+/// `score_block::ScoreBlock`. Queries are narrowed to f32 once per
+/// block (not once per component), residuals and the `w = Λ·e` block
+/// stay f32 end to end, and only the final per-query log-density terms
+/// are f64.
+pub(crate) struct ReplicaBlock {
+    d: usize,
+    /// Narrowed query block, `rows×d`.
+    x32: Vec<f32>,
+    /// Residual block, `rows×d`.
+    e32: Vec<f32>,
+    /// Kernel scratch (`w = Λ·e` per query), `rows×d`.
+    w32: Vec<f32>,
+    /// Per-query terms, widened to f64.
+    q: Vec<f64>,
+}
+
+impl ReplicaBlock {
+    pub(crate) fn new(d: usize, queries: usize) -> ReplicaBlock {
+        let rows = queries.clamp(1, SCORE_BLOCK);
+        ReplicaBlock {
+            d,
+            x32: vec![0.0; rows * d],
+            e32: vec![0.0; rows * d],
+            w32: vec![0.0; rows * d],
+            q: vec![0.0; rows],
+        }
+    }
+
+    /// Narrow a single query to f32 (row 0) — the per-point surfaces'
+    /// loader.
+    pub(crate) fn load_query(&mut self, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        for (o, &v) in self.x32[..self.d].iter_mut().zip(x.iter()) {
+            *o = v as f32;
+        }
+    }
+
+    /// Narrow the block's queries to f32 — once per block.
+    pub(crate) fn load_queries(&mut self, xs: &[Vec<f64>]) {
+        let d = self.d;
+        debug_assert!(xs.len() * d <= self.x32.len());
+        for (bi, x) in xs.iter().enumerate() {
+            debug_assert_eq!(x.len(), d);
+            for (o, &v) in self.x32[bi * d..(bi + 1) * d].iter_mut().zip(x.iter()) {
+                *o = v as f32;
+            }
+        }
+    }
+
+    /// Per-component log-density terms for the loaded block:
+    /// `terms[bi] = ln N(x_bi; μ_j, Λ_j) + offset`, with the residual
+    /// and quadratic form in f32 and the `log_gaussian` assembly in f64
+    /// (`log_det` is the store's f64 value). Call
+    /// [`ReplicaBlock::load_queries`] first.
+    pub(crate) fn component_terms(
+        &mut self,
+        rep: &ReplicaStore,
+        j: usize,
+        log_det: f64,
+        b: usize,
+        offset: f64,
+    ) -> &[f64] {
+        let d = self.d;
+        debug_assert!(b * d <= self.x32.len());
+        let mean = rep.mean32(j);
+        for bi in 0..b {
+            let x = &self.x32[bi * d..(bi + 1) * d];
+            for ((e, &xv), &mv) in
+                self.e32[bi * d..(bi + 1) * d].iter_mut().zip(x.iter()).zip(mean.iter())
+            {
+                *e = xv - mv;
+            }
+        }
+        packed::quad_form_multi_f32(
+            rep.mat32(j),
+            d,
+            &self.e32[..b * d],
+            b,
+            &mut self.w32[..b * d],
+            &mut self.q[..b],
+        );
+        for t in self.q[..b].iter_mut() {
+            *t = log_gaussian(*t, log_det, d) + offset;
+        }
+        &self.q[..b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::{Figmn, GmmConfig, IncrementalMixture};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn replica_mode_parses_and_round_trips() {
+        assert_eq!(ReplicaMode::parse("off"), Some(ReplicaMode::Off));
+        assert_eq!(
+            ReplicaMode::parse("f32"),
+            Some(ReplicaMode::F32 { tol: DEFAULT_F32_TOL })
+        );
+        assert_eq!(
+            ReplicaMode::parse("f32:0.01"),
+            Some(ReplicaMode::F32 { tol: 0.01 })
+        );
+        assert_eq!(ReplicaMode::parse("f32:1e-4"), Some(ReplicaMode::F32 { tol: 1e-4 }));
+        // Rejections: empty/zero/negative/non-finite tolerances and
+        // unknown names.
+        for bad in ["", "f32:", "f32:0", "f32:-1", "f32:nan", "f32:inf", "f16", "on", "F32"] {
+            assert_eq!(ReplicaMode::parse(bad), None, "{bad:?} must not parse");
+        }
+        // `to_wire` round-trips exactly, default included.
+        for mode in [
+            ReplicaMode::Off,
+            ReplicaMode::f32_default(),
+            ReplicaMode::F32 { tol: 0.25 },
+            ReplicaMode::F32 { tol: 1e-6 },
+        ] {
+            assert_eq!(ReplicaMode::parse(&mode.to_wire()), Some(mode), "{mode}");
+        }
+        assert_eq!(ReplicaMode::default(), ReplicaMode::Off);
+        assert!(!ReplicaMode::Off.is_on());
+        assert!(ReplicaMode::f32_default().is_on());
+        assert_eq!(ReplicaMode::Off.tol(), None);
+        assert_eq!(ReplicaMode::f32_default().tol(), Some(DEFAULT_F32_TOL));
+        assert_eq!(ReplicaMode::Off.to_wire(), "off");
+        assert_eq!(ReplicaMode::F32 { tol: 0.001 }.to_wire(), "f32:0.001");
+    }
+
+    fn trained_store() -> Figmn {
+        let cfg = GmmConfig::new(4).with_delta(0.4).with_beta(0.1).without_pruning();
+        let mut m = Figmn::new(cfg, &[2.0; 4]);
+        let mut rng = Pcg64::seed(31);
+        for i in 0..120 {
+            let c = (i % 3) as f64 * 8.0;
+            let x: Vec<f64> = (0..4).map(|_| c + rng.normal()).collect();
+            m.learn(&x);
+        }
+        m
+    }
+
+    #[test]
+    fn replica_store_narrows_the_arenas() {
+        let m = trained_store();
+        let store = m.store();
+        let rep = ReplicaStore::from_store(store);
+        assert_eq!(rep.len(), store.len());
+        assert_eq!(rep.dim(), store.dim());
+        assert!(!rep.is_empty());
+        for j in 0..store.len() {
+            for (w, &v) in rep.mean32(j).iter().zip(store.mean(j).iter()) {
+                assert_eq!(*w, v as f32, "mean[{j}]");
+            }
+            for (w, &v) in rep.mat32(j).iter().zip(store.mat(j).iter()) {
+                assert_eq!(*w, v as f32, "mat[{j}]");
+            }
+        }
+        // Exactly half the f64 mean+matrix payload.
+        let f64_bytes = store.len() * (store.dim() + store.mat_len()) * 8;
+        assert_eq!(rep.replica_bytes(), f64_bytes / 2);
+    }
+
+    #[test]
+    fn replica_block_terms_match_f64_within_f32_tolerance() {
+        let m = trained_store();
+        let store = m.store();
+        let rep = ReplicaStore::from_store(store);
+        let d = store.dim();
+        let mut rng = Pcg64::seed(33);
+        let xs: Vec<Vec<f64>> =
+            (0..7).map(|_| (0..d).map(|_| rng.normal() * 4.0).collect()).collect();
+        let mut blk = ReplicaBlock::new(d, xs.len());
+        blk.load_queries(&xs);
+        let mut e = vec![0.0; d];
+        for j in 0..store.len() {
+            let terms =
+                blk.component_terms(&rep, j, store.log_det(j), xs.len(), 0.25).to_vec();
+            for (bi, x) in xs.iter().enumerate() {
+                crate::linalg::sub_into(x, store.mean(j), &mut e);
+                let expect = log_gaussian(
+                    packed::quad_form(store.mat(j), d, &e),
+                    store.log_det(j),
+                    d,
+                ) + 0.25;
+                let tol = 1e-3 * (1.0 + expect.abs());
+                assert!(
+                    (terms[bi] - expect).abs() <= tol,
+                    "j={j} q={bi}: f32 term {} vs f64 {expect}",
+                    terms[bi]
+                );
+            }
+        }
+    }
+}

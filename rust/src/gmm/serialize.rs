@@ -29,7 +29,7 @@
 //! accepts the dense `cov` per-component form under `"kind":"igmn"`.
 
 use super::store::ComponentStore;
-use super::{Figmn, GmmConfig, Igmn, IncrementalMixture, SearchMode};
+use super::{Figmn, GmmConfig, Igmn, IncrementalMixture, ReplicaMode, SearchMode};
 use crate::json::Json;
 use crate::linalg::{packed, KernelMode};
 
@@ -65,6 +65,22 @@ fn read_search_mode(j: &Json) -> Result<SearchMode, String> {
             .as_str()
             .and_then(SearchMode::parse)
             .ok_or_else(|| "bad search_mode".to_string()),
+    }
+}
+
+/// Read the optional `replica_mode` field (additive since the f32 read
+/// replicas landed): absent defaults to [`ReplicaMode::Off`] — the
+/// all-f64 read path every pre-replica reader ran — and
+/// present-but-invalid is rejected like any other corrupt field. The
+/// replica itself is never serialized; it is derived state rebuilt at
+/// the next snapshot publish from the restored f64 arenas.
+fn read_replica_mode(j: &Json) -> Result<ReplicaMode, String> {
+    match j.get("replica_mode") {
+        None => Ok(ReplicaMode::Off),
+        Some(v) => v
+            .as_str()
+            .and_then(ReplicaMode::parse)
+            .ok_or_else(|| "bad replica_mode".to_string()),
     }
 }
 
@@ -106,6 +122,11 @@ impl Figmn {
             // state (rebuilt from the arenas on load), so only the mode
             // selector travels. Old readers ignore it and score full-K.
             ("search_mode", cfg.search_mode.to_wire().into()),
+            // Additive since the f32 read replicas: the replica is
+            // derived state (rebuilt at snapshot publish from the f64
+            // arenas), so only the mode travels. Old readers ignore it
+            // and serve all-f64.
+            ("replica_mode", cfg.replica_mode.to_wire().into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -148,7 +169,8 @@ impl Figmn {
             .with_beta(beta)
             .with_max_components(max_components)
             .with_kernel_mode(read_kernel_mode(j)?)
-            .with_search_mode(read_search_mode(j)?);
+            .with_search_mode(read_search_mode(j)?)
+            .with_replica_mode(read_replica_mode(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -238,8 +260,10 @@ impl Igmn {
             ("max_components", cfg.max_components.into()),
             ("kernel_mode", cfg.kernel_mode.as_str().into()),
             // Config fidelity only — the covariance baseline always
-            // sweeps every component regardless of mode.
+            // sweeps every component and serves all-f64 regardless of
+            // the mode selectors.
             ("search_mode", cfg.search_mode.to_wire().into()),
+            ("replica_mode", cfg.replica_mode.to_wire().into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -281,7 +305,8 @@ impl Igmn {
             .with_beta(beta)
             .with_max_components(max_components)
             .with_kernel_mode(read_kernel_mode(j)?)
-            .with_search_mode(read_search_mode(j)?);
+            .with_search_mode(read_search_mode(j)?)
+            .with_replica_mode(read_replica_mode(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -335,7 +360,9 @@ impl Igmn {
 
 #[cfg(test)]
 mod tests {
-    use crate::gmm::{Figmn, GmmConfig, Igmn, IncrementalMixture, KernelMode, SearchMode};
+    use crate::gmm::{
+        Figmn, GmmConfig, Igmn, IncrementalMixture, KernelMode, ReplicaMode, SearchMode,
+    };
     use crate::json::parse;
     use crate::rng::Pcg64;
     use crate::testutil::assert_close;
@@ -519,6 +546,61 @@ mod tests {
             ["\"search_mode\":\"topc:0\"", "\"search_mode\":\"near\"", "\"search_mode\":7"];
         for bad_val in bad_vals {
             let bad = doc.to_string_compact().replace("\"search_mode\":\"topc:2\"", bad_val);
+            assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "{bad_val}");
+        }
+    }
+
+    #[test]
+    fn replica_mode_round_trips_and_defaults_off() {
+        // Replica-configured models write and restore their mode, and
+        // the restored model rebuilds its f32 replica at the next
+        // snapshot publish from the (exactly restored) f64 arenas.
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.5)
+            .with_beta(0.1)
+            .with_replica_mode(ReplicaMode::F32 { tol: 1e-2 });
+        let mut m = Figmn::new(cfg, &[2.0, 2.0]);
+        let mut rng = Pcg64::seed(23);
+        for _ in 0..80 {
+            let c = if rng.uniform() < 0.5 { 0.0 } else { 10.0 };
+            let x: Vec<f64> = (0..2).map(|_| c + rng.normal()).collect();
+            m.learn(&x);
+        }
+        let doc = m.to_json();
+        assert_eq!(doc.get("replica_mode").and_then(|v| v.as_str()), Some("f32:0.01"));
+        let restored = Figmn::from_json(&doc).unwrap();
+        assert_eq!(restored.config().replica_mode, ReplicaMode::F32 { tol: 1e-2 });
+        assert_eq!(restored.num_components(), m.num_components());
+        // Both snapshots carry a replica over identical arenas, so the
+        // f32 read path agrees bit-for-bit.
+        let (s1, s2) = (m.snapshot(), restored.snapshot());
+        assert!(s1.has_replica() && s2.has_replica());
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..2).map(|_| rng.normal() * 5.0).collect();
+            assert_eq!(s1.log_density(&x), s2.log_density(&x));
+            assert_eq!(s1.posteriors(&x), s2.posteriors(&x));
+        }
+        // A document without the field loads as Off — the
+        // additive-field degrade path for pre-replica readers/writers.
+        let stripped = match doc.clone() {
+            crate::json::Json::Obj(mut o) => {
+                o.remove("replica_mode");
+                crate::json::Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let as_off = Figmn::from_json(&stripped).unwrap();
+        assert_eq!(as_off.config().replica_mode, ReplicaMode::Off);
+        assert!(!as_off.snapshot().has_replica());
+        // Invalid values are rejected like any corrupt field.
+        let bad_vals = [
+            "\"replica_mode\":\"f32:0\"",
+            "\"replica_mode\":\"f16\"",
+            "\"replica_mode\":\"f32:\"",
+            "\"replica_mode\":7",
+        ];
+        for bad_val in bad_vals {
+            let bad = doc.to_string_compact().replace("\"replica_mode\":\"f32:0.01\"", bad_val);
             assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "{bad_val}");
         }
     }

@@ -20,6 +20,14 @@
 //! prefix — enforced by this module's tests and the
 //! `serving_read_path` bench.
 //!
+//! In [`super::ReplicaMode::F32`] the density/posterior surfaces serve
+//! from an f32 [`ReplicaStore`] materialized at construction — half the
+//! bytes per sweep, tolerance-equivalent (not bitwise) to the f64 path
+//! within the configured tolerance (see [`super::replica`]).
+//! Conditional inference always stays f64, and with `ReplicaMode::Off`
+//! (the default) every surface remains byte-identical to the
+//! pre-replica read path.
+//!
 //! In [`SearchMode::TopC`] the density/posterior surfaces instead walk
 //! a [`CandidateIndex`] **frozen at publish**: rebuilt deterministically
 //! from the copied arenas at construction and never mutated, so every
@@ -47,6 +55,7 @@ use super::candidates::{CandidateIndex, SearchMode};
 use super::inference::{
     precision_conditional, precision_conditional_multi_with, target_block_cholesky,
 };
+use super::replica::{ReplicaBlock, ReplicaStore};
 use super::score_block::{ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
 use super::supervised::clip_normalize;
@@ -86,6 +95,14 @@ pub struct ModelSnapshot {
     /// inner loop of the serving conditional path. Empty when the
     /// snapshot has no class split.
     split_factors: Vec<Cholesky>,
+    /// f32 copy of the mean/matrix arenas, materialized at construction
+    /// when `cfg.replica_mode` is [`super::ReplicaMode::F32`] — the
+    /// density surfaces then stream half the bytes per sweep, within
+    /// the configured tolerance of the f64 path (see [`super::replica`]
+    /// for the contract). `None` (the default) keeps every surface
+    /// byte-identical to the pre-replica read path. A frozen top-C
+    /// index takes precedence where both are configured.
+    replica: Option<ReplicaStore>,
 }
 
 impl ModelSnapshot {
@@ -103,6 +120,8 @@ impl ModelSnapshot {
             _ => None,
         };
         let split_factors = split_factors(&store, cfg.dim, &class_idx);
+        let replica = (cfg.replica_mode.is_on() && !store.is_empty())
+            .then(|| ReplicaStore::from_store(&store));
         ModelSnapshot {
             cfg,
             store,
@@ -114,6 +133,7 @@ impl ModelSnapshot {
             class_idx,
             index,
             split_factors,
+            replica,
         }
     }
 
@@ -160,6 +180,19 @@ impl ModelSnapshot {
     /// source model's `model_bytes`).
     pub fn model_bytes(&self) -> usize {
         self.store.model_bytes()
+    }
+
+    /// Whether this snapshot carries an f32 read replica.
+    pub fn has_replica(&self) -> bool {
+        self.replica.is_some()
+    }
+
+    /// f32 replica payload bytes (0 when [`ReplicaMode::Off`]) — the
+    /// extra memory the replica tier trades for halved read bandwidth.
+    ///
+    /// [`ReplicaMode::Off`]: super::ReplicaMode::Off
+    pub fn replica_bytes(&self) -> usize {
+        self.replica.as_ref().map_or(0, ReplicaStore::replica_bytes)
     }
 
     /// How many learn steps a model that has now seen `current_points`
@@ -221,6 +254,19 @@ impl ModelSnapshot {
                 .collect();
             return logsumexp_tree(&terms);
         }
+        if let Some(rep) = &self.replica {
+            // Replica tier: the same sweep over the f32 arenas —
+            // tolerance-equivalent to the f64 path below, half the
+            // bytes streamed (see `super::replica`).
+            let mut blk = ReplicaBlock::new(self.cfg.dim, 1);
+            blk.load_query(x);
+            let mut terms = Vec::with_capacity(self.store.len());
+            for j in 0..self.store.len() {
+                let offset = (self.store.sp(j) / self.total_sp).ln();
+                terms.push(blk.component_terms(rep, j, self.store.log_det(j), 1, offset)[0]);
+            }
+            return logsumexp_tree(&terms);
+        }
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
         let mut e = vec![0.0; d];
@@ -280,6 +326,39 @@ impl ModelSnapshot {
         out
     }
 
+    /// The replica tier's analog of [`ModelSnapshot::blocked_term_rows`]:
+    /// identical block/chunk structure, but each block's queries are
+    /// narrowed to f32 once and every component term comes from the f32
+    /// multi-query kernel over the replica arenas.
+    fn blocked_term_rows_f32<R>(
+        &self,
+        rep: &ReplicaStore,
+        xs: &[Vec<f64>],
+        offset: impl Fn(usize) -> f64,
+        mut reduce: impl FnMut(&[f64]) -> R,
+    ) -> Vec<R> {
+        let k = self.store.len();
+        let d = self.cfg.dim;
+        for x in xs {
+            assert_eq!(x.len(), d, "batch scoring: dimensionality mismatch");
+        }
+        let mut blk = ReplicaBlock::new(d, xs.len());
+        let mut terms = vec![0.0; SCORE_BLOCK.min(xs.len()) * k];
+        let mut out = Vec::with_capacity(xs.len());
+        for block in xs.chunks(SCORE_BLOCK) {
+            let b = block.len();
+            blk.load_queries(block);
+            for j in 0..k {
+                let q = blk.component_terms(rep, j, self.store.log_det(j), b, offset(j));
+                for (bi, &t) in q.iter().enumerate() {
+                    terms[bi * k + j] = t;
+                }
+            }
+            out.extend((0..b).map(|bi| reduce(&terms[bi * k..(bi + 1) * k])));
+        }
+        out
+    }
+
     /// Joint log-densities for a batch — bit-identical to mapping
     /// [`ModelSnapshot::log_density`], computed component-outer over
     /// [`SCORE_BLOCK`]-query blocks so each packed component row is
@@ -297,6 +376,14 @@ impl ModelSnapshot {
             // from concurrent scorer threads).
             return xs.iter().map(|x| self.log_density(x)).collect();
         }
+        if let Some(rep) = &self.replica {
+            return self.blocked_term_rows_f32(
+                rep,
+                xs,
+                |j| (self.store.sp(j) / self.total_sp).ln(),
+                logsumexp_tree,
+            );
+        }
         self.blocked_term_rows(
             xs,
             |j| (self.store.sp(j) / self.total_sp).ln(),
@@ -313,6 +400,11 @@ impl ModelSnapshot {
         }
         if self.active_index().is_some() {
             return xs.iter().map(|x| self.posteriors(x)).collect();
+        }
+        if let Some(rep) = &self.replica {
+            return self.blocked_term_rows_f32(rep, xs, |_| 0.0, |row| {
+                softmax_posteriors(row, self.store.sps())
+            });
         }
         self.blocked_term_rows(xs, |_| 0.0, |row| softmax_posteriors(row, self.store.sps()))
     }
@@ -444,6 +536,15 @@ impl ModelSnapshot {
                 out[j as usize] = p;
             }
             return out;
+        }
+        if let Some(rep) = &self.replica {
+            let mut blk = ReplicaBlock::new(self.cfg.dim, 1);
+            blk.load_query(x);
+            let mut ll = Vec::with_capacity(self.store.len());
+            for j in 0..self.store.len() {
+                ll.push(blk.component_terms(rep, j, self.store.log_det(j), 1, 0.0)[0]);
+            }
+            return softmax_posteriors(&ll, self.store.sps());
         }
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
@@ -618,6 +719,57 @@ mod tests {
         assert_eq!(snap.score_batch(&probes), expect);
         let expect_post: Vec<Vec<f64>> = probes.iter().map(|x| snap.posteriors(x)).collect();
         assert_eq!(snap.posteriors_batch(&probes), expect_post);
+    }
+
+    /// A replica-carrying snapshot serves the density surfaces from the
+    /// f32 arenas: within tolerance of the f64 path, deterministic, and
+    /// batch ≡ per-point per query; `ReplicaMode::Off` stays bitwise
+    /// identical to the pre-replica path (the full property sweep lives
+    /// in `tests/replica_equivalence.rs`).
+    #[test]
+    fn replica_snapshot_serves_within_tolerance() {
+        use crate::gmm::ReplicaMode;
+        let cfg = GmmConfig::new(3).with_delta(0.4).with_beta(0.1).without_pruning();
+        let mut plain = Figmn::new(cfg.clone(), &[2.0, 2.0, 2.0]);
+        let mut rep =
+            Figmn::new(cfg.with_replica_mode(ReplicaMode::f32_default()), &[2.0, 2.0, 2.0]);
+        let mut rng = Pcg64::seed(45);
+        let centers = [[0.0, 0.0, 0.0], [8.0, 8.0, 0.0], [0.0, 8.0, 8.0]];
+        let mut stream = Vec::new();
+        for i in 0..120 {
+            let c = &centers[i % 3];
+            let x: Vec<f64> = c.iter().map(|&v| v + rng.normal() * 0.6).collect();
+            assert_eq!(plain.learn(&x), rep.learn(&x), "write path must be unaffected");
+            stream.push(x);
+        }
+        let snap_f64 = plain.snapshot();
+        let snap_f32 = rep.snapshot();
+        assert!(!snap_f64.has_replica());
+        assert_eq!(snap_f64.replica_bytes(), 0);
+        assert!(snap_f32.has_replica());
+        assert!(snap_f32.replica_bytes() > 0);
+        let probes: Vec<Vec<f64>> = stream.iter().rev().take(40).cloned().collect();
+        let tol = ReplicaMode::f32_default().tol().unwrap();
+        for x in &probes {
+            let f64_ld = snap_f64.log_density(x);
+            let f32_ld = snap_f32.log_density(x);
+            let rel = (f32_ld - f64_ld).abs() / f64_ld.abs().max(1.0);
+            assert!(rel <= tol, "replica log_density out of tolerance: rel={rel}");
+        }
+        // Batch surfaces equal the per-point maps, bitwise (blocking
+        // never changes a query's f32 sequence either).
+        let expect: Vec<f64> = probes.iter().map(|x| snap_f32.log_density(x)).collect();
+        assert_eq!(snap_f32.score_batch(&probes), expect);
+        let expect_post: Vec<Vec<f64>> = probes.iter().map(|x| snap_f32.posteriors(x)).collect();
+        assert_eq!(snap_f32.posteriors_batch(&probes), expect_post);
+        // Conditional inference stays on the f64 path: both snapshots
+        // agree bit for bit.
+        for x in probes.iter().take(5) {
+            assert_eq!(
+                snap_f32.predict(&x[..2], &[0, 1], &[2]),
+                snap_f64.predict(&x[..2], &[0, 1], &[2])
+            );
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ mod vector;
 
 pub use cholesky::Cholesky;
 pub use matrix::Matrix;
+pub use packed::{simd_tier, SimdTier};
 pub use vector::{add, axpy, dot, norm2, outer_into, scale, sq_dist, sub, sub_into};
 
 /// Numerical tolerance used by the test-suite comparisons in this crate.
@@ -52,6 +53,16 @@ pub const TEST_EPS: f64 = 1e-9;
 /// The mode is carried per model (`gmm::GmmConfig::kernel_mode`),
 /// serialized with checkpoints, and selectable over the coordinator
 /// protocol and the CLI (`train --kernel-mode fast`).
+///
+/// Above `Fast`, the multi-query read path has a third rung that is
+/// *not* a `KernelMode`: the runtime-detected explicit-SIMD tier
+/// ([`SimdTier`], `Scalar < Fma < Avx512`) behind
+/// [`packed::quad_form_multi_simd`] and the f32 replica kernels. It is
+/// dispatch, not policy — models never select it, it degrades to the
+/// portable `Fast` kernels on CPUs lacking the features, and it keeps
+/// `Fast`'s ~1e-12 tolerance contract (see the [`packed`] module docs
+/// for the full ladder Strict → Fast → FMA/AVX-512 and the f32 replica
+/// tolerance contract).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KernelMode {
     /// Scalar reference loops — bit-identical to the dense formulation.

@@ -71,8 +71,44 @@
 //! four queries at a time (independent accumulator chains, so the four
 //! serial FP dependences overlap), with a per-query tail for ragged
 //! blocks.
+//!
+//! ## Explicit-SIMD tier ([`SimdTier`]) and f32 replica kernels
+//!
+//! Above `Fast` sits a runtime-dispatched ladder for the multi-query
+//! read path only: [`simd_tier`] probes the CPU once (cached in a
+//! `OnceLock`) and [`quad_form_multi_simd`] / [`quad_form_multi_f32`]
+//! route to `#[target_feature(enable = "avx2,fma")]` wrappers whose
+//! bodies are portable fused `mul_add` loops — LLVM compiles them with
+//! FMA contraction and full vector width, no intrinsics, no nightly.
+//! When the *build* itself enables `avx512f` (the CI
+//! `-C target-cpu=native` job on a capable host), detection reports
+//! [`SimdTier::Avx512`] and the same fused bodies run crate-wide at
+//! 512-bit width. On every other target the ladder degrades to the
+//! portable blocked kernels above — forcing a tier the CPU lacks via
+//! the `*_tier` entry points clamps down, never UB.
+//!
+//! The explicit tier keeps `Fast`'s tolerance contract: same math,
+//! fused/wider summation order, results within ~1e-12 relative of the
+//! `Fast` kernels and deterministic for a fixed tier.
+//!
+//! ### f32 tolerance contract
+//!
+//! The `*_f32` kernels score against f32 copies of the packed arenas
+//! (the snapshot read replicas of `gmm::ReplicaStore`): inputs,
+//! accumulation, and the assembled `w = A·e` are all f32 — halving the
+//! bytes streamed per sweep, which is the entire win on the
+//! bandwidth-bound path — and only the final quadratic form is widened
+//! to f64. Accuracy is therefore f32-grade: relative error
+//! `O(√D · 2⁻²⁴)` on the quadratic form (≈3e-6 at D = 3072), far
+//! inside the `ReplicaMode::F32 { tol }` gate (default 1e-3) but
+//! nowhere near f64 bit-identity. Results are deterministic for a
+//! fixed [`SimdTier`]; across hosts with different detected tiers the
+//! f32 bits may differ within the same tolerance — acceptable because
+//! replicas are opt-in and tolerance-gated, exactly like
+//! [`KernelMode::Fast`] is against `Strict`.
 
 use super::{KernelMode, Matrix};
+use std::sync::OnceLock;
 
 /// Packed length of a symmetric `d×d` matrix: `d·(d+1)/2`.
 #[inline]
@@ -541,6 +577,313 @@ pub fn gershgorin_floor(ap: &[f64], d: usize) -> f64 {
     floor.max(0.0)
 }
 
+// ---- Explicit-SIMD tier ------------------------------------------------
+//
+// See the module docs: a runtime-dispatched ladder above `Fast` for the
+// multi-query read path. The tier functions never change which queries
+// are scored or what math runs — only the summation order (fused
+// multiply-adds, wider lanes), so everything here is tolerance-bound to
+// the `Fast` kernels, and the f32 variants to the f64 ones.
+
+/// SIMD dispatch tier for the multi-query scoring kernels, ordered
+/// `Scalar < Fma < Avx512` so a requested tier can be clamped to the
+/// detected one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdTier {
+    /// Portable blocked kernels — the guaranteed fallback on every
+    /// target (and the only tier on non-x86-64).
+    Scalar,
+    /// AVX2 + FMA, runtime-detected on x86-64: `#[target_feature]`
+    /// wrappers around fused `mul_add` bodies.
+    Fma,
+    /// 512-bit vectors when the build enables `avx512f`
+    /// (`-C target-cpu=native` on a capable host); the fused bodies are
+    /// then compiled crate-wide at full width, no wrapper needed.
+    Avx512,
+}
+
+impl SimdTier {
+    /// Stable lower-case name (stats/logging).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Fma => "fma",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+}
+
+impl std::fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The best [`SimdTier`] this process can safely run — probed once,
+/// cached for the process lifetime.
+pub fn simd_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(detect_simd_tier)
+}
+
+fn detect_simd_tier() -> SimdTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if cfg!(target_feature = "avx512f") {
+            return SimdTier::Avx512;
+        }
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdTier::Fma;
+        }
+    }
+    SimdTier::Scalar
+}
+
+/// Fused dot product: eight independent `mul_add` lanes plus a fused
+/// scalar tail, combined in a fixed pairwise order. Compiled inside a
+/// `target_feature` wrapper (or an AVX-512 build) the `mul_add`s lower
+/// to hardware FMA; elsewhere this body is never selected (libm `fma`
+/// would be slow, not wrong).
+#[inline(always)]
+fn dot_fused(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f64; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = xa[l].mul_add(xb[l], *lane);
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder().iter()) {
+        tail = x.mul_add(*y, tail);
+    }
+    ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+        + tail
+}
+
+/// Fused f64 multi-query quadratic form body — `quad_form_multi_fast`'s
+/// row-outer sweep with `mul_add` accumulation and 8-wide lane blocks.
+/// `#[inline(always)]` so each `target_feature` wrapper recompiles it
+/// at that feature set's full vector width.
+#[inline(always)]
+fn quad_form_multi_f64_fused(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(es.len(), b * d, "quad_form_multi_simd: residual block shape");
+    assert_eq!(ws.len(), b * d, "quad_form_multi_simd: scratch shape");
+    assert_eq!(out.len(), b, "quad_form_multi_simd: out length");
+    ws.fill(0.0);
+    let mut rs = 0usize;
+    for i in 0..d {
+        let len = d - i;
+        let row = &ap[rs..rs + len];
+        for bi in 0..b {
+            let x = &es[bi * d..(bi + 1) * d];
+            let y = &mut ws[bi * d..(bi + 1) * d];
+            let diag_dot = dot_fused(row, &x[i..]);
+            let xi = x[i];
+            for (yj, &aij) in y[i + 1..].iter_mut().zip(row[1..].iter()) {
+                *yj = aij.mul_add(xi, *yj);
+            }
+            y[i] += diag_dot;
+        }
+        rs += len;
+    }
+    for (bi, o) in out.iter_mut().enumerate() {
+        *o = dot_fused(&es[bi * d..(bi + 1) * d], &ws[bi * d..(bi + 1) * d]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn quad_form_multi_f64_fma(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+) {
+    quad_form_multi_f64_fused(ap, d, es, b, ws, out)
+}
+
+/// Explicit-SIMD multi-query quadratic form: [`quad_form_multi_fast`]
+/// semantics at the best tier the CPU supports (within ~1e-12 relative
+/// of the `Fast` kernel — see the module docs). `ws` is the `b×d`
+/// w-block scratch.
+pub fn quad_form_multi_simd(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+) {
+    quad_form_multi_simd_tier(ap, d, es, b, ws, out, simd_tier())
+}
+
+/// Tier-forcing variant of [`quad_form_multi_simd`] (tests, benches).
+/// The requested tier is clamped to the detected one: forcing `Scalar`
+/// works everywhere and runs the portable `Fast` kernel bit-for-bit;
+/// forcing a tier the CPU lacks degrades safely, never UB.
+pub fn quad_form_multi_simd_tier(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+    tier: SimdTier,
+) {
+    let eff = tier.min(simd_tier());
+    match eff {
+        SimdTier::Scalar => quad_form_multi_fast(ap, d, es, b, ws, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `eff ≤ simd_tier()`, and `Fma` is only ever detected
+        // when avx2+fma are present on the running CPU.
+        SimdTier::Fma => unsafe { quad_form_multi_f64_fma(ap, d, es, b, ws, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Fma => quad_form_multi_fast(ap, d, es, b, ws, out),
+        // Only reachable when the build enables avx512f globally, so the
+        // plain body already compiles at full width.
+        SimdTier::Avx512 => quad_form_multi_f64_fused(ap, d, es, b, ws, out),
+    }
+}
+
+// ---- f32 replica kernels -----------------------------------------------
+
+/// f32 blocked dot: eight lanes plus tail, f32 accumulation. `FMA`
+/// selects fused `mul_add` lanes (only compiled into feature-gated or
+/// AVX-512 builds) vs plain mul+add (the portable fallback).
+#[inline(always)]
+fn dot_blocked_f32<const FMA: bool>(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            if FMA {
+                *lane = xa[l].mul_add(xb[l], *lane);
+            } else {
+                *lane += xa[l] * xb[l];
+            }
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder().iter()) {
+        if FMA {
+            tail = x.mul_add(*y, tail);
+        } else {
+            tail += x * y;
+        }
+    }
+    ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+        + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+        + tail
+}
+
+/// f32 multi-query quadratic form body — the row-outer sweep over an
+/// f32 packed triangle and `b×d` f32 residual block, f32 scratch `ws`,
+/// each query's final form widened to f64 on output.
+#[inline(always)]
+fn quad_form_multi_f32_body<const FMA: bool>(
+    ap: &[f32],
+    d: usize,
+    es: &[f32],
+    b: usize,
+    ws: &mut [f32],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(es.len(), b * d, "quad_form_multi_f32: residual block shape");
+    assert_eq!(ws.len(), b * d, "quad_form_multi_f32: scratch shape");
+    assert_eq!(out.len(), b, "quad_form_multi_f32: out length");
+    ws.fill(0.0);
+    let mut rs = 0usize;
+    for i in 0..d {
+        let len = d - i;
+        let row = &ap[rs..rs + len];
+        for bi in 0..b {
+            let x = &es[bi * d..(bi + 1) * d];
+            let y = &mut ws[bi * d..(bi + 1) * d];
+            let diag_dot = dot_blocked_f32::<FMA>(row, &x[i..]);
+            let xi = x[i];
+            for (yj, &aij) in y[i + 1..].iter_mut().zip(row[1..].iter()) {
+                if FMA {
+                    *yj = aij.mul_add(xi, *yj);
+                } else {
+                    *yj += aij * xi;
+                }
+            }
+            y[i] += diag_dot;
+        }
+        rs += len;
+    }
+    for (bi, o) in out.iter_mut().enumerate() {
+        *o = dot_blocked_f32::<FMA>(&es[bi * d..(bi + 1) * d], &ws[bi * d..(bi + 1) * d]) as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn quad_form_multi_f32_fma(
+    ap: &[f32],
+    d: usize,
+    es: &[f32],
+    b: usize,
+    ws: &mut [f32],
+    out: &mut [f64],
+) {
+    quad_form_multi_f32_body::<true>(ap, d, es, b, ws, out)
+}
+
+/// f32 multi-query quadratic forms over an f32 packed triangle at the
+/// best detected [`SimdTier`] — the replica read path's kernel. See the
+/// module docs for the tolerance contract; `ws` is a `b×d` f32 scratch.
+pub fn quad_form_multi_f32(
+    ap: &[f32],
+    d: usize,
+    es: &[f32],
+    b: usize,
+    ws: &mut [f32],
+    out: &mut [f64],
+) {
+    quad_form_multi_f32_tier(ap, d, es, b, ws, out, simd_tier())
+}
+
+/// Tier-forcing variant of [`quad_form_multi_f32`]; the requested tier
+/// is clamped to the detected one (see [`quad_form_multi_simd_tier`]).
+pub fn quad_form_multi_f32_tier(
+    ap: &[f32],
+    d: usize,
+    es: &[f32],
+    b: usize,
+    ws: &mut [f32],
+    out: &mut [f64],
+    tier: SimdTier,
+) {
+    let eff = tier.min(simd_tier());
+    match eff {
+        SimdTier::Scalar => quad_form_multi_f32_body::<false>(ap, d, es, b, ws, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `eff ≤ simd_tier()`, so avx2+fma are present.
+        SimdTier::Fma => unsafe { quad_form_multi_f32_fma(ap, d, es, b, ws, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Fma => quad_form_multi_f32_body::<false>(ap, d, es, b, ws, out),
+        SimdTier::Avx512 => quad_form_multi_f32_body::<true>(ap, d, es, b, ws, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -861,5 +1204,150 @@ mod tests {
             scale(&mut ap, s);
             assert_eq!(pack_symmetric(&dense), ap, "trial {trial}: scale bits differ");
         }
+    }
+
+    /// The explicit-SIMD tier keeps the `Fast` tolerance contract:
+    /// dispatched results are within 1e-12 relative of the `Fast`
+    /// kernel, forced `Scalar` IS the `Fast` kernel bit for bit, and a
+    /// forced tier above the detected one clamps down to the dispatched
+    /// result (the runtime fallback on CPUs lacking the feature).
+    #[test]
+    fn simd_tier_matches_fast_within_tolerance() {
+        let mut rng = Pcg64::seed(91);
+        for &b in &[1usize, 3, 8, 33] {
+            for n in [1usize, 2, 5, 16, 64] {
+                let m = random_sym(n, &mut rng);
+                let ap = pack_symmetric(&m);
+                let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+
+                let mut ws = vec![0.0; b * n];
+                let mut fast = vec![0.0; b];
+                quad_form_multi_fast(&ap, n, &es, b, &mut ws, &mut fast);
+
+                let mut simd = vec![0.0; b];
+                quad_form_multi_simd(&ap, n, &es, b, &mut ws, &mut simd);
+                for (bi, (f, s)) in fast.iter().zip(simd.iter()).enumerate() {
+                    let tol = 1e-12 * (1.0 + f.abs());
+                    assert!((f - s).abs() <= tol, "b={b} n={n} q={bi}: {f} vs {s}");
+                }
+
+                // Forced Scalar == the portable Fast kernel, bitwise.
+                let mut scalar = vec![0.0; b];
+                quad_form_multi_simd_tier(&ap, n, &es, b, &mut ws, &mut scalar, SimdTier::Scalar);
+                for bi in 0..b {
+                    assert!(
+                        scalar[bi].to_bits() == fast[bi].to_bits(),
+                        "b={b} n={n} q={bi}: forced-scalar bits differ from fast"
+                    );
+                }
+
+                // Forcing above the detected tier clamps to the detected
+                // one — identical bits to the auto dispatch.
+                let mut clamped = vec![0.0; b];
+                quad_form_multi_simd_tier(&ap, n, &es, b, &mut ws, &mut clamped, SimdTier::Avx512);
+                for bi in 0..b {
+                    assert!(
+                        clamped[bi].to_bits() == simd[bi].to_bits(),
+                        "b={b} n={n} q={bi}: clamped tier diverges from dispatch"
+                    );
+                }
+
+                // Determinism for a fixed tier: re-running gives the
+                // same bits.
+                let mut again = vec![0.0; b];
+                quad_form_multi_simd(&ap, n, &es, b, &mut ws, &mut again);
+                assert_eq!(
+                    simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    again.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "b={b} n={n}: simd tier not deterministic"
+                );
+            }
+        }
+    }
+
+    /// The f32 replica kernels match the f64 path to f32-grade relative
+    /// tolerance across tiers, and every tier agrees with every other
+    /// within the same bound.
+    #[test]
+    fn f32_kernels_match_f64_within_f32_tolerance() {
+        let mut rng = Pcg64::seed(92);
+        for &b in &[1usize, 4, 9, 33] {
+            for n in [1usize, 2, 5, 16, 64] {
+                let m = random_sym(n, &mut rng);
+                let ap = pack_symmetric(&m);
+                let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+                let ap32: Vec<f32> = ap.iter().map(|&v| v as f32).collect();
+                let es32: Vec<f32> = es.iter().map(|&v| v as f32).collect();
+
+                let mut expect = vec![0.0; b];
+                quad_form_multi(&ap, n, &es, b, &mut expect);
+
+                let mut ws32 = vec![0.0f32; b * n];
+                let mut got = vec![0.0; b];
+                quad_form_multi_f32(&ap32, n, &es32, b, &mut ws32, &mut got);
+                let mut scalar = vec![0.0; b];
+                quad_form_multi_f32_tier(
+                    &ap32,
+                    n,
+                    &es32,
+                    b,
+                    &mut ws32,
+                    &mut scalar,
+                    SimdTier::Scalar,
+                );
+                for bi in 0..b {
+                    let tol = 5e-4 * (1.0 + expect[bi].abs());
+                    assert!(
+                        (got[bi] - expect[bi]).abs() <= tol,
+                        "b={b} n={n} q={bi}: f32 {} vs f64 {}",
+                        got[bi],
+                        expect[bi]
+                    );
+                    assert!(
+                        (scalar[bi] - expect[bi]).abs() <= tol,
+                        "b={b} n={n} q={bi}: forced-scalar f32 {} vs f64 {}",
+                        scalar[bi],
+                        expect[bi]
+                    );
+                }
+
+                // Clamping and determinism, as for the f64 tier.
+                let mut clamped = vec![0.0; b];
+                quad_form_multi_f32_tier(
+                    &ap32,
+                    n,
+                    &es32,
+                    b,
+                    &mut ws32,
+                    &mut clamped,
+                    SimdTier::Avx512,
+                );
+                let mut again = vec![0.0; b];
+                quad_form_multi_f32(&ap32, n, &es32, b, &mut ws32, &mut again);
+                for bi in 0..b {
+                    assert!(
+                        clamped[bi].to_bits() == got[bi].to_bits(),
+                        "b={b} n={n} q={bi}: clamped f32 tier diverges from dispatch"
+                    );
+                    assert!(
+                        again[bi].to_bits() == got[bi].to_bits(),
+                        "b={b} n={n} q={bi}: f32 tier not deterministic"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Tier detection is consistent: cached, ordered, and `Scalar` at
+    /// worst.
+    #[test]
+    fn simd_tier_detection_is_stable() {
+        let t = simd_tier();
+        assert_eq!(t, simd_tier(), "tier must be cached/stable");
+        assert!(SimdTier::Scalar <= t);
+        assert!(SimdTier::Scalar < SimdTier::Fma && SimdTier::Fma < SimdTier::Avx512);
+        assert_eq!(SimdTier::Scalar.as_str(), "scalar");
+        assert_eq!(format!("{}", SimdTier::Fma), "fma");
+        assert_eq!(SimdTier::Avx512.to_string(), "avx512");
     }
 }

@@ -17,7 +17,7 @@ use figmn::data::Dataset;
 use figmn::engine::EngineConfig;
 use figmn::eval::{multiclass_auc, Stopwatch};
 use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
-use figmn::gmm::{GmmConfig, KernelMode, SearchMode};
+use figmn::gmm::{GmmConfig, KernelMode, ReplicaMode, SearchMode};
 use figmn::rng::Pcg64;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -40,7 +40,8 @@ fn main() {
                  \n  figmn train iris --delta 1 --beta 0.001 --algo fast\
                  \n  figmn serve --addr 127.0.0.1:7464 --checkpoints ckpts/ \
                  \n              [--drivers N] [--max-line-bytes B] [--no-coalesce] \
-                 \n              [--batch-max B] [--batch-delay-ms MS]\
+                 \n              [--batch-max B] [--batch-delay-ms MS] \
+                 \n              [--replica-mode off|f32[:TOL]]\
                  \n  figmn client 127.0.0.1:7464 '{{\"op\":\"ping\"}}'"
             );
             2
@@ -88,7 +89,7 @@ fn cmd_train(args: &[String]) -> i32 {
         eprintln!(
             "usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] \
              [--seed N] [--threads T] [--kernel-mode strict|fast] \
-             [--search-mode strict|topc:C]"
+             [--search-mode strict|topc:C] [--replica-mode off|f32[:TOL]]"
         );
         return 2;
     };
@@ -128,6 +129,18 @@ fn cmd_train(args: &[String]) -> i32 {
             }
         },
     };
+    // f32 read-replica tier for published snapshots (off by default;
+    // write-path arithmetic is unaffected — see figmn::gmm::ReplicaMode).
+    let replica_mode = match flags.get("replica-mode").map(String::as_str) {
+        None => ReplicaMode::Off,
+        Some(s) => match ReplicaMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("unknown --replica-mode '{s}' (want off|f32|f32:TOL with TOL > 0)");
+                return 2;
+            }
+        },
+    };
 
     let data = synth::generate(spec, seed);
     let stds = data.feature_stds();
@@ -155,7 +168,8 @@ fn cmd_train(args: &[String]) -> i32 {
         .with_delta(delta)
         .with_beta(beta)
         .with_kernel_mode(effective_mode)
-        .with_search_mode(effective_search);
+        .with_search_mode(effective_search)
+        .with_replica_mode(replica_mode);
     let mut sw = Stopwatch::new();
     let (scores, components): (Vec<Vec<f64>>, usize) = if algo == "orig" {
         let mut clf = supervised_igmn(cfg, &stds, data.n_classes);
@@ -225,6 +239,15 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     if let Some(ms) = parse_num("batch-delay-ms") {
         cfg.batch.max_delay = std::time::Duration::from_millis(ms as u64);
+    }
+    if let Some(s) = flags.get("replica-mode") {
+        match ReplicaMode::parse(s) {
+            Some(m) => cfg.replica_mode = m,
+            None => {
+                eprintln!("unknown --replica-mode '{s}' (want off|f32|f32:TOL with TOL > 0)");
+                return 2;
+            }
+        }
     }
     match serve(Arc::new(registry), cfg) {
         Ok(server) => {

@@ -74,6 +74,7 @@ fn dispatch_covers_full_protocol_surface() {
         shards: 2,
         kernel_mode: figmn::gmm::KernelMode::Strict,
         search_mode: figmn::gmm::SearchMode::Strict,
+        replica_mode: Some(figmn::gmm::ReplicaMode::f32_default()),
     };
     assert_eq!(dispatch(create.clone(), &registry, &xla), Response::Ok);
     // Duplicate create fails.

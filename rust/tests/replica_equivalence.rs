@@ -1,0 +1,181 @@
+//! f32 read-replica and explicit-SIMD tier equivalence — the replica
+//! tier's tolerance contract (`gmm::replica`).
+//!
+//! - **replica tolerance**: a snapshot published with
+//!   `ReplicaMode::F32 { tol }` serves the density surfaces within
+//!   `tol` relative of the f64 path, across dimensions spanning the
+//!   cache-resident to bandwidth-bound regimes and both kernel modes;
+//! - **off = byte-identical**: with `ReplicaMode::Off` (the default)
+//!   every surface reproduces the f64 read path bit for bit — the
+//!   pre-replica contract is untouched;
+//! - **tier equivalence**: the explicit-SIMD f64 kernels track the
+//!   `Fast` kernels within relative 1e-12 at every tier, and forcing
+//!   `Scalar` (or any tier above the detected one) degrades to the
+//!   portable kernel — never UB, never a panic.
+
+use figmn::gmm::{
+    Figmn, GmmConfig, IncrementalMixture, KernelMode, ReplicaMode, DEFAULT_F32_TOL,
+};
+use figmn::linalg::packed::{
+    self, quad_form_multi_f32, quad_form_multi_f32_tier, quad_form_multi_fast,
+    quad_form_multi_simd, quad_form_multi_simd_tier,
+};
+use figmn::linalg::{simd_tier, SimdTier};
+use figmn::rng::Pcg64;
+use figmn::testutil::random_spd;
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Train a small well-separated mixture at dimension `d` and return it
+/// with a probe set drawn from the same stream.
+fn trained(d: usize, mode: KernelMode, replica: ReplicaMode) -> (Figmn, Vec<Vec<f64>>) {
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .without_pruning()
+        .with_kernel_mode(mode)
+        .with_replica_mode(replica);
+    let mut m = Figmn::new(cfg, &vec![1.0; d]);
+    let mut rng = Pcg64::seed(d as u64 + 17);
+    // Few points at large D: learning is O(K·D²)/point and the replica
+    // contract doesn't care how converged the mixture is.
+    let points = if d >= 256 { 10 } else { 80 };
+    let mut stream = Vec::new();
+    for i in 0..points {
+        let c = (i % 2) as f64 * 8.0;
+        let x: Vec<f64> = (0..d).map(|_| c + rng.normal() * 0.5).collect();
+        m.learn(&x);
+        stream.push(x);
+    }
+    (m, stream)
+}
+
+/// D ∈ {2, 64, 256, 1024} × {Strict, Fast}: replica-served densities
+/// and posteriors track the f64 path within the configured tolerance,
+/// and the replica's blocked batch surfaces stay bit-identical to its
+/// own per-point path (block size never changes a query's FP sequence).
+#[test]
+fn replica_tracks_f64_within_tol_across_dims_and_modes() {
+    for d in [2usize, 64, 256, 1024] {
+        for mode in [KernelMode::Strict, KernelMode::Fast] {
+            let (m, stream) = trained(d, mode, ReplicaMode::f32_default());
+            let snap = m.snapshot();
+            assert!(snap.has_replica(), "D={d} {mode}: replica must publish");
+            assert!(snap.replica_bytes() > 0, "D={d} {mode}: replica bytes");
+            let n_probes = if d >= 256 { 4 } else { 16 };
+            let probes: Vec<Vec<f64>> = stream.iter().rev().take(n_probes).cloned().collect();
+            for (i, x) in probes.iter().enumerate() {
+                let f64_ld = m.log_density(x);
+                let rep_ld = snap.log_density(x);
+                assert!(
+                    rel_close(f64_ld, rep_ld, DEFAULT_F32_TOL),
+                    "D={d} {mode}: log_density[{i}] {rep_ld} vs f64 {f64_ld}"
+                );
+                for (pa, pb) in snap.posteriors(x).iter().zip(m.posteriors(x).iter()) {
+                    assert!(
+                        (pa - pb).abs() <= DEFAULT_F32_TOL,
+                        "D={d} {mode}: posterior[{i}] {pa} vs f64 {pb}"
+                    );
+                }
+            }
+            // Replica batch ≡ replica per-point, bitwise.
+            let per_point: Vec<f64> = probes.iter().map(|x| snap.log_density(x)).collect();
+            assert_eq!(snap.score_batch(&probes), per_point, "D={d} {mode}: batch");
+            let per_post: Vec<Vec<f64>> = probes.iter().map(|x| snap.posteriors(x)).collect();
+            assert_eq!(snap.posteriors_batch(&probes), per_post, "D={d} {mode}: posteriors");
+        }
+    }
+}
+
+/// `ReplicaMode::Off` keeps every surface byte-identical to the live
+/// f64 model, and the conditional surfaces stay f64 (bit-identical to
+/// the replica-off snapshot) even when a replica is published.
+#[test]
+fn off_is_byte_identical_and_conditionals_stay_f64() {
+    let d = 6;
+    let (m_off, stream) = trained(d, KernelMode::Fast, ReplicaMode::Off);
+    let (m_rep, _) = trained(d, KernelMode::Fast, ReplicaMode::f32_default());
+    let off = m_off.snapshot();
+    let rep = m_rep.snapshot();
+    assert!(!off.has_replica());
+    assert_eq!(off.replica_bytes(), 0);
+    // Replica mode is read-path-only: the two models trained on the
+    // same stream hold identical arenas.
+    assert_eq!(m_off.num_components(), m_rep.num_components());
+
+    let probes: Vec<Vec<f64>> = stream.iter().rev().take(12).cloned().collect();
+    let known_idx: Vec<usize> = (0..d - 1).collect();
+    let target_idx = [d - 1];
+    for x in &probes {
+        // Off ⇒ bitwise the live f64 path.
+        assert!(off.log_density(x) == m_off.log_density(x), "off diverged");
+        assert_eq!(off.posteriors(x), m_off.posteriors(x));
+        // predict stays Cholesky-bound f64 regardless of the replica.
+        assert_eq!(
+            rep.predict(&x[..d - 1], &known_idx, &target_idx),
+            off.predict(&x[..d - 1], &known_idx, &target_idx),
+            "predict must ignore the replica"
+        );
+    }
+    assert_eq!(off.score_batch(&probes), m_off.score_batch(&probes));
+}
+
+/// The explicit-SIMD f64 ladder: forcing `Scalar` reproduces the `Fast`
+/// kernel bit for bit, the auto tier and every forced tier (including
+/// tiers above the detected one, which clamp) stay within relative
+/// 1e-12, and the f32 kernel tracks f64 within its intrinsic tolerance
+/// at every tier.
+#[test]
+fn simd_tiers_track_fast_and_clamp_safely() {
+    let b = 7;
+    for d in [5usize, 64, 257] {
+        let mut rng = Pcg64::seed(d as u64);
+        let ap = packed::pack_symmetric(&random_spd(d, &mut rng));
+        let es: Vec<f64> = (0..b * d).map(|_| rng.normal()).collect();
+        let mut ws = vec![0.0; b * d];
+
+        let mut fast = vec![0.0; b];
+        quad_form_multi_fast(&ap, d, &es, b, &mut ws, &mut fast);
+
+        // Forced Scalar ≡ Fast, bitwise.
+        let mut scalar = vec![0.0; b];
+        quad_form_multi_simd_tier(&ap, d, &es, b, &mut ws, &mut scalar, SimdTier::Scalar);
+        assert_eq!(scalar, fast, "D={d}: forced Scalar must run the Fast kernel");
+
+        // Auto tier and every forced tier: within 1e-12, no UB/panic
+        // even when forcing above the detected tier (it clamps).
+        for tier in [SimdTier::Scalar, SimdTier::Fma, SimdTier::Avx512] {
+            let mut out = vec![0.0; b];
+            quad_form_multi_simd_tier(&ap, d, &es, b, &mut ws, &mut out, tier);
+            for (i, (&a, &f)) in out.iter().zip(fast.iter()).enumerate() {
+                assert!(rel_close(a, f, 1e-12), "D={d} {tier}: q[{i}] {a} vs fast {f}");
+            }
+        }
+        let mut auto = vec![0.0; b];
+        quad_form_multi_simd(&ap, d, &es, b, &mut ws, &mut auto);
+        let mut detected = vec![0.0; b];
+        quad_form_multi_simd_tier(&ap, d, &es, b, &mut ws, &mut detected, simd_tier());
+        assert_eq!(auto, detected, "D={d}: auto must dispatch the detected tier");
+
+        // f32 kernel: every tier tracks the f64 Fast result within the
+        // f32 intrinsic tolerance, and the auto dispatch is
+        // deterministic (two calls agree bitwise).
+        let ap32: Vec<f32> = ap.iter().map(|&v| v as f32).collect();
+        let es32: Vec<f32> = es.iter().map(|&v| v as f32).collect();
+        let mut ws32 = vec![0.0f32; b * d];
+        for tier in [SimdTier::Scalar, SimdTier::Fma, SimdTier::Avx512] {
+            let mut out = vec![0.0; b];
+            quad_form_multi_f32_tier(&ap32, d, &es32, b, &mut ws32, &mut out, tier);
+            for (i, (&a, &f)) in out.iter().zip(fast.iter()).enumerate() {
+                assert!(rel_close(a, f, 1e-3), "D={d} {tier}: f32 q[{i}] {a} vs f64 {f}");
+            }
+        }
+        let mut f32_a = vec![0.0; b];
+        let mut f32_b = vec![0.0; b];
+        quad_form_multi_f32(&ap32, d, &es32, b, &mut ws32, &mut f32_a);
+        quad_form_multi_f32(&ap32, d, &es32, b, &mut ws32, &mut f32_b);
+        assert_eq!(f32_a, f32_b, "D={d}: f32 auto dispatch must be deterministic");
+    }
+}
