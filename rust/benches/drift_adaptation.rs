@@ -1,0 +1,291 @@
+//! Mini-batch learn-pipeline experiment: learn throughput vs block size
+//! `b` at fixed K across dimensions, staged blocks vs the online
+//! per-point path — the empirical check that freezing a `K×B` distance
+//! tile actually amortizes the arena traffic (the online path re-streams
+//! every packed precision matrix per *point*; the blocked pass streams
+//! them once per *block*). Arms are re-materialized from the *same*
+//! arenas, so the comparison measures nothing but the learn mode.
+//!
+//! Correctness gates ride along (and run even in quick mode):
+//!   - `MiniBatch{b: 1}` with decay off bit-identical to `Online`
+//!     across 1/2 worker threads,
+//!   - `MiniBatch{b: 8}` bit-identical across 1/2/4 worker threads,
+//!   - decay + max-age recovers post-shift accuracy on the adversarial
+//!     mean-swap `drift_stream` while the non-decayed model does not.
+//! The gates are recorded in the JSON `gates` array; the CI bench-diff
+//! step fails the job when any gate reports `pass: false`.
+//!
+//! Acceptance target (full mode): ≥ 2× learn throughput at D ≥ 256
+//! with b = 32 vs the online path.
+//!
+//! Run: `cargo bench --bench drift_adaptation`
+//! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench drift_adaptation`
+//! Writes `BENCH_drift_adaptation.json`.
+
+use figmn::bench_support::{
+    quick_mode, rematerialize_learn_mode, synthetic_centers, synthetic_grown_model, time_once,
+    write_bench_json, TablePrinter,
+};
+use figmn::data::synth::{drift_stream, DriftSpec};
+use figmn::engine::EngineConfig;
+use figmn::gmm::supervised::supervised_figmn;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, LearnMode, SearchMode};
+use figmn::json::Json;
+use figmn::rng::Pcg64;
+
+const SEED: u64 = 42;
+const BLOCK_SIZES: [usize; 3] = [1, 8, 32];
+
+/// Update stream: points cycling the model's centers with small noise,
+/// so every learn takes the update path in both modes and K stays put.
+fn near_center_stream(centers: &[Vec<f64>], n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n)
+        .map(|i| centers[i % centers.len()].iter().map(|&c| c + rng.normal() * 0.5).collect())
+        .collect()
+}
+
+/// One measured/gated arm: the shared master arenas under `mode`, with
+/// an optional worker pool.
+fn learn_arm(master: &Figmn, mode: LearnMode, threads: usize) -> Figmn {
+    let mut m = rematerialize_learn_mode(master, mode);
+    if threads > 1 {
+        m.set_engine(Some(EngineConfig::new(threads)));
+    }
+    m
+}
+
+/// Bitwise arena comparison. Non-panicking: gate results must reach
+/// the JSON payload (the CI bench-diff step keys off `pass: false`)
+/// before `main` aborts, so mismatches print and return `false`.
+fn models_identical(a: &Figmn, b: &Figmn, tag: &str) -> bool {
+    if a.num_components() != b.num_components() {
+        println!("  MISMATCH {tag}: K {} vs {}", a.num_components(), b.num_components());
+        return false;
+    }
+    for j in 0..a.num_components() {
+        let same = a.component_mean(j) == b.component_mean(j)
+            && a.store().mat(j) == b.store().mat(j)
+            && a.component_log_det(j) == b.component_log_det(j)
+            && a.component_stats(j) == b.component_stats(j);
+        if !same {
+            println!("  MISMATCH {tag}: component {j} diverged");
+            return false;
+        }
+    }
+    true
+}
+
+/// The exactness gates plus the drift-recovery gate. Panicking inside a
+/// gate would skip the JSON write, so gates run first and `main`
+/// asserts after the payload is on disk.
+fn run_gates() -> (Vec<(String, bool)>, f64, f64) {
+    let d = 32;
+    let k = 32;
+    let master = synthetic_grown_model(d, k, SearchMode::Strict, SEED);
+    let centers = synthetic_centers(d, k, SEED);
+    let stream = near_center_stream(&centers, 200, 9);
+    let mut gates = Vec::new();
+
+    // b = 1, decay off ≡ online, bit for bit, serial and pooled.
+    {
+        let mut online = learn_arm(&master, LearnMode::Online, 1);
+        online.learn_batch(&stream);
+        let pass = [1usize, 2].iter().all(|&t| {
+            let mut staged = learn_arm(&master, LearnMode::MiniBatch { b: 1 }, t);
+            staged.learn_batch(&stream);
+            models_identical(&online, &staged, &format!("b1 T={t}"))
+        });
+        gates.push(("minibatch_b1_bitwise".to_string(), pass));
+    }
+
+    // Fixed b > 1: every thread count reproduces the serial blocked
+    // path bit for bit.
+    {
+        let mut reference = learn_arm(&master, LearnMode::MiniBatch { b: 8 }, 1);
+        reference.learn_batch(&stream);
+        let pass = [2usize, 4].iter().all(|&t| {
+            let mut pooled = learn_arm(&master, LearnMode::MiniBatch { b: 8 }, t);
+            pooled.learn_batch(&stream);
+            models_identical(&reference, &pooled, &format!("b8 T={t}"))
+        });
+        gates.push(("minibatch_thread_determinism".to_string(), pass));
+    }
+
+    // Drift recovery: adversarial mean swap — decayed + max-age model
+    // recovers post-shift accuracy, the non-decayed one keeps voting
+    // its pre-shift mass.
+    let (acc_adaptive, acc_stale) = {
+        let spec = DriftSpec {
+            dim: 5,
+            classes: 2,
+            instances: 3000,
+            shift_at: 1500,
+            shift: 0.0,
+            swap_classes: true,
+            cov_ramp: 1.5,
+        };
+        let data = drift_stream(&spec, 13);
+        let stds = data.feature_stds();
+        let train_n = 2700;
+        let base = GmmConfig::new(1).with_delta(0.5).with_beta(0.05);
+        let mut adaptive = supervised_figmn(
+            base.clone().with_decay(0.995).with_max_age(1200),
+            &stds,
+            spec.classes,
+        );
+        let mut stale = supervised_figmn(base, &stds, spec.classes);
+        adaptive.train_batch(&data.features[..train_n], &data.labels[..train_n]);
+        stale.train_batch(&data.features[..train_n], &data.labels[..train_n]);
+        let accuracy = |scores: Vec<Vec<f64>>| -> f64 {
+            scores
+                .iter()
+                .zip(&data.labels[train_n..])
+                .filter(|(s, &t)| {
+                    s.iter()
+                        .enumerate()
+                        .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                        .unwrap()
+                        .0
+                        == t
+                })
+                .count() as f64
+                / (data.features.len() - train_n) as f64
+        };
+        let a = accuracy(adaptive.class_scores_batch(&data.features[train_n..]));
+        let s = accuracy(stale.class_scores_batch(&data.features[train_n..]));
+        let pass = a >= 0.75 && a >= s + 0.1;
+        if !pass {
+            println!("  MISMATCH decay_recovery: adaptive {a:.3} vs stale {s:.3}");
+        }
+        gates.push(("decay_recovery".to_string(), pass));
+        (a, s)
+    };
+    (gates, acc_adaptive, acc_stale)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let dims: &[usize] = if quick { &[64] } else { &[64, 256, 1024] };
+    // K sized so the per-point distance pass streams more arena bytes
+    // than any cache holds at D ≥ 256 — that traffic is what blocking
+    // amortizes.
+    let k_for = |d: usize| match d {
+        64 => 256,
+        256 => 96,
+        _ => 24,
+    };
+    let n_for = |d: usize| {
+        if quick {
+            96
+        } else {
+            match d {
+                64 => 1024,
+                256 => 384,
+                _ => 96,
+            }
+        }
+    };
+
+    println!(
+        "drift_adaptation — learn throughput, online vs staged mini-batch blocks \
+         (cores={cores}{})",
+        if quick { ", quick mode" } else { "" }
+    );
+
+    let (gates, acc_adaptive, acc_stale) = run_gates();
+    for (name, pass) in &gates {
+        println!("  gate {name}: {}", if *pass { "OK" } else { "FAILED" });
+    }
+    println!("  drift accuracy: adaptive {acc_adaptive:.3} vs stale {acc_stale:.3}");
+
+    let table =
+        TablePrinter::new(&["D", "K", "b", "online/s", "staged/s", "speedup"], &[6, 6, 4, 12, 12, 8]);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut min_speedup_b32_hi_d = f64::INFINITY;
+    for &d in dims {
+        let k = k_for(d);
+        let n = n_for(d);
+        let master = synthetic_grown_model(d, k, SearchMode::Strict, SEED);
+        let centers = synthetic_centers(d, k, SEED);
+        let updates = near_center_stream(&centers, n, 8);
+
+        // One arm alive at a time (the D=1024 arenas are ~100 MB each).
+        let t_online = {
+            let mut online = learn_arm(&master, LearnMode::Online, 1);
+            time_once(|| online.learn_batch(&updates)).0
+        };
+        for &b in &BLOCK_SIZES {
+            let t_staged = {
+                let mut staged = learn_arm(&master, LearnMode::MiniBatch { b }, 1);
+                time_once(|| staged.learn_batch(&updates)).0
+            };
+            let np = n as f64;
+            let (online_s, staged_s) = (np / t_online, np / t_staged);
+            let speedup = t_online / t_staged;
+            if b == 32 && d >= 256 {
+                min_speedup_b32_hi_d = min_speedup_b32_hi_d.min(speedup);
+            }
+            table.row(&[
+                d.to_string(),
+                k.to_string(),
+                b.to_string(),
+                format!("{online_s:10.0}"),
+                format!("{staged_s:10.0}"),
+                format!("{speedup:6.2}×"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("d", d.into()),
+                ("k", k.into()),
+                ("b", b.into()),
+                ("points", n.into()),
+                ("online_learn_pts_per_s", online_s.into()),
+                ("minibatch_learn_pts_per_s", staged_s.into()),
+                ("block_speedup", speedup.into()),
+            ]));
+        }
+    }
+
+    let gate_json: Vec<Json> = gates
+        .iter()
+        .map(|(name, pass)| {
+            Json::obj(vec![("name", name.as_str().into()), ("pass", (*pass).into())])
+        })
+        .collect();
+    let payload = Json::obj(vec![
+        ("bench", "drift_adaptation".into()),
+        ("quick", quick.into()),
+        ("cores", cores.into()),
+        (
+            "min_speedup_b32_d256_plus",
+            if min_speedup_b32_hi_d.is_finite() { min_speedup_b32_hi_d } else { 0.0 }.into(),
+        ),
+        ("drift_acc_adaptive", acc_adaptive.into()),
+        ("drift_acc_stale", acc_stale.into()),
+        ("gates", Json::Arr(gate_json)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("drift_adaptation", &payload) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+
+    // Gates assert *after* the JSON is written so CI sees the failing
+    // `gates` entry as well as the panic.
+    assert!(gates.iter().all(|(_, p)| *p), "pipeline gate failed (see above)");
+
+    if !quick {
+        assert!(
+            min_speedup_b32_hi_d >= 2.0,
+            "staged b=32 learn speedup at D >= 256 is {min_speedup_b32_hi_d:.2}x (< 2x)"
+        );
+        println!(
+            "drift_adaptation OK — ≥ {min_speedup_b32_hi_d:.2}× staged learn at D ≥ 256, b = 32 \
+             (target ≥ 2×)"
+        );
+    } else {
+        println!("drift_adaptation done (quick mode; perf assertion skipped)");
+    }
+}

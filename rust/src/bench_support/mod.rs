@@ -8,7 +8,7 @@
 
 pub mod gmm_eval;
 
-use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode, SearchMode};
+use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode, LearnMode, SearchMode};
 use crate::json::Json;
 use crate::rng::Pcg64;
 use crate::stats::{mean, paired_t_test, std_dev};
@@ -103,6 +103,19 @@ pub fn synthetic_centers(d: usize, k: usize, seed: u64) -> Vec<Vec<f64>> {
 pub fn rematerialize(m: &Figmn, mode: SearchMode) -> Figmn {
     Figmn::from_parts(
         m.config().clone().with_search_mode(mode),
+        m.sigma_ini().to_vec(),
+        m.store().clone(),
+        m.points_seen(),
+    )
+}
+
+/// Re-materialize `m` over a clone of its arenas under a different
+/// [`LearnMode`] — the write-path analogue of [`rematerialize`], so the
+/// mini-batch bench can compare online vs staged arms over
+/// bit-identical component state.
+pub fn rematerialize_learn_mode(m: &Figmn, mode: LearnMode) -> Figmn {
+    Figmn::from_parts(
+        m.config().clone().with_learn_mode(mode),
         m.sigma_ini().to_vec(),
         m.store().clone(),
         m.points_seen(),

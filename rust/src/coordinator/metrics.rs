@@ -114,6 +114,10 @@ impl LatencySummary {
 #[derive(Default)]
 pub struct Metrics {
     learned: AtomicU64,
+    /// Points applied to models — a `learn` advances this by 1, a
+    /// `learn_batch` of B by B. This (not `learned`, which counts learn
+    /// *operations*) is what the snapshot republish cadence tracks.
+    points_learned: AtomicU64,
     predicted: AtomicU64,
     created_components: AtomicU64,
     shed: AtomicU64,
@@ -154,6 +158,16 @@ impl Metrics {
 
     pub fn record_learn(&self, started: Instant) {
         self.learned.fetch_add(1, Ordering::Relaxed);
+        self.points_learned.fetch_add(1, Ordering::Relaxed);
+        self.learn_latency.lock().unwrap().push(started.elapsed().as_secs_f64());
+    }
+
+    /// One `learn_batch` of `points` examples finished applying — one
+    /// learn operation, `points` points, one latency sample (the whole
+    /// block's wall time).
+    pub fn record_learn_block(&self, started: Instant, points: usize) {
+        self.learned.fetch_add(1, Ordering::Relaxed);
+        self.points_learned.fetch_add(points as u64, Ordering::Relaxed);
         self.learn_latency.lock().unwrap().push(started.elapsed().as_secs_f64());
     }
 
@@ -224,6 +238,7 @@ impl Metrics {
         let lag = self.snapshot_lag.lock().unwrap().clone();
         MetricsSnapshot {
             learned: self.learned.load(Ordering::Relaxed),
+            points_learned: self.points_learned.load(Ordering::Relaxed),
             predicted: self.predicted.load(Ordering::Relaxed),
             created_components: self.created_components.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
@@ -255,6 +270,9 @@ impl Metrics {
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
     pub learned: u64,
+    /// Points applied across all learn ops (`learn` = 1, `learn_batch`
+    /// of B = B); the snapshot republish cadence counts these.
+    pub points_learned: u64,
     pub predicted: u64,
     pub created_components: u64,
     pub shed: u64,
@@ -283,6 +301,7 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("learned", (self.learned as usize).into()),
+            ("points_learned", (self.points_learned as usize).into()),
             ("predicted", (self.predicted as usize).into()),
             ("created_components", (self.created_components as usize).into()),
             ("shed", (self.shed as usize).into()),
@@ -325,10 +344,12 @@ mod tests {
         let t = Instant::now();
         m.record_learn(t);
         m.record_learn(t);
+        m.record_learn_block(t, 32);
         m.record_predict(t, 8);
         m.record_shed();
         let s = m.snapshot();
-        assert_eq!(s.learned, 2);
+        assert_eq!(s.learned, 3, "a learn_batch is one learn operation");
+        assert_eq!(s.points_learned, 34, "…but 32 points");
         assert_eq!(s.predicted, 8);
         assert_eq!(s.shed, 1);
         assert_eq!(s.mean_batch, 8.0);

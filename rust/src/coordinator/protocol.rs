@@ -4,7 +4,7 @@
 
 use super::metrics::TrafficClass;
 use super::CoordError;
-use crate::gmm::{ReplicaMode, SearchMode};
+use crate::gmm::{LearnMode, ReplicaMode, SearchMode};
 use crate::json::{parse, Json};
 use crate::linalg::KernelMode;
 
@@ -37,9 +37,22 @@ pub enum Request {
         /// `--replica-mode` serve flag covers clients that predate the
         /// field without overriding clients that set it explicitly.
         replica_mode: Option<ReplicaMode>,
+        /// Write-path staging for every shard's model (`"online"`
+        /// default / `"minibatch:B"`; see [`crate::gmm::LearnMode`]).
+        learn_mode: LearnMode,
+        /// Per-point `sp` decay factor in `(0, 1]`; `1.0` (default)
+        /// disables decay bit-exactly.
+        decay: f64,
+        /// Evict components not refreshed within this many points;
+        /// `0` (default) disables age-based eviction.
+        max_age: u64,
     },
     /// Present one labeled example.
     Learn { model: String, features: Vec<f64>, label: usize },
+    /// Present a block of labeled examples in one request. Routed and
+    /// queued as a unit, so a mini-batch model stages the whole block
+    /// through the blocked learn pipeline instead of point-by-point.
+    LearnBatch { model: String, xs: Vec<Vec<f64>>, labels: Vec<usize> },
     /// Request class scores for one example (write/sequential class:
     /// observes every learn queued before it).
     Predict { model: String, features: Vec<f64> },
@@ -103,6 +116,7 @@ impl Request {
             | Request::PredictSnapshot { .. }
             | Request::PredictBatch { .. } => TrafficClass::Read,
             Request::Learn { .. }
+            | Request::LearnBatch { .. }
             | Request::LearnReg { .. }
             | Request::Predict { .. }
             | Request::PredictReg { .. } => TrafficClass::Write,
@@ -139,6 +153,9 @@ impl Request {
                 kernel_mode,
                 search_mode,
                 replica_mode,
+                learn_mode,
+                decay,
+                max_age,
             } => {
                 let mut fields = vec![
                     ("op", "create_model".into()),
@@ -151,6 +168,9 @@ impl Request {
                     ("shards", (*shards).into()),
                     ("kernel_mode", kernel_mode.as_str().into()),
                     ("search_mode", search_mode.to_wire().into()),
+                    ("learn_mode", learn_mode.to_wire().into()),
+                    ("decay", (*decay).into()),
+                    ("max_age", (*max_age as usize).into()),
                 ];
                 // Emitted only when set, so "client left it to the
                 // server default" survives a round trip.
@@ -164,6 +184,15 @@ impl Request {
                 ("model", model.as_str().into()),
                 ("features", Json::num_array(features)),
                 ("label", (*label).into()),
+            ]),
+            Request::LearnBatch { model, xs, labels } => Json::obj(vec![
+                ("op", "learn_batch".into()),
+                ("model", model.as_str().into()),
+                ("xs", Json::Arr(xs.iter().map(|x| Json::num_array(x)).collect())),
+                (
+                    "labels",
+                    Json::Arr(labels.iter().map(|&l| Json::from(l)).collect()),
+                ),
             ]),
             Request::Predict { model, features } => Json::obj(vec![
                 ("op", "predict".into()),
@@ -281,6 +310,34 @@ impl Request {
                         },
                     )?),
                 };
+                // Optional learn mode, same contract: absent → Online
+                // (the pre-mini-batch behavior); present but unknown →
+                // protocol error.
+                let learn_mode = match doc.get("learn_mode") {
+                    None => LearnMode::Online,
+                    Some(v) => v.as_str().and_then(LearnMode::parse).ok_or_else(|| {
+                        CoordError::Protocol(
+                            "bad learn_mode (want \"online\"/\"minibatch:B\")".into(),
+                        )
+                    })?,
+                };
+                // Optional drift knobs: absent → disabled; present but
+                // out of range → protocol error.
+                let decay = match doc.get("decay") {
+                    None => 1.0,
+                    Some(v) => v
+                        .as_f64()
+                        .filter(|d| *d > 0.0 && *d <= 1.0)
+                        .ok_or_else(|| {
+                            CoordError::Protocol("bad decay (want a value in (0, 1])".into())
+                        })?,
+                };
+                let max_age = match doc.get("max_age") {
+                    None => 0,
+                    Some(v) => v.as_usize().ok_or_else(|| {
+                        CoordError::Protocol("bad max_age (want a point count)".into())
+                    })? as u64,
+                };
                 Ok(Request::CreateModel {
                     model: model()?,
                     n_features,
@@ -295,6 +352,9 @@ impl Request {
                     kernel_mode,
                     search_mode,
                     replica_mode,
+                    learn_mode,
+                    decay,
+                    max_age,
                 })
             }
             "learn" => Ok(Request::Learn {
@@ -305,6 +365,26 @@ impl Request {
                     .and_then(Json::as_usize)
                     .ok_or_else(|| CoordError::Protocol("missing label".into()))?,
             }),
+            "learn_batch" => {
+                let xs = rows("xs")?;
+                let labels: Vec<usize> = doc
+                    .get("labels")
+                    .and_then(Json::as_array)
+                    .and_then(|a| {
+                        a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>()
+                    })
+                    .ok_or_else(|| {
+                        CoordError::Protocol("missing/malformed labels".into())
+                    })?;
+                if labels.len() != xs.len() {
+                    return Err(CoordError::Protocol(format!(
+                        "learn_batch: {} rows but {} labels",
+                        xs.len(),
+                        labels.len()
+                    )));
+                }
+                Ok(Request::LearnBatch { model: model()?, xs, labels })
+            }
             "predict" => {
                 let snapshot =
                     doc.get("snapshot").and_then(Json::as_bool).unwrap_or(false);
@@ -442,6 +522,9 @@ mod tests {
                 kernel_mode: KernelMode::Fast,
                 search_mode: SearchMode::TopC { c: 16 },
                 replica_mode: Some(ReplicaMode::f32_default()),
+                learn_mode: LearnMode::MiniBatch { b: 32 },
+                decay: 0.995,
+                max_age: 5000,
             },
             Request::CreateModel {
                 model: "m2".into(),
@@ -455,8 +538,16 @@ mod tests {
                 search_mode: SearchMode::Strict,
                 // The omitted-field state must survive a round trip too.
                 replica_mode: None,
+                learn_mode: LearnMode::Online,
+                decay: 1.0,
+                max_age: 0,
             },
             Request::Learn { model: "m".into(), features: vec![0.5, -1.0], label: 2 },
+            Request::LearnBatch {
+                model: "m".into(),
+                xs: vec![vec![0.5, -1.0], vec![0.25, 2.0]],
+                labels: vec![2, 0],
+            },
             Request::Predict { model: "m".into(), features: vec![0.0, 1.0] },
             Request::PredictSnapshot { model: "m".into(), features: vec![0.0, 1.0] },
             Request::Score { model: "m".into(), x: vec![0.0, 1.0, 0.5] },
@@ -517,7 +608,16 @@ mod tests {
         .unwrap();
         match r {
             Request::CreateModel {
-                stds, shards, delta, kernel_mode, search_mode, replica_mode, ..
+                stds,
+                shards,
+                delta,
+                kernel_mode,
+                search_mode,
+                replica_mode,
+                learn_mode,
+                decay,
+                max_age,
+                ..
             } => {
                 assert_eq!(stds, vec![1.0; 3]);
                 assert_eq!(shards, 1);
@@ -525,9 +625,60 @@ mod tests {
                 assert_eq!(kernel_mode, KernelMode::Strict);
                 assert_eq!(search_mode, SearchMode::Strict);
                 assert_eq!(replica_mode, None, "absent field leaves the server default");
+                assert_eq!(learn_mode, LearnMode::Online);
+                assert_eq!(decay, 1.0);
+                assert_eq!(max_age, 0);
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn create_model_learn_mode_and_drift_knobs_parse_and_reject_bad() {
+        let r = Request::from_line(
+            r#"{"op":"create_model","model":"m","n_features":3,"n_classes":2,"learn_mode":"minibatch:8","decay":0.99,"max_age":1000}"#,
+        )
+        .unwrap();
+        match r {
+            Request::CreateModel { learn_mode, decay, max_age, .. } => {
+                assert_eq!(learn_mode, LearnMode::MiniBatch { b: 8 });
+                assert_eq!(decay, 0.99);
+                assert_eq!(max_age, 1000);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Unknown modes and out-of-range knobs are protocol errors, not
+        // silent online/no-decay fallbacks.
+        for bad in [
+            r#""learn_mode":"turbo""#,
+            r#""learn_mode":"minibatch:0""#,
+            r#""learn_mode":7"#,
+            r#""decay":0"#,
+            r#""decay":1.5"#,
+            r#""decay":"fast""#,
+            r#""max_age":"soon""#,
+        ] {
+            let line = format!(
+                r#"{{"op":"create_model","model":"m","n_features":3,"n_classes":2,{bad}}}"#
+            );
+            assert!(Request::from_line(&line).is_err(), "{line}");
+        }
+    }
+
+    #[test]
+    fn learn_batch_rejects_length_mismatch_and_missing_labels() {
+        assert!(Request::from_line(
+            r#"{"op":"learn_batch","model":"m","xs":[[1.0],[2.0]],"labels":[0]}"#,
+        )
+        .is_err());
+        assert!(Request::from_line(
+            r#"{"op":"learn_batch","model":"m","xs":[[1.0]]}"#,
+        )
+        .is_err());
+        assert!(Request::from_line(
+            r#"{"op":"learn_batch","model":"m","xs":[[1.0]],"labels":[-1]}"#,
+        )
+        .is_err());
     }
 
     #[test]
@@ -624,6 +775,7 @@ mod tests {
             (Request::PredictSnapshot { model: "m".into(), features: vec![] }, Read),
             (Request::PredictBatch { model: "m".into(), xs: vec![] }, Read),
             (Request::Learn { model: "m".into(), features: vec![], label: 0 }, Write),
+            (Request::LearnBatch { model: "m".into(), xs: vec![], labels: vec![] }, Write),
             (Request::LearnReg { model: "m".into(), features: vec![], targets: vec![] }, Write),
             (Request::Predict { model: "m".into(), features: vec![] }, Write),
             (Request::PredictReg { model: "m".into(), features: vec![] }, Write),

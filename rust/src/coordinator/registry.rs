@@ -96,6 +96,28 @@ impl ModelSpec {
         self
     }
 
+    /// Select the write-path staging mode for every shard's model
+    /// (carried in the spec's `GmmConfig`; see
+    /// [`crate::gmm::LearnMode`]).
+    pub fn with_learn_mode(mut self, mode: crate::gmm::LearnMode) -> Self {
+        self.gmm = self.gmm.with_learn_mode(mode);
+        self
+    }
+
+    /// Set the per-point `sp` decay factor for every shard's model
+    /// (carried in the spec's `GmmConfig`; `1.0` disables decay).
+    pub fn with_decay(mut self, decay: f64) -> Self {
+        self.gmm = self.gmm.with_decay(decay);
+        self
+    }
+
+    /// Evict components not refreshed within `max_age` points (carried
+    /// in the spec's `GmmConfig`; `0` disables age-based eviction).
+    pub fn with_max_age(mut self, max_age: u64) -> Self {
+        self.gmm = self.gmm.with_max_age(max_age);
+        self
+    }
+
     /// Attach a component-sharded engine to every shard of this model.
     /// Each shard gets its own pool; `EngineConfig::auto()` (threads=0)
     /// is resolved at create time as `cores / shards` so a sharded model
@@ -381,8 +403,9 @@ mod tests {
         let stats = reg.stats("m").unwrap();
         assert_eq!(stats.get("learned").unwrap().as_usize(), Some(150));
         // The memory footprint gauge reflects the packed arenas: joint
-        // dim is 2 features + 3 classes = 5 → 5 + 15 + 2 floats + age.
-        let per_comp = (5 + 15 + 2) * 8 + 8;
+        // dim is 2 features + 3 classes = 5 → 5 + 15 + 2 floats + the
+        // u64 age and refresh stamp.
+        let per_comp = (5 + 15 + 2) * 8 + 16;
         let components = stats.get("components").unwrap().as_usize().unwrap();
         assert!(components > 0);
         assert_eq!(
@@ -467,6 +490,45 @@ mod tests {
         assert_eq!(router.predict(&[7.0, 7.0]).unwrap().len(), 3);
         assert_eq!(reg.spec("t").unwrap().gmm.search_mode, SearchMode::TopC { c: 4 });
         reg.drop_model("t").unwrap();
+    }
+
+    #[test]
+    fn learn_mode_spec_propagates_and_serves_batches() {
+        use crate::gmm::LearnMode;
+        let reg = registry();
+        reg.create(
+            blob_spec("mb")
+                .with_learn_mode(LearnMode::MiniBatch { b: 16 })
+                .with_decay(0.999)
+                .with_max_age(10_000),
+        )
+        .unwrap();
+        let router = reg.router("mb").unwrap();
+        let mut rng = Pcg64::seed(13);
+        let centers = [[0.0, 0.0], [7.0, 7.0], [0.0, 7.0]];
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..120 {
+            let c = i % 3;
+            xs.push(vec![centers[c][0] + rng.normal() * 0.7, centers[c][1] + rng.normal() * 0.7]);
+            labels.push(c);
+        }
+        for (cx, cc) in xs.chunks(40).zip(labels.chunks(40)) {
+            router.learn_batch(cx.to_vec(), cc.to_vec()).unwrap();
+        }
+        let scores = router.predict(&[7.0, 7.0]).unwrap();
+        let best =
+            scores.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(best, 1);
+        let spec = reg.spec("mb").unwrap();
+        assert_eq!(spec.gmm.learn_mode, LearnMode::MiniBatch { b: 16 });
+        assert_eq!(spec.gmm.decay, 0.999);
+        assert_eq!(spec.gmm.max_age, 10_000);
+        let stats = reg.stats("mb").unwrap();
+        assert_eq!(stats.get("learned").unwrap().as_usize(), Some(120));
+        let coord = stats.get("coordinator").unwrap();
+        assert_eq!(coord.get("points_learned").unwrap().as_usize(), Some(120));
+        reg.drop_model("mb").unwrap();
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!
 //! The router splits traffic into two classes:
 //!
-//! - **Write class** — `learn`/`learn_reg` plus the sequential
+//! - **Write class** — `learn`/`learn_batch`/`learn_reg` plus the sequential
 //!   `predict`/`predict_reg`: everything goes through the shard
 //!   workers' command queues, so a predict observes every learn queued
 //!   before it (read-your-writes).
@@ -126,6 +126,48 @@ impl Router {
             None => {
                 for s in &self.shards {
                     s.learn(features.clone(), label)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Route one block of labeled records as a unit. RoundRobin sends
+    /// the whole block to one shard (the block, not the point, is the
+    /// routing unit — splitting it would undo the staged mini-batch
+    /// pipeline); Broadcast copies it to every shard; FeatureHash
+    /// partitions rows by their feature hash (each point lands on the
+    /// same shard it would have reached point-by-point) and forwards
+    /// each shard its sub-block.
+    pub fn learn_batch(&self, xs: Vec<Vec<f64>>, labels: Vec<usize>) -> Result<()> {
+        if xs.is_empty() {
+            return Ok(());
+        }
+        match self.policy {
+            RoutingPolicy::Broadcast => {
+                for s in &self.shards {
+                    s.learn_batch(xs.clone(), labels.clone())?;
+                }
+                Ok(())
+            }
+            RoutingPolicy::RoundRobin => {
+                let i = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                    % self.shards.len();
+                self.shards[i].learn_batch(xs, labels)
+            }
+            RoutingPolicy::FeatureHash => {
+                let n = self.shards.len();
+                let mut parts: Vec<(Vec<Vec<f64>>, Vec<usize>)> =
+                    (0..n).map(|_| (Vec::new(), Vec::new())).collect();
+                for (x, l) in xs.into_iter().zip(labels) {
+                    let i = feature_hash(&x) % n;
+                    parts[i].0.push(x);
+                    parts[i].1.push(l);
+                }
+                for (i, (px, pl)) in parts.into_iter().enumerate() {
+                    if !px.is_empty() {
+                        self.shards[i].learn_batch(px, pl)?;
+                    }
                 }
                 Ok(())
             }
@@ -480,6 +522,59 @@ mod tests {
         }
         drop(router);
         for w in workers {
+            w.join();
+        }
+    }
+
+    #[test]
+    fn learn_batch_routes_blocks_whole_and_partitions_by_hash() {
+        // RoundRobin: each block lands whole on exactly one shard.
+        let (workers, handles) = spawn_shards(3);
+        let router = Router::new(handles.clone(), RoutingPolicy::RoundRobin);
+        let mut rng = Pcg64::seed(21);
+        for _ in 0..6 {
+            let mut xs = Vec::new();
+            let mut labels = Vec::new();
+            for i in 0..10 {
+                let c = i % 2;
+                xs.push(vec![rng.normal(), c as f64 * 7.0 + rng.normal()]);
+                labels.push(c);
+            }
+            router.learn_batch(xs, labels).unwrap();
+        }
+        wait_settled(&handles);
+        for h in &handles {
+            assert_eq!(h.stats().unwrap().learned, 20, "2 blocks × 10 points each");
+        }
+        drop(router);
+        for w in workers {
+            w.join();
+        }
+        // FeatureHash: a block's rows land on the same shards they
+        // would have reached point-by-point.
+        let (workers, handles) = spawn_shards(3);
+        let (ctl_workers, ctl_handles) = spawn_shards(3);
+        let batched = Router::new(handles.clone(), RoutingPolicy::FeatureHash);
+        let pointwise = Router::new(ctl_handles.clone(), RoutingPolicy::FeatureHash);
+        let mut rng = Pcg64::seed(22);
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..30 {
+            xs.push(vec![rng.normal(), rng.normal()]);
+            labels.push(i % 2);
+        }
+        batched.learn_batch(xs.clone(), labels.clone()).unwrap();
+        for (x, &c) in xs.iter().zip(&labels) {
+            pointwise.learn(x.clone(), c).unwrap();
+        }
+        wait_settled(&handles);
+        wait_settled(&ctl_handles);
+        for (b, p) in handles.iter().zip(&ctl_handles) {
+            assert_eq!(b.stats().unwrap().learned, p.stats().unwrap().learned);
+        }
+        drop(batched);
+        drop(pointwise);
+        for w in workers.into_iter().chain(ctl_workers) {
             w.join();
         }
     }

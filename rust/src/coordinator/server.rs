@@ -33,11 +33,27 @@
 //! most `BatcherConfig::max_delay` (default 2 ms) to a lone read; a
 //! full block flushes immediately.
 //!
+//! ## Learn coalescing
+//!
+//! Writes get the same treatment: when `coalesce` is on and a model was
+//! created with `learn_mode: minibatch:B`, consecutive single-point
+//! `learn` requests for it are parked in a per-model [`Batcher`] and
+//! flushed as one `learn_batch` block — the staged mini-batch pipeline
+//! then scores the block through the PR 5 batched kernels instead of
+//! point-by-point. `MiniBatch{b=1}` models apply coalesced blocks one
+//! point at a time (the pipeline's own contract), and Online models are
+//! never parked at all, so with coalescing off — or `b=1` — every
+//! response and every model state is byte-identical to per-request
+//! dispatch. Latency contract matches reads: at most
+//! `BatcherConfig::max_delay` added to a lone learn.
+//!
 //! Ordering: coalescing only ever groups *consecutive* coalescable
-//! reads. Any other request on a driver (learn, create, drop, stats,
-//! ping, …) first flushes every pending batch on that driver, so the
-//! registry observes effects in exactly the order a sequential
-//! per-request loop would have produced.
+//! requests of the same kind. Any other request on a driver (create,
+//! drop, stats, ping, a read while learns are parked, a learn while
+//! reads are parked, …) first flushes every pending batch on that
+//! driver, so the registry observes effects in exactly the order a
+//! sequential per-request loop would have produced — at most one kind
+//! of batch (reads or learns) is ever pending at a time.
 //!
 //! ## Lifecycle
 //!
@@ -202,6 +218,7 @@ pub fn serve(registry: Arc<Registry>, cfg: ServerConfig) -> Result<Server> {
             gens: Vec::new(),
             free: Vec::new(),
             batchers: HashMap::new(),
+            learn_batchers: HashMap::new(),
         };
         drivers.push(
             std::thread::Builder::new()
@@ -252,6 +269,15 @@ struct PendingRead {
     queued_at: Instant,
 }
 
+/// A single-point `learn` parked in a coalescing batcher (mini-batch
+/// models only).
+struct PendingLearn {
+    at: SlotRef,
+    features: Vec<f64>,
+    label: usize,
+    queued_at: Instant,
+}
+
 /// Which blocked read surface a batcher feeds.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 enum CoalOp {
@@ -298,6 +324,10 @@ struct Driver {
     /// One size-or-deadline batcher per (model, op) with anything
     /// pending.
     batchers: HashMap<(String, CoalOp), Batcher<PendingRead>>,
+    /// One size-or-deadline batcher per mini-batch model with learns
+    /// pending (mutually exclusive with `batchers` being non-empty —
+    /// each kind barrier-flushes the other).
+    learn_batchers: HashMap<String, Batcher<PendingLearn>>,
 }
 
 impl Driver {
@@ -394,13 +424,16 @@ impl Driver {
     /// until readiness).
     fn poll_timeout_ms(&self) -> i32 {
         let mut best: Option<Duration> = None;
-        for b in self.batchers.values() {
-            if let Some(d) = b.time_to_deadline() {
-                best = Some(match best {
-                    Some(cur) if cur <= d => cur,
-                    _ => d,
-                });
-            }
+        let deadlines = self
+            .batchers
+            .values()
+            .filter_map(Batcher::time_to_deadline)
+            .chain(self.learn_batchers.values().filter_map(Batcher::time_to_deadline));
+        for d in deadlines {
+            best = Some(match best {
+                Some(cur) if cur <= d => cur,
+                _ => d,
+            });
         }
         match best {
             // Round up so we never wake *before* the deadline and spin.
@@ -578,13 +611,23 @@ impl Driver {
         if self.coalesce {
             match req {
                 Request::Score { model, x } => {
+                    self.flush_learn_batchers();
                     let item = PendingRead { at, x, queued_at: started };
                     self.enqueue_read(model, CoalOp::Score, item);
                     return;
                 }
                 Request::PredictSnapshot { model, features } => {
+                    self.flush_learn_batchers();
                     let item = PendingRead { at, x: features, queued_at: started };
                     self.enqueue_read(model, CoalOp::Predict, item);
+                    return;
+                }
+                Request::Learn { model, features, label }
+                    if self.learn_coalescable(&model) =>
+                {
+                    self.flush_read_batchers();
+                    let item = PendingLearn { at, features, label, queued_at: started };
+                    self.enqueue_learn(model, item);
                     return;
                 }
                 other => return self.dispatch_inline(other, at, class, started),
@@ -623,6 +666,37 @@ impl Driver {
         }
     }
 
+    /// Whether `learn` traffic for this model should be parked and
+    /// block-flushed: only models created with a mini-batch learn mode
+    /// opted into block semantics — Online models (and unknown names)
+    /// dispatch inline, unchanged.
+    fn learn_coalescable(&self, model: &str) -> bool {
+        self.registry
+            .spec(model)
+            .map(|s| matches!(s.gmm.learn_mode, crate::gmm::LearnMode::MiniBatch { .. }))
+            .unwrap_or(false)
+    }
+
+    fn enqueue_learn(&mut self, model: String, item: PendingLearn) {
+        let cfg = self.batch_cfg;
+        let full = self
+            .learn_batchers
+            .entry(model.clone())
+            .or_insert_with(|| Batcher::new(cfg))
+            .push(item);
+        if let Some(batch) = full {
+            self.execute_learn_batch(&model, batch.items);
+        }
+    }
+
+    fn execute_learn_batch(&mut self, model: &str, items: Vec<PendingLearn>) {
+        let responses = coalesced_learn_responses(&self.registry, model, &items);
+        debug_assert_eq!(responses.len(), items.len());
+        for (item, resp) in items.into_iter().zip(responses) {
+            self.finish_slot(item.at, resp, TrafficClass::Write, item.queued_at);
+        }
+    }
+
     fn enqueue_read(&mut self, model: String, op: CoalOp, item: PendingRead) {
         let cfg = self.batch_cfg;
         let full = self
@@ -637,23 +711,35 @@ impl Driver {
 
     /// Flush every batcher whose deadline has passed.
     fn poll_batchers(&mut self) {
-        if self.batchers.is_empty() {
-            return;
-        }
-        let mut due = Vec::new();
-        for ((model, op), b) in self.batchers.iter_mut() {
-            if let Some(batch) = b.poll() {
-                due.push((model.clone(), *op, batch.items));
+        if !self.batchers.is_empty() {
+            let mut due = Vec::new();
+            for ((model, op), b) in self.batchers.iter_mut() {
+                if let Some(batch) = b.poll() {
+                    due.push((model.clone(), *op, batch.items));
+                }
+            }
+            self.batchers.retain(|_, b| b.pending() > 0);
+            for (model, op, items) in due {
+                self.execute_batch(&model, op, items);
             }
         }
-        self.batchers.retain(|_, b| b.pending() > 0);
-        for (model, op, items) in due {
-            self.execute_batch(&model, op, items);
+        if !self.learn_batchers.is_empty() {
+            let mut due = Vec::new();
+            for (model, b) in self.learn_batchers.iter_mut() {
+                if let Some(batch) = b.poll() {
+                    due.push((model.clone(), batch.items));
+                }
+            }
+            self.learn_batchers.retain(|_, b| b.pending() > 0);
+            for (model, items) in due {
+                self.execute_learn_batch(&model, items);
+            }
         }
     }
 
-    /// Unconditional flush (barrier before inline ops; shutdown).
-    fn flush_all_batchers(&mut self) {
+    /// Unconditional flush of parked reads (barrier before learns and
+    /// inline ops; shutdown).
+    fn flush_read_batchers(&mut self) {
         if self.batchers.is_empty() {
             return;
         }
@@ -667,6 +753,32 @@ impl Driver {
         for (model, op, items) in due {
             self.execute_batch(&model, op, items);
         }
+    }
+
+    /// Unconditional flush of parked learns (barrier before reads and
+    /// inline ops; shutdown).
+    fn flush_learn_batchers(&mut self) {
+        if self.learn_batchers.is_empty() {
+            return;
+        }
+        let mut due = Vec::new();
+        for (model, b) in self.learn_batchers.iter_mut() {
+            if let Some(batch) = b.flush() {
+                due.push((model.clone(), batch.items));
+            }
+        }
+        self.learn_batchers.clear();
+        for (model, items) in due {
+            self.execute_learn_batch(&model, items);
+        }
+    }
+
+    /// Unconditional flush (barrier before inline ops; shutdown). Learns
+    /// first: any parked learns predate the op triggering the barrier,
+    /// and at most one kind is pending anyway.
+    fn flush_all_batchers(&mut self) {
+        self.flush_learn_batchers();
+        self.flush_read_batchers();
     }
 
     fn execute_batch(&mut self, model: &str, op: CoalOp, items: Vec<PendingRead>) {
@@ -848,6 +960,70 @@ fn coalesced_responses(
     responses.into_iter().map(|r| r.expect("every slot filled")).collect()
 }
 
+/// Execute one coalesced learn block, producing responses byte-identical
+/// to per-request [`dispatch`]: same lookup order (router before spec),
+/// same per-item validation strings. Valid rows are forwarded to the
+/// router as one `learn_batch`, so a mini-batch shard stages them
+/// through the blocked pipeline.
+fn coalesced_learn_responses(
+    registry: &Registry,
+    model: &str,
+    items: &[PendingLearn],
+) -> Vec<Response> {
+    let all = |msg: String| -> Vec<Response> {
+        items.iter().map(|_| Response::Error(msg.clone())).collect()
+    };
+    let router = match registry.router(model) {
+        Ok(r) => r,
+        Err(e) => return all(e.to_string()),
+    };
+    let spec = match registry.spec(model) {
+        Ok(s) => s,
+        Err(e) => return all(e.to_string()),
+    };
+    let mut responses: Vec<Option<Response>> = items
+        .iter()
+        .map(|it| {
+            if it.features.len() != spec.n_features {
+                Some(Response::Error(
+                    CoordError::Protocol(format!(
+                        "expected {} features, got {}",
+                        spec.n_features,
+                        it.features.len()
+                    ))
+                    .to_string(),
+                ))
+            } else if it.label >= spec.n_classes {
+                Some(Response::Error(
+                    CoordError::Protocol(format!("label {} out of range", it.label))
+                        .to_string(),
+                ))
+            } else {
+                None
+            }
+        })
+        .collect();
+    let valid: Vec<usize> = (0..items.len()).filter(|&i| responses[i].is_none()).collect();
+    if !valid.is_empty() {
+        let xs: Vec<Vec<f64>> = valid.iter().map(|&i| items[i].features.clone()).collect();
+        let labels: Vec<usize> = valid.iter().map(|&i| items[i].label).collect();
+        match router.learn_batch(xs, labels) {
+            Ok(()) => {
+                for &i in &valid {
+                    responses[i] = Some(Response::Ok);
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for &i in &valid {
+                    responses[i] = Some(Response::Error(msg.clone()));
+                }
+            }
+        }
+    }
+    responses.into_iter().map(|r| r.expect("every slot filled")).collect()
+}
+
 /// Argmax class of a score vector (0 for an empty one).
 fn argmax(scores: &[f64]) -> usize {
     scores
@@ -881,13 +1057,19 @@ fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Re
             kernel_mode,
             search_mode,
             replica_mode,
+            learn_mode,
+            decay,
+            max_age,
         } => {
             let gmm = GmmConfig::new(1)
                 .with_delta(delta)
                 .with_beta(beta)
                 .with_kernel_mode(kernel_mode)
                 .with_search_mode(search_mode)
-                .with_replica_mode(replica_mode.unwrap_or(ReplicaMode::Off));
+                .with_replica_mode(replica_mode.unwrap_or(ReplicaMode::Off))
+                .with_learn_mode(learn_mode)
+                .with_decay(decay)
+                .with_max_age(max_age);
             let mut spec = ModelSpec::new(&model, n_features, n_classes)
                 .with_gmm(gmm)
                 .with_stds(stds)
@@ -912,6 +1094,22 @@ fn execute(req: Request, registry: &Registry, xla_config: &Option<String>) -> Re
                 return Err(CoordError::Protocol(format!("label {label} out of range")));
             }
             router.learn(features, label)?;
+            Ok(Response::Ok)
+        }
+        Request::LearnBatch { model, xs, labels } => {
+            let router = registry.router(&model)?;
+            let spec = registry.spec(&model)?;
+            if let Some(bad) = xs.iter().find(|x| x.len() != spec.n_features) {
+                return Err(CoordError::Protocol(format!(
+                    "learn_batch expects {}-dim rows, got {}",
+                    spec.n_features,
+                    bad.len()
+                )));
+            }
+            if let Some(bad) = labels.iter().find(|&&l| l >= spec.n_classes) {
+                return Err(CoordError::Protocol(format!("label {bad} out of range")));
+            }
+            router.learn_batch(xs, labels)?;
             Ok(Response::Ok)
         }
         Request::LearnReg { model, features, targets } => {
@@ -1046,6 +1244,9 @@ mod tests {
             kernel_mode: crate::linalg::KernelMode::Strict,
             search_mode: crate::gmm::SearchMode::Strict,
             replica_mode: None,
+            learn_mode: crate::gmm::LearnMode::Online,
+            decay: 1.0,
+            max_age: 0,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
 
@@ -1110,6 +1311,9 @@ mod tests {
             kernel_mode: crate::linalg::KernelMode::Fast,
             search_mode: crate::gmm::SearchMode::TopC { c: 8 },
             replica_mode: None,
+            learn_mode: crate::gmm::LearnMode::Online,
+            decay: 1.0,
+            max_age: 0,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
         let mut rng = Pcg64::seed(4);
@@ -1196,6 +1400,79 @@ mod tests {
     }
 
     #[test]
+    fn learn_coalescing_stages_minibatch_models() {
+        let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
+        let server = serve(registry.clone(), ServerConfig::default()).unwrap();
+        let (mut reader, mut writer) = client(server.local_addr);
+
+        let create = Request::CreateModel {
+            model: "m".into(),
+            n_features: 2,
+            n_classes: 2,
+            delta: 0.5,
+            beta: 0.05,
+            stds: vec![3.0, 3.0],
+            shards: 1,
+            kernel_mode: crate::linalg::KernelMode::Strict,
+            search_mode: crate::gmm::SearchMode::Strict,
+            replica_mode: None,
+            learn_mode: crate::gmm::LearnMode::MiniBatch { b: 16 },
+            decay: 1.0,
+            max_age: 0,
+        };
+        assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
+
+        // Pipeline every learn line in ONE write so the driver parks
+        // consecutive learns into blocks; sequential roundtrips would
+        // deadline-flush one-point batches and prove nothing.
+        let mut rng = Pcg64::seed(9);
+        let mut lines = String::new();
+        for i in 0..96 {
+            let c = i % 2;
+            let req = Request::Learn {
+                model: "m".into(),
+                features: vec![c as f64 * 6.0 + rng.normal() * 0.5, rng.normal() * 0.5],
+                label: c,
+            };
+            lines.push_str(&req.to_json().to_string_compact());
+            lines.push('\n');
+        }
+        writer.write_all(lines.as_bytes()).unwrap();
+        for _ in 0..96 {
+            let mut buf = String::new();
+            reader.read_line(&mut buf).unwrap();
+            assert_eq!(Response::from_line(&buf).unwrap(), Response::Ok);
+        }
+
+        // Every point applied, in fewer learn *operations* than points:
+        // consecutive learns were coalesced into blocks.
+        let resp =
+            roundtrip(&mut reader, &mut writer, &Request::Stats { model: "m".into() });
+        let stats = match resp {
+            Response::Stats(j) => j,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(stats.get("learned").unwrap().as_usize(), Some(96));
+        let coord = stats.get("coordinator").unwrap();
+        assert_eq!(coord.get("points_learned").unwrap().as_usize(), Some(96));
+        let ops = coord.get("learned").unwrap().as_usize().unwrap();
+        assert!(ops < 96, "learns were not coalesced: {ops} ops for 96 points");
+
+        // A read issued after the blocks observes the staged learning
+        // (the inline dispatch barrier-flushes pending learns first).
+        let resp = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::Predict { model: "m".into(), features: vec![6.0, 0.0] },
+        );
+        match resp {
+            Response::Scores { class, .. } => assert_eq!(class, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
     fn shutdown_joins_connection_handlers() {
         let registry = Arc::new(Registry::new(Arc::new(Metrics::new())));
         let server = serve(registry.clone(), ServerConfig::default()).unwrap();
@@ -1270,6 +1547,9 @@ mod tests {
             kernel_mode: crate::linalg::KernelMode::Fast,
             search_mode: crate::gmm::SearchMode::Strict,
             replica_mode: None,
+            learn_mode: crate::gmm::LearnMode::Online,
+            decay: 1.0,
+            max_age: 0,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
         assert_eq!(
@@ -1289,6 +1569,9 @@ mod tests {
             kernel_mode: crate::linalg::KernelMode::Fast,
             search_mode: crate::gmm::SearchMode::Strict,
             replica_mode: Some(crate::gmm::ReplicaMode::Off),
+            learn_mode: crate::gmm::LearnMode::Online,
+            decay: 1.0,
+            max_age: 0,
         };
         assert_eq!(roundtrip(&mut reader, &mut writer, &create), Response::Ok);
         assert_eq!(registry.spec("m_off").unwrap().gmm.replica_mode, crate::gmm::ReplicaMode::Off);

@@ -56,6 +56,9 @@ impl SnapshotCell {
 /// Commands accepted by a worker.
 pub(crate) enum Command {
     Learn { features: Vec<f64>, label: usize },
+    /// A block of labeled examples applied as one unit — a mini-batch
+    /// model stages the whole block through the blocked learn pipeline.
+    LearnBatch { xs: Vec<Vec<f64>>, labels: Vec<usize> },
     Predict { features: Vec<f64>, reply: mpsc::Sender<Vec<f64>> },
     /// Regression: continuous output block (n_classes doubles as the
     /// output arity).
@@ -85,9 +88,11 @@ pub struct WorkerConfig {
     /// learn/score passes serial; `Some` splits the K components across
     /// a fixed thread pool (results are bit-identical either way).
     pub engine: Option<EngineConfig>,
-    /// Republish the read-path snapshot every this many **applied**
-    /// learn steps (plus once whenever the queue goes idle with
-    /// unpublished learns), bounding read staleness to
+    /// Republish the read-path snapshot every this many **applied
+    /// points** (plus once whenever the queue goes idle with
+    /// unpublished learns). A `learn_batch` of B points advances the
+    /// cadence by B, not 1, so mini-batch traffic does not stretch
+    /// staleness B-fold. Read staleness stays
     /// < `snapshot_interval` applied points while the stream flows —
     /// learns still waiting in the command queue add up to
     /// `queue_capacity` on top under backlog. `0` disables snapshot
@@ -130,7 +135,7 @@ impl WorkerConfig {
     }
 }
 
-/// Default learn steps between snapshot republishes — small, so the
+/// Default points between snapshot republishes — small, so the
 /// read path lags the write path by at most a few points.
 pub const DEFAULT_SNAPSHOT_INTERVAL: usize = 8;
 
@@ -215,6 +220,17 @@ impl WorkerHandle {
     /// Enqueue a labeled example. `Err(Rejected)` if shed/closed.
     pub fn learn(&self, features: Vec<f64>, label: usize) -> Result<()> {
         if self.queue.push(Command::Learn { features, label }) {
+            Ok(())
+        } else {
+            Err(CoordError::Rejected("worker queue"))
+        }
+    }
+
+    /// Enqueue a block of labeled examples as one command. The shard
+    /// applies the whole block before serving anything queued after it,
+    /// and a mini-batch model runs it through the staged learn pipeline.
+    pub fn learn_batch(&self, xs: Vec<Vec<f64>>, labels: Vec<usize>) -> Result<()> {
+        if self.queue.push(Command::LearnBatch { xs, labels }) {
             Ok(())
         } else {
             Err(CoordError::Rejected("worker queue"))
@@ -339,7 +355,10 @@ fn worker_loop(
         .with_max_components(cfg.gmm.max_components)
         .with_kernel_mode(cfg.gmm.kernel_mode)
         .with_search_mode(cfg.gmm.search_mode)
-        .with_replica_mode(cfg.gmm.replica_mode);
+        .with_replica_mode(cfg.gmm.replica_mode)
+        .with_learn_mode(cfg.gmm.learn_mode)
+        .with_decay(cfg.gmm.decay)
+        .with_max_age(cfg.gmm.max_age);
     joint_cfg = if cfg.gmm.prune {
         joint_cfg.with_pruning(cfg.gmm.v_min, cfg.gmm.sp_min)
     } else {
@@ -378,8 +397,10 @@ fn worker_loop(
     let mut learned: u64 = 0;
     let mut predicted: u64 = 0;
     let mut xla_batches: u64 = 0;
-    // Learn steps since the last snapshot publish (the read path's
-    // staleness); republished every `snapshot_interval` and on idle.
+    // Points applied since the last snapshot publish (the read path's
+    // staleness); republished every `snapshot_interval` points and on
+    // idle. Counted in points, not learn commands, so a learn_batch of
+    // B advances the cadence by B.
     let mut dirty: usize = 0;
     let publish_every = cfg.snapshot_interval;
     let mut batcher: Batcher<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Batcher::new(cfg.batcher);
@@ -461,6 +482,29 @@ fn worker_loop(
                 if publish_every > 0 && dirty >= publish_every {
                     publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
                 }
+            }
+            Some(Command::LearnBatch { xs, labels }) => {
+                if let Some(b) = batcher.flush() {
+                    flush(b.items, &clf, &xla, &mut xla_batches, &mut predicted, &metrics);
+                }
+                let started = Instant::now();
+                let n = xs.len();
+                let well_formed = labels.len() == n
+                    && xs.iter().all(|x| x.len() == cfg.n_features)
+                    && labels.iter().all(|&l| l < cfg.n_classes);
+                if n > 0 && well_formed {
+                    let before = clf.num_components();
+                    clf.train_batch(&xs, &labels);
+                    for _ in before..clf.num_components() {
+                        metrics.record_component_created();
+                    }
+                    learned += n as u64;
+                    metrics.record_learn_block(started, n);
+                    dirty += n;
+                    if publish_every > 0 && dirty >= publish_every {
+                        publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
+                    }
+                } // else: malformed block — counted nowhere, rejected upstream
             }
             Some(Command::Predict { features, reply }) => {
                 if let Some(b) = batcher.push((features, reply)) {
@@ -606,6 +650,93 @@ mod tests {
         assert_eq!(stats.predicted, 60);
         assert!(stats.components >= 3);
         assert_eq!(metrics.snapshot().learned, 300);
+        worker.join();
+    }
+
+    #[test]
+    fn learn_batch_matches_pointwise_online_and_counts_points() {
+        // An Online-mode shard fed one learn_batch must end bit-identical
+        // to a shard fed the same points one learn at a time, and the
+        // snapshot cadence must count the block's points, not "1 call".
+        let (batched, metrics) = spawn_blob_worker();
+        let (pointwise, _m) = spawn_blob_worker();
+        let mut rng = Pcg64::seed(11);
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..60 {
+            xs.push(blob_point(&mut rng, i % 3));
+            labels.push(i % 3);
+        }
+        // Ten blocks of six points each, default snapshot interval 8:
+        // a points-counted cadence crosses the interval roughly every
+        // other block (~4+ interval publishes); the old calls-counted
+        // cadence would have seen only 10 dirty steps → 1 publish.
+        for (chunk_x, chunk_c) in xs.chunks(6).zip(labels.chunks(6)) {
+            batched.handle.learn_batch(chunk_x.to_vec(), chunk_c.to_vec()).unwrap();
+        }
+        for (x, &c) in xs.iter().zip(&labels) {
+            pointwise.handle.learn(x.clone(), c).unwrap();
+        }
+        for i in 0..10 {
+            let x = blob_point(&mut rng, i % 3);
+            assert_eq!(
+                batched.handle.predict(x.clone()).unwrap(),
+                pointwise.handle.predict(x).unwrap()
+            );
+        }
+        let stats = batched.handle.stats().unwrap();
+        assert_eq!(stats.learned, 60, "worker stats count points, not calls");
+        assert_eq!(stats.points, 60);
+        let m = metrics.snapshot();
+        assert_eq!(m.learned, 10, "ten learn operations");
+        assert_eq!(m.points_learned, 60, "…of 60 points");
+        assert!(m.snapshots_published >= 4, "published {}", m.snapshots_published);
+        assert!(
+            batched.handle.wait_snapshot_points(60, 1000).is_some(),
+            "snapshot must catch up to the whole stream"
+        );
+        batched.join();
+        pointwise.join();
+    }
+
+    #[test]
+    fn minibatch_worker_learn_batch_stages_blocks() {
+        // A MiniBatch-mode shard accepts learn_batch traffic and trains
+        // a usable classifier through the staged pipeline.
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1)
+            .with_delta(0.5)
+            .with_beta(0.05)
+            .without_pruning()
+            .with_learn_mode(crate::gmm::LearnMode::MiniBatch { b: 16 });
+        let cfg = WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]);
+        let worker = Worker::spawn(cfg, metrics);
+        let mut rng = Pcg64::seed(12);
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..300 {
+            xs.push(blob_point(&mut rng, i % 3));
+            labels.push(i % 3);
+        }
+        for (chunk_x, chunk_c) in xs.chunks(50).zip(labels.chunks(50)) {
+            worker.handle.learn_batch(chunk_x.to_vec(), chunk_c.to_vec()).unwrap();
+        }
+        let mut correct = 0;
+        for i in 0..60 {
+            let c = i % 3;
+            let scores = worker.handle.predict(blob_point(&mut rng, c)).unwrap();
+            let pred = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == c {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 50, "correct {correct}/60");
+        assert_eq!(worker.handle.stats().unwrap().learned, 300);
         worker.join();
     }
 

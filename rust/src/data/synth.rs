@@ -156,6 +156,96 @@ fn image_like(spec: &DatasetSpec, seed: u64) -> Dataset {
     Dataset::new(spec.name, features, labels, k)
 }
 
+/// Shape of a [`drift_stream`]: class-conditional Gaussians whose means
+/// jump once (piecewise mean shift) and whose covariance scale ramps up
+/// after the shift — the concept-drift scenario the decay/max-age knobs
+/// (`GmmConfig::with_decay` / `with_max_age`) are built for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftSpec {
+    pub dim: usize,
+    pub classes: usize,
+    pub instances: usize,
+    /// Stream index where every class mean jumps. Points before it come
+    /// from the original mixture, points at or after it from the
+    /// shifted one.
+    pub shift_at: usize,
+    /// Euclidean distance of each class-mean jump (each class moves in
+    /// its own random direction). Ignored when `swap_classes` is set.
+    pub shift: f64,
+    /// Adversarial drift: instead of a random jump, class `c` moves to
+    /// class `(c + 1) % classes`' pre-shift mean. A model that keeps
+    /// its pre-shift mass is then not merely stale but actively
+    /// *wrong* — old components vote the old label at the new
+    /// location — which is what the decay/max-age recovery tests need.
+    pub swap_classes: bool,
+    /// Covariance scale multiplier reached at the end of the stream:
+    /// post-shift noise ramps linearly from 1× to `cov_ramp`× standard
+    /// deviation (1.0 = mean shift only).
+    pub cov_ramp: f64,
+}
+
+/// Drift-injection stream: piecewise mean shift plus covariance ramp.
+///
+/// Same generator family as the Table 1 Gaussian stand-ins (random SPD
+/// covariance per class, Cholesky sampling, balanced `i % k` labels),
+/// but the class means jump by `spec.shift` at `spec.shift_at` and the
+/// noise scale then ramps toward `spec.cov_ramp`. Order matters: rows
+/// are a *stream*, not an i.i.d. set — feed them to `learn` in index
+/// order.
+pub fn drift_stream(spec: &DriftSpec, seed: u64) -> Dataset {
+    assert!(spec.classes > 0 && spec.dim > 0);
+    assert!(spec.shift_at <= spec.instances);
+    assert!(spec.cov_ramp >= 1.0, "cov_ramp is a scale-up factor");
+    let mut rng = Pcg64::seed(seed ^ hash_name("drift-stream"));
+    let d = spec.dim;
+    let k = spec.classes;
+
+    let mut centers = Vec::with_capacity(k);
+    let mut shifted = Vec::with_capacity(k);
+    let mut chols = Vec::with_capacity(k);
+    for _ in 0..k {
+        let c: Vec<f64> = (0..d).map(|_| rng.normal() * 2.0).collect();
+        // Random unit direction scaled to the requested jump distance.
+        let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        for v in dir.iter_mut() {
+            *v *= spec.shift / norm;
+        }
+        shifted.push(c.iter().zip(dir.iter()).map(|(a, b)| a + b).collect::<Vec<f64>>());
+        let mut cov = testutil::random_spd(d, &mut rng);
+        let tr: f64 = (0..d).map(|i| cov[(i, i)]).sum();
+        cov.scale_in_place(d as f64 / tr);
+        centers.push(c);
+        chols.push(Cholesky::new(&cov).expect("spd"));
+    }
+    if spec.swap_classes {
+        for c in 0..k {
+            shifted[c] = centers[(c + 1) % k].clone();
+        }
+    }
+
+    let post = (spec.instances - spec.shift_at).max(1) as f64;
+    let mut features = Vec::with_capacity(spec.instances);
+    let mut labels = Vec::with_capacity(spec.instances);
+    let mut z = vec![0.0; d];
+    for i in 0..spec.instances {
+        let class = i % k;
+        let (mean, scale) = if i < spec.shift_at {
+            (&centers[class], 1.0)
+        } else {
+            let t = (i - spec.shift_at) as f64 / post;
+            (&shifted[class], 1.0 + (spec.cov_ramp - 1.0) * t)
+        };
+        rng.fill_normal(&mut z);
+        let noise = chols[class].sample_transform(&z);
+        let row: Vec<f64> =
+            mean.iter().zip(noise.iter()).map(|(c, n)| c + scale * n).collect();
+        features.push(row);
+        labels.push(class);
+    }
+    Dataset::new("drift-stream", features, labels, k)
+}
+
 fn hash_name(name: &str) -> u64 {
     // FNV-1a, so each dataset gets an independent stream from one seed.
     let mut h: u64 = 0xcbf29ce484222325;
@@ -211,6 +301,95 @@ mod tests {
         let same = dist(&d.features[0], &d.features[10]);
         let cross = dist(&d.features[0], &d.features[1]);
         assert!(same < cross, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn drift_stream_shifts_means_and_ramps_noise() {
+        let spec = DriftSpec {
+            dim: 4,
+            classes: 2,
+            instances: 2000,
+            shift_at: 1000,
+            shift: 8.0,
+            swap_classes: false,
+            cov_ramp: 3.0,
+        };
+        let d = drift_stream(&spec, 5);
+        assert_eq!(d.len(), 2000);
+        assert_eq!(d.dim(), 4);
+        // Per-class mean jumps by about `shift` across the boundary.
+        for class in 0..2 {
+            let mean = |range: std::ops::Range<usize>| -> Vec<f64> {
+                let rows: Vec<&Vec<f64>> = range
+                    .filter(|&i| d.labels[i] == class)
+                    .map(|i| &d.features[i])
+                    .collect();
+                (0..4)
+                    .map(|j| rows.iter().map(|r| r[j]).sum::<f64>() / rows.len() as f64)
+                    .collect()
+            };
+            let pre = mean(0..1000);
+            let post = mean(1000..2000);
+            let jump: f64 =
+                pre.iter().zip(&post).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            assert!(
+                (jump - 8.0).abs() < 2.5,
+                "class {class} mean jumped {jump}, wanted ~8"
+            );
+        }
+        // Noise widens along the post-shift ramp: late scatter beats
+        // early post-shift scatter.
+        let scatter = |range: std::ops::Range<usize>| -> f64 {
+            let rows: Vec<&Vec<f64>> =
+                range.filter(|&i| d.labels[i] == 0).map(|i| &d.features[i]).collect();
+            let m: Vec<f64> = (0..4)
+                .map(|j| rows.iter().map(|r| r[j]).sum::<f64>() / rows.len() as f64)
+                .collect();
+            rows.iter()
+                .map(|r| r.iter().zip(&m).map(|(x, c)| (x - c) * (x - c)).sum::<f64>())
+                .sum::<f64>()
+                / rows.len() as f64
+        };
+        assert!(scatter(1800..2000) > scatter(1000..1200) * 1.5);
+        // Deterministic given the seed.
+        let e = drift_stream(&spec, 5);
+        assert_eq!(d.features, e.features);
+    }
+
+    #[test]
+    fn drift_stream_swap_moves_classes_onto_each_other() {
+        let spec = DriftSpec {
+            dim: 3,
+            classes: 2,
+            instances: 2000,
+            shift_at: 1000,
+            shift: 0.0,
+            swap_classes: true,
+            cov_ramp: 1.0,
+        };
+        let d = drift_stream(&spec, 11);
+        let mean = |class: usize, range: std::ops::Range<usize>| -> Vec<f64> {
+            let rows: Vec<&Vec<f64>> = range
+                .filter(|&i| d.labels[i] == class)
+                .map(|i| &d.features[i])
+                .collect();
+            (0..3)
+                .map(|j| rows.iter().map(|r| r[j]).sum::<f64>() / rows.len() as f64)
+                .collect()
+        };
+        // Post-shift class 0 sits where class 1 used to be (and vice
+        // versa) — sample means agree to sampling noise.
+        for c in 0..2 {
+            let post = mean(c, 1000..2000);
+            let other_pre = mean(1 - c, 0..1000);
+            let gap: f64 = post
+                .iter()
+                .zip(&other_pre)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            assert!(gap < 0.5, "class {c} did not land on its partner (gap {gap})");
+        }
     }
 
     #[test]

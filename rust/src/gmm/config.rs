@@ -1,6 +1,7 @@
 //! Shared configuration for both IGMN variants.
 
 use super::candidates::SearchMode;
+use super::learn_pipeline::LearnMode;
 use super::replica::ReplicaMode;
 use crate::linalg::KernelMode;
 use crate::stats::chi2_quantile;
@@ -55,6 +56,28 @@ pub struct GmmConfig {
     /// only immutable published snapshots; the write path and
     /// conditional inference always run f64.
     pub replica_mode: ReplicaMode,
+    /// How the write path consumes the stream: [`LearnMode::Online`]
+    /// (default; one point at a time, bit-identical to the pre-pipeline
+    /// learn path at every thread count) or [`LearnMode::MiniBatch`]
+    /// (stage `b`-point blocks through the batched distance pass — see
+    /// [`LearnMode`] for the contract). Affects the precision path's
+    /// `learn_batch` only; the covariance baseline always learns
+    /// point-by-point.
+    pub learn_mode: LearnMode,
+    /// Per-point exponential forgetting factor applied to every
+    /// component's accumulator `sp` before the point is learned.
+    /// `1.0` (default) disables forgetting and adds no floating-point
+    /// work; values in `(0, 1)` make the mixture track non-stationary
+    /// streams (old evidence decays, so drifted-away components lose
+    /// their priors and eventually trip the §2.3 prune).
+    pub decay: f64,
+    /// Max-age eviction horizon (0 = off): a component that has not won
+    /// a point (argmax posterior) in more than `max_age` learned points
+    /// is evicted by the §2.3 prune sweep's age arm. The integer age
+    /// `v` cannot decay, so this is the drift-adaptive complement to
+    /// [`GmmConfig::decay`] for components stranded by a distribution
+    /// shift.
+    pub max_age: u64,
     chi2_threshold: f64,
 }
 
@@ -74,6 +97,9 @@ impl GmmConfig {
             kernel_mode: KernelMode::Strict,
             search_mode: SearchMode::Strict,
             replica_mode: ReplicaMode::Off,
+            learn_mode: LearnMode::Online,
+            decay: 1.0,
+            max_age: 0,
             chi2_threshold: 0.0,
         };
         cfg.recompute_threshold();
@@ -128,6 +154,30 @@ impl GmmConfig {
     /// [`GmmConfig::replica_mode`]).
     pub fn with_replica_mode(mut self, mode: ReplicaMode) -> Self {
         self.replica_mode = mode;
+        self
+    }
+
+    /// Select the write-path learn mode (see [`GmmConfig::learn_mode`]).
+    pub fn with_learn_mode(mut self, mode: LearnMode) -> Self {
+        self.learn_mode = mode;
+        self
+    }
+
+    /// Set the per-point `sp` forgetting factor (see
+    /// [`GmmConfig::decay`]). `1.0` disables forgetting.
+    pub fn with_decay(mut self, decay: f64) -> Self {
+        assert!(
+            decay > 0.0 && decay <= 1.0,
+            "decay must be in (0, 1], got {decay}"
+        );
+        self.decay = decay;
+        self
+    }
+
+    /// Set the max-age eviction horizon (see [`GmmConfig::max_age`]).
+    /// `0` disables age eviction.
+    pub fn with_max_age(mut self, max_age: u64) -> Self {
+        self.max_age = max_age;
         self
     }
 
@@ -204,6 +254,28 @@ mod tests {
         let cfg = cfg.with_replica_mode(ReplicaMode::F32 { tol: 1e-2 });
         assert_eq!(cfg.replica_mode, ReplicaMode::F32 { tol: 1e-2 });
         assert_eq!(cfg.replica_mode.to_wire(), "f32:0.01");
+    }
+
+    #[test]
+    fn learn_mode_defaults_online_and_round_trips() {
+        let cfg = GmmConfig::new(4);
+        assert_eq!(cfg.learn_mode, LearnMode::Online);
+        assert_eq!(cfg.decay, 1.0);
+        assert_eq!(cfg.max_age, 0);
+        let cfg = cfg
+            .with_learn_mode(LearnMode::MiniBatch { b: 32 })
+            .with_decay(0.999)
+            .with_max_age(5000);
+        assert_eq!(cfg.learn_mode, LearnMode::MiniBatch { b: 32 });
+        assert_eq!(cfg.learn_mode.to_wire(), "minibatch:32");
+        assert_eq!(cfg.decay, 0.999);
+        assert_eq!(cfg.max_age, 5000);
+    }
+
+    #[test]
+    #[should_panic(expected = "decay must be in (0, 1]")]
+    fn decay_rejects_out_of_range() {
+        let _ = GmmConfig::new(2).with_decay(0.0);
     }
 
     #[test]

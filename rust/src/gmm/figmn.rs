@@ -50,13 +50,16 @@ use super::candidates::{CandidateIndex, SearchMode};
 use super::inference::{
     precision_conditional, precision_conditional_multi_with, target_block_cholesky,
 };
+use super::learn_pipeline::{
+    argmax, candidate_distance_pass, candidate_update_pass, distance_pass, init_component,
+    learn_block, update_pass, BlockScratch, LearnMode, LEARN_BLOCK_SLOTS,
+};
 use super::score_block::{component_block_terms, wblock_len, ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
 use super::{log_gaussian, softmax_posteriors, GmmConfig, IncrementalMixture, LearnOutcome};
 use crate::engine::{
     logsumexp_tree, worth_sharding, worth_sharding_batch, EngineConfig, SharedMut, WorkerPool,
 };
-use crate::linalg::rank_one::figmn_fused_update_packed_mode;
 use crate::linalg::{norm2, packed, sub_into, Cholesky, KernelMode, Matrix};
 
 /// Cap on live per-(point, component) slots in the batch scoring paths:
@@ -95,6 +98,9 @@ pub struct Figmn {
     /// …and each candidate's Euclidean mean distance `‖x − μ_j‖`
     /// (drift bookkeeping for the index).
     buf_en: Vec<f64>,
+    /// Mini-batch block scratch (frozen K×B score/w tiles and the
+    /// per-block decision state) — see [`super::learn_pipeline`].
+    blk: BlockScratch,
 }
 
 impl Figmn {
@@ -132,6 +138,7 @@ impl Figmn {
             buf_sp: Vec::new(),
             buf_cand: Vec::new(),
             buf_en: Vec::new(),
+            blk: BlockScratch::default(),
         }
     }
 
@@ -174,6 +181,10 @@ impl Figmn {
             SearchMode::TopC { .. } if !store.is_empty() => Some(CandidateIndex::build(&store)),
             _ => None,
         };
+        // Refresh stamps are runtime drift bookkeeping, not serialized
+        // model state: restored survivors restart their eviction clocks
+        // at the checkpoint's stream position.
+        store.reset_stamps(points);
         Figmn {
             cfg,
             sigma_ini,
@@ -188,6 +199,7 @@ impl Figmn {
             buf_sp: Vec::new(),
             buf_cand: Vec::new(),
             buf_en: Vec::new(),
+            blk: BlockScratch::default(),
         }
     }
 
@@ -275,26 +287,29 @@ impl Figmn {
     }
 
     fn create(&mut self, x: &[f64]) {
-        let d = self.cfg.dim;
-        let mut lambda = vec![0.0; self.store.mat_len()];
-        let mut log_det = 0.0;
-        for i in 0..d {
-            let s2 = self.sigma_ini[i] * self.sigma_ini[i];
-            lambda[packed::row_start(i, d)] = 1.0 / s2;
-            log_det += s2.ln();
-        }
-        self.store.push(x, &lambda, log_det, 1.0, 1);
+        init_component(&mut self.store, x, &self.sigma_ini, self.cfg.dim);
+        // Fresh components start their eviction clock at the creating
+        // point's stream position.
+        self.store.set_stamp(self.store.len() - 1, self.points);
     }
 
     fn prune(&mut self) {
-        if !self.cfg.prune {
+        let age = self.cfg.max_age > 0;
+        if !self.cfg.prune && !age {
             return;
         }
         // The store's sweep is shared with Igmn, so both variants make
         // identical prune decisions, and the mixture can never empty
         // (§2.3 sweep keeps the strongest component when everything
         // trips the predicate).
-        self.store.prune(self.cfg.v_min, self.cfg.sp_min);
+        if age {
+            // v_min = u64::MAX disables the spurious arm when §2.3
+            // pruning is off and only age eviction is configured.
+            let v_min = if self.cfg.prune { self.cfg.v_min } else { u64::MAX };
+            self.store.prune_aged(v_min, self.cfg.sp_min, self.cfg.max_age, self.points);
+        } else {
+            self.store.prune(self.cfg.v_min, self.cfg.sp_min);
+        }
         // Priors (Eq. 12) are derived from sp on demand; nothing else to
         // renormalize.
     }
@@ -441,314 +456,6 @@ impl Figmn {
     }
 }
 
-/// Phase A of one learn step: squared Mahalanobis distances to every
-/// component (Eq. 22), saving each component's `w = Λ·e` for the fused
-/// update. Free function so the caller can split `Figmn`'s field borrows.
-#[allow(clippy::too_many_arguments)]
-fn distance_pass(
-    store: &ComponentStore,
-    x: &[f64],
-    d: usize,
-    buf_d2: &mut [f64],
-    buf_ws: &mut [f64],
-    buf_e: &mut [f64],
-    mode: KernelMode,
-    pool: Option<&WorkerPool>,
-) {
-    let k = store.len();
-    match pool {
-        Some(pool) if worth_sharding(k, d, pool.threads()) => {
-            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
-            let ws = SharedMut::new(buf_ws.as_mut_ptr());
-            pool.run(k, &move |_, range, scratch| {
-                scratch.ensure(d);
-                for j in range {
-                    let e = &mut scratch.e[..d];
-                    sub_into(x, store.mean(j), e);
-                    // Safety: slot j / row j are owned by this shard only.
-                    unsafe {
-                        *d2.at(j) = packed::quad_form_with_mode(
-                            store.mat(j),
-                            d,
-                            e,
-                            ws.slice(j * d, d),
-                            mode,
-                        );
-                    }
-                }
-            });
-        }
-        _ => {
-            let e = &mut buf_e[..d];
-            for (j, slot) in buf_d2.iter_mut().enumerate() {
-                sub_into(x, store.mean(j), e);
-                *slot = packed::quad_form_with_mode(
-                    store.mat(j),
-                    d,
-                    e,
-                    &mut buf_ws[j * d..(j + 1) * d],
-                    mode,
-                );
-            }
-        }
-    }
-}
-
-/// Phase B of one learn step: apply Eqs. 4–9 and the fused rank-two
-/// update to every component given its posterior. Component-local, so it
-/// shards exactly like the distance pass — each worker streams the
-/// contiguous arena rows of its component range.
-#[allow(clippy::too_many_arguments)]
-fn update_pass(
-    store: &mut ComponentStore,
-    x: &[f64],
-    d: usize,
-    post: &[f64],
-    buf_d2: &[f64],
-    buf_ws: &[f64],
-    buf_e: &mut [f64],
-    sigma_ini: &[f64],
-    mode: KernelMode,
-    pool: Option<&WorkerPool>,
-) {
-    let k = store.len();
-    match pool {
-        Some(pool) if worth_sharding(k, d, pool.threads()) => {
-            let raw = store.raw_mut();
-            pool.run(k, &move |_, range, scratch| {
-                scratch.ensure(d);
-                for j in range {
-                    // Safety: arena row j is owned by exactly one shard.
-                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
-                    update_component(
-                        mean,
-                        lambda,
-                        log_det,
-                        sp,
-                        v,
-                        x,
-                        d,
-                        post[j],
-                        buf_d2[j],
-                        &buf_ws[j * d..(j + 1) * d],
-                        sigma_ini,
-                        mode,
-                        &mut scratch.e[..d],
-                    );
-                }
-            });
-        }
-        _ => {
-            for j in 0..k {
-                let (mean, lambda, log_det, sp, v) = store.row_mut(j);
-                update_component(
-                    mean,
-                    lambda,
-                    log_det,
-                    sp,
-                    v,
-                    x,
-                    d,
-                    post[j],
-                    buf_d2[j],
-                    &buf_ws[j * d..(j + 1) * d],
-                    sigma_ini,
-                    mode,
-                    &mut buf_e[..d],
-                );
-            }
-        }
-    }
-}
-
-/// The component-local body shared by the serial and sharded update
-/// paths — one instruction sequence, so the two are bit-identical.
-#[allow(clippy::too_many_arguments)]
-fn update_component(
-    mean: &mut [f64],
-    lambda: &mut [f64],
-    log_det: &mut f64,
-    sp: &mut f64,
-    v: &mut u64,
-    x: &[f64],
-    d: usize,
-    p: f64,
-    d2j: f64,
-    w: &[f64],
-    sigma_ini: &[f64],
-    mode: KernelMode,
-    e: &mut [f64],
-) {
-    *v += 1; // Eq. 4
-    *sp += p; // Eq. 5
-    let omega = p / *sp; // Eq. 7 (with the *updated* sp)
-    if omega <= 0.0 {
-        // ω = 0: Eqs. 8–11 are exact no-ops; skip the O(D²) work.
-        return;
-    }
-    sub_into(x, mean, e); // Eq. 6
-    for (m, &ei) in mean.iter_mut().zip(e.iter()) {
-        *m += omega * ei; // Eqs. 8–9
-    }
-    // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean Eq. 11 —
-    // DESIGN.md §Deviations; single-pass rewrite — EXPERIMENTS.md §Perf
-    // L3-1), reusing w/q from the distance pass, on the packed row.
-    match figmn_fused_update_packed_mode(lambda, d, w, d2j, omega, *log_det, mode) {
-        Some(r) => *log_det = r.log_det,
-        None => {
-            // Float underflow destroyed positive-definiteness (reachable
-            // only at extreme conditioning). Reset the component's shape
-            // to σ_ini around its current mean. Multiply-by-zero, not
-            // fill: the dense path's `scale_in_place(0.0)` preserves
-            // the sign of zeros (−x·0.0 = −0.0), and the bit-identity
-            // contract covers even this branch.
-            for v in lambda.iter_mut() {
-                *v *= 0.0;
-            }
-            let mut ld = 0.0;
-            for i in 0..d {
-                let s2 = sigma_ini[i] * sigma_ini[i];
-                lambda[packed::row_start(i, d)] = 1.0 / s2;
-                ld += s2.ln();
-            }
-            *log_det = ld;
-        }
-    }
-}
-
-/// Candidate-set variant of the distance pass: Mahalanobis distances
-/// and `w = Λ·e` for the `cands` components only, plus each candidate's
-/// Euclidean mean distance (index drift bookkeeping). With an engine
-/// attached the *candidate positions* are sharded — the per-shard
-/// candidate intersection of the engine docs — with merges unchanged.
-#[allow(clippy::too_many_arguments)]
-fn candidate_distance_pass(
-    store: &ComponentStore,
-    x: &[f64],
-    d: usize,
-    cands: &[u32],
-    buf_d2: &mut [f64],
-    buf_ws: &mut [f64],
-    buf_en: &mut [f64],
-    buf_e: &mut [f64],
-    mode: KernelMode,
-    pool: Option<&WorkerPool>,
-) {
-    let cn = cands.len();
-    match pool {
-        Some(pool) if worth_sharding(cn, d, pool.threads()) => {
-            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
-            let ws = SharedMut::new(buf_ws.as_mut_ptr());
-            let en = SharedMut::new(buf_en.as_mut_ptr());
-            pool.run(cn, &move |_, range, scratch| {
-                scratch.ensure(d);
-                for i in range {
-                    let j = cands[i] as usize;
-                    let e = &mut scratch.e[..d];
-                    sub_into(x, store.mean(j), e);
-                    // Safety: slot i is owned by exactly one shard.
-                    unsafe {
-                        *en.at(i) = norm2(e).sqrt();
-                        *d2.at(i) = packed::quad_form_with_mode(
-                            store.mat(j),
-                            d,
-                            e,
-                            ws.slice(i * d, d),
-                            mode,
-                        );
-                    }
-                }
-            });
-        }
-        _ => {
-            let e = &mut buf_e[..d];
-            for (i, &jc) in cands.iter().enumerate() {
-                let j = jc as usize;
-                sub_into(x, store.mean(j), e);
-                buf_en[i] = norm2(e).sqrt();
-                buf_d2[i] = packed::quad_form_with_mode(
-                    store.mat(j),
-                    d,
-                    e,
-                    &mut buf_ws[i * d..(i + 1) * d],
-                    mode,
-                );
-            }
-        }
-    }
-}
-
-/// Candidate-set variant of the update pass: Eqs. 4–9 plus the fused
-/// rank-two update for the `cands` components only. Candidate indices
-/// are unique, so sharding the candidate positions gives each worker
-/// exclusive ownership of its arena rows — same safety argument as the
-/// full pass.
-#[allow(clippy::too_many_arguments)]
-fn candidate_update_pass(
-    store: &mut ComponentStore,
-    x: &[f64],
-    d: usize,
-    post: &[f64],
-    cands: &[u32],
-    buf_d2: &[f64],
-    buf_ws: &[f64],
-    buf_e: &mut [f64],
-    sigma_ini: &[f64],
-    mode: KernelMode,
-    pool: Option<&WorkerPool>,
-) {
-    let cn = cands.len();
-    match pool {
-        Some(pool) if worth_sharding(cn, d, pool.threads()) => {
-            let raw = store.raw_mut();
-            pool.run(cn, &move |_, range, scratch| {
-                scratch.ensure(d);
-                for i in range {
-                    let j = cands[i] as usize;
-                    // Safety: candidate indices are unique, so arena row
-                    // j is owned by exactly one shard position.
-                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
-                    update_component(
-                        mean,
-                        lambda,
-                        log_det,
-                        sp,
-                        v,
-                        x,
-                        d,
-                        post[i],
-                        buf_d2[i],
-                        &buf_ws[i * d..(i + 1) * d],
-                        sigma_ini,
-                        mode,
-                        &mut scratch.e[..d],
-                    );
-                }
-            });
-        }
-        _ => {
-            for (i, &jc) in cands.iter().enumerate() {
-                let (mean, lambda, log_det, sp, v) = store.row_mut(jc as usize);
-                update_component(
-                    mean,
-                    lambda,
-                    log_det,
-                    sp,
-                    v,
-                    x,
-                    d,
-                    post[i],
-                    buf_d2[i],
-                    &buf_ws[i * d..(i + 1) * d],
-                    sigma_ini,
-                    mode,
-                    &mut buf_e[..d],
-                );
-            }
-        }
-    }
-}
-
 impl Figmn {
     /// The pre-index full-K learn body — strict mode runs exactly this,
     /// so a strict model is bit-identical to every pre-index release.
@@ -781,6 +488,12 @@ impl Figmn {
                 self.buf_sp.push(self.store.sp(j));
             }
             let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
+            if self.cfg.max_age > 0 {
+                // Age bookkeeping: the point's argmax winner is
+                // refreshed (ties → lowest index). No floating-point
+                // work, so the default path stays bit-identical.
+                self.store.set_stamp(argmax(&post), self.points);
+            }
             {
                 let Figmn { store, sigma_ini, buf_d2, buf_ws, buf_e, engine, .. } = self;
                 update_pass(
@@ -902,6 +615,12 @@ impl Figmn {
                 self.buf_sp.push(self.store.sp(j));
             }
             let post = softmax_posteriors(&self.buf_ll, &self.buf_sp);
+            if self.cfg.max_age > 0 {
+                // Age bookkeeping over the candidate set: the winner is
+                // the argmax of the restricted posteriors.
+                let w = self.buf_cand[argmax(&post)] as usize;
+                self.store.set_stamp(w, self.points);
+            }
             {
                 let Figmn { store, sigma_ini, buf_cand, buf_d2, buf_ws, buf_e, engine, .. } =
                     self;
@@ -942,6 +661,55 @@ impl Figmn {
             LearnOutcome::Created
         }
     }
+
+    /// Learn one mini-batch block. Length-1 blocks, TopC models, and an
+    /// empty store route through the exact online body (so
+    /// `MiniBatch{b: 1}` is bit-identical to `Online`, and TopC keeps
+    /// its exact fallback gate); everything else stages through
+    /// [`learn_block`]. Oversized blocks are re-chunked so the frozen
+    /// `K×B×D` w-tile stays within [`LEARN_BLOCK_SLOTS`].
+    fn learn_chunk(&mut self, xs: &[Vec<f64>], out: &mut Vec<LearnOutcome>) {
+        if xs.len() >= 2 && !self.store.is_empty() {
+            let slots = self.store.len() * self.cfg.dim;
+            let b_max = (LEARN_BLOCK_SLOTS / slots.max(1)).max(1);
+            if xs.len() > b_max {
+                for sub in xs.chunks(b_max) {
+                    self.learn_chunk(sub, out);
+                }
+                return;
+            }
+        }
+        let blocked = xs.len() >= 2
+            && !self.store.is_empty()
+            && matches!(self.cfg.search_mode, SearchMode::Strict);
+        if !blocked {
+            for x in xs {
+                out.push(self.learn(x));
+            }
+            return;
+        }
+        let d = self.cfg.dim;
+        for x in xs.iter() {
+            assert_eq!(x.len(), d, "learn: dimensionality mismatch");
+        }
+        if self.cfg.decay < 1.0 {
+            // Per-point forgetting applied in bulk at block start
+            // (decay^B): within a block the sp accumulators are frozen
+            // anyway, so this is the blocked analogue of the online
+            // per-point decay sweep.
+            self.store.decay_sps(self.cfg.decay.powi(xs.len() as i32));
+        }
+        let base = self.points;
+        self.points += xs.len() as u64;
+        {
+            let Figmn { cfg, sigma_ini, store, engine, blk, .. } = self;
+            learn_block(store, xs, cfg, sigma_ini, engine.as_ref(), blk, base, out);
+        }
+        // One §2.3 sweep per block (the online path sweeps per point —
+        // block-granular pruning is part of the mini-batch
+        // approximation).
+        self.prune();
+    }
 }
 
 impl IncrementalMixture for Figmn {
@@ -955,10 +723,41 @@ impl IncrementalMixture for Figmn {
             }
             return LearnOutcome::Created;
         }
+        if self.cfg.decay < 1.0 {
+            // Drift adaptation: exponential forgetting of the sp
+            // accumulators before the point is applied. The decay = 1.0
+            // default skips the sweep entirely, so the stationary path
+            // performs exactly the pre-decay floating-point sequence.
+            self.store.decay_sps(self.cfg.decay);
+        }
         match self.cfg.search_mode {
             SearchMode::Strict => self.learn_full(x),
             SearchMode::TopC { c } => self.learn_topc(x, c),
         }
+    }
+
+    /// Batch write surface. [`LearnMode::Online`] models (the default)
+    /// consume the batch point-by-point — exactly the trait's serial
+    /// loop — while [`LearnMode::MiniBatch`] models stage `b`-point
+    /// blocks through the learn pipeline (see
+    /// [`super::learn_pipeline`] for the freeze semantics and the
+    /// exactness contract: `b = 1` routes through the online body and
+    /// is bit-identical to `Online` at every thread count).
+    fn learn_batch(&mut self, xs: &[Vec<f64>]) -> Vec<LearnOutcome> {
+        let mut out = Vec::with_capacity(xs.len());
+        match self.cfg.learn_mode {
+            LearnMode::Online => {
+                for x in xs {
+                    out.push(self.learn(x));
+                }
+            }
+            LearnMode::MiniBatch { b } => {
+                for chunk in xs.chunks(b.max(1)) {
+                    self.learn_chunk(chunk, &mut out);
+                }
+            }
+        }
+        out
     }
 
     fn num_components(&self) -> usize {
@@ -1573,10 +1372,102 @@ mod tests {
         let m = trained();
         let d = m.dim();
         let tri = d * (d + 1) / 2;
-        assert_eq!(m.bytes_per_component(), (d + tri + 2) * 8 + 8);
+        assert_eq!(m.bytes_per_component(), (d + tri + 2) * 8 + 16);
         assert_eq!(m.model_bytes(), m.num_components() * m.bytes_per_component());
         // Strictly below the dense array-of-structs payload for D ≥ 2.
-        let dense_payload = (d + d * d + 2) * 8 + 8;
+        let dense_payload = (d + d * d + 2) * 8 + 16;
         assert!(m.bytes_per_component() < dense_payload);
+    }
+
+    #[test]
+    fn minibatch_b1_bit_identical_to_online() {
+        let data = two_cluster_data();
+        for kmode in [KernelMode::Strict, KernelMode::Fast] {
+            let cfg = GmmConfig::new(2)
+                .with_delta(0.3)
+                .with_beta(0.1)
+                .without_pruning()
+                .with_kernel_mode(kmode);
+            let mut online = Figmn::new(cfg.clone(), &[5.0, 5.0]);
+            let mut mb = Figmn::new(
+                cfg.with_learn_mode(LearnMode::MiniBatch { b: 1 }),
+                &[5.0, 5.0],
+            );
+            let xs: Vec<Vec<f64>> = data.iter().map(|p| p.to_vec()).collect();
+            let a = online.learn_batch(&xs);
+            let b = mb.learn_batch(&xs);
+            assert_eq!(a, b);
+            assert_eq!(online.store(), mb.store(), "b=1 must take the online path ({kmode:?})");
+        }
+    }
+
+    #[test]
+    fn minibatch_blocks_are_engine_invariant() {
+        let data = two_cluster_data();
+        let xs: Vec<Vec<f64>> = data.iter().map(|p| p.to_vec()).collect();
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.3)
+            .with_beta(0.1)
+            .without_pruning()
+            .with_learn_mode(LearnMode::MiniBatch { b: 8 });
+        let mut serial = Figmn::new(cfg.clone(), &[5.0, 5.0]);
+        let serial_out = serial.learn_batch(&xs);
+        for threads in [2, 4] {
+            let mut sharded =
+                Figmn::new(cfg.clone(), &[5.0, 5.0]).with_engine(EngineConfig::new(threads));
+            let out = sharded.learn_batch(&xs);
+            assert_eq!(serial_out, out);
+            assert_eq!(
+                serial.store(),
+                sharded.store(),
+                "mini-batch blocks must be bit-identical at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn decay_shrinks_stale_component_mass() {
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.3)
+            .with_beta(0.1)
+            .without_pruning()
+            .with_decay(0.9);
+        let mut m = Figmn::new(cfg, &[5.0, 5.0]);
+        m.learn(&[0.0, 0.0]);
+        let sp_before = m.component_stats(0).0;
+        // Train far away: component 0 only decays from here on.
+        for _ in 0..20 {
+            m.learn(&[10.0, 10.0]);
+        }
+        let sp_after = m.component_stats(0).0;
+        assert!(
+            sp_after < sp_before * 0.2,
+            "decayed sp {sp_after} vs initial {sp_before}"
+        );
+        // Without decay the stale component keeps (and grows) its mass.
+        let cfg = GmmConfig::new(2).with_delta(0.3).with_beta(0.1).without_pruning();
+        let mut m = Figmn::new(cfg, &[5.0, 5.0]);
+        m.learn(&[0.0, 0.0]);
+        for _ in 0..20 {
+            m.learn(&[10.0, 10.0]);
+        }
+        assert!(m.component_stats(0).0 >= sp_before);
+    }
+
+    #[test]
+    fn max_age_evicts_abandoned_component() {
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.3)
+            .with_beta(0.1)
+            .without_pruning()
+            .with_max_age(10);
+        let mut m = Figmn::new(cfg, &[5.0, 5.0]);
+        m.learn(&[0.0, 0.0]);
+        // The abandoned cluster outlives its horizon by a wide margin.
+        for _ in 0..30 {
+            m.learn(&[10.0, 10.0]);
+        }
+        assert_eq!(m.num_components(), 1, "stale component must age out");
+        assert!((m.component_mean(0)[0] - 10.0).abs() < 1.0);
     }
 }

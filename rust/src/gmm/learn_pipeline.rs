@@ -1,0 +1,915 @@
+//! The staged learn pipeline shared by the online and mini-batch write
+//! paths.
+//!
+//! Historically `Figmn::learn`/`learn_full`/`learn_topc` were a monolith
+//! inside `figmn.rs`; this module factors the write path into its three
+//! stages so the per-point and blocked paths share one set of bodies:
+//!
+//! 1. **Distance/score pass** — squared Mahalanobis distances to every
+//!    (candidate) component, saving each component's `w = Λ·e` for the
+//!    fused update. Per-point this is [`distance_pass`] /
+//!    [`candidate_distance_pass`]; the blocked variant
+//!    [`block_distance_pass`] streams each packed component row **once
+//!    per B-point block** through
+//!    [`packed::quad_form_with_multi_mode`] — the same `K×B` tiling
+//!    that took the scoring read path off the memory wall (PR 5), now
+//!    on the write path.
+//! 2. **Novelty/assignment decisions** — the χ² update-vs-create test
+//!    (§2.1), the `max_components` cap, and posterior assignment via
+//!    [`super::softmax_posteriors`]. Always sequential and
+//!    data-dependent, so results are thread-count independent by
+//!    construction.
+//! 3. **Fused rank-one updates** — Eqs. 4–9 plus the fused
+//!    Sherman–Morrison/determinant-lemma update, one component row at a
+//!    time ([`update_component`]), sharded over the component axis via
+//!    [`update_pass`] / [`candidate_update_pass`] /
+//!    [`block_update_pass`].
+//!
+//! ## Learn modes
+//!
+//! [`LearnMode::Online`] (the default) consumes one point per step —
+//! stage 1 → 2 → 3 per point — and is **bit-identical to the
+//! pre-pipeline learn path at every thread count**: the stage bodies
+//! are the exact functions that used to live in `figmn.rs`, performing
+//! the same floating-point operations in the same order.
+//!
+//! [`LearnMode::MiniBatch`]`{b}` stages `b`-point blocks: one blocked
+//! distance pass over the `K×B` tile, then sequential per-point
+//! decisions against the **frozen** block scores, then a
+//! component-outer update stage that streams each packed row once per
+//! block instead of once per point. Within a block the posteriors,
+//! `sp` weights and `w = Λ·e` vectors are frozen at block start — the
+//! classical mini-batch approximation (Hosseini & Sra 2019-style
+//! stochastic EM): points later in a block do not see the updates of
+//! earlier ones. Two exactness properties are preserved:
+//!
+//! - a block of length 1 routes through the online bodies, so
+//!   `MiniBatch{b: 1}` is bit-identical to `Online`;
+//! - results are bit-deterministic across thread counts (stage 2 is
+//!   serial; stages 1/3 are component-sharded with per-row instruction
+//!   sequences independent of the shard partition).
+//!
+//! Novel points inside a block are still decided sequentially: a point
+//! that fails χ² against the frozen scores is checked against the
+//! components created *earlier in the same block* (exact per-point
+//! kernels) before a create is allowed, so a drifting stream does not
+//! spawn `b` duplicate components where the online path would create
+//! one. TopC models keep their exact fallback gate by routing
+//! mini-batch blocks through the per-point path (a TopC-aware blocked
+//! distance pass is a ROADMAP follow-up).
+//!
+//! ## Drift adaptation
+//!
+//! Two per-model knobs make the write path track non-stationary
+//! streams (`GmmConfig::decay` / `GmmConfig::max_age`):
+//!
+//! - **`sp` decay** — every learned point first multiplies all
+//!   accumulators by `decay` ([`ComponentStore::decay_sps`]; blocks
+//!   apply `decay^B` once at block start). Old evidence decays
+//!   exponentially, so components stranded by a mean shift lose their
+//!   priors and eventually trip the §2.3 prune.
+//! - **max-age eviction** — the learn path stamps the posterior-argmax
+//!   winner of every point ([`ComponentStore::set_stamp`]); the prune
+//!   sweep additionally evicts components that have not won a point in
+//!   `max_age` points ([`ComponentStore::prune_aged`]). This is the
+//!   forgetting path for the integer age `v`, which cannot decay.
+//!
+//! Both knobs default off (`decay = 1.0`, `max_age = 0`) and add no
+//! floating-point work when off, preserving the default path's
+//! bit-identity contract.
+
+use super::store::ComponentStore;
+use super::{log_gaussian, softmax_posteriors, GmmConfig, LearnOutcome};
+use crate::engine::{worth_sharding, worth_sharding_batch, SharedMut, WorkerPool};
+use crate::linalg::rank_one::figmn_fused_update_packed_mode;
+use crate::linalg::{norm2, packed, sub_into, KernelMode};
+
+/// Cap on live `K·B·D` w-slots in the blocked learn path: mini-batch
+/// blocks are clamped to `LEARN_BLOCK_SLOTS / (K·D)` points so the
+/// frozen `w` tile stays bounded (16 MiB of f64) no matter how large a
+/// block the caller or the coalescing server driver hands over.
+pub(crate) const LEARN_BLOCK_SLOTS: usize = 1 << 21;
+
+/// How the write path consumes the stream (per model;
+/// `GmmConfig::learn_mode`). Carried in checkpoints and selectable over
+/// the coordinator protocol and the CLI
+/// (`train --learn-mode online|minibatch:B`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LearnMode {
+    /// One point per step — bit-identical to the pre-pipeline learn
+    /// path at every thread count.
+    #[default]
+    Online,
+    /// Stage `b`-point blocks through the batched distance pass (see
+    /// the module docs for the freeze semantics). `b = 1` is
+    /// bit-identical to [`LearnMode::Online`].
+    MiniBatch {
+        /// Block length in points (≥ 1).
+        b: usize,
+    },
+}
+
+impl LearnMode {
+    /// Wire/CLI form: `"online"` or `"minibatch:B"`.
+    pub fn to_wire(&self) -> String {
+        match self {
+            LearnMode::Online => "online".to_string(),
+            LearnMode::MiniBatch { b } => format!("minibatch:{b}"),
+        }
+    }
+
+    /// Parse a wire/CLI form; `None` for anything unknown (including
+    /// `minibatch:0` — an empty block is meaningless).
+    pub fn parse(s: &str) -> Option<LearnMode> {
+        if s == "online" {
+            return Some(LearnMode::Online);
+        }
+        let b: usize = s.strip_prefix("minibatch:")?.parse().ok()?;
+        (b > 0).then_some(LearnMode::MiniBatch { b })
+    }
+
+    /// Block length this mode stages (`1` for online).
+    pub fn block_len(&self) -> usize {
+        match self {
+            LearnMode::Online => 1,
+            LearnMode::MiniBatch { b } => (*b).max(1),
+        }
+    }
+}
+
+impl std::fmt::Display for LearnMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_wire())
+    }
+}
+
+/// Reusable scratch for the blocked learn path (one per model, like
+/// `Figmn`'s per-point `buf_*` fields): after warm-up, a mini-batch
+/// block allocates nothing.
+#[derive(Default)]
+pub(crate) struct BlockScratch {
+    /// Frozen squared Mahalanobis distances, `K×B` component-major
+    /// (`d2[j·B + bi]`).
+    pub(crate) d2: Vec<f64>,
+    /// Frozen `w = Λ·e` vectors, `K×B×D` (`ws[(j·B + bi)·D ..]`).
+    pub(crate) ws: Vec<f64>,
+    /// `B×D` residual tile (serial stage 1) / per-point kernel scratch
+    /// (stage 2's fresh-component checks).
+    pub(crate) es: Vec<f64>,
+    /// Per-point log-likelihood scratch (`K`), stage 2.
+    pub(crate) ll: Vec<f64>,
+    /// Frozen posteriors of accepted points, `K×B` component-major.
+    pub(crate) post: Vec<f64>,
+    /// Points accepted against the frozen scores (ascending `bi`).
+    pub(crate) accepted: Vec<u32>,
+    /// Components created earlier in the current block.
+    pub(crate) fresh: Vec<u32>,
+}
+
+/// Index of the largest element (ties → lowest index). Used to pick the
+/// posterior-argmax winner a learned point re-stamps.
+pub(crate) fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut bv = xs[0];
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Append a σ_ini-shaped component at `x` (Eq. 13): diagonal precision
+/// `1/σ_ini²` and the matching `log|C| = Σ ln σ_ini²`. The shared create
+/// body of the online and blocked paths.
+pub(crate) fn init_component(store: &mut ComponentStore, x: &[f64], sigma_ini: &[f64], d: usize) {
+    let mut lambda = vec![0.0; store.mat_len()];
+    let mut log_det = 0.0;
+    for i in 0..d {
+        let s2 = sigma_ini[i] * sigma_ini[i];
+        lambda[packed::row_start(i, d)] = 1.0 / s2;
+        log_det += s2.ln();
+    }
+    store.push(x, &lambda, log_det, 1.0, 1);
+}
+
+/// Stage 1 (online): squared Mahalanobis distances to every component
+/// (Eq. 22), saving each component's `w = Λ·e` for the fused update.
+/// Free function so the caller can split `Figmn`'s field borrows.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn distance_pass(
+    store: &ComponentStore,
+    x: &[f64],
+    d: usize,
+    buf_d2: &mut [f64],
+    buf_ws: &mut [f64],
+    buf_e: &mut [f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let k = store.len();
+    match pool {
+        Some(pool) if worth_sharding(k, d, pool.threads()) => {
+            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
+            let ws = SharedMut::new(buf_ws.as_mut_ptr());
+            pool.run(k, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for j in range {
+                    let e = &mut scratch.e[..d];
+                    sub_into(x, store.mean(j), e);
+                    // Safety: slot j / row j are owned by this shard only.
+                    unsafe {
+                        *d2.at(j) = packed::quad_form_with_mode(
+                            store.mat(j),
+                            d,
+                            e,
+                            ws.slice(j * d, d),
+                            mode,
+                        );
+                    }
+                }
+            });
+        }
+        _ => {
+            let e = &mut buf_e[..d];
+            for (j, slot) in buf_d2.iter_mut().enumerate() {
+                sub_into(x, store.mean(j), e);
+                *slot = packed::quad_form_with_mode(
+                    store.mat(j),
+                    d,
+                    e,
+                    &mut buf_ws[j * d..(j + 1) * d],
+                    mode,
+                );
+            }
+        }
+    }
+}
+
+/// Stage 1 (blocked): the `K×B` tile variant. Per component the
+/// residual block `e_bi = x_bi − μ_j` is built once and the packed row
+/// is streamed **once for the whole block** through
+/// [`packed::quad_form_with_multi_mode`] — whose per-query results are
+/// bit-identical to the per-point kernel of the same mode, so a block's
+/// frozen scores equal B per-point distance passes against the same
+/// frozen store.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn block_distance_pass(
+    store: &ComponentStore,
+    xs: &[Vec<f64>],
+    d: usize,
+    buf_d2: &mut [f64],
+    buf_ws: &mut [f64],
+    buf_es: &mut Vec<f64>,
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let k = store.len();
+    let b = xs.len();
+    match pool {
+        Some(pool) if worth_sharding_batch(b, k, d, pool.threads()) => {
+            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
+            let ws = SharedMut::new(buf_ws.as_mut_ptr());
+            pool.run(k, &move |_, range, scratch| {
+                for j in range {
+                    let (es, _, _) = scratch.split3(b * d, 0, 0);
+                    let mean = store.mean(j);
+                    for (bi, x) in xs.iter().enumerate() {
+                        sub_into(x, mean, &mut es[bi * d..(bi + 1) * d]);
+                    }
+                    // Safety: row j of the d2/ws tiles is owned by this
+                    // shard only.
+                    unsafe {
+                        packed::quad_form_with_multi_mode(
+                            store.mat(j),
+                            d,
+                            es,
+                            b,
+                            ws.slice(j * b * d, b * d),
+                            d2.slice(j * b, b),
+                            mode,
+                        );
+                    }
+                }
+            });
+        }
+        _ => {
+            buf_es.resize(b * d, 0.0);
+            for j in 0..k {
+                let mean = store.mean(j);
+                for (bi, x) in xs.iter().enumerate() {
+                    sub_into(x, mean, &mut buf_es[bi * d..(bi + 1) * d]);
+                }
+                packed::quad_form_with_multi_mode(
+                    store.mat(j),
+                    d,
+                    buf_es,
+                    b,
+                    &mut buf_ws[j * b * d..(j + 1) * b * d],
+                    &mut buf_d2[j * b..(j + 1) * b],
+                    mode,
+                );
+            }
+        }
+    }
+}
+
+/// Stage 3 (online): apply Eqs. 4–9 and the fused rank-two update to
+/// every component given its posterior. Component-local, so it shards
+/// exactly like the distance pass — each worker streams the contiguous
+/// arena rows of its component range.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_pass(
+    store: &mut ComponentStore,
+    x: &[f64],
+    d: usize,
+    post: &[f64],
+    buf_d2: &[f64],
+    buf_ws: &[f64],
+    buf_e: &mut [f64],
+    sigma_ini: &[f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let k = store.len();
+    match pool {
+        Some(pool) if worth_sharding(k, d, pool.threads()) => {
+            let raw = store.raw_mut();
+            pool.run(k, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for j in range {
+                    // Safety: arena row j is owned by exactly one shard.
+                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
+                    update_component(
+                        mean,
+                        lambda,
+                        log_det,
+                        sp,
+                        v,
+                        x,
+                        d,
+                        post[j],
+                        buf_d2[j],
+                        &buf_ws[j * d..(j + 1) * d],
+                        sigma_ini,
+                        mode,
+                        &mut scratch.e[..d],
+                    );
+                }
+            });
+        }
+        _ => {
+            for j in 0..k {
+                let (mean, lambda, log_det, sp, v) = store.row_mut(j);
+                update_component(
+                    mean,
+                    lambda,
+                    log_det,
+                    sp,
+                    v,
+                    x,
+                    d,
+                    post[j],
+                    buf_d2[j],
+                    &buf_ws[j * d..(j + 1) * d],
+                    sigma_ini,
+                    mode,
+                    &mut buf_e[..d],
+                );
+            }
+        }
+    }
+}
+
+/// Stage 3 (blocked): apply every frozen-accepted point of the block to
+/// the `k` components that existed at block start, **component-outer**:
+/// each worker streams its packed rows once per block, applying the
+/// block's points in ascending point order. Because a row's update
+/// reads only that row plus the frozen `post`/`d2`/`w` tiles, the
+/// component-outer order is bit-identical to the point-outer order the
+/// online path would use with the same frozen inputs — and therefore
+/// bit-deterministic across thread counts. Rows `≥ k` (components
+/// created by stage 2 inside this block) are left untouched: their
+/// points were assigned exactly at creation/fresh-assignment time.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn block_update_pass(
+    store: &mut ComponentStore,
+    xs: &[Vec<f64>],
+    d: usize,
+    k: usize,
+    accepted: &[u32],
+    post: &[f64],
+    buf_d2: &[f64],
+    buf_ws: &[f64],
+    buf_e: &mut [f64],
+    sigma_ini: &[f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let b = xs.len();
+    match pool {
+        Some(pool) if worth_sharding_batch(accepted.len(), k, d, pool.threads()) => {
+            let raw = store.raw_mut();
+            pool.run(k, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for j in range {
+                    // Safety: arena row j is owned by exactly one shard.
+                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
+                    for &bi in accepted {
+                        let bi = bi as usize;
+                        let s = (j * b + bi) * d;
+                        update_component(
+                            mean,
+                            lambda,
+                            log_det,
+                            sp,
+                            v,
+                            &xs[bi],
+                            d,
+                            post[j * b + bi],
+                            buf_d2[j * b + bi],
+                            &buf_ws[s..s + d],
+                            sigma_ini,
+                            mode,
+                            &mut scratch.e[..d],
+                        );
+                    }
+                }
+            });
+        }
+        _ => {
+            for j in 0..k {
+                let (mean, lambda, log_det, sp, v) = store.row_mut(j);
+                for &bi in accepted {
+                    let bi = bi as usize;
+                    let s = (j * b + bi) * d;
+                    update_component(
+                        mean,
+                        lambda,
+                        log_det,
+                        sp,
+                        v,
+                        &xs[bi],
+                        d,
+                        post[j * b + bi],
+                        buf_d2[j * b + bi],
+                        &buf_ws[s..s + d],
+                        sigma_ini,
+                        mode,
+                        &mut buf_e[..d],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The component-local body shared by the serial and sharded update
+/// paths — one instruction sequence, so the two are bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_component(
+    mean: &mut [f64],
+    lambda: &mut [f64],
+    log_det: &mut f64,
+    sp: &mut f64,
+    v: &mut u64,
+    x: &[f64],
+    d: usize,
+    p: f64,
+    d2j: f64,
+    w: &[f64],
+    sigma_ini: &[f64],
+    mode: KernelMode,
+    e: &mut [f64],
+) {
+    *v += 1; // Eq. 4
+    *sp += p; // Eq. 5
+    let omega = p / *sp; // Eq. 7 (with the *updated* sp)
+    if omega <= 0.0 {
+        // ω = 0: Eqs. 8–11 are exact no-ops; skip the O(D²) work.
+        return;
+    }
+    sub_into(x, mean, e); // Eq. 6
+    for (m, &ei) in mean.iter_mut().zip(e.iter()) {
+        *m += omega * ei; // Eqs. 8–9
+    }
+    // Fused rank-one form of Eqs. 20–21/25–26 (exact old-mean Eq. 11 —
+    // DESIGN.md §Deviations; single-pass rewrite — EXPERIMENTS.md §Perf
+    // L3-1), reusing w/q from the distance pass, on the packed row.
+    match figmn_fused_update_packed_mode(lambda, d, w, d2j, omega, *log_det, mode) {
+        Some(r) => *log_det = r.log_det,
+        None => {
+            // Float underflow destroyed positive-definiteness (reachable
+            // only at extreme conditioning). Reset the component's shape
+            // to σ_ini around its current mean. Multiply-by-zero, not
+            // fill: the dense path's `scale_in_place(0.0)` preserves
+            // the sign of zeros (−x·0.0 = −0.0), and the bit-identity
+            // contract covers even this branch.
+            for v in lambda.iter_mut() {
+                *v *= 0.0;
+            }
+            let mut ld = 0.0;
+            for i in 0..d {
+                let s2 = sigma_ini[i] * sigma_ini[i];
+                lambda[packed::row_start(i, d)] = 1.0 / s2;
+                ld += s2.ln();
+            }
+            *log_det = ld;
+        }
+    }
+}
+
+/// Candidate-set variant of the distance pass: Mahalanobis distances
+/// and `w = Λ·e` for the `cands` components only, plus each candidate's
+/// Euclidean mean distance (index drift bookkeeping). With an engine
+/// attached the *candidate positions* are sharded — the per-shard
+/// candidate intersection of the engine docs — with merges unchanged.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn candidate_distance_pass(
+    store: &ComponentStore,
+    x: &[f64],
+    d: usize,
+    cands: &[u32],
+    buf_d2: &mut [f64],
+    buf_ws: &mut [f64],
+    buf_en: &mut [f64],
+    buf_e: &mut [f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let cn = cands.len();
+    match pool {
+        Some(pool) if worth_sharding(cn, d, pool.threads()) => {
+            let d2 = SharedMut::new(buf_d2.as_mut_ptr());
+            let ws = SharedMut::new(buf_ws.as_mut_ptr());
+            let en = SharedMut::new(buf_en.as_mut_ptr());
+            pool.run(cn, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for i in range {
+                    let j = cands[i] as usize;
+                    let e = &mut scratch.e[..d];
+                    sub_into(x, store.mean(j), e);
+                    // Safety: slot i is owned by exactly one shard.
+                    unsafe {
+                        *en.at(i) = norm2(e).sqrt();
+                        *d2.at(i) = packed::quad_form_with_mode(
+                            store.mat(j),
+                            d,
+                            e,
+                            ws.slice(i * d, d),
+                            mode,
+                        );
+                    }
+                }
+            });
+        }
+        _ => {
+            let e = &mut buf_e[..d];
+            for (i, &jc) in cands.iter().enumerate() {
+                let j = jc as usize;
+                sub_into(x, store.mean(j), e);
+                buf_en[i] = norm2(e).sqrt();
+                buf_d2[i] = packed::quad_form_with_mode(
+                    store.mat(j),
+                    d,
+                    e,
+                    &mut buf_ws[i * d..(i + 1) * d],
+                    mode,
+                );
+            }
+        }
+    }
+}
+
+/// Candidate-set variant of the update pass: Eqs. 4–9 plus the fused
+/// rank-two update for the `cands` components only. Candidate indices
+/// are unique, so sharding the candidate positions gives each worker
+/// exclusive ownership of its arena rows — same safety argument as the
+/// full pass.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn candidate_update_pass(
+    store: &mut ComponentStore,
+    x: &[f64],
+    d: usize,
+    post: &[f64],
+    cands: &[u32],
+    buf_d2: &[f64],
+    buf_ws: &[f64],
+    buf_e: &mut [f64],
+    sigma_ini: &[f64],
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) {
+    let cn = cands.len();
+    match pool {
+        Some(pool) if worth_sharding(cn, d, pool.threads()) => {
+            let raw = store.raw_mut();
+            pool.run(cn, &move |_, range, scratch| {
+                scratch.ensure(d);
+                for i in range {
+                    let j = cands[i] as usize;
+                    // Safety: candidate indices are unique, so arena row
+                    // j is owned by exactly one shard position.
+                    let (mean, lambda, log_det, sp, v) = unsafe { raw.row_mut(j) };
+                    update_component(
+                        mean,
+                        lambda,
+                        log_det,
+                        sp,
+                        v,
+                        x,
+                        d,
+                        post[i],
+                        buf_d2[i],
+                        &buf_ws[i * d..(i + 1) * d],
+                        sigma_ini,
+                        mode,
+                        &mut scratch.e[..d],
+                    );
+                }
+            });
+        }
+        _ => {
+            for (i, &jc) in cands.iter().enumerate() {
+                let (mean, lambda, log_det, sp, v) = store.row_mut(jc as usize);
+                update_component(
+                    mean,
+                    lambda,
+                    log_det,
+                    sp,
+                    v,
+                    x,
+                    d,
+                    post[i],
+                    buf_d2[i],
+                    &buf_ws[i * d..(i + 1) * d],
+                    sigma_ini,
+                    mode,
+                    &mut buf_e[..d],
+                );
+            }
+        }
+    }
+}
+
+/// Learn one mini-batch block through the three stages (see the module
+/// docs). Requires `xs.len() ≥ 2` (length-1 blocks route through the
+/// online bodies) and a non-empty store in [`SearchMode::Strict`]; the
+/// caller (`Figmn::learn_chunk`) guarantees both plus the
+/// [`LEARN_BLOCK_SLOTS`] memory clamp, and runs the prune sweep after
+/// the block. `points_base` is the stream position before this block;
+/// point `bi` is stream position `points_base + bi + 1` for stamping.
+/// Appends one [`LearnOutcome`] per point to `out`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn learn_block(
+    store: &mut ComponentStore,
+    xs: &[Vec<f64>],
+    cfg: &GmmConfig,
+    sigma_ini: &[f64],
+    pool: Option<&WorkerPool>,
+    scr: &mut BlockScratch,
+    points_base: u64,
+    out: &mut Vec<LearnOutcome>,
+) {
+    let b = xs.len();
+    let k = store.len();
+    let d = cfg.dim;
+    let mode = cfg.kernel_mode;
+    let chi2 = cfg.chi2_threshold();
+    debug_assert!(b >= 2, "learn_block: length-1 blocks take the online path");
+    debug_assert!(k >= 1, "learn_block: empty store");
+
+    // ---- Stage 1: frozen K×B distance/score tiles ----
+    scr.d2.resize(k * b, 0.0);
+    scr.ws.resize(k * b * d, 0.0);
+    block_distance_pass(store, xs, d, &mut scr.d2, &mut scr.ws, &mut scr.es, mode, pool);
+    // Stage 2's fresh-component checks need a (e, w) pair of per-point
+    // kernel scratch; the stage-1 residual tile is dead now (b ≥ 2 so
+    // it holds at least 2·D floats) and is reused for both.
+    scr.es.resize((b * d).max(2 * d), 0.0);
+
+    // ---- Stage 2: sequential per-point novelty/assignment decisions ----
+    // Original-K scalars (sp, log_det) are untouched until stage 3, so
+    // reading them live *is* reading the frozen block state.
+    scr.post.resize(k * b, 0.0);
+    scr.accepted.clear();
+    scr.fresh.clear();
+    for (bi, x) in xs.iter().enumerate() {
+        let t = points_base + bi as u64 + 1;
+        let novel = !scr.d2[..k * b]
+            .iter()
+            .skip(bi)
+            .step_by(b)
+            .any(|&d2| d2 < chi2);
+        let cap_full = cfg.max_components > 0 && store.len() >= cfg.max_components;
+        if !novel || cap_full {
+            // Accepted against the frozen scores: posterior assignment
+            // over the k block-start components (Eqs. 2–3, log space).
+            scr.ll.clear();
+            for j in 0..k {
+                scr.ll.push(log_gaussian(scr.d2[j * b + bi], store.log_det(j), d));
+            }
+            let post = softmax_posteriors(&scr.ll, &store.sps()[..k]);
+            if cfg.max_age > 0 {
+                store.set_stamp(argmax(&post), t);
+            }
+            for (j, &p) in post.iter().enumerate() {
+                scr.post[j * b + bi] = p;
+            }
+            scr.accepted.push(bi as u32);
+            out.push(LearnOutcome::Updated);
+            continue;
+        }
+        // Novel against the frozen scores: decide sequentially against
+        // the components created earlier in this block (exact per-point
+        // kernels) so near-duplicate novel points share one component.
+        let (e, w) = scr.es.split_at_mut(d);
+        let e = &mut e[..d];
+        let w = &mut w[..d];
+        let mut nearest: Option<(usize, f64)> = None;
+        for &fj in scr.fresh.iter() {
+            let j = fj as usize;
+            sub_into(x, store.mean(j), e);
+            let d2f = packed::quad_form_with_mode(store.mat(j), d, e, w, mode);
+            if d2f < chi2 && nearest.map_or(true, |(_, best)| d2f < best) {
+                nearest = Some((j, d2f));
+            }
+        }
+        if let Some((j, _)) = nearest {
+            // Assign the whole point to its nearest in-block component
+            // (p = 1); recompute e/w against that row's current state.
+            sub_into(x, store.mean(j), e);
+            let d2f = packed::quad_form_with_mode(store.mat(j), d, e, w, mode);
+            let (mean, lambda, log_det, sp, v) = store.row_mut(j);
+            update_component(
+                mean, lambda, log_det, sp, v, x, d, 1.0, d2f, w, sigma_ini, mode, e,
+            );
+            store.set_stamp(j, t);
+            out.push(LearnOutcome::Updated);
+        } else {
+            init_component(store, x, sigma_ini, d);
+            let j = store.len() - 1;
+            store.set_stamp(j, t);
+            scr.fresh.push(j as u32);
+            out.push(LearnOutcome::Created);
+        }
+    }
+
+    // ---- Stage 3: component-outer fused updates over the original K ----
+    if !scr.accepted.is_empty() {
+        block_update_pass(
+            store,
+            xs,
+            d,
+            k,
+            &scr.accepted,
+            &scr.post,
+            &scr.d2,
+            &scr.ws,
+            &mut scr.es,
+            sigma_ini,
+            mode,
+            pool,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::store::ComponentStore;
+
+    #[test]
+    fn learn_mode_wire_round_trips_and_rejects() {
+        assert_eq!(LearnMode::default(), LearnMode::Online);
+        assert_eq!(LearnMode::Online.to_wire(), "online");
+        assert_eq!(LearnMode::MiniBatch { b: 8 }.to_wire(), "minibatch:8");
+        assert_eq!(LearnMode::parse("online"), Some(LearnMode::Online));
+        assert_eq!(LearnMode::parse("minibatch:32"), Some(LearnMode::MiniBatch { b: 32 }));
+        for bad in ["minibatch:0", "minibatch:", "minibatch:x", "batch:4", "turbo", ""] {
+            assert_eq!(LearnMode::parse(bad), None, "{bad:?} must not parse");
+        }
+        assert_eq!(LearnMode::Online.block_len(), 1);
+        assert_eq!(LearnMode::MiniBatch { b: 5 }.block_len(), 5);
+        assert_eq!(format!("{}", LearnMode::MiniBatch { b: 2 }), "minibatch:2");
+    }
+
+    #[test]
+    fn argmax_prefers_lowest_index_on_ties() {
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[0.25, 0.5, 0.5, 0.1]), 1);
+        assert_eq!(argmax(&[0.1, 0.2, 0.7]), 2);
+    }
+
+    #[test]
+    fn init_component_sets_sigma_ini_shape() {
+        let d = 3;
+        let mut store = ComponentStore::new(d);
+        let sigma = [0.5, 2.0, 1.0];
+        init_component(&mut store, &[1.0, -2.0, 3.0], &sigma, d);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.mean(0), &[1.0, -2.0, 3.0]);
+        assert_eq!((store.sp(0), store.v(0)), (1.0, 1));
+        let mut expect_ld = 0.0;
+        for i in 0..d {
+            let s2 = sigma[i] * sigma[i];
+            assert_eq!(store.mat(0)[packed::row_start(i, d)], 1.0 / s2);
+            expect_ld += s2.ln();
+        }
+        assert_eq!(store.log_det(0), expect_ld);
+    }
+
+    /// The blocked stage-1 tile must equal B per-point distance passes
+    /// against the same frozen store — bit for bit, in both modes.
+    #[test]
+    fn block_distance_pass_matches_per_point_bitwise() {
+        let d = 4;
+        let k = 3;
+        let b = 5;
+        let mut store = ComponentStore::new(d);
+        let mut seed = 41u64;
+        let mut next = move || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((seed >> 33) as f64) / ((1u64 << 31) as f64) - 0.5
+        };
+        for j in 0..k {
+            let mean: Vec<f64> = (0..d).map(|_| next() * 4.0).collect();
+            // Any symmetric matrix exercises the kernels; PD not needed.
+            let mut mat: Vec<f64> = (0..packed::packed_len(d)).map(|_| next()).collect();
+            for i in 0..d {
+                mat[packed::row_start(i, d)] += 2.0 + j as f64;
+            }
+            store.push(&mean, &mat, 0.1, 1.0 + j as f64, 1);
+        }
+        let xs: Vec<Vec<f64>> = (0..b).map(|_| (0..d).map(|_| next() * 3.0).collect()).collect();
+        for mode in [KernelMode::Strict, KernelMode::Fast] {
+            let mut d2 = vec![0.0; k * b];
+            let mut ws = vec![0.0; k * b * d];
+            let mut es = Vec::new();
+            block_distance_pass(&store, &xs, d, &mut d2, &mut ws, &mut es, mode, None);
+            // Per-point oracle: the online stage-1 free function.
+            for (bi, x) in xs.iter().enumerate() {
+                let mut pd2 = vec![0.0; k];
+                let mut pws = vec![0.0; k * d];
+                let mut pe = vec![0.0; d];
+                distance_pass(&store, x, d, &mut pd2, &mut pws, &mut pe, mode, None);
+                for j in 0..k {
+                    assert_eq!(
+                        d2[j * b + bi].to_bits(),
+                        pd2[j].to_bits(),
+                        "d2 mismatch at j={j} bi={bi} ({mode:?})"
+                    );
+                    assert_eq!(
+                        &ws[(j * b + bi) * d..(j * b + bi + 1) * d],
+                        &pws[j * d..(j + 1) * d],
+                        "w mismatch at j={j} bi={bi} ({mode:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Near-duplicate novel points inside one block must share a single
+    /// created component instead of spawning one each.
+    #[test]
+    fn learn_block_dedups_in_block_creates() {
+        let d = 2;
+        let cfg = GmmConfig::new(d).with_delta(0.5).with_beta(0.1).without_pruning();
+        let sigma = cfg.sigma_ini(&[1.0, 1.0]);
+        let mut store = ComponentStore::new(d);
+        init_component(&mut store, &[0.0, 0.0], &sigma, d);
+        let mut scr = BlockScratch::default();
+        let mut out = Vec::new();
+        // Two far-away, nearly identical points in one block.
+        let xs = vec![vec![50.0, 50.0], vec![50.01, 49.99]];
+        learn_block(&mut store, &xs, &cfg, &sigma, None, &mut scr, 1, &mut out);
+        assert_eq!(out, vec![LearnOutcome::Created, LearnOutcome::Updated]);
+        assert_eq!(store.len(), 2, "second novel point must reuse the in-block create");
+        // The fresh component absorbed both points.
+        assert_eq!(store.v(1), 2);
+        assert!((store.sp(1) - 2.0).abs() < 1e-12);
+        // Both stream positions were stamped onto the fresh row.
+        assert_eq!(store.stamp(1), 3);
+    }
+
+    /// Accepted points update every block-start component with frozen
+    /// posteriors; totals match the online invariant Σsp = points.
+    #[test]
+    fn learn_block_accepted_points_preserve_mass() {
+        let d = 2;
+        let cfg = GmmConfig::new(d).with_delta(1.0).with_beta(0.05).without_pruning();
+        let sigma = cfg.sigma_ini(&[1.0, 1.0]);
+        let mut store = ComponentStore::new(d);
+        init_component(&mut store, &[0.0, 0.0], &sigma, d);
+        let mut scr = BlockScratch::default();
+        let mut out = Vec::new();
+        let xs = vec![vec![0.1, 0.0], vec![-0.1, 0.1], vec![0.0, -0.2]];
+        learn_block(&mut store, &xs, &cfg, &sigma, None, &mut scr, 1, &mut out);
+        assert_eq!(out, vec![LearnOutcome::Updated; 3]);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.v(0), 4, "one create + three accepted points");
+        // Each accepted point contributes exactly 1 posterior mass.
+        assert!((store.total_sp() - 4.0).abs() < 1e-9, "Σsp = {}", store.total_sp());
+    }
+}

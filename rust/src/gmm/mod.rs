@@ -77,6 +77,25 @@
 //! contract). Like the kernel mode, it round-trips through checkpoint
 //! v2 (additive `replica_mode` field), the protocol, and the CLI.
 //!
+//! ## Learn modes: when the write path stages blocks
+//!
+//! Each model carries a [`LearnMode`] (`GmmConfig::learn_mode`, default
+//! `Online`): with `MiniBatch { b }`, `learn_batch` stages `b`-point
+//! blocks through the staged pipeline of [`learn_pipeline`] — one
+//! blocked `K×B` distance pass per block (the PR 5 tiling, now on the
+//! write path), sequential per-point novelty decisions against the
+//! frozen block scores, then a component-outer fused-update stage that
+//! streams each packed row once per block. `Online` (and
+//! `MiniBatch { b: 1 }`, and blocks of length 1) is bit-identical to
+//! the pre-pipeline learn path at every thread count; larger blocks
+//! are the classical mini-batch approximation, still bit-deterministic
+//! across thread counts. Two drift-adaptive knobs ride along —
+//! `GmmConfig::decay` (per-point exponential `sp` forgetting) and
+//! `GmmConfig::max_age` (argmax-winner age eviction through the §2.3
+//! sweep) — both default off with zero floating-point cost. All three
+//! round-trip through checkpoint v2 (additive `learn_mode` /
+//! `decay` / `max_age` fields), the protocol, and the CLI.
+//!
 //! [`SupervisedGmm`] layers the paper's "any element predicts any other
 //! element" autoassociative trick into a conventional classifier
 //! interface (features + one-hot class concatenated into the joint input
@@ -87,6 +106,7 @@ mod config;
 mod figmn;
 mod igmn;
 pub mod inference;
+pub mod learn_pipeline;
 pub mod replica;
 mod score_block;
 mod serialize;
@@ -98,6 +118,7 @@ pub use candidates::{CandidateIndex, SearchMode};
 pub use config::GmmConfig;
 pub use figmn::Figmn;
 pub use igmn::Igmn;
+pub use learn_pipeline::LearnMode;
 pub use replica::{ReplicaMode, ReplicaStore, DEFAULT_F32_TOL};
 pub use serialize::{CHECKPOINT_MIN_VERSION, CHECKPOINT_VERSION};
 pub use snapshot::ModelSnapshot;

@@ -29,7 +29,7 @@
 //! accepts the dense `cov` per-component form under `"kind":"igmn"`.
 
 use super::store::ComponentStore;
-use super::{Figmn, GmmConfig, Igmn, IncrementalMixture, ReplicaMode, SearchMode};
+use super::{Figmn, GmmConfig, Igmn, IncrementalMixture, LearnMode, ReplicaMode, SearchMode};
 use crate::json::Json;
 use crate::linalg::{packed, KernelMode};
 
@@ -84,6 +84,44 @@ fn read_replica_mode(j: &Json) -> Result<ReplicaMode, String> {
     }
 }
 
+/// Read the optional `learn_mode` field (additive since the staged
+/// learn pipeline): absent defaults to [`LearnMode::Online`] — the
+/// per-point write path every pre-pipeline reader ran — and
+/// present-but-invalid is rejected like any other corrupt field.
+fn read_learn_mode(j: &Json) -> Result<LearnMode, String> {
+    match j.get("learn_mode") {
+        None => Ok(LearnMode::Online),
+        Some(v) => v
+            .as_str()
+            .and_then(LearnMode::parse)
+            .ok_or_else(|| "bad learn_mode".to_string()),
+    }
+}
+
+/// Read the optional `decay` drift knob (additive with the learn
+/// pipeline): absent defaults to `1.0` (forgetting off);
+/// present-but-outside `(0, 1]` is rejected like any corrupt field.
+fn read_decay(j: &Json) -> Result<f64, String> {
+    match j.get("decay") {
+        None => Ok(1.0),
+        Some(v) => match v.as_f64() {
+            Some(d) if d > 0.0 && d <= 1.0 => Ok(d),
+            _ => Err("bad decay".to_string()),
+        },
+    }
+}
+
+/// Read the optional `max_age` drift knob (additive with the learn
+/// pipeline): absent defaults to `0` (age eviction off). The refresh
+/// stamps themselves are never serialized — restored survivors restart
+/// their eviction clocks at the checkpoint's stream position.
+fn read_max_age(j: &Json) -> Result<u64, String> {
+    match j.get("max_age") {
+        None => Ok(0),
+        Some(v) => v.as_usize().map(|a| a as u64).ok_or_else(|| "bad max_age".to_string()),
+    }
+}
+
 impl Figmn {
     /// Serialize the full model state to JSON (v2 packed layout).
     pub fn to_json(&self) -> Json {
@@ -127,6 +165,13 @@ impl Figmn {
             // arenas), so only the mode travels. Old readers ignore it
             // and serve all-f64.
             ("replica_mode", cfg.replica_mode.to_wire().into()),
+            // Additive with the staged learn pipeline: the write-path
+            // learn mode and the drift knobs travel with the model. Old
+            // readers ignore them and learn online/stationary; the
+            // refresh stamps are derived state and never travel.
+            ("learn_mode", cfg.learn_mode.to_wire().into()),
+            ("decay", cfg.decay.into()),
+            ("max_age", (cfg.max_age as usize).into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -170,7 +215,10 @@ impl Figmn {
             .with_max_components(max_components)
             .with_kernel_mode(read_kernel_mode(j)?)
             .with_search_mode(read_search_mode(j)?)
-            .with_replica_mode(read_replica_mode(j)?);
+            .with_replica_mode(read_replica_mode(j)?)
+            .with_learn_mode(read_learn_mode(j)?)
+            .with_decay(read_decay(j)?)
+            .with_max_age(read_max_age(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -260,10 +308,13 @@ impl Igmn {
             ("max_components", cfg.max_components.into()),
             ("kernel_mode", cfg.kernel_mode.as_str().into()),
             // Config fidelity only — the covariance baseline always
-            // sweeps every component and serves all-f64 regardless of
-            // the mode selectors.
+            // sweeps every component, serves all-f64, and learns
+            // point-by-point regardless of the mode selectors.
             ("search_mode", cfg.search_mode.to_wire().into()),
             ("replica_mode", cfg.replica_mode.to_wire().into()),
+            ("learn_mode", cfg.learn_mode.to_wire().into()),
+            ("decay", cfg.decay.into()),
+            ("max_age", (cfg.max_age as usize).into()),
             ("sigma_ini", Json::num_array(self.sigma_ini())),
             ("points", (self.points_seen() as usize).into()),
             ("components", Json::Arr(comps)),
@@ -306,7 +357,10 @@ impl Igmn {
             .with_max_components(max_components)
             .with_kernel_mode(read_kernel_mode(j)?)
             .with_search_mode(read_search_mode(j)?)
-            .with_replica_mode(read_replica_mode(j)?);
+            .with_replica_mode(read_replica_mode(j)?)
+            .with_learn_mode(read_learn_mode(j)?)
+            .with_decay(read_decay(j)?)
+            .with_max_age(read_max_age(j)?);
         cfg = if prune { cfg.with_pruning(v_min, sp_min) } else { cfg.without_pruning() };
 
         let tri = packed::packed_len(dim);
@@ -602,6 +656,73 @@ mod tests {
         for bad_val in bad_vals {
             let bad = doc.to_string_compact().replace("\"replica_mode\":\"f32:0.01\"", bad_val);
             assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "{bad_val}");
+        }
+    }
+
+    #[test]
+    fn learn_mode_and_drift_knobs_round_trip_and_default() {
+        use crate::gmm::LearnMode;
+        // Mini-batch drift-adaptive models write and restore all three
+        // knobs.
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.5)
+            .with_beta(0.1)
+            .with_learn_mode(LearnMode::MiniBatch { b: 4 })
+            .with_decay(0.995)
+            .with_max_age(100);
+        let mut m = Figmn::new(cfg, &[2.0, 2.0]);
+        let mut rng = Pcg64::seed(31);
+        let xs: Vec<Vec<f64>> = (0..60)
+            .map(|_| {
+                let c = if rng.uniform() < 0.5 { 0.0 } else { 10.0 };
+                (0..2).map(|_| c + rng.normal()).collect()
+            })
+            .collect();
+        m.learn_batch(&xs);
+        let doc = m.to_json();
+        assert_eq!(doc.get("learn_mode").and_then(|v| v.as_str()), Some("minibatch:4"));
+        assert_eq!(doc.get("decay").and_then(|v| v.as_f64()), Some(0.995));
+        assert_eq!(doc.get("max_age").and_then(|v| v.as_usize()), Some(100));
+        let restored = Figmn::from_json(&doc).unwrap();
+        assert_eq!(restored.config().learn_mode, LearnMode::MiniBatch { b: 4 });
+        assert_eq!(restored.config().decay, 0.995);
+        assert_eq!(restored.config().max_age, 100);
+        assert_eq!(restored.num_components(), m.num_components());
+        assert_eq!(restored.points_seen(), m.points_seen());
+        // Identical arenas → identical scoring (the refresh stamps are
+        // excluded from both the document and store equality).
+        for _ in 0..10 {
+            let x: Vec<f64> = (0..2).map(|_| rng.normal() * 5.0).collect();
+            assert_eq!(m.log_density(&x), restored.log_density(&x));
+        }
+        // A document without the fields loads with all three off — the
+        // additive-field degrade path for pre-pipeline readers/writers.
+        let stripped = match doc.clone() {
+            crate::json::Json::Obj(mut o) => {
+                o.remove("learn_mode");
+                o.remove("decay");
+                o.remove("max_age");
+                crate::json::Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let as_default = Figmn::from_json(&stripped).unwrap();
+        assert_eq!(as_default.config().learn_mode, LearnMode::Online);
+        assert_eq!(as_default.config().decay, 1.0);
+        assert_eq!(as_default.config().max_age, 0);
+        // Invalid values are rejected like any corrupt field.
+        for (from, to) in [
+            ("\"learn_mode\":\"minibatch:4\"", "\"learn_mode\":\"minibatch:0\""),
+            ("\"learn_mode\":\"minibatch:4\"", "\"learn_mode\":\"turbo\""),
+            ("\"learn_mode\":\"minibatch:4\"", "\"learn_mode\":9"),
+            ("\"decay\":0.995", "\"decay\":0"),
+            ("\"decay\":0.995", "\"decay\":1.5"),
+            ("\"decay\":0.995", "\"decay\":\"fast\""),
+            ("\"max_age\":100", "\"max_age\":\"soon\""),
+        ] {
+            let bad = doc.to_string_compact().replace(from, to);
+            assert_ne!(bad, doc.to_string_compact(), "replacement {from} did not apply");
+            assert!(Figmn::from_json(&parse(&bad).unwrap()).is_err(), "{to}");
         }
     }
 

@@ -4,7 +4,7 @@
 //! heap `Vec` for its mean plus a dense `Matrix` for its symmetric
 //! matrix — which scattered the learn hot path's working set across K
 //! allocations and stored every symmetric matrix twice over. A
-//! [`ComponentStore`] instead owns all mixture state in five contiguous
+//! [`ComponentStore`] instead owns all mixture state in six contiguous
 //! arenas:
 //!
 //! - `means` — `K×D` row-major,
@@ -12,7 +12,9 @@
 //!   matrices (`Λ` for the precision path, `C` for the covariance
 //!   baseline; see [`crate::linalg::packed`] for layout and the
 //!   bit-identity contract of the packed kernels),
-//! - `log_dets`, `sps`, `vs` — `K` scalars each.
+//! - `log_dets`, `sps`, `vs` — `K` scalars each,
+//! - `stamps` — `K` stream positions, the drift bookkeeping behind the
+//!   max-age eviction arm of [`ComponentStore::prune_aged`].
 //!
 //! Component `j` is row `j` of every arena, so the engine's contiguous
 //! component shards map to contiguous arena slices — each worker
@@ -26,7 +28,7 @@
 //! feeds the deterministic tree reductions and must not depend on the
 //! storage layout.
 //!
-//! Publishing a read snapshot is `Clone` — five `memcpy`s, no
+//! Publishing a read snapshot is `Clone` — six `memcpy`s, no
 //! per-component traversal.
 //!
 //! ## Capacity reservation
@@ -36,7 +38,7 @@
 //! would leave any outstanding raw view dangling — and even off the
 //! engine path, mid-stream reallocation moves the hot rows. Models
 //! therefore reserve up front: [`ComponentStore::with_capacity`] sizes
-//! all five arenas for `max_components` rows (or a growth hint), and
+//! all six arenas for `max_components` rows (or a growth hint), and
 //! [`ComponentStore::push`] grows all arenas *together*, geometrically,
 //! when unreserved — O(log K) moves over a stream instead of per-arena
 //! drift. A generation counter (bumped by every push/truncate) lets
@@ -84,6 +86,14 @@ pub struct ComponentStore {
     log_dets: Vec<f64>,
     sps: Vec<f64>,
     vs: Vec<u64>,
+    /// Last-refresh stream position per component: the index of the last
+    /// learned point this component *won* (took the argmax posterior),
+    /// or its creation position while it has won nothing since. Drift
+    /// bookkeeping for [`ComponentStore::prune_aged`] — not serialized
+    /// model state, and (like the generation counter) excluded from
+    /// `PartialEq`, so a checkpoint round-trip that re-stamps survivors
+    /// still compares equal.
+    stamps: Vec<u64>,
 }
 
 /// A clone is an independent store (the snapshot path): fresh data
@@ -101,6 +111,7 @@ impl Clone for ComponentStore {
             log_dets: self.log_dets.clone(),
             sps: self.sps.clone(),
             vs: self.vs.clone(),
+            stamps: self.stamps.clone(),
         }
     }
 }
@@ -128,6 +139,7 @@ impl ComponentStore {
             log_dets: Vec::new(),
             sps: Vec::new(),
             vs: Vec::new(),
+            stamps: Vec::new(),
         }
     }
 
@@ -158,6 +170,7 @@ impl ComponentStore {
         self.log_dets.reserve(additional);
         self.sps.reserve(additional);
         self.vs.reserve(additional);
+        self.stamps.reserve(additional);
         self.generation.fetch_add(1, Ordering::Release);
     }
 
@@ -173,7 +186,8 @@ impl ComponentStore {
         // Eager-reservation budget per model (bytes of arena payload).
         const RESERVE_BYTES_CAP: usize = 256 << 20;
         let tri = packed::packed_len(dim);
-        let row_bytes = (dim + tri + 2) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>();
+        let row_bytes =
+            (dim + tri + 2) * std::mem::size_of::<f64>() + 2 * std::mem::size_of::<u64>();
         rows.min((RESERVE_BYTES_CAP / row_bytes).max(1))
     }
 
@@ -184,6 +198,7 @@ impl ComponentStore {
             .min(self.log_dets.capacity())
             .min(self.sps.capacity())
             .min(self.vs.capacity())
+            .min(self.stamps.capacity())
     }
 
     /// Number of live components `K`.
@@ -206,9 +221,11 @@ impl ComponentStore {
     }
 
     /// Append a component row to every arena. `mat` is packed
-    /// upper-triangular (length `D·(D+1)/2`).
+    /// upper-triangular (length `D·(D+1)/2`). The fresh row's refresh
+    /// stamp starts at 0; age-tracking callers re-stamp it with the
+    /// current stream position via [`ComponentStore::set_stamp`].
     ///
-    /// When the reservation is exhausted, all five arenas grow together
+    /// When the reservation is exhausted, all six arenas grow together
     /// (geometric doubling, minimum 8 rows) so their capacities stay in
     /// lock-step and a stream of creates moves the hot rows at most
     /// O(log K) times. Bumps the generation: any [`StoreRawMut`] view
@@ -224,6 +241,7 @@ impl ComponentStore {
         self.log_dets.push(log_det);
         self.sps.push(sp);
         self.vs.push(v);
+        self.stamps.push(0);
         self.generation.fetch_add(1, Ordering::Release);
     }
 
@@ -264,6 +282,42 @@ impl ComponentStore {
     /// so priors come out bit-identical.
     pub fn total_sp(&self) -> f64 {
         self.sps.iter().sum()
+    }
+
+    /// Last-refresh stream position of component `j` (see
+    /// [`ComponentStore::set_stamp`]).
+    pub fn stamp(&self, j: usize) -> u64 {
+        self.stamps[j]
+    }
+
+    /// Record that component `j` was refreshed at stream position `t`.
+    /// The models stamp the posterior-argmax winner of every learned
+    /// point plus every freshly created component, so `now − stamp(j)`
+    /// is "points since `j` last won a point" — the age that the
+    /// max-age arm of [`ComponentStore::prune_aged`] tests.
+    pub(crate) fn set_stamp(&mut self, j: usize, t: u64) {
+        self.stamps[j] = t;
+    }
+
+    /// Re-stamp every component to `t`. Checkpoint restore uses this:
+    /// refresh stamps are bookkeeping rather than serialized model
+    /// state, so survivors restart their eviction clocks at the restore
+    /// point instead of being mass-evicted on the first prune.
+    pub(crate) fn reset_stamps(&mut self, t: u64) {
+        for s in &mut self.stamps {
+            *s = t;
+        }
+    }
+
+    /// Multiply every accumulator `sp` by `factor` — the exponential
+    /// forgetting step of the drift-adaptive learn modes. One sweep over
+    /// the `sps` arena; the integer age `v` does not decay (stale
+    /// components leave via the max-age arm of
+    /// [`ComponentStore::prune_aged`] instead).
+    pub(crate) fn decay_sps(&mut self, factor: f64) {
+        for sp in &mut self.sps {
+            *sp *= factor;
+        }
     }
 
     /// Disjoint mutable views of row `j` across all arenas:
@@ -332,6 +386,7 @@ impl ComponentStore {
         self.log_dets.swap(lo, hi);
         self.sps.swap(lo, hi);
         self.vs.swap(lo, hi);
+        self.stamps.swap(lo, hi);
     }
 
     /// Overwrite row `dst` with row `src` (compaction helper). Already
@@ -345,6 +400,7 @@ impl ComponentStore {
         self.log_dets[dst] = self.log_dets[src];
         self.sps[dst] = self.sps[src];
         self.vs[dst] = self.vs[src];
+        self.stamps[dst] = self.stamps[src];
     }
 
     /// Drop every row past the first `k`. Bumps the generation (K
@@ -355,6 +411,7 @@ impl ComponentStore {
         self.log_dets.truncate(k);
         self.sps.truncate(k);
         self.vs.truncate(k);
+        self.stamps.truncate(k);
         self.generation.fetch_add(1, Ordering::Release);
     }
 
@@ -372,12 +429,36 @@ impl ComponentStore {
     ///
     /// Returns how many components were removed.
     pub(crate) fn prune(&mut self, v_min: u64, sp_min: f64) -> usize {
+        self.prune_aged(v_min, sp_min, 0, 0)
+    }
+
+    /// [`ComponentStore::prune`] with the drift-adaptive max-age arm: a
+    /// component is additionally doomed when `max_age > 0` and more than
+    /// `max_age` points have passed since it last won a point
+    /// (`now − stamp > max_age`; see [`ComponentStore::set_stamp`]).
+    /// Both arms share the same machinery — the never-empty
+    /// keep-strongest fallback and the order-preserving stable
+    /// compaction — so age eviction composes with the §2.3 sweep
+    /// without changing its layout-invariance guarantees. Callers that
+    /// want the age arm alone pass `v_min = u64::MAX`, which makes the
+    /// spuriousness predicate vacuously false.
+    ///
+    /// Returns how many components were removed.
+    pub(crate) fn prune_aged(
+        &mut self,
+        v_min: u64,
+        sp_min: f64,
+        max_age: u64,
+        now: u64,
+    ) -> usize {
         let k = self.len();
         if k <= 1 {
             return 0;
         }
-        let doomed = |sp: f64, v: u64| v > v_min && sp < sp_min;
-        if (0..k).all(|j| doomed(self.sps[j], self.vs[j])) {
+        let doomed = |sp: f64, v: u64, stamp: u64| {
+            (v > v_min && sp < sp_min) || (max_age > 0 && now.saturating_sub(stamp) > max_age)
+        };
+        if (0..k).all(|j| doomed(self.sps[j], self.vs[j], self.stamps[j])) {
             let mut keep = 0usize;
             let mut best = self.sps[0];
             for (j, &s) in self.sps.iter().enumerate().skip(1) {
@@ -391,7 +472,7 @@ impl ComponentStore {
         } else {
             let mut w = 0usize;
             for j in 0..k {
-                if doomed(self.sps[j], self.vs[j]) {
+                if doomed(self.sps[j], self.vs[j], self.stamps[j]) {
                     continue;
                 }
                 if w != j {
@@ -405,8 +486,9 @@ impl ComponentStore {
     }
 
     /// Model-state bytes one component occupies, **variant-aware**: `D`
-    /// mean + `D(D+1)/2` packed matrix + `sp` floats + the `u64` age,
-    /// plus the tracked `log_det` float on the precision path only —
+    /// mean + `D(D+1)/2` packed matrix + `sp` floats + the `u64` age
+    /// and the `u64` refresh stamp, plus the tracked `log_det` float on
+    /// the precision path only —
     /// the covariance baseline documents that lane as unused (it
     /// derives determinants from each factorization), so counting it
     /// would overstate `Igmn` memory in `WorkerStats`/registry stats.
@@ -418,7 +500,8 @@ impl ComponentStore {
             MatKind::Precision => 2, // log_det + sp
             MatKind::Covariance => 1, // sp only
         };
-        (self.dim + self.tri + scalars) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>()
+        (self.dim + self.tri + scalars) * std::mem::size_of::<f64>()
+            + 2 * std::mem::size_of::<u64>()
     }
 
     /// Total model-state bytes for the live mixture (see
@@ -429,17 +512,20 @@ impl ComponentStore {
 
     /// Payload bytes one component occupied in the pre-refactor dense
     /// array-of-structs layout (`D` mean + `D²` matrix + 2 scalar
-    /// floats + the `u64` age) — the baseline the layout benches
-    /// compare [`ComponentStore::bytes_per_component`] against.
+    /// floats + the `u64` age and the `u64` refresh stamp — the same
+    /// scalar bookkeeping as the packed layout, so only the matrix
+    /// layout differs) — the baseline the layout benches compare
+    /// [`ComponentStore::bytes_per_component`] against.
     pub fn dense_equivalent_bytes(dim: usize) -> usize {
-        (dim + dim * dim + 2) * std::mem::size_of::<f64>() + std::mem::size_of::<u64>()
+        (dim + dim * dim + 2) * std::mem::size_of::<f64>() + 2 * std::mem::size_of::<u64>()
     }
 }
 
 /// Stores are equal when they hold the same components of the same
-/// variant — the generation (a history counter) deliberately does not
-/// participate, so e.g. a pruned store equals a freshly built one with
-/// the same survivors.
+/// variant — the generation (a history counter) and the refresh stamps
+/// (eviction bookkeeping, reset on checkpoint restore) deliberately do
+/// not participate, so e.g. a pruned store equals a freshly built one
+/// with the same survivors.
 impl PartialEq for ComponentStore {
     fn eq(&self, other: &ComponentStore) -> bool {
         self.dim == other.dim
@@ -613,9 +699,9 @@ mod tests {
     #[test]
     fn byte_accounting_tracks_packed_layout() {
         // Precision variant: D=2 → 2 mean + 3 packed + log_det + sp
-        // floats, + u64 age.
+        // floats, + u64 age + u64 refresh stamp.
         let s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
-        assert_eq!(s.bytes_per_component(), 7 * 8 + 8);
+        assert_eq!(s.bytes_per_component(), 7 * 8 + 16);
         assert_eq!(s.model_bytes(), 2 * s.bytes_per_component());
         // The packed matrix is strictly smaller than dense for D ≥ 2.
         assert!(s.mat_len() < s.dim() * s.dim());
@@ -625,9 +711,76 @@ mod tests {
         let mut c = ComponentStore::new_covariance(2);
         c.push(&[0.0, 0.0], &packed::from_diag(&[1.0, 1.0]), 0.0, 1.0, 1);
         c.push(&[1.0, 1.0], &packed::from_diag(&[2.0, 2.0]), 0.0, 1.0, 1);
-        assert_eq!(c.bytes_per_component(), 6 * 8 + 8);
+        assert_eq!(c.bytes_per_component(), 6 * 8 + 16);
         assert_eq!(c.bytes_per_component() + 8, s.bytes_per_component());
         assert_eq!(c.model_bytes(), 2 * c.bytes_per_component());
+    }
+
+    #[test]
+    fn stamps_follow_row_moves() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6), (7.0, 8.0, 9)]);
+        assert_eq!(s.stamp(0), 0, "push starts fresh rows at stamp 0");
+        s.set_stamp(0, 10);
+        s.set_stamp(1, 20);
+        s.set_stamp(2, 30);
+        s.swap_rows(0, 2);
+        assert_eq!(s.stamp(0), 30);
+        assert_eq!(s.stamp(2), 10);
+        s.truncate(2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.stamp(1), 20);
+        s.reset_stamps(77);
+        assert_eq!((s.stamp(0), s.stamp(1)), (77, 77));
+    }
+
+    #[test]
+    fn decay_scales_every_sp() {
+        let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
+        s.decay_sps(0.5);
+        assert_eq!(s.sps(), &[1.0, 2.5]);
+        assert_eq!(s.total_sp(), 3.5);
+        // Decay touches nothing else.
+        assert_eq!(s.mean(0), &[1.0, -1.0]);
+        assert_eq!(s.v(1), 6);
+    }
+
+    #[test]
+    fn prune_aged_evicts_stale_components_and_keeps_order() {
+        let mut s = store_with(&[(1.0, 5.0, 0), (2.0, 6.0, 0), (3.0, 7.0, 0)]);
+        s.set_stamp(0, 100);
+        s.set_stamp(1, 40); // 60 points stale → doomed at max_age 50
+        s.set_stamp(2, 90);
+        // §2.3 arm disabled via v_min = MAX; only the age arm fires.
+        let removed = s.prune_aged(u64::MAX, 0.0, 50, 100);
+        assert_eq!(removed, 1);
+        assert_eq!(s.sps(), &[5.0, 7.0], "survivors keep their order");
+        assert_eq!((s.stamp(0), s.stamp(1)), (100, 90));
+        // max_age = 0 disables the arm entirely.
+        assert_eq!(s.prune_aged(u64::MAX, 0.0, 0, u64::MAX), 0);
+    }
+
+    #[test]
+    fn prune_aged_shares_keep_strongest_fallback() {
+        // Every component is stale → the highest-sp one still survives.
+        let mut s = store_with(&[(1.0, 0.5, 9), (2.0, 2.5, 9), (3.0, 1.5, 9)]);
+        let removed = s.prune_aged(u64::MAX, 0.0, 10, 1000);
+        assert_eq!(removed, 2);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.mean(0), &[2.0, -2.0]);
+    }
+
+    #[test]
+    fn prune_aged_combines_both_arms() {
+        // Row 1 is spurious (v > 1, sp < 4); row 3 is stale; rows 0/2
+        // survive both predicates.
+        let mut s = store_with(&[(1.0, 5.0, 0), (2.0, 1.0, 3), (3.0, 6.0, 4), (4.0, 9.0, 5)]);
+        for j in 0..4 {
+            s.set_stamp(j, 100);
+        }
+        s.set_stamp(3, 10);
+        let removed = s.prune_aged(1, 4.0, 50, 100);
+        assert_eq!(removed, 2);
+        assert_eq!(s.sps(), &[5.0, 6.0]);
     }
 
     #[test]
@@ -673,7 +826,7 @@ mod tests {
         let mut last_cap = s.capacity_rows();
         for i in 0..100 {
             s.push(&[i as f64, 0.0, 0.0], &mat, 0.0, 1.0, 1);
-            // Every arena keeps up with K: the five capacities grow
+            // Every arena keeps up with K: the six capacities grow
             // together, geometrically (O(log K) growth events).
             assert!(s.capacity_rows() >= s.len());
             if s.capacity_rows() != last_cap {

@@ -10,6 +10,12 @@
 
 use super::{Figmn, GmmConfig, IncrementalMixture, Igmn, LearnOutcome};
 
+/// Chunk length [`SupervisedGmm::train_batch`] materializes joint
+/// vectors in: big enough that a mini-batch model's blocks stay intact
+/// for every practical block length, small enough that batch training
+/// never holds more than O(CHUNK·D) extra memory.
+const TRAIN_JOINT_CHUNK: usize = 256;
+
 /// A classifier wrapper over any [`IncrementalMixture`].
 pub struct SupervisedGmm<M: IncrementalMixture> {
     model: M,
@@ -57,17 +63,34 @@ impl<M: IncrementalMixture> SupervisedGmm<M> {
         self.model.learn(&joint)
     }
 
-    /// Present a batch of labeled examples in stream order (identical
-    /// to looping [`SupervisedGmm::train_one`]). Learning is sequential
-    /// in the stream, so joints are built one at a time — O(D) extra
-    /// memory — rather than materializing a second copy of the dataset;
-    /// an attached engine still shards each point's component work.
+    /// Present a batch of labeled examples in stream order. Joints are
+    /// materialized in chunks of [`TRAIN_JOINT_CHUNK`] and handed to
+    /// the mixture's `learn_batch`, so an online model consumes them
+    /// exactly as looping [`SupervisedGmm::train_one`] would, while a
+    /// [`super::LearnMode::MiniBatch`] model stages its blocked learn
+    /// pipeline (chunking bounds the extra memory at O(CHUNK·D) and
+    /// caps the effective block length at the chunk size).
     pub fn train_batch(&mut self, xs: &[Vec<f64>], classes: &[usize]) -> Vec<LearnOutcome> {
         assert_eq!(xs.len(), classes.len());
-        xs.iter()
-            .zip(classes.iter())
-            .map(|(x, &class)| self.train_one(x, class))
-            .collect()
+        let mut out = Vec::with_capacity(xs.len());
+        let mut joints: Vec<Vec<f64>> = Vec::with_capacity(TRAIN_JOINT_CHUNK.min(xs.len()));
+        for (chunk_x, chunk_c) in
+            xs.chunks(TRAIN_JOINT_CHUNK).zip(classes.chunks(TRAIN_JOINT_CHUNK))
+        {
+            joints.clear();
+            for (x, &class) in chunk_x.iter().zip(chunk_c.iter()) {
+                assert_eq!(x.len(), self.n_features);
+                assert!(class < self.n_classes);
+                let mut joint = Vec::with_capacity(self.model.dim());
+                joint.extend_from_slice(x);
+                for c in 0..self.n_classes {
+                    joint.push(if c == class { 1.0 } else { 0.0 });
+                }
+                joints.push(joint);
+            }
+            out.extend(self.model.learn_batch(&joints));
+        }
+        out
     }
 
     /// Present one raw joint vector `[features…, outputs…]` — regression
@@ -186,7 +209,10 @@ fn joint_config(cfg: &GmmConfig, n_features: usize, n_classes: usize) -> GmmConf
         .with_delta(cfg.delta)
         .with_beta(cfg.beta)
         .with_max_components(cfg.max_components)
-        .with_kernel_mode(cfg.kernel_mode);
+        .with_kernel_mode(cfg.kernel_mode)
+        .with_learn_mode(cfg.learn_mode)
+        .with_decay(cfg.decay)
+        .with_max_age(cfg.max_age);
     if cfg.prune {
         joint = joint.with_pruning(cfg.v_min, cfg.sp_min);
     } else {
@@ -330,6 +356,32 @@ mod tests {
             probes.iter().map(|x| clf.predict_targets(x)).collect::<Vec<_>>()
         );
         assert!(clf.predict_class_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn minibatch_wrapper_trains_and_classifies() {
+        use crate::gmm::LearnMode;
+        let cfg = GmmConfig::new(2)
+            .with_delta(0.5)
+            .with_beta(0.05)
+            .without_pruning()
+            .with_learn_mode(LearnMode::MiniBatch { b: 16 });
+        let mut clf = supervised_figmn(cfg, &[3.0, 3.0], 3);
+        assert_eq!(clf.model().config().learn_mode, LearnMode::MiniBatch { b: 16 });
+        let data = gaussian_blobs(300, 11);
+        let xs: Vec<Vec<f64>> = data.iter().map(|(x, _)| x.clone()).collect();
+        let ys: Vec<usize> = data.iter().map(|(_, y)| *y).collect();
+        let outcomes = clf.train_batch(&xs, &ys);
+        assert_eq!(outcomes.len(), xs.len());
+        let mut correct = 0;
+        let test = gaussian_blobs(90, 12);
+        for (x, y) in &test {
+            if clf.predict_class(x) == *y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.9, "mini-batch accuracy {acc}");
     }
 
     #[test]

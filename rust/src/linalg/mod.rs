@@ -54,10 +54,11 @@ pub const TEST_EPS: f64 = 1e-9;
 /// serialized with checkpoints, and selectable over the coordinator
 /// protocol and the CLI (`train --kernel-mode fast`).
 ///
-/// Above `Fast`, the multi-query read path has a third rung that is
-/// *not* a `KernelMode`: the runtime-detected explicit-SIMD tier
-/// ([`SimdTier`], `Scalar < Fma < Avx512`) behind
-/// [`packed::quad_form_multi_simd`] and the f32 replica kernels. It is
+/// Above `Fast`, the hot paths have a third rung that is *not* a
+/// `KernelMode`: the runtime-detected explicit-SIMD tier ([`SimdTier`],
+/// `Scalar < Fma < Avx512`) behind [`packed::quad_form_multi_simd`] and
+/// the f32 replica kernels on the read path, and [`packed::spmv_simd`] /
+/// [`rank_one::figmn_fused_update_packed_simd`] on the write path. It is
 /// dispatch, not policy — models never select it, it degrades to the
 /// portable `Fast` kernels on CPUs lacking the features, and it keeps
 /// `Fast`'s ~1e-12 tolerance contract (see the [`packed`] module docs

@@ -504,6 +504,40 @@ pub fn quad_form_multi_mode(
     }
 }
 
+/// Mode dispatcher for the *learn-side* multi-query distance pass: like
+/// [`quad_form_multi_mode`], but **both** arms also assemble the `b×d`
+/// w-block `ws[q] = A·e_q`, which the fused rank-one update stage of the
+/// mini-batch learn pipeline reuses (`gmm::learn_pipeline`). Each arm is
+/// bit-identical per query to the per-point learn kernel of its mode:
+///
+/// - `Strict`: [`spmv_multi`] assembles the w-block row-outer, then each
+///   query's form is the ascending left-fold `Σᵢ xᵢ·wᵢ` — exactly
+///   [`quad_form_with`]'s `total` accumulation order, so the pass scores
+///   precisely what the online strict path would.
+/// - `Fast`: [`quad_form_multi_fast`], already bit-identical per query
+///   to [`quad_form_with_fast`].
+#[inline]
+pub fn quad_form_with_multi_mode(
+    ap: &[f64],
+    d: usize,
+    es: &[f64],
+    b: usize,
+    ws: &mut [f64],
+    out: &mut [f64],
+    mode: KernelMode,
+) {
+    match mode {
+        KernelMode::Strict => {
+            assert_eq!(out.len(), b, "quad_form_with_multi_mode: out length");
+            spmv_multi(ap, d, es, b, ws);
+            for (bi, o) in out.iter_mut().enumerate() {
+                *o = super::dot(&es[bi * d..(bi + 1) * d], &ws[bi * d..(bi + 1) * d]);
+            }
+        }
+        KernelMode::Fast => quad_form_multi_fast(ap, d, es, b, ws, out),
+    }
+}
+
 /// Mode dispatcher for the distance-pass kernel: strict scalar loops or
 /// the blocked fast sweep.
 #[inline]
@@ -756,6 +790,64 @@ pub fn quad_form_multi_simd_tier(
         // Only reachable when the build enables avx512f globally, so the
         // plain body already compiles at full width.
         SimdTier::Avx512 => quad_form_multi_f64_fused(ap, d, es, b, ws, out),
+    }
+}
+
+/// Fused f64 symmetric mat-vec body — [`spmv_fast`]'s one-pass row
+/// sweep with `mul_add` accumulation ([`dot_fused`] diagonal dots, fused
+/// `j > i` scatter). `#[inline(always)]` so each `target_feature`
+/// wrapper recompiles it at that feature set's full vector width.
+#[inline(always)]
+fn spmv_f64_fused(ap: &[f64], d: usize, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(ap.len(), packed_len(d));
+    assert_eq!(x.len(), d, "spmv_simd: x length");
+    assert_eq!(y.len(), d, "spmv_simd: y length");
+    y.fill(0.0);
+    let mut rs = 0usize;
+    for i in 0..d {
+        let len = d - i;
+        let row = &ap[rs..rs + len];
+        let diag_dot = dot_fused(row, &x[i..]);
+        let xi = x[i];
+        for (yj, &aij) in y[i + 1..].iter_mut().zip(row[1..].iter()) {
+            *yj = aij.mul_add(xi, *yj);
+        }
+        y[i] += diag_dot;
+        rs += len;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn spmv_f64_fma(ap: &[f64], d: usize, x: &[f64], y: &mut [f64]) {
+    spmv_f64_fused(ap, d, x, y)
+}
+
+/// Explicit-SIMD symmetric mat-vec: [`spmv_fast`] semantics at the best
+/// tier the CPU supports — the ladder's **write-path** extension (the
+/// `Λ·e` sweep of the learn distance pass). Same tolerance contract as
+/// [`quad_form_multi_simd`]: within ~1e-12 relative of the `Fast`
+/// kernel, deterministic for a fixed tier.
+pub fn spmv_simd(ap: &[f64], d: usize, x: &[f64], y: &mut [f64]) {
+    spmv_simd_tier(ap, d, x, y, simd_tier())
+}
+
+/// Tier-forcing variant of [`spmv_simd`] (tests, benches). The
+/// requested tier is clamped to the detected one; forced `Scalar` runs
+/// the portable [`spmv_fast`] kernel bit for bit.
+pub fn spmv_simd_tier(ap: &[f64], d: usize, x: &[f64], y: &mut [f64], tier: SimdTier) {
+    let eff = tier.min(simd_tier());
+    match eff {
+        SimdTier::Scalar => spmv_fast(ap, d, x, y),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `eff ≤ simd_tier()`, and `Fma` is only ever detected
+        // when avx2+fma are present on the running CPU.
+        SimdTier::Fma => unsafe { spmv_f64_fma(ap, d, x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Fma => spmv_fast(ap, d, x, y),
+        // Only reachable when the build enables avx512f globally, so the
+        // plain body already compiles at full width.
+        SimdTier::Avx512 => spmv_f64_fused(ap, d, x, y),
     }
 }
 
@@ -1334,6 +1426,91 @@ mod tests {
                         "b={b} n={n} q={bi}: f32 tier not deterministic"
                     );
                 }
+            }
+        }
+    }
+
+    /// The learn-side multi-query dispatcher is bit-identical per query
+    /// to the per-point learn kernel of its mode — values *and* the
+    /// assembled w-block, across block sizes exercising the tiles and
+    /// their ragged tails.
+    #[test]
+    fn with_multi_mode_bit_identical_to_per_point_learn_kernels() {
+        let mut rng = Pcg64::seed(65);
+        for &b in &[1usize, 3, 4, 7, 8, 33] {
+            for n in [1usize, 2, 5, 16, 24] {
+                let m = random_sym(n, &mut rng);
+                let ap = pack_symmetric(&m);
+                let es: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+
+                for mode in [KernelMode::Strict, KernelMode::Fast] {
+                    let mut ws = vec![0.0; b * n];
+                    let mut out = vec![0.0; b];
+                    quad_form_with_multi_mode(&ap, n, &es, b, &mut ws, &mut out, mode);
+                    for bi in 0..b {
+                        let x = &es[bi * n..(bi + 1) * n];
+                        let mut w = vec![0.0; n];
+                        let expect = quad_form_with_mode(&ap, n, x, &mut w, mode);
+                        assert!(
+                            out[bi].to_bits() == expect.to_bits(),
+                            "b={b} n={n} q={bi} {mode:?}: quad form bits differ"
+                        );
+                        assert_eq!(
+                            &ws[bi * n..(bi + 1) * n],
+                            &w[..],
+                            "b={b} n={n} q={bi} {mode:?}: w block bits differ"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The write-path mat-vec tier keeps the ladder's contract: forced
+    /// `Scalar` IS [`spmv_fast`] bit for bit, the dispatched tier is
+    /// within 1e-12 relative of it, forcing above the detected tier
+    /// clamps to the dispatched result, and a fixed tier is
+    /// deterministic.
+    #[test]
+    fn spmv_simd_tier_matches_fast_within_tolerance() {
+        let mut rng = Pcg64::seed(93);
+        for n in [1usize, 2, 5, 16, 64, 129] {
+            let m = random_sym(n, &mut rng);
+            let ap = pack_symmetric(&m);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+            let mut fast = vec![0.0; n];
+            spmv_fast(&ap, n, &x, &mut fast);
+
+            let mut simd = vec![0.0; n];
+            spmv_simd(&ap, n, &x, &mut simd);
+            for (i, (f, s)) in fast.iter().zip(simd.iter()).enumerate() {
+                let tol = 1e-12 * (1.0 + f.abs());
+                assert!((f - s).abs() <= tol, "n={n} i={i}: {f} vs {s}");
+            }
+
+            let mut scalar = vec![0.0; n];
+            spmv_simd_tier(&ap, n, &x, &mut scalar, SimdTier::Scalar);
+            for i in 0..n {
+                assert!(
+                    scalar[i].to_bits() == fast[i].to_bits(),
+                    "n={n} i={i}: forced-scalar bits differ from fast"
+                );
+            }
+
+            let mut clamped = vec![0.0; n];
+            spmv_simd_tier(&ap, n, &x, &mut clamped, SimdTier::Avx512);
+            let mut again = vec![0.0; n];
+            spmv_simd(&ap, n, &x, &mut again);
+            for i in 0..n {
+                assert!(
+                    clamped[i].to_bits() == simd[i].to_bits(),
+                    "n={n} i={i}: clamped tier diverges from dispatch"
+                );
+                assert!(
+                    again[i].to_bits() == simd[i].to_bits(),
+                    "n={n} i={i}: spmv tier not deterministic"
+                );
             }
         }
     }

@@ -12,6 +12,7 @@
 //! `f64` for any σ ≠ 1, while the recurrences translate verbatim into log
 //! space (products become sums). The equivalence tests compare log-dets.
 
+use super::packed::{simd_tier, SimdTier};
 use super::{dot, KernelMode, Matrix};
 
 /// Symmetric rank-one accumulate: `A += α·u·uᵀ` (full storage).
@@ -273,6 +274,103 @@ pub fn figmn_fused_update_packed_fast(
     }
     let new_log_det = (d as f64) * one_minus.ln() + log_det + denom.ln();
     Some(UpdateResult { log_det: new_log_det, quad_estar: q })
+}
+
+/// Fused-FMA body of the packed fused update's row sweep: the same
+/// hoisted `a·Λᵢⱼ + (β·wᵢ)·wⱼ` expression as
+/// [`figmn_fused_update_packed_fast`] with the scale and accumulate
+/// contracted into one `mul_add` per entry. `#[inline(always)]` so the
+/// `target_feature` wrapper recompiles it at that feature set's full
+/// vector width. The `log|C|` recurrence does not involve the row loop
+/// and stays bit-identical across every tier (property-tested below).
+#[inline(always)]
+fn figmn_fused_update_packed_fused(
+    lambda: &mut [f64],
+    d: usize,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+) -> Option<UpdateResult> {
+    debug_assert_eq!(lambda.len(), crate::linalg::packed::packed_len(d));
+    debug_assert_eq!(w.len(), d);
+    debug_assert!(omega > 0.0 && omega < 1.0, "omega must be in (0,1), got {omega}");
+    let one_minus = 1.0 - omega;
+    let denom = 1.0 + omega * q;
+    if !(denom > 0.0) || !denom.is_finite() {
+        return None;
+    }
+    let a = 1.0 / one_minus;
+    let beta = -(omega * a) / denom;
+    let mut rs = 0usize;
+    for i in 0..d {
+        let bwi = beta * w[i];
+        let row = &mut lambda[rs..rs + d - i];
+        for (r, &wj) in row.iter_mut().zip(w[i..].iter()) {
+            *r = a.mul_add(*r, bwi * wj);
+        }
+        rs += d - i;
+    }
+    let new_log_det = (d as f64) * one_minus.ln() + log_det + denom.ln();
+    Some(UpdateResult { log_det: new_log_det, quad_estar: q })
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn figmn_fused_update_packed_fma(
+    lambda: &mut [f64],
+    d: usize,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+) -> Option<UpdateResult> {
+    figmn_fused_update_packed_fused(lambda, d, w, q, omega, log_det)
+}
+
+/// Explicit-SIMD tier of the packed fused update — the write-path rung
+/// of the [`SimdTier`] ladder (see `linalg::packed`'s module docs):
+/// [`figmn_fused_update_packed_fast`] semantics at the best tier the
+/// CPU supports, within ~1e-12 relative of the `Fast` kernel on the
+/// matrix entries, `log|C|` bit-identical, deterministic for a fixed
+/// tier.
+pub fn figmn_fused_update_packed_simd(
+    lambda: &mut [f64],
+    d: usize,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+) -> Option<UpdateResult> {
+    figmn_fused_update_packed_simd_tier(lambda, d, w, q, omega, log_det, simd_tier())
+}
+
+/// Tier-forcing variant of [`figmn_fused_update_packed_simd`] (tests,
+/// benches). The requested tier is clamped to the detected one; forced
+/// `Scalar` runs the portable [`figmn_fused_update_packed_fast`] kernel
+/// bit for bit.
+pub fn figmn_fused_update_packed_simd_tier(
+    lambda: &mut [f64],
+    d: usize,
+    w: &[f64],
+    q: f64,
+    omega: f64,
+    log_det: f64,
+    tier: SimdTier,
+) -> Option<UpdateResult> {
+    let eff = tier.min(simd_tier());
+    match eff {
+        SimdTier::Scalar => figmn_fused_update_packed_fast(lambda, d, w, q, omega, log_det),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `eff ≤ simd_tier()`, and `Fma` is only ever detected
+        // when avx2+fma are present on the running CPU.
+        SimdTier::Fma => unsafe { figmn_fused_update_packed_fma(lambda, d, w, q, omega, log_det) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Fma => figmn_fused_update_packed_fast(lambda, d, w, q, omega, log_det),
+        // Only reachable when the build enables avx512f globally, so the
+        // plain body already compiles at full width.
+        SimdTier::Avx512 => figmn_fused_update_packed_fused(lambda, d, w, q, omega, log_det),
+    }
 }
 
 /// Mode dispatcher for the packed fused update (see
@@ -577,6 +675,82 @@ mod tests {
             )
             .unwrap();
             assert_eq!(via_strict, strict, "trial {trial}: Strict dispatch mismatch");
+        }
+    }
+
+    /// The write-path update tier keeps the ladder's contract: forced
+    /// `Scalar` IS the portable fast kernel bit for bit, the dispatched
+    /// tier is within 1e-12 relative of it on the matrix entries, the
+    /// `log|C|` recurrence is bit-identical across every tier, forcing
+    /// above the detected tier clamps to the dispatched result, and a
+    /// fixed tier is deterministic.
+    #[test]
+    fn fused_update_simd_tier_matches_fast_within_tolerance() {
+        use crate::linalg::packed::pack_symmetric;
+        let mut rng = Pcg64::seed(421);
+        for trial in 0..100 {
+            let n = 1 + (trial % 16);
+            let mut dense = random_spd(n, &mut rng);
+            dense.symmetrize();
+            let base = pack_symmetric(&dense);
+            let log_det = rng.normal();
+
+            let e: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let omega = 0.01 + 0.95 * rng.uniform();
+            let mut w = vec![0.0; n];
+            dense.matvec_into(&e, &mut w);
+            let q = dot(&e, &w);
+
+            let mut fast = base.clone();
+            let r_fast = figmn_fused_update_packed_fast(&mut fast, n, &w, q, omega, log_det)
+                .expect("fast must succeed");
+
+            let mut simd = base.clone();
+            let r_simd = figmn_fused_update_packed_simd(&mut simd, n, &w, q, omega, log_det)
+                .expect("simd must succeed");
+            let scale = fast.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for (i, (a, b)) in fast.iter().zip(simd.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * scale,
+                    "trial {trial}: entry {i} diverged ({a} vs {b})"
+                );
+            }
+            assert!(
+                r_fast.log_det.to_bits() == r_simd.log_det.to_bits(),
+                "trial {trial}: log-det recurrence must not change across tiers"
+            );
+
+            let mut scalar = base.clone();
+            let r_scalar = figmn_fused_update_packed_simd_tier(
+                &mut scalar,
+                n,
+                &w,
+                q,
+                omega,
+                log_det,
+                SimdTier::Scalar,
+            )
+            .expect("scalar tier must succeed");
+            assert_eq!(scalar, fast, "trial {trial}: forced-scalar bits differ from fast");
+            assert!(r_scalar.log_det.to_bits() == r_fast.log_det.to_bits());
+
+            let mut clamped = base.clone();
+            figmn_fused_update_packed_simd_tier(
+                &mut clamped,
+                n,
+                &w,
+                q,
+                omega,
+                log_det,
+                SimdTier::Avx512,
+            )
+            .expect("clamped tier must succeed");
+            assert_eq!(clamped, simd, "trial {trial}: clamped tier diverges from dispatch");
+
+            let mut again = base.clone();
+            figmn_fused_update_packed_simd(&mut again, n, &w, q, omega, log_det)
+                .expect("repeat must succeed");
+            assert_eq!(again, simd, "trial {trial}: update tier not deterministic");
         }
     }
 

@@ -17,7 +17,7 @@ use figmn::data::Dataset;
 use figmn::engine::EngineConfig;
 use figmn::eval::{multiclass_auc, Stopwatch};
 use figmn::gmm::supervised::{supervised_figmn, supervised_igmn};
-use figmn::gmm::{GmmConfig, KernelMode, ReplicaMode, SearchMode};
+use figmn::gmm::{GmmConfig, KernelMode, LearnMode, ReplicaMode, SearchMode};
 use figmn::rng::Pcg64;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -89,7 +89,8 @@ fn cmd_train(args: &[String]) -> i32 {
         eprintln!(
             "usage: figmn train <dataset> [--delta D] [--beta B] [--algo fast|orig] \
              [--seed N] [--threads T] [--kernel-mode strict|fast] \
-             [--search-mode strict|topc:C] [--replica-mode off|f32[:TOL]]"
+             [--search-mode strict|topc:C] [--replica-mode off|f32[:TOL]] \
+             [--learn-mode online|minibatch:B] [--decay RATE] [--max-age AGE]"
         );
         return 2;
     };
@@ -142,6 +143,38 @@ fn cmd_train(args: &[String]) -> i32 {
         },
     };
 
+    // Staged mini-batch learn mode (online = default, bit-identical
+    // legacy path; minibatch:B stages B-point blocks through the
+    // blocked distance pass — see figmn::gmm::learn_pipeline).
+    let learn_mode = match flags.get("learn-mode").map(String::as_str) {
+        None => LearnMode::Online,
+        Some(s) => match LearnMode::parse(s) {
+            Some(m) => m,
+            None => {
+                eprintln!("unknown --learn-mode '{s}' (want online|minibatch:B with B >= 1)");
+                return 2;
+            }
+        },
+    };
+    // Drift-adaptive knobs: per-point sp decay in (0, 1] (1.0 = off)
+    // and component max-age eviction (0 = off).
+    let decay: f64 = match flags.get("decay").map(|s| s.parse::<f64>()) {
+        None => 1.0,
+        Some(Ok(d)) if d > 0.0 && d <= 1.0 => d,
+        Some(_) => {
+            eprintln!("bad --decay (want a rate in (0, 1]; 1.0 disables decay)");
+            return 2;
+        }
+    };
+    let max_age: u64 = match flags.get("max-age").map(|s| s.parse::<u64>()) {
+        None => 0,
+        Some(Ok(a)) => a,
+        Some(Err(_)) => {
+            eprintln!("bad --max-age (want a point count; 0 disables eviction)");
+            return 2;
+        }
+    };
+
     let data = synth::generate(spec, seed);
     let stds = data.feature_stds();
     let mut rng = Pcg64::seed(seed);
@@ -163,13 +196,21 @@ fn cmd_train(args: &[String]) -> i32 {
     if algo == "orig" && search_mode != effective_search {
         eprintln!("note: --algo orig always sweeps full-K; ignoring --search-mode");
     }
+    // ... and no staged learn pipeline.
+    let effective_learn = if algo == "orig" { LearnMode::Online } else { learn_mode };
+    if algo == "orig" && learn_mode != effective_learn {
+        eprintln!("note: --algo orig always learns online; ignoring --learn-mode");
+    }
 
     let cfg = GmmConfig::new(1)
         .with_delta(delta)
         .with_beta(beta)
         .with_kernel_mode(effective_mode)
         .with_search_mode(effective_search)
-        .with_replica_mode(replica_mode);
+        .with_replica_mode(replica_mode)
+        .with_learn_mode(effective_learn)
+        .with_decay(decay)
+        .with_max_age(max_age);
     let mut sw = Stopwatch::new();
     let (scores, components): (Vec<Vec<f64>>, usize) = if algo == "orig" {
         let mut clf = supervised_igmn(cfg, &stds, data.n_classes);
@@ -194,7 +235,8 @@ fn cmd_train(args: &[String]) -> i32 {
         / test.len() as f64;
     println!(
         "{name}: algo={algo} kernels={effective_mode} search={effective_search} \
-         N_train={} D={} → {} components, train {:.3}s, AUC {:.3}, acc {:.3}",
+         learn={effective_learn} N_train={} D={} → {} components, train {:.3}s, \
+         AUC {:.3}, acc {:.3}",
         train.len(),
         data.dim(),
         components,

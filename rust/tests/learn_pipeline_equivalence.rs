@@ -1,0 +1,255 @@
+//! Staged learn pipeline — the exactness and drift-adaptation contract.
+//!
+//! The mini-batch learn pipeline (`gmm::learn_pipeline`) stages B-point
+//! blocks through a frozen distance pass + sequential update stage. Its
+//! contract:
+//!
+//! - **`MiniBatch{b: 1}` with decay off is bit-identical to `Online`**
+//!   at every engine thread count, for both kernel modes and both
+//!   search modes — the degenerate block routes through the exact
+//!   online body, so opting a model into the pipeline costs nothing
+//!   until `b > 1`.
+//! - **determinism within a block size**: for a fixed `b`, thread
+//!   counts {1, 2, 4} reproduce the serial blocked path bit for bit
+//!   (the K×B distance tile is sharded, the update stage is
+//!   sequential).
+//! - **drift adaptation**: with exponential `sp` decay (and max-age
+//!   eviction), a model recovers accuracy after an adversarial
+//!   mean-swap shift, while a non-decayed model keeps voting its
+//!   pre-shift mass — the `data::synth::drift_stream` scenario.
+
+use figmn::data::synth::{drift_stream, DriftSpec};
+use figmn::engine::EngineConfig;
+use figmn::gmm::supervised::supervised_figmn;
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, KernelMode, LearnMode, SearchMode};
+use figmn::linalg::Matrix;
+use figmn::rng::Pcg64;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// A stream that forces both creations and updates: clustered draws
+/// around `k` well-separated centers.
+fn clustered_stream(d: usize, k: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    let centers: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.normal() * 30.0).collect()).collect();
+    (0..n)
+        .map(|i| centers[i % k].iter().map(|&c| c + rng.normal() * 0.5).collect())
+        .collect()
+}
+
+/// Full-state bitwise equality: arenas, scalars, and read surfaces.
+fn assert_bit_identical(a: &Figmn, b: &Figmn, probes: &[Vec<f64>], tag: &str) {
+    assert_eq!(a.num_components(), b.num_components(), "{tag}: K diverged");
+    for j in 0..a.num_components() {
+        assert_eq!(a.component_mean(j), b.component_mean(j), "{tag}: mean[{j}]");
+        assert_eq!(a.store().mat(j), b.store().mat(j), "{tag}: lambda[{j}]");
+        assert_eq!(a.component_log_det(j), b.component_log_det(j), "{tag}: log_det[{j}]");
+        assert_eq!(a.component_stats(j), b.component_stats(j), "{tag}: sp/v[{j}]");
+    }
+    for (i, x) in probes.iter().enumerate() {
+        assert_eq!(a.log_density(x), b.log_density(x), "{tag}: density[{i}]");
+        assert_eq!(a.posteriors(x), b.posteriors(x), "{tag}: posteriors[{i}]");
+    }
+}
+
+/// `MiniBatch{b: 1}` + decay off ≡ `Online`, bit for bit, across
+/// {1, 2, 4} threads × {Strict, Fast} kernels × {Strict, TopC} search.
+#[test]
+fn minibatch_b1_decay_off_is_bit_identical_to_online() {
+    let d = 16;
+    let k = 48;
+    let stream = clustered_stream(d, k, 400, 21);
+    let probes = stream[..6].to_vec();
+    let stds = vec![1.0; d];
+
+    for kernel in [KernelMode::Strict, KernelMode::Fast] {
+        for search in [SearchMode::Strict, SearchMode::TopC { c: 8 }] {
+            let base = GmmConfig::new(d)
+                .with_delta(1.0)
+                .with_beta(0.05)
+                .with_max_components(k)
+                .with_kernel_mode(kernel)
+                .with_search_mode(search)
+                .without_pruning();
+
+            let mut online = Figmn::new(base.clone(), &stds);
+            let online_outcomes: Vec<_> = stream.iter().map(|x| online.learn(x)).collect();
+            assert!(online.num_components() >= 2, "stream too tame");
+
+            for t in THREAD_COUNTS {
+                let cfg = base.clone().with_learn_mode(LearnMode::MiniBatch { b: 1 });
+                let mut staged =
+                    Figmn::new(cfg, &stds).with_engine(EngineConfig::new(t));
+                let staged_outcomes = staged.learn_batch(&stream);
+                let tag = format!("kernel={kernel} search={search} T={t}");
+                assert_eq!(online_outcomes, staged_outcomes, "{tag}: outcomes");
+                assert_bit_identical(&online, &staged, &probes, &tag);
+            }
+        }
+    }
+}
+
+/// For a fixed block size `b > 1`, the staged pipeline is
+/// thread-deterministic: pooled runs reproduce the serial blocked path
+/// bit for bit (engine-sharded distance tiles, sequential updates).
+#[test]
+fn minibatch_blocks_bit_identical_across_thread_counts() {
+    let d = 24;
+    let k = 64;
+    // K·D² well past the engine gate so the sharded tile path runs.
+    let stream = clustered_stream(d, k, 600, 3);
+    let probes = stream[..6].to_vec();
+    let stds = vec![1.0; d];
+
+    for kernel in [KernelMode::Strict, KernelMode::Fast] {
+        let cfg = GmmConfig::new(d)
+            .with_delta(1.0)
+            .with_beta(0.05)
+            .with_max_components(k)
+            .with_kernel_mode(kernel)
+            .with_learn_mode(LearnMode::MiniBatch { b: 8 })
+            .without_pruning();
+
+        let mut serial = Figmn::new(cfg.clone(), &stds);
+        serial.learn_batch(&stream);
+        assert_eq!(serial.num_components(), k);
+
+        for t in THREAD_COUNTS {
+            let mut pooled =
+                Figmn::new(cfg.clone(), &stds).with_engine(EngineConfig::new(t));
+            pooled.learn_batch(&stream);
+            assert_bit_identical(&serial, &pooled, &probes, &format!("kernel={kernel} T={t}"));
+        }
+    }
+}
+
+/// TopC models never stage blocks (the exact fallback gate is
+/// per-point): `MiniBatch{b: 8}` under TopC is bit-identical to
+/// `Online` under TopC, not merely deterministic.
+#[test]
+fn topc_blocks_route_through_exact_online_path() {
+    let d = 16;
+    let stream = clustered_stream(d, 32, 400, 17);
+    let stds = vec![1.0; d];
+    let base = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_max_components(32)
+        .with_search_mode(SearchMode::TopC { c: 4 })
+        .without_pruning();
+
+    let mut online = Figmn::new(base.clone(), &stds);
+    for x in &stream {
+        online.learn(x);
+    }
+    let mut staged =
+        Figmn::new(base.with_learn_mode(LearnMode::MiniBatch { b: 8 }), &stds);
+    staged.learn_batch(&stream);
+    assert_bit_identical(&online, &staged, &stream[..6].to_vec(), "topc b=8");
+}
+
+/// Decay sweeps commute with blocking: a `MiniBatch{b}` model applies
+/// `decay^B` at block start, so its sp mass stays finite and ordered
+/// the same way as the online per-point sweep (exact equality is not
+/// part of the contract for `b > 1`; boundedness and monotone aging
+/// are).
+#[test]
+fn decayed_minibatch_sp_mass_stays_bounded() {
+    let d = 8;
+    let stream = clustered_stream(d, 4, 300, 5);
+    let stds = vec![1.0; d];
+    let cfg = GmmConfig::new(d)
+        .with_delta(0.5)
+        .with_beta(0.05)
+        .with_learn_mode(LearnMode::MiniBatch { b: 8 })
+        .with_decay(0.99)
+        .without_pruning();
+    let mut m = Figmn::new(cfg, &stds);
+    m.learn_batch(&stream);
+    // Geometric series bound: total sp mass under decay g is at most
+    // K_created + 1/(1-g) in posterior mass units.
+    let total_sp: f64 = (0..m.num_components()).map(|j| m.component_stats(j).0).sum();
+    assert!(total_sp.is_finite() && total_sp > 0.0);
+    // A decay-off run accumulates exactly one unit of sp mass per point
+    // (300 here); the geometric sweep caps it near 1/(1 - 0.99) = 100.
+    assert!(total_sp < 200.0, "decay failed to forget: total sp {total_sp}");
+}
+
+/// The drift story end to end: after an adversarial mean-swap shift,
+/// the decayed + max-age model recovers post-shift accuracy while the
+/// non-decayed model keeps voting its pre-shift mass.
+#[test]
+fn decay_recovers_accuracy_after_mean_swap_drift() {
+    let spec = DriftSpec {
+        dim: 6,
+        classes: 2,
+        instances: 4400,
+        shift_at: 2000,
+        shift: 0.0,
+        swap_classes: true,
+        cov_ramp: 1.5,
+    };
+    let data = drift_stream(&spec, 13);
+    let stds = data.feature_stds();
+    let train_n = 4000;
+
+    let base = GmmConfig::new(1).with_delta(0.5).with_beta(0.05);
+    let adaptive_cfg = base.clone().with_decay(0.995).with_max_age(1500);
+
+    let mut adaptive = supervised_figmn(adaptive_cfg, &stds, spec.classes);
+    let mut stale = supervised_figmn(base, &stds, spec.classes);
+    adaptive.train_batch(&data.features[..train_n], &data.labels[..train_n]);
+    stale.train_batch(&data.features[..train_n], &data.labels[..train_n]);
+
+    let accuracy = |clf: &figmn::gmm::supervised::SupervisedGmm<Figmn>| -> f64 {
+        let scores = clf.class_scores_batch(&data.features[train_n..]);
+        scores
+            .iter()
+            .zip(&data.labels[train_n..])
+            .filter(|(s, &t)| {
+                s.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+                    == t
+            })
+            .count() as f64
+            / (data.features.len() - train_n) as f64
+    };
+    let acc_adaptive = accuracy(&adaptive);
+    let acc_stale = accuracy(&stale);
+    assert!(
+        acc_adaptive >= 0.8,
+        "decayed model failed to recover after the swap: acc {acc_adaptive}"
+    );
+    assert!(
+        acc_adaptive >= acc_stale + 0.15,
+        "decay bought nothing: adaptive {acc_adaptive} vs stale {acc_stale}"
+    );
+}
+
+/// Keep the linalg import honest (`store().mat` returns the packed
+/// slice; densify one to check symmetry survives block updates).
+#[test]
+fn blocked_updates_preserve_packed_symmetry() {
+    let d = 6;
+    let stream = clustered_stream(d, 4, 120, 9);
+    let stds = vec![1.0; d];
+    let cfg = GmmConfig::new(d)
+        .with_delta(0.5)
+        .with_beta(0.05)
+        .with_learn_mode(LearnMode::MiniBatch { b: 8 })
+        .without_pruning();
+    let mut m = Figmn::new(cfg, &stds);
+    m.learn_batch(&stream);
+    for j in 0..m.num_components() {
+        let lam: Matrix = m.store().mat_dense(j);
+        for r in 0..d {
+            for c in 0..r {
+                assert_eq!(lam[(r, c)], lam[(c, r)], "lambda[{j}] asymmetric at ({r},{c})");
+            }
+        }
+    }
+}

@@ -48,6 +48,7 @@ DEFAULT_FILES = [
     "BENCH_layout_bandwidth.json",
     "BENCH_scaling_k.json",
     "BENCH_serving_concurrency.json",
+    "BENCH_drift_adaptation.json",
 ]
 
 

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Quick-mode bench smoke: writes BENCH_scaling_dim.json,
-# BENCH_layout_bandwidth.json, BENCH_scaling_k.json and
-# BENCH_serving_concurrency.json at the repo root — the same files CI's
-# bench-smoke job produces and diffs against the committed baselines.
+# BENCH_layout_bandwidth.json, BENCH_scaling_k.json,
+# BENCH_serving_concurrency.json and BENCH_drift_adaptation.json at the
+# repo root — the same files CI's bench-smoke job produces and diffs
+# against the committed baselines.
 #
 #   ./scripts/bench_smoke.sh            # quick mode (default)
 #   FIGMN_BENCH_QUICK=0 ./scripts/bench_smoke.sh   # full mode (slow;
@@ -21,9 +22,10 @@ cargo bench --bench scaling_dim
 cargo bench --bench layout_bandwidth
 cargo bench --bench scaling_k
 cargo bench --bench serving_concurrency
+cargo bench --bench drift_adaptation
 
 if command -v python3 >/dev/null 2>&1; then
   python3 scripts/bench_diff.py \
     BENCH_scaling_dim.json BENCH_layout_bandwidth.json BENCH_scaling_k.json \
-    BENCH_serving_concurrency.json
+    BENCH_serving_concurrency.json BENCH_drift_adaptation.json
 fi
