@@ -5,28 +5,41 @@
 //! cheap candidate lookup). Arms are re-materialized from the *same*
 //! arenas, so the comparison measures nothing but the search mode.
 //!
+//! A `topc_minibatch` series rides along: TopC learn throughput,
+//! per-point (`Online`) vs the masked union-row blocked pass
+//! (`MiniBatch{b}`), on a bursty stream (blocks share candidate rows,
+//! the regime the union pass optimizes). Same candidate arithmetic,
+//! bit-identical results — the win is streaming each union row's
+//! packed arena data once per block.
+//!
 //! Correctness gates ride along (and run even in quick mode):
 //!   - strict results bit-identical across 1/2/4 worker threads,
 //!   - TopC results bit-identical across 1/2/4 worker threads,
 //!   - TopC with c ≥ K bit-identical to the strict full sweep
 //!     (create + update decisions, arenas, and scores),
-//!   - TopC scores within 1e-9 of strict on near-center probes.
+//!   - TopC scores within 1e-9 of strict on near-center probes,
+//!   - TopC×MiniBatch (b ∈ {1, 32}, threads {1, 4}) bit-identical to
+//!     the TopC per-point path on the bursty stream,
+//!   - a create-only churn stream completes with **zero** full index
+//!     rebuilds (every create appends incrementally).
 //! The gates are recorded in the JSON `gates` array; the CI bench-diff
 //! step fails the job when any gate reports `pass: false`.
 //!
-//! Acceptance target (full mode): ≥ 3× combined learn+score throughput
-//! at K = 4096, D = 64 with TopC(C = 64) vs the strict full-K sweep.
+//! Acceptance targets (full mode): ≥ 3× combined learn+score
+//! throughput at K = 4096, D = 64 with TopC(C = 64) vs the strict
+//! full-K sweep, and ≥ 2× blocked-vs-per-point TopC learn throughput
+//! at K = 4096, C = 64, b = 32.
 //!
 //! Run: `cargo bench --bench scaling_k`
 //! Quick (CI smoke): `FIGMN_BENCH_QUICK=1 cargo bench --bench scaling_k`
 //! Writes `BENCH_scaling_k.json`.
 
 use figmn::bench_support::{
-    quick_mode, rematerialize, synthetic_centers, synthetic_grown_model, time_once,
-    write_bench_json, TablePrinter,
+    quick_mode, rematerialize, rematerialize_learn_mode, synthetic_centers,
+    synthetic_grown_model, time_once, write_bench_json, TablePrinter,
 };
 use figmn::engine::EngineConfig;
-use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, SearchMode};
+use figmn::gmm::{Figmn, GmmConfig, IncrementalMixture, LearnMode, SearchMode};
 use figmn::json::Json;
 use figmn::rng::Pcg64;
 
@@ -42,6 +55,34 @@ fn near_center_stream(centers: &[Vec<f64>], n: usize, seed: u64) -> Vec<Vec<f64>
     (0..n)
         .map(|i| centers[i % centers.len()].iter().map(|&c| c + rng.normal() * 0.5).collect())
         .collect()
+}
+
+/// Bursty variant: `burst` consecutive points share one center before
+/// the stream moves to the next — the temporal locality the masked
+/// TopC block pass exploits (a block's per-point candidate sets
+/// overlap, so the union has ~C rows masked by ~`burst` points each
+/// instead of `burst`·C rows masked once).
+fn bursty_stream(centers: &[Vec<f64>], n: usize, burst: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n)
+        .map(|i| {
+            let c = &centers[(i / burst) % centers.len()];
+            c.iter().map(|&v| v + rng.normal() * 0.5).collect()
+        })
+        .collect()
+}
+
+/// A TopC arm staged through the mini-batch pipeline (same arenas,
+/// same candidate arithmetic — only the write-path blocking differs).
+fn minibatch_arm(master: &Figmn, c: usize, b: usize, threads: usize) -> Figmn {
+    let mut m = rematerialize_learn_mode(
+        &rematerialize(master, SearchMode::TopC { c }),
+        LearnMode::MiniBatch { b },
+    );
+    if threads > 1 {
+        m.set_engine(Some(EngineConfig::new(threads)));
+    }
+    m
 }
 
 /// One measured/gated arm: the shared master arenas under `mode`, with
@@ -135,6 +176,62 @@ fn run_gates(k_gate: usize) -> Vec<(String, bool)> {
         pass &= models_identical(&s2, &t2, "full-c from scratch");
         gates.push(("topc_full_c_bitwise".to_string(), pass));
     }
+
+    // TopC×MiniBatch: the masked union-row blocked pass must be
+    // bit-identical to the TopC per-point path — on the bursty stream
+    // it optimizes, at b ∈ {1, 32}, serial and pooled.
+    {
+        let c = (k_gate / 2).clamp(1, TOP_C);
+        let bursty = bursty_stream(&centers, 192, 32, 11);
+        let mut per_point = arm(&master, SearchMode::TopC { c }, 1);
+        per_point.learn_batch(&bursty);
+        let mut pass = true;
+        for b in [1usize, 32] {
+            for t in [1usize, 4] {
+                let mut blocked = minibatch_arm(&master, c, b, t);
+                blocked.learn_batch(&bursty);
+                pass &= models_identical(
+                    &per_point,
+                    &blocked,
+                    &format!("topc_minibatch b={b} T={t}"),
+                );
+            }
+        }
+        gates.push(("topc_minibatch_bitwise".to_string(), pass));
+    }
+
+    // Incremental index maintenance: a create-only churn stream (every
+    // point novel) must complete with zero full rebuilds — creates
+    // append into the index instead of invalidating it.
+    {
+        let d = DIM;
+        let n = 64usize;
+        let cfg = GmmConfig::new(d)
+            .with_delta(0.5)
+            .with_beta(0.05)
+            .with_search_mode(SearchMode::TopC { c: 8 })
+            .with_learn_mode(LearnMode::MiniBatch { b: 8 })
+            .without_pruning();
+        let mut churn = Figmn::new(cfg, &vec![1.0; d]);
+        let mut rng = Pcg64::seed(13);
+        // 1e3-scale means at σ = 0.5: every draw is novel.
+        let stream: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.normal() * 1e3).collect()).collect();
+        churn.learn_batch(&stream);
+        let counters = churn.index_counters();
+        let pass = churn.num_components() == n
+            && counters.rebuilds == 0
+            && counters.incremental_updates == (n - 1) as u64;
+        if !pass {
+            println!(
+                "  MISMATCH churn: K={} rebuilds={} incremental={}",
+                churn.num_components(),
+                counters.rebuilds,
+                counters.incremental_updates
+            );
+        }
+        gates.push(("topc_churn_zero_rebuilds".to_string(), pass));
+    }
     gates
 }
 
@@ -222,6 +319,59 @@ fn main() {
         ]));
     }
 
+    // --- topc_minibatch series: per-point vs masked blocked learn ---
+    // Bursty streams (32-point bursts) so blocks have the candidate
+    // overlap the union pass is built for; per-point and blocked arms
+    // consume the *same* stream, so the ratio isolates the write-path
+    // blocking. b = 1 routes through the per-point body (speedup ~1,
+    // the exactness anchor); b = 32 is the masked blocked pass.
+    println!("\ntopc_minibatch — TopC(C={TOP_C}) learn, per-point vs blocked (bursty stream)");
+    let mb_table = TablePrinter::new(
+        &["K", "b", "perpoint/s", "blocked/s", "speedup"],
+        &[6, 4, 12, 12, 8],
+    );
+    let mut mb_rows: Vec<Json> = Vec::new();
+    let mut mb_speedup_at_4096: f64 = 0.0;
+    for &k in ks.iter().filter(|&&k| quick || k >= 256) {
+        let n = n_for(k);
+        let master = synthetic_grown_model(DIM, k, SearchMode::Strict, SEED);
+        let centers = synthetic_centers(DIM, k, SEED);
+        let bursty = bursty_stream(&centers, n, 32, 8);
+
+        let t_per_point = {
+            let mut per_point = arm(&master, SearchMode::TopC { c: TOP_C }, 1);
+            time_once(|| per_point.learn_batch(&bursty)).0
+        };
+        for b in [1usize, 32] {
+            let t_blocked = {
+                let mut blocked = minibatch_arm(&master, TOP_C, b, 1);
+                time_once(|| blocked.learn_batch(&bursty)).0
+            };
+            let np = n as f64;
+            let speedup = t_per_point / t_blocked;
+            if k == 4096 && b == 32 {
+                mb_speedup_at_4096 = speedup;
+            }
+            mb_table.row(&[
+                k.to_string(),
+                b.to_string(),
+                format!("{:10.0}", np / t_per_point),
+                format!("{:10.0}", np / t_blocked),
+                format!("{speedup:6.2}×"),
+            ]);
+            mb_rows.push(Json::obj(vec![
+                ("d", DIM.into()),
+                ("k", k.into()),
+                ("c", TOP_C.into()),
+                ("b", b.into()),
+                ("points", n.into()),
+                ("perpoint_learn_pts_per_s", (np / t_per_point).into()),
+                ("blocked_learn_pts_per_s", (np / t_blocked).into()),
+                ("learn_speedup", speedup.into()),
+            ]));
+        }
+    }
+
     let score_tol_pass = max_score_diff < 1e-9;
     let mut gate_json: Vec<Json> = gates
         .iter()
@@ -241,9 +391,11 @@ fn main() {
         ("quick", quick.into()),
         ("cores", cores.into()),
         ("speedup_d64_k4096", speedup_at_4096.into()),
+        ("minibatch_learn_speedup_k4096_b32", mb_speedup_at_4096.into()),
         ("max_abs_score_diff", max_score_diff.into()),
         ("gates", Json::Arr(gate_json)),
         ("rows", Json::Arr(rows)),
+        ("topc_minibatch", Json::Arr(mb_rows)),
     ]);
     match write_bench_json("scaling_k", &payload) {
         Ok(path) => println!("wrote {path}"),
@@ -264,7 +416,15 @@ fn main() {
             "TopC(C={TOP_C}) combined learn+score speedup at D={DIM}, K=4096 \
              is {speedup_at_4096:.2}× (< 3×)"
         );
-        println!("scaling_k OK — {speedup_at_4096:.2}× combined at K=4096 (target ≥ 3×)");
+        assert!(
+            mb_speedup_at_4096 >= 2.0,
+            "masked blocked TopC learn at D={DIM}, K=4096, C={TOP_C}, b=32 \
+             is {mb_speedup_at_4096:.2}× per-point (< 2×)"
+        );
+        println!(
+            "scaling_k OK — {speedup_at_4096:.2}× combined at K=4096 (target ≥ 3×), \
+             {mb_speedup_at_4096:.2}× blocked TopC learn (target ≥ 2×)"
+        );
     } else {
         println!("scaling_k done (quick mode; perf assertion skipped)");
     }

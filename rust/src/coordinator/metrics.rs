@@ -1,6 +1,7 @@
 //! Coordinator metrics: lock-light counters plus latency statistics,
 //! snapshotted to JSON for the `stats` protocol op and the benches.
 
+use crate::gmm::IndexCounters;
 use crate::json::Json;
 use crate::stats::Welford;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -134,6 +135,18 @@ pub struct Metrics {
     /// Learn steps between consecutive publishes — the staleness bound
     /// actually observed (≤ snapshot_interval by construction).
     snapshot_lag: Mutex<Welford>,
+    // --- candidate-index machinery (TopC write path) ---
+    /// Staleness-triggered full `CandidateIndex` rebuilds across all
+    /// shard models (bootstrap builds excluded).
+    index_rebuilds: AtomicU64,
+    /// Incremental index-maintenance events (create appends + drift
+    /// cell reassignments) that replaced what used to be rebuilds.
+    index_incremental_updates: AtomicU64,
+    /// χ²-fallback gate scans (per-point exact sweeps of unprovable
+    /// cells before a create is allowed).
+    fallback_gate_triggers: AtomicU64,
+    /// Union rows streamed by the masked TopC blocked distance pass.
+    masked_block_rows: AtomicU64,
     // --- serving front end (event-loop server) ---
     /// End-to-end request latency per traffic class, measured from the
     /// moment a complete request line is framed to the moment its
@@ -208,6 +221,17 @@ impl Metrics {
         self.replica_reads.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Fold a model's candidate-index counter *delta* into the hub
+    /// (workers call this after each learn op with the counters'
+    /// advance since the previous call, so hub totals stay additive
+    /// across shards).
+    pub fn record_index_counters(&self, delta: IndexCounters) {
+        self.index_rebuilds.fetch_add(delta.rebuilds, Ordering::Relaxed);
+        self.index_incremental_updates.fetch_add(delta.incremental_updates, Ordering::Relaxed);
+        self.fallback_gate_triggers.fetch_add(delta.fallback_gate_triggers, Ordering::Relaxed);
+        self.masked_block_rows.fetch_add(delta.masked_block_rows, Ordering::Relaxed);
+    }
+
     /// Share the event-loop server's per-driver connection gauges so
     /// stats can report them. First registration wins (one server per
     /// hub); re-registering is a no-op.
@@ -251,6 +275,10 @@ impl Metrics {
             snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
             snapshot_fallbacks: self.snapshot_fallbacks.load(Ordering::Relaxed),
             replica_reads: self.replica_reads.load(Ordering::Relaxed),
+            index_rebuilds: self.index_rebuilds.load(Ordering::Relaxed),
+            index_incremental_updates: self.index_incremental_updates.load(Ordering::Relaxed),
+            fallback_gate_triggers: self.fallback_gate_triggers.load(Ordering::Relaxed),
+            masked_block_rows: self.masked_block_rows.load(Ordering::Relaxed),
             snapshot_lag_mean_points: lag.mean(),
             snapshot_lag_max_points: if lag.count() > 0 { lag.max() } else { 0.0 },
             read_latency: self.read_latency.summary(),
@@ -285,6 +313,10 @@ pub struct MetricsSnapshot {
     pub snapshot_reads: u64,
     pub snapshot_fallbacks: u64,
     pub replica_reads: u64,
+    pub index_rebuilds: u64,
+    pub index_incremental_updates: u64,
+    pub fallback_gate_triggers: u64,
+    pub masked_block_rows: u64,
     pub snapshot_lag_mean_points: f64,
     pub snapshot_lag_max_points: f64,
     pub read_latency: LatencySummary,
@@ -314,6 +346,13 @@ impl MetricsSnapshot {
             ("snapshot_reads", (self.snapshot_reads as usize).into()),
             ("snapshot_fallbacks", (self.snapshot_fallbacks as usize).into()),
             ("replica_reads", (self.replica_reads as usize).into()),
+            ("index_rebuilds", (self.index_rebuilds as usize).into()),
+            (
+                "index_incremental_updates",
+                (self.index_incremental_updates as usize).into(),
+            ),
+            ("fallback_gate_triggers", (self.fallback_gate_triggers as usize).into()),
+            ("masked_block_rows", (self.masked_block_rows as usize).into()),
             ("snapshot_lag_mean_points", self.snapshot_lag_mean_points.into()),
             ("snapshot_lag_max_points", self.snapshot_lag_max_points.into()),
             (
@@ -388,6 +427,32 @@ mod tests {
         // First registration wins.
         m.register_driver_fds(Arc::new(vec![AtomicU64::new(99)]));
         assert_eq!(m.snapshot().driver_fds, vec![2, 0, 5]);
+    }
+
+    #[test]
+    fn index_counter_deltas_accumulate() {
+        let m = Metrics::new();
+        m.record_index_counters(IndexCounters {
+            rebuilds: 1,
+            incremental_updates: 40,
+            fallback_gate_triggers: 2,
+            masked_block_rows: 128,
+        });
+        m.record_index_counters(IndexCounters {
+            rebuilds: 0,
+            incremental_updates: 2,
+            fallback_gate_triggers: 0,
+            masked_block_rows: 64,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.index_rebuilds, 1);
+        assert_eq!(s.index_incremental_updates, 42);
+        assert_eq!(s.fallback_gate_triggers, 2);
+        assert_eq!(s.masked_block_rows, 192);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"index_rebuilds\":1"), "{j}");
+        assert!(j.contains("\"masked_block_rows\":192"), "{j}");
+        crate::json::parse(&j).unwrap();
     }
 
     #[test]

@@ -301,6 +301,15 @@ impl Registry {
             // f32 read-replica payload across shards (0 unless the
             // model was created with a replica mode).
             ("replica_bytes", shard_stats.iter().map(|s| s.replica_bytes).sum::<usize>().into()),
+            // Candidate-index machinery totals (all-zero for Strict
+            // models; see `gmm::IndexCounters`).
+            ("index_rebuilds", total(|s| s.index_rebuilds).into()),
+            (
+                "index_incremental_updates",
+                total(|s| s.index_incremental_updates).into(),
+            ),
+            ("fallback_gate_triggers", total(|s| s.fallback_gate_triggers).into()),
+            ("masked_block_rows", total(|s| s.masked_block_rows).into()),
             ("coordinator", self.metrics.snapshot().to_json()),
             (
                 "per_shard",

@@ -13,7 +13,9 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::{CoordError, Result};
 use crate::engine::EngineConfig;
-use crate::gmm::{Figmn, GmmConfig, IncrementalMixture, ModelSnapshot, SupervisedGmm};
+use crate::gmm::{
+    Figmn, GmmConfig, IncrementalMixture, IndexCounters, ModelSnapshot, SupervisedGmm,
+};
 use crate::json::Json;
 use crate::runtime::{PackedState, Runtime};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -154,6 +156,17 @@ pub struct WorkerStats {
     /// (0 when the model runs replica-off or nothing is published yet;
     /// see `gmm::ReplicaStore::replica_bytes`).
     pub replica_bytes: usize,
+    /// Staleness-triggered full candidate-index rebuilds on this
+    /// shard's model (all-zero for Strict-mode shards; see
+    /// `gmm::IndexCounters`).
+    pub index_rebuilds: u64,
+    /// Incremental index-maintenance events (create appends + drift
+    /// cell reassignments).
+    pub index_incremental_updates: u64,
+    /// χ²-fallback gate scans taken on the TopC learn path.
+    pub fallback_gate_triggers: u64,
+    /// Union rows streamed by the masked TopC blocked distance pass.
+    pub masked_block_rows: u64,
 }
 
 impl WorkerStats {
@@ -166,6 +179,13 @@ impl WorkerStats {
             ("xla_batches", (self.xla_batches as usize).into()),
             ("model_bytes", self.model_bytes.into()),
             ("replica_bytes", self.replica_bytes.into()),
+            ("index_rebuilds", (self.index_rebuilds as usize).into()),
+            (
+                "index_incremental_updates",
+                (self.index_incremental_updates as usize).into(),
+            ),
+            ("fallback_gate_triggers", (self.fallback_gate_triggers as usize).into()),
+            ("masked_block_rows", (self.masked_block_rows as usize).into()),
         ])
     }
 }
@@ -397,6 +417,21 @@ fn worker_loop(
     let mut learned: u64 = 0;
     let mut predicted: u64 = 0;
     let mut xla_batches: u64 = 0;
+    // Candidate-index counters as of the last hub publish: the model
+    // reports monotone totals, the hub wants additive deltas (so
+    // multi-shard totals stay meaningful).
+    let mut idx_published = IndexCounters::default();
+    let publish_index_counters =
+        |clf: &SupervisedGmm<Figmn>, prev: &mut IndexCounters, metrics: &Metrics| {
+            let cur = clf.model().index_counters();
+            metrics.record_index_counters(IndexCounters {
+                rebuilds: cur.rebuilds - prev.rebuilds,
+                incremental_updates: cur.incremental_updates - prev.incremental_updates,
+                fallback_gate_triggers: cur.fallback_gate_triggers - prev.fallback_gate_triggers,
+                masked_block_rows: cur.masked_block_rows - prev.masked_block_rows,
+            });
+            *prev = cur;
+        };
     // Points applied since the last snapshot publish (the read path's
     // staleness); republished every `snapshot_interval` points and on
     // idle. Counted in points, not learn commands, so a learn_batch of
@@ -478,6 +513,7 @@ fn worker_loop(
                 }
                 learned += 1;
                 metrics.record_learn(started);
+                publish_index_counters(&clf, &mut idx_published, &metrics);
                 dirty += 1;
                 if publish_every > 0 && dirty >= publish_every {
                     publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
@@ -500,6 +536,7 @@ fn worker_loop(
                     }
                     learned += n as u64;
                     metrics.record_learn_block(started, n);
+                    publish_index_counters(&clf, &mut idx_published, &metrics);
                     dirty += n;
                     if publish_every > 0 && dirty >= publish_every {
                         publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
@@ -522,6 +559,7 @@ fn worker_loop(
                     clf.train_joint(&joint);
                     learned += 1;
                     metrics.record_learn(started);
+                    publish_index_counters(&clf, &mut idx_published, &metrics);
                     dirty += 1;
                     if publish_every > 0 && dirty >= publish_every {
                         publish_snapshot(&clf, &snapshot_cell, &metrics, &mut dirty);
@@ -542,6 +580,7 @@ fn worker_loop(
                 metrics.record_predict(started, 1);
             }
             Some(Command::Stats { reply }) => {
+                let idx = clf.model().index_counters();
                 let _ = reply.send(WorkerStats {
                     components: clf.num_components(),
                     points: clf.model().points_seen(),
@@ -550,6 +589,10 @@ fn worker_loop(
                     xla_batches,
                     model_bytes: clf.model().model_bytes(),
                     replica_bytes: snapshot_cell.load().map_or(0, |s| s.replica_bytes()),
+                    index_rebuilds: idx.rebuilds,
+                    index_incremental_updates: idx.incremental_updates,
+                    fallback_gate_triggers: idx.fallback_gate_triggers,
+                    masked_block_rows: idx.masked_block_rows,
                 });
             }
             Some(Command::CheckpointJson { reply }) => {
@@ -737,6 +780,44 @@ mod tests {
         }
         assert!(correct >= 50, "correct {correct}/60");
         assert_eq!(worker.handle.stats().unwrap().learned, 300);
+        worker.join();
+    }
+
+    #[test]
+    fn topc_shard_surfaces_index_counters() {
+        // A TopC mini-batch shard reports its candidate-index counters
+        // through stats and folds deltas into the hub metrics.
+        let metrics = Arc::new(Metrics::new());
+        let gmm = GmmConfig::new(1)
+            .with_delta(0.5)
+            .with_beta(0.05)
+            .without_pruning()
+            .with_search_mode(crate::gmm::SearchMode::TopC { c: 2 })
+            .with_learn_mode(crate::gmm::LearnMode::MiniBatch { b: 8 });
+        let cfg = WorkerConfig::new(2, 3, gmm, vec![3.0, 3.0]);
+        let worker = Worker::spawn(cfg, metrics.clone());
+        let mut rng = Pcg64::seed(21);
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..120 {
+            xs.push(blob_point(&mut rng, i % 3));
+            labels.push(i % 3);
+        }
+        for (chunk_x, chunk_c) in xs.chunks(8).zip(labels.chunks(8)) {
+            worker.handle.learn_batch(chunk_x.to_vec(), chunk_c.to_vec()).unwrap();
+        }
+        let stats = worker.handle.stats().unwrap();
+        assert!(
+            stats.index_incremental_updates > 0,
+            "creates/drift must register as incremental maintenance"
+        );
+        assert!(stats.masked_block_rows > 0, "blocks must take the masked TopC pass");
+        let j = stats.to_json().to_string_compact();
+        assert!(j.contains("\"index_rebuilds\""), "{j}");
+        let m = metrics.snapshot();
+        assert_eq!(m.index_incremental_updates, stats.index_incremental_updates);
+        assert_eq!(m.masked_block_rows, stats.masked_block_rows);
+        assert_eq!(m.index_rebuilds, stats.index_rebuilds);
         worker.join();
     }
 

@@ -39,10 +39,42 @@
 //! vacuous, never wrong) bound used to order cells in the top-C scan
 //! and to skip whole cells in the exact fallback gate.
 //!
-//! The index is rebuilt deterministically (serial, input-order
-//! dependent only), so TopC results are bit-identical across thread
-//! counts and engine attach/detach, and a restored checkpoint rebuilds
-//! the identical index from its arenas — the index itself is never
+//! ## Incremental maintenance
+//!
+//! The index is no longer rebuilt wholesale on drift. Three incremental
+//! paths keep it current under churn (all serial and data-dependent
+//! only, so determinism across thread counts is preserved):
+//!
+//! - **creates** — [`CandidateIndex::note_create`] appends the store's
+//!   new last row to its nearest cell, growing that cell's covering
+//!   radius (`O(√K·D + D²)`, no rebuild);
+//! - **drift** — [`CandidateIndex::note_update`] absorbs small mean
+//!   motion into the containing cell's `slack`. Once a component's
+//!   accumulated drift exceeds its **per-cell** budget (half the cell's
+//!   covering radius; a geometry-derived fallback for degenerate
+//!   single-member cells), the component is *reassigned* to the cell
+//!   nearest its current mean and every touched cell is refreshed
+//!   exactly from the live arenas — centroid, radius, `lambda_floor`
+//!   recomputed, `slack` and member drifts reset to zero. Bounds
+//!   therefore tighten under sustained drift instead of degrading
+//!   until a rebuild;
+//! - **escape hatch** — [`CandidateIndex::needs_rebuild`] still forces
+//!   the deterministic full [`CandidateIndex::build`] when the row set
+//!   changed structurally (generation/K mismatch, e.g. after a prune)
+//!   or when more than half the components have migrated cells since
+//!   the last build (the coarse partition no longer reflects the data).
+//!
+//! Every maintenance path preserves bound *soundness* (a cell's bound
+//! may be vacuous, never wrong), so `query`'s top-C sets and
+//! `scan_possible`'s χ²-reachability scans stay exact regardless of how
+//! the current cell structure was reached — an incrementally maintained
+//! index and a freshly rebuilt one always return identical candidate
+//! sets.
+//!
+//! The index build is deterministic (serial, input-order dependent
+//! only), so TopC results are bit-identical across thread counts and
+//! engine attach/detach, and a restored checkpoint rebuilds the
+//! identical index from its arenas — the index itself is never
 //! serialized.
 
 use super::store::ComponentStore;
@@ -102,6 +134,27 @@ impl std::fmt::Display for SearchMode {
     }
 }
 
+/// Write-path observability for the candidate machinery: how often the
+/// index was fully rebuilt vs incrementally maintained, how often the
+/// exact χ²-fallback gate had to scan, and how many union rows the
+/// masked TopC blocked distance pass streamed. Accumulated per model
+/// ([`crate::gmm::IncrementalMixture::index_counters`]) and surfaced
+/// through worker/registry stats and the coordinator metrics.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct IndexCounters {
+    /// Staleness-triggered full rebuilds on the learn path (structural
+    /// row-set mismatch or the mass-migration escape hatch).
+    pub rebuilds: u64,
+    /// Incremental maintenance events: `note_create` appends plus
+    /// per-cell reassignment/refresh rounds.
+    pub incremental_updates: u64,
+    /// Points whose top-C candidates all failed the χ² test, forcing
+    /// the exact fallback-gate cell scan before a create was allowed.
+    pub fallback_gate_triggers: u64,
+    /// Union rows streamed by the masked TopC blocked distance pass.
+    pub masked_block_rows: u64,
+}
+
 /// One coarse cell of the quantizer: a centroid over member means with
 /// covering and spectral bounds (see the module docs).
 #[derive(Debug, Clone)]
@@ -135,11 +188,18 @@ pub struct CandidateIndex {
     cells: Vec<Cell>,
     /// Component → cell containing it.
     assign: Vec<u32>,
-    /// Per-component accumulated mean drift since build.
+    /// Per-component accumulated mean drift since build / last refresh
+    /// of its cell.
     drift: Vec<f64>,
-    /// Rebuild once any component's accumulated drift exceeds this.
-    drift_budget: f64,
-    max_drift: f64,
+    /// Drift budget for cells whose own covering radius is degenerate
+    /// (single-member cells): derived from the coarse centroid geometry
+    /// at build time. Cells with a positive radius budget off that
+    /// radius instead — see [`CandidateIndex::cell_budget`].
+    fallback_budget: f64,
+    /// Components reassigned to a different cell since the last full
+    /// build — the escape-hatch trigger in
+    /// [`CandidateIndex::needs_rebuild`].
+    migrations: usize,
 }
 
 impl CandidateIndex {
@@ -213,12 +273,10 @@ impl CandidateIndex {
             *a = cell_of_centroid[*a as usize];
         }
 
-        let avg_radius = cells.iter().map(|c| c.radius).sum::<f64>() / cells.len() as f64;
-        let drift_budget = if avg_radius > 0.0 {
-            0.5 * avg_radius
-        } else if cells.len() > 1 {
-            // All-singleton cells (K small): budget off the coarse
-            // geometry instead — a quarter of the closest centroid gap.
+        let fallback_budget = if cells.len() > 1 {
+            // Degenerate (single-member) cells have no radius to budget
+            // off; use the coarse geometry instead — a quarter of the
+            // closest centroid gap.
             let mut min_gap = f64::INFINITY;
             for i in 0..cells.len() {
                 for j in i + 1..cells.len() {
@@ -237,20 +295,23 @@ impl CandidateIndex {
             cells,
             assign,
             drift: vec![0.0; k],
-            drift_budget,
-            max_drift: 0.0,
+            fallback_budget,
+            migrations: 0,
         }
     }
 
-    /// Rebuild `slot` in place when it is missing or stale for `store`.
-    pub fn ensure(slot: &mut Option<CandidateIndex>, store: &ComponentStore) {
+    /// Rebuild `slot` in place when it is missing or stale for `store`;
+    /// returns whether a (re)build happened.
+    pub fn ensure(slot: &mut Option<CandidateIndex>, store: &ComponentStore) -> bool {
         let stale = match slot {
             None => true,
             Some(idx) => idx.needs_rebuild(store),
         };
         if stale && store.len() > 0 {
             *slot = Some(CandidateIndex::build(store));
+            return true;
         }
+        false
     }
 
     /// Does the index still describe this store's row set? (Structural
@@ -259,9 +320,14 @@ impl CandidateIndex {
         self.generation == store.generation() && self.k == store.len()
     }
 
-    /// Structural mismatch or accumulated mean drift past budget.
+    /// Structural mismatch, or the incremental-maintenance escape
+    /// hatch: more than half the components have migrated cells since
+    /// the last full build, so the coarse partition no longer reflects
+    /// the data and one deterministic rebuild beats further patching.
+    /// Plain drift never triggers a rebuild anymore — it is absorbed
+    /// incrementally by [`CandidateIndex::note_update`].
     pub fn needs_rebuild(&self, store: &ComponentStore) -> bool {
-        !self.matches(store) || self.max_drift > self.drift_budget
+        !self.matches(store) || self.migrations * 2 > self.k
     }
 
     /// Number of coarse cells.
@@ -272,6 +338,24 @@ impl CandidateIndex {
     /// Cell containing component `j` (test/diagnostic surface).
     pub fn cell_of(&self, j: usize) -> usize {
         self.assign[j] as usize
+    }
+
+    /// Components reassigned to a different cell since the last full
+    /// build (test/diagnostic surface).
+    pub fn migrations(&self) -> usize {
+        self.migrations
+    }
+
+    /// Accumulated-drift budget of cell `ci`: half its covering radius,
+    /// or the build-time geometry fallback when the radius is
+    /// degenerate (single-member cell).
+    fn cell_budget(&self, ci: usize) -> f64 {
+        let r = self.cells[ci].radius;
+        if r > 0.0 {
+            0.5 * r
+        } else {
+            self.fallback_budget
+        }
     }
 
     /// The `min(c, K)` components nearest `x` by Euclidean mean
@@ -380,18 +464,112 @@ impl CandidateIndex {
 
     /// Record an in-place update of component `j` whose mean moved by at
     /// most `shift` (Euclidean): the containing cell's slack absorbs the
-    /// motion (bounds stay sound) and its Λ floor is invalidated. Once
-    /// any component's accumulated drift exceeds the budget,
-    /// [`CandidateIndex::needs_rebuild`] turns true.
-    pub fn note_update(&mut self, j: usize, shift: f64) {
+    /// motion (bounds stay sound) and its Λ floor is invalidated.
+    ///
+    /// Incremental maintenance: once `j`'s accumulated drift exceeds
+    /// its **per-cell** budget ([`CandidateIndex::cell_budget`]), `j` is
+    /// reassigned to the cell nearest its current mean and every
+    /// touched cell is refreshed exactly from `store`
+    /// ([`CandidateIndex::refresh_cell`]) — so sustained drift tightens
+    /// the bounds instead of forcing a full rebuild. Returns the number
+    /// of maintenance rounds performed (0 or 1) for the
+    /// [`IndexCounters::incremental_updates`] bookkeeping.
+    pub fn note_update(&mut self, j: usize, shift: f64, store: &ComponentStore) -> u64 {
         if shift <= 0.0 {
-            return;
+            return 0;
         }
         let ci = self.assign[j] as usize;
         self.cells[ci].slack += shift;
         self.cells[ci].lambda_floor = 0.0;
         self.drift[j] += shift;
-        self.max_drift = self.max_drift.max(self.drift[j]);
+        if self.drift[j] <= self.cell_budget(ci) {
+            return 0;
+        }
+        self.reassign(j, store);
+        1
+    }
+
+    /// Move `j` to the cell nearest its current mean (deterministic:
+    /// ties break on the lower cell index), then refresh every touched
+    /// cell exactly from the arenas. A reassignment that lands back in
+    /// the same cell is a pure refresh and does not count as a
+    /// migration.
+    fn reassign(&mut self, j: usize, store: &ComponentStore) {
+        let old = self.assign[j] as usize;
+        let mean = store.mean(j);
+        let new = self
+            .cells
+            .iter()
+            .enumerate()
+            .min_by(|(ai, a), (bi, b)| {
+                sq_dist(mean, &a.centroid)
+                    .total_cmp(&sq_dist(mean, &b.centroid))
+                    .then(ai.cmp(bi))
+            })
+            .map(|(ci, _)| ci)
+            .expect("index has at least one cell");
+        if new != old {
+            let members = &mut self.cells[old].members;
+            if let Ok(p) = members.binary_search(&(j as u32)) {
+                members.remove(p);
+            }
+            let members = &mut self.cells[new].members;
+            let p = members.partition_point(|&m| m < j as u32);
+            members.insert(p, j as u32);
+            self.assign[j] = new as u32;
+            self.migrations += 1;
+        }
+        self.refresh_cell(old, store);
+        if new != old {
+            self.refresh_cell(new, store);
+        }
+    }
+
+    /// Recompute cell `ci` exactly from the live arenas: centroid over
+    /// the current member means, covering radius, Gershgorin Λ floor,
+    /// `slack = 0`, and member drifts reset — the accumulated motion is
+    /// absorbed into exact geometry, so all bounds stay sound *and*
+    /// tighten. An emptied cell keeps its (stale) centroid as a future
+    /// reassignment target and gets vacuously tight bounds.
+    fn refresh_cell(&mut self, ci: usize, store: &ComponentStore) {
+        // Split the borrow: `drift` resets happen after the cell borrow
+        // ends.
+        let d = self.dim;
+        let members = std::mem::take(&mut self.cells[ci].members);
+        let cell = &mut self.cells[ci];
+        if members.is_empty() {
+            cell.radius = 0.0;
+            cell.slack = 0.0;
+            cell.lambda_floor = f64::INFINITY;
+            cell.members = members;
+            return;
+        }
+        for c in cell.centroid.iter_mut() {
+            *c = 0.0;
+        }
+        for &j in &members {
+            for (c, &m) in cell.centroid.iter_mut().zip(store.mean(j as usize)) {
+                *c += m;
+            }
+        }
+        let n = members.len() as f64;
+        for c in cell.centroid.iter_mut() {
+            *c /= n;
+        }
+        let mut radius = 0.0_f64;
+        let mut lambda_floor = f64::INFINITY;
+        for &j in &members {
+            let j = j as usize;
+            radius = radius.max(sq_dist(&cell.centroid, store.mean(j)).sqrt());
+            lambda_floor = lambda_floor.min(packed::gershgorin_floor(store.mat(j), d));
+        }
+        cell.radius = radius;
+        cell.slack = 0.0;
+        cell.lambda_floor = lambda_floor;
+        cell.members = members;
+        for &j in &self.cells[ci].members {
+            self.drift[j as usize] = 0.0;
+        }
     }
 }
 
@@ -504,20 +682,108 @@ mod tests {
     }
 
     #[test]
-    fn drift_budget_triggers_rebuild() {
+    fn drift_triggers_cell_refresh_not_rebuild() {
         let means: Vec<Vec<f64>> = (0..16).map(|i| vec![(i % 4) as f64, (i / 4) as f64]).collect();
         let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
         let store = store_with_means(&refs);
         let mut idx = CandidateIndex::build(&store);
         assert!(!idx.needs_rebuild(&store));
-        // Small drifts accumulate; eventually the budget trips.
+        // Small drifts accumulate; eventually the per-cell budget trips
+        // a reassignment/refresh round — never a full rebuild (the mean
+        // itself has not moved, so the refresh absorbs the slack and
+        // resets the drift).
+        let mut maintained = 0u64;
         for _ in 0..10_000 {
-            idx.note_update(3, 0.05);
-            if idx.needs_rebuild(&store) {
-                return;
+            maintained += idx.note_update(3, 0.05, &store);
+            assert!(!idx.needs_rebuild(&store), "drift alone must not force a rebuild");
+            if maintained > 0 {
+                break;
             }
         }
-        panic!("accumulated drift never tripped the rebuild budget");
+        assert!(maintained > 0, "accumulated drift never tripped the per-cell budget");
+        assert_eq!(idx.migrations(), 0, "a same-cell refresh is not a migration");
+        // The refresh reset the drift, so the next small shift does not
+        // immediately re-trigger maintenance.
+        assert_eq!(idx.note_update(3, 0.05, &store), 0);
+        // Bounds stay exact: query still matches brute force.
+        let mut out = Vec::new();
+        idx.query(&[1.1, 0.9], 4, &store, &mut out);
+        let mut all: Vec<(f64, u32)> = (0..store.len())
+            .map(|j| (sq_dist(&[1.1, 0.9], store.mean(j)), j as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut want: Vec<u32> = all[..4].iter().map(|&(_, j)| j).collect();
+        want.sort_unstable();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn migrated_component_moves_cell_and_stays_queryable() {
+        // Two far clusters → the quantizer puts them in different cells.
+        let mut means: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64, 0.0]).collect();
+        means.extend((0..8).map(|i| vec![1000.0 + i as f64, 0.0]));
+        let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
+        let mut store = store_with_means(&refs);
+        let mut idx = CandidateIndex::build(&store);
+        let old_cell = idx.cell_of(0);
+        // Physically move component 0 into the far cluster, then report
+        // the motion. The drift exceeds any per-cell budget, so the
+        // component must migrate to a far-cluster cell.
+        let shift = {
+            let (mean, ..) = store.row_mut(0);
+            let from = mean.to_vec();
+            mean[0] = 1003.5;
+            sq_dist(&from, &[1003.5, 0.0]).sqrt()
+        };
+        assert_eq!(idx.note_update(0, shift, &store), 1);
+        assert_ne!(idx.cell_of(0), old_cell, "component must migrate to the far cluster");
+        assert_eq!(idx.migrations(), 1);
+        assert!(!idx.needs_rebuild(&store), "one migration is far below the escape hatch");
+        // The migrated component is exactly findable at its new home.
+        let mut out = Vec::new();
+        idx.query(&[1003.4, 0.0], 3, &store, &mut out);
+        assert!(out.contains(&0), "migrated row must be findable: {out:?}");
+        // Soundness after refresh: brute-force agreement on both ends.
+        for probe in [[0.5, 0.0], [1004.0, 0.0]] {
+            idx.query(&probe, 5, &store, &mut out);
+            let mut all: Vec<(f64, u32)> = (0..store.len())
+                .map(|j| (sq_dist(&probe, store.mean(j)), j as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut want: Vec<u32> = all[..5].iter().map(|&(_, j)| j).collect();
+            want.sort_unstable();
+            assert_eq!(out, want, "probe {probe:?}");
+        }
+    }
+
+    #[test]
+    fn mass_migration_trips_rebuild_escape_hatch() {
+        // Two far clusters, 8 components each.
+        let mut means: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64, 0.0]).collect();
+        means.extend((0..8).map(|i| vec![1000.0 + i as f64, 0.0]));
+        let refs: Vec<&[f64]> = means.iter().map(|m| m.as_slice()).collect();
+        let mut store = store_with_means(&refs);
+        let mut idx = CandidateIndex::build(&store);
+        // March most of the near cluster plus some of the far one into
+        // fresh territory: more than K/2 migrations must arm the
+        // escape hatch.
+        let mut tripped = false;
+        for j in 0..16 {
+            let target = [5000.0 + 10.0 * j as f64, 0.0];
+            let shift = {
+                let (mean, ..) = store.row_mut(j);
+                let from = mean.to_vec();
+                mean.copy_from_slice(&target);
+                sq_dist(&from, &target).sqrt()
+            };
+            idx.note_update(j, shift, &store);
+            if idx.needs_rebuild(&store) {
+                tripped = true;
+                break;
+            }
+        }
+        assert!(tripped, "mass migration never tripped the rebuild escape hatch");
+        assert!(idx.migrations() * 2 > store.len());
     }
 
     #[test]
@@ -548,7 +814,7 @@ mod tests {
         // always visited (vacuous bound).
         let mut idx2 = idx.clone();
         let far = (store.len() - 1) as u32;
-        idx2.note_update(far as usize, 0.01);
+        idx2.note_update(far as usize, 0.01, &store);
         let mut v2 = Vec::new();
         idx2.scan_possible(&x, chi2, &[], |j| v2.push(j));
         assert!(v2.contains(&far), "zeroed floor must make the cell unprunable");

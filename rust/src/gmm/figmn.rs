@@ -46,13 +46,14 @@
 //! bit-identical to mapping the per-point entry points in both kernel
 //! modes (`tests/blocked_scoring_equivalence.rs`).
 
-use super::candidates::{CandidateIndex, SearchMode};
+use super::candidates::{CandidateIndex, IndexCounters, SearchMode};
 use super::inference::{
     precision_conditional, precision_conditional_multi_with, target_block_cholesky,
 };
 use super::learn_pipeline::{
     argmax, candidate_distance_pass, candidate_update_pass, distance_pass, init_component,
-    learn_block, update_pass, BlockScratch, LearnMode, LEARN_BLOCK_SLOTS,
+    learn_block, topc_block_pass, update_pass, BlockScratch, LearnMode, TopcBlockTile,
+    LEARN_BLOCK_SLOTS,
 };
 use super::score_block::{component_block_terms, wblock_len, ScoreBlock, SCORE_BLOCK};
 use super::store::ComponentStore;
@@ -101,6 +102,11 @@ pub struct Figmn {
     /// Mini-batch block scratch (frozen K×B score/w tiles and the
     /// per-block decision state) — see [`super::learn_pipeline`].
     blk: BlockScratch,
+    /// Candidate-machinery observability (rebuilds, incremental index
+    /// maintenance, fallback-gate scans, masked union rows) —
+    /// accumulated by the learn path, surfaced via
+    /// [`IncrementalMixture::index_counters`].
+    counters: IndexCounters,
 }
 
 impl Figmn {
@@ -139,6 +145,7 @@ impl Figmn {
             buf_cand: Vec::new(),
             buf_en: Vec::new(),
             blk: BlockScratch::default(),
+            counters: IndexCounters::default(),
         }
     }
 
@@ -200,6 +207,7 @@ impl Figmn {
             buf_cand: Vec::new(),
             buf_en: Vec::new(),
             blk: BlockScratch::default(),
+            counters: IndexCounters::default(),
         }
     }
 
@@ -526,12 +534,35 @@ impl Figmn {
     /// the posterior mass assignment — restricted to the candidate set
     /// plus any fallback acceptors — is approximate.
     fn learn_topc(&mut self, x: &[f64], c: usize) -> LearnOutcome {
+        self.learn_topc_staged(x, c, None)
+    }
+
+    /// [`Self::learn_topc`] with an optional frozen block tile. On the
+    /// masked mini-batch path (`tile = Some((tile, bi))`, `bi` the
+    /// point's position in its block) the candidate distance stage
+    /// consumes stage-1 tile entries where still valid and recomputes
+    /// the rest with the per-point kernel; each (point, row) pair's
+    /// arithmetic is self-contained and identical either way, so the
+    /// mix is bit-identical to a pure per-point pass. Everything after
+    /// the distance stage **is** the per-point path, plus tile
+    /// bookkeeping: rows that absorbed mass (`p > 0`) are marked dirty
+    /// (their mean/Λ changed, so later points in the block must
+    /// recompute), and a prune invalidates the whole tile (row
+    /// renumbering).
+    fn learn_topc_staged(
+        &mut self,
+        x: &[f64],
+        c: usize,
+        mut tile: Option<(&mut TopcBlockTile, usize)>,
+    ) -> LearnOutcome {
         let d = self.cfg.dim;
         let mode = self.cfg.kernel_mode;
         let chi2 = self.cfg.chi2_threshold();
         // Maintain the index (serial and data-dependent only, so TopC
         // stays bit-deterministic across thread counts).
-        CandidateIndex::ensure(&mut self.index, &self.store);
+        if CandidateIndex::ensure(&mut self.index, &self.store) {
+            self.counters.rebuilds += 1;
+        }
         {
             let Figmn { index, store, buf_cand, .. } = self;
             index.as_ref().expect("ensured above").query(x, c, store, buf_cand);
@@ -540,7 +571,33 @@ impl Figmn {
         self.buf_d2.resize(cn, 0.0);
         self.buf_ws.resize(cn * d, 0.0);
         self.buf_en.resize(cn, 0.0);
-        {
+        if let Some((t, bi)) = &tile {
+            let bi = *bi;
+            let Figmn { store, buf_cand, buf_d2, buf_ws, buf_en, buf_e, .. } = self;
+            buf_e.resize(d, 0.0);
+            for (i, &jc) in buf_cand.iter().enumerate() {
+                if let Some((d2, en, w)) = t.lookup(bi, jc) {
+                    buf_d2[i] = d2;
+                    buf_en[i] = en;
+                    buf_ws[i * d..(i + 1) * d].copy_from_slice(w);
+                } else {
+                    // Tile miss (row created/updated/pruned since the
+                    // block froze, or point re-queried outside its
+                    // stage-0 set): per-point kernel, same arithmetic.
+                    let j = jc as usize;
+                    let e = &mut buf_e[..d];
+                    sub_into(x, store.mean(j), e);
+                    buf_en[i] = norm2(e).sqrt();
+                    buf_d2[i] = packed::quad_form_with_mode(
+                        store.mat(j),
+                        d,
+                        e,
+                        &mut buf_ws[i * d..(i + 1) * d],
+                        mode,
+                    );
+                }
+            }
+        } else {
             let Figmn { store, buf_cand, buf_d2, buf_ws, buf_en, buf_e, engine, .. } = self;
             candidate_distance_pass(
                 store,
@@ -565,6 +622,7 @@ impl Figmn {
             // ascending component order); evaluated non-acceptors are
             // discarded — their posterior tail is the same tolerance
             // class as the unevaluated one.
+            self.counters.fallback_gate_triggers += 1;
             let mut extra: Vec<(u32, f64, f64)> = Vec::new();
             let mut extra_ws: Vec<f64> = Vec::new();
             {
@@ -641,33 +699,56 @@ impl Figmn {
             // Drift bookkeeping: each updated mean moved by ω‖e‖ with
             // ω = p/sp_new (sp already includes p after the update).
             {
-                let Figmn { index, store, buf_cand, buf_en, .. } = self;
+                let Figmn { index, store, buf_cand, buf_en, counters, .. } = self;
                 let index = index.as_mut().expect("ensured above");
                 for (i, &jc) in buf_cand.iter().enumerate() {
                     let sp_new = store.sp(jc as usize);
                     if post[i] > 0.0 && sp_new > 0.0 {
-                        index.note_update(jc as usize, post[i] / sp_new * buf_en[i]);
+                        counters.incremental_updates +=
+                            index.note_update(jc as usize, post[i] / sp_new * buf_en[i], store);
                     }
                 }
             }
+            if let Some((t, _)) = &mut tile {
+                // Rows that absorbed mass changed mean/Λ in place —
+                // their frozen tile entries are stale for later points.
+                for (i, &jc) in self.buf_cand.iter().enumerate() {
+                    if post[i] > 0.0 {
+                        t.mark_dirty(jc);
+                    }
+                }
+            }
+            let len_before = self.store.len();
             self.prune();
+            if self.store.len() < len_before {
+                if let Some((t, _)) = &mut tile {
+                    t.invalidate();
+                }
+            }
             LearnOutcome::Updated
         } else {
             self.create(x);
             if let Some(index) = self.index.as_mut() {
                 index.note_create(&self.store);
+                self.counters.incremental_updates += 1;
             }
+            let len_before = self.store.len();
             self.prune();
+            if self.store.len() < len_before {
+                if let Some((t, _)) = &mut tile {
+                    t.invalidate();
+                }
+            }
             LearnOutcome::Created
         }
     }
 
-    /// Learn one mini-batch block. Length-1 blocks, TopC models, and an
-    /// empty store route through the exact online body (so
-    /// `MiniBatch{b: 1}` is bit-identical to `Online`, and TopC keeps
-    /// its exact fallback gate); everything else stages through
-    /// [`learn_block`]. Oversized blocks are re-chunked so the frozen
-    /// `K×B×D` w-tile stays within [`LEARN_BLOCK_SLOTS`].
+    /// Learn one mini-batch block. Length-1 blocks and an empty store
+    /// route through the exact online body (so `MiniBatch{b: 1}` is
+    /// bit-identical to `Online`); Strict models stage through
+    /// [`learn_block`], TopC models through the masked union-row pass
+    /// ([`Self::learn_chunk_topc`]). Oversized blocks are re-chunked so
+    /// the frozen `K×B×D` w-tile stays within [`LEARN_BLOCK_SLOTS`].
     fn learn_chunk(&mut self, xs: &[Vec<f64>], out: &mut Vec<LearnOutcome>) {
         if xs.len() >= 2 && !self.store.is_empty() {
             let slots = self.store.len() * self.cfg.dim;
@@ -679,10 +760,7 @@ impl Figmn {
                 return;
             }
         }
-        let blocked = xs.len() >= 2
-            && !self.store.is_empty()
-            && matches!(self.cfg.search_mode, SearchMode::Strict);
-        if !blocked {
+        if xs.len() < 2 || self.store.is_empty() {
             for x in xs {
                 out.push(self.learn(x));
             }
@@ -692,23 +770,78 @@ impl Figmn {
         for x in xs.iter() {
             assert_eq!(x.len(), d, "learn: dimensionality mismatch");
         }
-        if self.cfg.decay < 1.0 {
-            // Per-point forgetting applied in bulk at block start
-            // (decay^B): within a block the sp accumulators are frozen
-            // anyway, so this is the blocked analogue of the online
-            // per-point decay sweep.
-            self.store.decay_sps(self.cfg.decay.powi(xs.len() as i32));
+        match self.cfg.search_mode {
+            SearchMode::Strict => {
+                if self.cfg.decay < 1.0 {
+                    // Per-point forgetting applied in bulk at block
+                    // start (decay^B): within a block the sp
+                    // accumulators are frozen anyway, so this is the
+                    // blocked analogue of the online per-point decay
+                    // sweep.
+                    self.store.decay_sps(self.cfg.decay.powi(xs.len() as i32));
+                }
+                let base = self.points;
+                self.points += xs.len() as u64;
+                {
+                    let Figmn { cfg, sigma_ini, store, engine, blk, .. } = self;
+                    learn_block(store, xs, cfg, sigma_ini, engine.as_ref(), blk, base, out);
+                }
+                // One §2.3 sweep per block (the online path sweeps per
+                // point — block-granular pruning is part of the
+                // mini-batch approximation).
+                self.prune();
+            }
+            SearchMode::TopC { c } => self.learn_chunk_topc(xs, c, out),
         }
-        let base = self.points;
-        self.points += xs.len() as u64;
+    }
+
+    /// Learn one TopC mini-batch block through the masked union-row
+    /// pass: stage 0 queries every point's top-C candidate set against
+    /// the block-start store/index (reads only), stage 1 streams each
+    /// union row's packed arena data once through the blocked kernels
+    /// ([`topc_block_pass`]), and stage 2 replays the exact per-point
+    /// TopC body (per-point decay, live index re-query, χ²-fallback
+    /// gate, per-point update/drift/prune), consuming frozen tile
+    /// entries where still valid. Because stage 2 **is** the per-point
+    /// path and every consumed tile entry is bit-equal to what a
+    /// per-point kernel call would produce, the block is bit-identical
+    /// to feeding its points through [`Self::learn_topc`] one at a
+    /// time, at every thread count — see [`super::learn_pipeline`]'s
+    /// union/mask contract. The win is bandwidth: each union row is
+    /// streamed once per block instead of once per masking point.
+    fn learn_chunk_topc(&mut self, xs: &[Vec<f64>], c: usize, out: &mut Vec<LearnOutcome>) {
+        if CandidateIndex::ensure(&mut self.index, &self.store) {
+            self.counters.rebuilds += 1;
+        }
+        let d = self.cfg.dim;
+        // Stage 0: per-point candidate sets vs the block-start state,
+        // concatenated CSR-style (point bi's set = cands[offs[bi]..offs[bi+1]]).
+        let mut cands: Vec<u32> = Vec::new();
+        let mut offs: Vec<usize> = Vec::with_capacity(xs.len() + 1);
+        offs.push(0);
         {
-            let Figmn { cfg, sigma_ini, store, engine, blk, .. } = self;
-            learn_block(store, xs, cfg, sigma_ini, engine.as_ref(), blk, base, out);
+            let Figmn { index, store, buf_cand, .. } = self;
+            let index = index.as_ref().expect("ensured above");
+            for x in xs {
+                index.query(x, c, store, buf_cand);
+                cands.extend_from_slice(buf_cand);
+                offs.push(cands.len());
+            }
         }
-        // One §2.3 sweep per block (the online path sweeps per point —
-        // block-granular pruning is part of the mini-batch
-        // approximation).
-        self.prune();
+        // Stage 1: masked blocked distance pass over the union rows.
+        let mut tile = {
+            let Figmn { cfg, store, engine, blk, .. } = self;
+            topc_block_pass(store, xs, d, cands, offs, blk, cfg.kernel_mode, engine.as_ref())
+        };
+        self.counters.masked_block_rows += tile.rows as u64;
+        // Stage 2: exact per-point replay.
+        for (bi, x) in xs.iter().enumerate() {
+            self.points += 1;
+            if self.cfg.decay < 1.0 {
+                self.store.decay_sps(self.cfg.decay);
+            }
+            out.push(self.learn_topc_staged(x, c, Some((&mut tile, bi))));
+        }
     }
 }
 
@@ -766,6 +899,10 @@ impl IncrementalMixture for Figmn {
 
     fn dim(&self) -> usize {
         self.cfg.dim
+    }
+
+    fn index_counters(&self) -> IndexCounters {
+        self.counters
     }
 
     fn predict(&self, known_vals: &[f64], known_idx: &[usize], target_idx: &[usize]) -> Vec<f64> {

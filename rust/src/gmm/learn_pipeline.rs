@@ -54,25 +54,56 @@
 //! components created *earlier in the same block* (exact per-point
 //! kernels) before a create is allowed, so a drifting stream does not
 //! spawn `b` duplicate components where the online path would create
-//! one. TopC models keep their exact fallback gate by routing
-//! mini-batch blocks through the per-point path (a TopC-aware blocked
-//! distance pass is a ROADMAP follow-up).
+//! one.
+//!
+//! ## The masked TopC blocked pass — the union/mask contract
+//!
+//! TopC models no longer fall back to per-point dispatch: their blocks
+//! stage through [`topc_block_pass`], which precomputes each point's
+//! top-C candidate set against the **block-start** store/index, takes
+//! the **union** of those sets, and streams each union row's packed
+//! arena data **once per block** through the PR 5 multi-query kernels —
+//! but only over the compact residual tile of the points whose
+//! candidate **mask** contains that row. Flop count is exactly the
+//! per-point path's `Σ|cands| = C·B`; the win is bandwidth (each packed
+//! row read once per block instead of once per masking point) and it
+//! grows with in-block candidate overlap.
+//!
+//! Exactness contract (TopC + MiniBatch is **bit-identical** to the
+//! TopC per-point path at every thread count):
+//!
+//! - the multi-query kernels are per-query bit-identical to the
+//!   per-point kernels (the PR 5 contract), so a frozen tile entry
+//!   equals what the per-point pass would compute against the same row
+//!   state;
+//! - the decision stage replays the **exact per-point TopC body** per
+//!   point — live index re-query, per-point decay, the exact
+//!   χ²-fallback gate, per-point update/drift/prune — consuming a
+//!   frozen entry only when the row is provably untouched since block
+//!   start (not updated with `p > 0` by an earlier in-block point, no
+//!   mid-block prune renumbering — see [`TopcBlockTile`]) *and* the row
+//!   was in that point's precomputed mask; every other (point, row)
+//!   pair is recomputed with the per-point kernel, whose arithmetic is
+//!   self-contained per pair.
 //!
 //! ## Drift adaptation
 //!
 //! Two per-model knobs make the write path track non-stationary
 //! streams (`GmmConfig::decay` / `GmmConfig::max_age`):
 //!
-//! - **`sp` decay** — every learned point first multiplies all
-//!   accumulators by `decay` ([`ComponentStore::decay_sps`]; blocks
-//!   apply `decay^B` once at block start). Old evidence decays
-//!   exponentially, so components stranded by a mean shift lose their
-//!   priors and eventually trip the §2.3 prune.
+//! - **`sp`/`v` decay** — every learned point first multiplies all
+//!   `sp` accumulators by `decay` and scales the integer ages `v` the
+//!   same way (truncating toward zero — [`ComponentStore::decay_sps`];
+//!   Strict blocks apply `decay^B` once at block start, TopC blocks
+//!   decay per replayed point). Old evidence decays exponentially, so
+//!   components stranded by a mean shift lose their priors, and the
+//!   §2.3 `v > v_min && sp < sp_min` spuriousness gate compares an age
+//!   and a mass measured over the *same* decayed time window instead
+//!   of a lifetime count against decayed mass.
 //! - **max-age eviction** — the learn path stamps the posterior-argmax
 //!   winner of every point ([`ComponentStore::set_stamp`]); the prune
 //!   sweep additionally evicts components that have not won a point in
-//!   `max_age` points ([`ComponentStore::prune_aged`]). This is the
-//!   forgetting path for the integer age `v`, which cannot decay.
+//!   `max_age` points ([`ComponentStore::prune_aged`]).
 //!
 //! Both knobs default off (`decay = 1.0`, `max_age = 0`) and add no
 //! floating-point work when off, preserving the default path's
@@ -312,6 +343,200 @@ pub(crate) fn block_distance_pass(
                 );
             }
         }
+    }
+}
+
+/// Frozen per-point candidate tile of one TopC mini-batch block (see
+/// the module docs' union/mask contract). Entries are laid out
+/// point-major: point `bi`'s candidates occupy the flat slots
+/// `offs[bi]..offs[bi+1]`, ascending by component row — the same order
+/// the per-point candidate pass produces — with parallel `d2`/`en`
+/// arrays and a `total×D` `ws` tile.
+///
+/// The replay stage consumes an entry only while it provably equals
+/// what the per-point pass would compute *now*:
+/// - a row updated with `p > 0` by an earlier in-block point is marked
+///   [`TopcBlockTile::mark_dirty`] (its mean/Λ changed; `sp`/`v`-only
+///   updates don't affect `d2`/`en`/`ws`);
+/// - a mid-block prune renumbers arbitrary rows, so it
+///   [`TopcBlockTile::invalidate`]s the whole tile;
+/// - rows created mid-block are never present (the tile only knows
+///   block-start rows), so their lookups miss naturally.
+pub(crate) struct TopcBlockTile {
+    d: usize,
+    /// Flat per-point candidate rows (ascending within each point).
+    cands: Vec<u32>,
+    /// Point `bi`'s span in `cands` is `offs[bi]..offs[bi+1]`.
+    offs: Vec<usize>,
+    d2: Vec<f64>,
+    en: Vec<f64>,
+    /// `total×D` frozen `w = Λ·e` rows, parallel to `cands`.
+    ws: Vec<f64>,
+    /// Block-start rows touched by an in-block `p > 0` update.
+    dirty: Vec<bool>,
+    valid: bool,
+    /// Union rows the masked kernel streamed (counter feed).
+    pub(crate) rows: usize,
+}
+
+impl TopcBlockTile {
+    /// The frozen `(d2, en, w)` of `(point bi, component j)`, or `None`
+    /// when the entry is absent or no longer equal to a live compute.
+    pub(crate) fn lookup(&self, bi: usize, j: u32) -> Option<(f64, f64, &[f64])> {
+        if !self.valid || (j as usize) < self.dirty.len() && self.dirty[j as usize] {
+            return None;
+        }
+        let span = &self.cands[self.offs[bi]..self.offs[bi + 1]];
+        let p = span.binary_search(&j).ok()?;
+        let slot = self.offs[bi] + p;
+        Some((self.d2[slot], self.en[slot], &self.ws[slot * self.d..(slot + 1) * self.d]))
+    }
+
+    /// Mark block-start row `j` as mutated (mean/Λ changed): its frozen
+    /// entries are stale for every later point. Rows created mid-block
+    /// (`j ≥` block-start K) are not tracked — they are never in the
+    /// tile.
+    pub(crate) fn mark_dirty(&mut self, j: u32) {
+        if let Some(slot) = self.dirty.get_mut(j as usize) {
+            *slot = true;
+        }
+    }
+
+    /// Drop every frozen entry: a prune renumbered the arena rows, so
+    /// no tile entry can be matched to a live row anymore.
+    pub(crate) fn invalidate(&mut self) {
+        self.valid = false;
+    }
+}
+
+/// Stage 1 (blocked, TopC): the masked union-row variant of
+/// [`block_distance_pass`]. `cands`/`offs` hold each point's top-C
+/// candidate set against the block-start store (ascending rows per
+/// point). Per **union** row the residuals of only the masking points
+/// are gathered into a compact tile and the packed row is streamed
+/// once through [`packed::quad_form_with_multi_mode`]; results scatter
+/// back to the point-major tile slots. Engine-sharded over the union
+/// rows; each `(point, row)` result is bit-identical to the per-point
+/// candidate pass (per-query kernel identity + scatter slots are
+/// disjoint across rows).
+pub(crate) fn topc_block_pass(
+    store: &ComponentStore,
+    xs: &[Vec<f64>],
+    d: usize,
+    cands: Vec<u32>,
+    offs: Vec<usize>,
+    scr: &mut BlockScratch,
+    mode: KernelMode,
+    pool: Option<&WorkerPool>,
+) -> TopcBlockTile {
+    let b = xs.len();
+    let total = cands.len();
+    debug_assert_eq!(offs.len(), b + 1);
+
+    // Union CSR: (row, point, flat slot) triples sorted by (row, point)
+    // — deterministic, and grouping by row gives each union row its
+    // masking-point list in ascending point order.
+    let mut trips: Vec<(u32, u32, u32)> = Vec::with_capacity(total);
+    for bi in 0..b {
+        for (i, &j) in cands[offs[bi]..offs[bi + 1]].iter().enumerate() {
+            trips.push((j, bi as u32, (offs[bi] + i) as u32));
+        }
+    }
+    trips.sort_unstable();
+    let mut row_off: Vec<usize> = Vec::new();
+    for (t, &(j, ..)) in trips.iter().enumerate() {
+        if t == 0 || trips[t - 1].0 != j {
+            row_off.push(t);
+        }
+    }
+    let rows = row_off.len();
+    row_off.push(total);
+
+    let mut d2 = vec![0.0; total];
+    let mut en = vec![0.0; total];
+    let mut ws = vec![0.0; total * d];
+    let m_avg = if rows > 0 { (total + rows - 1) / rows } else { 0 };
+    match pool {
+        Some(pool) if rows > 0 && worth_sharding_batch(m_avg, rows, d, pool.threads()) => {
+            let d2p = SharedMut::new(d2.as_mut_ptr());
+            let enp = SharedMut::new(en.as_mut_ptr());
+            let wsp = SharedMut::new(ws.as_mut_ptr());
+            let trips = &trips;
+            let row_off = &row_off;
+            pool.run(rows, &move |_, range, scratch| {
+                for r in range {
+                    let span = &trips[row_off[r]..row_off[r + 1]];
+                    let j = span[0].0 as usize;
+                    let m = span.len();
+                    let (es, tws, td2) = scratch.split3(b * d, b * d, b);
+                    let mean = store.mean(j);
+                    for (t, &(_, bi, _)) in span.iter().enumerate() {
+                        sub_into(&xs[bi as usize], mean, &mut es[t * d..(t + 1) * d]);
+                    }
+                    packed::quad_form_with_multi_mode(
+                        store.mat(j),
+                        d,
+                        &es[..m * d],
+                        m,
+                        &mut tws[..m * d],
+                        &mut td2[..m],
+                        mode,
+                    );
+                    for (t, &(_, _, slot)) in span.iter().enumerate() {
+                        let s = slot as usize;
+                        // Safety: flat slot s belongs to exactly one
+                        // (point, row) pair, and row j is owned by this
+                        // shard only.
+                        unsafe {
+                            *d2p.at(s) = td2[t];
+                            *enp.at(s) = norm2(&es[t * d..(t + 1) * d]).sqrt();
+                            wsp.slice(s * d, d).copy_from_slice(&tws[t * d..(t + 1) * d]);
+                        }
+                    }
+                }
+            });
+        }
+        _ => {
+            scr.es.resize(b * d, 0.0);
+            scr.ll.resize(b * d + b, 0.0);
+            let (tws, td2) = scr.ll.split_at_mut(b * d);
+            for r in 0..rows {
+                let span = &trips[row_off[r]..row_off[r + 1]];
+                let j = span[0].0 as usize;
+                let m = span.len();
+                let mean = store.mean(j);
+                for (t, &(_, bi, _)) in span.iter().enumerate() {
+                    sub_into(&xs[bi as usize], mean, &mut scr.es[t * d..(t + 1) * d]);
+                }
+                packed::quad_form_with_multi_mode(
+                    store.mat(j),
+                    d,
+                    &scr.es[..m * d],
+                    m,
+                    &mut tws[..m * d],
+                    &mut td2[..m],
+                    mode,
+                );
+                for (t, &(_, _, slot)) in span.iter().enumerate() {
+                    let s = slot as usize;
+                    d2[s] = td2[t];
+                    en[s] = norm2(&scr.es[t * d..(t + 1) * d]).sqrt();
+                    ws[s * d..(s + 1) * d].copy_from_slice(&tws[t * d..(t + 1) * d]);
+                }
+            }
+        }
+    }
+
+    TopcBlockTile {
+        d,
+        cands,
+        offs,
+        d2,
+        en,
+        ws,
+        dirty: vec![false; store.len()],
+        valid: true,
+        rows,
     }
 }
 

@@ -114,7 +114,7 @@ mod snapshot;
 mod store;
 pub mod supervised;
 
-pub use candidates::{CandidateIndex, SearchMode};
+pub use candidates::{CandidateIndex, IndexCounters, SearchMode};
 pub use config::GmmConfig;
 pub use figmn::Figmn;
 pub use igmn::Igmn;
@@ -170,6 +170,13 @@ pub trait IncrementalMixture {
 
     /// Total points presented.
     fn points_seen(&self) -> u64;
+
+    /// Candidate-index observability counters (rebuilds, incremental
+    /// maintenance events, fallback-gate scans, masked block rows).
+    /// Models without a candidate index report all-zero.
+    fn index_counters(&self) -> IndexCounters {
+        IndexCounters::default()
+    }
 
     /// Present a batch of joint vectors in stream order. Learning is
     /// sequential in the stream (each point scores against the state the

@@ -310,13 +310,19 @@ impl ComponentStore {
     }
 
     /// Multiply every accumulator `sp` by `factor` — the exponential
-    /// forgetting step of the drift-adaptive learn modes. One sweep over
-    /// the `sps` arena; the integer age `v` does not decay (stale
-    /// components leave via the max-age arm of
-    /// [`ComponentStore::prune_aged`] instead).
+    /// forgetting step of the drift-adaptive learn modes — and decay
+    /// the integer ages `v` alongside, truncating toward zero. Decaying
+    /// both keeps the §2.3 spuriousness gate (`v > v_min && sp <
+    /// sp_min`) comparing a count and a mass from the same forgetting
+    /// window, instead of a lifetime count against decayed mass. One
+    /// sweep over the two scalar arenas; callers only invoke this when
+    /// `decay < 1.0`, so the decay-off path stays byte-identical.
     pub(crate) fn decay_sps(&mut self, factor: f64) {
         for sp in &mut self.sps {
             *sp *= factor;
+        }
+        for v in &mut self.vs {
+            *v = (*v as f64 * factor) as u64;
         }
     }
 
@@ -734,14 +740,16 @@ mod tests {
     }
 
     #[test]
-    fn decay_scales_every_sp() {
+    fn decay_scales_every_sp_and_v() {
         let mut s = store_with(&[(1.0, 2.0, 3), (4.0, 5.0, 6)]);
         s.decay_sps(0.5);
         assert_eq!(s.sps(), &[1.0, 2.5]);
         assert_eq!(s.total_sp(), 3.5);
+        // Ages decay alongside, truncating toward zero: 3·0.5 → 1.
+        assert_eq!(s.v(0), 1);
+        assert_eq!(s.v(1), 3);
         // Decay touches nothing else.
         assert_eq!(s.mean(0), &[1.0, -1.0]);
-        assert_eq!(s.v(1), 6);
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //!   counts {1, 2, 4} reproduce the serial blocked path bit for bit
 //!   (the K×B distance tile is sharded, the update stage is
 //!   sequential).
+//! - **TopC blocks are exact**: the masked union-row pass makes
+//!   TopC×MiniBatch bit-identical to the TopC *per-point* path (not
+//!   merely deterministic) at every thread count — including blocks
+//!   where the χ²-fallback gate fires mid-block — and incremental
+//!   index maintenance yields the same candidate sets as a freshly
+//!   rebuilt index.
 //! - **drift adaptation**: with exponential `sp` decay (and max-age
 //!   eviction), a model recovers accuracy after an adversarial
 //!   mean-swap shift, while a non-decayed model keeps voting its
@@ -124,29 +130,175 @@ fn minibatch_blocks_bit_identical_across_thread_counts() {
     }
 }
 
-/// TopC models never stage blocks (the exact fallback gate is
-/// per-point): `MiniBatch{b: 8}` under TopC is bit-identical to
-/// `Online` under TopC, not merely deterministic.
+/// TopC blocks stage through the masked union-row pass, which is
+/// **bit-identical to the TopC per-point path** (not merely
+/// deterministic): across kernel modes × c × threads {1, 2, 4} × block
+/// sizes, a `MiniBatch{b}` TopC model ends bit-equal to an `Online`
+/// TopC model fed the same stream — outcomes, arenas, read surfaces,
+/// and index counters (the masked row count excepted; the per-point
+/// path never streams union rows).
 #[test]
-fn topc_blocks_route_through_exact_online_path() {
+fn topc_minibatch_is_bit_identical_to_topc_per_point() {
     let d = 16;
-    let stream = clustered_stream(d, 32, 400, 17);
+    let k = 48;
+    let stream = clustered_stream(d, k, 400, 17);
+    let probes = stream[..6].to_vec();
+    let stds = vec![1.0; d];
+
+    for kernel in [KernelMode::Strict, KernelMode::Fast] {
+        for c in [4, 8] {
+            let base = GmmConfig::new(d)
+                .with_delta(1.0)
+                .with_beta(0.05)
+                .with_max_components(k)
+                .with_kernel_mode(kernel)
+                .with_search_mode(SearchMode::TopC { c })
+                .without_pruning();
+
+            let mut online = Figmn::new(base.clone(), &stds);
+            let online_outcomes: Vec<_> = stream.iter().map(|x| online.learn(x)).collect();
+
+            for b in [4, 8] {
+                for t in THREAD_COUNTS {
+                    let cfg = base.clone().with_learn_mode(LearnMode::MiniBatch { b });
+                    let mut staged = Figmn::new(cfg, &stds).with_engine(EngineConfig::new(t));
+                    let staged_outcomes = staged.learn_batch(&stream);
+                    let tag = format!("kernel={kernel} c={c} b={b} T={t}");
+                    assert_eq!(online_outcomes, staged_outcomes, "{tag}: outcomes");
+                    assert_bit_identical(&online, &staged, &probes, &tag);
+                    // The exact replay reproduces the per-point path's
+                    // index trajectory event for event.
+                    let (o, s) = (online.index_counters(), staged.index_counters());
+                    assert_eq!(o.rebuilds, s.rebuilds, "{tag}: rebuilds");
+                    assert_eq!(
+                        o.incremental_updates, s.incremental_updates,
+                        "{tag}: incremental updates"
+                    );
+                    assert_eq!(
+                        o.fallback_gate_triggers, s.fallback_gate_triggers,
+                        "{tag}: gate triggers"
+                    );
+                    assert!(s.masked_block_rows > 0, "{tag}: masked pass never ran");
+                    assert_eq!(o.masked_block_rows, 0, "{tag}: online streamed union rows?");
+                }
+            }
+        }
+    }
+}
+
+/// A block engineered so the χ²-fallback gate fires (and *accepts*)
+/// mid-block: a tight component shadows a wide one in Euclidean
+/// ranking, so the mid-block probe's top-1 candidate fails χ² and only
+/// the gate's exact sweep finds the accepting component. The blocked
+/// path must replay that per-point decision — Updated, not Created —
+/// and stay bitwise equal to the per-point path.
+#[test]
+fn fallback_gate_fires_mid_block_and_stays_exact() {
+    let d = 2;
     let stds = vec![1.0; d];
     let base = GmmConfig::new(d)
         .with_delta(1.0)
         .with_beta(0.05)
-        .with_max_components(32)
-        .with_search_mode(SearchMode::TopC { c: 4 })
+        .with_search_mode(SearchMode::TopC { c: 1 })
         .without_pruning();
 
-    let mut online = Figmn::new(base.clone(), &stds);
-    for x in &stream {
-        online.learn(x);
+    // Component A at (0, 2), trained tight: its χ² region shrinks far
+    // below its Euclidean footprint.
+    let mut stream: Vec<Vec<f64>> = vec![vec![0.0, 2.0]];
+    let mut rng = Pcg64::seed(17);
+    for _ in 0..22 {
+        stream.push(vec![rng.normal() * 0.05, 2.0 + rng.normal() * 0.05]);
     }
+    // Component B at (0, -6), trained with a widening spread along
+    // dim 1 (each stage stays inside the current χ² region, so no
+    // stage creates): B ends up reaching most of the way toward A.
+    stream.push(vec![0.0, -6.0]);
+    for &u in &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5] {
+        for _ in 0..2 {
+            stream.push(vec![0.0, -6.0 + u]);
+            stream.push(vec![0.0, -6.0 - u]);
+        }
+    }
+    assert_eq!(stream.len() % 4, 0, "prefix must fill whole b=4 blocks");
+    // The final block: the probe sits mid-block between A-updates.
+    // Euclidean-nearest mean to the probe is A (3.0 vs ~5.0 away), but
+    // only B's χ² region contains it — with c = 1 the candidate set is
+    // {A}, so the decision rests entirely on the fallback gate.
+    let probe_at = stream.len() + 1;
+    stream.push(vec![0.02, 2.0]);
+    stream.push(vec![0.0, -1.0]); // the probe
+    stream.push(vec![-0.02, 2.0]);
+    stream.push(vec![0.02, 1.98]);
+
+    let mut online = Figmn::new(base.clone(), &stds);
+    let online_outcomes: Vec<_> = stream.iter().map(|x| online.learn(x)).collect();
+    assert_eq!(online.num_components(), 2, "construction drifted");
+    assert_eq!(
+        online_outcomes[probe_at],
+        figmn::gmm::LearnOutcome::Updated,
+        "construction drifted: the gate no longer rescues the probe"
+    );
+    assert!(online.index_counters().fallback_gate_triggers > 0);
+
     let mut staged =
-        Figmn::new(base.with_learn_mode(LearnMode::MiniBatch { b: 8 }), &stds);
-    staged.learn_batch(&stream);
-    assert_bit_identical(&online, &staged, &stream[..6].to_vec(), "topc b=8");
+        Figmn::new(base.with_learn_mode(LearnMode::MiniBatch { b: 4 }), &stds);
+    let staged_outcomes = staged.learn_batch(&stream);
+    assert_eq!(online_outcomes, staged_outcomes, "gate decision diverged in-block");
+    assert_bit_identical(&online, &staged, &stream[..6].to_vec(), "mid-block gate");
+    assert_eq!(
+        online.index_counters().fallback_gate_triggers,
+        staged.index_counters().fallback_gate_triggers,
+        "blocked path must take the gate exactly as often"
+    );
+}
+
+/// Create-churn: a stream where every point spawns a component. The
+/// incremental maintenance contract says creates append into the index
+/// (never rebuild it), and the maintained index answers queries exactly
+/// like a freshly rebuilt one — checked against a checkpoint round-trip,
+/// which rebuilds its index from scratch.
+#[test]
+fn create_churn_maintains_index_without_rebuilds() {
+    let d = 8;
+    let n = 96;
+    let stds = vec![1.0; d];
+    let cfg = GmmConfig::new(d)
+        .with_delta(1.0)
+        .with_beta(0.05)
+        .with_search_mode(SearchMode::TopC { c: 8 })
+        .with_learn_mode(LearnMode::MiniBatch { b: 8 })
+        .without_pruning();
+    // Every point 1000σ from every other: all-create, zero updates.
+    let stream: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let mut x = vec![0.0; d];
+            x[i % d] = 1000.0 * (1 + i / d) as f64;
+            x[(i + 1) % d] = 500.0 * (i % d) as f64;
+            x
+        })
+        .collect();
+    let mut m = Figmn::new(cfg, &stds);
+    let outcomes = m.learn_batch(&stream);
+    assert!(
+        outcomes.iter().all(|o| *o == figmn::gmm::LearnOutcome::Created),
+        "stream was supposed to be create-only"
+    );
+    let counters = m.index_counters();
+    assert_eq!(counters.rebuilds, 0, "create churn must never trigger a full rebuild");
+    assert_eq!(
+        counters.incremental_updates,
+        (n - 1) as u64,
+        "every post-bootstrap create appends incrementally"
+    );
+
+    // Round-trip through a checkpoint: `from_json` rebuilds the index
+    // from scratch. The maintained index must answer every read
+    // identically — same candidate sets, same arithmetic.
+    let rebuilt = Figmn::from_json(&m.to_json()).expect("checkpoint round-trip");
+    for x in &stream {
+        assert_eq!(m.log_density(x), rebuilt.log_density(x), "density diverged");
+        assert_eq!(m.posteriors(x), rebuilt.posteriors(x), "posteriors diverged");
+    }
 }
 
 /// Decay sweeps commute with blocking: a `MiniBatch{b}` model applies
